@@ -1,0 +1,62 @@
+//! Quickstart: decentralized linear regression with CQ-GGADMM.
+//!
+//! Builds a 12-worker bipartite topology, partitions a synthetic
+//! least-squares problem, runs CQ-GGADMM and prints the communication
+//! savings against plain GGADMM.
+//!
+//! Run with: `cargo run --release --example quickstart`
+
+use cq_ggadmm::prelude::*;
+use cq_ggadmm::algs::RunOptions;
+
+fn main() {
+    // 1. data: 600 samples, d = 20, planted linear model
+    let dataset = cq_ggadmm::data::synthetic::linear_dataset(600, 20, 42);
+
+    // 2. topology: 12 workers, connectivity ratio 0.3 (bipartite+connected)
+    let topo = Topology::random_bipartite(12, 0.3, 42);
+    println!(
+        "topology: {} workers, {} edges, heads={:?}",
+        topo.n(),
+        topo.edges().len(),
+        topo.heads()
+    );
+
+    // 3. problem: rho tuned to the data scale; f* solved centrally once
+    let problem = Problem::linear(dataset, &topo, 10.0);
+    println!("centralized optimum f* = {:.6e}", problem.f_star);
+
+    // 4. run GGADMM (full precision) and CQ-GGADMM (censored + quantized)
+    let iters = 120;
+    let mut plain = Run::new(
+        problem.clone(),
+        topo.clone(),
+        AlgSpec::ggadmm(),
+        RunOptions::default(),
+    );
+    let plain_trace = plain.run(iters);
+
+    let spec = AlgSpec::cq_ggadmm(0.1, 0.8, 0.995, 2);
+    let mut cq = Run::new(problem, topo, spec, RunOptions::default());
+    let cq_trace = cq.run(iters);
+
+    // 5. compare at 1e-4 objective error
+    for trace in [&plain_trace, &cq_trace] {
+        match trace.first_below(1e-4) {
+            Some(p) => println!(
+                "{:>10}: 1e-4 after {:>3} iters | {:>5} transmissions | {:>9} bits | {:.3e} J",
+                trace.algorithm, p.iteration, p.cum_rounds, p.cum_bits, p.cum_energy_j
+            ),
+            None => println!("{:>10}: did not reach 1e-4", trace.algorithm),
+        }
+    }
+    let p = plain_trace.first_below(1e-4).unwrap();
+    let q = cq_trace.first_below(1e-4).unwrap();
+    println!(
+        "CQ-GGADMM saves {:.1}x bits and {:.1}x energy at the same accuracy",
+        p.cum_bits as f64 / q.cum_bits as f64,
+        p.cum_energy_j / q.cum_energy_j
+    );
+    assert!(cq_trace.last_gap() < 1e-4, "quickstart failed to converge");
+    println!("quickstart OK");
+}

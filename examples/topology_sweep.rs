@@ -1,0 +1,53 @@
+//! Figure-6 workload + Theorem-2/3 rate study: how graph density shapes
+//! convergence.
+//!
+//! Regenerates the paper's sparse (p=0.2) vs dense (p=0.4) comparison on
+//! the Body Fat workload and prints the spectral-constants/rate table
+//! across a wider density sweep.
+//!
+//! Run with: `cargo run --release --example topology_sweep`
+
+use cq_ggadmm::experiments::{self, rates, ExecOptions};
+use cq_ggadmm::metrics::save_traces;
+use std::path::Path;
+
+fn main() {
+    // Figure 6: sparse vs dense on Body Fat
+    let spec = experiments::fig6();
+    println!("== {} ==", spec.base.title);
+    let results = experiments::run_fig6(&spec, &ExecOptions::default());
+    let mut all = Vec::new();
+    for res in &results {
+        println!("\n-- {} --\n{}", res.title, res.summary.render());
+        all.extend(res.traces.iter().cloned());
+    }
+    save_traces(&all, Path::new("results/topology_sweep.csv")).expect("csv");
+
+    // denser graphs must converge in fewer iterations (paper §7.3)
+    let first_to = |label_frag: &str, traces: &[cq_ggadmm::metrics::Trace]| {
+        traces
+            .iter()
+            .find(|t| t.algorithm.starts_with("GGADMM") && t.algorithm.contains(label_frag))
+            .and_then(|t| t.first_below(1e-4))
+            .map(|p| p.iteration)
+    };
+    let sparse_it = first_to("sparse", &all).expect("sparse GGADMM converged");
+    let dense_it = first_to("dense", &all).expect("dense GGADMM converged");
+    println!(
+        "\nGGADMM iterations to 1e-4: sparse={} dense={} (denser is faster)",
+        sparse_it, dense_it
+    );
+    assert!(dense_it <= sparse_it, "density must not slow convergence");
+
+    // Theorem-2/3 study: empirical rate vs spectral bound across densities
+    println!("\n== convergence-rate study (Theorems 2/3) ==");
+    let studies = rates::study(&[0.15, 0.3, 0.5, 0.8], 16, 11, 150);
+    println!("{}", rates::render(&studies).render());
+    for s in &studies {
+        assert!(
+            s.empirical_rate <= s.bound_rate + 1e-6,
+            "empirical rate must beat the conservative bound"
+        );
+    }
+    println!("topology sweep OK");
+}

@@ -1,0 +1,21 @@
+"""Layer-1 Pallas kernels for the CQ-GGADMM compute hot-spots.
+
+Every kernel is written for TPU semantics (grid over the sample dimension,
+VMEM-resident blocks, MXU-friendly fp32 ``jnp.dot`` accumulation) but is run
+with ``interpret=True`` so the AOT-lowered HLO executes on the CPU PJRT
+client used by the Rust runtime.  ``ref.py`` holds the pure-jnp oracles the
+pytest suite checks against.
+"""
+
+from .gram import gram, ROW_BLOCK
+from .logistic import logistic_grad_hess
+from .update import fused_local_update
+from .quantize import stochastic_quantize
+
+__all__ = [
+    "gram",
+    "logistic_grad_hess",
+    "fused_local_update",
+    "stochastic_quantize",
+    "ROW_BLOCK",
+]

@@ -1,0 +1,68 @@
+"""Fused Gram-system assembly kernel: ``(X^T X, X^T y)`` in one pass.
+
+This is the setup-time hot-spot of the linear-regression workload: each
+worker assembles its normal-equation system once, after which every ADMM
+iteration is a cheap fused rhs+matvec (see ``update.py``).
+
+TPU mapping (see DESIGN.md §Hardware-Adaptation): the sample dimension is
+tiled into ``ROW_BLOCK``-row blocks streamed HBM->VMEM by the grid; each
+grid step performs one ``(d, bs) @ (bs, d)`` MXU contraction and accumulates
+into the VMEM-resident ``(d, d)`` output block, which every grid step maps
+to the same output tile (classic revisiting-accumulator pattern).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Rows per grid step.  8 sublanes is the fp32 TPU tile height; the jnp.dot
+# below then contracts (d, 8) @ (8, d) per step.  All artifact shapes pad
+# the sample count to a multiple of this.
+ROW_BLOCK = 8
+
+
+def _gram_kernel(x_ref, y_ref, xtx_ref, xty_ref):
+    step = pl.program_id(0)
+
+    @pl.when(step == 0)
+    def _init():
+        xtx_ref[...] = jnp.zeros_like(xtx_ref)
+        xty_ref[...] = jnp.zeros_like(xty_ref)
+
+    xb = x_ref[...]  # (ROW_BLOCK, d) block in VMEM
+    yb = y_ref[...]  # (ROW_BLOCK,)
+    # MXU contraction; accumulate in fp32.
+    xtx_ref[...] += jnp.dot(xb.T, xb, preferred_element_type=jnp.float32)
+    xty_ref[...] += jnp.dot(xb.T, yb, preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("row_block",))
+def gram(x, y, *, row_block=ROW_BLOCK):
+    """Return ``(X^T X, X^T y)`` for ``x: (s, d)``, ``y: (s,)``.
+
+    ``s`` must be a multiple of ``row_block`` (callers zero-pad; zero rows
+    are exact no-ops for the Gram system).
+    """
+    s, d = x.shape
+    if s % row_block != 0:
+        raise ValueError(f"sample count {s} not a multiple of {row_block}")
+    grid = (s // row_block,)
+    return pl.pallas_call(
+        _gram_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((row_block, d), lambda i: (i, 0)),
+            pl.BlockSpec((row_block,), lambda i: (i,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((d, d), lambda i: (0, 0)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((d, d), x.dtype),
+            jax.ShapeDtypeStruct((d,), x.dtype),
+        ],
+        interpret=True,
+    )(x, y)

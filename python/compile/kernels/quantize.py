@@ -1,0 +1,46 @@
+"""Stochastic quantization kernel (paper §5, eqs. (14)-(17), (20)).
+
+Element-wise unbiased probabilistic rounding of the difference between the
+current model and the previously-quantized model, given externally supplied
+uniforms (Pallas kernels are deterministic; the RNG lives in the caller so
+the Rust and Python paths can share a stream).
+
+Pure VPU work — included both as the quantization oracle the Rust codec is
+differential-tested against and as the L1 demonstration that the whole
+CQ-GGADMM per-link pipeline lowers through Pallas.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _quantize_kernel(v_ref, qprev_ref, r_ref, levels_ref, u_ref, q_ref, recon_ref):
+    r = r_ref[0]
+    levels = levels_ref[0]
+    delta = 2.0 * r / (levels - 1.0)
+    c = (v_ref[...] - qprev_ref[...] + r) / delta
+    low = jnp.floor(c)
+    frac = c - low
+    q = low + (u_ref[...] < frac).astype(c.dtype)
+    q = jnp.clip(q, 0.0, levels - 1.0)
+    q_ref[...] = q
+    recon_ref[...] = qprev_ref[...] + delta * q - r
+
+
+@jax.jit
+def stochastic_quantize(v, q_prev, r, levels, u):
+    """Quantize ``v`` against ``q_prev``; ``r``/``levels`` are shape (1,).
+
+    Returns ``(q, recon)`` — the integer code (as f32) and the dequantized
+    reconstruction ``\\hat Q`` of eq. (20).
+    """
+    d = v.shape[0]
+    return pl.pallas_call(
+        _quantize_kernel,
+        out_shape=[
+            jax.ShapeDtypeStruct((d,), v.dtype),
+            jax.ShapeDtypeStruct((d,), v.dtype),
+        ],
+        interpret=True,
+    )(v, q_prev, r, levels, u)

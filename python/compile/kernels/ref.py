@@ -1,0 +1,65 @@
+"""Pure-jnp correctness oracles for the Pallas kernels.
+
+These are deliberately written in the most direct dense form; the pytest
+suite (and hypothesis sweeps) assert the Pallas kernels match them to fp32
+tolerance over randomized shapes and values.
+"""
+
+import jax.numpy as jnp
+
+
+def gram_ref(x, y):
+    """Gram system of the per-worker linear-regression subproblem.
+
+    Returns ``(X^T X, X^T y)`` for ``x: (s, d)``, ``y: (s,)``.
+    """
+    return x.T @ x, x.T @ y
+
+
+def logistic_grad_hess_ref(x, y, mask, theta):
+    """Masked logistic loss gradient and Gauss-Newton Hessian *data terms*.
+
+    For margins ``z_i = y_i x_i^T theta`` and ``p_i = sigmoid(-z_i)``:
+
+      g = sum_i mask_i * (-y_i p_i) x_i          (shape (d,))
+      H = sum_i mask_i * p_i (1 - p_i) x_i x_i^T (shape (d, d))
+
+    The ``1/s`` normalization and the regularizer / penalty terms are added
+    by the Layer-2 model, not the kernel.
+    """
+    z = y * (x @ theta)
+    p = jnp.where(mask > 0, 1.0 / (1.0 + jnp.exp(z)), 0.0)
+    g = x.T @ (-y * p)
+    w = p * (1.0 - p)
+    h = (x * w[:, None]).T @ x
+    return g, h
+
+
+def fused_local_update_ref(a_inv, xty, alpha, nbr_sum, rho):
+    """Closed-form GGADMM primal update for linear regression.
+
+    theta = A^{-1} (X^T y - alpha + rho * sum_{m in N_n} theta_hat_m)
+    with A = X^T X + rho d_n I factored/inverted once at setup time.
+    """
+    rhs = xty - alpha + rho * nbr_sum
+    return a_inv @ rhs
+
+
+def stochastic_quantize_ref(v, q_prev, r, levels, u):
+    """Stochastic quantizer of paper eqs. (14)-(17), given uniforms ``u``.
+
+    c = (v - q_prev + r) / delta, delta = 2 r / (levels - 1)
+    q = floor(c) + [u < frac(c)]     (unbiased probabilistic rounding)
+    recon = q_prev + delta * q - r   (eq. (20))
+
+    Returns ``(q, recon)``; ``q`` is kept in f32 so the whole artifact
+    stays a single-dtype HLO program (the Rust codec re-integerizes).
+    """
+    delta = 2.0 * r / (levels - 1.0)
+    c = (v - q_prev + r) / delta
+    low = jnp.floor(c)
+    frac = c - low
+    q = low + (u < frac).astype(v.dtype)
+    q = jnp.clip(q, 0.0, levels - 1.0)
+    recon = q_prev + delta * q - r
+    return q, recon

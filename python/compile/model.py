@@ -1,0 +1,175 @@
+"""Layer-2 JAX model: the per-worker subproblem solvers of CQ-GGADMM.
+
+Each public function here is an AOT entry point (see ``aot.py``): it is
+jitted, calls the Layer-1 Pallas kernels for its compute hot-spot, and is
+lowered once to HLO text that the Rust runtime executes via PJRT on the
+per-iteration hot path.  Python never runs at request time.
+
+Worker-n subproblem (paper eqs. (21)/(22); identical form for head/tail):
+
+    theta_n^{k+1} = argmin_theta  f_n(theta)
+                    + <theta, alpha_n - rho * sum_{m in N_n} theta_hat_m>
+                    + (rho d_n / 2) ||theta||^2
+
+* linear regression  f_n = 1/2 ||X_n theta - y_n||^2 — closed form:
+  ``linear_setup`` assembles the Gram system once, Rust inverts
+  ``A = X^T X + rho d_n I`` once (native Cholesky), and every iteration runs
+  the fused ``linear_update`` artifact.
+* logistic regression f_n = (1/s) sum log(1+exp(-y x theta)) + mu0/2 ||.||^2
+  — ``logistic_newton`` runs a fixed budget of damped Newton steps, each
+  assembling (g, H) with the Pallas kernel and solving H delta = g by CG.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import (
+    ROW_BLOCK,
+    fused_local_update,
+    gram,
+    logistic_grad_hess,
+    stochastic_quantize,
+)
+
+# Fixed iteration budgets baked into the AOT artifacts (recorded in the
+# manifest).  Newton on these strongly-convex subproblems converges to fp32
+# precision well within this budget; CG solves the (d, d) system essentially
+# exactly for the paper's d <= 50.
+NEWTON_STEPS = 8
+CG_ITERS = 64
+
+
+def pad_rows(x, y, mask=None, row_block=ROW_BLOCK):
+    """Zero-pad the sample dimension to a multiple of ``row_block``.
+
+    Returns ``(x_pad, y_pad, mask_pad)``; padded rows carry mask 0 and are
+    exact no-ops in both workloads (zero rows contribute nothing to the
+    Gram system; the logistic kernel masks them).
+    """
+    s = x.shape[0]
+    pad = (-s) % row_block
+    if mask is None:
+        mask = jnp.ones((s,), x.dtype)
+    if pad:
+        x = jnp.pad(x, ((0, pad), (0, 0)))
+        y = jnp.pad(y, (0, pad))
+        mask = jnp.pad(mask, (0, pad))
+    return x, y, mask
+
+
+# --------------------------------------------------------------------------
+# Linear regression
+# --------------------------------------------------------------------------
+
+
+@jax.jit
+def linear_setup(x, y):
+    """One-time Gram assembly: ``(X^T X, X^T y)`` via the Pallas kernel."""
+    xtx, xty = gram(x, y)
+    return (xtx, xty)
+
+
+@jax.jit
+def linear_update(a_inv, xty, alpha, nbr_sum, rho):
+    """Per-iteration closed-form primal update (fused Pallas rhs+matvec).
+
+    ``rho`` has shape (1,) so the artifact signature is all-array.
+    """
+    return (fused_local_update(a_inv, xty, alpha, nbr_sum, rho),)
+
+
+@jax.jit
+def linear_loss(x, y, theta):
+    """Local objective 1/2 ||X theta - y||^2 (padded rows are zeros)."""
+    r = x @ theta - y
+    return (0.5 * jnp.dot(r, r),)
+
+
+# --------------------------------------------------------------------------
+# Logistic regression
+# --------------------------------------------------------------------------
+
+
+def _cg_solve(hmv, b, iters):
+    """Conjugate gradient on the SPD system ``H delta = b`` (matrix-free)."""
+
+    def body(_, state):
+        xk, rk, pk, rs = state
+        hp = hmv(pk)
+        denom = jnp.dot(pk, hp)
+        alpha = rs / jnp.maximum(denom, 1e-30)
+        xk = xk + alpha * pk
+        rk = rk - alpha * hp
+        rs_new = jnp.dot(rk, rk)
+        beta = rs_new / jnp.maximum(rs, 1e-30)
+        pk = rk + beta * pk
+        return (xk, rk, pk, rs_new)
+
+    x0 = jnp.zeros_like(b)
+    state = (x0, b, b, jnp.dot(b, b))
+    state = jax.lax.fori_loop(0, iters, body, state)
+    return state[0]
+
+
+@functools.partial(jax.jit, static_argnames=("newton_steps", "cg_iters"))
+def logistic_newton(
+    x,
+    y,
+    mask,
+    inv_count,
+    mu0,
+    rho_dn,
+    lin,
+    theta0,
+    *,
+    newton_steps=NEWTON_STEPS,
+    cg_iters=CG_ITERS,
+):
+    """Solve the logistic GGADMM subproblem with fixed-budget Newton + CG.
+
+    Arguments (all f32 arrays; scalars have shape (1,)):
+      x (s, d), y (s,) in {-1, +1}, mask (s,) in {0, 1},
+      inv_count = 1/s_real, mu0 = ridge, rho_dn = rho * d_n,
+      lin (d,) = alpha_n - rho * sum_{m in N_n} theta_hat_m,
+      theta0 (d,) = warm start (previous iterate).
+    """
+    inv_s = inv_count[0]
+    reg = mu0[0] + rho_dn[0]
+
+    def newton_body(_, theta):
+        g_data, h_data = logistic_grad_hess(x, y, mask, theta)
+        grad = inv_s * g_data + mu0[0] * theta + lin + rho_dn[0] * theta
+
+        def hmv(v):
+            return inv_s * jnp.dot(h_data, v) + reg * v
+
+        delta = _cg_solve(hmv, grad, cg_iters)
+        return theta - delta
+
+    theta = jax.lax.fori_loop(0, newton_steps, newton_body, theta0)
+    return (theta,)
+
+
+@jax.jit
+def logistic_loss(x, y, mask, inv_count, mu0, theta):
+    """Local objective (1/s) sum log(1+exp(-y x theta)) + mu0/2 ||theta||^2."""
+    z = y * (x @ theta)
+    # log1p(exp(-z)) computed stably; masked rows contribute 0.
+    val = jnp.where(mask > 0, jnp.logaddexp(0.0, -z), 0.0)
+    loss = inv_count[0] * jnp.sum(val) + 0.5 * mu0[0] * jnp.dot(theta, theta)
+    return (loss,)
+
+
+# --------------------------------------------------------------------------
+# Quantizer (codec oracle — the Rust hot path has a native twin that is
+# differential-tested against this artifact)
+# --------------------------------------------------------------------------
+
+
+@jax.jit
+def quantize(v, q_prev, r, levels, u):
+    """Stochastic quantization of paper §5; see kernels/quantize.py."""
+    q, recon = stochastic_quantize(v, q_prev, r, levels, u)
+    return (q, recon)

@@ -1,0 +1,210 @@
+"""Pallas kernels vs pure-jnp oracles — the core L1 correctness signal.
+
+Hypothesis sweeps shapes and values; every kernel must match ``ref.py`` to
+fp32 tolerance for all of them.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from compile.kernels import (
+    ROW_BLOCK,
+    fused_local_update,
+    gram,
+    logistic_grad_hess,
+    stochastic_quantize,
+)
+from compile.kernels import ref
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+def rng(seed):
+    return np.random.default_rng(seed)
+
+
+def make_xy(seed, blocks, d):
+    r = rng(seed)
+    s = blocks * ROW_BLOCK
+    x = r.normal(size=(s, d)).astype(np.float32)
+    y = r.normal(size=(s,)).astype(np.float32)
+    return jnp.asarray(x), jnp.asarray(y)
+
+
+# ---------------------------------------------------------------- gram ----
+
+
+@settings(**SETTINGS)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    blocks=st.integers(1, 8),
+    d=st.integers(1, 40),
+)
+def test_gram_matches_ref(seed, blocks, d):
+    x, y = make_xy(seed, blocks, d)
+    xtx, xty = gram(x, y)
+    rxtx, rxty = ref.gram_ref(x, y)
+    np.testing.assert_allclose(xtx, rxtx, rtol=1e-5, atol=1e-4)
+    np.testing.assert_allclose(xty, rxty, rtol=1e-5, atol=1e-4)
+
+
+def test_gram_zero_row_padding_is_noop():
+    x, y = make_xy(0, 2, 5)
+    xp = jnp.concatenate([x, jnp.zeros((ROW_BLOCK, 5), jnp.float32)])
+    yp = jnp.concatenate([y, jnp.zeros((ROW_BLOCK,), jnp.float32)])
+    a, b = gram(x, y)
+    ap, bp = gram(xp, yp)
+    np.testing.assert_allclose(a, ap, rtol=1e-6)
+    np.testing.assert_allclose(b, bp, rtol=1e-6)
+
+
+def test_gram_rejects_unpadded_rows():
+    x = jnp.zeros((ROW_BLOCK + 1, 3), jnp.float32)
+    y = jnp.zeros((ROW_BLOCK + 1,), jnp.float32)
+    with pytest.raises(ValueError):
+        gram(x, y)
+
+
+def test_gram_symmetry():
+    x, y = make_xy(7, 4, 12)
+    xtx, _ = gram(x, y)
+    np.testing.assert_allclose(xtx, xtx.T, rtol=1e-6)
+
+
+# ------------------------------------------------------------ logistic ----
+
+
+@settings(**SETTINGS)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    blocks=st.integers(1, 6),
+    d=st.integers(1, 30),
+)
+def test_logistic_grad_hess_matches_ref(seed, blocks, d):
+    x, _ = make_xy(seed, blocks, d)
+    r = rng(seed + 1)
+    s = blocks * ROW_BLOCK
+    y = jnp.asarray(r.choice([-1.0, 1.0], size=s).astype(np.float32))
+    mask = jnp.asarray((r.uniform(size=s) < 0.8).astype(np.float32))
+    theta = jnp.asarray(r.normal(size=d).astype(np.float32))
+    g, h = logistic_grad_hess(x, y, mask, theta)
+    rg, rh = ref.logistic_grad_hess_ref(x, y, mask, theta)
+    np.testing.assert_allclose(g, rg, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(h, rh, rtol=1e-4, atol=1e-4)
+
+
+def test_logistic_masked_rows_do_not_contribute():
+    x, _ = make_xy(3, 2, 6)
+    s = 2 * ROW_BLOCK
+    r = rng(3)
+    y = jnp.asarray(r.choice([-1.0, 1.0], size=s).astype(np.float32))
+    theta = jnp.asarray(r.normal(size=6).astype(np.float32))
+    full = jnp.ones((s,), jnp.float32)
+    half = jnp.concatenate(
+        [jnp.ones((ROW_BLOCK,), jnp.float32), jnp.zeros((ROW_BLOCK,), jnp.float32)]
+    )
+    g_half, h_half = logistic_grad_hess(x, y, half, theta)
+    g_sub, h_sub = logistic_grad_hess(
+        x[:ROW_BLOCK], y[:ROW_BLOCK], full[:ROW_BLOCK], theta
+    )
+    np.testing.assert_allclose(g_half, g_sub, rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(h_half, h_sub, rtol=1e-5, atol=1e-5)
+
+
+def test_logistic_hessian_psd():
+    x, _ = make_xy(11, 3, 8)
+    s = 3 * ROW_BLOCK
+    r = rng(11)
+    y = jnp.asarray(r.choice([-1.0, 1.0], size=s).astype(np.float32))
+    mask = jnp.ones((s,), jnp.float32)
+    theta = jnp.asarray(r.normal(size=8).astype(np.float32))
+    _, h = logistic_grad_hess(x, y, mask, theta)
+    eig = np.linalg.eigvalsh(np.asarray(h, dtype=np.float64))
+    assert eig.min() >= -1e-5
+
+
+# -------------------------------------------------------------- update ----
+
+
+@settings(**SETTINGS)
+@given(seed=st.integers(0, 2**31 - 1), d=st.integers(1, 64))
+def test_fused_local_update_matches_ref(seed, d):
+    r = rng(seed)
+    a_inv = jnp.asarray(r.normal(size=(d, d)).astype(np.float32))
+    xty = jnp.asarray(r.normal(size=d).astype(np.float32))
+    alpha = jnp.asarray(r.normal(size=d).astype(np.float32))
+    nbr = jnp.asarray(r.normal(size=d).astype(np.float32))
+    rho = jnp.asarray([abs(r.normal()) + 0.1], dtype=jnp.float32)
+    got = fused_local_update(a_inv, xty, alpha, nbr, rho)
+    want = ref.fused_local_update_ref(a_inv, xty, alpha, nbr, rho[0])
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+# ------------------------------------------------------------ quantize ----
+
+
+@settings(**SETTINGS)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    d=st.integers(1, 64),
+    bits=st.integers(2, 12),
+)
+def test_quantize_matches_ref(seed, d, bits):
+    r = rng(seed)
+    v = jnp.asarray(r.normal(size=d).astype(np.float32))
+    q_prev = jnp.asarray(r.normal(size=d).astype(np.float32))
+    rad = float(np.max(np.abs(np.asarray(v - q_prev)))) + 1e-3
+    levels = jnp.asarray([float(2**bits)], dtype=jnp.float32)
+    radius = jnp.asarray([rad], dtype=jnp.float32)
+    u = jnp.asarray(r.uniform(size=d).astype(np.float32))
+    q, recon = stochastic_quantize(v, q_prev, radius, levels, u)
+    rq, rrecon = ref.stochastic_quantize_ref(v, q_prev, radius[0], levels[0], u)
+    np.testing.assert_allclose(q, rq, rtol=0, atol=0)
+    np.testing.assert_allclose(recon, rrecon, rtol=1e-5, atol=1e-5)
+
+
+@settings(**SETTINGS)
+@given(seed=st.integers(0, 2**31 - 1), bits=st.integers(2, 10))
+def test_quantize_error_within_step(seed, bits):
+    """|recon - v| <= delta for every coordinate (paper §5)."""
+    d = 32
+    r = rng(seed)
+    v = jnp.asarray(r.normal(size=d).astype(np.float32))
+    q_prev = jnp.asarray(r.normal(size=d).astype(np.float32))
+    rad = float(np.max(np.abs(np.asarray(v - q_prev)))) + 1e-3
+    levels = float(2**bits)
+    delta = 2.0 * rad / (levels - 1.0)
+    u = jnp.asarray(r.uniform(size=d).astype(np.float32))
+    _, recon = stochastic_quantize(
+        v,
+        q_prev,
+        jnp.asarray([rad], jnp.float32),
+        jnp.asarray([levels], jnp.float32),
+        u,
+    )
+    err = np.abs(np.asarray(recon - v))
+    assert err.max() <= delta * (1 + 1e-3)
+
+
+def test_quantize_unbiased_statistically():
+    """Monte-Carlo check of eq. (16): E[recon] == v."""
+    d = 16
+    r = rng(123)
+    v = jnp.asarray(r.normal(size=d).astype(np.float32))
+    q_prev = jnp.zeros((d,), jnp.float32)
+    rad = float(np.max(np.abs(np.asarray(v)))) + 1e-3
+    levels = jnp.asarray([8.0], jnp.float32)  # 3 bits -> 8 grid points
+    radius = jnp.asarray([rad], jnp.float32)
+    trials = 3000
+    acc = np.zeros(d, np.float64)
+    for t in range(trials):
+        u = jnp.asarray(r.uniform(size=d).astype(np.float32))
+        _, recon = stochastic_quantize(v, q_prev, radius, levels, u)
+        acc += np.asarray(recon, np.float64)
+    mean = acc / trials
+    delta = 2.0 * rad / 7.0
+    # standard error of a bounded-by-delta variable over `trials` draws
+    np.testing.assert_allclose(mean, np.asarray(v), atol=4 * delta / np.sqrt(trials))

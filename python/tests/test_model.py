@@ -1,0 +1,178 @@
+"""Layer-2 model tests: the AOT entry points solve their subproblems."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from compile import model
+from compile.kernels import ROW_BLOCK
+
+SETTINGS = dict(max_examples=15, deadline=None)
+
+
+def rng(seed):
+    return np.random.default_rng(seed)
+
+
+def test_pad_rows_multiple_of_block():
+    r = rng(0)
+    x = jnp.asarray(r.normal(size=(13, 5)).astype(np.float32))
+    y = jnp.asarray(r.normal(size=13).astype(np.float32))
+    xp, yp, mp = model.pad_rows(x, y)
+    assert xp.shape[0] % ROW_BLOCK == 0
+    assert xp.shape[0] == yp.shape[0] == mp.shape[0]
+    assert float(mp.sum()) == 13.0
+    np.testing.assert_allclose(xp[:13], x)
+
+
+def test_pad_rows_already_aligned_is_identity():
+    r = rng(1)
+    x = jnp.asarray(r.normal(size=(ROW_BLOCK, 3)).astype(np.float32))
+    y = jnp.asarray(r.normal(size=ROW_BLOCK).astype(np.float32))
+    xp, yp, _ = model.pad_rows(x, y)
+    assert xp.shape == x.shape and yp.shape == y.shape
+
+
+@settings(**SETTINGS)
+@given(seed=st.integers(0, 2**31 - 1), d=st.integers(2, 20))
+def test_linear_update_solves_normal_equations(seed, d):
+    """linear_setup + native inverse + linear_update == argmin of eq. (21)."""
+    r = rng(seed)
+    s = 4 * ROW_BLOCK
+    x = jnp.asarray(r.normal(size=(s, d)).astype(np.float32))
+    y = jnp.asarray(r.normal(size=s).astype(np.float32))
+    alpha = jnp.asarray(r.normal(size=d).astype(np.float32))
+    nbr = jnp.asarray(r.normal(size=d).astype(np.float32))
+    rho, dn = 1.0, 3.0
+
+    (xtx, xty) = model.linear_setup(x, y)
+    a = np.asarray(xtx, np.float64) + rho * dn * np.eye(d)
+    a_inv = jnp.asarray(np.linalg.inv(a).astype(np.float32))
+    (theta,) = model.linear_update(
+        a_inv, xty, alpha, rho * dn / rho * nbr * 0 + nbr, jnp.asarray([rho], jnp.float32)
+    )
+
+    # gradient of the subproblem at theta must vanish:
+    #   X^T(X theta - y) + alpha - rho*nbr + rho*dn*theta = 0
+    g = (
+        np.asarray(xtx) @ np.asarray(theta)
+        - np.asarray(xty)
+        + np.asarray(alpha)
+        - rho * np.asarray(nbr)
+        + rho * dn * np.asarray(theta)
+    )
+    scale = max(1.0, float(np.abs(np.asarray(xty)).max()))
+    assert np.abs(g).max() / scale < 5e-3
+
+
+@settings(**SETTINGS)
+@given(seed=st.integers(0, 2**31 - 1), d=st.integers(2, 12))
+def test_logistic_newton_reaches_stationarity(seed, d):
+    """The fixed Newton budget drives the subproblem gradient to ~0."""
+    r = rng(seed)
+    s = 3 * ROW_BLOCK
+    x = jnp.asarray(r.normal(size=(s, d)).astype(np.float32))
+    y = jnp.asarray(r.choice([-1.0, 1.0], size=s).astype(np.float32))
+    mask = jnp.ones((s,), jnp.float32)
+    mu0, rho_dn = 0.1, 2.0
+    lin = jnp.asarray(0.1 * r.normal(size=d).astype(np.float32))
+    theta0 = jnp.zeros((d,), jnp.float32)
+
+    (theta,) = model.logistic_newton(
+        x,
+        y,
+        mask,
+        jnp.asarray([1.0 / s], jnp.float32),
+        jnp.asarray([mu0], jnp.float32),
+        jnp.asarray([rho_dn], jnp.float32),
+        lin,
+        theta0,
+    )
+
+    th = np.asarray(theta, np.float64)
+    xs = np.asarray(x, np.float64)
+    ys = np.asarray(y, np.float64)
+    z = ys * (xs @ th)
+    p = 1.0 / (1.0 + np.exp(z))
+    grad = xs.T @ (-ys * p) / s + mu0 * th + np.asarray(lin) + rho_dn * th
+    assert np.abs(grad).max() < 1e-3
+
+
+def test_logistic_loss_matches_numpy():
+    r = rng(5)
+    s, d = 2 * ROW_BLOCK, 6
+    x = jnp.asarray(r.normal(size=(s, d)).astype(np.float32))
+    y = jnp.asarray(r.choice([-1.0, 1.0], size=s).astype(np.float32))
+    mask = jnp.ones((s,), jnp.float32)
+    theta = jnp.asarray(r.normal(size=d).astype(np.float32))
+    mu0 = 0.05
+    (loss,) = model.logistic_loss(
+        x, y, mask,
+        jnp.asarray([1.0 / s], jnp.float32),
+        jnp.asarray([mu0], jnp.float32),
+        theta,
+    )
+    z = np.asarray(y) * (np.asarray(x) @ np.asarray(theta))
+    want = np.mean(np.logaddexp(0.0, -z)) + 0.5 * mu0 * np.sum(np.asarray(theta) ** 2)
+    np.testing.assert_allclose(float(loss), want, rtol=1e-5)
+
+
+def test_linear_loss_matches_numpy():
+    r = rng(6)
+    s, d = 2 * ROW_BLOCK, 5
+    x = jnp.asarray(r.normal(size=(s, d)).astype(np.float32))
+    y = jnp.asarray(r.normal(size=s).astype(np.float32))
+    theta = jnp.asarray(r.normal(size=d).astype(np.float32))
+    (loss,) = model.linear_loss(x, y, theta)
+    res = np.asarray(x) @ np.asarray(theta) - np.asarray(y)
+    np.testing.assert_allclose(float(loss), 0.5 * np.sum(res**2), rtol=1e-5)
+
+
+@settings(**SETTINGS)
+@given(seed=st.integers(0, 2**31 - 1), d=st.integers(2, 16))
+def test_cg_solve_matches_direct_solve(seed, d):
+    """The in-graph CG solver reaches the direct solution on SPD systems."""
+    r = rng(seed)
+    b_mat = r.normal(size=(d, d))
+    a = (b_mat.T @ b_mat + d * 0.3 * np.eye(d)).astype(np.float32)
+    rhs = r.normal(size=d).astype(np.float32)
+
+    def hmv(v):
+        return jnp.asarray(a) @ v
+
+    x = model._cg_solve(hmv, jnp.asarray(rhs), 2 * d)
+    want = np.linalg.solve(a.astype(np.float64), rhs.astype(np.float64))
+    np.testing.assert_allclose(np.asarray(x), want, rtol=5e-3, atol=5e-3)
+
+
+@settings(**SETTINGS)
+@given(seed=st.integers(0, 2**31 - 1), s=st.integers(1, 40))
+def test_pad_rows_mask_preserved(seed, s):
+    r = rng(seed)
+    x = jnp.asarray(r.normal(size=(s, 3)).astype(np.float32))
+    y = jnp.asarray(r.normal(size=s).astype(np.float32))
+    mask = jnp.asarray((r.uniform(size=s) < 0.5).astype(np.float32))
+    xp, yp, mp = model.pad_rows(x, y, mask)
+    assert float(mp.sum()) == float(mask.sum())
+    assert float(jnp.abs(xp[s:]).sum()) == 0.0
+    assert float(jnp.abs(yp[s:]).sum()) == 0.0
+
+
+def test_logistic_newton_warm_start_idempotent():
+    """Re-solving from the solution must stay at the solution."""
+    r = rng(9)
+    s, d = 2 * ROW_BLOCK, 5
+    x = jnp.asarray(r.normal(size=(s, d)).astype(np.float32))
+    y = jnp.asarray(r.choice([-1.0, 1.0], size=s).astype(np.float32))
+    mask = jnp.ones((s,), jnp.float32)
+    args = (
+        x, y, mask,
+        jnp.asarray([1.0 / s], jnp.float32),
+        jnp.asarray([0.1], jnp.float32),
+        jnp.asarray([1.0], jnp.float32),
+        jnp.asarray(0.1 * r.normal(size=d).astype(np.float32)),
+    )
+    (theta1,) = model.logistic_newton(*args, jnp.zeros((d,), jnp.float32))
+    (theta2,) = model.logistic_newton(*args, theta1)
+    np.testing.assert_allclose(theta1, theta2, rtol=1e-4, atol=1e-5)

@@ -1,0 +1,39 @@
+//! Ablation benches for the design choices DESIGN.md calls out:
+//! component ablation (censoring / quantization / both), penalty `rho`
+//! sensitivity, censoring-threshold sensitivity (both extremes of §4),
+//! initial bit width, and the Jacobian-vs-alternating schedule split.
+//!
+//! Run with: `cargo bench --bench bench_ablation`
+
+use cq_ggadmm::experiments::sensitivity as sens;
+use std::time::Instant;
+
+fn timed<T>(name: &str, f: impl FnOnce() -> T) -> T {
+    let t0 = Instant::now();
+    let out = f();
+    println!("[{name}: {:.2}s]", t0.elapsed().as_secs_f64());
+    out
+}
+
+fn main() {
+    let iters = 250;
+    let seed = 41;
+
+    let pts = timed("component ablation", || sens::component_ablation(iters, seed));
+    println!("{}", sens::render("component", &pts).render());
+
+    let pts = timed("rho sweep", || {
+        sens::rho_sweep(&[0.5, 2.0, 10.0, 30.0, 100.0], iters, seed)
+    });
+    println!("{}", sens::render("rho (GGADMM)", &pts).render());
+
+    let pts = timed("tau0 sweep", || {
+        sens::tau0_sweep(&[0.0, 0.05, 0.1, 0.5, 5.0, 50.0], 0.9, iters, seed)
+    });
+    println!("{}", sens::render("tau0 (C-GGADMM, xi=0.9)", &pts).render());
+
+    let pts = timed("bits0 sweep", || sens::bits_sweep(&[2, 4, 8, 12], iters, seed));
+    println!("{}", sens::render("bits0 (CQ-GGADMM)", &pts).render());
+
+    println!("bench_ablation done");
+}

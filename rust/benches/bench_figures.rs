@@ -1,0 +1,71 @@
+//! Figure benches: regenerate every table/figure of the paper's
+//! evaluation (§7) and report wall-clock per series.
+//!
+//! The offline sandbox has no criterion, so this is a `harness = false`
+//! bench binary with first-party timing; it prints the same summary rows
+//! the paper's figures encode (loss-gap crossings per scheme on each
+//! x-axis) plus Table 1 and the Theorem-2/3 rate study.
+//!
+//! Run with: `cargo bench --bench bench_figures`
+//! Quick mode: `cargo bench --bench bench_figures -- --quick`
+
+use cq_ggadmm::experiments::{self, ExecOptions};
+use cq_ggadmm::metrics::save_traces;
+use std::path::Path;
+use std::time::Instant;
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let exec = ExecOptions::default();
+
+    println!("== Table 1: dataset inventory ==");
+    println!("{}", experiments::table1().render());
+
+    for id in ["fig2", "fig3", "fig4", "fig5"] {
+        let mut spec = experiments::figure_by_id(id).unwrap();
+        if quick {
+            spec.iters_alt = spec.iters_alt.min(80);
+            spec.iters_jacobian = spec.iters_jacobian.min(200);
+            spec.target_gap = 1e-2;
+        }
+        let t0 = Instant::now();
+        let res = experiments::run_figure(&spec, &exec);
+        let dt = t0.elapsed();
+        println!("== {} [{:.2}s] ==", res.title, dt.as_secs_f64());
+        println!("{}", res.summary.render());
+        let path = format!("results/bench_{}.csv", res.id);
+        save_traces(&res.traces, Path::new(&path)).expect("csv");
+    }
+
+    {
+        let mut spec = experiments::fig6();
+        if quick {
+            spec.base.iters_alt = 80;
+            spec.base.iters_jacobian = 200;
+            spec.base.target_gap = 1e-2;
+        }
+        let t0 = Instant::now();
+        let results = experiments::run_fig6(&spec, &exec);
+        println!(
+            "== {} [{:.2}s] ==",
+            spec.base.title,
+            t0.elapsed().as_secs_f64()
+        );
+        for res in &results {
+            println!("-- {} --\n{}", res.title, res.summary.render());
+        }
+    }
+
+    {
+        let t0 = Instant::now();
+        let iters = if quick { 60 } else { 150 };
+        let studies = experiments::rates::study(&[0.15, 0.3, 0.5, 0.8], 16, 11, iters);
+        println!(
+            "== Theorem 2/3 rate study [{:.2}s] ==",
+            t0.elapsed().as_secs_f64()
+        );
+        println!("{}", experiments::rates::render(&studies).render());
+    }
+
+    println!("bench_figures done");
+}

@@ -1,0 +1,178 @@
+//! Hot-path micro-benchmarks (first-party harness; no criterion offline).
+//!
+//! Covers every stage of the per-iteration pipeline — native and PJRT
+//! subproblem solves, quantization, bit-packing codec, a full GGADMM /
+//! CQ-GGADMM iteration at paper scale, and topology generation — and
+//! prints ns/op so the §Perf iteration log in EXPERIMENTS.md is
+//! regenerable.
+//!
+//! Run with: `cargo bench --bench bench_hotpath`
+
+use cq_ggadmm::algs::{AlgSpec, Problem, Run, RunOptions};
+use cq_ggadmm::data::{partition_uniform, synthetic};
+use cq_ggadmm::graph::Topology;
+use cq_ggadmm::quant::{codec, QuantConfig, Quantizer};
+use cq_ggadmm::solver::{LinearSolver, LogisticSolver, SubproblemSolver};
+use cq_ggadmm::util::rng::Pcg64;
+use std::hint::black_box;
+use std::time::Instant;
+
+/// Time `f` over enough repetitions for a stable ns/op estimate.
+fn bench<F: FnMut()>(name: &str, mut f: F) -> f64 {
+    // warmup
+    for _ in 0..3 {
+        f();
+    }
+    let mut reps = 1u64;
+    loop {
+        let t0 = Instant::now();
+        for _ in 0..reps {
+            f();
+        }
+        let dt = t0.elapsed();
+        if dt.as_millis() >= 200 || reps >= 1 << 22 {
+            let ns = dt.as_nanos() as f64 / reps as f64;
+            println!("{name:<44} {:>12.0} ns/op  ({reps} reps)", ns);
+            return ns;
+        }
+        reps *= 4;
+    }
+}
+
+fn main() {
+    println!("== hot-path micro-benchmarks ==");
+    let d = 50;
+    let mut rng = Pcg64::new(1);
+
+    // quantizer
+    let v = rng.normal_vec(d);
+    let reference = vec![0.0; d];
+    let mut q = Quantizer::new(QuantConfig::default(), Pcg64::new(2));
+    bench("quantize d=50", || {
+        let mut q2 = q.clone();
+        black_box(q2.quantize(black_box(&v), black_box(&reference)));
+    });
+    let (msg, _) = q.quantize(&v, &reference);
+    bench("codec encode d=50", || {
+        black_box(codec::encode(black_box(&msg)));
+    });
+    let bytes = codec::encode(&msg);
+    bench("codec decode d=50", || {
+        black_box(codec::decode(black_box(&bytes), d)).unwrap();
+    });
+
+    // native solvers at paper scale (s=50, d=50)
+    let ds = synthetic::linear_dataset(1200, d, 3);
+    let shards = partition_uniform(&ds, 24, 3);
+    let mut lin = LinearSolver::new(shards[0].x.clone(), shards[0].y.clone(), 30.0, 7);
+    let alpha = rng.normal_vec(d);
+    let nbr = rng.normal_vec(d);
+    let warm = vec![0.0; d];
+    bench("native linear update (s=50,d=50)", || {
+        black_box(lin.update(black_box(&alpha), black_box(&nbr), &warm));
+    });
+    let dsl = synthetic::logistic_dataset(1200, d, 4);
+    let shards_l = partition_uniform(&dsl, 24, 4);
+    let mut logi =
+        LogisticSolver::new(shards_l[0].x.clone(), shards_l[0].y.clone(), 0.01, 0.1, 7);
+    bench("native logistic update (s=50,d=50)", || {
+        black_box(logi.update(black_box(&alpha), black_box(&nbr), &warm));
+    });
+
+    // PJRT solvers (if artifacts are built)
+    let art = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if art.join("manifest.json").exists() {
+        let mut plin = cq_ggadmm::runtime::pjrt_solver(
+            &art,
+            cq_ggadmm::config::Task::Linear,
+            &shards[0],
+            30.0,
+            0.0,
+            7,
+        )
+        .expect("pjrt linear");
+        bench("PJRT  linear update (s=50,d=50)", || {
+            black_box(plin.update(black_box(&alpha), black_box(&nbr), &warm));
+        });
+        let mut plog = cq_ggadmm::runtime::pjrt_solver(
+            &art,
+            cq_ggadmm::config::Task::Logistic,
+            &shards_l[0],
+            0.1,
+            0.01,
+            7,
+        )
+        .expect("pjrt logistic");
+        bench("PJRT  logistic update (s=50,d=50)", || {
+            black_box(plog.update(black_box(&alpha), black_box(&nbr), &warm));
+        });
+    } else {
+        println!("(PJRT benches skipped: run `make artifacts`)");
+    }
+
+    // full iterations at paper scale, native backend
+    let topo = Topology::random_bipartite(24, 0.3, 21);
+    let problem = Problem::new(&ds, &topo, 30.0, 0.0, 21);
+    let mut run_gg = Run::new(
+        problem.clone(),
+        topo.clone(),
+        AlgSpec::ggadmm(),
+        RunOptions { record_every: u64::MAX, ..Default::default() },
+    );
+    bench("full GGADMM iteration (N=24,d=50)", || {
+        run_gg.step();
+    });
+    let mut run_cq = Run::new(
+        problem.clone(),
+        topo.clone(),
+        AlgSpec::cq_ggadmm(0.1, 0.8, 0.995, 2),
+        RunOptions { record_every: u64::MAX, ..Default::default() },
+    );
+    bench("full CQ-GGADMM iteration (N=24,d=50)", || {
+        run_cq.step();
+    });
+    // threads ablation: fan-out only pays for expensive subproblems, so
+    // compare on the logistic workload (Newton-dominated)
+    let topo_l = Topology::random_bipartite(24, 0.3, 23);
+    let problem_l = Problem::new(&dsl, &topo_l, 0.1, 0.01, 23);
+    let mut run_l1 = Run::new(
+        problem_l.clone(),
+        topo_l.clone(),
+        AlgSpec::ggadmm(),
+        RunOptions { threads: 1, record_every: u64::MAX, ..Default::default() },
+    );
+    bench("full logistic iteration, 1 thread", || {
+        run_l1.step();
+    });
+    let mut run_l4 = Run::new(
+        problem_l,
+        topo_l,
+        AlgSpec::ggadmm(),
+        RunOptions { threads: 4, record_every: u64::MAX, ..Default::default() },
+    );
+    bench("full logistic iteration, 4 threads", || {
+        run_l4.step();
+    });
+    drop(problem);
+    drop(topo);
+
+    // metric recording cost (loss over all shards)
+    let topo2 = Topology::random_bipartite(24, 0.3, 22);
+    let problem2 = Problem::new(&ds, &topo2, 30.0, 0.0, 22);
+    let mut run_rec = Run::new(
+        problem2,
+        topo2,
+        AlgSpec::ggadmm(),
+        RunOptions { record_every: 1, ..Default::default() },
+    );
+    bench("GGADMM iteration + trace record", || {
+        run_rec.step();
+    });
+
+    // topology generation
+    bench("random_bipartite(24, 0.3)", || {
+        black_box(Topology::random_bipartite(24, 0.3, black_box(7)));
+    });
+
+    println!("bench_hotpath done");
+}

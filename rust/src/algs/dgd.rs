@@ -1,0 +1,166 @@
+//! Decentralized gradient descent (DGD) — extra first-order baseline.
+//!
+//! The paper motivates GADMM's second-order updates against first-order
+//! decentralized methods; this module provides that comparison point:
+//! Metropolis-weighted consensus + local gradient step,
+//! `theta_n^{k+1} = sum_m W_nm theta_m^k - eta_k grad f_n(theta_n^k)`.
+//! Every worker transmits full precision every iteration (concurrent
+//! fraction 1.0 for the energy model).
+
+use super::Problem;
+use crate::comm::{full_precision_bits, CommLog, EnergyModel, EnergyParams, Transmission};
+use crate::config::Task;
+use crate::graph::Topology;
+use crate::metrics::{Trace, TracePoint};
+
+/// Metropolis–Hastings mixing weights: `W_nm = 1/(1+max(d_n,d_m))` for
+/// edges, diagonal absorbs the rest (doubly stochastic, symmetric).
+pub fn metropolis_weights(topo: &Topology) -> Vec<Vec<(usize, f64)>> {
+    let n = topo.n();
+    let mut weights = vec![Vec::new(); n];
+    for i in 0..n {
+        let mut self_w = 1.0;
+        for &m in topo.neighbors(i) {
+            let w = 1.0 / (1.0 + topo.degree(i).max(topo.degree(m)) as f64);
+            weights[i].push((m, w));
+            self_w -= w;
+        }
+        weights[i].push((i, self_w));
+    }
+    weights
+}
+
+/// Local gradient of `f_n` at `theta`.
+fn local_grad(problem: &Problem, n: usize, theta: &[f64]) -> Vec<f64> {
+    let sh = &problem.shards[n];
+    let d = problem.d;
+    match problem.task {
+        Task::Linear => {
+            let resid = sh.x.matvec(theta);
+            let resid: Vec<f64> = resid.iter().zip(&sh.y).map(|(p, y)| p - y).collect();
+            sh.x.t_matvec(&resid)
+        }
+        Task::Logistic => {
+            let inv_s = 1.0 / sh.s() as f64;
+            let mut g = vec![0.0; d];
+            for i in 0..sh.s() {
+                let row = sh.x.row(i);
+                let z = sh.y[i] * crate::util::dot(row, theta);
+                let p = 1.0 / (1.0 + z.exp());
+                let gs = -sh.y[i] * p * inv_s;
+                for a in 0..d {
+                    g[a] += gs * row[a];
+                }
+            }
+            for a in 0..d {
+                g[a] += problem.mu0 * theta[a];
+            }
+            g
+        }
+    }
+}
+
+/// Run DGD for `iters` iterations with step size `eta0 / sqrt(k+1)`.
+pub fn run_dgd(
+    problem: &Problem,
+    topo: &Topology,
+    eta0: f64,
+    iters: u64,
+    energy_params: EnergyParams,
+) -> Trace {
+    let n = topo.n();
+    let d = problem.d;
+    let weights = metropolis_weights(topo);
+    let energy = EnergyModel::new(energy_params, n, 1.0);
+    let mut comm = CommLog::default();
+    let mut thetas = vec![vec![0.0; d]; n];
+    let mut trace = Trace::new("DGD", &problem.dataset_name);
+    for k in 0..iters {
+        // everyone broadcasts full precision
+        for i in 0..n {
+            let bits = full_precision_bits(d);
+            let dist = topo.max_neighbor_distance(i);
+            comm.record(Transmission {
+                worker: i,
+                iteration: k,
+                payload_bits: bits,
+                distance_m: dist,
+                energy_j: energy.energy_j(bits, dist),
+            });
+        }
+        let eta = eta0 / ((k + 1) as f64).sqrt();
+        let mut next = vec![vec![0.0; d]; n];
+        for i in 0..n {
+            for &(m, w) in &weights[i] {
+                crate::util::axpy(&mut next[i], w, &thetas[m]);
+            }
+            let g = local_grad(problem, i, &thetas[i]);
+            crate::util::axpy(&mut next[i], -eta, &g);
+        }
+        thetas = next;
+        let obj = problem.objective_at(&thetas);
+        let mut consensus: f64 = 0.0;
+        for &(h, t) in topo.edges() {
+            let diff: f64 = thetas[h]
+                .iter()
+                .zip(&thetas[t])
+                .map(|(a, b)| (a - b) * (a - b))
+                .sum::<f64>()
+                .sqrt();
+            consensus = consensus.max(diff);
+        }
+        trace.push(TracePoint {
+            iteration: k + 1,
+            loss_gap: (obj - problem.f_star).abs(),
+            consensus_gap: consensus,
+            cum_rounds: comm.rounds(),
+            cum_bits: comm.total_bits,
+            cum_energy_j: comm.total_energy_j,
+        });
+    }
+    trace
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic;
+
+    #[test]
+    fn metropolis_rows_sum_to_one() {
+        let topo = Topology::random_bipartite(10, 0.4, 1);
+        let w = metropolis_weights(&topo);
+        for row in &w {
+            let sum: f64 = row.iter().map(|(_, v)| v).sum();
+            assert!((sum - 1.0).abs() < 1e-12);
+            for &(_, v) in row {
+                assert!(v > 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn metropolis_symmetric() {
+        let topo = Topology::random_bipartite(8, 0.5, 2);
+        let w = metropolis_weights(&topo);
+        for i in 0..8 {
+            for &(m, v) in &w[i] {
+                if m != i {
+                    let back = w[m].iter().find(|(j, _)| *j == i).unwrap().1;
+                    assert!((v - back).abs() < 1e-12);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn dgd_decreases_objective() {
+        let topo = Topology::random_bipartite(6, 0.5, 3);
+        let ds = synthetic::linear_dataset(72, 4, 3);
+        let p = Problem::new(&ds, &topo, 1.0, 0.0, 3);
+        let trace = run_dgd(&p, &topo, 0.01, 300, EnergyParams::default());
+        let first = trace.points.first().unwrap().loss_gap;
+        let last = trace.last_gap();
+        assert!(last < first * 0.2, "first={first:.3e} last={last:.3e}");
+    }
+}

@@ -1,0 +1,289 @@
+//! Per-edge dual formulation + D-GGADMM (dynamic topology).
+//!
+//! The main engine ([`super::Run`]) carries the *aggregated* dual
+//! `alpha_n = sum_m lambda_{n,m}` of paper eq. (7).  This module keeps the
+//! individual edge duals `lambda_{n,m}` instead, which
+//!
+//! 1. differentially validates the aggregation (for a fixed topology the
+//!    two engines must produce identical GGADMM trajectories), and
+//! 2. enables **D-GGADMM**: the dynamic-topology extension (Elgabli et
+//!    al. 2020c study D-GADMM for time-varying chains) where the graph is
+//!    resampled every `epoch` iterations — duals of surviving edges are
+//!    kept, duals of new edges start at zero, duals of dropped edges are
+//!    discarded.
+
+use super::Problem;
+use crate::graph::Topology;
+use crate::metrics::{Trace, TracePoint};
+use crate::solver::{LinearSolver, LogisticSolver, SubproblemSolver};
+use std::collections::BTreeMap;
+
+/// GGADMM with explicit per-edge duals, optional topology resampling.
+pub struct EdgeDualRun {
+    problem: Problem,
+    topo: Topology,
+    /// lambda keyed by (head, tail) edge; the worker-side values are
+    /// lambda_{n,m} = +lambda_e at the head and -lambda_e at the tail.
+    lambda: BTreeMap<(usize, usize), Vec<f64>>,
+    thetas: Vec<Vec<f64>>,
+    solvers: Vec<Box<dyn SubproblemSolver>>,
+    iter: u64,
+    trace: Trace,
+    /// resample the topology every `epoch` iterations (None = static)
+    epoch: Option<u64>,
+    topo_seed: u64,
+    connectivity: f64,
+}
+
+impl EdgeDualRun {
+    pub fn new(problem: Problem, topo: Topology) -> EdgeDualRun {
+        let d = problem.d;
+        let lambda = topo
+            .edges()
+            .iter()
+            .map(|&e| (e, vec![0.0; d]))
+            .collect();
+        let solvers = build(&problem, &topo);
+        let trace = Trace::new("GGADMM(edge-dual)", &problem.dataset_name);
+        let thetas = vec![vec![0.0; d]; topo.n()];
+        EdgeDualRun {
+            problem,
+            topo,
+            lambda,
+            thetas,
+            solvers,
+            iter: 0,
+            trace,
+            epoch: None,
+            topo_seed: 0,
+            connectivity: 0.3,
+        }
+    }
+
+    /// Enable D-GGADMM: resample a fresh connected bipartite topology with
+    /// ratio `connectivity` every `epoch` iterations.
+    pub fn dynamic(mut self, epoch: u64, connectivity: f64, seed: u64) -> EdgeDualRun {
+        assert!(epoch > 0);
+        self.epoch = Some(epoch);
+        self.connectivity = connectivity;
+        self.topo_seed = seed;
+        self.trace = Trace::new("D-GGADMM", &self.problem.dataset_name);
+        self
+    }
+
+    /// Worker-side aggregated dual `alpha_n = sum_m lambda_{n,m}` (eq. 7).
+    pub fn alpha(&self, n: usize) -> Vec<f64> {
+        let d = self.problem.d;
+        let mut a = vec![0.0; d];
+        for (&(h, t), lam) in &self.lambda {
+            if h == n {
+                crate::util::axpy(&mut a, 1.0, lam);
+            } else if t == n {
+                crate::util::axpy(&mut a, -1.0, lam);
+            }
+        }
+        a
+    }
+
+    fn neighbor_sum(&self, n: usize) -> Vec<f64> {
+        let d = self.problem.d;
+        let mut s = vec![0.0; d];
+        for &m in self.topo.neighbors(n) {
+            crate::util::axpy(&mut s, 1.0, &self.thetas[m]);
+        }
+        s
+    }
+
+    /// One GGADMM iteration with per-edge dual updates (eqs. (4)-(6)).
+    pub fn step(&mut self) {
+        // resample topology at epoch boundaries (D-GGADMM)
+        if let Some(epoch) = self.epoch {
+            if self.iter > 0 && self.iter % epoch == 0 {
+                let new_topo = Topology::random_bipartite(
+                    self.topo.n(),
+                    self.connectivity,
+                    self.topo_seed ^ self.iter,
+                );
+                self.retopologize(new_topo);
+            }
+        }
+        // head phase
+        for &n in &self.topo.heads() {
+            let alpha = self.alpha(n);
+            let nbr = self.neighbor_sum(n);
+            self.thetas[n] = self.solvers[n].update(&alpha, &nbr, &self.thetas[n]);
+        }
+        // tail phase (sees fresh head values)
+        for &m in &self.topo.tails() {
+            let alpha = self.alpha(m);
+            let nbr = self.neighbor_sum(m);
+            self.thetas[m] = self.solvers[m].update(&alpha, &nbr, &self.thetas[m]);
+        }
+        // dual update per edge: lambda += rho (theta_h - theta_t)  (eq. 6)
+        let rho = self.problem.rho;
+        for (&(h, t), lam) in self.lambda.iter_mut() {
+            for j in 0..lam.len() {
+                lam[j] += rho * (self.thetas[h][j] - self.thetas[t][j]);
+            }
+        }
+        self.iter += 1;
+        self.record();
+    }
+
+    /// Keep duals of surviving edges, zero the new ones, drop the rest;
+    /// rebuild solvers for the new degrees.
+    fn retopologize(&mut self, new_topo: Topology) {
+        let d = self.problem.d;
+        let mut new_lambda = BTreeMap::new();
+        for &e in new_topo.edges() {
+            // surviving edges keep lambda even if head/tail flipped
+            let lam = self
+                .lambda
+                .remove(&e)
+                .or_else(|| {
+                    self.lambda
+                        .remove(&(e.1, e.0))
+                        .map(|v| v.iter().map(|x| -x).collect())
+                })
+                .unwrap_or_else(|| vec![0.0; d]);
+            new_lambda.insert(e, lam);
+        }
+        self.lambda = new_lambda;
+        self.solvers = build(&self.problem, &new_topo);
+        self.topo = new_topo;
+    }
+
+    fn record(&mut self) {
+        let obj = self.problem.objective_at(&self.thetas);
+        let mut consensus: f64 = 0.0;
+        for &(h, t) in self.topo.edges() {
+            let diff: f64 = self.thetas[h]
+                .iter()
+                .zip(&self.thetas[t])
+                .map(|(a, b)| (a - b) * (a - b))
+                .sum::<f64>()
+                .sqrt();
+            consensus = consensus.max(diff);
+        }
+        // every worker broadcasts full precision once per iteration
+        let n = self.topo.n() as u64;
+        let d = self.problem.d as u64;
+        self.trace.push(TracePoint {
+            iteration: self.iter,
+            loss_gap: (obj - self.problem.f_star).abs(),
+            consensus_gap: consensus,
+            cum_rounds: self.iter * n,
+            cum_bits: self.iter * n * 32 * d,
+            cum_energy_j: 0.0,
+        });
+    }
+
+    pub fn run(&mut self, iters: u64) -> Trace {
+        for _ in 0..iters {
+            self.step();
+        }
+        self.trace.clone()
+    }
+
+    pub fn theta(&self, n: usize) -> &[f64] {
+        &self.thetas[n]
+    }
+}
+
+fn build(problem: &Problem, topo: &Topology) -> Vec<Box<dyn SubproblemSolver>> {
+    use crate::config::Task;
+    (0..topo.n())
+        .map(|i| -> Box<dyn SubproblemSolver> {
+            let sh = &problem.shards[i];
+            match problem.task {
+                Task::Linear => Box::new(LinearSolver::new(
+                    sh.x.clone(),
+                    sh.y.clone(),
+                    problem.rho,
+                    topo.degree(i),
+                )),
+                Task::Logistic => Box::new(LogisticSolver::new(
+                    sh.x.clone(),
+                    sh.y.clone(),
+                    problem.mu0,
+                    problem.rho,
+                    topo.degree(i),
+                )),
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algs::{AlgSpec, Run, RunOptions};
+    use crate::data::synthetic;
+
+    fn problem(n: usize, seed: u64) -> (Problem, Topology) {
+        let topo = Topology::random_bipartite(n, 0.5, seed);
+        let ds = synthetic::linear_dataset(n * 12, 5, seed);
+        (Problem::new(&ds, &topo, 5.0, 0.0, seed), topo)
+    }
+
+    #[test]
+    fn edge_dual_matches_aggregated_engine_exactly() {
+        // paper eq. (7): the aggregated-alpha and per-edge-lambda
+        // formulations are the same algorithm
+        let (p, t) = problem(8, 31);
+        let mut agg = Run::new(p.clone(), t.clone(), AlgSpec::ggadmm(), RunOptions::default());
+        let mut edge = EdgeDualRun::new(p, t.clone());
+        for _ in 0..30 {
+            agg.step();
+            edge.step();
+        }
+        for n in 0..8 {
+            let a = agg.snapshot(n);
+            for (x, y) in a.theta.iter().zip(edge.theta(n)) {
+                assert!((x - y).abs() < 1e-9, "worker {n}: {x} vs {y}");
+            }
+            // the aggregated dual equals the edge-dual sum
+            let alpha_edge = edge.alpha(n);
+            for (x, y) in a.alpha.iter().zip(&alpha_edge) {
+                assert!((x - y).abs() < 1e-9, "dual {n}: {x} vs {y}");
+            }
+        }
+    }
+
+    #[test]
+    fn static_edge_dual_converges() {
+        let (p, t) = problem(6, 32);
+        let mut run = EdgeDualRun::new(p, t);
+        let trace = run.run(150);
+        assert!(trace.last_gap() < 1e-8, "gap={:.3e}", trace.last_gap());
+    }
+
+    #[test]
+    fn dynamic_topology_still_converges() {
+        // D-GGADMM: resample the graph every 40 iterations; each switch
+        // perturbs the duals of changed links, so convergence is slower
+        // than the static run but must still reach high accuracy
+        let (p, t) = problem(10, 33);
+        let mut run = EdgeDualRun::new(p, t).dynamic(40, 0.4, 77);
+        let trace = run.run(400);
+        assert!(trace.last_gap() < 1e-4, "gap={:.3e}", trace.last_gap());
+        assert_eq!(trace.algorithm, "D-GGADMM");
+    }
+
+    #[test]
+    fn dynamic_epoch_boundary_preserves_progress() {
+        let (p, t) = problem(8, 34);
+        let mut run = EdgeDualRun::new(p, t).dynamic(15, 0.5, 5);
+        let mut gaps = Vec::new();
+        for _ in 0..120 {
+            run.step();
+            gaps.push(run.trace.points.last().unwrap().loss_gap);
+        }
+        // the switch may bump the gap transiently but must not reset it to
+        // the initial magnitude
+        let initial = gaps[0];
+        for (k, g) in gaps.iter().enumerate().skip(60) {
+            assert!(*g < initial * 0.5, "iter {k}: gap {g} vs initial {initial}");
+        }
+    }
+}

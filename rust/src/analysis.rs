@@ -1,0 +1,182 @@
+//! Convergence diagnostics from the paper's analysis (§6).
+//!
+//! Tracks, alongside a [`Run`], the quantities the proofs reason about:
+//! the primal residual `r_{n,m}^k = theta_n^k - theta_m^k` (eq. 28), the
+//! dual residual `s_n^k = rho * sum_m (hat_m^k - hat_m^{k-1})` (eq. 29),
+//! the total per-worker error `eps_n^k = theta_n^k - hat_n^k` (eq. 30),
+//! and a Lyapunov-style potential `V^k` (eq. 92, with `lambda*` replaced
+//! by the per-edge duals' distance to their final value being unknown —
+//! we monitor the computable surrogate `rho * sum ||theta_m - theta*||^2
+//! + 1/rho * sum ||alpha_n||^2`, which Theorem 2 drives to a constant).
+//!
+//! Theorem 2's statements are checked empirically in the tests below:
+//! both residuals converge to zero in the (mean-)square sense.
+
+use crate::algs::Run;
+use crate::graph::Topology;
+
+/// Per-iteration diagnostic sample.
+#[derive(Clone, Copy, Debug)]
+pub struct ResidualPoint {
+    pub iteration: u64,
+    /// max over edges of ||theta_n - theta_m|| (primal residual, eq. 28)
+    pub primal_residual: f64,
+    /// max over heads of ||rho sum_m (hat_m^k - hat_m^{k-1})|| (eq. 29)
+    pub dual_residual: f64,
+    /// max over workers of ||theta_n - hat_n|| (total error, eq. 30)
+    pub total_error: f64,
+    /// Lyapunov surrogate (see module docs)
+    pub lyapunov: f64,
+}
+
+/// Residual tracker: call [`Tracker::sample`] after each `run.step()`.
+pub struct Tracker {
+    topo: Topology,
+    prev_hats: Vec<Vec<f64>>,
+    pub points: Vec<ResidualPoint>,
+}
+
+impl Tracker {
+    pub fn new(run: &Run) -> Tracker {
+        let topo = run.topology().clone();
+        let prev_hats = (0..topo.n()).map(|i| run.snapshot(i).hat).collect();
+        Tracker { topo, prev_hats, points: Vec::new() }
+    }
+
+    /// Record the residuals at the run's current state.
+    pub fn sample(&mut self, run: &Run) {
+        let n = self.topo.n();
+        let snaps: Vec<_> = (0..n).map(|i| run.snapshot(i)).collect();
+        let rho = run.problem().rho;
+        let theta_star = &run.problem().theta_star;
+
+        let mut primal: f64 = 0.0;
+        for &(h, t) in self.topo.edges() {
+            let d2: f64 = snaps[h]
+                .theta
+                .iter()
+                .zip(&snaps[t].theta)
+                .map(|(a, b)| (a - b) * (a - b))
+                .sum();
+            primal = primal.max(d2.sqrt());
+        }
+
+        let mut dual: f64 = 0.0;
+        for &h in &self.topo.heads() {
+            let mut acc = vec![0.0; theta_star.len()];
+            for &m in self.topo.neighbors(h) {
+                for j in 0..acc.len() {
+                    acc[j] += rho * (snaps[m].hat[j] - self.prev_hats[m][j]);
+                }
+            }
+            dual = dual.max(crate::util::norm2(&acc));
+        }
+
+        let mut total_err: f64 = 0.0;
+        let mut lyap = 0.0;
+        for (i, s) in snaps.iter().enumerate() {
+            let e: f64 = s
+                .theta
+                .iter()
+                .zip(&s.hat)
+                .map(|(a, b)| (a - b) * (a - b))
+                .sum();
+            total_err = total_err.max(e.sqrt());
+            let dist: f64 = s
+                .theta
+                .iter()
+                .zip(theta_star)
+                .map(|(a, b)| (a - b) * (a - b))
+                .sum();
+            let anorm: f64 = s.alpha.iter().map(|a| a * a).sum();
+            lyap += rho * dist + anorm / rho;
+            self.prev_hats[i].copy_from_slice(&s.hat);
+        }
+
+        self.points.push(ResidualPoint {
+            iteration: run.iteration(),
+            primal_residual: primal,
+            dual_residual: dual,
+            total_error: total_err,
+            lyapunov: lyap,
+        });
+    }
+
+    /// Last sampled point.
+    pub fn last(&self) -> Option<&ResidualPoint> {
+        self.points.last()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algs::{AlgSpec, Problem, RunOptions};
+    use crate::data::synthetic;
+
+    fn tracked_run(spec: AlgSpec, iters: u64, seed: u64) -> Vec<ResidualPoint> {
+        let topo = Topology::random_bipartite(8, 0.5, seed);
+        let ds = synthetic::linear_dataset(96, 5, seed);
+        let p = Problem::new(&ds, &topo, 5.0, 0.0, seed);
+        let mut run = Run::new(p, topo, spec, RunOptions { seed, ..Default::default() });
+        let mut tracker = Tracker::new(&run);
+        for _ in 0..iters {
+            run.step();
+            tracker.sample(&run);
+        }
+        tracker.points
+    }
+
+    #[test]
+    fn theorem2_residuals_vanish_for_ggadmm() {
+        let pts = tracked_run(AlgSpec::ggadmm(), 150, 51);
+        let last = pts.last().unwrap();
+        assert!(last.primal_residual < 1e-7, "r = {:.3e}", last.primal_residual);
+        assert!(last.dual_residual < 1e-7, "s = {:.3e}", last.dual_residual);
+        // without censoring/quantization the total error is exactly zero
+        assert_eq!(last.total_error, 0.0);
+    }
+
+    #[test]
+    fn theorem2_residuals_vanish_for_cq_ggadmm() {
+        let pts = tracked_run(AlgSpec::cq_ggadmm(0.2, 0.85, 0.99, 2), 250, 52);
+        let last = pts.last().unwrap();
+        assert!(last.primal_residual < 1e-4, "r = {:.3e}", last.primal_residual);
+        assert!(last.dual_residual < 1e-4, "s = {:.3e}", last.dual_residual);
+        // eps^k -> 0 (eq. 33: bounded by the decaying psi^k envelope)
+        assert!(last.total_error < 1e-4, "eps = {:.3e}", last.total_error);
+    }
+
+    #[test]
+    fn lyapunov_surrogate_stabilizes() {
+        let pts = tracked_run(AlgSpec::ggadmm(), 200, 53);
+        // after convergence the potential must stop moving
+        let tail: Vec<f64> = pts[150..].iter().map(|p| p.lyapunov).collect();
+        let spread = tail.iter().cloned().fold(f64::MIN, f64::max)
+            - tail.iter().cloned().fold(f64::MAX, f64::min);
+        let scale = tail[0].abs().max(1e-12);
+        assert!(spread / scale < 1e-6, "relative spread {:.3e}", spread / scale);
+    }
+
+    #[test]
+    fn total_error_bounded_by_censor_plus_quant_envelope() {
+        // eq. (33): eps^2 <= 4 C0^2 psi^{2k}
+        let tau0 = 0.3;
+        let xi: f64 = 0.9;
+        let omega: f64 = 0.99;
+        let pts = tracked_run(AlgSpec::cq_ggadmm(tau0, xi, omega, 2), 120, 54);
+        let psi = xi.max(omega);
+        for p in pts.iter().skip(1) {
+            // generous constant: C0 = max(tau0, sqrt(d) Delta0) with the
+            // first-round radius bounded by the first model norm (~O(1))
+            let envelope = 8.0 * psi.powi(p.iteration as i32 - 1);
+            assert!(
+                p.total_error <= envelope,
+                "iter {}: eps {:.3e} > envelope {:.3e}",
+                p.iteration,
+                p.total_error,
+                envelope
+            );
+        }
+    }
+}

@@ -1,0 +1,145 @@
+//! Communication censoring (paper §4).
+//!
+//! A worker transmits at iteration `k+1` only when its candidate update
+//! differs from its last transmitted state by at least the decaying
+//! threshold `tau^{k+1} = tau0 * xi^{k+1}`; otherwise the link is censored
+//! and neighbors keep the stale value.  The censoring error is therefore
+//! bounded by `tau^k` at every iteration (eq. (31)), which the convergence
+//! proof leans on.
+
+use crate::util::max_abs_diff;
+
+/// Censoring schedule parameters.
+#[derive(Clone, Copy, Debug)]
+pub struct CensorConfig {
+    /// Initial threshold `tau0` (0 disables censoring: every iteration
+    /// transmits, recovering GGADMM exactly).
+    pub tau0: f64,
+    /// Geometric decay `xi` in (0,1).
+    pub xi: f64,
+}
+
+impl CensorConfig {
+    pub fn validate(&self) -> Result<(), String> {
+        if self.tau0 < 0.0 {
+            return Err("tau0 must be >= 0".into());
+        }
+        if !(0.0 < self.xi && self.xi < 1.0) {
+            return Err("xi must be in (0,1)".into());
+        }
+        Ok(())
+    }
+
+    /// Threshold at iteration `k` (`tau^k = tau0 * xi^k`).
+    pub fn threshold(&self, k: u64) -> f64 {
+        if self.tau0 == 0.0 {
+            return 0.0;
+        }
+        self.tau0 * self.xi.powi(k.min(i32::MAX as u64) as i32)
+    }
+}
+
+/// Decision of the censoring gate.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Gate {
+    Transmit,
+    Censor,
+}
+
+/// Apply the censoring condition of Algorithms 1/2:
+/// transmit iff `|| last_sent - candidate || >= tau^{k}` (Euclidean).
+pub fn gate(cfg: &CensorConfig, k: u64, last_sent: &[f64], candidate: &[f64]) -> Gate {
+    if cfg.tau0 == 0.0 {
+        return Gate::Transmit;
+    }
+    let diff: f64 = last_sent
+        .iter()
+        .zip(candidate)
+        .map(|(a, b)| (a - b) * (a - b))
+        .sum::<f64>()
+        .sqrt();
+    if diff >= cfg.threshold(k) {
+        Gate::Transmit
+    } else {
+        Gate::Censor
+    }
+}
+
+/// Invariant check used by property tests: whatever the gate decided, the
+/// censoring error `|| kept - candidate ||_inf` never exceeds `tau^k` when
+/// censored (eq. (31)).
+pub fn censor_error_ok(cfg: &CensorConfig, k: u64, kept: &[f64], candidate: &[f64], decision: Gate) -> bool {
+    match decision {
+        Gate::Transmit => max_abs_diff(kept, candidate) == 0.0,
+        Gate::Censor => {
+            let l2: f64 = kept
+                .iter()
+                .zip(candidate)
+                .map(|(a, b)| (a - b) * (a - b))
+                .sum::<f64>()
+                .sqrt();
+            l2 < cfg.threshold(k)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::prop::check;
+
+    #[test]
+    fn threshold_decays_geometrically() {
+        let cfg = CensorConfig { tau0: 2.0, xi: 0.5 };
+        assert_eq!(cfg.threshold(0), 2.0);
+        assert_eq!(cfg.threshold(1), 1.0);
+        assert_eq!(cfg.threshold(3), 0.25);
+        for k in 0..50 {
+            assert!(cfg.threshold(k + 1) < cfg.threshold(k));
+        }
+    }
+
+    #[test]
+    fn tau0_zero_always_transmits() {
+        let cfg = CensorConfig { tau0: 0.0, xi: 0.9 };
+        let g = gate(&cfg, 5, &[0.0, 0.0], &[0.0, 0.0]);
+        assert_eq!(g, Gate::Transmit);
+    }
+
+    #[test]
+    fn small_updates_censored_large_pass() {
+        let cfg = CensorConfig { tau0: 1.0, xi: 0.5 };
+        // threshold at k=1 is 0.5
+        assert_eq!(gate(&cfg, 1, &[0.0], &[0.4]), Gate::Censor);
+        assert_eq!(gate(&cfg, 1, &[0.0], &[0.6]), Gate::Transmit);
+        // same diff later in training passes as the threshold decays
+        assert_eq!(gate(&cfg, 6, &[0.0], &[0.4]), Gate::Transmit);
+    }
+
+    #[test]
+    fn censor_error_invariant() {
+        check("censoring error bounded by tau^k (eq. 31)", 100, |g| {
+            let cfg = CensorConfig {
+                tau0: g.f64_in(0.01, 5.0),
+                xi: g.f64_in(0.3, 0.99),
+            };
+            let k = g.usize_in(0, 40) as u64;
+            let d = g.usize_in(1, 32);
+            let last = g.normal_vec(d);
+            let cand = g.normal_vec(d);
+            let decision = gate(&cfg, k, &last, &cand);
+            let kept = match decision {
+                Gate::Transmit => cand.clone(),
+                Gate::Censor => last.clone(),
+            };
+            assert!(censor_error_ok(&cfg, k, &kept, &cand, decision));
+        });
+    }
+
+    #[test]
+    fn validation() {
+        assert!(CensorConfig { tau0: -1.0, xi: 0.5 }.validate().is_err());
+        assert!(CensorConfig { tau0: 1.0, xi: 1.0 }.validate().is_err());
+        assert!(CensorConfig { tau0: 1.0, xi: 0.5 }.validate().is_ok());
+    }
+}

@@ -1,0 +1,306 @@
+//! Zero-dependency declarative CLI parser (clap substitute).
+//!
+//! Supports subcommands, `--flag value` / `--flag=value` options, boolean
+//! switches, typed getters with defaults, and generated `--help` text.
+
+use std::collections::BTreeMap;
+
+/// Option/flag declaration.
+#[derive(Clone, Debug)]
+pub struct OptSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    pub default: Option<&'static str>,
+    pub is_switch: bool,
+}
+
+/// A declarative command: name, help, options.
+#[derive(Clone, Debug)]
+pub struct Command {
+    pub name: &'static str,
+    pub help: &'static str,
+    pub opts: Vec<OptSpec>,
+}
+
+impl Command {
+    pub fn new(name: &'static str, help: &'static str) -> Self {
+        Command { name, help, opts: Vec::new() }
+    }
+
+    /// Declare a valued option.
+    pub fn opt(mut self, name: &'static str, default: Option<&'static str>, help: &'static str) -> Self {
+        self.opts.push(OptSpec { name, help, default, is_switch: false });
+        self
+    }
+
+    /// Declare a boolean switch.
+    pub fn switch(mut self, name: &'static str, help: &'static str) -> Self {
+        self.opts.push(OptSpec { name, help, default: None, is_switch: true });
+        self
+    }
+}
+
+/// Parsed argument bag for a matched command.
+#[derive(Clone, Debug)]
+pub struct Args {
+    pub command: String,
+    values: BTreeMap<String, String>,
+    switches: Vec<String>,
+    /// Free (positional) arguments after options.
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.values.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or(&self, name: &str, default: &str) -> String {
+        self.get(name).unwrap_or(default).to_string()
+    }
+
+    pub fn get_f64(&self, name: &str) -> Result<Option<f64>, String> {
+        match self.get(name) {
+            None => Ok(None),
+            Some(v) => v
+                .parse::<f64>()
+                .map(Some)
+                .map_err(|_| format!("option --{name}: expected a number, got '{v}'")),
+        }
+    }
+
+    pub fn get_usize(&self, name: &str) -> Result<Option<usize>, String> {
+        match self.get(name) {
+            None => Ok(None),
+            Some(v) => v
+                .parse::<usize>()
+                .map(Some)
+                .map_err(|_| format!("option --{name}: expected an integer, got '{v}'")),
+        }
+    }
+
+    pub fn get_u64(&self, name: &str) -> Result<Option<u64>, String> {
+        match self.get(name) {
+            None => Ok(None),
+            Some(v) => v
+                .parse::<u64>()
+                .map(Some)
+                .map_err(|_| format!("option --{name}: expected an integer, got '{v}'")),
+        }
+    }
+
+    pub fn has(&self, switch: &str) -> bool {
+        self.switches.iter().any(|s| s == switch)
+    }
+}
+
+/// Top-level parser over a set of commands.
+pub struct Cli {
+    pub bin: &'static str,
+    pub about: &'static str,
+    pub commands: Vec<Command>,
+}
+
+impl Cli {
+    pub fn new(bin: &'static str, about: &'static str) -> Self {
+        Cli { bin, about, commands: Vec::new() }
+    }
+
+    pub fn command(mut self, c: Command) -> Self {
+        self.commands.push(c);
+        self
+    }
+
+    /// Render the global help text.
+    pub fn help(&self) -> String {
+        let mut s = format!("{} — {}\n\nUSAGE:\n  {} <command> [options]\n\nCOMMANDS:\n", self.bin, self.about, self.bin);
+        for c in &self.commands {
+            s.push_str(&format!("  {:<12} {}\n", c.name, c.help));
+        }
+        s.push_str("\nRun '<command> --help' for command options.\n");
+        s
+    }
+
+    /// Render per-command help.
+    pub fn command_help(&self, cmd: &Command) -> String {
+        let mut s = format!("{} {} — {}\n\nOPTIONS:\n", self.bin, cmd.name, cmd.help);
+        for o in &cmd.opts {
+            let d = o
+                .default
+                .map(|d| format!(" [default: {d}]"))
+                .unwrap_or_default();
+            let kind = if o.is_switch { "" } else { " <value>" };
+            s.push_str(&format!("  --{}{kind:<10} {}{d}\n", o.name, o.help));
+        }
+        s
+    }
+
+    /// Parse argv (without the binary name).  `Err` carries a user-facing
+    /// message (help requests are `Err` with the help text so callers can
+    /// print-and-exit-0 on `is_help`).
+    pub fn parse(&self, argv: &[String]) -> Result<Args, CliError> {
+        if argv.is_empty() || argv[0] == "--help" || argv[0] == "-h" || argv[0] == "help" {
+            return Err(CliError::help(self.help()));
+        }
+        let cmd_name = &argv[0];
+        let cmd = self
+            .commands
+            .iter()
+            .find(|c| c.name == cmd_name.as_str())
+            .ok_or_else(|| {
+                CliError::error(format!(
+                    "unknown command '{cmd_name}'\n\n{}",
+                    self.help()
+                ))
+            })?;
+
+        let mut values = BTreeMap::new();
+        let mut switches = Vec::new();
+        let mut positional = Vec::new();
+        // seed defaults
+        for o in &cmd.opts {
+            if let Some(d) = o.default {
+                values.insert(o.name.to_string(), d.to_string());
+            }
+        }
+        let mut i = 1;
+        while i < argv.len() {
+            let tok = &argv[i];
+            if tok == "--help" || tok == "-h" {
+                return Err(CliError::help(self.command_help(cmd)));
+            }
+            if let Some(body) = tok.strip_prefix("--") {
+                let (name, inline) = match body.split_once('=') {
+                    Some((n, v)) => (n, Some(v.to_string())),
+                    None => (body, None),
+                };
+                let spec = cmd.opts.iter().find(|o| o.name == name).ok_or_else(|| {
+                    CliError::error(format!(
+                        "unknown option '--{name}' for '{}'\n\n{}",
+                        cmd.name,
+                        self.command_help(cmd)
+                    ))
+                })?;
+                if spec.is_switch {
+                    if inline.is_some() {
+                        return Err(CliError::error(format!(
+                            "switch '--{name}' does not take a value"
+                        )));
+                    }
+                    switches.push(name.to_string());
+                } else {
+                    let value = match inline {
+                        Some(v) => v,
+                        None => {
+                            i += 1;
+                            argv.get(i)
+                                .cloned()
+                                .ok_or_else(|| {
+                                    CliError::error(format!("option '--{name}' needs a value"))
+                                })?
+                        }
+                    };
+                    values.insert(name.to_string(), value);
+                }
+            } else {
+                positional.push(tok.clone());
+            }
+            i += 1;
+        }
+        Ok(Args {
+            command: cmd.name.to_string(),
+            values,
+            switches,
+            positional,
+        })
+    }
+}
+
+/// Parse failure or help request.
+#[derive(Debug)]
+pub struct CliError {
+    pub message: String,
+    pub is_help: bool,
+}
+
+impl CliError {
+    fn help(message: String) -> Self {
+        CliError { message, is_help: true }
+    }
+    fn error(message: String) -> Self {
+        CliError { message, is_help: false }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cli() -> Cli {
+        Cli::new("cq-ggadmm", "test cli").command(
+            Command::new("exp", "run experiment")
+                .opt("figure", Some("fig2"), "figure id")
+                .opt("iters", Some("100"), "iterations")
+                .switch("quiet", "no output"),
+        )
+    }
+
+    fn sv(items: &[&str]) -> Vec<String> {
+        items.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn defaults_and_overrides() {
+        let a = cli().parse(&sv(&["exp", "--iters", "50"])).unwrap();
+        assert_eq!(a.get("figure"), Some("fig2"));
+        assert_eq!(a.get_usize("iters").unwrap(), Some(50));
+        assert!(!a.has("quiet"));
+    }
+
+    #[test]
+    fn equals_form_and_switch() {
+        let a = cli().parse(&sv(&["exp", "--figure=fig6", "--quiet"])).unwrap();
+        assert_eq!(a.get("figure"), Some("fig6"));
+        assert!(a.has("quiet"));
+    }
+
+    #[test]
+    fn unknown_command_errors() {
+        let e = cli().parse(&sv(&["nope"])).unwrap_err();
+        assert!(!e.is_help);
+        assert!(e.message.contains("unknown command"));
+    }
+
+    #[test]
+    fn unknown_option_errors() {
+        let e = cli().parse(&sv(&["exp", "--bogus", "1"])).unwrap_err();
+        assert!(e.message.contains("unknown option"));
+    }
+
+    #[test]
+    fn help_flag_is_help() {
+        let e = cli().parse(&sv(&["--help"])).unwrap_err();
+        assert!(e.is_help);
+        let e = cli().parse(&sv(&["exp", "--help"])).unwrap_err();
+        assert!(e.is_help);
+        assert!(e.message.contains("--figure"));
+    }
+
+    #[test]
+    fn missing_value_errors() {
+        let e = cli().parse(&sv(&["exp", "--iters"])).unwrap_err();
+        assert!(e.message.contains("needs a value"));
+    }
+
+    #[test]
+    fn bad_number_reported() {
+        let a = cli().parse(&sv(&["exp", "--iters", "abc"])).unwrap();
+        assert!(a.get_usize("iters").is_err());
+    }
+
+    #[test]
+    fn positional_args_collected() {
+        let a = cli().parse(&sv(&["exp", "out.csv"])).unwrap();
+        assert_eq!(a.positional, vec!["out.csv".to_string()]);
+    }
+}

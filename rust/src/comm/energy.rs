@@ -1,0 +1,142 @@
+//! Wireless transmit-energy model (paper §7 "Communication Energy").
+//!
+//! * Total system bandwidth 2 MHz, equally divided across the workers that
+//!   transmit in a slot: GGADMM-family schedules transmit only half the
+//!   workers per slot, so each gets `4/N` MHz; Jacobian C-ADMM transmits
+//!   all workers, so each gets `2/N` MHz.
+//! * Power spectral density `N0 = 1e-6` W/Hz, upload slot `tau = 1 ms`.
+//! * A worker must deliver its payload within one slot over its worst
+//!   (bottleneck) link of distance `D`, i.e. at rate `R = bits / tau`.
+//!   Free-space Shannon capacity then prices the transmit power as
+//!   `P = tau * D^2 * N0 * B * (2^{R/B} - 1)` and the energy as `E = P tau`
+//!   (the paper's exact formula).
+//!
+//! The distances come from the topology's worker placement (uniform in a
+//! 500 m square by default; the paper does not specify its deployment —
+//! see DESIGN.md §Substitutions).
+
+/// Scenario parameters.
+#[derive(Clone, Copy, Debug)]
+pub struct EnergyParams {
+    /// Total system bandwidth in Hz (paper: 2 MHz).
+    pub total_bandwidth_hz: f64,
+    /// Noise power spectral density in W/Hz (paper: 1e-6).
+    pub n0_w_per_hz: f64,
+    /// Upload slot duration in seconds (paper: 1 ms).
+    pub slot_s: f64,
+}
+
+impl Default for EnergyParams {
+    fn default() -> Self {
+        EnergyParams {
+            total_bandwidth_hz: 2e6,
+            n0_w_per_hz: 1e-6,
+            slot_s: 1e-3,
+        }
+    }
+}
+
+/// Energy model bound to a worker count + schedule concurrency.
+#[derive(Clone, Copy, Debug)]
+pub struct EnergyModel {
+    params: EnergyParams,
+    /// Per-worker bandwidth share in Hz for this schedule.
+    pub bandwidth_hz: f64,
+}
+
+impl EnergyModel {
+    /// `concurrent_fraction` is the fraction of workers transmitting in a
+    /// slot: 0.5 for alternating GGADMM schedules (=> 4/N MHz each),
+    /// 1.0 for Jacobian C-ADMM (=> 2/N MHz each).
+    pub fn new(params: EnergyParams, n_workers: usize, concurrent_fraction: f64) -> EnergyModel {
+        assert!(n_workers >= 1);
+        assert!(concurrent_fraction > 0.0 && concurrent_fraction <= 1.0);
+        let transmitters = (n_workers as f64 * concurrent_fraction).max(1.0);
+        EnergyModel {
+            params,
+            bandwidth_hz: params.total_bandwidth_hz / transmitters,
+        }
+    }
+
+    /// Required data rate to push `bits` through one slot.
+    pub fn rate_bps(&self, bits: u64) -> f64 {
+        bits as f64 / self.params.slot_s
+    }
+
+    /// Transmit power for `bits` over a bottleneck link of `distance_m`.
+    pub fn power_w(&self, bits: u64, distance_m: f64) -> f64 {
+        let b = self.bandwidth_hz;
+        let r = self.rate_bps(bits);
+        self.params.slot_s
+            * distance_m
+            * distance_m
+            * self.params.n0_w_per_hz
+            * b
+            * ((2f64).powf(r / b) - 1.0)
+    }
+
+    /// Energy of one transmission: `E = P * tau`.
+    pub fn energy_j(&self, bits: u64, distance_m: f64) -> f64 {
+        self.power_w(bits, distance_m) * self.params.slot_s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::prop::check;
+
+    #[test]
+    fn bandwidth_shares_match_paper() {
+        let p = EnergyParams::default();
+        // GGADMM with N=24: 4/N MHz each
+        let g = EnergyModel::new(p, 24, 0.5);
+        assert!((g.bandwidth_hz - 4e6 / 24.0).abs() < 1e-6);
+        // C-ADMM: 2/N MHz each
+        let c = EnergyModel::new(p, 24, 1.0);
+        assert!((c.bandwidth_hz - 2e6 / 24.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn energy_monotone_in_bits_and_distance() {
+        check("energy monotonicity", 60, |g| {
+            let n = g.usize_in(2, 32);
+            let m = EnergyModel::new(EnergyParams::default(), n, 0.5);
+            let bits = g.usize_in(10, 100_000) as u64;
+            let dist = g.f64_in(1.0, 700.0);
+            let e = m.energy_j(bits, dist);
+            assert!(e > 0.0 && e.is_finite());
+            assert!(m.energy_j(bits + 1000, dist) > e);
+            assert!(m.energy_j(bits, dist + 50.0) > e);
+        });
+    }
+
+    #[test]
+    fn quantization_saves_orders_of_magnitude() {
+        // the paper's headline: exponential rate-power tradeoff makes
+        // 2-bit payloads orders of magnitude cheaper than 32-bit
+        let m = EnergyModel::new(EnergyParams::default(), 24, 0.5);
+        let d = 50;
+        let full = m.energy_j(32 * d, 300.0);
+        let quant = m.energy_j(2 * d + 64, 300.0);
+        assert!(
+            full / quant > 100.0,
+            "expected >= 2 orders of magnitude, got {:.1}x",
+            full / quant
+        );
+    }
+
+    #[test]
+    fn shannon_formula_hand_check() {
+        let m = EnergyModel::new(
+            EnergyParams { total_bandwidth_hz: 1e6, n0_w_per_hz: 1e-6, slot_s: 1e-3 },
+            2,
+            0.5,
+        );
+        // B = 1 MHz, bits = 1000 -> R = 1e6 bps -> R/B = 1 -> 2^1 - 1 = 1
+        // P = tau D^2 N0 B * 1 = 1e-3 * 1e4 * 1e-6 * 1e6 = 10
+        let p = m.power_w(1000, 100.0);
+        assert!((p - 10.0).abs() < 1e-9, "p={p}");
+        assert!((m.energy_j(1000, 100.0) - 0.01).abs() < 1e-12);
+    }
+}

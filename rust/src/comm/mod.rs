@@ -1,0 +1,90 @@
+//! Communication accounting: transmissions, payloads and the wireless
+//! energy model of paper §7.
+//!
+//! Each *transmission* is one worker broadcasting its (possibly quantized)
+//! model to all neighbors in one upload slot.  The paper's metrics:
+//! * **communication rounds** — cumulative number of transmissions,
+//! * **transmitted bits** — cumulative payload bits (32d full precision,
+//!   `b d + 64` quantized),
+//! * **energy** — Shannon-capacity transmit power over the worst
+//!   (bottleneck) link, `P = tau * D^2 * N0 * B (2^{R/B} - 1)`, `E = P tau`.
+
+pub mod energy;
+
+pub use energy::{EnergyModel, EnergyParams};
+
+/// What one worker put on the air in one slot.
+#[derive(Clone, Copy, Debug)]
+pub struct Transmission {
+    pub worker: usize,
+    pub iteration: u64,
+    pub payload_bits: u64,
+    /// Bottleneck (max) distance to the intended receivers, meters.
+    pub distance_m: f64,
+    pub energy_j: f64,
+}
+
+/// Running totals + log of every transmission of a run.
+#[derive(Clone, Debug, Default)]
+pub struct CommLog {
+    pub transmissions: Vec<Transmission>,
+    pub total_bits: u64,
+    pub total_energy_j: f64,
+}
+
+impl CommLog {
+    pub fn record(&mut self, t: Transmission) {
+        self.total_bits += t.payload_bits;
+        self.total_energy_j += t.energy_j;
+        self.transmissions.push(t);
+    }
+
+    /// Cumulative communication rounds (= number of transmissions).
+    pub fn rounds(&self) -> u64 {
+        self.transmissions.len() as u64
+    }
+
+    /// Transmissions belonging to iteration `k`.
+    pub fn at_iteration(&self, k: u64) -> impl Iterator<Item = &Transmission> {
+        self.transmissions.iter().filter(move |t| t.iteration == k)
+    }
+}
+
+/// Full-precision payload size (the paper's 32d bits).
+pub fn full_precision_bits(d: usize) -> u64 {
+    32 * d as u64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn log_accumulates() {
+        let mut log = CommLog::default();
+        log.record(Transmission {
+            worker: 0,
+            iteration: 0,
+            payload_bits: 1600,
+            distance_m: 100.0,
+            energy_j: 1e-3,
+        });
+        log.record(Transmission {
+            worker: 1,
+            iteration: 0,
+            payload_bits: 164,
+            distance_m: 50.0,
+            energy_j: 1e-5,
+        });
+        assert_eq!(log.rounds(), 2);
+        assert_eq!(log.total_bits, 1764);
+        assert!((log.total_energy_j - 1.01e-3).abs() < 1e-12);
+        assert_eq!(log.at_iteration(0).count(), 2);
+        assert_eq!(log.at_iteration(1).count(), 0);
+    }
+
+    #[test]
+    fn full_precision_is_32d() {
+        assert_eq!(full_precision_bits(50), 1600);
+    }
+}

@@ -1,0 +1,475 @@
+//! Experiment configuration: a TOML-subset parser plus typed configs.
+//!
+//! The sandbox has no `serde`/`toml`, so `parse_toml` implements the subset
+//! the experiment files need: `[section]` headers, `key = value` with
+//! string / float / integer / bool / flat-array values, and `#` comments.
+//! Typed accessors with good error messages sit on top, and
+//! [`ExperimentConfig`] is the validated struct the CLI and the experiment
+//! harness consume.
+
+use std::collections::BTreeMap;
+
+/// A scalar or flat-array TOML value.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Value {
+    Str(String),
+    Num(f64),
+    Bool(bool),
+    Arr(Vec<Value>),
+}
+
+impl Value {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Value::Num(n) => Some(*n),
+            _ => None,
+        }
+    }
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+}
+
+/// Parsed document: section -> key -> value.  Keys before any section
+/// header live in section `""`.
+#[derive(Clone, Debug, Default)]
+pub struct Doc {
+    pub sections: BTreeMap<String, BTreeMap<String, Value>>,
+}
+
+impl Doc {
+    pub fn get(&self, section: &str, key: &str) -> Option<&Value> {
+        self.sections.get(section).and_then(|s| s.get(key))
+    }
+
+    pub fn get_f64(&self, section: &str, key: &str) -> Result<Option<f64>, String> {
+        match self.get(section, key) {
+            None => Ok(None),
+            Some(v) => v
+                .as_f64()
+                .map(Some)
+                .ok_or_else(|| format!("[{section}] {key}: expected number, got {v:?}")),
+        }
+    }
+
+    pub fn get_usize(&self, section: &str, key: &str) -> Result<Option<usize>, String> {
+        match self.get_f64(section, key)? {
+            None => Ok(None),
+            Some(f) if f.fract() == 0.0 && f >= 0.0 => Ok(Some(f as usize)),
+            Some(f) => Err(format!("[{section}] {key}: expected non-negative integer, got {f}")),
+        }
+    }
+
+    pub fn get_str(&self, section: &str, key: &str) -> Result<Option<String>, String> {
+        match self.get(section, key) {
+            None => Ok(None),
+            Some(v) => v
+                .as_str()
+                .map(|s| Some(s.to_string()))
+                .ok_or_else(|| format!("[{section}] {key}: expected string, got {v:?}")),
+        }
+    }
+
+    pub fn get_bool(&self, section: &str, key: &str) -> Result<Option<bool>, String> {
+        match self.get(section, key) {
+            None => Ok(None),
+            Some(v) => v
+                .as_bool()
+                .map(Some)
+                .ok_or_else(|| format!("[{section}] {key}: expected bool, got {v:?}")),
+        }
+    }
+}
+
+/// Parse a TOML-subset document.
+pub fn parse_toml(text: &str) -> Result<Doc, String> {
+    let mut doc = Doc::default();
+    let mut section = String::new();
+    doc.sections.entry(section.clone()).or_default();
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = strip_comment(raw).trim().to_string();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(body) = line.strip_prefix('[') {
+            let name = body
+                .strip_suffix(']')
+                .ok_or_else(|| format!("line {}: unterminated section header", lineno + 1))?;
+            section = name.trim().to_string();
+            doc.sections.entry(section.clone()).or_default();
+            continue;
+        }
+        let (key, val) = line
+            .split_once('=')
+            .ok_or_else(|| format!("line {}: expected 'key = value'", lineno + 1))?;
+        let key = key.trim();
+        if key.is_empty() {
+            return Err(format!("line {}: empty key", lineno + 1));
+        }
+        let value = parse_value(val.trim())
+            .map_err(|e| format!("line {}: {}", lineno + 1, e))?;
+        doc.sections
+            .get_mut(&section)
+            .unwrap()
+            .insert(key.to_string(), value);
+    }
+    Ok(doc)
+}
+
+fn strip_comment(line: &str) -> &str {
+    // '#' starts a comment unless inside a string
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> Result<Value, String> {
+    if s.is_empty() {
+        return Err("empty value".into());
+    }
+    if let Some(body) = s.strip_prefix('[') {
+        let body = body
+            .strip_suffix(']')
+            .ok_or_else(|| "unterminated array".to_string())?;
+        let mut items = Vec::new();
+        let trimmed = body.trim();
+        if !trimmed.is_empty() {
+            for item in split_top_level(trimmed) {
+                items.push(parse_value(item.trim())?);
+            }
+        }
+        return Ok(Value::Arr(items));
+    }
+    if let Some(body) = s.strip_prefix('"') {
+        let body = body
+            .strip_suffix('"')
+            .ok_or_else(|| "unterminated string".to_string())?;
+        return Ok(Value::Str(body.to_string()));
+    }
+    match s {
+        "true" => return Ok(Value::Bool(true)),
+        "false" => return Ok(Value::Bool(false)),
+        _ => {}
+    }
+    s.parse::<f64>()
+        .map(Value::Num)
+        .map_err(|_| format!("cannot parse value '{s}'"))
+}
+
+fn split_top_level(s: &str) -> Vec<&str> {
+    // arrays here are flat (no nesting), so a simple comma split outside
+    // strings suffices
+    let mut out = Vec::new();
+    let mut start = 0;
+    let mut in_str = false;
+    for (i, c) in s.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            ',' if !in_str => {
+                out.push(&s[start..i]);
+                start = i + 1;
+            }
+            _ => {}
+        }
+    }
+    out.push(&s[start..]);
+    out
+}
+
+// ---------------------------------------------------------------------------
+// Typed experiment configuration
+// ---------------------------------------------------------------------------
+
+/// Which regression task a run optimizes (paper §7.1/§7.2).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Task {
+    Linear,
+    Logistic,
+}
+
+impl Task {
+    pub fn parse(s: &str) -> Result<Task, String> {
+        match s {
+            "linear" => Ok(Task::Linear),
+            "logistic" => Ok(Task::Logistic),
+            _ => Err(format!("unknown task '{s}' (expected linear|logistic)")),
+        }
+    }
+}
+
+/// Named dataset of Table 1.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DatasetId {
+    SynthLinear,
+    BodyFat,
+    SynthLogistic,
+    Derm,
+}
+
+impl DatasetId {
+    pub fn parse(s: &str) -> Result<DatasetId, String> {
+        match s {
+            "synth-linear" => Ok(DatasetId::SynthLinear),
+            "bodyfat" => Ok(DatasetId::BodyFat),
+            "synth-logistic" => Ok(DatasetId::SynthLogistic),
+            "derm" => Ok(DatasetId::Derm),
+            _ => Err(format!(
+                "unknown dataset '{s}' (expected synth-linear|bodyfat|synth-logistic|derm)"
+            )),
+        }
+    }
+
+    pub fn task(&self) -> Task {
+        match self {
+            DatasetId::SynthLinear | DatasetId::BodyFat => Task::Linear,
+            DatasetId::SynthLogistic | DatasetId::Derm => Task::Logistic,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            DatasetId::SynthLinear => "synth-linear",
+            DatasetId::BodyFat => "bodyfat",
+            DatasetId::SynthLogistic => "synth-logistic",
+            DatasetId::Derm => "derm",
+        }
+    }
+}
+
+/// Fully validated experiment configuration.
+#[derive(Clone, Debug)]
+pub struct ExperimentConfig {
+    pub dataset: DatasetId,
+    pub workers: usize,
+    pub connectivity: f64,
+    pub rho: f64,
+    pub mu0: f64,
+    pub iters: usize,
+    pub seed: u64,
+    /// censoring threshold tau0 (0 disables censoring)
+    pub tau0: f64,
+    /// censoring decay xi in (0,1)
+    pub xi: f64,
+    /// quantization step-size decay omega in (0,1)
+    pub omega: f64,
+    /// initial quantization bits
+    pub bits0: u32,
+    pub threads: usize,
+}
+
+impl Default for ExperimentConfig {
+    fn default() -> Self {
+        ExperimentConfig {
+            dataset: DatasetId::SynthLinear,
+            workers: 24,
+            connectivity: 0.3,
+            rho: 1.0,
+            mu0: 1e-2,
+            iters: 300,
+            seed: 1,
+            tau0: 0.5,
+            xi: 0.8,
+            omega: 0.99,
+            bits0: 2,
+            threads: 1,
+        }
+    }
+}
+
+impl ExperimentConfig {
+    /// Load from a TOML-subset file body (section `[experiment]` or root).
+    pub fn from_toml(text: &str) -> Result<ExperimentConfig, String> {
+        let doc = parse_toml(text)?;
+        let sec = if doc.sections.contains_key("experiment") {
+            "experiment"
+        } else {
+            ""
+        };
+        let mut cfg = ExperimentConfig::default();
+        if let Some(s) = doc.get_str(sec, "dataset")? {
+            cfg.dataset = DatasetId::parse(&s)?;
+        }
+        if let Some(v) = doc.get_usize(sec, "workers")? {
+            cfg.workers = v;
+        }
+        if let Some(v) = doc.get_f64(sec, "connectivity")? {
+            cfg.connectivity = v;
+        }
+        if let Some(v) = doc.get_f64(sec, "rho")? {
+            cfg.rho = v;
+        }
+        if let Some(v) = doc.get_f64(sec, "mu0")? {
+            cfg.mu0 = v;
+        }
+        if let Some(v) = doc.get_usize(sec, "iters")? {
+            cfg.iters = v;
+        }
+        if let Some(v) = doc.get_f64(sec, "seed")? {
+            cfg.seed = v as u64;
+        }
+        if let Some(v) = doc.get_f64(sec, "tau0")? {
+            cfg.tau0 = v;
+        }
+        if let Some(v) = doc.get_f64(sec, "xi")? {
+            cfg.xi = v;
+        }
+        if let Some(v) = doc.get_f64(sec, "omega")? {
+            cfg.omega = v;
+        }
+        if let Some(v) = doc.get_usize(sec, "bits0")? {
+            cfg.bits0 = v as u32;
+        }
+        if let Some(v) = doc.get_usize(sec, "threads")? {
+            cfg.threads = v;
+        }
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    /// Sanity-check parameter ranges (the convergence theory needs
+    /// xi, omega in (0,1), rho > 0, ...).
+    pub fn validate(&self) -> Result<(), String> {
+        if self.workers < 2 {
+            return Err("workers must be >= 2".into());
+        }
+        if !(0.0 < self.connectivity && self.connectivity <= 1.0) {
+            return Err("connectivity must be in (0, 1]".into());
+        }
+        if self.rho <= 0.0 {
+            return Err("rho must be > 0".into());
+        }
+        if self.tau0 < 0.0 {
+            return Err("tau0 must be >= 0".into());
+        }
+        if !(0.0 < self.xi && self.xi < 1.0) {
+            return Err("xi must be in (0, 1)".into());
+        }
+        if !(0.0 < self.omega && self.omega < 1.0) {
+            return Err("omega must be in (0, 1)".into());
+        }
+        if self.bits0 < 1 || self.bits0 > 30 {
+            return Err("bits0 must be in [1, 30]".into());
+        }
+        if self.iters == 0 {
+            return Err("iters must be > 0".into());
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_scalars_and_sections() {
+        let doc = parse_toml(
+            r#"
+            # comment
+            top = 1
+            [experiment]
+            dataset = "bodyfat"   # trailing comment
+            workers = 18
+            rho = 0.5
+            censor = true
+            arr = [1, 2.5, "x"]
+            "#,
+        )
+        .unwrap();
+        assert_eq!(doc.get_f64("", "top").unwrap(), Some(1.0));
+        assert_eq!(
+            doc.get_str("experiment", "dataset").unwrap(),
+            Some("bodyfat".into())
+        );
+        assert_eq!(doc.get_usize("experiment", "workers").unwrap(), Some(18));
+        assert_eq!(doc.get_bool("experiment", "censor").unwrap(), Some(true));
+        match doc.get("experiment", "arr").unwrap() {
+            Value::Arr(items) => {
+                assert_eq!(items.len(), 3);
+                assert_eq!(items[1], Value::Num(2.5));
+                assert_eq!(items[2], Value::Str("x".into()));
+            }
+            v => panic!("expected array, got {v:?}"),
+        }
+    }
+
+    #[test]
+    fn errors_have_line_numbers() {
+        let e = parse_toml("a = 1\nbroken line\n").unwrap_err();
+        assert!(e.contains("line 2"), "{e}");
+        let e = parse_toml("[oops\n").unwrap_err();
+        assert!(e.contains("line 1"), "{e}");
+        let e = parse_toml("k = [1, 2\n").unwrap_err();
+        assert!(e.contains("unterminated array"), "{e}");
+    }
+
+    #[test]
+    fn hash_inside_string_not_comment() {
+        let doc = parse_toml(r##"k = "a#b""##).unwrap();
+        assert_eq!(doc.get_str("", "k").unwrap(), Some("a#b".into()));
+    }
+
+    #[test]
+    fn experiment_config_roundtrip() {
+        let cfg = ExperimentConfig::from_toml(
+            r#"
+            [experiment]
+            dataset = "derm"
+            workers = 18
+            connectivity = 0.4
+            rho = 0.8
+            iters = 500
+            tau0 = 0.25
+            xi = 0.9
+            omega = 0.95
+            bits0 = 3
+            "#,
+        )
+        .unwrap();
+        assert_eq!(cfg.dataset, DatasetId::Derm);
+        assert_eq!(cfg.dataset.task(), Task::Logistic);
+        assert_eq!(cfg.workers, 18);
+        assert_eq!(cfg.bits0, 3);
+    }
+
+    #[test]
+    fn validation_rejects_bad_ranges() {
+        let mut cfg = ExperimentConfig::default();
+        cfg.xi = 1.5;
+        assert!(cfg.validate().is_err());
+        cfg = ExperimentConfig::default();
+        cfg.workers = 1;
+        assert!(cfg.validate().is_err());
+        cfg = ExperimentConfig::default();
+        cfg.rho = 0.0;
+        assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn dataset_id_parse_all() {
+        for (s, id) in [
+            ("synth-linear", DatasetId::SynthLinear),
+            ("bodyfat", DatasetId::BodyFat),
+            ("synth-logistic", DatasetId::SynthLogistic),
+            ("derm", DatasetId::Derm),
+        ] {
+            assert_eq!(DatasetId::parse(s).unwrap(), id);
+        }
+        assert!(DatasetId::parse("nope").is_err());
+    }
+}

@@ -1,0 +1,126 @@
+//! Wire messages of the threaded coordinator.
+//!
+//! Worker-to-worker model exchanges travel as *encoded bytes* (bit-packed
+//! quantized payloads or raw f32 full-precision payloads) through the
+//! leader, which plays the wireless medium: it forwards broadcasts to the
+//! sender's neighbors and charges the energy model.  The byte sizes on
+//! this path are exactly the payloads the paper counts.
+
+use crate::quant::codec;
+use crate::quant::QuantMessage;
+
+/// Payload of one broadcast.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Payload {
+    /// 32-bit full precision (f32 little-endian), the unquantized schemes.
+    Full(Vec<u8>),
+    /// Bit-packed quantized message.
+    Quantized(Vec<u8>),
+}
+
+impl Payload {
+    /// Payload size in bits, as the paper counts it.
+    pub fn bits(&self, d: usize) -> u64 {
+        match self {
+            Payload::Full(_) => 32 * d as u64,
+            Payload::Quantized(bytes) => {
+                // recover exact bit count from the header (b*d + 64)
+                codec::decode(bytes, d)
+                    .map(|m| m.payload_bits())
+                    .unwrap_or((bytes.len() * 8) as u64)
+            }
+        }
+    }
+}
+
+/// Encode a full-precision model.
+pub fn encode_full(theta: &[f64]) -> Payload {
+    let mut bytes = Vec::with_capacity(theta.len() * 4);
+    for &v in theta {
+        bytes.extend_from_slice(&(v as f32).to_le_bytes());
+    }
+    Payload::Full(bytes)
+}
+
+/// Decode a full-precision model.
+pub fn decode_full(bytes: &[u8], d: usize) -> Option<Vec<f64>> {
+    if bytes.len() != d * 4 {
+        return None;
+    }
+    Some(
+        bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]) as f64)
+            .collect(),
+    )
+}
+
+/// Encode a quantized message.
+pub fn encode_quantized(msg: &QuantMessage) -> Payload {
+    Payload::Quantized(codec::encode(msg))
+}
+
+/// Decode a quantized message.
+pub fn decode_quantized(bytes: &[u8], d: usize) -> Option<QuantMessage> {
+    codec::decode(bytes, d)
+}
+
+/// Leader -> worker commands.
+#[derive(Debug)]
+pub enum Command {
+    /// Run the primal update + transmission decision for iteration `k`.
+    Phase { k: u64 },
+    /// Deliver a neighbor's broadcast.
+    Deliver { from: usize, payload: Payload },
+    /// Run the dual update for iteration `k` (both phases delivered).
+    DualUpdate,
+    /// Report local loss `f_n(theta_n)` and diagnostics.
+    Report,
+    /// Shut down.
+    Stop,
+}
+
+/// Worker -> leader events.
+#[derive(Debug)]
+pub enum Event {
+    /// The worker decided to broadcast.
+    Broadcast { from: usize, payload: Payload },
+    /// The worker finished its phase (after an optional broadcast).
+    PhaseDone { worker: usize },
+    /// Dual update finished.
+    DualDone { worker: usize },
+    /// Loss report.
+    Loss { worker: usize, loss: f64, theta: Vec<f64> },
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn full_roundtrip() {
+        let theta = vec![1.5, -2.25, 0.0];
+        let p = encode_full(&theta);
+        assert_eq!(p.bits(3), 96);
+        match &p {
+            Payload::Full(bytes) => {
+                assert_eq!(decode_full(bytes, 3).unwrap(), theta);
+                assert!(decode_full(bytes, 4).is_none());
+            }
+            _ => unreachable!(),
+        }
+    }
+
+    #[test]
+    fn quantized_roundtrip_and_bits() {
+        let msg = QuantMessage { codes: vec![1, 2, 3, 4], radius: 0.5, bits: 3 };
+        let p = encode_quantized(&msg);
+        assert_eq!(p.bits(4), 3 * 4 + 64);
+        match &p {
+            Payload::Quantized(bytes) => {
+                assert_eq!(decode_quantized(bytes, 4).unwrap(), msg);
+            }
+            _ => unreachable!(),
+        }
+    }
+}

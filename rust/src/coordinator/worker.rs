@@ -1,0 +1,115 @@
+//! Worker actor: one OS thread per worker, owning its shard, solver and
+//! per-link state, driven by leader [`Command`]s.
+
+use super::message::{
+    decode_full, decode_quantized, encode_full, encode_quantized, Command, Event, Payload,
+};
+use crate::censor::{gate, CensorConfig, Gate};
+use crate::quant::Quantizer;
+use crate::solver::SubproblemSolver;
+use std::collections::BTreeMap;
+use std::sync::mpsc::{Receiver, Sender};
+
+/// Everything a worker thread needs at spawn time.
+pub struct WorkerSetup {
+    pub id: usize,
+    pub d: usize,
+    pub rho: f64,
+    pub neighbors: Vec<usize>,
+    pub solver: Box<dyn SubproblemSolver>,
+    pub censor: Option<CensorConfig>,
+    pub quantizer: Option<Quantizer>,
+    /// Jacobian (DCADMM) schedules anchor the update on the worker's own
+    /// last broadcast: `nbr_sum += d_i * hat_self` (the solver then carries
+    /// the doubled penalty; see `algs::run::build_solvers`).
+    pub jacobian_anchor: bool,
+}
+
+/// The worker event loop.  Runs until [`Command::Stop`] or the leader
+/// channel closes.
+pub fn worker_main(setup: WorkerSetup, rx: Receiver<Command>, tx: Sender<Event>) {
+    let WorkerSetup {
+        id,
+        d,
+        rho,
+        neighbors,
+        mut solver,
+        censor,
+        mut quantizer,
+        jacobian_anchor,
+    } = setup;
+    let mut theta = vec![0.0; d];
+    let mut alpha = vec![0.0; d];
+    // what my neighbors believe about me (theta-hat_n)
+    let mut hat_self = vec![0.0; d];
+    // what I believe about my neighbors (init 0, Algorithm 2 line 2)
+    let mut hat_nbrs: BTreeMap<usize, Vec<f64>> =
+        neighbors.iter().map(|&m| (m, vec![0.0; d])).collect();
+    let mut transmitted_once = false;
+
+    while let Ok(cmd) = rx.recv() {
+        match cmd {
+            Command::Phase { k } => {
+                // primal update (eq. 21/22)
+                let mut nbr_sum = vec![0.0; d];
+                for v in hat_nbrs.values() {
+                    crate::util::axpy(&mut nbr_sum, 1.0, v);
+                }
+                if jacobian_anchor {
+                    crate::util::axpy(&mut nbr_sum, neighbors.len() as f64, &hat_self);
+                }
+                theta = solver.update(&alpha, &nbr_sum, &theta);
+
+                // transmission pipeline: quantize -> censor -> broadcast
+                let (candidate_hat, payload) = match &mut quantizer {
+                    Some(q) => {
+                        let (msg, recon) = q.quantize(&theta, &hat_self);
+                        (recon, encode_quantized(&msg))
+                    }
+                    None => (theta.clone(), encode_full(&theta)),
+                };
+                let decision = match (&censor, transmitted_once) {
+                    (_, false) => Gate::Transmit,
+                    (None, _) => Gate::Transmit,
+                    (Some(c), true) => gate(c, k, &hat_self, &candidate_hat),
+                };
+                if decision == Gate::Transmit {
+                    hat_self = candidate_hat;
+                    transmitted_once = true;
+                    let _ = tx.send(Event::Broadcast { from: id, payload });
+                }
+                let _ = tx.send(Event::PhaseDone { worker: id });
+            }
+            Command::Deliver { from, payload } => {
+                let stored = hat_nbrs
+                    .get_mut(&from)
+                    .unwrap_or_else(|| panic!("worker {id}: message from non-neighbor {from}"));
+                match payload {
+                    Payload::Full(bytes) => {
+                        *stored = decode_full(&bytes, d).expect("bad full payload");
+                    }
+                    Payload::Quantized(bytes) => {
+                        let msg = decode_quantized(&bytes, d).expect("bad quantized payload");
+                        // reconstruct against the last value I hold for the
+                        // sender — exactly the sender's own reference
+                        *stored = msg.reconstruct(stored);
+                    }
+                }
+            }
+            Command::DualUpdate => {
+                // eq. (23): alpha += rho * sum_m (hat_self - hat_m)
+                for v in hat_nbrs.values() {
+                    for j in 0..d {
+                        alpha[j] += rho * (hat_self[j] - v[j]);
+                    }
+                }
+                let _ = tx.send(Event::DualDone { worker: id });
+            }
+            Command::Report => {
+                let loss = solver.loss(&theta);
+                let _ = tx.send(Event::Loss { worker: id, loss, theta: theta.clone() });
+            }
+            Command::Stop => break,
+        }
+    }
+}

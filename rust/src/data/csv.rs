@@ -1,0 +1,162 @@
+//! CSV dataset loader: run the framework on user-supplied data files.
+//!
+//! Format: numeric CSV with an optional header row; the **last column** is
+//! the target.  For logistic tasks the targets must be ±1 (or 0/1, which
+//! are remapped).  Pairs with `crate::io::CsvWriter` for round-trips.
+
+use super::Dataset;
+use crate::config::Task;
+use crate::linalg::Mat;
+use std::path::Path;
+
+/// Parse one CSV line honoring quotes.
+fn split_csv_line(line: &str) -> Vec<String> {
+    let mut out = Vec::new();
+    let mut field = String::new();
+    let mut in_quotes = false;
+    let mut chars = line.chars().peekable();
+    while let Some(c) = chars.next() {
+        match c {
+            '"' if in_quotes && chars.peek() == Some(&'"') => {
+                field.push('"');
+                chars.next();
+            }
+            '"' => in_quotes = !in_quotes,
+            ',' if !in_quotes => {
+                out.push(std::mem::take(&mut field));
+            }
+            c => field.push(c),
+        }
+    }
+    out.push(field);
+    out
+}
+
+/// Parse CSV text into a dataset.
+pub fn parse_csv(text: &str, name: &str, task: Task) -> Result<Dataset, String> {
+    let mut rows: Vec<Vec<f64>> = Vec::new();
+    let mut width = None;
+    for (lineno, line) in text.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        let fields = split_csv_line(line);
+        let parsed: Result<Vec<f64>, _> =
+            fields.iter().map(|f| f.trim().parse::<f64>()).collect();
+        let values = match parsed {
+            Ok(v) => v,
+            Err(_) if lineno == 0 => continue, // header row
+            Err(_) => {
+                return Err(format!("line {}: non-numeric field", lineno + 1));
+            }
+        };
+        if let Some(w) = width {
+            if values.len() != w {
+                return Err(format!(
+                    "line {}: {} fields, expected {}",
+                    lineno + 1,
+                    values.len(),
+                    w
+                ));
+            }
+        } else {
+            if values.len() < 2 {
+                return Err("need at least one feature column + target".into());
+            }
+            width = Some(values.len());
+        }
+        rows.push(values);
+    }
+    let w = width.ok_or("empty csv")?;
+    let d = w - 1;
+    let n = rows.len();
+    let mut x = Mat::zeros(n, d);
+    let mut y = Vec::with_capacity(n);
+    for (i, row) in rows.iter().enumerate() {
+        x.row_mut(i).copy_from_slice(&row[..d]);
+        let mut label = row[d];
+        if task == Task::Logistic && label == 0.0 {
+            label = -1.0; // accept 0/1 labels
+        }
+        y.push(label);
+    }
+    let ds = Dataset { name: name.to_string(), task, x, y };
+    ds.validate()?;
+    Ok(ds)
+}
+
+/// Load a dataset from a CSV file.
+pub fn load_csv(path: &Path, task: Task) -> Result<Dataset, String> {
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| format!("cannot read {}: {e}", path.display()))?;
+    parse_csv(&text, &path.display().to_string(), task)
+}
+
+/// Dump a dataset to CSV (features then target; round-trips with
+/// [`parse_csv`]).
+pub fn to_csv(ds: &Dataset) -> String {
+    let mut out = String::new();
+    let header: Vec<String> = (0..ds.d())
+        .map(|j| format!("x{j}"))
+        .chain(std::iter::once("y".to_string()))
+        .collect();
+    out.push_str(&header.join(","));
+    out.push('\n');
+    for i in 0..ds.n() {
+        let mut fields: Vec<String> =
+            ds.x.row(i).iter().map(|v| format!("{v}")).collect();
+        fields.push(format!("{}", ds.y[i]));
+        out.push_str(&fields.join(","));
+        out.push('\n');
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic;
+
+    #[test]
+    fn roundtrip_linear_dataset() {
+        let ds = synthetic::linear_dataset(40, 3, 1);
+        let text = to_csv(&ds);
+        let back = parse_csv(&text, "rt", Task::Linear).unwrap();
+        assert_eq!(back.n(), 40);
+        assert_eq!(back.d(), 3);
+        for i in 0..40 {
+            assert!((back.y[i] - ds.y[i]).abs() < 1e-12);
+            for j in 0..3 {
+                assert!((back.x[(i, j)] - ds.x[(i, j)]).abs() < 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn header_row_skipped_and_zero_one_labels_mapped() {
+        let text = "a,b,label\n1.0,2.0,0\n3.0,4.0,1\n";
+        let ds = parse_csv(text, "t", Task::Logistic).unwrap();
+        assert_eq!(ds.y, vec![-1.0, 1.0]);
+    }
+
+    #[test]
+    fn quoted_fields_and_blank_lines() {
+        let text = "\"1.5\",2\n\n3,4\n";
+        let ds = parse_csv(text, "t", Task::Linear).unwrap();
+        assert_eq!(ds.n(), 2);
+        assert_eq!(ds.x[(0, 0)], 1.5);
+    }
+
+    #[test]
+    fn errors_reported_with_lines() {
+        assert!(parse_csv("", "t", Task::Linear).is_err());
+        let e = parse_csv("1,2\n3\n", "t", Task::Linear).unwrap_err();
+        assert!(e.contains("line 2"), "{e}");
+        let e = parse_csv("1,2\nx,3\n", "t", Task::Linear).unwrap_err();
+        assert!(e.contains("non-numeric"), "{e}");
+        // bad logistic labels rejected by validation
+        let e = parse_csv("1,2.5\n", "t", Task::Logistic).unwrap_err();
+        assert!(e.contains("not ±1"), "{e}");
+    }
+}

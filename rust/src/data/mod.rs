@@ -1,0 +1,107 @@
+//! Datasets of Table 1 and their partitioning across workers.
+//!
+//! * [`synthetic`] regenerates the Chen et al. (2018)-style synthetic
+//!   linear / logistic problems (d = 50, 1200 samples).
+//! * [`real`] builds deterministic surrogates for the UCI *Body Fat* and
+//!   *Dermatology* datasets (same n, d, realistic feature correlation and
+//!   conditioning) — the sandbox has no network access to UCI; see
+//!   DESIGN.md §Substitutions.
+//! * [`partition`] splits samples uniformly across `N` workers (paper §7).
+
+pub mod csv;
+pub mod partition;
+pub mod real;
+pub mod synthetic;
+
+pub use partition::{partition_uniform, Shard};
+
+use crate::config::Task;
+use crate::linalg::Mat;
+
+/// A dense supervised dataset: features `x` (n x d) and targets `y`.
+/// For logistic tasks the targets are in {-1, +1}.
+#[derive(Clone, Debug)]
+pub struct Dataset {
+    pub name: String,
+    pub task: Task,
+    pub x: Mat,
+    pub y: Vec<f64>,
+}
+
+impl Dataset {
+    pub fn n(&self) -> usize {
+        self.x.rows()
+    }
+
+    pub fn d(&self) -> usize {
+        self.x.cols()
+    }
+
+    /// Consistency checks used by tests and loaders.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.x.rows() != self.y.len() {
+            return Err(format!(
+                "rows {} != labels {}",
+                self.x.rows(),
+                self.y.len()
+            ));
+        }
+        if self.task == Task::Logistic {
+            for (i, &v) in self.y.iter().enumerate() {
+                if v != 1.0 && v != -1.0 {
+                    return Err(format!("logistic label {i} is {v}, not ±1"));
+                }
+            }
+        }
+        for (i, &v) in self.x.data().iter().enumerate() {
+            if !v.is_finite() {
+                return Err(format!("non-finite feature at flat index {i}"));
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Build the named dataset of Table 1.
+pub fn load(id: crate::config::DatasetId, seed: u64) -> Dataset {
+    use crate::config::DatasetId::*;
+    match id {
+        SynthLinear => synthetic::linear_dataset(1200, 50, seed),
+        SynthLogistic => synthetic::logistic_dataset(1200, 50, seed),
+        BodyFat => real::bodyfat(seed),
+        Derm => real::derm(seed),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::DatasetId;
+
+    #[test]
+    fn table1_inventory_shapes() {
+        // Table 1 of the paper: (task, d, n)
+        let cases = [
+            (DatasetId::SynthLinear, Task::Linear, 50, 1200),
+            (DatasetId::BodyFat, Task::Linear, 14, 252),
+            (DatasetId::SynthLogistic, Task::Logistic, 50, 1200),
+            (DatasetId::Derm, Task::Logistic, 34, 358),
+        ];
+        for (id, task, d, n) in cases {
+            let ds = load(id, 7);
+            assert_eq!(ds.task, task, "{id:?}");
+            assert_eq!(ds.d(), d, "{id:?}");
+            assert_eq!(ds.n(), n, "{id:?}");
+            ds.validate().unwrap();
+        }
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let a = load(DatasetId::SynthLinear, 3);
+        let b = load(DatasetId::SynthLinear, 3);
+        assert_eq!(a.x.data(), b.x.data());
+        let c = load(DatasetId::SynthLinear, 4);
+        assert_ne!(a.x.data(), c.x.data());
+    }
+}

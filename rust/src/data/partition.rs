@@ -1,0 +1,97 @@
+//! Uniform sample partitioning across workers (paper §7: "the number of
+//! samples are uniformly distributed across the N workers").
+
+use super::Dataset;
+use crate::linalg::Mat;
+use crate::util::rng::Pcg64;
+
+/// One worker's local shard.
+#[derive(Clone, Debug)]
+pub struct Shard {
+    pub worker: usize,
+    pub x: Mat,
+    pub y: Vec<f64>,
+}
+
+impl Shard {
+    pub fn s(&self) -> usize {
+        self.x.rows()
+    }
+}
+
+/// Shuffle the dataset (seeded) and split it as evenly as possible across
+/// `workers` shards (first `n % workers` shards get one extra sample).
+pub fn partition_uniform(ds: &Dataset, workers: usize, seed: u64) -> Vec<Shard> {
+    assert!(workers >= 1);
+    let n = ds.n();
+    assert!(n >= workers, "fewer samples than workers");
+    let d = ds.d();
+    let mut order: Vec<usize> = (0..n).collect();
+    let mut rng = Pcg64::new(seed ^ 0x9A57_17D5);
+    rng.shuffle(&mut order);
+    let base = n / workers;
+    let extra = n % workers;
+    let mut shards = Vec::with_capacity(workers);
+    let mut cursor = 0usize;
+    for w in 0..workers {
+        let count = base + usize::from(w < extra);
+        let mut x = Mat::zeros(count, d);
+        let mut y = Vec::with_capacity(count);
+        for r in 0..count {
+            let src = order[cursor];
+            cursor += 1;
+            x.row_mut(r).copy_from_slice(ds.x.row(src));
+            y.push(ds.y[src]);
+        }
+        shards.push(Shard { worker: w, x, y });
+    }
+    shards
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::linear_dataset;
+    use crate::testing::prop::check;
+
+    #[test]
+    fn partition_covers_everything_once() {
+        check("partition is a permutation of the dataset", 25, |g| {
+            let n = g.usize_in(20, 200);
+            let d = g.usize_in(1, 8);
+            let workers = g.usize_in(1, n.min(24));
+            let ds = linear_dataset(n, d, g.u64());
+            let shards = partition_uniform(&ds, workers, g.u64());
+            assert_eq!(shards.len(), workers);
+            let total: usize = shards.iter().map(|s| s.s()).sum();
+            assert_eq!(total, n);
+            // sizes balanced within 1
+            let min = shards.iter().map(|s| s.s()).min().unwrap();
+            let max = shards.iter().map(|s| s.s()).max().unwrap();
+            assert!(max - min <= 1);
+            // every sample appears exactly once (match on y + first feature)
+            let mut seen: Vec<(u64, u64)> = Vec::new();
+            for sh in &shards {
+                for r in 0..sh.s() {
+                    seen.push((sh.y[r].to_bits(), sh.x.row(r)[0].to_bits()));
+                }
+            }
+            seen.sort_unstable();
+            let mut orig: Vec<(u64, u64)> = (0..n)
+                .map(|i| (ds.y[i].to_bits(), ds.x.row(i)[0].to_bits()))
+                .collect();
+            orig.sort_unstable();
+            assert_eq!(seen, orig);
+        });
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let ds = linear_dataset(100, 4, 1);
+        let a = partition_uniform(&ds, 7, 42);
+        let b = partition_uniform(&ds, 7, 42);
+        for (sa, sb) in a.iter().zip(&b) {
+            assert_eq!(sa.y, sb.y);
+        }
+    }
+}

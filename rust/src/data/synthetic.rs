@@ -1,0 +1,114 @@
+//! Synthetic datasets in the style of Chen et al. (2018) / LAG.
+//!
+//! * linear: `y = X theta0 + eps`, features N(0,1) with a mild planted
+//!   covariance, noise sigma = 0.1 (strongly convex least squares).
+//! * logistic: labels sampled from the true logistic model at a planted
+//!   hyperplane, with 5% label noise — separable-ish but not degenerate.
+
+use super::Dataset;
+use crate::config::Task;
+use crate::linalg::Mat;
+use crate::util::rng::Pcg64;
+
+/// Generate the ground-truth model used by both generators (unit-norm).
+fn planted_theta(d: usize, rng: &mut Pcg64) -> Vec<f64> {
+    let mut theta = rng.normal_vec(d);
+    let norm = theta.iter().map(|x| x * x).sum::<f64>().sqrt().max(1e-12);
+    for t in theta.iter_mut() {
+        *t /= norm;
+    }
+    theta
+}
+
+/// Feature matrix with mild column correlation: x_j = z_j + 0.3 * z_common.
+fn features(n: usize, d: usize, rng: &mut Pcg64) -> Mat {
+    let mut x = Mat::zeros(n, d);
+    for i in 0..n {
+        let common = rng.normal();
+        let row = x.row_mut(i);
+        for item in row.iter_mut().take(d) {
+            *item = rng.normal() + 0.3 * common;
+        }
+    }
+    x
+}
+
+/// Linear-regression dataset: `y = X theta0 + 0.1 N(0,1)`.
+pub fn linear_dataset(n: usize, d: usize, seed: u64) -> Dataset {
+    let mut rng = Pcg64::new(seed ^ 0x5EED_0001);
+    let theta0 = planted_theta(d, &mut rng);
+    let x = features(n, d, &mut rng);
+    let mut y = x.matvec(&theta0);
+    for yi in y.iter_mut() {
+        *yi += 0.1 * rng.normal();
+    }
+    Dataset {
+        name: format!("synth-linear[n={n},d={d}]"),
+        task: Task::Linear,
+        x,
+        y,
+    }
+}
+
+/// Logistic-regression dataset: P(y=1|x) = sigmoid(2 x^T theta0), with 5%
+/// label flips for realism.
+pub fn logistic_dataset(n: usize, d: usize, seed: u64) -> Dataset {
+    let mut rng = Pcg64::new(seed ^ 0x5EED_0002);
+    let theta0 = planted_theta(d, &mut rng);
+    let x = features(n, d, &mut rng);
+    let mut y = Vec::with_capacity(n);
+    for i in 0..n {
+        let z = 2.0 * crate::util::dot(x.row(i), &theta0);
+        let p = 1.0 / (1.0 + (-z).exp());
+        let mut label = if rng.uniform() < p { 1.0 } else { -1.0 };
+        if rng.uniform() < 0.05 {
+            label = -label;
+        }
+        y.push(label);
+    }
+    Dataset {
+        name: format!("synth-logistic[n={n},d={d}]"),
+        task: Task::Logistic,
+        x,
+        y,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn linear_labels_correlate_with_features() {
+        let ds = linear_dataset(400, 10, 1);
+        ds.validate().unwrap();
+        // OLS on the data recovers a model with small residual
+        let g = ds.x.gram().add_diag(1e-6);
+        let rhs = ds.x.t_matvec(&ds.y);
+        let theta = crate::linalg::Cholesky::new(&g).unwrap().solve(&rhs);
+        let pred = ds.x.matvec(&theta);
+        let resid: f64 = pred
+            .iter()
+            .zip(&ds.y)
+            .map(|(p, y)| (p - y) * (p - y))
+            .sum::<f64>()
+            / ds.n() as f64;
+        assert!(resid < 0.05, "residual mse {resid}");
+    }
+
+    #[test]
+    fn logistic_labels_mostly_predictable() {
+        let ds = logistic_dataset(600, 8, 2);
+        ds.validate().unwrap();
+        let pos = ds.y.iter().filter(|&&v| v == 1.0).count();
+        // roughly balanced classes
+        assert!(pos > 150 && pos < 450, "pos={pos}");
+    }
+
+    #[test]
+    fn distinct_seeds_distinct_data() {
+        let a = logistic_dataset(50, 5, 1);
+        let b = logistic_dataset(50, 5, 2);
+        assert_ne!(a.x.data(), b.x.data());
+    }
+}

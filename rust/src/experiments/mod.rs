@@ -1,0 +1,388 @@
+//! The paper's evaluation suite: one module entry per figure/table.
+//!
+//! Every figure of §7 maps to a [`FigureSpec`] (workload, topology,
+//! parameters, algorithm set) and regenerates the paper's series as
+//! [`Trace`]s plus a comparison summary at the paper's reference accuracy.
+//! `DESIGN.md §4` holds the index; the `cq-ggadmm exp <figure>` CLI and
+//! the cargo benches drive these.
+
+pub mod rates;
+pub mod sensitivity;
+
+use crate::algs::{dgd, AlgSpec, Problem, Run, RunOptions};
+use crate::comm::EnergyParams;
+use crate::config::DatasetId;
+use crate::data;
+use crate::graph::Topology;
+use crate::io::Table;
+use crate::metrics::Trace;
+use crate::solver::Backend;
+
+/// A figure's full experimental setup.
+#[derive(Clone, Debug)]
+pub struct FigureSpec {
+    pub id: &'static str,
+    pub title: &'static str,
+    pub dataset: DatasetId,
+    pub workers: usize,
+    pub connectivity: f64,
+    pub rho: f64,
+    pub mu0: f64,
+    /// iteration budget for alternating (GGADMM-family) schemes
+    pub iters_alt: u64,
+    /// iteration budget for the Jacobian C-ADMM baseline (the paper's
+    /// plots run it ~an order of magnitude longer)
+    pub iters_jacobian: u64,
+    pub seed: u64,
+    /// reference accuracy the summary compares schemes at
+    pub target_gap: f64,
+    pub algs: Vec<AlgSpec>,
+    /// include the DGD first-order baseline
+    pub with_dgd: bool,
+}
+
+/// Paper-tuned parameter sets ("we choose the values leading to the best
+/// performance of all algorithms" — §7; these were tuned empirically on
+/// this reproduction, see EXPERIMENTS.md).
+fn default_algs(linear: bool) -> Vec<AlgSpec> {
+    if linear {
+        vec![
+            AlgSpec::c_admm(0.1, 0.8),
+            AlgSpec::ggadmm(),
+            AlgSpec::c_ggadmm(0.1, 0.8),
+            AlgSpec::cq_ggadmm(0.1, 0.8, 0.995, 2),
+        ]
+    } else {
+        vec![
+            AlgSpec::c_admm(0.3, 0.9),
+            AlgSpec::ggadmm(),
+            AlgSpec::c_ggadmm(0.3, 0.9),
+            AlgSpec::cq_ggadmm(0.3, 0.9, 0.995, 2),
+        ]
+    }
+}
+
+/// Figure 2: linear regression, synthetic dataset, N = 24.
+pub fn fig2() -> FigureSpec {
+    FigureSpec {
+        id: "fig2",
+        title: "Linear regression, synthetic dataset (N=24)",
+        dataset: DatasetId::SynthLinear,
+        workers: 24,
+        connectivity: 0.3,
+        rho: 30.0,
+        mu0: 0.0,
+        iters_alt: 300,
+        iters_jacobian: 1200,
+        seed: 21,
+        target_gap: 1e-4,
+        algs: default_algs(true),
+        with_dgd: false,
+    }
+}
+
+/// Figure 3: linear regression, Body Fat, N = 18.
+pub fn fig3() -> FigureSpec {
+    FigureSpec {
+        id: "fig3",
+        title: "Linear regression, real dataset Body Fat (N=18)",
+        dataset: DatasetId::BodyFat,
+        workers: 18,
+        connectivity: 0.3,
+        rho: 5.0,
+        mu0: 0.0,
+        iters_alt: 400,
+        iters_jacobian: 1500,
+        seed: 22,
+        target_gap: 1e-4,
+        algs: default_algs(true),
+        with_dgd: false,
+    }
+}
+
+/// Figure 4: logistic regression, synthetic dataset, N = 24.
+pub fn fig4() -> FigureSpec {
+    FigureSpec {
+        id: "fig4",
+        title: "Logistic regression, synthetic dataset (N=24)",
+        dataset: DatasetId::SynthLogistic,
+        workers: 24,
+        connectivity: 0.3,
+        rho: 0.1,
+        mu0: 1e-2,
+        iters_alt: 300,
+        iters_jacobian: 1000,
+        seed: 23,
+        target_gap: 1e-4,
+        algs: default_algs(false),
+        with_dgd: false,
+    }
+}
+
+/// Figure 5: logistic regression, Derm, N = 18.
+pub fn fig5() -> FigureSpec {
+    FigureSpec {
+        id: "fig5",
+        title: "Logistic regression, real dataset Derm (N=18)",
+        dataset: DatasetId::Derm,
+        workers: 18,
+        connectivity: 0.3,
+        rho: 0.1,
+        mu0: 1e-2,
+        iters_alt: 300,
+        iters_jacobian: 1000,
+        seed: 24,
+        target_gap: 1e-4,
+        algs: default_algs(false),
+        with_dgd: false,
+    }
+}
+
+/// Figure 6 is the density ablation; see [`fig6`].
+#[derive(Clone, Debug)]
+pub struct Fig6Spec {
+    pub base: FigureSpec,
+    pub sparse_p: f64,
+    pub dense_p: f64,
+}
+
+/// Figure 6: graph-density effect, Body Fat linear regression, N = 18,
+/// sparse p = 0.2 vs dense p = 0.4.
+pub fn fig6() -> Fig6Spec {
+    let mut base = fig3();
+    base.id = "fig6";
+    base.title = "Graph density effect, Body Fat (N=18, p=0.2 vs p=0.4)";
+    Fig6Spec { base, sparse_p: 0.2, dense_p: 0.4 }
+}
+
+/// Result bundle of a figure run.
+pub struct FigureResult {
+    pub id: String,
+    pub title: String,
+    pub traces: Vec<Trace>,
+    pub summary: Table,
+}
+
+/// Execution knobs shared by all figure runs.
+#[derive(Clone, Debug)]
+pub struct ExecOptions {
+    pub backend: Backend,
+    pub artifacts_dir: Option<std::path::PathBuf>,
+    pub threads: usize,
+    pub record_every: u64,
+}
+
+impl Default for ExecOptions {
+    fn default() -> Self {
+        ExecOptions {
+            backend: Backend::Native,
+            artifacts_dir: None,
+            threads: 1,
+            record_every: 1,
+        }
+    }
+}
+
+/// Build the topology + problem of a figure (shared with the rate study).
+pub fn build_problem(spec: &FigureSpec, p_override: Option<f64>) -> (Problem, Topology) {
+    let topo = Topology::random_bipartite(
+        spec.workers,
+        p_override.unwrap_or(spec.connectivity),
+        spec.seed,
+    );
+    let ds = data::load(spec.dataset, spec.seed);
+    let problem = Problem::new(&ds, &topo, spec.rho, spec.mu0, spec.seed);
+    (problem, topo)
+}
+
+/// Run one figure: all algorithm series + the summary table.
+pub fn run_figure(spec: &FigureSpec, exec: &ExecOptions) -> FigureResult {
+    let (problem, topo) = build_problem(spec, None);
+    let mut traces = Vec::new();
+    for alg in &spec.algs {
+        let iters = match alg.schedule {
+            crate::algs::Schedule::Alternating => spec.iters_alt,
+            crate::algs::Schedule::Jacobian => spec.iters_jacobian,
+        };
+        let opts = RunOptions {
+            backend: exec.backend,
+            threads: exec.threads,
+            seed: spec.seed,
+            record_every: exec.record_every,
+            artifacts_dir: exec.artifacts_dir.clone(),
+            drop_prob: 0.0,
+            energy: EnergyParams::default(),
+        };
+        let mut run = Run::new(problem.clone(), topo.clone(), alg.clone(), opts);
+        traces.push(run.run(iters));
+    }
+    if spec.with_dgd {
+        traces.push(dgd::run_dgd(
+            &problem,
+            &topo,
+            0.01,
+            spec.iters_jacobian,
+            EnergyParams::default(),
+        ));
+    }
+    let summary = summarize(&traces, spec.target_gap);
+    FigureResult {
+        id: spec.id.to_string(),
+        title: spec.title.to_string(),
+        traces,
+        summary,
+    }
+}
+
+/// Run figure 6: the same algorithms over the sparse and dense graphs.
+pub fn run_fig6(spec: &Fig6Spec, exec: &ExecOptions) -> Vec<FigureResult> {
+    [("sparse", spec.sparse_p), ("dense", spec.dense_p)]
+        .iter()
+        .map(|(label, p)| {
+            let (problem, topo) = build_problem(&spec.base, Some(*p));
+            let mut traces = Vec::new();
+            for alg in &spec.base.algs {
+                let iters = match alg.schedule {
+                    crate::algs::Schedule::Alternating => spec.base.iters_alt,
+                    crate::algs::Schedule::Jacobian => spec.base.iters_jacobian,
+                };
+                let opts = RunOptions {
+                    backend: exec.backend,
+                    threads: exec.threads,
+                    seed: spec.base.seed,
+                    record_every: exec.record_every,
+                    artifacts_dir: exec.artifacts_dir.clone(),
+                    drop_prob: 0.0,
+                    energy: EnergyParams::default(),
+                };
+                let mut run = Run::new(problem.clone(), topo.clone(), alg.clone(), opts);
+                let mut trace = run.run(iters);
+                trace.algorithm = format!("{} ({label} p={p})", trace.algorithm);
+                traces.push(trace);
+            }
+            let summary = summarize(&traces, spec.base.target_gap);
+            FigureResult {
+                id: format!("{}-{label}", spec.base.id),
+                title: format!("{} [{label}, p={p}]", spec.base.title),
+                traces,
+                summary,
+            }
+        })
+        .collect()
+}
+
+/// The paper's comparison: per scheme, the cost to reach the reference
+/// accuracy on every axis (iterations / rounds / bits / energy).
+pub fn summarize(traces: &[Trace], target_gap: f64) -> Table {
+    let mut t = Table::new(&[
+        "algorithm",
+        "final gap",
+        &format!("iters to {target_gap:.0e}"),
+        "comm rounds",
+        "Mbits",
+        "energy (J)",
+    ]);
+    for tr in traces {
+        match tr.first_below(target_gap) {
+            Some(p) => t.row(&[
+                tr.algorithm.clone(),
+                format!("{:.2e}", tr.last_gap()),
+                p.iteration.to_string(),
+                p.cum_rounds.to_string(),
+                format!("{:.3}", p.cum_bits as f64 / 1e6),
+                format!("{:.3e}", p.cum_energy_j),
+            ]),
+            None => t.row(&[
+                tr.algorithm.clone(),
+                format!("{:.2e}", tr.last_gap()),
+                "—".into(),
+                "—".into(),
+                "—".into(),
+                "—".into(),
+            ]),
+        }
+    }
+    t
+}
+
+/// Table 1 of the paper: the dataset inventory.
+pub fn table1() -> Table {
+    let mut t = Table::new(&["dataset", "task", "type", "model size d", "instances"]);
+    for (id, kind) in [
+        (DatasetId::SynthLinear, "synthetic"),
+        (DatasetId::BodyFat, "real (surrogate)"),
+        (DatasetId::SynthLogistic, "synthetic"),
+        (DatasetId::Derm, "real (surrogate)"),
+    ] {
+        let ds = data::load(id, 1);
+        t.row(&[
+            id.name().into(),
+            format!("{:?}", ds.task).to_lowercase(),
+            kind.into(),
+            ds.d().to_string(),
+            ds.n().to_string(),
+        ]);
+    }
+    t
+}
+
+/// All standard figures by id.
+pub fn figure_by_id(id: &str) -> Option<FigureSpec> {
+    match id {
+        "fig2" => Some(fig2()),
+        "fig3" => Some(fig3()),
+        "fig4" => Some(fig4()),
+        "fig5" => Some(fig5()),
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn figure_specs_match_paper_workloads() {
+        assert_eq!(fig2().workers, 24);
+        assert_eq!(fig3().workers, 18);
+        assert_eq!(fig4().dataset, DatasetId::SynthLogistic);
+        assert_eq!(fig5().dataset, DatasetId::Derm);
+        let f6 = fig6();
+        assert_eq!((f6.sparse_p, f6.dense_p), (0.2, 0.4));
+        for spec in [fig2(), fig3(), fig4(), fig5()] {
+            assert_eq!(spec.algs.len(), 4);
+            for a in &spec.algs {
+                a.validate().unwrap();
+            }
+        }
+    }
+
+    #[test]
+    fn table1_rows() {
+        let t = table1();
+        let s = t.render();
+        assert!(s.contains("synth-linear"));
+        assert!(s.contains("34")); // derm d
+        assert!(s.contains("252")); // bodyfat instances
+    }
+
+    #[test]
+    fn tiny_figure_run_end_to_end() {
+        // a scaled-down fig2 exercising the whole path quickly
+        let mut spec = fig2();
+        spec.workers = 6;
+        spec.iters_alt = 150;
+        spec.iters_jacobian = 400;
+        spec.target_gap = 1e-2;
+        let res = run_figure(&spec, &ExecOptions::default());
+        assert_eq!(res.traces.len(), 4);
+        let rendered = res.summary.render();
+        assert!(rendered.contains("GGADMM"), "{rendered}");
+        // GGADMM-family final gaps must beat the target
+        for tr in &res.traces {
+            if tr.algorithm != "C-ADMM" {
+                assert!(tr.last_gap() < 1e-2, "{}: {:.2e}", tr.algorithm, tr.last_gap());
+            }
+        }
+    }
+}

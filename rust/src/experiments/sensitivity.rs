@@ -1,0 +1,149 @@
+//! Sensitivity / ablation studies for the design choices DESIGN.md calls
+//! out: the penalty `rho`, the censoring threshold `tau0` (§4 discusses
+//! both extremes), the decay `xi`, and the initial bit width `bits0`.
+
+use crate::algs::{AlgSpec, Problem, Run, RunOptions};
+use crate::data;
+use crate::graph::Topology;
+use crate::io::Table;
+
+/// One sweep point.
+#[derive(Clone, Debug)]
+pub struct SweepPoint {
+    pub label: String,
+    pub iters_to_target: Option<u64>,
+    pub rounds_to_target: Option<u64>,
+    pub bits_to_target: Option<u64>,
+    pub final_gap: f64,
+}
+
+fn run_point(problem: &Problem, topo: &Topology, spec: AlgSpec, iters: u64, target: f64, label: String) -> SweepPoint {
+    let mut run = Run::new(problem.clone(), topo.clone(), spec, RunOptions::default());
+    let trace = run.run(iters);
+    let at = trace.first_below(target);
+    SweepPoint {
+        label,
+        iters_to_target: at.map(|p| p.iteration),
+        rounds_to_target: at.map(|p| p.cum_rounds),
+        bits_to_target: at.map(|p| p.cum_bits),
+        final_gap: trace.last_gap(),
+    }
+}
+
+/// Standard workload for the sweeps: synth-linear, N = 16, p = 0.3.
+fn workload(rho: f64, seed: u64) -> (Problem, Topology) {
+    let topo = Topology::random_bipartite(16, 0.3, seed);
+    let ds = data::load(crate::config::DatasetId::SynthLinear, seed);
+    let problem = Problem::new(&ds, &topo, rho, 0.0, seed);
+    (problem, topo)
+}
+
+/// rho sensitivity of GGADMM (too small => slow consensus; very large =>
+/// over-damped but still convergent for this closed-form workload).
+pub fn rho_sweep(rhos: &[f64], iters: u64, seed: u64) -> Vec<SweepPoint> {
+    rhos.iter()
+        .map(|&rho| {
+            let (p, t) = workload(rho, seed);
+            run_point(&p, &t, AlgSpec::ggadmm(), iters, 1e-4, format!("rho={rho}"))
+        })
+        .collect()
+}
+
+/// tau0 sensitivity of C-GGADMM (paper §4: tau0 = 0 recovers GGADMM; very
+/// large tau0 censors almost everything and slows convergence).
+pub fn tau0_sweep(tau0s: &[f64], xi: f64, iters: u64, seed: u64) -> Vec<SweepPoint> {
+    let (p, t) = workload(30.0, seed);
+    tau0s
+        .iter()
+        .map(|&tau0| {
+            let spec = if tau0 == 0.0 {
+                AlgSpec::ggadmm()
+            } else {
+                AlgSpec::c_ggadmm(tau0, xi)
+            };
+            run_point(&p, &t, spec, iters, 1e-4, format!("tau0={tau0}"))
+        })
+        .collect()
+}
+
+/// bits0 sensitivity of CQ-GGADMM.
+pub fn bits_sweep(bits: &[u32], iters: u64, seed: u64) -> Vec<SweepPoint> {
+    let (p, t) = workload(30.0, seed);
+    bits.iter()
+        .map(|&b| {
+            let spec = AlgSpec::cq_ggadmm(0.1, 0.8, 0.995, b);
+            run_point(&p, &t, spec, iters, 1e-4, format!("bits0={b}"))
+        })
+        .collect()
+}
+
+/// Component ablation at fixed parameters: none / censor / quant / both.
+pub fn component_ablation(iters: u64, seed: u64) -> Vec<SweepPoint> {
+    let (p, t) = workload(30.0, seed);
+    vec![
+        run_point(&p, &t, AlgSpec::ggadmm(), iters, 1e-4, "baseline (GGADMM)".into()),
+        run_point(&p, &t, AlgSpec::c_ggadmm(0.1, 0.8), iters, 1e-4, "+censoring".into()),
+        run_point(&p, &t, AlgSpec::q_ggadmm(0.995, 2), iters, 1e-4, "+quantization".into()),
+        run_point(&p, &t, AlgSpec::cq_ggadmm(0.1, 0.8, 0.995, 2), iters, 1e-4, "+both (CQ)".into()),
+    ]
+}
+
+/// Render any sweep as a table.
+pub fn render(title: &str, points: &[SweepPoint]) -> Table {
+    let mut t = Table::new(&[title, "iters@1e-4", "rounds@1e-4", "bits@1e-4", "final gap"]);
+    for p in points {
+        let f = |v: Option<u64>| v.map(|x| x.to_string()).unwrap_or_else(|| "—".into());
+        t.row(&[
+            p.label.clone(),
+            f(p.iters_to_target),
+            f(p.rounds_to_target),
+            f(p.bits_to_target),
+            format!("{:.2e}", p.final_gap),
+        ]);
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    #[cfg_attr(debug_assertions, ignore = "paper-scale sweep; run with --release")]
+    fn huge_tau0_slows_convergence() {
+        // §4: "if tau0 is very large, most workers will be censored ...
+        // which will slow down the convergence"
+        let pts = tau0_sweep(&[0.0, 0.1, 50.0], 0.95, 250, 41);
+        let base = pts[0].iters_to_target.expect("GGADMM");
+        let mild = pts[1].iters_to_target.expect("mild censoring");
+        let huge = pts[2].iters_to_target.unwrap_or(u64::MAX);
+        assert!(mild <= base * 2, "mild {mild} vs base {base}");
+        assert!(huge > mild, "huge {huge} vs mild {mild}");
+    }
+
+    #[test]
+    #[cfg_attr(debug_assertions, ignore = "paper-scale sweep; run with --release")]
+    fn component_ablation_shape() {
+        let pts = component_ablation(250, 42);
+        let bits = |i: usize| pts[i].bits_to_target.expect(&pts[i].label);
+        // quantization (alone or with censoring) must slash the bits
+        assert!(bits(2) * 3 < bits(0));
+        assert!(bits(3) * 3 < bits(0));
+        // censoring must cut rounds
+        let rounds = |i: usize| pts[i].rounds_to_target.expect(&pts[i].label);
+        assert!(rounds(1) < rounds(0));
+    }
+
+    #[test]
+    fn render_handles_missing_targets() {
+        let pts = vec![SweepPoint {
+            label: "x".into(),
+            iters_to_target: None,
+            rounds_to_target: None,
+            bits_to_target: None,
+            final_gap: 1.0,
+        }];
+        let s = render("sweep", &pts).render();
+        assert!(s.contains("—"));
+    }
+}

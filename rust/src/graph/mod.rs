@@ -1,0 +1,372 @@
+//! Network topology: generation, bipartite grouping, incidence matrices
+//! and the spectral quantities of the paper's rate analysis.
+//!
+//! The paper (Assumption 1) works over **bipartite and connected**
+//! communication graphs; workers are split into a head group `H` and a
+//! tail group `T`, and every edge crosses the groups.  [`Topology`] owns
+//! the edge set, the grouping and worker positions (for the free-space
+//! energy model of §7), and exposes the matrices `A`, `D`, `C`, `M_-`,
+//! `M_+` used in Appendix D.
+
+pub mod spectral;
+
+use crate::util::rng::Pcg64;
+
+/// Worker group (paper's H / T).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Group {
+    Head,
+    Tail,
+}
+
+/// A bipartite, connected communication topology over `n` workers.
+#[derive(Clone, Debug)]
+pub struct Topology {
+    n: usize,
+    /// Edges as (head, tail) pairs, deduplicated, head in H, tail in T.
+    edges: Vec<(usize, usize)>,
+    /// Group of each worker.
+    groups: Vec<Group>,
+    /// Sorted neighbor lists.
+    neighbors: Vec<Vec<usize>>,
+    /// Worker coordinates in meters (for the energy model).
+    positions: Vec<(f64, f64)>,
+}
+
+impl Topology {
+    /// Build from an explicit bipartite edge list + grouping.
+    /// Panics if an edge does not cross the groups or the graph is
+    /// disconnected (use [`Topology::try_new`] for fallible construction).
+    pub fn new(n: usize, edges: Vec<(usize, usize)>, groups: Vec<Group>) -> Topology {
+        Self::try_new(n, edges, groups).expect("invalid topology")
+    }
+
+    /// Fallible constructor with validation.
+    pub fn try_new(
+        n: usize,
+        raw_edges: Vec<(usize, usize)>,
+        groups: Vec<Group>,
+    ) -> Result<Topology, String> {
+        if groups.len() != n {
+            return Err(format!("groups length {} != n {}", groups.len(), n));
+        }
+        let mut edges = Vec::with_capacity(raw_edges.len());
+        let mut seen = std::collections::BTreeSet::new();
+        for (a, b) in raw_edges {
+            if a >= n || b >= n || a == b {
+                return Err(format!("bad edge ({a}, {b})"));
+            }
+            let (h, t) = match (groups[a], groups[b]) {
+                (Group::Head, Group::Tail) => (a, b),
+                (Group::Tail, Group::Head) => (b, a),
+                _ => {
+                    return Err(format!(
+                        "edge ({a}, {b}) does not cross head/tail groups"
+                    ))
+                }
+            };
+            if seen.insert((h, t)) {
+                edges.push((h, t));
+            }
+        }
+        let mut neighbors = vec![Vec::new(); n];
+        for &(h, t) in &edges {
+            neighbors[h].push(t);
+            neighbors[t].push(h);
+        }
+        for nbrs in &mut neighbors {
+            nbrs.sort_unstable();
+        }
+        let topo = Topology {
+            n,
+            edges,
+            groups,
+            neighbors,
+            positions: default_positions(n),
+        };
+        if !topo.is_connected() {
+            return Err("graph is not connected".into());
+        }
+        Ok(topo)
+    }
+
+    /// Chain topology of the original GADMM: 0-1-2-...-(n-1), workers at
+    /// even positions are heads (paper Fig. 1(a)).
+    pub fn chain(n: usize) -> Topology {
+        assert!(n >= 2, "chain needs >= 2 workers");
+        let groups: Vec<Group> = (0..n)
+            .map(|i| if i % 2 == 0 { Group::Head } else { Group::Tail })
+            .collect();
+        let edges: Vec<(usize, usize)> = (0..n - 1).map(|i| (i, i + 1)).collect();
+        Topology::new(n, edges, groups)
+    }
+
+    /// Random connected bipartite graph with connectivity ratio `p`
+    /// (paper §7 "Graph Generation"): targets `p * n(n-1)/2` edges chosen
+    /// uniformly among head-tail pairs after a random balanced grouping,
+    /// seeded with a spanning tree so the graph is always connected.
+    pub fn random_bipartite(n: usize, p: f64, seed: u64) -> Topology {
+        assert!(n >= 2);
+        assert!((0.0..=1.0).contains(&p));
+        let mut rng = Pcg64::new(seed ^ 0x9E37_79B9_7F4A_7C15);
+        // balanced random grouping
+        let mut ids: Vec<usize> = (0..n).collect();
+        rng.shuffle(&mut ids);
+        let mut groups = vec![Group::Tail; n];
+        for &w in ids.iter().take(n / 2) {
+            groups[w] = Group::Head;
+        }
+        let heads: Vec<usize> = (0..n).filter(|&i| groups[i] == Group::Head).collect();
+        let tails: Vec<usize> = (0..n).filter(|&i| groups[i] == Group::Tail).collect();
+
+        // spanning tree over the bipartition: connect every node to a random
+        // already-connected node of the opposite group (alternating growth).
+        let mut edges: Vec<(usize, usize)> = Vec::new();
+        let mut connected_h: Vec<usize> = vec![heads[0]];
+        let mut connected_t: Vec<usize> = Vec::new();
+        let mut pending_h: Vec<usize> = heads[1..].to_vec();
+        let mut pending_t: Vec<usize> = tails.clone();
+        rng.shuffle(&mut pending_h);
+        rng.shuffle(&mut pending_t);
+        while !pending_h.is_empty() || !pending_t.is_empty() {
+            // prefer attaching a tail if any head is connected, else a head
+            let attach_tail = !pending_t.is_empty()
+                && (pending_h.is_empty() || rng.bernoulli(0.5) || connected_t.is_empty());
+            if attach_tail {
+                let t = pending_t.pop().unwrap();
+                let h = connected_h[rng.below(connected_h.len() as u64) as usize];
+                edges.push((h, t));
+                connected_t.push(t);
+            } else {
+                let h = pending_h.pop().unwrap();
+                let t = connected_t[rng.below(connected_t.len() as u64) as usize];
+                edges.push((h, t));
+                connected_h.push(h);
+            }
+        }
+
+        // fill with random extra head-tail edges up to the target count
+        let target = ((p * (n * (n - 1)) as f64 / 2.0).round() as usize)
+            .max(edges.len())
+            .min(heads.len() * tails.len());
+        let mut all_pairs: Vec<(usize, usize)> = Vec::new();
+        let existing: std::collections::BTreeSet<(usize, usize)> =
+            edges.iter().cloned().collect();
+        for &h in &heads {
+            for &t in &tails {
+                if !existing.contains(&(h, t)) {
+                    all_pairs.push((h, t));
+                }
+            }
+        }
+        rng.shuffle(&mut all_pairs);
+        for pair in all_pairs {
+            if edges.len() >= target {
+                break;
+            }
+            edges.push(pair);
+        }
+
+        let mut topo = Topology::new(n, edges, groups);
+        topo.positions = random_positions(n, 500.0, &mut rng);
+        topo
+    }
+
+    /// Number of workers.
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// Edge list as (head, tail) pairs.
+    pub fn edges(&self) -> &[(usize, usize)] {
+        &self.edges
+    }
+
+    /// Group of worker `i`.
+    pub fn group(&self, i: usize) -> Group {
+        self.groups[i]
+    }
+
+    /// Worker ids in the head group.
+    pub fn heads(&self) -> Vec<usize> {
+        (0..self.n).filter(|&i| self.groups[i] == Group::Head).collect()
+    }
+
+    /// Worker ids in the tail group.
+    pub fn tails(&self) -> Vec<usize> {
+        (0..self.n).filter(|&i| self.groups[i] == Group::Tail).collect()
+    }
+
+    /// Neighbors of worker `i` (sorted).
+    pub fn neighbors(&self, i: usize) -> &[usize] {
+        &self.neighbors[i]
+    }
+
+    /// Degree of worker `i` (the paper's `d_n`).
+    pub fn degree(&self, i: usize) -> usize {
+        self.neighbors[i].len()
+    }
+
+    /// Worker position in meters.
+    pub fn position(&self, i: usize) -> (f64, f64) {
+        self.positions[i]
+    }
+
+    /// Override worker positions (tests / custom deployments).
+    pub fn set_positions(&mut self, pos: Vec<(f64, f64)>) {
+        assert_eq!(pos.len(), self.n);
+        self.positions = pos;
+    }
+
+    /// Euclidean distance between two workers in meters.
+    pub fn distance(&self, a: usize, b: usize) -> f64 {
+        let (xa, ya) = self.positions[a];
+        let (xb, yb) = self.positions[b];
+        ((xa - xb).powi(2) + (ya - yb).powi(2)).sqrt()
+    }
+
+    /// Max distance from `i` to any of its neighbors — the broadcast
+    /// bottleneck link of the energy model.
+    pub fn max_neighbor_distance(&self, i: usize) -> f64 {
+        self.neighbors[i]
+            .iter()
+            .map(|&m| self.distance(i, m))
+            .fold(0.0, f64::max)
+    }
+
+    /// Actual connectivity ratio |E| / (n(n-1)/2).
+    pub fn connectivity_ratio(&self) -> f64 {
+        self.edges.len() as f64 / (self.n * (self.n - 1)) as f64 * 2.0
+    }
+
+    /// BFS connectivity check.
+    pub fn is_connected(&self) -> bool {
+        if self.n == 0 {
+            return true;
+        }
+        let mut seen = vec![false; self.n];
+        let mut queue = std::collections::VecDeque::from([0usize]);
+        seen[0] = true;
+        let mut count = 1;
+        while let Some(u) = queue.pop_front() {
+            for &v in &self.neighbors[u] {
+                if !seen[v] {
+                    seen[v] = true;
+                    count += 1;
+                    queue.push_back(v);
+                }
+            }
+        }
+        count == self.n
+    }
+
+    /// Verify every edge crosses groups (used by property tests).
+    pub fn is_bipartite_consistent(&self) -> bool {
+        self.edges
+            .iter()
+            .all(|&(h, t)| self.groups[h] == Group::Head && self.groups[t] == Group::Tail)
+    }
+}
+
+fn default_positions(n: usize) -> Vec<(f64, f64)> {
+    // deterministic ring layout, 250 m radius — overridden by generators
+    (0..n)
+        .map(|i| {
+            let a = 2.0 * std::f64::consts::PI * i as f64 / n as f64;
+            (250.0 + 250.0 * a.cos(), 250.0 + 250.0 * a.sin())
+        })
+        .collect()
+}
+
+fn random_positions(n: usize, side: f64, rng: &mut Pcg64) -> Vec<(f64, f64)> {
+    (0..n)
+        .map(|_| (rng.uniform_in(0.0, side), rng.uniform_in(0.0, side)))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::prop::check;
+
+    #[test]
+    fn chain_structure() {
+        let t = Topology::chain(5);
+        assert_eq!(t.n(), 5);
+        assert_eq!(t.edges().len(), 4);
+        assert!(t.is_connected());
+        assert!(t.is_bipartite_consistent());
+        assert_eq!(t.group(0), Group::Head);
+        assert_eq!(t.group(1), Group::Tail);
+        assert_eq!(t.neighbors(2), &[1, 3]);
+        assert_eq!(t.degree(0), 1);
+    }
+
+    #[test]
+    fn random_graphs_connected_and_bipartite() {
+        check("random bipartite topology invariants", 60, |g| {
+            let n = g.usize_in(2, 32);
+            let p = g.f64_in(0.05, 1.0);
+            let seed = g.u64();
+            let t = Topology::random_bipartite(n, p, seed);
+            assert!(t.is_connected(), "disconnected n={n} p={p}");
+            assert!(t.is_bipartite_consistent());
+            assert_eq!(t.heads().len() + t.tails().len(), n);
+            assert!(!t.heads().is_empty());
+            assert!(!t.tails().is_empty());
+            // every worker participates (connected => degree >= 1)
+            for i in 0..n {
+                assert!(t.degree(i) >= 1);
+            }
+        });
+    }
+
+    #[test]
+    fn density_tracks_p() {
+        let sparse = Topology::random_bipartite(18, 0.2, 3);
+        let dense = Topology::random_bipartite(18, 0.4, 3);
+        assert!(dense.edges().len() > sparse.edges().len());
+    }
+
+    #[test]
+    fn determinism_per_seed() {
+        let a = Topology::random_bipartite(12, 0.3, 9);
+        let b = Topology::random_bipartite(12, 0.3, 9);
+        assert_eq!(a.edges(), b.edges());
+        let c = Topology::random_bipartite(12, 0.3, 10);
+        assert_ne!(a.edges(), c.edges());
+    }
+
+    #[test]
+    fn rejects_non_crossing_edge() {
+        let groups = vec![Group::Head, Group::Head, Group::Tail];
+        let err = Topology::try_new(3, vec![(0, 1)], groups).unwrap_err();
+        assert!(err.contains("does not cross"));
+    }
+
+    #[test]
+    fn rejects_disconnected() {
+        let groups = vec![Group::Head, Group::Tail, Group::Head, Group::Tail];
+        let err = Topology::try_new(4, vec![(0, 1), (2, 3)], groups).unwrap_err();
+        assert!(err.contains("not connected"));
+    }
+
+    #[test]
+    fn distances_symmetric_positive() {
+        let t = Topology::random_bipartite(10, 0.5, 1);
+        for &(h, tl) in t.edges() {
+            assert!((t.distance(h, tl) - t.distance(tl, h)).abs() < 1e-12);
+            assert!(t.distance(h, tl) > 0.0);
+        }
+        for i in 0..10 {
+            assert!(t.max_neighbor_distance(i) > 0.0);
+        }
+    }
+
+    #[test]
+    fn dedup_edges() {
+        let groups = vec![Group::Head, Group::Tail];
+        let t = Topology::try_new(2, vec![(0, 1), (1, 0), (0, 1)], groups).unwrap();
+        assert_eq!(t.edges().len(), 1);
+    }
+}

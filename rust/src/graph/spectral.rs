@@ -1,0 +1,179 @@
+//! Topology matrices and spectral constants of the paper's Appendix D.
+//!
+//! For a bipartite graph with |H| = r heads listed before |T| = s tails,
+//! the adjacency matrix is `A = [[0, B], [B^T, 0]]`; the rate analysis
+//! uses the *upper-triangular half* `C = [[0, B], [0, 0]]`, the signed /
+//! unsigned incidence matrices `M_-`, `M_+` (columns indexed by edges,
+//! head end +1, tail end -1 resp. +1/+1) and the identities
+//! `D - A = 1/2 M_- M_-^T`, `D + A = 1/2 M_+ M_+^T`.
+
+use super::Topology;
+use crate::linalg::{min_nonzero_singular, power_iteration_sigma_max, Mat};
+
+/// Dense topology matrices (N x N resp. N x 2|E|).
+///
+/// The paper's incidence convention counts every edge in both directions
+/// (hence the 1/2 in `D - A = 1/2 M_- M_-^T`): `M_-` has one ±1 column per
+/// *directed* edge.
+pub struct TopoMatrices {
+    pub adjacency: Mat,
+    pub degree: Mat,
+    pub c: Mat,
+    pub m_minus: Mat,
+    pub m_plus: Mat,
+}
+
+/// Spectral constants feeding the Theorem-3 rate bound.
+#[derive(Clone, Copy, Debug)]
+pub struct SpectralConstants {
+    pub sigma_max_c: f64,
+    pub sigma_max_m_minus: f64,
+    /// smallest *non-zero* singular value of `M_-`
+    pub sigma_min_nz_m_minus: f64,
+}
+
+/// Assemble the dense matrices of Appendix D for a topology.
+pub fn matrices(t: &Topology) -> TopoMatrices {
+    let n = t.n();
+    let e = t.edges().len();
+    let mut adjacency = Mat::zeros(n, n);
+    let mut degree = Mat::zeros(n, n);
+    let mut c = Mat::zeros(n, n);
+    let mut m_minus = Mat::zeros(n, 2 * e);
+    let mut m_plus = Mat::zeros(n, 2 * e);
+    for (k, &(h, tl)) in t.edges().iter().enumerate() {
+        adjacency[(h, tl)] = 1.0;
+        adjacency[(tl, h)] = 1.0;
+        // C keeps only the head->tail (upper bipartite) block
+        c[(h, tl)] = 1.0;
+        // directed edge h -> tl
+        m_minus[(h, 2 * k)] = 1.0;
+        m_minus[(tl, 2 * k)] = -1.0;
+        m_plus[(h, 2 * k)] = 1.0;
+        m_plus[(tl, 2 * k)] = 1.0;
+        // directed edge tl -> h
+        m_minus[(tl, 2 * k + 1)] = 1.0;
+        m_minus[(h, 2 * k + 1)] = -1.0;
+        m_plus[(tl, 2 * k + 1)] = 1.0;
+        m_plus[(h, 2 * k + 1)] = 1.0;
+    }
+    for i in 0..n {
+        degree[(i, i)] = t.degree(i) as f64;
+    }
+    TopoMatrices { adjacency, degree, c, m_minus, m_plus }
+}
+
+/// Spectral constants of the topology.
+pub fn constants(t: &Topology) -> SpectralConstants {
+    let m = matrices(t);
+    SpectralConstants {
+        sigma_max_c: power_iteration_sigma_max(&m.c, 500),
+        sigma_max_m_minus: power_iteration_sigma_max(&m.m_minus, 500),
+        sigma_min_nz_m_minus: min_nonzero_singular(&m.m_minus, 1e-8),
+    }
+}
+
+/// Theoretical contraction factor estimate `(1 + delta_2)/2` of Theorem 3
+/// for given strong-convexity/Lipschitz moduli and parameters.  This
+/// mirrors the chain of definitions (147)-(154); it is a *bound*, the
+/// experiments compare the empirically fitted rate against it.
+pub fn theorem3_rate_bound(
+    t: &Topology,
+    mu: f64,
+    l: f64,
+    rho: f64,
+    psi: f64,
+    kappa: f64,
+    eta: f64,
+) -> Theorem3Bound {
+    let sc = constants(t);
+    let smc2 = sc.sigma_max_c * sc.sigma_max_c;
+    let smin2 = sc.sigma_min_nz_m_minus * sc.sigma_min_nz_m_minus;
+    // eta_i choices follow the proof's free parameters; we use the
+    // symmetric choice eta_0..eta_5 = 1 which keeps b_1, b_2 simple.
+    let b1 = smc2 / 2.0;
+    let b2 = 0.5 * smc2 + 0.5 + 0.5 + 0.5 + 0.5 + 0.25;
+    let c_const = 4.0 * eta * l * l / smin2;
+    let a_const = 8.0 * eta * smc2 / ((eta - 1.0) * smin2);
+    let quad = (b2 + a_const * kappa) + (1.0 + kappa) * (b1 + a_const * kappa);
+    let disc = mu * mu - 4.0 * c_const * kappa * quad;
+    let rho_bar = if disc > 0.0 {
+        (mu + disc.sqrt()) / quad
+    } else {
+        0.0
+    };
+    let delta2 = ((1.0 + kappa).recip()).max(psi * psi);
+    Theorem3Bound {
+        constants: sc,
+        rho_bar,
+        discriminant: disc,
+        rate: (1.0 + delta2) / 2.0,
+        rho_ok: rho > 0.0 && rho < rho_bar,
+    }
+}
+
+/// Output of [`theorem3_rate_bound`].
+#[derive(Clone, Copy, Debug)]
+pub struct Theorem3Bound {
+    pub constants: SpectralConstants,
+    pub rho_bar: f64,
+    pub discriminant: f64,
+    /// `(1 + delta_2)/2` — the guaranteed per-iteration contraction.
+    pub rate: f64,
+    pub rho_ok: bool,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::prop::check;
+
+    #[test]
+    fn incidence_identities() {
+        check("D - A = 1/2 M- M-^T and D + A = 1/2 M+ M+^T", 30, |g| {
+            let n = g.usize_in(2, 16);
+            let p = g.f64_in(0.1, 0.9);
+            let t = Topology::random_bipartite(n, p, g.u64());
+            let m = matrices(&t);
+            let lhs_minus = m.degree.sub(&m.adjacency);
+            let rhs_minus = m.m_minus.matmul(&m.m_minus.t()).scale(0.5);
+            assert!(lhs_minus.sub(&rhs_minus).max_abs() < 1e-10);
+            let lhs_plus = m.degree.add(&m.adjacency);
+            let rhs_plus = m.m_plus.matmul(&m.m_plus.t()).scale(0.5);
+            assert!(lhs_plus.sub(&rhs_plus).max_abs() < 1e-10);
+            // A = C + C^T
+            let rebuilt = m.c.add(&m.c.t());
+            assert!(m.adjacency.sub(&rebuilt).max_abs() < 1e-12);
+        });
+    }
+
+    #[test]
+    fn chain_spectrum_known() {
+        // chain of 2: one edge counted both ways, M- M-^T = 2*(D - A) with
+        // eigenvalues {0, 4} => sigma values 2
+        let t = Topology::chain(2);
+        let c = constants(&t);
+        assert!((c.sigma_max_m_minus - 2.0).abs() < 1e-6, "{}", c.sigma_max_m_minus);
+        assert!((c.sigma_min_nz_m_minus - 2.0).abs() < 1e-6);
+        assert!((c.sigma_max_c - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn laplacian_null_space_dim_one_iff_connected() {
+        let t = Topology::random_bipartite(10, 0.3, 5);
+        let m = matrices(&t);
+        let lap = m.degree.sub(&m.adjacency);
+        let eig = crate::linalg::symmetric_eigen(&lap);
+        // connected graph: exactly one ~zero eigenvalue
+        assert!(eig[0].abs() < 1e-8);
+        assert!(eig[1] > 1e-8, "{eig:?}");
+    }
+
+    #[test]
+    fn rate_bound_in_unit_interval() {
+        let t = Topology::random_bipartite(12, 0.4, 2);
+        let b = theorem3_rate_bound(&t, 0.5, 5.0, 0.05, 0.9, 0.05, 2.0);
+        assert!(b.rate > 0.5 && b.rate < 1.0, "rate={}", b.rate);
+        assert!(b.constants.sigma_max_c > 0.0);
+    }
+}

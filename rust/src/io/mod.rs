@@ -1,0 +1,233 @@
+//! Output writers for the experiment harness: CSV, JSON values and a
+//! fixed-width table pretty-printer (what the bench harness prints so the
+//! figure rows are human-checkable against the paper).
+
+use std::fmt::Write as _;
+use std::io::Write as _;
+use std::path::Path;
+
+/// Minimal CSV writer (numbers + simple strings; quotes fields containing
+/// separators).
+pub struct CsvWriter {
+    buf: String,
+    cols: usize,
+}
+
+impl CsvWriter {
+    pub fn new(header: &[&str]) -> Self {
+        let mut w = CsvWriter { buf: String::new(), cols: header.len() };
+        w.write_row_strs(header);
+        w
+    }
+
+    fn escape(field: &str) -> String {
+        if field.contains(',') || field.contains('"') || field.contains('\n') {
+            format!("\"{}\"", field.replace('"', "\"\""))
+        } else {
+            field.to_string()
+        }
+    }
+
+    fn write_row_strs(&mut self, row: &[&str]) {
+        assert_eq!(row.len(), self.cols, "csv column count mismatch");
+        let line: Vec<String> = row.iter().map(|f| Self::escape(f)).collect();
+        let _ = writeln!(self.buf, "{}", line.join(","));
+    }
+
+    /// Append a row of f64 values (formatted with full precision).
+    pub fn row_f64(&mut self, row: &[f64]) {
+        let strs: Vec<String> = row.iter().map(|v| format!("{v:.10e}")).collect();
+        let refs: Vec<&str> = strs.iter().map(|s| s.as_str()).collect();
+        self.write_row_strs(&refs);
+    }
+
+    /// Append a row of preformatted fields.
+    pub fn row(&mut self, row: &[&str]) {
+        self.write_row_strs(row);
+    }
+
+    pub fn contents(&self) -> &str {
+        &self.buf
+    }
+
+    pub fn save(&self, path: &Path) -> std::io::Result<()> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let mut f = std::fs::File::create(path)?;
+        f.write_all(self.buf.as_bytes())
+    }
+}
+
+/// Minimal JSON value + serializer (we only *emit* JSON; the manifest
+/// *parser* lives in `runtime::manifest`).
+#[derive(Clone, Debug, PartialEq)]
+pub enum Json {
+    Null,
+    Bool(bool),
+    Num(f64),
+    Str(String),
+    Arr(Vec<Json>),
+    Obj(Vec<(String, Json)>),
+}
+
+impl Json {
+    pub fn render(&self) -> String {
+        let mut s = String::new();
+        self.render_into(&mut s);
+        s
+    }
+
+    fn render_into(&self, out: &mut String) {
+        match self {
+            Json::Null => out.push_str("null"),
+            Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
+            Json::Num(v) => {
+                if v.fract() == 0.0 && v.abs() < 1e15 {
+                    let _ = write!(out, "{}", *v as i64);
+                } else {
+                    let _ = write!(out, "{v}");
+                }
+            }
+            Json::Str(s) => {
+                out.push('"');
+                for c in s.chars() {
+                    match c {
+                        '"' => out.push_str("\\\""),
+                        '\\' => out.push_str("\\\\"),
+                        '\n' => out.push_str("\\n"),
+                        '\t' => out.push_str("\\t"),
+                        '\r' => out.push_str("\\r"),
+                        c if (c as u32) < 0x20 => {
+                            let _ = write!(out, "\\u{:04x}", c as u32);
+                        }
+                        c => out.push(c),
+                    }
+                }
+                out.push('"');
+            }
+            Json::Arr(items) => {
+                out.push('[');
+                for (i, item) in items.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    item.render_into(out);
+                }
+                out.push(']');
+            }
+            Json::Obj(fields) => {
+                out.push('{');
+                for (i, (k, v)) in fields.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    Json::Str(k.clone()).render_into(out);
+                    out.push(':');
+                    v.render_into(out);
+                }
+                out.push('}');
+            }
+        }
+    }
+}
+
+/// Fixed-width console table used by the bench harness output.
+pub struct Table {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(header: &[&str]) -> Self {
+        Table {
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.header.len(), "table column mismatch");
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn render(&self) -> String {
+        let cols = self.header.len();
+        let mut widths: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, cell) in row.iter().enumerate() {
+                widths[i] = widths[i].max(cell.len());
+            }
+        }
+        let mut out = String::new();
+        let fmt_row = |cells: &[String], widths: &[usize]| -> String {
+            let parts: Vec<String> = cells
+                .iter()
+                .enumerate()
+                .map(|(i, c)| format!("{:>w$}", c, w = widths[i]))
+                .collect();
+            parts.join("  ")
+        };
+        let _ = writeln!(out, "{}", fmt_row(&self.header, &widths));
+        let _ = writeln!(
+            out,
+            "{}",
+            widths
+                .iter()
+                .map(|w| "-".repeat(*w))
+                .collect::<Vec<_>>()
+                .join("  ")
+        );
+        for row in &self.rows {
+            let _ = writeln!(out, "{}", fmt_row(row, &widths));
+        }
+        let _ = cols;
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn csv_escaping_and_rows() {
+        let mut w = CsvWriter::new(&["a", "b,c"]);
+        w.row(&["x", "y\"z"]);
+        w.row_f64(&[1.0, 0.5]);
+        let s = w.contents();
+        assert!(s.starts_with("a,\"b,c\"\n"));
+        assert!(s.contains("x,\"y\"\"z\"\n"));
+        assert!(s.contains("1.0000000000e0,5.0000000000e-1"));
+    }
+
+    #[test]
+    #[should_panic(expected = "csv column count mismatch")]
+    fn csv_col_mismatch_panics() {
+        let mut w = CsvWriter::new(&["a"]);
+        w.row(&["x", "y"]);
+    }
+
+    #[test]
+    fn json_rendering() {
+        let j = Json::Obj(vec![
+            ("name".into(), Json::Str("fig\"2\"".into())),
+            ("n".into(), Json::Num(24.0)),
+            ("vals".into(), Json::Arr(vec![Json::Num(0.5), Json::Null, Json::Bool(true)])),
+        ]);
+        assert_eq!(
+            j.render(),
+            r#"{"name":"fig\"2\"","n":24,"vals":[0.5,null,true]}"#
+        );
+    }
+
+    #[test]
+    fn table_alignment() {
+        let mut t = Table::new(&["alg", "rounds"]);
+        t.row(&["CQ-GGADMM".into(), "120".into()]);
+        t.row(&["C-ADMM".into(), "20000".into()]);
+        let s = t.render();
+        assert!(s.contains("alg"));
+        assert!(s.lines().count() == 4);
+    }
+}

@@ -1,0 +1,60 @@
+//! # cq-ggadmm — Communication-Efficient Decentralized Learning
+//!
+//! A production-grade reproduction of *"Communication Efficient Distributed
+//! Learning with Censored, Quantized, and Generalized Group ADMM"*
+//! (Ben Issaid, Elgabli, Park, Bennis — 2020).
+//!
+//! The crate implements the full algorithm family of the paper —
+//! **GGADMM** (group ADMM over arbitrary bipartite+connected topologies),
+//! **C-GGADMM** (per-link censoring), **CQ-GGADMM** (censoring + adaptive
+//! stochastic quantization) — together with the paper's baselines
+//! (**C-ADMM** of Liu et al. 2019, chain **GADMM**, decentralized gradient
+//! descent), the wireless communication-energy model of §7, and a bench
+//! harness that regenerates every figure of the evaluation.
+//!
+//! ## Architecture (three layers, Python never on the hot path)
+//!
+//! * **Layer 3 (this crate)** — the decentralized runtime: topology
+//!   management, head/tail phase scheduling, censoring gates, quantized
+//!   payload codec, per-worker actors, metrics and the experiment harness.
+//! * **Layer 2 (JAX, build time)** — per-worker subproblem solvers lowered
+//!   AOT to HLO text in `artifacts/` (see `python/compile/model.py`).
+//! * **Layer 1 (Pallas, build time)** — the compute hot-spot kernels the
+//!   L2 solvers call (`python/compile/kernels/`).
+//!
+//! [`runtime`] loads the HLO artifacts through PJRT (`xla` crate) and
+//! executes them on the per-iteration hot path; [`solver`] provides the
+//! bit-identical native Rust implementation used for differential testing
+//! and as a fallback when no artifact matches a shape.
+
+pub mod algs;
+pub mod analysis;
+pub mod censor;
+pub mod cli;
+pub mod comm;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod experiments;
+pub mod graph;
+pub mod io;
+pub mod linalg;
+pub mod metrics;
+pub mod parallel;
+pub mod quant;
+pub mod runtime;
+pub mod solver;
+pub mod testing;
+pub mod util;
+
+/// Convenience re-exports for examples and downstream users.
+pub mod prelude {
+    pub use crate::algs::{AlgSpec, Problem, Run, RunOptions, Schedule};
+    pub use crate::censor::CensorConfig;
+    pub use crate::data::Dataset;
+    pub use crate::graph::Topology;
+    pub use crate::linalg::Mat;
+    pub use crate::metrics::Trace;
+    pub use crate::quant::QuantConfig;
+    pub use crate::util::rng::Pcg64;
+}

@@ -1,0 +1,150 @@
+//! Cholesky factorization of symmetric positive-definite matrices.
+//!
+//! Used on the one-time setup path: the GGADMM linear-regression update
+//! matrix `A = X^T X + rho d_n I` is factored (or inverted for the AOT
+//! artifact input) once per worker; every iteration is then a cheap solve.
+
+use super::Mat;
+
+/// Lower-triangular Cholesky factor `L` with `L L^T = A`.
+#[derive(Clone, Debug)]
+pub struct Cholesky {
+    l: Mat,
+}
+
+impl Cholesky {
+    /// Factor an SPD matrix. Returns `None` if the matrix is not positive
+    /// definite (within floating-point tolerance).
+    pub fn new(a: &Mat) -> Option<Cholesky> {
+        assert_eq!(a.rows(), a.cols(), "cholesky needs square");
+        let n = a.rows();
+        let mut l = Mat::zeros(n, n);
+        for i in 0..n {
+            for j in 0..=i {
+                let mut sum = a[(i, j)];
+                for k in 0..j {
+                    sum -= l[(i, k)] * l[(j, k)];
+                }
+                if i == j {
+                    if sum <= 0.0 {
+                        return None;
+                    }
+                    l[(i, j)] = sum.sqrt();
+                } else {
+                    l[(i, j)] = sum / l[(j, j)];
+                }
+            }
+        }
+        Some(Cholesky { l })
+    }
+
+    /// The lower factor.
+    pub fn l(&self) -> &Mat {
+        &self.l
+    }
+
+    /// Solve `A x = b`.
+    pub fn solve(&self, b: &[f64]) -> Vec<f64> {
+        let n = self.l.rows();
+        assert_eq!(b.len(), n, "solve dimension mismatch");
+        // forward: L y = b
+        let mut y = vec![0.0; n];
+        for i in 0..n {
+            let mut sum = b[i];
+            for k in 0..i {
+                sum -= self.l[(i, k)] * y[k];
+            }
+            y[i] = sum / self.l[(i, i)];
+        }
+        // backward: L^T x = y
+        let mut x = vec![0.0; n];
+        for i in (0..n).rev() {
+            let mut sum = y[i];
+            for k in i + 1..n {
+                sum -= self.l[(k, i)] * x[k];
+            }
+            x[i] = sum / self.l[(i, i)];
+        }
+        x
+    }
+
+    /// Dense inverse `A^{-1}` (used to feed the `linear_update` artifact,
+    /// whose fused kernel wants an explicit matrix).
+    pub fn inverse(&self) -> Mat {
+        let n = self.l.rows();
+        let mut inv = Mat::zeros(n, n);
+        let mut e = vec![0.0; n];
+        for j in 0..n {
+            e[j] = 1.0;
+            let col = self.solve(&e);
+            e[j] = 0.0;
+            for i in 0..n {
+                inv[(i, j)] = col[i];
+            }
+        }
+        inv
+    }
+
+    /// log-determinant of `A` (handy for conditioning diagnostics).
+    pub fn logdet(&self) -> f64 {
+        (0..self.l.rows()).map(|i| self.l[(i, i)].ln()).sum::<f64>() * 2.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    fn random_spd(n: usize, seed: u64) -> Mat {
+        let mut rng = Pcg64::new(seed);
+        let mut b = Mat::zeros(n, n);
+        for i in 0..n {
+            for j in 0..n {
+                b[(i, j)] = rng.normal();
+            }
+        }
+        b.t().matmul(&b).add_diag(n as f64 * 0.1)
+    }
+
+    #[test]
+    fn factor_and_solve() {
+        let a = random_spd(12, 0);
+        let ch = Cholesky::new(&a).unwrap();
+        let x_true: Vec<f64> = (0..12).map(|i| (i as f64) - 5.0).collect();
+        let b = a.matvec(&x_true);
+        let x = ch.solve(&b);
+        for (xs, xt) in x.iter().zip(&x_true) {
+            assert!((xs - xt).abs() < 1e-8, "{xs} vs {xt}");
+        }
+    }
+
+    #[test]
+    fn l_times_lt_is_a() {
+        let a = random_spd(8, 1);
+        let ch = Cholesky::new(&a).unwrap();
+        let rec = ch.l().matmul(&ch.l().t());
+        assert!(a.sub(&rec).max_abs() < 1e-9);
+    }
+
+    #[test]
+    fn inverse_is_inverse() {
+        let a = random_spd(10, 2);
+        let inv = Cholesky::new(&a).unwrap().inverse();
+        let id = a.matmul(&inv);
+        assert!(id.sub(&Mat::eye(10)).max_abs() < 1e-8);
+    }
+
+    #[test]
+    fn rejects_indefinite() {
+        let a = Mat::from_rows(&[&[1.0, 2.0], &[2.0, 1.0]]); // eigenvalues 3, -1
+        assert!(Cholesky::new(&a).is_none());
+    }
+
+    #[test]
+    fn logdet_matches_direct() {
+        let a = Mat::from_rows(&[&[4.0, 0.0], &[0.0, 9.0]]);
+        let ch = Cholesky::new(&a).unwrap();
+        assert!((ch.logdet() - (36.0f64).ln()).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,159 @@
+//! LU factorization with partial pivoting (general square systems).
+//!
+//! The centralized reference solver and the spectral analysis need solves
+//! of matrices that are not necessarily SPD; this complements `chol.rs`.
+
+use super::Mat;
+
+/// Packed LU factors with a row-permutation vector.
+#[derive(Clone, Debug)]
+pub struct Lu {
+    lu: Mat,
+    perm: Vec<usize>,
+    sign: f64,
+}
+
+impl Lu {
+    /// Factor a square matrix. Returns `None` if (numerically) singular.
+    pub fn new(a: &Mat) -> Option<Lu> {
+        assert_eq!(a.rows(), a.cols(), "lu needs square");
+        let n = a.rows();
+        let mut lu = a.clone();
+        let mut perm: Vec<usize> = (0..n).collect();
+        let mut sign = 1.0;
+        for k in 0..n {
+            // pivot
+            let mut p = k;
+            let mut best = lu[(k, k)].abs();
+            for i in k + 1..n {
+                let v = lu[(i, k)].abs();
+                if v > best {
+                    best = v;
+                    p = i;
+                }
+            }
+            if best < 1e-14 {
+                return None;
+            }
+            if p != k {
+                for j in 0..n {
+                    let t = lu[(k, j)];
+                    lu[(k, j)] = lu[(p, j)];
+                    lu[(p, j)] = t;
+                }
+                perm.swap(k, p);
+                sign = -sign;
+            }
+            let pivot = lu[(k, k)];
+            for i in k + 1..n {
+                let f = lu[(i, k)] / pivot;
+                lu[(i, k)] = f;
+                for j in k + 1..n {
+                    let v = lu[(k, j)];
+                    lu[(i, j)] -= f * v;
+                }
+            }
+        }
+        Some(Lu { lu, perm, sign })
+    }
+
+    /// Solve `A x = b`.
+    pub fn solve(&self, b: &[f64]) -> Vec<f64> {
+        let n = self.lu.rows();
+        assert_eq!(b.len(), n, "solve dimension mismatch");
+        // apply permutation, forward substitute (unit lower)
+        let mut y = vec![0.0; n];
+        for i in 0..n {
+            let mut sum = b[self.perm[i]];
+            for k in 0..i {
+                sum -= self.lu[(i, k)] * y[k];
+            }
+            y[i] = sum;
+        }
+        // back substitute (upper)
+        let mut x = vec![0.0; n];
+        for i in (0..n).rev() {
+            let mut sum = y[i];
+            for k in i + 1..n {
+                sum -= self.lu[(i, k)] * x[k];
+            }
+            x[i] = sum / self.lu[(i, i)];
+        }
+        x
+    }
+
+    /// Determinant.
+    pub fn det(&self) -> f64 {
+        let mut d = self.sign;
+        for i in 0..self.lu.rows() {
+            d *= self.lu[(i, i)];
+        }
+        d
+    }
+
+    /// Dense inverse.
+    pub fn inverse(&self) -> Mat {
+        let n = self.lu.rows();
+        let mut inv = Mat::zeros(n, n);
+        let mut e = vec![0.0; n];
+        for j in 0..n {
+            e[j] = 1.0;
+            let col = self.solve(&e);
+            e[j] = 0.0;
+            for i in 0..n {
+                inv[(i, j)] = col[i];
+            }
+        }
+        inv
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    fn random_mat(n: usize, seed: u64) -> Mat {
+        let mut rng = Pcg64::new(seed);
+        let mut a = Mat::zeros(n, n);
+        for i in 0..n {
+            for j in 0..n {
+                a[(i, j)] = rng.normal();
+            }
+        }
+        a
+    }
+
+    #[test]
+    fn solve_random_system() {
+        let a = random_mat(15, 3);
+        let lu = Lu::new(&a).unwrap();
+        let x_true: Vec<f64> = (0..15).map(|i| (i as f64 * 0.3).sin()).collect();
+        let b = a.matvec(&x_true);
+        let x = lu.solve(&b);
+        for (xs, xt) in x.iter().zip(&x_true) {
+            assert!((xs - xt).abs() < 1e-8);
+        }
+    }
+
+    #[test]
+    fn det_of_known() {
+        let a = Mat::from_rows(&[&[2.0, 0.0], &[0.0, 3.0]]);
+        assert!((Lu::new(&a).unwrap().det() - 6.0).abs() < 1e-12);
+        let b = Mat::from_rows(&[&[0.0, 1.0], &[1.0, 0.0]]); // det -1, needs pivot
+        assert!((Lu::new(&b).unwrap().det() + 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn inverse_roundtrip() {
+        let a = random_mat(9, 4);
+        let inv = Lu::new(&a).unwrap().inverse();
+        assert!(a.matmul(&inv).sub(&Mat::eye(9)).max_abs() < 1e-8);
+    }
+
+    #[test]
+    fn singular_detected() {
+        let a = Mat::from_rows(&[&[1.0, 2.0], &[2.0, 4.0]]);
+        assert!(Lu::new(&a).is_none());
+    }
+}

@@ -1,0 +1,147 @@
+//! Spectral tools for the topology analysis of Theorems 2 and 3.
+//!
+//! The linear-rate constant of the paper depends on `sigma_max(C)`,
+//! `sigma_max(M_-)` and the smallest **non-zero** singular value
+//! `sigma~_min(M_-)` of the signed incidence matrix.  We compute the
+//! largest singular value by power iteration on `A^T A` and full symmetric
+//! spectra with cyclic Jacobi (matrices here are at most N+|E| ~ 100 wide).
+
+use super::Mat;
+
+/// Largest singular value of `a` via power iteration on `a^T a`.
+pub fn power_iteration_sigma_max(a: &Mat, iters: usize) -> f64 {
+    let n = a.cols();
+    if n == 0 || a.rows() == 0 {
+        return 0.0;
+    }
+    // deterministic start vector with all-nonzero entries
+    let mut v: Vec<f64> = (0..n).map(|i| 1.0 + (i as f64 * 0.7).sin() * 0.3).collect();
+    let mut lambda = 0.0;
+    for _ in 0..iters {
+        let av = a.matvec(&v);
+        let atav = a.t_matvec(&av);
+        let norm = atav.iter().map(|x| x * x).sum::<f64>().sqrt();
+        if norm < 1e-300 {
+            return 0.0;
+        }
+        lambda = norm;
+        for (vi, yi) in v.iter_mut().zip(&atav) {
+            *vi = yi / norm;
+        }
+    }
+    lambda.sqrt()
+}
+
+/// Full eigendecomposition of a symmetric matrix by cyclic Jacobi.
+/// Returns eigenvalues in ascending order.
+pub fn symmetric_eigen(a: &Mat) -> Vec<f64> {
+    assert!(a.is_symmetric(1e-9), "symmetric_eigen needs symmetric input");
+    let n = a.rows();
+    let mut m = a.clone();
+    let max_sweeps = 64;
+    for _ in 0..max_sweeps {
+        let mut off = 0.0;
+        for i in 0..n {
+            for j in i + 1..n {
+                off += m[(i, j)] * m[(i, j)];
+            }
+        }
+        if off.sqrt() < 1e-12 * (1.0 + m.max_abs()) {
+            break;
+        }
+        for p in 0..n {
+            for q in p + 1..n {
+                let apq = m[(p, q)];
+                if apq.abs() < 1e-300 {
+                    continue;
+                }
+                let app = m[(p, p)];
+                let aqq = m[(q, q)];
+                let theta = 0.5 * (aqq - app) / apq;
+                let t = theta.signum() / (theta.abs() + (theta * theta + 1.0).sqrt());
+                let c = 1.0 / (t * t + 1.0).sqrt();
+                let s = t * c;
+                // rotate rows/cols p and q
+                for k in 0..n {
+                    let akp = m[(k, p)];
+                    let akq = m[(k, q)];
+                    m[(k, p)] = c * akp - s * akq;
+                    m[(k, q)] = s * akp + c * akq;
+                }
+                for k in 0..n {
+                    let apk = m[(p, k)];
+                    let aqk = m[(q, k)];
+                    m[(p, k)] = c * apk - s * aqk;
+                    m[(q, k)] = s * apk + c * aqk;
+                }
+            }
+        }
+    }
+    let mut eig: Vec<f64> = (0..n).map(|i| m[(i, i)]).collect();
+    eig.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    eig
+}
+
+/// Smallest non-zero singular value of `a` (zero modes below `tol` are
+/// skipped) — the paper's `sigma~_min(M_-)`.
+pub fn min_nonzero_singular(a: &Mat, tol: f64) -> f64 {
+    let g = if a.rows() >= a.cols() {
+        a.t().matmul(a)
+    } else {
+        a.matmul(&a.t())
+    };
+    let eig = symmetric_eigen(&g);
+    for e in eig {
+        if e > tol {
+            return e.sqrt();
+        }
+    }
+    0.0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sigma_max_of_diagonal() {
+        let a = Mat::from_rows(&[&[3.0, 0.0], &[0.0, 2.0]]);
+        let s = power_iteration_sigma_max(&a, 200);
+        assert!((s - 3.0).abs() < 1e-6, "s={s}");
+    }
+
+    #[test]
+    fn sigma_max_of_rectangular() {
+        // singular values of [[1,0],[0,1],[1,1]] are sqrt(3), 1
+        let a = Mat::from_rows(&[&[1.0, 0.0], &[0.0, 1.0], &[1.0, 1.0]]);
+        let s = power_iteration_sigma_max(&a, 300);
+        assert!((s - 3f64.sqrt()).abs() < 1e-6, "s={s}");
+    }
+
+    #[test]
+    fn jacobi_eigenvalues_known() {
+        let a = Mat::from_rows(&[&[2.0, 1.0], &[1.0, 2.0]]);
+        let e = symmetric_eigen(&a);
+        assert!((e[0] - 1.0).abs() < 1e-9 && (e[1] - 3.0).abs() < 1e-9, "{e:?}");
+    }
+
+    #[test]
+    fn jacobi_trace_preserved() {
+        let a = Mat::from_rows(&[
+            &[4.0, 1.0, 0.5],
+            &[1.0, 3.0, -0.2],
+            &[0.5, -0.2, 1.0],
+        ]);
+        let e = symmetric_eigen(&a);
+        let trace: f64 = e.iter().sum();
+        assert!((trace - 8.0).abs() < 1e-8);
+    }
+
+    #[test]
+    fn min_nonzero_skips_null_space() {
+        // rank-1 matrix: singular values {sqrt(2), 0}
+        let a = Mat::from_rows(&[&[1.0, 1.0], &[0.0, 0.0]]);
+        let s = min_nonzero_singular(&a, 1e-9);
+        assert!((s - 2f64.sqrt()).abs() < 1e-6, "s={s}");
+    }
+}

@@ -1,0 +1,379 @@
+//! `cq-ggadmm` — the launcher CLI.
+//!
+//! Subcommands regenerate every table/figure of the paper, run single
+//! configurations (native or PJRT backend), inspect topologies and run the
+//! threaded coordinator demo.  Run with `--help` for details.
+
+use cq_ggadmm::algs::{AlgSpec, Problem, Run, RunOptions};
+use cq_ggadmm::cli::{Args, Cli, Command};
+use cq_ggadmm::config::{DatasetId, ExperimentConfig};
+use cq_ggadmm::coordinator::{Coordinator, CoordinatorOptions};
+use cq_ggadmm::data;
+use cq_ggadmm::experiments::{self, ExecOptions};
+use cq_ggadmm::graph::{spectral, Topology};
+use cq_ggadmm::metrics::save_traces;
+use cq_ggadmm::solver::Backend;
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+fn cli() -> Cli {
+    Cli::new("cq-ggadmm", "CQ-GGADMM decentralized learning reproduction")
+        .command(
+            Command::new("exp", "regenerate a paper figure (fig2|fig3|fig4|fig5|fig6|all)")
+                .opt("figure", Some("fig2"), "figure id")
+                .opt("out", Some("results"), "output directory for CSV traces")
+                .opt("backend", Some("native"), "native|pjrt")
+                .opt("artifacts", Some("artifacts"), "artifacts dir (pjrt backend)")
+                .opt("threads", Some("1"), "solver threads (native backend)")
+                .opt("record-every", Some("1"), "trace sampling stride")
+                .switch("quiet", "suppress the summary tables"),
+        )
+        .command(
+            Command::new("run", "run one algorithm on one dataset")
+                .opt("dataset", Some("synth-linear"), "synth-linear|bodyfat|synth-logistic|derm")
+                .opt("alg", Some("cq-ggadmm"), "ggadmm|c-ggadmm|q-ggadmm|cq-ggadmm|c-admm|gadmm|dgd")
+                .opt("workers", Some("24"), "number of workers")
+                .opt("connectivity", Some("0.3"), "graph connectivity ratio p")
+                .opt("iters", Some("300"), "iterations")
+                .opt("rho", Some("1.0"), "ADMM penalty rho")
+                .opt("mu0", Some("0.01"), "logistic ridge mu0")
+                .opt("tau0", Some("1.0"), "censoring threshold tau0")
+                .opt("xi", Some("0.8"), "censoring decay xi")
+                .opt("omega", Some("0.995"), "quantizer step decay omega")
+                .opt("bits0", Some("2"), "initial quantizer bits")
+                .opt("seed", Some("1"), "random seed")
+                .opt("backend", Some("native"), "native|pjrt")
+                .opt("artifacts", Some("artifacts"), "artifacts dir (pjrt backend)")
+                .opt("config", None, "load parameters from a TOML config file")
+                .opt("out", None, "write the trace CSV here"),
+        )
+        .command(
+            Command::new("coordinator", "run the threaded message-passing coordinator demo")
+                .opt("dataset", Some("synth-linear"), "dataset id")
+                .opt("alg", Some("cq-ggadmm"), "algorithm")
+                .opt("workers", Some("12"), "number of workers")
+                .opt("iters", Some("150"), "iterations")
+                .opt("seed", Some("1"), "random seed"),
+        )
+        .command(Command::new("datasets", "print Table 1 (dataset inventory)"))
+        .command(
+            Command::new("rates", "empirical vs Theorem-3 convergence rates across densities")
+                .opt("workers", Some("16"), "number of workers")
+                .opt("iters", Some("150"), "iterations per study"),
+        )
+        .command(
+            Command::new("sweep", "sensitivity/ablation sweeps (rho|tau0|bits|components)")
+                .opt("study", Some("components"), "rho|tau0|bits|components")
+                .opt("iters", Some("250"), "iterations per point")
+                .opt("seed", Some("41"), "random seed"),
+        )
+        .command(
+            Command::new("topo", "inspect a generated topology's spectral constants")
+                .opt("workers", Some("18"), "number of workers")
+                .opt("connectivity", Some("0.3"), "connectivity ratio")
+                .opt("seed", Some("1"), "seed"),
+        )
+}
+
+fn parse_alg(name: &str, a: &Args) -> Result<AlgSpec, String> {
+    let tau0 = a.get_f64("tau0")?.unwrap_or(1.0);
+    let xi = a.get_f64("xi")?.unwrap_or(0.8);
+    let omega = a.get_f64("omega")?.unwrap_or(0.995);
+    let bits0 = a.get_usize("bits0")?.unwrap_or(2) as u32;
+    match name {
+        "ggadmm" => Ok(AlgSpec::ggadmm()),
+        "c-ggadmm" => Ok(AlgSpec::c_ggadmm(tau0, xi)),
+        "q-ggadmm" => Ok(AlgSpec::q_ggadmm(omega, bits0)),
+        "cq-ggadmm" => Ok(AlgSpec::cq_ggadmm(tau0, xi, omega, bits0)),
+        "c-admm" => Ok(AlgSpec::c_admm(tau0, xi)),
+        "gadmm" => Ok(AlgSpec::gadmm_chain()),
+        _ => Err(format!("unknown algorithm '{name}'")),
+    }
+}
+
+fn exec_options(a: &Args) -> Result<ExecOptions, String> {
+    let backend = Backend::parse(&a.get_or("backend", "native"))?;
+    Ok(ExecOptions {
+        backend,
+        artifacts_dir: match backend {
+            Backend::Pjrt => Some(PathBuf::from(a.get_or("artifacts", "artifacts"))),
+            Backend::Native => None,
+        },
+        threads: a.get_usize("threads")?.unwrap_or(1),
+        record_every: a.get_u64("record-every")?.unwrap_or(1),
+    })
+}
+
+fn cmd_exp(a: &Args) -> Result<(), String> {
+    let exec = exec_options(a)?;
+    let out = PathBuf::from(a.get_or("out", "results"));
+    let quiet = a.has("quiet");
+    let figure = a.get_or("figure", "fig2");
+    let ids: Vec<String> = if figure == "all" {
+        vec!["fig2", "fig3", "fig4", "fig5", "fig6"]
+            .into_iter()
+            .map(String::from)
+            .collect()
+    } else {
+        vec![figure]
+    };
+    for id in ids {
+        if id == "fig6" {
+            let spec = experiments::fig6();
+            for res in experiments::run_fig6(&spec, &exec) {
+                let path = out.join(format!("{}.csv", res.id));
+                save_traces(&res.traces, &path).map_err(|e| e.to_string())?;
+                if !quiet {
+                    println!("\n=== {} ===\n{}", res.title, res.summary.render());
+                    println!("traces -> {}", path.display());
+                }
+            }
+        } else {
+            let spec = experiments::figure_by_id(&id)
+                .ok_or_else(|| format!("unknown figure '{id}'"))?;
+            let res = experiments::run_figure(&spec, &exec);
+            let path = out.join(format!("{}.csv", res.id));
+            save_traces(&res.traces, &path).map_err(|e| e.to_string())?;
+            if !quiet {
+                println!("\n=== {} ===\n{}", res.title, res.summary.render());
+                println!("traces -> {}", path.display());
+            }
+        }
+    }
+    Ok(())
+}
+
+fn cmd_run(a: &Args) -> Result<(), String> {
+    // optional config file, overridden by explicit flags
+    let mut cfg = match a.get("config") {
+        Some(path) => {
+            let text = std::fs::read_to_string(path).map_err(|e| e.to_string())?;
+            ExperimentConfig::from_toml(&text)?
+        }
+        None => ExperimentConfig::default(),
+    };
+    if let Some(ds) = a.get("dataset") {
+        cfg.dataset = DatasetId::parse(ds)?;
+    }
+    if let Some(w) = a.get_usize("workers")? {
+        cfg.workers = w;
+    }
+    if let Some(p) = a.get_f64("connectivity")? {
+        cfg.connectivity = p;
+    }
+    if let Some(v) = a.get_usize("iters")? {
+        cfg.iters = v;
+    }
+    if let Some(v) = a.get_f64("rho")? {
+        cfg.rho = v;
+    }
+    if let Some(v) = a.get_f64("mu0")? {
+        cfg.mu0 = v;
+    }
+    if let Some(v) = a.get_u64("seed")? {
+        cfg.seed = v;
+    }
+    cfg.validate()?;
+
+    let alg_name = a.get_or("alg", "cq-ggadmm");
+    let ds = data::load(cfg.dataset, cfg.seed);
+    let topo = if alg_name == "gadmm" {
+        Topology::chain(cfg.workers)
+    } else {
+        Topology::random_bipartite(cfg.workers, cfg.connectivity, cfg.seed)
+    };
+    let problem = Problem::new(&ds, &topo, cfg.rho, cfg.mu0, cfg.seed);
+    println!(
+        "dataset={} d={} workers={} edges={} f*={:.6e}",
+        ds.name,
+        problem.d,
+        topo.n(),
+        topo.edges().len(),
+        problem.f_star
+    );
+
+    let trace = if alg_name == "dgd" {
+        cq_ggadmm::algs::dgd::run_dgd(
+            &problem,
+            &topo,
+            0.01,
+            cfg.iters as u64,
+            cq_ggadmm::comm::EnergyParams::default(),
+        )
+    } else {
+        let spec = parse_alg(&alg_name, a)?;
+        let backend = Backend::parse(&a.get_or("backend", "native"))?;
+        let opts = RunOptions {
+            backend,
+            threads: cfg.threads.max(1),
+            seed: cfg.seed,
+            record_every: 1,
+            artifacts_dir: match backend {
+                Backend::Pjrt => Some(PathBuf::from(a.get_or("artifacts", "artifacts"))),
+                Backend::Native => None,
+            },
+            ..RunOptions::default()
+        };
+        let mut run = Run::new(problem, topo, spec, opts);
+        run.run(cfg.iters as u64)
+    };
+
+    let last = trace.points.last().expect("no trace points");
+    println!(
+        "{}: iters={} gap={:.3e} rounds={} bits={} energy={:.3e} J",
+        trace.algorithm,
+        last.iteration,
+        last.loss_gap,
+        last.cum_rounds,
+        last.cum_bits,
+        last.cum_energy_j
+    );
+    for target in [1e-4, 1e-6] {
+        if let Some(p) = trace.first_below(target) {
+            println!(
+                "  -> {target:.0e} at iter={} rounds={} bits={} energy={:.3e} J",
+                p.iteration, p.cum_rounds, p.cum_bits, p.cum_energy_j
+            );
+        }
+    }
+    if let Some(path) = a.get("out") {
+        trace
+            .save_csv(std::path::Path::new(path))
+            .map_err(|e| e.to_string())?;
+        println!("trace -> {path}");
+    }
+    Ok(())
+}
+
+fn cmd_coordinator(a: &Args) -> Result<(), String> {
+    let dataset = DatasetId::parse(&a.get_or("dataset", "synth-linear"))?;
+    let workers = a.get_usize("workers")?.unwrap_or(12);
+    let iters = a.get_u64("iters")?.unwrap_or(150);
+    let seed = a.get_u64("seed")?.unwrap_or(1);
+    let spec = parse_alg(&a.get_or("alg", "cq-ggadmm"), a)?;
+    let ds = data::load(dataset, seed);
+    let topo = Topology::random_bipartite(workers, 0.3, seed);
+    let problem = Problem::new(&ds, &topo, 1.0, 1e-2, seed);
+    println!(
+        "spawning {} worker threads ({} edges), algorithm {}",
+        workers,
+        topo.edges().len(),
+        spec.name
+    );
+    let coord = Coordinator::spawn(
+        problem,
+        topo,
+        spec,
+        CoordinatorOptions { seed, ..CoordinatorOptions::default() },
+    );
+    let trace = coord.run(iters);
+    let last = trace.points.last().unwrap();
+    println!(
+        "{}: iters={} gap={:.3e} rounds={} bits={} energy={:.3e} J",
+        trace.algorithm,
+        last.iteration,
+        last.loss_gap,
+        last.cum_rounds,
+        last.cum_bits,
+        last.cum_energy_j
+    );
+    Ok(())
+}
+
+fn cmd_rates(a: &Args) -> Result<(), String> {
+    let workers = a.get_usize("workers")?.unwrap_or(16);
+    let iters = a.get_u64("iters")?.unwrap_or(150);
+    let studies = experiments::rates::study(&[0.15, 0.3, 0.5, 0.8], workers, 11, iters);
+    println!("{}", experiments::rates::render(&studies).render());
+    Ok(())
+}
+
+fn cmd_sweep(a: &Args) -> Result<(), String> {
+    use cq_ggadmm::experiments::sensitivity as sens;
+    let iters = a.get_u64("iters")?.unwrap_or(250);
+    let seed = a.get_u64("seed")?.unwrap_or(41);
+    let study = a.get_or("study", "components");
+    let (title, points) = match study.as_str() {
+        "rho" => (
+            "rho",
+            sens::rho_sweep(&[0.5, 2.0, 10.0, 30.0, 100.0], iters, seed),
+        ),
+        "tau0" => (
+            "tau0",
+            sens::tau0_sweep(&[0.0, 0.05, 0.1, 0.5, 5.0, 50.0], 0.9, iters, seed),
+        ),
+        "bits" => ("bits0", sens::bits_sweep(&[2, 4, 8, 12], iters, seed)),
+        "components" => ("component", sens::component_ablation(iters, seed)),
+        other => return Err(format!("unknown study '{other}'")),
+    };
+    println!("{}", sens::render(title, &points).render());
+    Ok(())
+}
+
+fn cmd_topo(a: &Args) -> Result<(), String> {
+    let workers = a.get_usize("workers")?.unwrap_or(18);
+    let p = a.get_f64("connectivity")?.unwrap_or(0.3);
+    let seed = a.get_u64("seed")?.unwrap_or(1);
+    let topo = Topology::random_bipartite(workers, p, seed);
+    let consts = spectral::constants(&topo);
+    println!(
+        "workers={} edges={} ratio={:.3} heads={} tails={}",
+        topo.n(),
+        topo.edges().len(),
+        topo.connectivity_ratio(),
+        topo.heads().len(),
+        topo.tails().len()
+    );
+    println!(
+        "sigma_max(C)={:.4} sigma_max(M-)={:.4} sigma~_min(M-)={:.4}",
+        consts.sigma_max_c, consts.sigma_max_m_minus, consts.sigma_min_nz_m_minus
+    );
+    for i in 0..topo.n() {
+        println!(
+            "  worker {i:>2} [{}] degree {} neighbors {:?}",
+            match topo.group(i) {
+                cq_ggadmm::graph::Group::Head => "H",
+                cq_ggadmm::graph::Group::Tail => "T",
+            },
+            topo.degree(i),
+            topo.neighbors(i)
+        );
+    }
+    Ok(())
+}
+
+fn main() -> ExitCode {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let cli = cli();
+    let args = match cli.parse(&argv) {
+        Ok(a) => a,
+        Err(e) => {
+            if e.is_help {
+                println!("{}", e.message);
+                return ExitCode::SUCCESS;
+            }
+            eprintln!("error: {}", e.message);
+            return ExitCode::FAILURE;
+        }
+    };
+    let result = match args.command.as_str() {
+        "exp" => cmd_exp(&args),
+        "run" => cmd_run(&args),
+        "coordinator" => cmd_coordinator(&args),
+        "datasets" => {
+            println!("{}", experiments::table1().render());
+            Ok(())
+        }
+        "rates" => cmd_rates(&args),
+        "sweep" => cmd_sweep(&args),
+        "topo" => cmd_topo(&args),
+        other => Err(format!("unhandled command {other}")),
+    };
+    match result {
+        Ok(()) => ExitCode::SUCCESS,
+        Err(e) => {
+            eprintln!("error: {e}");
+            ExitCode::FAILURE
+        }
+    }
+}

@@ -1,0 +1,183 @@
+//! Run metrics: the loss-gap trace against every x-axis the paper plots
+//! (iterations, cumulative communication rounds, bits, energy).
+
+use crate::io::CsvWriter;
+use std::path::Path;
+
+/// One sampled point of a run.
+#[derive(Clone, Copy, Debug)]
+pub struct TracePoint {
+    pub iteration: u64,
+    /// Objective error `|sum_n f_n(theta_n^k) - f*|`.
+    pub loss_gap: f64,
+    /// Consensus violation `max_(n,m) ||theta_n - theta_m||`.
+    pub consensus_gap: f64,
+    pub cum_rounds: u64,
+    pub cum_bits: u64,
+    pub cum_energy_j: f64,
+}
+
+/// Full trace of a run plus identity metadata.
+#[derive(Clone, Debug)]
+pub struct Trace {
+    pub algorithm: String,
+    pub dataset: String,
+    pub points: Vec<TracePoint>,
+}
+
+impl Trace {
+    pub fn new(algorithm: &str, dataset: &str) -> Trace {
+        Trace {
+            algorithm: algorithm.to_string(),
+            dataset: dataset.to_string(),
+            points: Vec::new(),
+        }
+    }
+
+    pub fn push(&mut self, p: TracePoint) {
+        self.points.push(p);
+    }
+
+    /// Final objective error.
+    pub fn last_gap(&self) -> f64 {
+        self.points.last().map(|p| p.loss_gap).unwrap_or(f64::INFINITY)
+    }
+
+    /// First point at which the loss gap drops below `target`; returns the
+    /// x-coordinates the paper compares schemes at.
+    pub fn first_below(&self, target: f64) -> Option<&TracePoint> {
+        self.points.iter().find(|p| p.loss_gap <= target)
+    }
+
+    /// Empirical linear-rate fit: least-squares slope of
+    /// `log(gap_k)` over the window where the gap is decreasing and
+    /// above numerical noise. Returns the per-iteration contraction factor
+    /// `exp(slope)`.
+    pub fn fitted_rate(&self) -> Option<f64> {
+        let pts: Vec<(f64, f64)> = self
+            .points
+            .iter()
+            .filter(|p| p.loss_gap > 1e-13 && p.loss_gap.is_finite())
+            .map(|p| (p.iteration as f64, p.loss_gap.ln()))
+            .collect();
+        if pts.len() < 4 {
+            return None;
+        }
+        let n = pts.len() as f64;
+        let sx: f64 = pts.iter().map(|(x, _)| x).sum();
+        let sy: f64 = pts.iter().map(|(_, y)| y).sum();
+        let sxx: f64 = pts.iter().map(|(x, _)| x * x).sum();
+        let sxy: f64 = pts.iter().map(|(x, y)| x * y).sum();
+        let denom = n * sxx - sx * sx;
+        if denom.abs() < 1e-12 {
+            return None;
+        }
+        let slope = (n * sxy - sx * sy) / denom;
+        Some(slope.exp())
+    }
+
+    /// Write the trace as CSV: one row per sampled iteration.
+    pub fn to_csv(&self) -> CsvWriter {
+        let mut w = CsvWriter::new(&[
+            "algorithm",
+            "dataset",
+            "iteration",
+            "loss_gap",
+            "consensus_gap",
+            "cum_rounds",
+            "cum_bits",
+            "cum_energy_j",
+        ]);
+        for p in &self.points {
+            w.row(&[
+                &self.algorithm,
+                &self.dataset,
+                &p.iteration.to_string(),
+                &format!("{:.10e}", p.loss_gap),
+                &format!("{:.10e}", p.consensus_gap),
+                &p.cum_rounds.to_string(),
+                &p.cum_bits.to_string(),
+                &format!("{:.10e}", p.cum_energy_j),
+            ]);
+        }
+        w
+    }
+
+    pub fn save_csv(&self, path: &Path) -> std::io::Result<()> {
+        self.to_csv().save(path)
+    }
+}
+
+/// Save several traces into one CSV (what the figure benches emit).
+pub fn save_traces(traces: &[Trace], path: &Path) -> std::io::Result<()> {
+    let mut w = CsvWriter::new(&[
+        "algorithm",
+        "dataset",
+        "iteration",
+        "loss_gap",
+        "consensus_gap",
+        "cum_rounds",
+        "cum_bits",
+        "cum_energy_j",
+    ]);
+    for t in traces {
+        for p in &t.points {
+            w.row(&[
+                &t.algorithm,
+                &t.dataset,
+                &p.iteration.to_string(),
+                &format!("{:.10e}", p.loss_gap),
+                &format!("{:.10e}", p.consensus_gap),
+                &p.cum_rounds.to_string(),
+                &p.cum_bits.to_string(),
+                &format!("{:.10e}", p.cum_energy_j),
+            ]);
+        }
+    }
+    w.save(path)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mk_trace(gaps: &[f64]) -> Trace {
+        let mut t = Trace::new("test", "ds");
+        for (i, &g) in gaps.iter().enumerate() {
+            t.push(TracePoint {
+                iteration: i as u64,
+                loss_gap: g,
+                consensus_gap: g / 10.0,
+                cum_rounds: (i as u64) * 10,
+                cum_bits: (i as u64) * 1000,
+                cum_energy_j: i as f64 * 0.1,
+            });
+        }
+        t
+    }
+
+    #[test]
+    fn first_below_and_last_gap() {
+        let t = mk_trace(&[1.0, 0.1, 0.01, 0.001]);
+        assert_eq!(t.last_gap(), 0.001);
+        let p = t.first_below(0.05).unwrap();
+        assert_eq!(p.iteration, 2);
+        assert!(t.first_below(1e-9).is_none());
+    }
+
+    #[test]
+    fn fitted_rate_of_geometric_decay() {
+        let gaps: Vec<f64> = (0..30).map(|k| 0.5f64.powi(k)).collect();
+        let t = mk_trace(&gaps);
+        let r = t.fitted_rate().unwrap();
+        assert!((r - 0.5).abs() < 1e-6, "rate={r}");
+    }
+
+    #[test]
+    fn csv_has_all_rows() {
+        let t = mk_trace(&[1.0, 0.5]);
+        let csv = t.to_csv();
+        assert_eq!(csv.contents().lines().count(), 3);
+        assert!(csv.contents().contains("loss_gap"));
+    }
+}

@@ -1,0 +1,97 @@
+//! Scoped fork-join helper for group-parallel worker updates.
+//!
+//! The head (resp. tail) group of GGADMM updates its primal variables in
+//! parallel; this module gives the coordinator a tiny deterministic
+//! fork-join primitive on `std::thread::scope` (no tokio in the sandbox,
+//! and the workloads are CPU-bound anyway).
+
+/// Run `f(i)` for every `i in 0..n`, distributing across at most
+/// `max_threads` OS threads, and collect results in index order.
+///
+/// Falls back to a plain sequential loop when `n <= 1` or
+/// `max_threads <= 1` (keeps tests deterministic and avoids thread spawn
+/// overhead for tiny groups).
+pub fn map_indexed<T, F>(n: usize, max_threads: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    if n == 0 {
+        return Vec::new();
+    }
+    let threads = max_threads.min(n).max(1);
+    if threads == 1 {
+        return (0..n).map(&f).collect();
+    }
+    let mut out: Vec<Option<T>> = (0..n).map(|_| None).collect();
+    let chunk = n.div_ceil(threads);
+    std::thread::scope(|scope| {
+        let mut rest: &mut [Option<T>] = &mut out;
+        let mut start = 0usize;
+        let mut handles = Vec::new();
+        while start < n {
+            let len = chunk.min(n - start);
+            let (head, tail) = rest.split_at_mut(len);
+            rest = tail;
+            let fref = &f;
+            let base = start;
+            handles.push(scope.spawn(move || {
+                for (off, slot) in head.iter_mut().enumerate() {
+                    *slot = Some(fref(base + off));
+                }
+            }));
+            start += len;
+        }
+        for h in handles {
+            h.join().expect("worker thread panicked");
+        }
+    });
+    out.into_iter().map(|x| x.expect("slot unfilled")).collect()
+}
+
+/// Number of worker threads to use by default (leave one core for the
+/// coordinator/metrics thread).
+pub fn default_threads() -> usize {
+    std::thread::available_parallelism()
+        .map(|n| n.get().saturating_sub(1).max(1))
+        .unwrap_or(1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn results_in_index_order() {
+        let out = map_indexed(100, 8, |i| i * i);
+        assert_eq!(out.len(), 100);
+        for (i, v) in out.iter().enumerate() {
+            assert_eq!(*v, i * i);
+        }
+    }
+
+    #[test]
+    fn sequential_fallback_matches() {
+        let a = map_indexed(10, 1, |i| i + 1);
+        let b = map_indexed(10, 4, |i| i + 1);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn all_indices_visited_once() {
+        let count = AtomicUsize::new(0);
+        let out = map_indexed(37, 5, |i| {
+            count.fetch_add(1, Ordering::SeqCst);
+            i
+        });
+        assert_eq!(count.load(Ordering::SeqCst), 37);
+        assert_eq!(out, (0..37).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn empty_is_empty() {
+        let out: Vec<usize> = map_indexed(0, 4, |i| i);
+        assert!(out.is_empty());
+    }
+}

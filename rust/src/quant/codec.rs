@@ -1,0 +1,126 @@
+//! Wire codec: bit-pack quantized messages into the exact payload the
+//! paper counts (`b*d + b_R + b_b` bits), plus header encode/decode.
+//!
+//! Layout (little-endian bitstream):
+//!   [ radius: f32 (32 bits) ][ bits: u32 (32 bits) ][ d codes of `bits` ]
+
+use super::QuantMessage;
+
+/// Append `width` low bits of `value` to the bitstream.
+fn push_bits(buf: &mut Vec<u8>, bitlen: &mut usize, value: u64, width: u32) {
+    for i in 0..width {
+        let bit = (value >> i) & 1;
+        let byte_idx = *bitlen / 8;
+        if byte_idx == buf.len() {
+            buf.push(0);
+        }
+        if bit == 1 {
+            buf[byte_idx] |= 1 << (*bitlen % 8);
+        }
+        *bitlen += 1;
+    }
+}
+
+/// Read `width` bits starting at `*pos` (advances `*pos`).
+fn read_bits(buf: &[u8], pos: &mut usize, width: u32) -> Option<u64> {
+    let mut out = 0u64;
+    for i in 0..width {
+        let byte_idx = *pos / 8;
+        if byte_idx >= buf.len() {
+            return None;
+        }
+        let bit = (buf[byte_idx] >> (*pos % 8)) & 1;
+        out |= (bit as u64) << i;
+        *pos += 1;
+    }
+    Some(out)
+}
+
+/// Encode a message into its wire bytes. The *bit* length is exactly
+/// `msg.payload_bits()`; the byte vector rounds up to whole bytes.
+pub fn encode(msg: &QuantMessage) -> Vec<u8> {
+    let mut buf = Vec::with_capacity((msg.payload_bits() as usize).div_ceil(8));
+    let mut bitlen = 0usize;
+    push_bits(&mut buf, &mut bitlen, (msg.radius as f32).to_bits() as u64, 32);
+    push_bits(&mut buf, &mut bitlen, msg.bits as u64, 32);
+    for &c in &msg.codes {
+        debug_assert!(msg.bits >= 32 || (c as u64) < (1u64 << msg.bits), "code overflows bit width");
+        push_bits(&mut buf, &mut bitlen, c as u64, msg.bits);
+    }
+    debug_assert_eq!(bitlen as u64, msg.payload_bits());
+    buf
+}
+
+/// Decode wire bytes back into a message; `d` is the (known) model
+/// dimension.  Returns `None` on truncated/garbled input.
+pub fn decode(buf: &[u8], d: usize) -> Option<QuantMessage> {
+    let mut pos = 0usize;
+    let radius = f32::from_bits(read_bits(buf, &mut pos, 32)? as u32) as f64;
+    let bits = read_bits(buf, &mut pos, 32)? as u32;
+    if bits == 0 || bits > 32 || !(radius.is_finite()) || radius < 0.0 {
+        return None;
+    }
+    let mut codes = Vec::with_capacity(d);
+    for _ in 0..d {
+        codes.push(read_bits(buf, &mut pos, bits)? as u32);
+    }
+    Some(QuantMessage { codes, radius, bits })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::prop::check;
+
+    #[test]
+    fn roundtrip_random_messages() {
+        check("codec encode/decode identity", 150, |g| {
+            let d = g.usize_in(0, 128);
+            let bits = g.usize_in(2, 24) as u32;
+            let n_codes = 1u64 << bits;
+            let codes: Vec<u32> = (0..d)
+                .map(|_| (g.u64() % n_codes) as u32)
+                .collect();
+            let radius = (g.f64_in(1e-9, 1e3) as f32) as f64; // f32-representable
+            let msg = QuantMessage { codes, radius, bits };
+            let bytes = encode(&msg);
+            assert_eq!(bytes.len(), (msg.payload_bits() as usize).div_ceil(8));
+            let back = decode(&bytes, d).expect("decode failed");
+            assert_eq!(back, msg);
+        });
+    }
+
+    #[test]
+    fn truncated_input_rejected() {
+        let msg = QuantMessage { codes: vec![1, 2, 3], radius: 0.5, bits: 4 };
+        let bytes = encode(&msg);
+        assert!(decode(&bytes[..bytes.len() - 1], 3).is_none());
+        assert!(decode(&[], 3).is_none());
+    }
+
+    #[test]
+    fn wrong_dimension_detected_or_harmless() {
+        let msg = QuantMessage { codes: vec![7; 10], radius: 1.0, bits: 3 };
+        let bytes = encode(&msg);
+        // asking for more coordinates than encoded must fail
+        assert!(decode(&bytes, 40).is_none());
+    }
+
+    #[test]
+    fn payload_is_dramatically_smaller_than_f32() {
+        let d = 1000;
+        let msg = QuantMessage { codes: vec![1; d], radius: 1.0, bits: 2 };
+        assert!(msg.payload_bits() < (32 * d) as u64 / 10);
+    }
+
+    #[test]
+    fn bit_level_layout_stable() {
+        // golden test: layout must not silently change across refactors
+        let msg = QuantMessage { codes: vec![0b101, 0b011], radius: 1.0, bits: 3 };
+        let bytes = encode(&msg);
+        // radius f32 1.0 = 0x3f800000 little-endian bits first
+        assert_eq!(&bytes[..4], &0x3f800000u32.to_le_bytes());
+        assert_eq!(&bytes[4..8], &3u32.to_le_bytes());
+        assert_eq!(bytes[8], 0b011_101); // first code in low bits
+    }
+}

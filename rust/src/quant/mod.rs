@@ -1,0 +1,326 @@
+//! Adaptive stochastic quantization (paper §5).
+//!
+//! Each worker quantizes the *difference* between its current model and
+//! the reconstruction its neighbors already hold, with an unbiased
+//! probabilistic rounding over `2^b - 1` levels spanning `[-R, R]`
+//! (eqs. (14)-(17)), and reconstructs via eq. (20).  The bit width `b_n^k`
+//! adapts per iteration under rule (18) so the step size shrinks
+//! geometrically (`Delta^k <= omega * Delta^{k-1}`), which the convergence
+//! proof requires.
+//!
+//! [`codec`] bit-packs the integer codes into the exact
+//! `b*d + b_R + b_b`-bit wire payload the paper counts.
+
+pub mod codec;
+
+use crate::util::rng::Pcg64;
+
+/// Static quantizer configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct QuantConfig {
+    /// Initial bit width `b^0` per coordinate.
+    pub bits0: u32,
+    /// Step-size decay `omega` in (0,1).
+    pub omega: f64,
+    /// Hard cap on per-coordinate bits (the paper assumes full precision
+    /// is 32 bits).
+    pub max_bits: u32,
+}
+
+impl Default for QuantConfig {
+    fn default() -> Self {
+        QuantConfig { bits0: 2, omega: 0.995, max_bits: 24 }
+    }
+}
+
+impl QuantConfig {
+    pub fn validate(&self) -> Result<(), String> {
+        if self.bits0 < 1 || self.bits0 > self.max_bits {
+            return Err(format!("bits0 {} out of range [1, {}]", self.bits0, self.max_bits));
+        }
+        if !(0.0 < self.omega && self.omega < 1.0) {
+            return Err("omega must be in (0,1)".into());
+        }
+        if self.max_bits > 30 {
+            return Err("max_bits > 30 would overflow level arithmetic".into());
+        }
+        Ok(())
+    }
+}
+
+/// One quantized transmission: everything that goes over the wire.
+#[derive(Clone, Debug, PartialEq)]
+pub struct QuantMessage {
+    /// Integer codes per coordinate, each in `[0, 2^bits - 1)`.
+    pub codes: Vec<u32>,
+    /// Quantization range `R^k`.
+    pub radius: f64,
+    /// Bits per coordinate `b^k`.
+    pub bits: u32,
+}
+
+impl QuantMessage {
+    /// Wire payload size in bits: `b*d + b_R + b_b` (paper §5 with
+    /// `b_R = 32`, `b_b = 32`).
+    pub fn payload_bits(&self) -> u64 {
+        self.bits as u64 * self.codes.len() as u64 + 64
+    }
+
+    /// Quantization step `Delta = 2R / (2^b - 1)` (paper §5: the range
+    /// `2R` is divided into `2^b - 1` intervals; the `2^b` grid points are
+    /// exactly the b-bit codes).
+    pub fn step(&self) -> f64 {
+        2.0 * self.radius / ((1u64 << self.bits) - 1) as f64
+    }
+
+    /// Reconstruct `\hat Q` from the message and the shared reference
+    /// vector (eq. (20)).  Receiver-side decode.
+    pub fn reconstruct(&self, reference: &[f64]) -> Vec<f64> {
+        assert_eq!(reference.len(), self.codes.len());
+        let delta = self.step();
+        self.codes
+            .iter()
+            .zip(reference)
+            .map(|(&q, &r)| r + delta * q as f64 - self.radius)
+            .collect()
+    }
+}
+
+/// Per-worker quantizer state (the sender side).
+#[derive(Clone, Debug)]
+pub struct Quantizer {
+    cfg: QuantConfig,
+    /// Previous radius `R^{k-1}` (None before first transmission).
+    prev_radius: Option<f64>,
+    /// Previous bit width `b^{k-1}`.
+    prev_bits: u32,
+    rng: Pcg64,
+}
+
+impl Quantizer {
+    pub fn new(cfg: QuantConfig, rng: Pcg64) -> Quantizer {
+        cfg.validate().expect("invalid quant config");
+        Quantizer { cfg, prev_radius: None, prev_bits: cfg.bits0, rng }
+    }
+
+    /// Current bit width (next transmission will use at least this many).
+    pub fn bits(&self) -> u32 {
+        self.prev_bits
+    }
+
+    /// Bit-growth rule of eq. (18): the smallest `b^k` such that
+    /// `Delta^k = 2 R^k / (2^{b^k} - 1) <= omega * Delta^{k-1}`.
+    fn next_bits(&self, radius: f64) -> u32 {
+        match self.prev_radius {
+            None => self.cfg.bits0,
+            Some(r_prev) => {
+                let prev_levels = ((1u64 << self.prev_bits) - 1) as f64;
+                let needed =
+                    (1.0 + prev_levels * radius / (self.cfg.omega * r_prev)).log2().ceil();
+                let b = needed.max(1.0) as u32;
+                b.clamp(1, self.cfg.max_bits)
+            }
+        }
+    }
+
+    /// Quantize `value` against the shared `reference` (the reconstruction
+    /// both sides hold).  Returns the wire message and the sender's own
+    /// reconstruction (which equals the receiver's decode exactly).
+    pub fn quantize(&mut self, value: &[f64], reference: &[f64]) -> (QuantMessage, Vec<f64>) {
+        assert_eq!(value.len(), reference.len());
+        let d = value.len();
+        // radius covers the current difference (never zero)
+        let mut radius = 0.0f64;
+        for i in 0..d {
+            radius = radius.max((value[i] - reference[i]).abs());
+        }
+        radius = radius.max(1e-12);
+        // the wire carries R as f32 (b_R = 32); use the rounded value on
+        // the sender side too so sender and receiver reconstructions are
+        // bit-identical
+        radius = radius as f32 as f64;
+        let bits = self.next_bits(radius);
+        // 2R split into (2^b - 1) intervals => 2^b grid points (the b-bit
+        // codes); max code = 2^b - 1
+        let max_code = ((1u64 << bits) - 1) as f64;
+        let delta = 2.0 * radius / max_code;
+
+        let mut codes = Vec::with_capacity(d);
+        for i in 0..d {
+            // eq. (14): center the difference at +R, measure in steps
+            let c = (value[i] - reference[i] + radius) / delta;
+            let low = c.floor();
+            let frac = c - low;
+            // eq. (15)/(17): round up with probability frac
+            let q = if self.rng.uniform() < frac { low + 1.0 } else { low };
+            let q = q.clamp(0.0, max_code);
+            codes.push(q as u32);
+        }
+        let msg = QuantMessage { codes, radius, bits };
+        let recon = msg.reconstruct(reference);
+        self.prev_radius = Some(radius);
+        self.prev_bits = bits;
+        (msg, recon)
+    }
+
+    /// Step size `Delta^k` that a transmission with this radius would use.
+    pub fn step_size(&self, radius: f64, bits: u32) -> f64 {
+        2.0 * radius / ((1u64 << bits) - 1) as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::prop::check;
+    use crate::util::norm2;
+
+    fn mk(bits0: u32, omega: f64, seed: u64) -> Quantizer {
+        Quantizer::new(
+            QuantConfig { bits0, omega, max_bits: 24 },
+            Pcg64::new(seed),
+        )
+    }
+
+    #[test]
+    fn reconstruction_error_bounded_by_step() {
+        check("per-coordinate error <= Delta", 100, |g| {
+            let d = g.usize_in(1, 100);
+            let mut q = mk(g.usize_in(2, 8) as u32, g.f64_in(0.5, 0.99), g.u64());
+            let v = g.normal_vec(d);
+            let reference = g.normal_vec(d);
+            let (msg, recon) = q.quantize(&v, &reference);
+            let delta = q.step_size(msg.radius, msg.bits);
+            for i in 0..d {
+                assert!(
+                    (recon[i] - v[i]).abs() <= delta * (1.0 + 1e-9),
+                    "coord {i}: |{} - {}| > {delta}",
+                    recon[i],
+                    v[i]
+                );
+            }
+        });
+    }
+
+    #[test]
+    fn decode_matches_sender_recon() {
+        check("sender/receiver reconstructions identical", 60, |g| {
+            let d = g.usize_in(1, 64);
+            let mut q = mk(3, 0.9, g.u64());
+            let reference = g.normal_vec(d);
+            let v = g.normal_vec(d);
+            let (msg, recon) = q.quantize(&v, &reference);
+            let decoded = msg.reconstruct(&reference);
+            assert_eq!(recon, decoded);
+        });
+    }
+
+    #[test]
+    fn step_size_decays_geometrically() {
+        // rule (18): Delta^k <= omega * Delta^{k-1} for every transmission,
+        // as long as the bit cap (the paper's 32-bit full precision) is
+        // not hit — once b^k saturates, the guarantee is vacuous.
+        check("Delta monotone under bit rule", 40, |g| {
+            let omega = g.f64_in(0.6, 0.99);
+            let mut q = mk(2, omega, g.u64());
+            let d = 16;
+            let mut reference = vec![0.0; d];
+            let mut prev_delta: Option<f64> = None;
+            // shrinking differences, as in a converging run
+            for k in 0..12 {
+                let scale = 0.7f64.powi(k);
+                let v: Vec<f64> =
+                    reference.iter().map(|r| r + scale * g.normal()).collect();
+                let (msg, recon) = q.quantize(&v, &reference);
+                let delta = q.step_size(msg.radius, msg.bits);
+                if msg.bits >= q.cfg.max_bits {
+                    break; // cap reached: rule (18) no longer binds
+                }
+                if let Some(pd) = prev_delta {
+                    assert!(
+                        delta <= omega * pd * (1.0 + 1e-9),
+                        "k={k}: {delta} > {omega} * {pd}"
+                    );
+                }
+                prev_delta = Some(delta);
+                reference = recon;
+            }
+        });
+    }
+
+    #[test]
+    fn unbiasedness_monte_carlo() {
+        let d = 8;
+        let v: Vec<f64> = (0..d).map(|i| (i as f64 * 0.77).sin()).collect();
+        let reference = vec![0.0; d];
+        let trials = 4000;
+        let mut acc = vec![0.0; d];
+        for t in 0..trials {
+            let mut q = mk(3, 0.9, t as u64);
+            let (_, recon) = q.quantize(&v, &reference);
+            for i in 0..d {
+                acc[i] += recon[i];
+            }
+        }
+        for i in 0..d {
+            let mean = acc[i] / trials as f64;
+            assert!(
+                (mean - v[i]).abs() < 0.02,
+                "coord {i}: mean {mean} vs {}",
+                v[i]
+            );
+        }
+    }
+
+    #[test]
+    fn payload_bits_formula() {
+        let mut q = mk(4, 0.9, 1);
+        let v = vec![1.0; 50];
+        let reference = vec![0.0; 50];
+        let (msg, _) = q.quantize(&v, &reference);
+        assert_eq!(msg.payload_bits(), msg.bits as u64 * 50 + 64);
+        assert!(msg.payload_bits() < 32 * 50); // beats full precision
+    }
+
+    #[test]
+    fn error_norm_bounded_sqrt_d_delta() {
+        // aggregate bound E||e||^2 <= d Delta^2 (we check the a.s. bound)
+        check("||recon - v|| <= sqrt(d) Delta", 50, |g| {
+            let d = g.usize_in(1, 80);
+            let mut q = mk(3, 0.9, g.u64());
+            let v = g.normal_vec(d);
+            let reference = vec![0.0; d];
+            let (msg, recon) = q.quantize(&v, &reference);
+            let delta = q.step_size(msg.radius, msg.bits);
+            let err: Vec<f64> = recon.iter().zip(&v).map(|(a, b)| a - b).collect();
+            assert!(norm2(&err) <= (d as f64).sqrt() * delta * (1.0 + 1e-9));
+        });
+    }
+
+    #[test]
+    fn zero_difference_stays_stable() {
+        let mut q = mk(2, 0.9, 7);
+        let v = vec![1.0, -2.0, 3.0];
+        let (_, recon1) = q.quantize(&v, &v.clone());
+        // difference is zero: reconstruction must stay within the tiny
+        // minimum radius of the true value
+        for (r, t) in recon1.iter().zip(&v) {
+            assert!((r - t).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn bits_capped_at_max() {
+        let mut q = Quantizer::new(
+            QuantConfig { bits0: 2, omega: 0.05, max_bits: 10 },
+            Pcg64::new(3),
+        );
+        let mut reference = vec![0.0; 4];
+        for _ in 0..20 {
+            let v: Vec<f64> = reference.iter().map(|r| r + 1.0).collect();
+            let (msg, recon) = q.quantize(&v, &reference);
+            assert!(msg.bits <= 10);
+            reference = recon;
+        }
+    }
+}

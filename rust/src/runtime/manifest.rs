@@ -1,0 +1,358 @@
+//! Artifact manifest: a minimal JSON parser + the typed manifest the AOT
+//! compiler (`python/compile/aot.py`) emits next to the HLO text files.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// Parsed JSON value (parser below; the *writer* lives in `crate::io`).
+#[derive(Clone, Debug, PartialEq)]
+pub enum JsonValue {
+    Null,
+    Bool(bool),
+    Num(f64),
+    Str(String),
+    Arr(Vec<JsonValue>),
+    Obj(BTreeMap<String, JsonValue>),
+}
+
+impl JsonValue {
+    pub fn get(&self, key: &str) -> Option<&JsonValue> {
+        match self {
+            JsonValue::Obj(m) => m.get(key),
+            _ => None,
+        }
+    }
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            JsonValue::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            JsonValue::Num(n) => Some(*n),
+            _ => None,
+        }
+    }
+    pub fn as_arr(&self) -> Option<&[JsonValue]> {
+        match self {
+            JsonValue::Arr(a) => Some(a),
+            _ => None,
+        }
+    }
+}
+
+/// Recursive-descent JSON parser (full scalar/array/object grammar with
+/// string escapes; numbers via `f64`).
+pub fn parse_json(text: &str) -> Result<JsonValue, String> {
+    let bytes: Vec<char> = text.chars().collect();
+    let mut pos = 0usize;
+    let v = parse_value(&bytes, &mut pos)?;
+    skip_ws(&bytes, &mut pos);
+    if pos != bytes.len() {
+        return Err(format!("trailing garbage at char {pos}"));
+    }
+    Ok(v)
+}
+
+fn skip_ws(b: &[char], pos: &mut usize) {
+    while *pos < b.len() && b[*pos].is_whitespace() {
+        *pos += 1;
+    }
+}
+
+fn expect(b: &[char], pos: &mut usize, c: char) -> Result<(), String> {
+    skip_ws(b, pos);
+    if *pos < b.len() && b[*pos] == c {
+        *pos += 1;
+        Ok(())
+    } else {
+        Err(format!("expected '{c}' at char {pos}"))
+    }
+}
+
+fn parse_value(b: &[char], pos: &mut usize) -> Result<JsonValue, String> {
+    skip_ws(b, pos);
+    match b.get(*pos) {
+        None => Err("unexpected end of input".into()),
+        Some('{') => {
+            *pos += 1;
+            let mut map = BTreeMap::new();
+            skip_ws(b, pos);
+            if b.get(*pos) == Some(&'}') {
+                *pos += 1;
+                return Ok(JsonValue::Obj(map));
+            }
+            loop {
+                skip_ws(b, pos);
+                let key = match parse_value(b, pos)? {
+                    JsonValue::Str(s) => s,
+                    other => return Err(format!("object key must be string, got {other:?}")),
+                };
+                expect(b, pos, ':')?;
+                let val = parse_value(b, pos)?;
+                map.insert(key, val);
+                skip_ws(b, pos);
+                match b.get(*pos) {
+                    Some(',') => *pos += 1,
+                    Some('}') => {
+                        *pos += 1;
+                        break;
+                    }
+                    _ => return Err(format!("expected ',' or '}}' at char {pos}")),
+                }
+            }
+            Ok(JsonValue::Obj(map))
+        }
+        Some('[') => {
+            *pos += 1;
+            let mut arr = Vec::new();
+            skip_ws(b, pos);
+            if b.get(*pos) == Some(&']') {
+                *pos += 1;
+                return Ok(JsonValue::Arr(arr));
+            }
+            loop {
+                arr.push(parse_value(b, pos)?);
+                skip_ws(b, pos);
+                match b.get(*pos) {
+                    Some(',') => *pos += 1,
+                    Some(']') => {
+                        *pos += 1;
+                        break;
+                    }
+                    _ => return Err(format!("expected ',' or ']' at char {pos}")),
+                }
+            }
+            Ok(JsonValue::Arr(arr))
+        }
+        Some('"') => {
+            *pos += 1;
+            let mut s = String::new();
+            loop {
+                match b.get(*pos) {
+                    None => return Err("unterminated string".into()),
+                    Some('"') => {
+                        *pos += 1;
+                        break;
+                    }
+                    Some('\\') => {
+                        *pos += 1;
+                        match b.get(*pos) {
+                            Some('n') => s.push('\n'),
+                            Some('t') => s.push('\t'),
+                            Some('r') => s.push('\r'),
+                            Some('"') => s.push('"'),
+                            Some('\\') => s.push('\\'),
+                            Some('/') => s.push('/'),
+                            Some('b') => s.push('\u{8}'),
+                            Some('f') => s.push('\u{c}'),
+                            Some('u') => {
+                                let hex: String =
+                                    b.get(*pos + 1..*pos + 5).unwrap_or(&[]).iter().collect();
+                                let code = u32::from_str_radix(&hex, 16)
+                                    .map_err(|_| format!("bad \\u escape at {pos}"))?;
+                                s.push(char::from_u32(code).unwrap_or('\u{fffd}'));
+                                *pos += 4;
+                            }
+                            other => return Err(format!("bad escape {other:?}")),
+                        }
+                        *pos += 1;
+                    }
+                    Some(c) => {
+                        s.push(*c);
+                        *pos += 1;
+                    }
+                }
+            }
+            Ok(JsonValue::Str(s))
+        }
+        Some('t') if b[*pos..].starts_with(&['t', 'r', 'u', 'e']) => {
+            *pos += 4;
+            Ok(JsonValue::Bool(true))
+        }
+        Some('f') if b[*pos..].starts_with(&['f', 'a', 'l', 's', 'e']) => {
+            *pos += 5;
+            Ok(JsonValue::Bool(false))
+        }
+        Some('n') if b[*pos..].starts_with(&['n', 'u', 'l', 'l']) => {
+            *pos += 4;
+            Ok(JsonValue::Null)
+        }
+        Some(_) => {
+            let start = *pos;
+            while *pos < b.len()
+                && matches!(b[*pos], '0'..='9' | '-' | '+' | '.' | 'e' | 'E')
+            {
+                *pos += 1;
+            }
+            let tok: String = b[start..*pos].iter().collect();
+            tok.parse::<f64>()
+                .map(JsonValue::Num)
+                .map_err(|_| format!("bad number '{tok}' at char {start}"))
+        }
+    }
+}
+
+/// One artifact's I/O signature.
+#[derive(Clone, Debug)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub entry: String,
+    pub file: PathBuf,
+    /// (input name, shape) in call order.
+    pub inputs: Vec<(String, Vec<usize>)>,
+    pub outputs: Vec<String>,
+}
+
+/// The whole manifest.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub row_block: usize,
+    pub artifacts: Vec<ArtifactSpec>,
+}
+
+impl Manifest {
+    /// Load `manifest.json` from an artifacts directory.
+    pub fn load(dir: &Path) -> Result<Manifest, String> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .map_err(|e| format!("cannot read {}: {e}", path.display()))?;
+        Self::parse(&text, dir)
+    }
+
+    /// Parse manifest text; `dir` anchors the artifact file paths.
+    pub fn parse(text: &str, dir: &Path) -> Result<Manifest, String> {
+        let root = parse_json(text)?;
+        let row_block = root
+            .get("row_block")
+            .and_then(|v| v.as_f64())
+            .ok_or("manifest missing row_block")? as usize;
+        let mut artifacts = Vec::new();
+        for a in root
+            .get("artifacts")
+            .and_then(|v| v.as_arr())
+            .ok_or("manifest missing artifacts")?
+        {
+            let name = a
+                .get("name")
+                .and_then(|v| v.as_str())
+                .ok_or("artifact missing name")?
+                .to_string();
+            let entry = a
+                .get("entry")
+                .and_then(|v| v.as_str())
+                .ok_or("artifact missing entry")?
+                .to_string();
+            let file = dir.join(
+                a.get("file")
+                    .and_then(|v| v.as_str())
+                    .ok_or("artifact missing file")?,
+            );
+            let mut inputs = Vec::new();
+            for i in a
+                .get("inputs")
+                .and_then(|v| v.as_arr())
+                .ok_or("artifact missing inputs")?
+            {
+                let iname = i
+                    .get("name")
+                    .and_then(|v| v.as_str())
+                    .ok_or("input missing name")?
+                    .to_string();
+                let shape: Vec<usize> = i
+                    .get("shape")
+                    .and_then(|v| v.as_arr())
+                    .ok_or("input missing shape")?
+                    .iter()
+                    .map(|d| d.as_f64().unwrap_or(-1.0) as usize)
+                    .collect();
+                inputs.push((iname, shape));
+            }
+            let outputs: Vec<String> = a
+                .get("outputs")
+                .and_then(|v| v.as_arr())
+                .ok_or("artifact missing outputs")?
+                .iter()
+                .filter_map(|o| o.as_str().map(|s| s.to_string()))
+                .collect();
+            artifacts.push(ArtifactSpec { name, entry, file, inputs, outputs });
+        }
+        Ok(Manifest { row_block, artifacts })
+    }
+
+    /// Find an artifact by exact name.
+    pub fn by_name(&self, name: &str) -> Option<&ArtifactSpec> {
+        self.artifacts.iter().find(|a| a.name == name)
+    }
+
+    /// Find the smallest `entry` artifact whose first input is
+    /// `(s_pad, d)` with `s_pad >= s_min` (shape selection for shards).
+    pub fn best_for_rows(&self, entry: &str, s_min: usize, d: usize) -> Option<&ArtifactSpec> {
+        self.artifacts
+            .iter()
+            .filter(|a| a.entry == entry)
+            .filter(|a| {
+                let shape = &a.inputs[0].1;
+                shape.len() == 2 && shape[1] == d && shape[0] >= s_min
+            })
+            .min_by_key(|a| a.inputs[0].1[0])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn json_scalars_and_nesting() {
+        let v = parse_json(r#"{"a": [1, -2.5e3, "x\n", true, null], "b": {"c": 7}}"#).unwrap();
+        assert_eq!(v.get("b").unwrap().get("c").unwrap().as_f64(), Some(7.0));
+        let arr = v.get("a").unwrap().as_arr().unwrap();
+        assert_eq!(arr[1].as_f64(), Some(-2500.0));
+        assert_eq!(arr[2].as_str(), Some("x\n"));
+        assert_eq!(arr[3], JsonValue::Bool(true));
+        assert_eq!(arr[4], JsonValue::Null);
+    }
+
+    #[test]
+    fn json_rejects_garbage() {
+        assert!(parse_json("{").is_err());
+        assert!(parse_json("[1,]").is_err());
+        assert!(parse_json("12 34").is_err());
+        assert!(parse_json(r#"{"a" 1}"#).is_err());
+    }
+
+    #[test]
+    fn json_empty_containers() {
+        assert_eq!(parse_json("[]").unwrap(), JsonValue::Arr(vec![]));
+        assert_eq!(parse_json("{}").unwrap(), JsonValue::Obj(BTreeMap::new()));
+    }
+
+    #[test]
+    fn manifest_parse_and_lookup() {
+        let text = r#"{
+            "format": "hlo-text", "dtype": "f32", "row_block": 8,
+            "artifacts": [
+                {"name": "linear_setup_16x14", "entry": "linear_setup",
+                 "file": "linear_setup_16x14.hlo.txt",
+                 "inputs": [{"name": "x", "shape": [16, 14]},
+                            {"name": "y", "shape": [16]}],
+                 "outputs": ["xtx", "xty"], "meta": {}},
+                {"name": "linear_setup_56x50", "entry": "linear_setup",
+                 "file": "linear_setup_56x50.hlo.txt",
+                 "inputs": [{"name": "x", "shape": [56, 50]},
+                            {"name": "y", "shape": [56]}],
+                 "outputs": ["xtx", "xty"], "meta": {}}
+            ]
+        }"#;
+        let m = Manifest::parse(text, Path::new("/tmp/a")).unwrap();
+        assert_eq!(m.row_block, 8);
+        assert_eq!(m.artifacts.len(), 2);
+        assert!(m.by_name("linear_setup_16x14").is_some());
+        let best = m.best_for_rows("linear_setup", 14, 14).unwrap();
+        assert_eq!(best.inputs[0].1, vec![16, 14]);
+        assert!(m.best_for_rows("linear_setup", 100, 14).is_none());
+        assert!(m.best_for_rows("linear_setup", 10, 99).is_none());
+    }
+}

@@ -1,0 +1,161 @@
+//! Centralized reference optimum `f*` (the loss-gap baseline of every
+//! figure: the paper plots `|sum_n f_n(theta_n^k) - f*|`).
+
+use crate::config::Task;
+use crate::data::Shard;
+use crate::linalg::{Cholesky, Mat};
+
+/// Global linear-regression optimum over all shards:
+/// `argmin sum_n 1/2 ||X_n theta - y_n||^2`.
+pub fn central_linear_optimum(shards: &[Shard]) -> Vec<f64> {
+    let d = shards[0].x.cols();
+    let mut gram = Mat::zeros(d, d);
+    let mut rhs = vec![0.0; d];
+    for sh in shards {
+        gram = gram.add(&sh.x.gram());
+        let r = sh.x.t_matvec(&sh.y);
+        for i in 0..d {
+            rhs[i] += r[i];
+        }
+    }
+    // tiny jitter guards rank-deficient totals (never triggers for the
+    // paper's datasets, but keeps the reference robust for tests)
+    let chol = Cholesky::new(&gram)
+        .or_else(|| Cholesky::new(&gram.clone().add_diag(1e-9)))
+        .expect("global Gram not factorizable");
+    chol.solve(&rhs)
+}
+
+/// Global logistic optimum: Newton on
+/// `sum_n [(1/s_n) sum_i log(1+exp(-y x theta)) + (mu0/2)||theta||^2]`
+/// (each worker carries its own 1/s_n normalization and ridge, exactly as
+/// the decentralized objective sums them).
+pub fn central_logistic_optimum(shards: &[Shard], mu0: f64) -> Vec<f64> {
+    let d = shards[0].x.cols();
+    let n_workers = shards.len() as f64;
+    let mut theta = vec![0.0; d];
+    for _ in 0..200 {
+        let mut grad = vec![0.0; d];
+        let mut hess = Mat::zeros(d, d);
+        for sh in shards {
+            let inv_s = 1.0 / sh.s() as f64;
+            for i in 0..sh.s() {
+                let row = sh.x.row(i);
+                let z = sh.y[i] * crate::util::dot(row, &theta);
+                let p = 1.0 / (1.0 + z.exp());
+                let gs = -sh.y[i] * p * inv_s;
+                let w = p * (1.0 - p) * inv_s;
+                for a in 0..d {
+                    grad[a] += gs * row[a];
+                    let wa = w * row[a];
+                    for b in a..d {
+                        hess[(a, b)] += wa * row[b];
+                    }
+                }
+            }
+        }
+        for a in 0..d {
+            for b in 0..a {
+                hess[(a, b)] = hess[(b, a)];
+            }
+            grad[a] += n_workers * mu0 * theta[a];
+        }
+        let gnorm = crate::util::norm2(&grad);
+        if gnorm < 1e-12 * (1.0 + crate::util::norm2(&theta)) {
+            break;
+        }
+        let h = hess.add_diag(n_workers * mu0);
+        let step = Cholesky::new(&h).expect("SPD Hessian").solve(&grad);
+        for i in 0..d {
+            theta[i] -= step[i];
+        }
+    }
+    theta
+}
+
+/// Global decentralized objective `sum_n f_n(theta)` at a common point.
+pub fn global_objective(shards: &[Shard], task: Task, mu0: f64, theta: &[f64]) -> f64 {
+    let mut total = 0.0;
+    for sh in shards {
+        match task {
+            Task::Linear => {
+                let pred = sh.x.matvec(theta);
+                total += 0.5
+                    * pred
+                        .iter()
+                        .zip(&sh.y)
+                        .map(|(p, y)| (p - y) * (p - y))
+                        .sum::<f64>();
+            }
+            Task::Logistic => {
+                let inv_s = 1.0 / sh.s() as f64;
+                let mut acc = 0.0;
+                for i in 0..sh.s() {
+                    let z = sh.y[i] * crate::util::dot(sh.x.row(i), theta);
+                    acc += if z > 0.0 {
+                        (-z).exp().ln_1p()
+                    } else {
+                        -z + z.exp().ln_1p()
+                    };
+                }
+                total += inv_s * acc + 0.5 * mu0 * crate::util::dot(theta, theta);
+            }
+        }
+    }
+    total
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{partition_uniform, synthetic};
+
+    #[test]
+    fn linear_optimum_is_stationary() {
+        let ds = synthetic::linear_dataset(200, 8, 1);
+        let shards = partition_uniform(&ds, 5, 2);
+        let theta = central_linear_optimum(&shards);
+        // full gradient sum X^T (X theta - y) = 0
+        let mut grad = vec![0.0; 8];
+        for sh in &shards {
+            let resid = sh.x.matvec(&theta);
+            let resid: Vec<f64> = resid.iter().zip(&sh.y).map(|(p, y)| p - y).collect();
+            let g = sh.x.t_matvec(&resid);
+            for i in 0..8 {
+                grad[i] += g[i];
+            }
+        }
+        assert!(crate::util::norm2(&grad) < 1e-7);
+    }
+
+    #[test]
+    fn logistic_optimum_is_stationary() {
+        let ds = synthetic::logistic_dataset(240, 6, 2);
+        let shards = partition_uniform(&ds, 4, 3);
+        let mu0 = 0.05;
+        let theta = central_logistic_optimum(&shards, mu0);
+        // numeric gradient of the global objective must vanish
+        let f0 = global_objective(&shards, Task::Logistic, mu0, &theta);
+        let eps = 1e-6;
+        for j in 0..6 {
+            let mut tp = theta.clone();
+            tp[j] += eps;
+            let fp = global_objective(&shards, Task::Logistic, mu0, &tp);
+            assert!(
+                ((fp - f0) / eps).abs() < 1e-4,
+                "coord {j}: dir deriv {}",
+                (fp - f0) / eps
+            );
+        }
+    }
+
+    #[test]
+    fn objective_decreases_at_optimum() {
+        let ds = synthetic::linear_dataset(120, 5, 4);
+        let shards = partition_uniform(&ds, 3, 1);
+        let opt = central_linear_optimum(&shards);
+        let f_opt = global_objective(&shards, Task::Linear, 0.0, &opt);
+        let f_zero = global_objective(&shards, Task::Linear, 0.0, &vec![0.0; 5]);
+        assert!(f_opt < f_zero);
+    }
+}

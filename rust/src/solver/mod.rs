@@ -1,0 +1,72 @@
+//! Per-worker subproblem solvers.
+//!
+//! Every GGADMM-family iteration solves, at worker `n` (paper eqs. (21)/(22)):
+//!
+//! ```text
+//! theta_n^{k+1} = argmin_theta f_n(theta)
+//!                 + <theta, alpha_n - rho * sum_{m in N_n} theta_hat_m>
+//!                 + (rho d_n / 2) ||theta||^2
+//! ```
+//!
+//! [`SubproblemSolver`] abstracts over the two execution backends:
+//! * the **native** Rust solvers in [`linear`] / [`logistic`] (closed-form
+//!   ridge with a cached Cholesky factor; damped Newton), and
+//! * the **PJRT** solvers in [`crate::runtime`] that execute the AOT HLO
+//!   artifacts produced by the JAX/Pallas layers.
+//!
+//! Both are differential-tested against each other; experiments can select
+//! either via [`Backend`].
+
+pub mod central;
+pub mod linear;
+pub mod logistic;
+
+pub use central::{central_linear_optimum, central_logistic_optimum, global_objective};
+pub use linear::LinearSolver;
+pub use logistic::LogisticSolver;
+
+/// Execution backend for the per-iteration subproblem solve.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Backend {
+    /// Pure-Rust solvers (always available).
+    Native,
+    /// AOT HLO artifacts executed through the PJRT CPU client.
+    Pjrt,
+}
+
+impl Backend {
+    pub fn parse(s: &str) -> Result<Backend, String> {
+        match s {
+            "native" => Ok(Backend::Native),
+            "pjrt" => Ok(Backend::Pjrt),
+            _ => Err(format!("unknown backend '{s}' (expected native|pjrt)")),
+        }
+    }
+}
+
+/// A worker's local subproblem solver (rho and the worker degree are baked
+/// in at construction; they are constant over a run).
+pub trait SubproblemSolver: Send {
+    /// Solve the penalized subproblem given the worker's dual `alpha`, the
+    /// sum of its neighbors' latest (reconstructed) models, and a warm
+    /// start.
+    fn update(&mut self, alpha: &[f64], nbr_sum: &[f64], warm: &[f64]) -> Vec<f64>;
+
+    /// Local objective `f_n(theta)` (no penalty terms).
+    fn loss(&self, theta: &[f64]) -> f64;
+
+    /// Model dimension.
+    fn d(&self) -> usize;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn backend_parse() {
+        assert_eq!(Backend::parse("native").unwrap(), Backend::Native);
+        assert_eq!(Backend::parse("pjrt").unwrap(), Backend::Pjrt);
+        assert!(Backend::parse("gpu").is_err());
+    }
+}

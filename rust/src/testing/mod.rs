@@ -1,0 +1,8 @@
+//! First-party testing utilities.
+//!
+//! The offline sandbox has no `proptest`, so [`prop`] provides a minimal
+//! property-based testing harness with the same workflow: generators over
+//! a seeded RNG, many random cases per property, and a reproducible
+//! counterexample report (`PROP_SEED` env var reruns a failing seed).
+
+pub mod prop;

@@ -1,0 +1,63 @@
+//! Small shared utilities: deterministic RNG, float helpers.
+
+pub mod rng;
+
+/// Relative closeness check used across tests and differential checks.
+pub fn close(a: f64, b: f64, rtol: f64, atol: f64) -> bool {
+    (a - b).abs() <= atol + rtol * b.abs().max(a.abs())
+}
+
+/// Max absolute difference between two slices (panics on length mismatch).
+pub fn max_abs_diff(a: &[f64], b: &[f64]) -> f64 {
+    assert_eq!(a.len(), b.len(), "length mismatch");
+    a.iter()
+        .zip(b)
+        .map(|(x, y)| (x - y).abs())
+        .fold(0.0, f64::max)
+}
+
+/// Euclidean norm of a slice.
+pub fn norm2(v: &[f64]) -> f64 {
+    v.iter().map(|x| x * x).sum::<f64>().sqrt()
+}
+
+/// Dot product of two slices (panics on length mismatch).
+pub fn dot(a: &[f64], b: &[f64]) -> f64 {
+    assert_eq!(a.len(), b.len(), "length mismatch");
+    a.iter().zip(b).map(|(x, y)| x * y).sum()
+}
+
+/// `a += scale * b` in place.
+pub fn axpy(a: &mut [f64], scale: f64, b: &[f64]) {
+    assert_eq!(a.len(), b.len(), "length mismatch");
+    for (x, y) in a.iter_mut().zip(b) {
+        *x += scale * y;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn close_basic() {
+        assert!(close(1.0, 1.0 + 1e-9, 1e-6, 0.0));
+        assert!(!close(1.0, 1.1, 1e-6, 0.0));
+        assert!(close(0.0, 1e-12, 0.0, 1e-9));
+    }
+
+    #[test]
+    fn norm_dot_axpy() {
+        let a = vec![3.0, 4.0];
+        assert!((norm2(&a) - 5.0).abs() < 1e-12);
+        assert!((dot(&a, &a) - 25.0).abs() < 1e-12);
+        let mut b = vec![1.0, 1.0];
+        axpy(&mut b, 2.0, &a);
+        assert_eq!(b, vec![7.0, 9.0]);
+    }
+
+    #[test]
+    fn max_abs_diff_basic() {
+        assert_eq!(max_abs_diff(&[1.0, 2.0], &[1.5, 2.0]), 0.5);
+    }
+}

@@ -1,0 +1,89 @@
+//! The threaded coordinator and the sequential simulator implement the
+//! same per-worker state machine; these tests lock their trajectories
+//! together (same seeds => same quantizer streams => identical traces).
+
+use cq_ggadmm::algs::{AlgSpec, Problem, Run, RunOptions};
+use cq_ggadmm::coordinator::{Coordinator, CoordinatorOptions};
+use cq_ggadmm::data::synthetic;
+use cq_ggadmm::graph::Topology;
+
+fn problem(n: usize, seed: u64) -> (Problem, Topology) {
+    let topo = Topology::random_bipartite(n, 0.4, seed);
+    let ds = synthetic::linear_dataset(n * 15, 6, seed);
+    (Problem::new(&ds, &topo, 5.0, 0.0, seed), topo)
+}
+
+fn assert_traces_match(
+    sim: &cq_ggadmm::metrics::Trace,
+    coord: &cq_ggadmm::metrics::Trace,
+    tol: f64,
+) {
+    assert_eq!(sim.points.len(), coord.points.len());
+    for (a, b) in sim.points.iter().zip(&coord.points) {
+        assert_eq!(a.cum_rounds, b.cum_rounds, "iter {}", a.iteration);
+        assert_eq!(a.cum_bits, b.cum_bits, "iter {}", a.iteration);
+        let denom = 1.0 + a.loss_gap.abs();
+        assert!(
+            (a.loss_gap - b.loss_gap).abs() / denom < tol,
+            "iter {}: sim {:.9e} vs coord {:.9e}",
+            a.iteration,
+            a.loss_gap,
+            b.loss_gap
+        );
+    }
+}
+
+#[test]
+fn ggadmm_trajectories_identical() {
+    let (p, t) = problem(8, 11);
+    let mut sim = Run::new(p.clone(), t.clone(), AlgSpec::ggadmm(), RunOptions::default());
+    let ts = sim.run(40);
+    let coord = Coordinator::spawn(p, t, AlgSpec::ggadmm(), CoordinatorOptions::default());
+    let tc = coord.run(40);
+    // full-precision payloads cross the wire as f32, so tiny drift is
+    // expected; counts must be exact
+    assert_traces_match(&ts, &tc, 1e-5);
+}
+
+#[test]
+fn c_ggadmm_trajectories_identical() {
+    let (p, t) = problem(10, 12);
+    let spec = AlgSpec::c_ggadmm(0.2, 0.85);
+    let mut sim = Run::new(p.clone(), t.clone(), spec.clone(), RunOptions::default());
+    let ts = sim.run(50);
+    let coord = Coordinator::spawn(p, t, spec, CoordinatorOptions::default());
+    let tc = coord.run(50);
+    assert_traces_match(&ts, &tc, 1e-4);
+}
+
+#[test]
+fn cq_ggadmm_trajectories_identical() {
+    // same seed => same forked quantizer streams => identical stochastic
+    // rounding decisions in both implementations
+    let (p, t) = problem(8, 13);
+    let spec = AlgSpec::cq_ggadmm(0.2, 0.85, 0.995, 2);
+    let opts = RunOptions { seed: 13, ..RunOptions::default() };
+    let mut sim = Run::new(p.clone(), t.clone(), spec.clone(), opts);
+    let ts = sim.run(50);
+    let coord = Coordinator::spawn(
+        p,
+        t,
+        spec,
+        CoordinatorOptions { seed: 13, ..CoordinatorOptions::default() },
+    );
+    let tc = coord.run(50);
+    assert_traces_match(&ts, &tc, 1e-4);
+}
+
+#[test]
+fn c_admm_jacobian_also_matches() {
+    let (p, t) = problem(8, 14);
+    let spec = AlgSpec::c_admm(0.1, 0.9);
+    let mut sim = Run::new(p.clone(), t.clone(), spec.clone(), RunOptions::default());
+    let ts = sim.run(60);
+    let coord = Coordinator::spawn(p, t, spec, CoordinatorOptions::default());
+    let tc = coord.run(60);
+    // NOTE: the coordinator's Jacobian phase must anchor on the worker's
+    // own broadcast exactly like the simulator
+    assert_traces_match(&ts, &tc, 1e-4);
+}

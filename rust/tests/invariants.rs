@@ -1,0 +1,131 @@
+//! Cross-module property tests of the paper's analytical invariants,
+//! using the first-party prop harness on full runs.
+
+use cq_ggadmm::algs::{AlgSpec, Problem, Run, RunOptions, Schedule};
+use cq_ggadmm::censor::CensorConfig;
+use cq_ggadmm::data::synthetic;
+use cq_ggadmm::graph::Topology;
+use cq_ggadmm::quant::QuantConfig;
+use cq_ggadmm::testing::prop::check;
+
+fn random_problem(g: &mut cq_ggadmm::testing::prop::Gen) -> (Problem, Topology) {
+    let n = g.usize_in(4, 12);
+    let d = g.usize_in(2, 8);
+    let seed = g.u64();
+    let topo = Topology::random_bipartite(n, g.f64_in(0.2, 0.8), seed);
+    let ds = synthetic::linear_dataset(n * 12, d, seed);
+    (Problem::new(&ds, &topo, g.f64_in(1.0, 20.0), 0.0, seed), topo)
+}
+
+#[test]
+fn dual_variables_sum_to_zero_for_all_variants() {
+    // Theorem 3's initialization condition: alpha^0 = 0 in col(M_-);
+    // the per-edge antisymmetry keeps sum_n alpha_n = 0 forever, for
+    // every schedule and every censoring/quantization combination.
+    check("sum_n alpha_n == 0", 15, |g| {
+        let (p, t) = random_problem(g);
+        let spec = match g.usize_in(0, 3) {
+            0 => AlgSpec::ggadmm(),
+            1 => AlgSpec::c_ggadmm(0.3, 0.85),
+            2 => AlgSpec::cq_ggadmm(0.3, 0.85, 0.99, 2),
+            _ => AlgSpec::c_admm(0.1, 0.9),
+        };
+        let mut run = Run::new(p, t, spec, RunOptions { seed: g.u64(), ..Default::default() });
+        for _ in 0..25 {
+            run.step();
+            assert!(run.dual_sum_norm() < 1e-7, "dual drift {}", run.dual_sum_norm());
+        }
+    });
+}
+
+#[test]
+fn loss_gap_and_consensus_vanish_for_all_variants() {
+    check("primal residual and optimality gap -> 0", 8, |g| {
+        let (p, t) = random_problem(g);
+        let spec = match g.usize_in(0, 2) {
+            0 => AlgSpec::ggadmm(),
+            1 => AlgSpec::c_ggadmm(0.2, 0.85),
+            _ => AlgSpec::cq_ggadmm(0.2, 0.85, 0.995, 3),
+        };
+        let mut run = Run::new(p, t, spec, RunOptions { seed: g.u64(), ..Default::default() });
+        let trace = run.run(250);
+        let last = trace.points.last().unwrap();
+        assert!(last.loss_gap < 1e-3, "gap={:.3e}", last.loss_gap);
+        assert!(last.consensus_gap < 1e-2, "consensus={:.3e}", last.consensus_gap);
+    });
+}
+
+#[test]
+fn quantized_run_never_exceeds_full_precision_bits() {
+    check("quantized payload < 32d per transmission", 10, |g| {
+        let (p, t) = random_problem(g);
+        let d = p.d;
+        let spec = AlgSpec {
+            name: "Q".into(),
+            schedule: Schedule::Alternating,
+            censor: None,
+            quant: Some(QuantConfig { bits0: 2, omega: 0.995, max_bits: 24 }),
+        };
+        let mut run = Run::new(p, t, spec, RunOptions { seed: g.u64(), ..Default::default() });
+        for _ in 0..40 {
+            run.step();
+        }
+        for tx in &run.comm().transmissions {
+            assert!(
+                tx.payload_bits <= (24 * d + 64) as u64,
+                "payload {} bits",
+                tx.payload_bits
+            );
+            assert!(tx.payload_bits < (32 * d) as u64 || d < 9,
+                "quantized payload should beat 32d for d >= 9");
+        }
+    });
+}
+
+#[test]
+fn censoring_error_bounded_along_runs() {
+    // eq. (31): whenever a worker is censored, the kept state is within
+    // tau^k of the candidate; we instrument via the public snapshot API
+    check("hat lags theta by at most tau after censoring", 8, |g| {
+        let (p, t) = random_problem(g);
+        let tau0 = g.f64_in(0.1, 1.0);
+        let xi = g.f64_in(0.7, 0.95);
+        let cfg = CensorConfig { tau0, xi };
+        let spec = AlgSpec::c_ggadmm(tau0, xi);
+        let mut run = Run::new(p, t.clone(), spec, RunOptions { seed: g.u64(), ..Default::default() });
+        for k in 1..40u64 {
+            run.step();
+            for i in 0..t.n() {
+                let snap = run.snapshot(i);
+                let diff: f64 = snap
+                    .theta
+                    .iter()
+                    .zip(&snap.hat)
+                    .map(|(a, b)| (a - b) * (a - b))
+                    .sum::<f64>()
+                    .sqrt();
+                // hat is either theta (transmitted) or within tau^k of it
+                assert!(
+                    diff < cfg.threshold(k) + 1e-9,
+                    "worker {i} iter {k}: lag {diff} > tau {}",
+                    cfg.threshold(k)
+                );
+            }
+        }
+    });
+}
+
+#[test]
+fn message_counts_match_schedule_budgets() {
+    check("transmissions per iteration <= N", 10, |g| {
+        let (p, t) = random_problem(g);
+        let n = t.n() as u64;
+        let spec = AlgSpec::c_ggadmm(0.5, 0.8);
+        let mut run = Run::new(p, t, spec, RunOptions { seed: g.u64(), ..Default::default() });
+        for k in 0..30u64 {
+            run.step();
+            let count = run.comm().at_iteration(k).count() as u64;
+            assert!(count <= n, "iteration {k}: {count} > {n}");
+        }
+    });
+}

@@ -1,0 +1,215 @@
+//! Integration tests of the PJRT runtime: AOT artifacts (Pallas/JAX
+//! layers) vs the native Rust solvers — the cross-layer differential
+//! signal of the whole reproduction.
+//!
+//! These tests need `artifacts/manifest.json` (run `make artifacts`);
+//! they are skipped with a message otherwise so `cargo test` stays green
+//! on a fresh checkout.
+
+use cq_ggadmm::algs::{AlgSpec, Problem, Run, RunOptions};
+use cq_ggadmm::data::{partition_uniform, synthetic};
+use cq_ggadmm::graph::Topology;
+use cq_ggadmm::runtime::{context_for, Manifest};
+use cq_ggadmm::solver::{Backend, LinearSolver, LogisticSolver, SubproblemSolver};
+use std::path::{Path, PathBuf};
+
+fn artifacts_dir() -> Option<PathBuf> {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("manifest.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("skipping: no artifacts (run `make artifacts`)");
+        None
+    }
+}
+
+#[test]
+fn manifest_covers_experiment_shapes() {
+    let Some(dir) = artifacts_dir() else { return };
+    let m = Manifest::load(&dir).expect("manifest");
+    assert_eq!(m.row_block, 8);
+    for name in [
+        "linear_setup_56x50",
+        "linear_setup_16x14",
+        "linear_update_50",
+        "linear_update_14",
+        "logistic_newton_56x50",
+        "logistic_newton_24x34",
+        "quantize_50",
+    ] {
+        assert!(m.by_name(name).is_some(), "missing artifact {name}");
+    }
+}
+
+#[test]
+fn pjrt_linear_solver_matches_native() {
+    let Some(dir) = artifacts_dir() else { return };
+    // the (8, 4) test shape is built into the default artifact set
+    let ds = synthetic::linear_dataset(32, 4, 5);
+    let shards = partition_uniform(&ds, 4, 5);
+    let rho = 2.0;
+    let degree = 2;
+    for sh in &shards {
+        let mut native = LinearSolver::new(sh.x.clone(), sh.y.clone(), rho, degree);
+        let mut pjrt = cq_ggadmm::runtime::pjrt_solver(
+            &dir,
+            cq_ggadmm::config::Task::Linear,
+            sh,
+            rho,
+            0.0,
+            degree,
+        )
+        .expect("pjrt solver");
+        let alpha = vec![0.3, -0.1, 0.7, 0.0];
+        let nbr = vec![1.0, 2.0, -1.0, 0.5];
+        let warm = vec![0.0; 4];
+        let a = native.update(&alpha, &nbr, &warm);
+        let b = pjrt.update(&alpha, &nbr, &warm);
+        for (x, y) in a.iter().zip(&b) {
+            assert!(
+                (x - y).abs() < 1e-4 * (1.0 + x.abs()),
+                "native {x} vs pjrt {y}"
+            );
+        }
+        // loss paths agree too
+        assert!((native.loss(&a) - pjrt.loss(&a)).abs() < 1e-6 * (1.0 + native.loss(&a)));
+    }
+}
+
+#[test]
+fn pjrt_logistic_solver_matches_native() {
+    let Some(dir) = artifacts_dir() else { return };
+    let ds = synthetic::logistic_dataset(32, 4, 6);
+    let shards = partition_uniform(&ds, 4, 6);
+    let (rho, mu0, degree) = (0.5, 0.05, 2);
+    for sh in &shards {
+        let mut native =
+            LogisticSolver::new(sh.x.clone(), sh.y.clone(), mu0, rho, degree);
+        let mut pjrt = cq_ggadmm::runtime::pjrt_solver(
+            &dir,
+            cq_ggadmm::config::Task::Logistic,
+            sh,
+            rho,
+            mu0,
+            degree,
+        )
+        .expect("pjrt solver");
+        let alpha = vec![0.1, -0.2, 0.05, 0.3];
+        let nbr = vec![0.5, 0.5, -0.5, 0.0];
+        let warm = vec![0.0; 4];
+        let a = native.update(&alpha, &nbr, &warm);
+        let b = pjrt.update(&alpha, &nbr, &warm);
+        for (x, y) in a.iter().zip(&b) {
+            assert!(
+                (x - y).abs() < 5e-3 * (1.0 + x.abs()),
+                "native {x:?} vs pjrt {y:?} (fixed Newton budget, f32)"
+            );
+        }
+    }
+}
+
+#[test]
+fn pjrt_quantize_artifact_matches_rust_codec_semantics() {
+    let Some(dir) = artifacts_dir() else { return };
+    let ctx = context_for(&dir).expect("ctx");
+    let d = 4usize;
+    let v: Vec<f32> = vec![0.9, -0.4, 0.2, -0.05];
+    let q_prev: Vec<f32> = vec![0.0; d];
+    let radius = 1.0f32;
+    let bits = 3u32;
+    let levels = (1u32 << bits) as f32; // grid points
+    let u: Vec<f32> = vec![0.99, 0.01, 0.5, 0.5]; // deterministic rounding
+    let outs = ctx
+        .execute(
+            "quantize_4",
+            &[
+                xla::Literal::vec1(&v),
+                xla::Literal::vec1(&q_prev),
+                xla::Literal::vec1(&[radius]),
+                xla::Literal::vec1(&[levels]),
+                xla::Literal::vec1(&u),
+            ],
+        )
+        .expect("quantize artifact");
+    let codes = &outs[0];
+    let recon = &outs[1];
+    // replicate the arithmetic the Rust quantizer uses
+    let delta = 2.0 * radius / (levels - 1.0);
+    for i in 0..d {
+        let c = (v[i] - q_prev[i] + radius) / delta;
+        let low = c.floor();
+        let frac = c - low;
+        let expect = if u[i] < frac { low + 1.0 } else { low };
+        let expect = expect.clamp(0.0, levels - 1.0);
+        assert_eq!(codes[i], expect, "coord {i}");
+        let er = q_prev[i] + delta * expect - radius;
+        assert!((recon[i] - er).abs() < 1e-5, "recon {i}: {} vs {er}", recon[i]);
+    }
+}
+
+#[test]
+fn pjrt_full_run_tracks_native_run() {
+    let Some(dir) = artifacts_dir() else { return };
+    // paper-shaped shards: synth-linear across 24 workers -> (50, 50)
+    let ds = synthetic::linear_dataset(1200, 50, 21);
+    let topo = Topology::random_bipartite(24, 0.3, 21);
+    let problem = Problem::new(&ds, &topo, 30.0, 0.0, 21);
+
+    let mut native = Run::new(
+        problem.clone(),
+        topo.clone(),
+        AlgSpec::ggadmm(),
+        RunOptions::default(),
+    );
+    let tn = native.run(25);
+
+    let mut pjrt = Run::new(
+        problem,
+        topo,
+        AlgSpec::ggadmm(),
+        RunOptions {
+            backend: Backend::Pjrt,
+            artifacts_dir: Some(dir),
+            ..RunOptions::default()
+        },
+    );
+    let tp = pjrt.run(25);
+
+    // same trajectory up to f32 artifact precision
+    for (a, b) in tn.points.iter().zip(&tp.points) {
+        let denom = 1.0 + a.loss_gap.abs();
+        assert!(
+            (a.loss_gap - b.loss_gap).abs() / denom < 5e-3,
+            "iter {}: native {:.6e} vs pjrt {:.6e}",
+            a.iteration,
+            a.loss_gap,
+            b.loss_gap
+        );
+        assert_eq!(a.cum_rounds, b.cum_rounds);
+        assert_eq!(a.cum_bits, b.cum_bits);
+    }
+}
+
+#[test]
+fn missing_artifact_is_reported() {
+    let Some(dir) = artifacts_dir() else { return };
+    let ds = synthetic::linear_dataset(640, 37, 9); // d=37 has no artifact
+    let shards = partition_uniform(&ds, 4, 9);
+    let err = cq_ggadmm::runtime::pjrt_solver(
+        &dir,
+        cq_ggadmm::config::Task::Linear,
+        &shards[0],
+        1.0,
+        0.0,
+        1,
+    )
+    .err()
+    .expect("should fail");
+    assert!(err.contains("no linear_setup artifact"), "{err}");
+}
+
+#[test]
+fn manifest_missing_dir_errors() {
+    let err = Manifest::load(Path::new("/nonexistent/dir")).unwrap_err();
+    assert!(err.contains("cannot read"));
+}

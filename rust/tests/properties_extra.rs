@@ -1,0 +1,269 @@
+//! Additional cross-module property and edge-case tests widening the
+//! suite beyond each module's local unit tests.
+
+use cq_ggadmm::algs::{AlgSpec, Problem, Run, RunOptions};
+use cq_ggadmm::comm::{EnergyModel, EnergyParams};
+use cq_ggadmm::config::{parse_toml, ExperimentConfig};
+use cq_ggadmm::data::synthetic;
+use cq_ggadmm::graph::{spectral, Topology};
+use cq_ggadmm::linalg::{Cholesky, Lu, Mat};
+use cq_ggadmm::quant::{codec, QuantConfig, Quantizer};
+use cq_ggadmm::testing::prop::check;
+use cq_ggadmm::util::rng::Pcg64;
+
+// ------------------------------------------------------------- linalg ----
+
+fn random_mat(g: &mut cq_ggadmm::testing::prop::Gen, r: usize, c: usize) -> Mat {
+    let data = g.normal_vec(r * c);
+    Mat::from_vec(r, c, data)
+}
+
+#[test]
+fn cholesky_and_lu_agree_on_spd_systems() {
+    check("chol == lu on SPD", 40, |g| {
+        let n = g.usize_in(1, 15);
+        let b = random_mat(g, n, n);
+        let a = b.t().matmul(&b).add_diag(n as f64 * 0.2);
+        let rhs = g.normal_vec(n);
+        let x1 = Cholesky::new(&a).expect("spd").solve(&rhs);
+        let x2 = Lu::new(&a).expect("nonsingular").solve(&rhs);
+        for (p, q) in x1.iter().zip(&x2) {
+            assert!((p - q).abs() < 1e-7 * (1.0 + p.abs()), "{p} vs {q}");
+        }
+    });
+}
+
+#[test]
+fn matmul_is_associative() {
+    check("(AB)C == A(BC)", 30, |g| {
+        let (m, k, l, n) = (
+            g.usize_in(1, 8),
+            g.usize_in(1, 8),
+            g.usize_in(1, 8),
+            g.usize_in(1, 8),
+        );
+        let a = random_mat(g, m, k);
+        let b = random_mat(g, k, l);
+        let c = random_mat(g, l, n);
+        let lhs = a.matmul(&b).matmul(&c);
+        let rhs = a.matmul(&b.matmul(&c));
+        assert!(lhs.sub(&rhs).max_abs() < 1e-9 * (1.0 + lhs.max_abs()));
+    });
+}
+
+#[test]
+fn power_iteration_bounded_by_fro_norm() {
+    check("sigma_max <= ||A||_F", 40, |g| {
+        let (r, c) = (g.usize_in(1, 10), g.usize_in(1, 10));
+        let a = random_mat(g, r, c);
+        let s = cq_ggadmm::linalg::power_iteration_sigma_max(&a, 300);
+        assert!(s <= a.fro_norm() + 1e-9);
+        // and >= |a_ij| for any entry (operator norm dominates entries)
+        assert!(s + 1e-9 >= a.max_abs());
+    });
+}
+
+// --------------------------------------------------------------- quant ----
+
+#[test]
+fn quantizer_handles_extreme_magnitudes() {
+    check("quantize at extreme scales", 40, |g| {
+        let scale = 10f64.powi(g.usize_in(0, 12) as i32 - 6);
+        let d = g.usize_in(1, 32);
+        let mut q = Quantizer::new(QuantConfig::default(), Pcg64::new(g.u64()));
+        let v: Vec<f64> = g.normal_vec(d).iter().map(|x| x * scale).collect();
+        let reference = vec![0.0; d];
+        let (msg, recon) = q.quantize(&v, &reference);
+        let delta = msg.step();
+        for (r, t) in recon.iter().zip(&v) {
+            assert!((r - t).abs() <= delta * (1.0 + 1e-6), "{r} vs {t} (delta {delta})");
+            assert!(r.is_finite());
+        }
+        // codec roundtrip survives extreme radii
+        let back = codec::decode(&codec::encode(&msg), d).unwrap();
+        assert_eq!(back, msg);
+    });
+}
+
+#[test]
+fn repeated_quantization_of_fixed_target_converges() {
+    // transmitting the same target repeatedly must drive the shared
+    // reconstruction to it geometrically (Delta decays by omega)
+    check("fixed-point tracking", 20, |g| {
+        let d = 16;
+        let target = g.normal_vec(d);
+        let mut q = Quantizer::new(
+            QuantConfig { bits0: 2, omega: 0.9, max_bits: 24 },
+            Pcg64::new(g.u64()),
+        );
+        let mut reference = vec![0.0; d];
+        for _ in 0..60 {
+            let (_, recon) = q.quantize(&target, &reference);
+            reference = recon;
+        }
+        let err = cq_ggadmm::util::max_abs_diff(&reference, &target);
+        assert!(err < 1e-3, "err={err}");
+    });
+}
+
+// -------------------------------------------------------------- config ----
+
+#[test]
+fn toml_parser_edge_cases() {
+    // empty doc
+    assert!(parse_toml("").is_ok());
+    // whitespace and comments only
+    assert!(parse_toml("  \n# hi\n\t\n").is_ok());
+    // duplicate keys: last wins
+    let doc = parse_toml("a = 1\na = 2\n").unwrap();
+    assert_eq!(doc.get_f64("", "a").unwrap(), Some(2.0));
+    // negative and exponent numbers
+    let doc = parse_toml("x = -1.5e-3\n").unwrap();
+    assert_eq!(doc.get_f64("", "x").unwrap(), Some(-1.5e-3));
+    // empty array
+    let doc = parse_toml("v = []\n").unwrap();
+    assert!(matches!(
+        doc.get("", "v"),
+        Some(cq_ggadmm::config::Value::Arr(items)) if items.is_empty()
+    ));
+}
+
+#[test]
+fn experiment_config_root_section_fallback() {
+    let cfg = ExperimentConfig::from_toml("workers = 10\nrho = 2.5\n").unwrap();
+    assert_eq!(cfg.workers, 10);
+    assert_eq!(cfg.rho, 2.5);
+}
+
+// ---------------------------------------------------------------- comm ----
+
+#[test]
+fn alternating_schedule_gets_double_bandwidth() {
+    check("bandwidth split per schedule", 30, |g| {
+        let n = g.usize_in(2, 64);
+        let p = EnergyParams::default();
+        let alt = EnergyModel::new(p, n, 0.5);
+        let jac = EnergyModel::new(p, n, 1.0);
+        assert!((alt.bandwidth_hz - 2.0 * jac.bandwidth_hz).abs() < 1e-6);
+        // same payload costs strictly less energy under the wider share
+        let bits = g.usize_in(100, 10_000) as u64;
+        let d = g.f64_in(10.0, 500.0);
+        assert!(alt.energy_j(bits, d) < jac.energy_j(bits, d));
+    });
+}
+
+// --------------------------------------------------------------- graph ----
+
+#[test]
+fn chain_is_special_case_of_bipartite_machinery() {
+    check("chain topologies valid", 20, |g| {
+        let n = g.usize_in(2, 40);
+        let t = Topology::chain(n);
+        assert!(t.is_connected());
+        assert!(t.is_bipartite_consistent());
+        assert_eq!(t.edges().len(), n - 1);
+        // spectral identities hold on chains too
+        let m = spectral::matrices(&t);
+        let lhs = m.degree.sub(&m.adjacency);
+        let rhs = m.m_minus.matmul(&m.m_minus.t()).scale(0.5);
+        assert!(lhs.sub(&rhs).max_abs() < 1e-10);
+    });
+}
+
+#[test]
+fn full_bipartite_graph_at_p_one() {
+    let t = Topology::random_bipartite(10, 1.0, 3);
+    // p=1 gives the complete bipartite graph over the grouping
+    assert_eq!(t.edges().len(), t.heads().len() * t.tails().len());
+}
+
+// ----------------------------------------------------------------- algs ----
+
+#[test]
+fn q_ggadmm_without_censoring_transmits_every_round() {
+    let topo = Topology::random_bipartite(8, 0.5, 9);
+    let ds = synthetic::linear_dataset(96, 5, 9);
+    let p = Problem::new(&ds, &topo, 5.0, 0.0, 9);
+    let mut run = Run::new(p, topo, AlgSpec::q_ggadmm(0.995, 2), RunOptions::default());
+    for _ in 0..20 {
+        run.step();
+    }
+    assert_eq!(run.comm().rounds(), 8 * 20);
+    // and still converges despite 2-bit payloads
+    let trace = run.run(200);
+    assert!(trace.last_gap() < 1e-6, "gap={:.3e}", trace.last_gap());
+}
+
+#[test]
+fn seeds_reproduce_stochastic_runs_exactly() {
+    check("CQ runs deterministic per seed", 10, |g| {
+        let seed = g.u64();
+        let topo = Topology::random_bipartite(6, 0.5, 3);
+        let ds = synthetic::linear_dataset(72, 4, 3);
+        let p = Problem::new(&ds, &topo, 5.0, 0.0, 3);
+        let spec = AlgSpec::cq_ggadmm(0.2, 0.85, 0.99, 2);
+        let opts = RunOptions { seed, ..RunOptions::default() };
+        let mut a = Run::new(p.clone(), topo.clone(), spec.clone(), opts.clone());
+        let mut b = Run::new(p, topo, spec, opts);
+        let ta = a.run(40);
+        let tb = b.run(40);
+        for (x, y) in ta.points.iter().zip(&tb.points) {
+            assert_eq!(x.loss_gap.to_bits(), y.loss_gap.to_bits());
+            assert_eq!(x.cum_bits, y.cum_bits);
+        }
+    });
+}
+
+#[test]
+fn energy_accounting_consistent_with_comm_log() {
+    let topo = Topology::random_bipartite(8, 0.4, 11);
+    let ds = synthetic::linear_dataset(96, 5, 11);
+    let p = Problem::new(&ds, &topo, 5.0, 0.0, 11);
+    let mut run = Run::new(p, topo, AlgSpec::ggadmm(), RunOptions::default());
+    for _ in 0..15 {
+        run.step();
+    }
+    let log = run.comm();
+    let sum_energy: f64 = log.transmissions.iter().map(|t| t.energy_j).sum();
+    let sum_bits: u64 = log.transmissions.iter().map(|t| t.payload_bits).sum();
+    assert!((sum_energy - log.total_energy_j).abs() < 1e-9);
+    assert_eq!(sum_bits, log.total_bits);
+    let last = run.trace().points.last().unwrap();
+    assert_eq!(last.cum_bits, log.total_bits);
+    assert!((last.cum_energy_j - log.total_energy_j).abs() < 1e-9);
+}
+
+#[test]
+fn dgd_is_much_slower_than_ggadmm_per_iteration() {
+    // the paper's motivation for second-order methods
+    let topo = Topology::random_bipartite(8, 0.5, 13);
+    let ds = synthetic::linear_dataset(96, 5, 13);
+    let p = Problem::new(&ds, &topo, 5.0, 0.0, 13);
+    let mut gg = Run::new(p.clone(), topo.clone(), AlgSpec::ggadmm(), RunOptions::default());
+    let tg = gg.run(100);
+    let td = cq_ggadmm::algs::dgd::run_dgd(&p, &topo, 0.01, 100, EnergyParams::default());
+    let it_g = tg.first_below(1e-3).map(|p| p.iteration).unwrap_or(u64::MAX);
+    let it_d = td.first_below(1e-3).map(|p| p.iteration).unwrap_or(u64::MAX);
+    assert!(it_g < it_d, "GGADMM {it_g} vs DGD {it_d}");
+}
+
+#[test]
+fn heavier_erasures_degrade_gracefully() {
+    // more failure injection => no crash, slower but monotone recovery
+    let topo = Topology::random_bipartite(8, 0.5, 17);
+    let ds = synthetic::linear_dataset(96, 5, 17);
+    let p = Problem::new(&ds, &topo, 5.0, 0.0, 17);
+    let mut gaps = Vec::new();
+    for drop_prob in [0.0, 0.2, 0.5] {
+        let mut run = Run::new(
+            p.clone(),
+            topo.clone(),
+            AlgSpec::ggadmm(),
+            RunOptions { drop_prob, seed: 17, ..RunOptions::default() },
+        );
+        gaps.push(run.run(150).last_gap());
+    }
+    assert!(gaps[0] < 1e-8);
+    assert!(gaps[1] < 1e-4);
+    assert!(gaps[2] < 1e-1, "50% erasures: gap={:.3e}", gaps[2]);
+}
