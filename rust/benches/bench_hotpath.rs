@@ -1,17 +1,21 @@
 //! Hot-path micro-benchmarks (first-party harness; no criterion offline).
 //!
-//! Covers every stage of the per-iteration pipeline — native and PJRT
-//! subproblem solves, quantization, bit-packing codec, a full GGADMM /
-//! CQ-GGADMM iteration at paper scale, and topology generation — and
-//! prints ns/op so the §Perf iteration log in EXPERIMENTS.md is
-//! regenerable.
+//! Covers every stage of the per-iteration pipeline — native (and, with
+//! `--features pjrt`, PJRT) subproblem solves, quantization, bit-packing
+//! codec, a full GGADMM / CQ-GGADMM iteration at paper scale, and topology
+//! generation — and prints ns/op so the §Perf iteration log in
+//! EXPERIMENTS.md is regenerable.
+//!
+//! The codec shootout compares the word-level (u64) packer against a
+//! faithful copy of the original bit-at-a-time loop on a d=10'000, 8-bit
+//! message — the acceptance workload of the build-system PR.
 //!
 //! Run with: `cargo bench --bench bench_hotpath`
 
 use cq_ggadmm::algs::{AlgSpec, Problem, Run, RunOptions};
-use cq_ggadmm::data::{partition_uniform, synthetic};
+use cq_ggadmm::data::{partition_uniform, synthetic, Shard};
 use cq_ggadmm::graph::Topology;
-use cq_ggadmm::quant::{codec, QuantConfig, Quantizer};
+use cq_ggadmm::quant::{codec, QuantConfig, QuantMessage, Quantizer};
 use cq_ggadmm::solver::{LinearSolver, LogisticSolver, SubproblemSolver};
 use cq_ggadmm::util::rng::Pcg64;
 use std::hint::black_box;
@@ -39,6 +43,140 @@ fn bench<F: FnMut()>(name: &str, mut f: F) -> f64 {
     }
 }
 
+/// The seed repo's bit-at-a-time encoder, kept verbatim as the shootout
+/// reference (and as a differential check on the word-level packer).
+fn bit_loop_encode(msg: &QuantMessage) -> Vec<u8> {
+    fn push_bits(buf: &mut Vec<u8>, bitlen: &mut usize, value: u64, width: u32) {
+        for i in 0..width {
+            let bit = (value >> i) & 1;
+            let byte_idx = *bitlen / 8;
+            if byte_idx == buf.len() {
+                buf.push(0);
+            }
+            if bit == 1 {
+                buf[byte_idx] |= 1 << (*bitlen % 8);
+            }
+            *bitlen += 1;
+        }
+    }
+    let mut buf = Vec::with_capacity((msg.payload_bits() as usize).div_ceil(8));
+    let mut bitlen = 0usize;
+    push_bits(&mut buf, &mut bitlen, (msg.radius as f32).to_bits() as u64, 32);
+    push_bits(&mut buf, &mut bitlen, msg.bits as u64, 32);
+    for &c in &msg.codes {
+        push_bits(&mut buf, &mut bitlen, c as u64, msg.bits);
+    }
+    buf
+}
+
+/// The seed repo's bit-at-a-time decoder (shootout reference).
+fn bit_loop_decode(buf: &[u8], d: usize) -> Option<QuantMessage> {
+    fn read_bits(buf: &[u8], pos: &mut usize, width: u32) -> Option<u64> {
+        let mut out = 0u64;
+        for i in 0..width {
+            let byte_idx = *pos / 8;
+            if byte_idx >= buf.len() {
+                return None;
+            }
+            let bit = (buf[byte_idx] >> (*pos % 8)) & 1;
+            out |= (bit as u64) << i;
+            *pos += 1;
+        }
+        Some(out)
+    }
+    let mut pos = 0usize;
+    let radius = f32::from_bits(read_bits(buf, &mut pos, 32)? as u32) as f64;
+    let bits = read_bits(buf, &mut pos, 32)? as u32;
+    if bits == 0 || bits > 32 || !(radius.is_finite()) || radius < 0.0 {
+        return None;
+    }
+    let mut codes = Vec::with_capacity(d);
+    for _ in 0..d {
+        codes.push(read_bits(buf, &mut pos, bits)? as u32);
+    }
+    Some(QuantMessage { codes, radius, bits })
+}
+
+/// Codec shootout on the acceptance workload: d=10'000 coordinates at 8
+/// bits each (the paper-scale "large model" message).
+fn bench_codec_shootout() {
+    println!("-- codec shootout: d=10000, 8-bit codes --");
+    let d = 10_000usize;
+    let codes: Vec<u32> = (0..d as u32)
+        .map(|i| i.wrapping_mul(2_654_435_761) & 0xFF)
+        .collect();
+    let msg = QuantMessage { codes, radius: 1.0, bits: 8 };
+
+    let word_bytes = codec::encode(&msg);
+    let ref_bytes = bit_loop_encode(&msg);
+    assert_eq!(word_bytes, ref_bytes, "codecs must agree bit-for-bit");
+    assert_eq!(bit_loop_decode(&ref_bytes, d).unwrap(), msg);
+
+    let enc_word = bench("codec encode d=10k b=8 (word-level)", || {
+        black_box(codec::encode(black_box(&msg)));
+    });
+    let dec_word = bench("codec decode d=10k b=8 (word-level)", || {
+        black_box(codec::decode(black_box(&word_bytes), d)).unwrap();
+    });
+    let enc_bit = bench("codec encode d=10k b=8 (seed bit-loop)", || {
+        black_box(bit_loop_encode(black_box(&msg)));
+    });
+    let dec_bit = bench("codec decode d=10k b=8 (seed bit-loop)", || {
+        black_box(bit_loop_decode(black_box(&ref_bytes), d)).unwrap();
+    });
+    println!(
+        "word-level speedup: encode {:.1}x, decode {:.1}x, encode+decode {:.1}x",
+        enc_bit / enc_word,
+        dec_bit / dec_word,
+        (enc_bit + dec_bit) / (enc_word + dec_word)
+    );
+    assert!(
+        enc_word + dec_word < enc_bit + dec_bit,
+        "word-level codec must beat the bit-loop on encode+decode \
+         ({:.0} vs {:.0} ns)",
+        enc_word + dec_word,
+        enc_bit + dec_bit
+    );
+}
+
+#[cfg(feature = "pjrt")]
+fn bench_pjrt(shards: &[Shard], shards_l: &[Shard], alpha: &[f64], nbr: &[f64], warm: &[f64]) {
+    let art = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if art.join("manifest.json").exists() {
+        let mut plin = cq_ggadmm::runtime::pjrt_solver(
+            &art,
+            cq_ggadmm::config::Task::Linear,
+            &shards[0],
+            30.0,
+            0.0,
+            7,
+        )
+        .expect("pjrt linear");
+        bench("PJRT  linear update (s=50,d=50)", || {
+            black_box(plin.update(black_box(alpha), black_box(nbr), warm));
+        });
+        let mut plog = cq_ggadmm::runtime::pjrt_solver(
+            &art,
+            cq_ggadmm::config::Task::Logistic,
+            &shards_l[0],
+            0.1,
+            0.01,
+            7,
+        )
+        .expect("pjrt logistic");
+        bench("PJRT  logistic update (s=50,d=50)", || {
+            black_box(plog.update(black_box(alpha), black_box(nbr), warm));
+        });
+    } else {
+        println!("(PJRT benches skipped: run `make artifacts`)");
+    }
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn bench_pjrt(_: &[Shard], _: &[Shard], _: &[f64], _: &[f64], _: &[f64]) {
+    println!("(PJRT benches skipped: built without the `pjrt` feature)");
+}
+
 fn main() {
     println!("== hot-path micro-benchmarks ==");
     let d = 50;
@@ -52,6 +190,11 @@ fn main() {
         let mut q2 = q.clone();
         black_box(q2.quantize(black_box(&v), black_box(&reference)));
     });
+    let mut recon_buf = vec![0.0; d];
+    bench("quantize_into d=50 (alloc-free)", || {
+        let mut q2 = q.clone();
+        black_box(q2.quantize_into(black_box(&v), black_box(&reference), &mut recon_buf));
+    });
     let (msg, _) = q.quantize(&v, &reference);
     bench("codec encode d=50", || {
         black_box(codec::encode(black_box(&msg)));
@@ -60,6 +203,8 @@ fn main() {
     bench("codec decode d=50", || {
         black_box(codec::decode(black_box(&bytes), d)).unwrap();
     });
+
+    bench_codec_shootout();
 
     // native solvers at paper scale (s=50, d=50)
     let ds = synthetic::linear_dataset(1200, d, 3);
@@ -71,6 +216,10 @@ fn main() {
     bench("native linear update (s=50,d=50)", || {
         black_box(lin.update(black_box(&alpha), black_box(&nbr), &warm));
     });
+    let mut theta_buf = vec![0.0; d];
+    bench("native linear update_into (alloc-free)", || {
+        lin.update_into(black_box(&alpha), black_box(&nbr), black_box(&mut theta_buf));
+    });
     let dsl = synthetic::logistic_dataset(1200, d, 4);
     let shards_l = partition_uniform(&dsl, 24, 4);
     let mut logi =
@@ -79,36 +228,7 @@ fn main() {
         black_box(logi.update(black_box(&alpha), black_box(&nbr), &warm));
     });
 
-    // PJRT solvers (if artifacts are built)
-    let art = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
-    if art.join("manifest.json").exists() {
-        let mut plin = cq_ggadmm::runtime::pjrt_solver(
-            &art,
-            cq_ggadmm::config::Task::Linear,
-            &shards[0],
-            30.0,
-            0.0,
-            7,
-        )
-        .expect("pjrt linear");
-        bench("PJRT  linear update (s=50,d=50)", || {
-            black_box(plin.update(black_box(&alpha), black_box(&nbr), &warm));
-        });
-        let mut plog = cq_ggadmm::runtime::pjrt_solver(
-            &art,
-            cq_ggadmm::config::Task::Logistic,
-            &shards_l[0],
-            0.1,
-            0.01,
-            7,
-        )
-        .expect("pjrt logistic");
-        bench("PJRT  logistic update (s=50,d=50)", || {
-            black_box(plog.update(black_box(&alpha), black_box(&nbr), &warm));
-        });
-    } else {
-        println!("(PJRT benches skipped: run `make artifacts`)");
-    }
+    bench_pjrt(&shards, &shards_l, &alpha, &nbr, &warm);
 
     // full iterations at paper scale, native backend
     let topo = Topology::random_bipartite(24, 0.3, 21);

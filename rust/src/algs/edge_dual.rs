@@ -192,19 +192,18 @@ impl EdgeDualRun {
 
 fn build(problem: &Problem, topo: &Topology) -> Vec<Box<dyn SubproblemSolver>> {
     use crate::config::Task;
+    use std::sync::Arc;
     (0..topo.n())
         .map(|i| -> Box<dyn SubproblemSolver> {
             let sh = &problem.shards[i];
             match problem.task {
-                Task::Linear => Box::new(LinearSolver::new(
-                    sh.x.clone(),
-                    sh.y.clone(),
+                Task::Linear => Box::new(LinearSolver::from_shard(
+                    Arc::clone(sh),
                     problem.rho,
                     topo.degree(i),
                 )),
-                Task::Logistic => Box::new(LogisticSolver::new(
-                    sh.x.clone(),
-                    sh.y.clone(),
+                Task::Logistic => Box::new(LogisticSolver::from_shard(
+                    Arc::clone(sh),
                     problem.mu0,
                     problem.rho,
                     topo.degree(i),

@@ -33,6 +33,7 @@ use crate::quant::QuantConfig;
 use crate::solver::{
     central_linear_optimum, central_logistic_optimum, global_objective,
 };
+use std::sync::Arc;
 
 /// Update schedule.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -131,7 +132,9 @@ impl AlgSpec {
 pub struct Problem {
     pub task: Task,
     pub dataset_name: String,
-    pub shards: Vec<Shard>,
+    /// Shards are shared (`Arc`) so solver construction and `Problem`
+    /// clones never copy the underlying `X`/`y` data.
+    pub shards: Vec<Arc<Shard>>,
     pub rho: f64,
     pub mu0: f64,
     pub d: usize,
@@ -142,7 +145,10 @@ pub struct Problem {
 impl Problem {
     /// Partition `ds` across the topology's workers and precompute `f*`.
     pub fn new(ds: &Dataset, topo: &Topology, rho: f64, mu0: f64, seed: u64) -> Problem {
-        let shards = partition_uniform(ds, topo.n(), seed);
+        let shards: Vec<Arc<Shard>> = partition_uniform(ds, topo.n(), seed)
+            .into_iter()
+            .map(Arc::new)
+            .collect();
         let theta_star = match ds.task {
             Task::Linear => central_linear_optimum(&shards),
             Task::Logistic => central_logistic_optimum(&shards, mu0),

@@ -4,15 +4,24 @@
 //! gates and quantizers, and drives iterations of the configured
 //! [`AlgSpec`] while recording the paper's metrics.  The same state
 //! transitions are reused by the threaded [`crate::coordinator`].
+//!
+//! Perf: the sequential per-iteration path is allocation-free after
+//! construction.  Neighbor sums, quantized candidates, dual increments
+//! and the schedule's phase groups live in persistent scratch buffers;
+//! solvers update `theta` in place through
+//! [`SubproblemSolver::update_into`]; shard data is shared (`Arc`), never
+//! copied per worker.  The opt-in threaded fan-out builds one job list
+//! per phase; snapshots and trace export may still clone.
 
 use super::{AlgSpec, Problem, Schedule};
 use crate::censor::{gate, Gate};
 use crate::comm::{full_precision_bits, CommLog, EnergyModel, EnergyParams, Transmission};
-use crate::graph::{Group, Topology};
+use crate::graph::Topology;
 use crate::metrics::{Trace, TracePoint};
 use crate::quant::Quantizer;
 use crate::solver::{Backend, LinearSolver, LogisticSolver, SubproblemSolver};
 use crate::util::rng::Pcg64;
+use std::sync::Arc;
 
 /// Execution options for a run.
 #[derive(Clone, Debug)]
@@ -80,10 +89,17 @@ pub struct Run {
     trace: Trace,
     iter: u64,
     rng: Pcg64,
-    /// reusable neighbor-sum buffer for the sequential update path
-    nbr_scratch: Vec<f64>,
+    /// persistent per-worker neighbor-sum buffers (filled each phase)
+    nbr_sums: Vec<Vec<f64>>,
+    /// persistent quantize/censor candidate buffer (transmit is sequential)
+    cand: Vec<f64>,
     /// preallocated per-worker dual-update increments
     dual_deltas: Vec<Vec<f64>>,
+    /// cached phase groups: `[heads, tails]` for alternating schedules,
+    /// `[all]` for Jacobian — constant over a run, so `step` never
+    /// rebuilds them (taken/restored around the phase loop to satisfy the
+    /// borrow checker without cloning)
+    phase_groups: Vec<Vec<usize>>,
 }
 
 impl Run {
@@ -112,9 +128,15 @@ impl Run {
         let energy = EnergyModel::new(opts.energy, topo.n(), spec.concurrent_fraction());
         let trace = Trace::new(&spec.name, &problem.dataset_name);
         let n = topo.n();
+        let phase_groups = match spec.schedule {
+            Schedule::Alternating => vec![topo.heads(), topo.tails()],
+            Schedule::Jacobian => vec![(0..n).collect()],
+        };
         Run {
-            nbr_scratch: vec![0.0; d],
+            nbr_sums: vec![vec![0.0; d]; n],
+            cand: vec![0.0; d],
             dual_deltas: vec![vec![0.0; d]; n],
+            phase_groups,
             problem,
             topo,
             spec,
@@ -129,153 +151,117 @@ impl Run {
         }
     }
 
-    /// Penalty linear term for worker `i`'s subproblem.
+    /// Fill the persistent neighbor-sum buffers for `ids` from the current
+    /// hat state (paper eqs. (21)/(22)).
     ///
-    /// * Alternating (GGADMM, eqs. (21)/(22)): `sum_{m in N(i)} theta_hat_m`.
+    /// * Alternating (GGADMM): `sum_{m in N(i)} theta_hat_m`.
     /// * Jacobian (C-ADMM / DCADMM of Shi et al. 2014, Liu et al. 2019):
     ///   the update anchors on the worker's *own* last broadcast as well,
     ///   `d_i * theta_hat_i + sum_m theta_hat_m`, with the doubled
     ///   quadratic penalty `rho d_i ||theta||^2` (see `build_solvers`) —
     ///   the naive Jacobi variant without the anchor diverges.
-    fn neighbor_sum(&self, i: usize) -> Vec<f64> {
+    fn fill_neighbor_sums(&mut self, ids: &[usize]) {
         let d = self.problem.d;
-        let mut sum = vec![0.0; d];
-        for &m in self.topo.neighbors(i) {
-            crate::util::axpy(&mut sum, 1.0, &self.workers[m].hat);
+        let jacobian = self.spec.schedule == Schedule::Jacobian;
+        for &i in ids {
+            let sum = &mut self.nbr_sums[i];
+            sum.iter_mut().for_each(|v| *v = 0.0);
+            for &m in self.topo.neighbors(i) {
+                let hat = &self.workers[m].hat;
+                for j in 0..d {
+                    sum[j] += hat[j];
+                }
+            }
+            if jacobian {
+                let deg = self.topo.degree(i) as f64;
+                let hat = &self.workers[i].hat;
+                for j in 0..d {
+                    sum[j] += deg * hat[j];
+                }
+            }
         }
-        if self.spec.schedule == Schedule::Jacobian {
-            crate::util::axpy(&mut sum, self.topo.degree(i) as f64, &self.workers[i].hat);
-        }
-        sum
     }
 
     /// Primal update for one group of workers (in parallel across the
     /// group, as the paper's schedule allows).
     ///
-    /// Perf: the sequential path is allocation-free after warmup (scratch
-    /// neighbor-sum buffer, split field borrows instead of input clones);
-    /// see EXPERIMENTS.md §Perf.  Thread fan-out only pays for expensive
-    /// subproblems (logistic Newton), so tiny closed-form updates should
-    /// run with `threads = 1`.
+    /// Perf: both paths are allocation-free — neighbor sums land in
+    /// persistent buffers, and `update_into` solves in place over each
+    /// worker's `theta` (which doubles as the warm start).  Thread fan-out
+    /// only pays for expensive subproblems (logistic Newton), so tiny
+    /// closed-form updates should run with `threads = 1`.
     fn update_group(&mut self, ids: &[usize]) {
+        debug_assert!(ids.windows(2).all(|w| w[0] < w[1]), "ids must be increasing");
+        self.fill_neighbor_sums(ids);
         if self.opts.threads <= 1 || ids.len() <= 1 {
             for &i in ids {
-                // fill the scratch neighbor sum (immutable borrow ends
-                // before the solver call below)
-                let d = self.problem.d;
-                self.nbr_scratch.iter_mut().for_each(|v| *v = 0.0);
-                for &m in self.topo.neighbors(i) {
-                    for j in 0..d {
-                        self.nbr_scratch[j] += self.workers[m].hat[j];
-                    }
-                }
-                if self.spec.schedule == Schedule::Jacobian {
-                    let deg = self.topo.degree(i) as f64;
-                    for j in 0..d {
-                        self.nbr_scratch[j] += deg * self.workers[i].hat[j];
-                    }
-                }
-                // disjoint field borrows: solvers (mut) + workers/scratch
-                let theta = self.solvers[i].update(
-                    &self.workers[i].alpha,
-                    &self.nbr_scratch,
-                    &self.workers[i].theta,
-                );
-                self.workers[i].theta = theta;
+                let w = &mut self.workers[i];
+                self.solvers[i].update_into(&w.alpha, &self.nbr_sums[i], &mut w.theta);
             }
             return;
         }
-        // threaded path: gather inputs first (immutable pass), then solve
-        let inputs: Vec<(usize, Vec<f64>, Vec<f64>, Vec<f64>)> = ids
-            .iter()
-            .map(|&i| {
-                (
-                    i,
-                    self.workers[i].alpha.clone(),
-                    self.neighbor_sum(i),
-                    self.workers[i].theta.clone(),
-                )
-            })
+        // threaded path: zip disjoint (&mut solver, &mut worker) pairs out
+        // of the two vectors, keep the group's ids, then chunk them across
+        // scoped threads — no input cloning, no output collection, every
+        // solve writes its worker's theta in place
+        let threads = self.opts.threads;
+        let sums = &self.nbr_sums;
+        let jobs: Vec<(&mut Box<dyn SubproblemSolver>, &mut WorkerState, &[f64])> = self
+            .solvers
+            .iter_mut()
+            .zip(self.workers.iter_mut())
+            .enumerate()
+            .filter(|(i, _)| ids.binary_search(i).is_ok())
+            .map(|(i, (solver, worker))| (solver, worker, sums[i].as_slice()))
             .collect();
-        {
-            // split the solver vector so each thread owns its workers
-            let mut solver_refs: Vec<(usize, &mut Box<dyn SubproblemSolver>, &(usize, Vec<f64>, Vec<f64>, Vec<f64>))> = Vec::new();
-            let mut remaining: &mut [Box<dyn SubproblemSolver>] = &mut self.solvers;
-            let mut offset = 0usize;
-            let mut inputs_iter = inputs.iter().peekable();
-            while let Some(input) = inputs_iter.next() {
-                let i = input.0;
-                let (_, rest) = remaining.split_at_mut(i - offset);
-                let (item, rest2) = rest.split_at_mut(1);
-                solver_refs.push((i, &mut item[0], input));
-                remaining = rest2;
-                offset = i + 1;
-                let _ = inputs_iter.peek();
+        std::thread::scope(|scope| {
+            let chunk = jobs.len().div_ceil(threads.max(1));
+            let mut jobs = jobs;
+            let mut handles = Vec::new();
+            while !jobs.is_empty() {
+                let take = chunk.min(jobs.len());
+                let rest = jobs.split_off(take);
+                let batch = std::mem::replace(&mut jobs, rest);
+                handles.push(scope.spawn(move || {
+                    for (solver, w, sum) in batch {
+                        solver.update_into(&w.alpha, sum, &mut w.theta);
+                    }
+                }));
             }
-            let threads = self.opts.threads;
-            let results: Vec<(usize, Vec<f64>)> = {
-                let jobs: Vec<_> = solver_refs
-                    .into_iter()
-                    .map(|(i, solver, input)| (i, solver, input))
-                    .collect();
-                // scoped threads over chunks of jobs
-                let mut out: Vec<Option<(usize, Vec<f64>)>> =
-                    (0..jobs.len()).map(|_| None).collect();
-                std::thread::scope(|scope| {
-                    let chunk = jobs.len().div_ceil(threads.max(1));
-                    let mut job_slices: Vec<_> = Vec::new();
-                    let mut jobs = jobs;
-                    let mut outs: &mut [Option<(usize, Vec<f64>)>] = &mut out;
-                    while !jobs.is_empty() {
-                        let take = chunk.min(jobs.len());
-                        let rest = jobs.split_off(take);
-                        let (head_out, rest_out) = outs.split_at_mut(take);
-                        job_slices.push((std::mem::replace(&mut jobs, rest), head_out));
-                        outs = rest_out;
-                    }
-                    let mut handles = Vec::new();
-                    for (batch, out_slice) in job_slices {
-                        handles.push(scope.spawn(move || {
-                            for ((i, solver, input), slot) in
-                                batch.into_iter().zip(out_slice.iter_mut())
-                            {
-                                let (_, alpha, nbr, warm) = input;
-                                *slot = Some((i, solver.update(alpha, nbr, warm)));
-                            }
-                        }));
-                    }
-                    for h in handles {
-                        h.join().expect("solver thread panicked");
-                    }
-                });
-                out.into_iter().map(|x| x.unwrap()).collect()
-            };
-            for (i, theta) in results {
-                self.workers[i].theta = theta;
+            for h in handles {
+                h.join().expect("solver thread panicked");
             }
-        }
+        });
     }
 
     /// Transmission pipeline (quantize -> censor -> broadcast) for one
     /// group at censoring iteration index `k_plus_1`.
+    ///
+    /// Perf: the candidate state lands in the persistent `cand` buffer
+    /// (quantizers reconstruct into it; full-precision senders memcpy
+    /// their theta) and a transmit commits with `copy_from_slice` — no
+    /// per-round vector allocation.
     fn transmit_group(&mut self, ids: &[usize], k_plus_1: u64) {
+        let d = self.problem.d;
         for &i in ids {
-            let d = self.problem.d;
             let w = &mut self.workers[i];
-            let (candidate_hat, payload_bits) = match &mut w.quantizer {
+            let payload_bits = match &mut w.quantizer {
                 Some(q) => {
                     // quantize the difference against the last state the
                     // neighbors hold (hat) so sender/receiver stay in sync
-                    let (msg, recon) = q.quantize(&w.theta, &w.hat);
-                    (recon, msg.payload_bits())
+                    let (_radius, bits) = q.quantize_into(&w.theta, &w.hat, &mut self.cand);
+                    crate::quant::payload_bits(d, bits)
                 }
-                None => (w.theta.clone(), full_precision_bits(d)),
+                None => {
+                    self.cand.copy_from_slice(&w.theta);
+                    full_precision_bits(d)
+                }
             };
-            let decision = match (&self.spec.censor, self.workers[i].transmitted_once) {
+            let decision = match (&self.spec.censor, w.transmitted_once) {
                 // first broadcast always goes out (state init)
                 (_, false) => Gate::Transmit,
                 (None, _) => Gate::Transmit,
-                (Some(c), true) => gate(c, k_plus_1, &self.workers[i].hat, &candidate_hat),
+                (Some(c), true) => gate(c, k_plus_1, &w.hat, &self.cand),
             };
             if decision == Gate::Transmit {
                 // failure injection: erasure with perfect feedback — cost
@@ -286,13 +272,13 @@ impl Run {
                 self.comm.record(Transmission {
                     worker: i,
                     iteration: self.iter,
-                    payload_bits: payload_bits,
+                    payload_bits,
                     distance_m: dist,
                     energy_j: self.energy.energy_j(payload_bits, dist),
                 });
                 if !dropped {
-                    self.workers[i].hat = candidate_hat;
-                    self.workers[i].transmitted_once = true;
+                    w.hat.copy_from_slice(&self.cand);
+                    w.transmitted_once = true;
                 }
             }
         }
@@ -317,24 +303,17 @@ impl Run {
         }
     }
 
-    /// Execute one iteration of the configured schedule.
+    /// Execute one iteration of the configured schedule: for each phase
+    /// group (heads then tails, or everyone under Jacobian), primal update
+    /// then transmission, followed by the dual update.
     pub fn step(&mut self) {
         let k_plus_1 = self.iter + 1;
-        match self.spec.schedule {
-            Schedule::Alternating => {
-                let heads = self.topo.heads();
-                let tails = self.topo.tails();
-                self.update_group(&heads);
-                self.transmit_group(&heads, k_plus_1);
-                self.update_group(&tails);
-                self.transmit_group(&tails, k_plus_1);
-            }
-            Schedule::Jacobian => {
-                let all: Vec<usize> = (0..self.topo.n()).collect();
-                self.update_group(&all);
-                self.transmit_group(&all, k_plus_1);
-            }
+        let groups = std::mem::take(&mut self.phase_groups);
+        for group in &groups {
+            self.update_group(group);
+            self.transmit_group(group, k_plus_1);
         }
+        self.phase_groups = groups;
         self.dual_update();
         self.iter += 1;
         if self.iter % self.opts.record_every == 0 {
@@ -439,22 +418,20 @@ fn build_solvers(
         .map(|i| -> Box<dyn SubproblemSolver> {
             let sh = &problem.shards[i];
             // Jacobian updates carry the doubled penalty rho*d_i||theta||^2
-            // of DCADMM (see `neighbor_sum`); the solver's quadratic
+            // of DCADMM (see `fill_neighbor_sums`); the solver's quadratic
             // coefficient is rho*degree/2, so feed it 2*d_i.
             let degree = match schedule {
                 Schedule::Alternating => topo.degree(i),
                 Schedule::Jacobian => 2 * topo.degree(i),
             };
             match (opts.backend, problem.task) {
-                (Backend::Native, Task::Linear) => Box::new(LinearSolver::new(
-                    sh.x.clone(),
-                    sh.y.clone(),
+                (Backend::Native, Task::Linear) => Box::new(LinearSolver::from_shard(
+                    Arc::clone(sh),
                     problem.rho,
                     degree,
                 )),
-                (Backend::Native, Task::Logistic) => Box::new(LogisticSolver::new(
-                    sh.x.clone(),
-                    sh.y.clone(),
+                (Backend::Native, Task::Logistic) => Box::new(LogisticSolver::from_shard(
+                    Arc::clone(sh),
                     problem.mu0,
                     problem.rho,
                     degree,
@@ -474,10 +451,6 @@ fn build_solvers(
         })
         .collect()
 }
-
-// group is unused directly but kept for symmetry of the public API
-#[allow(unused_imports)]
-use Group as _Group;
 
 #[cfg(test)]
 mod tests {
@@ -616,6 +589,36 @@ mod tests {
             par.step();
         }
         for i in 0..10 {
+            let a = seq.snapshot(i);
+            let b = par.snapshot(i);
+            for (x, y) in a.theta.iter().zip(&b.theta) {
+                assert!((x - y).abs() < 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn threaded_logistic_matches_sequential() {
+        // the thread fan-out is meant for Newton-dominated subproblems;
+        // lock the in-place threaded path to the sequential one there too
+        let (p, t) = small_problem(false, 8, 15);
+        let mut seq = Run::new(
+            p.clone(),
+            t.clone(),
+            AlgSpec::ggadmm(),
+            RunOptions { threads: 1, ..RunOptions::default() },
+        );
+        let mut par = Run::new(
+            p,
+            t,
+            AlgSpec::ggadmm(),
+            RunOptions { threads: 3, ..RunOptions::default() },
+        );
+        for _ in 0..10 {
+            seq.step();
+            par.step();
+        }
+        for i in 0..8 {
             let a = seq.snapshot(i);
             let b = par.snapshot(i);
             for (x, y) in a.theta.iter().zip(&b.theta) {

@@ -80,16 +80,16 @@ impl Coordinator {
                 Schedule::Alternating => topo.degree(i),
                 Schedule::Jacobian => 2 * topo.degree(i),
             };
+            // solvers share the shard through the Arc — no per-worker copy
+            // of the underlying X/y data
             let solver: Box<dyn SubproblemSolver> = match problem.task {
-                crate::config::Task::Linear => Box::new(LinearSolver::new(
-                    problem.shards[i].x.clone(),
-                    problem.shards[i].y.clone(),
+                crate::config::Task::Linear => Box::new(LinearSolver::from_shard(
+                    std::sync::Arc::clone(&problem.shards[i]),
                     problem.rho,
                     degree,
                 )),
-                crate::config::Task::Logistic => Box::new(LogisticSolver::new(
-                    problem.shards[i].x.clone(),
-                    problem.shards[i].y.clone(),
+                crate::config::Task::Logistic => Box::new(LogisticSolver::from_shard(
+                    std::sync::Arc::clone(&problem.shards[i]),
                     problem.mu0,
                     problem.rho,
                     degree,

@@ -58,7 +58,7 @@ pub fn worker_main(setup: WorkerSetup, rx: Receiver<Command>, tx: Sender<Event>)
                 if jacobian_anchor {
                     crate::util::axpy(&mut nbr_sum, neighbors.len() as f64, &hat_self);
                 }
-                theta = solver.update(&alpha, &nbr_sum, &theta);
+                solver.update_into(&alpha, &nbr_sum, &mut theta);
 
                 // transmission pipeline: quantize -> censor -> broadcast
                 let (candidate_hat, payload) = match &mut quantizer {

@@ -22,10 +22,24 @@
 //! * **Layer 1 (Pallas, build time)** — the compute hot-spot kernels the
 //!   L2 solvers call (`python/compile/kernels/`).
 //!
-//! [`runtime`] loads the HLO artifacts through PJRT (`xla` crate) and
-//! executes them on the per-iteration hot path; [`solver`] provides the
-//! bit-identical native Rust implementation used for differential testing
-//! and as a fallback when no artifact matches a shape.
+//! [`runtime`] loads the HLO artifacts through PJRT (`xla` crate, behind
+//! the off-by-default `pjrt` cargo feature — the default build is
+//! dependency-free) and executes them on the per-iteration hot path;
+//! [`solver`] provides the bit-identical native Rust implementation used
+//! for differential testing and as a fallback when no artifact matches a
+//! shape.
+//!
+//! ## Perf contract
+//!
+//! The default (sequential) iteration hot path ([`algs::Run::step`]) is
+//! allocation-free after construction: solvers update in place via
+//! [`solver::SubproblemSolver::update_into`], neighbor sums / quantizer
+//! reconstructions / dual increments / phase groups live in persistent
+//! scratch buffers, and shard data is shared behind `Arc` rather than
+//! copied per worker.  (The opt-in `threads > 1` fan-out builds one small
+//! job list per phase; per-step O(d^2)/O(s) solver temporaries are
+//! intrinsic to the math.)  `cargo bench --bench bench_hotpath` tracks
+//! the numbers.
 
 pub mod algs;
 pub mod analysis;

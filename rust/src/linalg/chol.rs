@@ -45,27 +45,35 @@ impl Cholesky {
 
     /// Solve `A x = b`.
     pub fn solve(&self, b: &[f64]) -> Vec<f64> {
+        let mut x = vec![0.0; self.l.rows()];
+        self.solve_into(b, &mut x);
+        x
+    }
+
+    /// Allocation-free solve into a caller-provided buffer (`b` and `out`
+    /// must not alias).  `out` doubles as the forward-substitution
+    /// workspace: the backward pass reads `y` only at index `i` and the
+    /// already-final `x` values at indices `> i`, so it is safely in-place.
+    pub fn solve_into(&self, b: &[f64], out: &mut [f64]) {
         let n = self.l.rows();
         assert_eq!(b.len(), n, "solve dimension mismatch");
-        // forward: L y = b
-        let mut y = vec![0.0; n];
+        assert_eq!(out.len(), n, "solve output dimension mismatch");
+        // forward: L y = b (y written into out)
         for i in 0..n {
             let mut sum = b[i];
             for k in 0..i {
-                sum -= self.l[(i, k)] * y[k];
+                sum -= self.l[(i, k)] * out[k];
             }
-            y[i] = sum / self.l[(i, i)];
+            out[i] = sum / self.l[(i, i)];
         }
-        // backward: L^T x = y
-        let mut x = vec![0.0; n];
+        // backward: L^T x = y (in place over out)
         for i in (0..n).rev() {
-            let mut sum = y[i];
+            let mut sum = out[i];
             for k in i + 1..n {
-                sum -= self.l[(k, i)] * x[k];
+                sum -= self.l[(k, i)] * out[k];
             }
-            x[i] = sum / self.l[(i, i)];
+            out[i] = sum / self.l[(i, i)];
         }
-        x
     }
 
     /// Dense inverse `A^{-1}` (used to feed the `linear_update` artifact,
@@ -117,6 +125,17 @@ mod tests {
         for (xs, xt) in x.iter().zip(&x_true) {
             assert!((xs - xt).abs() < 1e-8, "{xs} vs {xt}");
         }
+    }
+
+    #[test]
+    fn solve_into_matches_solve() {
+        let a = random_spd(9, 5);
+        let ch = Cholesky::new(&a).unwrap();
+        let b: Vec<f64> = (0..9).map(|i| (i as f64 * 0.7).cos()).collect();
+        let x = ch.solve(&b);
+        let mut out = vec![1.0; 9]; // stale contents must not matter
+        ch.solve_into(&b, &mut out);
+        assert_eq!(x, out);
     }
 
     #[test]

@@ -3,66 +3,137 @@
 //!
 //! Layout (little-endian bitstream):
 //!   [ radius: f32 (32 bits) ][ bits: u32 (32 bits) ][ d codes of `bits` ]
+//!
+//! Perf: packing is word-level — codes accumulate in a `u64` and flush as
+//! whole little-endian 32-bit words, so a d-coordinate message costs
+//! O(d) shifts/ors instead of the O(d * b) per-bit loop of the original
+//! implementation (see `bench_hotpath`'s codec shootout). The bit-level
+//! layout is unchanged (golden test below).
 
 use super::QuantMessage;
 
-/// Append `width` low bits of `value` to the bitstream.
-fn push_bits(buf: &mut Vec<u8>, bitlen: &mut usize, value: u64, width: u32) {
-    for i in 0..width {
-        let bit = (value >> i) & 1;
-        let byte_idx = *bitlen / 8;
-        if byte_idx == buf.len() {
-            buf.push(0);
+/// Word-level little-endian bit accumulator.
+///
+/// Invariant: fewer than 32 pending bits after every `push`, so a push of
+/// up to 32 bits never overflows the 64-bit accumulator.
+struct BitWriter {
+    buf: Vec<u8>,
+    acc: u64,
+    pending: u32,
+}
+
+impl BitWriter {
+    fn with_capacity(bytes: usize) -> BitWriter {
+        BitWriter { buf: Vec::with_capacity(bytes), acc: 0, pending: 0 }
+    }
+
+    /// Append the `width` low bits of `value` (width in 1..=32).
+    #[inline]
+    fn push(&mut self, value: u64, width: u32) {
+        debug_assert!((1..=32).contains(&width));
+        debug_assert!(self.pending < 32);
+        let mask = if width == 64 { u64::MAX } else { (1u64 << width) - 1 };
+        self.acc |= (value & mask) << self.pending;
+        self.pending += width;
+        if self.pending >= 32 {
+            self.buf.extend_from_slice(&(self.acc as u32).to_le_bytes());
+            self.acc >>= 32;
+            self.pending -= 32;
         }
-        if bit == 1 {
-            buf[byte_idx] |= 1 << (*bitlen % 8);
+    }
+
+    /// Flush the trailing partial word; total bytes = ceil(bits / 8).
+    fn finish(mut self) -> Vec<u8> {
+        while self.pending > 0 {
+            self.buf.push(self.acc as u8);
+            self.acc >>= 8;
+            self.pending = self.pending.saturating_sub(8);
         }
-        *bitlen += 1;
+        self.buf
     }
 }
 
-/// Read `width` bits starting at `*pos` (advances `*pos`).
-fn read_bits(buf: &[u8], pos: &mut usize, width: u32) -> Option<u64> {
-    let mut out = 0u64;
-    for i in 0..width {
-        let byte_idx = *pos / 8;
-        if byte_idx >= buf.len() {
-            return None;
-        }
-        let bit = (buf[byte_idx] >> (*pos % 8)) & 1;
-        out |= (bit as u64) << i;
-        *pos += 1;
+/// Word-level little-endian bit reader over a byte slice.
+struct BitReader<'a> {
+    buf: &'a [u8],
+    /// Next unread byte.
+    byte: usize,
+    acc: u64,
+    avail: u32,
+}
+
+impl<'a> BitReader<'a> {
+    fn new(buf: &'a [u8]) -> BitReader<'a> {
+        BitReader { buf, byte: 0, acc: 0, avail: 0 }
     }
-    Some(out)
+
+    /// Read `width` bits (width in 1..=32); `None` when the stream is
+    /// exhausted before `width` bits are available.
+    #[inline]
+    fn read(&mut self, width: u32) -> Option<u64> {
+        debug_assert!((1..=32).contains(&width));
+        if self.avail < width {
+            // refill a whole 32-bit word when possible (avail < 32 here,
+            // so the shifted word always fits the 64-bit accumulator)
+            if self.byte + 4 <= self.buf.len() {
+                let w = u32::from_le_bytes([
+                    self.buf[self.byte],
+                    self.buf[self.byte + 1],
+                    self.buf[self.byte + 2],
+                    self.buf[self.byte + 3],
+                ]);
+                self.acc |= (w as u64) << self.avail;
+                self.byte += 4;
+                self.avail += 32;
+            } else {
+                while self.avail < width {
+                    if self.byte >= self.buf.len() {
+                        return None;
+                    }
+                    self.acc |= (self.buf[self.byte] as u64) << self.avail;
+                    self.byte += 1;
+                    self.avail += 8;
+                }
+            }
+        }
+        let mask = if width == 64 { u64::MAX } else { (1u64 << width) - 1 };
+        let out = self.acc & mask;
+        self.acc >>= width;
+        self.avail -= width;
+        Some(out)
+    }
 }
 
 /// Encode a message into its wire bytes. The *bit* length is exactly
 /// `msg.payload_bits()`; the byte vector rounds up to whole bytes.
 pub fn encode(msg: &QuantMessage) -> Vec<u8> {
-    let mut buf = Vec::with_capacity((msg.payload_bits() as usize).div_ceil(8));
-    let mut bitlen = 0usize;
-    push_bits(&mut buf, &mut bitlen, (msg.radius as f32).to_bits() as u64, 32);
-    push_bits(&mut buf, &mut bitlen, msg.bits as u64, 32);
+    let mut w = BitWriter::with_capacity((msg.payload_bits() as usize).div_ceil(8));
+    w.push((msg.radius as f32).to_bits() as u64, 32);
+    w.push(msg.bits as u64, 32);
     for &c in &msg.codes {
-        debug_assert!(msg.bits >= 32 || (c as u64) < (1u64 << msg.bits), "code overflows bit width");
-        push_bits(&mut buf, &mut bitlen, c as u64, msg.bits);
+        debug_assert!(
+            msg.bits >= 32 || (c as u64) < (1u64 << msg.bits),
+            "code overflows bit width"
+        );
+        w.push(c as u64, msg.bits);
     }
-    debug_assert_eq!(bitlen as u64, msg.payload_bits());
+    let buf = w.finish();
+    debug_assert_eq!(buf.len(), (msg.payload_bits() as usize).div_ceil(8));
     buf
 }
 
 /// Decode wire bytes back into a message; `d` is the (known) model
 /// dimension.  Returns `None` on truncated/garbled input.
 pub fn decode(buf: &[u8], d: usize) -> Option<QuantMessage> {
-    let mut pos = 0usize;
-    let radius = f32::from_bits(read_bits(buf, &mut pos, 32)? as u32) as f64;
-    let bits = read_bits(buf, &mut pos, 32)? as u32;
+    let mut r = BitReader::new(buf);
+    let radius = f32::from_bits(r.read(32)? as u32) as f64;
+    let bits = r.read(32)? as u32;
     if bits == 0 || bits > 32 || !(radius.is_finite()) || radius < 0.0 {
         return None;
     }
     let mut codes = Vec::with_capacity(d);
     for _ in 0..d {
-        codes.push(read_bits(buf, &mut pos, bits)? as u32);
+        codes.push(r.read(bits)? as u32);
     }
     Some(QuantMessage { codes, radius, bits })
 }
@@ -91,11 +162,39 @@ mod tests {
     }
 
     #[test]
+    fn roundtrip_all_widths_1_to_32() {
+        // the full width range the wire format admits, including the
+        // 32-bit edge case the word-level accumulator must not overflow on
+        check("codec identity for bits in 1..=32", 200, |g| {
+            let bits = g.usize_in(1, 32) as u32;
+            let d = g.usize_in(0, 96);
+            let mask = if bits == 32 { u32::MAX } else { (1u32 << bits) - 1 };
+            let codes: Vec<u32> = (0..d).map(|_| g.u64() as u32 & mask).collect();
+            let radius = (g.f64_in(0.0, 1e6) as f32) as f64;
+            let msg = QuantMessage { codes, radius, bits };
+            let bytes = encode(&msg);
+            assert_eq!(bytes.len(), (msg.payload_bits() as usize).div_ceil(8));
+            assert_eq!(decode(&bytes, d).expect("decode"), msg);
+        });
+    }
+
+    #[test]
     fn truncated_input_rejected() {
         let msg = QuantMessage { codes: vec![1, 2, 3], radius: 0.5, bits: 4 };
         let bytes = encode(&msg);
         assert!(decode(&bytes[..bytes.len() - 1], 3).is_none());
         assert!(decode(&[], 3).is_none());
+    }
+
+    #[test]
+    fn every_truncation_length_rejected() {
+        // word-level refill must never report more bits than the slice holds
+        let msg = QuantMessage { codes: (0..40).collect(), radius: 2.0, bits: 7 };
+        let bytes = encode(&msg);
+        for cut in 0..bytes.len() {
+            assert!(decode(&bytes[..cut], 40).is_none(), "cut={cut}");
+        }
+        assert!(decode(&bytes, 40).is_some());
     }
 
     #[test]
@@ -122,5 +221,46 @@ mod tests {
         assert_eq!(&bytes[..4], &0x3f800000u32.to_le_bytes());
         assert_eq!(&bytes[4..8], &3u32.to_le_bytes());
         assert_eq!(bytes[8], 0b011_101); // first code in low bits
+    }
+
+    #[test]
+    fn word_level_matches_bit_loop_reference() {
+        // differential test against the original bit-at-a-time packer: the
+        // wire bytes must be identical for arbitrary messages
+        fn ref_encode(msg: &QuantMessage) -> Vec<u8> {
+            fn push_bits(buf: &mut Vec<u8>, bitlen: &mut usize, value: u64, width: u32) {
+                for i in 0..width {
+                    let bit = (value >> i) & 1;
+                    let byte_idx = *bitlen / 8;
+                    if byte_idx == buf.len() {
+                        buf.push(0);
+                    }
+                    if bit == 1 {
+                        buf[byte_idx] |= 1 << (*bitlen % 8);
+                    }
+                    *bitlen += 1;
+                }
+            }
+            let mut buf = Vec::new();
+            let mut bitlen = 0usize;
+            push_bits(&mut buf, &mut bitlen, (msg.radius as f32).to_bits() as u64, 32);
+            push_bits(&mut buf, &mut bitlen, msg.bits as u64, 32);
+            for &c in &msg.codes {
+                push_bits(&mut buf, &mut bitlen, c as u64, msg.bits);
+            }
+            buf
+        }
+        check("word-level == bit-loop wire bytes", 120, |g| {
+            let bits = g.usize_in(1, 32) as u32;
+            let d = g.usize_in(0, 64);
+            let mask = if bits == 32 { u32::MAX } else { (1u32 << bits) - 1 };
+            let codes: Vec<u32> = (0..d).map(|_| g.u64() as u32 & mask).collect();
+            let msg = QuantMessage {
+                codes,
+                radius: (g.f64_in(0.0, 10.0) as f32) as f64,
+                bits,
+            };
+            assert_eq!(encode(&msg), ref_encode(&msg));
+        });
     }
 }

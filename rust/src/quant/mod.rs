@@ -59,11 +59,18 @@ pub struct QuantMessage {
     pub bits: u32,
 }
 
+/// Wire payload size in bits of a quantized message: `b*d + b_R + b_b`
+/// (paper §5 with `b_R = 32`, `b_b = 32`).  Single source of truth for
+/// the size formula — [`QuantMessage::payload_bits`], the codec and the
+/// run engine's communication accounting all go through here.
+pub const fn payload_bits(d: usize, bits: u32) -> u64 {
+    bits as u64 * d as u64 + 64
+}
+
 impl QuantMessage {
-    /// Wire payload size in bits: `b*d + b_R + b_b` (paper §5 with
-    /// `b_R = 32`, `b_b = 32`).
+    /// Wire payload size in bits (see [`payload_bits`]).
     pub fn payload_bits(&self) -> u64 {
-        self.bits as u64 * self.codes.len() as u64 + 64
+        payload_bits(self.codes.len(), self.bits)
     }
 
     /// Quantization step `Delta = 2R / (2^b - 1)` (paper §5: the range
@@ -123,11 +130,18 @@ impl Quantizer {
         }
     }
 
-    /// Quantize `value` against the shared `reference` (the reconstruction
-    /// both sides hold).  Returns the wire message and the sender's own
-    /// reconstruction (which equals the receiver's decode exactly).
-    pub fn quantize(&mut self, value: &[f64], reference: &[f64]) -> (QuantMessage, Vec<f64>) {
+    /// Shared quantization core: draws one stochastic-rounding uniform per
+    /// coordinate, writes the reconstruction into `recon`, optionally
+    /// collects the integer codes, and advances the (R, b) state.
+    fn quantize_core(
+        &mut self,
+        value: &[f64],
+        reference: &[f64],
+        recon: &mut [f64],
+        mut codes: Option<&mut Vec<u32>>,
+    ) -> (f64, u32) {
         assert_eq!(value.len(), reference.len());
+        assert_eq!(recon.len(), reference.len());
         let d = value.len();
         // radius covers the current difference (never zero)
         let mut radius = 0.0f64;
@@ -145,7 +159,6 @@ impl Quantizer {
         let max_code = ((1u64 << bits) - 1) as f64;
         let delta = 2.0 * radius / max_code;
 
-        let mut codes = Vec::with_capacity(d);
         for i in 0..d {
             // eq. (14): center the difference at +R, measure in steps
             let c = (value[i] - reference[i] + radius) / delta;
@@ -154,13 +167,40 @@ impl Quantizer {
             // eq. (15)/(17): round up with probability frac
             let q = if self.rng.uniform() < frac { low + 1.0 } else { low };
             let q = q.clamp(0.0, max_code);
-            codes.push(q as u32);
+            // eq. (20), identical arithmetic to `QuantMessage::reconstruct`
+            recon[i] = reference[i] + delta * q - radius;
+            if let Some(out) = codes.as_mut() {
+                out.push(q as u32);
+            }
         }
-        let msg = QuantMessage { codes, radius, bits };
-        let recon = msg.reconstruct(reference);
         self.prev_radius = Some(radius);
         self.prev_bits = bits;
-        (msg, recon)
+        (radius, bits)
+    }
+
+    /// Quantize `value` against the shared `reference` (the reconstruction
+    /// both sides hold).  Returns the wire message and the sender's own
+    /// reconstruction (which equals the receiver's decode exactly).
+    pub fn quantize(&mut self, value: &[f64], reference: &[f64]) -> (QuantMessage, Vec<f64>) {
+        let d = value.len();
+        let mut recon = vec![0.0; d];
+        let mut codes = Vec::with_capacity(d);
+        let (radius, bits) = self.quantize_core(value, reference, &mut recon, Some(&mut codes));
+        (QuantMessage { codes, radius, bits }, recon)
+    }
+
+    /// Allocation-free variant for the simulator hot path: same RNG draws
+    /// and reconstruction arithmetic as [`Quantizer::quantize`], but the
+    /// reconstruction lands in a caller-provided buffer and no code vector
+    /// is materialized (the run engine only needs the payload size,
+    /// `bits * d + 64`).  Returns `(radius, bits)`.
+    pub fn quantize_into(
+        &mut self,
+        value: &[f64],
+        reference: &[f64],
+        recon: &mut [f64],
+    ) -> (f64, u32) {
+        self.quantize_core(value, reference, recon, None)
     }
 
     /// Step size `Delta^k` that a transmission with this radius would use.
@@ -294,6 +334,32 @@ mod tests {
             let delta = q.step_size(msg.radius, msg.bits);
             let err: Vec<f64> = recon.iter().zip(&v).map(|(a, b)| a - b).collect();
             assert!(norm2(&err) <= (d as f64).sqrt() * delta * (1.0 + 1e-9));
+        });
+    }
+
+    #[test]
+    fn quantize_into_matches_quantize_bit_exactly() {
+        // same seed => same RNG draws => identical reconstructions and
+        // identical (R, b) state evolution; the run engine relies on this
+        check("quantize_into == quantize", 60, |g| {
+            let d = g.usize_in(1, 64);
+            let seed = g.u64();
+            let mut qa = mk(3, 0.9, seed);
+            let mut qb = mk(3, 0.9, seed);
+            let mut reference = g.normal_vec(d);
+            let mut recon_b = vec![0.0; d];
+            for _ in 0..4 {
+                let v = g.normal_vec(d);
+                let (msg, recon_a) = qa.quantize(&v, &reference);
+                let (radius, bits) = qb.quantize_into(&v, &reference, &mut recon_b);
+                assert_eq!(radius.to_bits(), msg.radius.to_bits());
+                assert_eq!(bits, msg.bits);
+                for (a, b) in recon_a.iter().zip(&recon_b) {
+                    assert_eq!(a.to_bits(), b.to_bits());
+                }
+                assert_eq!(msg.payload_bits(), bits as u64 * d as u64 + 64);
+                reference = recon_a;
+            }
         });
     }
 

@@ -1,0 +1,443 @@
+//! PJRT execution backend (feature `pjrt`): load the AOT HLO-text
+//! artifacts and execute them on the per-iteration hot path.
+//!
+//! One [`PjrtContext`] per run wraps the `xla` crate's CPU PJRT client and
+//! an executable cache keyed by artifact name; [`pjrt_solver`] builds a
+//! [`SubproblemSolver`] whose `update_into` dispatches to the compiled
+//! `linear_update_{d}` / `logistic_newton_{s}x{d}` artifacts (the HLO that
+//! the JAX Layer-2 model — calling the Pallas Layer-1 kernels — lowered
+//! to).  HLO **text** is the interchange format; see `python/compile/aot.py`.
+//!
+//! The whole module is compiled only with `--features pjrt`, which
+//! requires a vendored `xla` crate (see rust/Cargo.toml); the default
+//! build ships the stub in [`super`] instead.
+
+use super::manifest::Manifest;
+use crate::config::Task;
+use crate::data::Shard;
+use crate::linalg::{Cholesky, Mat};
+use crate::solver::SubproblemSolver;
+use std::cell::RefCell;
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::rc::Rc;
+
+/// Shared PJRT client + executable cache for one run.
+pub struct PjrtContext {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    executables: RefCell<BTreeMap<String, Rc<xla::PjRtLoadedExecutable>>>,
+}
+
+impl PjrtContext {
+    /// Create a CPU PJRT client and load the manifest from `dir`.
+    pub fn new(dir: &Path) -> Result<PjrtContext, String> {
+        let client = xla::PjRtClient::cpu().map_err(|e| format!("PJRT client: {e}"))?;
+        let manifest = Manifest::load(dir)?;
+        Ok(PjrtContext { client, manifest, executables: RefCell::new(BTreeMap::new()) })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// Compile (or fetch from cache) the named artifact.
+    pub fn executable(&self, name: &str) -> Result<Rc<xla::PjRtLoadedExecutable>, String> {
+        if let Some(e) = self.executables.borrow().get(name) {
+            return Ok(e.clone());
+        }
+        let spec = self
+            .manifest
+            .by_name(name)
+            .ok_or_else(|| format!("artifact '{name}' not in manifest"))?;
+        let path = spec
+            .file
+            .to_str()
+            .ok_or_else(|| "non-utf8 artifact path".to_string())?;
+        let proto = xla::HloModuleProto::from_text_file(path)
+            .map_err(|e| format!("parse {path}: {e}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| format!("compile {name}: {e}"))?;
+        let exe = Rc::new(exe);
+        self.executables
+            .borrow_mut()
+            .insert(name.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Execute an artifact on f32 inputs; returns the flattened f32
+    /// outputs of the (tupled) result.
+    pub fn execute(
+        &self,
+        name: &str,
+        inputs: &[xla::Literal],
+    ) -> Result<Vec<Vec<f32>>, String> {
+        let exe = self.executable(name)?;
+        let result = exe
+            .execute::<xla::Literal>(inputs)
+            .map_err(|e| format!("execute {name}: {e}"))?;
+        Self::read_outputs(name, result)
+    }
+
+    /// Hot-path variant: execute on pre-staged device buffers (constants
+    /// are uploaded once at solver construction; only the small changing
+    /// vectors are transferred per call).
+    pub fn execute_buffers(
+        &self,
+        exe: &xla::PjRtLoadedExecutable,
+        name: &str,
+        inputs: &[&xla::PjRtBuffer],
+    ) -> Result<Vec<Vec<f32>>, String> {
+        let result = exe
+            .execute_b(inputs)
+            .map_err(|e| format!("execute {name}: {e}"))?;
+        Self::read_outputs(name, result)
+    }
+
+    /// Upload an f32 tensor to the device.
+    pub fn upload(&self, data: &[f32], dims: &[usize]) -> Result<xla::PjRtBuffer, String> {
+        self.client
+            .buffer_from_host_buffer(data, dims, None)
+            .map_err(|e| format!("upload: {e}"))
+    }
+
+    fn read_outputs(
+        name: &str,
+        result: Vec<Vec<xla::PjRtBuffer>>,
+    ) -> Result<Vec<Vec<f32>>, String> {
+        let lit = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| format!("fetch {name}: {e}"))?;
+        let parts = lit.to_tuple().map_err(|e| format!("untuple {name}: {e}"))?;
+        parts
+            .into_iter()
+            .map(|p| p.to_vec::<f32>().map_err(|e| format!("read {name}: {e}")))
+            .collect()
+    }
+}
+
+/// f32 literal helpers.
+fn lit_vec(v: &[f64]) -> xla::Literal {
+    let f: Vec<f32> = v.iter().map(|&x| x as f32).collect();
+    xla::Literal::vec1(&f)
+}
+
+fn lit_mat(m: &Mat) -> xla::Literal {
+    let f: Vec<f32> = m.data().iter().map(|&x| x as f32).collect();
+    xla::Literal::vec1(&f)
+        .reshape(&[m.rows() as i64, m.cols() as i64])
+        .expect("reshape literal")
+}
+
+/// Pad a shard to `s_pad` rows; returns (x_pad, y_pad, mask).
+fn pad_shard(sh: &Shard, s_pad: usize) -> (Mat, Vec<f64>, Vec<f64>) {
+    let s = sh.s();
+    let d = sh.x.cols();
+    assert!(s_pad >= s);
+    let mut x = Mat::zeros(s_pad, d);
+    let mut y = vec![0.0; s_pad];
+    let mut mask = vec![0.0; s_pad];
+    for i in 0..s {
+        x.row_mut(i).copy_from_slice(sh.x.row(i));
+        y[i] = sh.y[i];
+        mask[i] = 1.0;
+    }
+    (x, y, mask)
+}
+
+/// Linear-regression PJRT solver: `linear_setup` once (Gram assembly on
+/// the Pallas kernel), native Cholesky inverse once, then the fused
+/// `linear_update_{d}` artifact every iteration.
+///
+/// Perf (§Perf in EXPERIMENTS.md): all constant operands (`A^{-1}`,
+/// `X^T y`, `rho`) are uploaded to device buffers once; each update
+/// transfers only the two `d`-vectors that change.  The host-side copies
+/// of `X`/`y` kept for loss evaluation are a one-time construction cost.
+pub struct PjrtLinearSolver {
+    ctx: Rc<PjrtContext>,
+    exe: Rc<xla::PjRtLoadedExecutable>,
+    update_name: String,
+    a_inv_buf: xla::PjRtBuffer,
+    xty_buf: xla::PjRtBuffer,
+    rho_buf: xla::PjRtBuffer,
+    scratch: Vec<f32>,
+    d: usize,
+    // native copies for loss evaluation
+    x: Mat,
+    y: Vec<f64>,
+}
+
+impl PjrtLinearSolver {
+    pub fn new(
+        ctx: Rc<PjrtContext>,
+        sh: &Shard,
+        rho: f64,
+        degree: usize,
+    ) -> Result<PjrtLinearSolver, String> {
+        let d = sh.x.cols();
+        let setup = ctx
+            .manifest()
+            .best_for_rows("linear_setup", sh.s(), d)
+            .ok_or_else(|| format!("no linear_setup artifact for s>={} d={d}", sh.s()))?;
+        let s_pad = setup.inputs[0].1[0];
+        let setup_name = setup.name.clone();
+        let (xp, yp, _) = pad_shard(sh, s_pad);
+        let outs = ctx.execute(&setup_name, &[lit_mat(&xp), lit_vec(&yp)])?;
+        let xtx_flat = &outs[0];
+        let xty: Vec<f64> = outs[1].iter().map(|&v| v as f64).collect();
+        let mut xtx = Mat::zeros(d, d);
+        for i in 0..d {
+            for j in 0..d {
+                xtx[(i, j)] = xtx_flat[i * d + j] as f64;
+            }
+        }
+        // one-time native inverse of A = X^T X + rho d_n I (setup path)
+        let a = xtx.add_diag(rho * degree as f64);
+        let a_inv = Cholesky::new(&a)
+            .ok_or("A = X^T X + rho d I not SPD")?
+            .inverse();
+        let update_name = format!("linear_update_{d}");
+        ctx.manifest()
+            .by_name(&update_name)
+            .ok_or_else(|| format!("no {update_name} artifact"))?;
+        // warm the executable cache + stage constants off the hot path
+        let exe = ctx.executable(&update_name)?;
+        let a_inv_f32: Vec<f32> = a_inv.data().iter().map(|&v| v as f32).collect();
+        let xty_f32: Vec<f32> = xty.iter().map(|&v| v as f32).collect();
+        let a_inv_buf = ctx.upload(&a_inv_f32, &[d, d])?;
+        let xty_buf = ctx.upload(&xty_f32, &[d])?;
+        let rho_buf = ctx.upload(&[rho as f32], &[1])?;
+        Ok(PjrtLinearSolver {
+            ctx,
+            exe,
+            update_name,
+            a_inv_buf,
+            xty_buf,
+            rho_buf,
+            scratch: vec![0.0; d],
+            d,
+            x: sh.x.clone(),
+            y: sh.y.clone(),
+        })
+    }
+
+    fn upload_vec(&mut self, v: &[f64]) -> xla::PjRtBuffer {
+        for (s, &x) in self.scratch.iter_mut().zip(v) {
+            *s = x as f32;
+        }
+        self.ctx
+            .upload(&self.scratch, &[self.d])
+            .expect("upload vector")
+    }
+}
+
+impl SubproblemSolver for PjrtLinearSolver {
+    fn update_into(&mut self, alpha: &[f64], nbr_sum: &[f64], theta: &mut [f64]) {
+        let alpha_buf = self.upload_vec(alpha);
+        let nbr_buf = self.upload_vec(nbr_sum);
+        let exe = self.exe.clone();
+        let outs = self
+            .ctx
+            .execute_buffers(
+                &exe,
+                &self.update_name,
+                &[
+                    &self.a_inv_buf,
+                    &self.xty_buf,
+                    &alpha_buf,
+                    &nbr_buf,
+                    &self.rho_buf,
+                ],
+            )
+            .expect("linear_update artifact failed");
+        for (t, &v) in theta.iter_mut().zip(&outs[0]) {
+            *t = v as f64;
+        }
+    }
+
+    fn loss(&self, theta: &[f64]) -> f64 {
+        let pred = self.x.matvec(theta);
+        0.5 * pred
+            .iter()
+            .zip(&self.y)
+            .map(|(p, y)| (p - y) * (p - y))
+            .sum::<f64>()
+    }
+
+    fn d(&self) -> usize {
+        self.d
+    }
+}
+
+/// Logistic PJRT solver: fixed-budget Newton+CG artifact per iteration
+/// (the Pallas `logistic_grad_hess` kernel fused inside).
+///
+/// Perf: the shard tensors (`x`, `y`, `mask`) and scalars are staged as
+/// device buffers once; per update only `lin` and the warm start move.
+pub struct PjrtLogisticSolver {
+    ctx: Rc<PjrtContext>,
+    exe: Rc<xla::PjRtLoadedExecutable>,
+    newton_name: String,
+    x_buf: xla::PjRtBuffer,
+    y_buf: xla::PjRtBuffer,
+    mask_buf: xla::PjRtBuffer,
+    inv_count_buf: xla::PjRtBuffer,
+    mu0_buf: xla::PjRtBuffer,
+    rho_dn_buf: xla::PjRtBuffer,
+    scratch: Vec<f32>,
+    rho: f64,
+    d: usize,
+    // native copies for loss evaluation
+    x: Mat,
+    y: Vec<f64>,
+    mu0: f64,
+}
+
+impl PjrtLogisticSolver {
+    pub fn new(
+        ctx: Rc<PjrtContext>,
+        sh: &Shard,
+        rho: f64,
+        mu0: f64,
+        degree: usize,
+    ) -> Result<PjrtLogisticSolver, String> {
+        let d = sh.x.cols();
+        let spec = ctx
+            .manifest()
+            .best_for_rows("logistic_newton", sh.s(), d)
+            .ok_or_else(|| format!("no logistic_newton artifact for s>={} d={d}", sh.s()))?;
+        let s_pad = spec.inputs[0].1[0];
+        let newton_name = spec.name.clone();
+        let (xp, yp, mask) = pad_shard(sh, s_pad);
+        let exe = ctx.executable(&newton_name)?;
+        let xf: Vec<f32> = xp.data().iter().map(|&v| v as f32).collect();
+        let yf: Vec<f32> = yp.iter().map(|&v| v as f32).collect();
+        let mf: Vec<f32> = mask.iter().map(|&v| v as f32).collect();
+        Ok(PjrtLogisticSolver {
+            x_buf: ctx.upload(&xf, &[s_pad, d])?,
+            y_buf: ctx.upload(&yf, &[s_pad])?,
+            mask_buf: ctx.upload(&mf, &[s_pad])?,
+            inv_count_buf: ctx.upload(&[1.0 / sh.s() as f32], &[1])?,
+            mu0_buf: ctx.upload(&[mu0 as f32], &[1])?,
+            rho_dn_buf: ctx.upload(&[(rho * degree as f64) as f32], &[1])?,
+            ctx,
+            exe,
+            newton_name,
+            scratch: vec![0.0; d],
+            rho,
+            d,
+            x: sh.x.clone(),
+            y: sh.y.clone(),
+            mu0,
+        })
+    }
+
+    fn upload_vec(&mut self, v: &[f64]) -> xla::PjRtBuffer {
+        for (s, &x) in self.scratch.iter_mut().zip(v) {
+            *s = x as f32;
+        }
+        self.ctx
+            .upload(&self.scratch, &[self.d])
+            .expect("upload vector")
+    }
+}
+
+impl SubproblemSolver for PjrtLogisticSolver {
+    fn update_into(&mut self, alpha: &[f64], nbr_sum: &[f64], theta: &mut [f64]) {
+        let lin: Vec<f64> = alpha
+            .iter()
+            .zip(nbr_sum)
+            .map(|(a, n)| a - self.rho * n)
+            .collect();
+        let lin_buf = self.upload_vec(&lin);
+        // theta enters holding the warm start
+        let warm_buf = self.upload_vec(theta);
+        let exe = self.exe.clone();
+        let outs = self
+            .ctx
+            .execute_buffers(
+                &exe,
+                &self.newton_name,
+                &[
+                    &self.x_buf,
+                    &self.y_buf,
+                    &self.mask_buf,
+                    &self.inv_count_buf,
+                    &self.mu0_buf,
+                    &self.rho_dn_buf,
+                    &lin_buf,
+                    &warm_buf,
+                ],
+            )
+            .expect("logistic_newton artifact failed");
+        for (t, &v) in theta.iter_mut().zip(&outs[0]) {
+            *t = v as f64;
+        }
+    }
+
+    fn loss(&self, theta: &[f64]) -> f64 {
+        let s = self.y.len();
+        let mut acc = 0.0;
+        for i in 0..s {
+            let z = self.y[i] * crate::util::dot(self.x.row(i), theta);
+            acc += if z > 0.0 {
+                (-z).exp().ln_1p()
+            } else {
+                -z + z.exp().ln_1p()
+            };
+        }
+        acc / s as f64 + 0.5 * self.mu0 * crate::util::dot(theta, theta)
+    }
+
+    fn d(&self) -> usize {
+        self.d
+    }
+}
+
+// SAFETY: the PJRT CPU client is internally thread-safe, but our solver
+// types share an Rc'd context, so cross-thread use is forbidden; the run
+// engine enforces `threads == 1` for the PJRT backend (see
+// `pjrt_solver`'s contract), making the Send bound a formality required
+// by the `SubproblemSolver` trait object.
+unsafe impl Send for PjrtLinearSolver {}
+unsafe impl Send for PjrtLogisticSolver {}
+
+thread_local! {
+    /// Context cache per artifacts dir: one PJRT client + compiled
+    /// executables shared by every worker's solver in a run.
+    static CONTEXTS: RefCell<BTreeMap<std::path::PathBuf, Rc<PjrtContext>>> =
+        const { RefCell::new(BTreeMap::new()) };
+}
+
+/// Get (or create) the shared PJRT context for an artifacts dir.
+pub fn context_for(dir: &Path) -> Result<Rc<PjrtContext>, String> {
+    CONTEXTS.with(|c| {
+        let mut map = c.borrow_mut();
+        if let Some(ctx) = map.get(dir) {
+            return Ok(ctx.clone());
+        }
+        let ctx = Rc::new(PjrtContext::new(dir)?);
+        map.insert(dir.to_path_buf(), ctx.clone());
+        Ok(ctx)
+    })
+}
+
+/// Factory: build the PJRT-backed solver for one worker's shard.
+/// Contract: PJRT-backed runs must use `threads == 1`.
+pub fn pjrt_solver(
+    dir: &Path,
+    task: Task,
+    sh: &Shard,
+    rho: f64,
+    mu0: f64,
+    degree: usize,
+) -> Result<Box<dyn SubproblemSolver>, String> {
+    let ctx = context_for(dir)?;
+    match task {
+        Task::Linear => Ok(Box::new(PjrtLinearSolver::new(ctx, sh, rho, degree)?)),
+        Task::Logistic => Ok(Box::new(PjrtLogisticSolver::new(ctx, sh, rho, mu0, degree)?)),
+    }
+}

@@ -4,14 +4,19 @@
 use crate::config::Task;
 use crate::data::Shard;
 use crate::linalg::{Cholesky, Mat};
+use std::borrow::Borrow;
 
 /// Global linear-regression optimum over all shards:
 /// `argmin sum_n 1/2 ||X_n theta - y_n||^2`.
-pub fn central_linear_optimum(shards: &[Shard]) -> Vec<f64> {
-    let d = shards[0].x.cols();
+///
+/// Generic over [`Borrow<Shard>`] so both owned shard slices (tests) and
+/// the engine's shared `Arc<Shard>`s work without copying.
+pub fn central_linear_optimum<S: Borrow<Shard>>(shards: &[S]) -> Vec<f64> {
+    let d = shards[0].borrow().x.cols();
     let mut gram = Mat::zeros(d, d);
     let mut rhs = vec![0.0; d];
     for sh in shards {
+        let sh = sh.borrow();
         gram = gram.add(&sh.x.gram());
         let r = sh.x.t_matvec(&sh.y);
         for i in 0..d {
@@ -30,14 +35,15 @@ pub fn central_linear_optimum(shards: &[Shard]) -> Vec<f64> {
 /// `sum_n [(1/s_n) sum_i log(1+exp(-y x theta)) + (mu0/2)||theta||^2]`
 /// (each worker carries its own 1/s_n normalization and ridge, exactly as
 /// the decentralized objective sums them).
-pub fn central_logistic_optimum(shards: &[Shard], mu0: f64) -> Vec<f64> {
-    let d = shards[0].x.cols();
+pub fn central_logistic_optimum<S: Borrow<Shard>>(shards: &[S], mu0: f64) -> Vec<f64> {
+    let d = shards[0].borrow().x.cols();
     let n_workers = shards.len() as f64;
     let mut theta = vec![0.0; d];
     for _ in 0..200 {
         let mut grad = vec![0.0; d];
         let mut hess = Mat::zeros(d, d);
         for sh in shards {
+            let sh = sh.borrow();
             let inv_s = 1.0 / sh.s() as f64;
             for i in 0..sh.s() {
                 let row = sh.x.row(i);
@@ -74,9 +80,15 @@ pub fn central_logistic_optimum(shards: &[Shard], mu0: f64) -> Vec<f64> {
 }
 
 /// Global decentralized objective `sum_n f_n(theta)` at a common point.
-pub fn global_objective(shards: &[Shard], task: Task, mu0: f64, theta: &[f64]) -> f64 {
+pub fn global_objective<S: Borrow<Shard>>(
+    shards: &[S],
+    task: Task,
+    mu0: f64,
+    theta: &[f64],
+) -> f64 {
     let mut total = 0.0;
     for sh in shards {
+        let sh = sh.borrow();
         match task {
             Task::Linear => {
                 let pred = sh.x.matvec(theta);

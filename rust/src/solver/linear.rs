@@ -6,9 +6,16 @@
 //! over a run), so the per-iteration hot path is one O(d^2) solve — the
 //! same split the AOT artifacts use (`linear_setup` once, `linear_update`
 //! per iteration with the precomputed inverse).
+//!
+//! Perf: construction borrows the worker's shard through a shared
+//! [`Arc<Shard>`] (no per-worker copy of `X`/`y`), and `update_into`
+//! reuses a persistent right-hand-side buffer + the caller's `theta`
+//! buffer, so a run allocates nothing per iteration.
 
 use super::SubproblemSolver;
+use crate::data::Shard;
 use crate::linalg::{Cholesky, Mat};
+use std::sync::Arc;
 
 /// Cached-factorization linear subproblem solver.
 pub struct LinearSolver {
@@ -16,20 +23,28 @@ pub struct LinearSolver {
     xty: Vec<f64>,
     chol: Cholesky,
     rho: f64,
-    x: Mat,
-    y: Vec<f64>,
+    /// Shared shard (loss evaluation); never copied per worker.
+    data: Arc<Shard>,
+    /// Persistent per-iteration right-hand-side scratch.
+    rhs: Vec<f64>,
 }
 
 impl LinearSolver {
-    /// Build from the worker's shard; factors `X^T X + rho * degree * I`.
-    pub fn new(x: Mat, y: Vec<f64>, rho: f64, degree: usize) -> LinearSolver {
-        assert_eq!(x.rows(), y.len());
-        let xtx = x.gram();
-        let xty = x.t_matvec(&y);
+    /// Build from a shared shard; factors `X^T X + rho * degree * I`.
+    pub fn from_shard(data: Arc<Shard>, rho: f64, degree: usize) -> LinearSolver {
+        assert_eq!(data.x.rows(), data.y.len());
+        let xtx = data.x.gram();
+        let xty = data.x.t_matvec(&data.y);
         let a = xtx.clone().add_diag(rho * degree as f64);
         let chol = Cholesky::new(&a)
             .expect("X^T X + rho d I must be SPD (rho > 0, degree >= 1)");
-        LinearSolver { xtx, xty, chol, rho, x, y }
+        let d = xty.len();
+        LinearSolver { xtx, xty, chol, rho, data, rhs: vec![0.0; d] }
+    }
+
+    /// Owned-data convenience constructor (tests/benches).
+    pub fn new(x: Mat, y: Vec<f64>, rho: f64, degree: usize) -> LinearSolver {
+        Self::from_shard(Arc::new(Shard { worker: 0, x, y }), rho, degree)
     }
 
     /// The Gram system (used to feed the PJRT differential tests).
@@ -45,22 +60,22 @@ impl LinearSolver {
 }
 
 impl SubproblemSolver for LinearSolver {
-    fn update(&mut self, alpha: &[f64], nbr_sum: &[f64], _warm: &[f64]) -> Vec<f64> {
+    fn update_into(&mut self, alpha: &[f64], nbr_sum: &[f64], theta: &mut [f64]) {
         let d = self.xty.len();
         assert_eq!(alpha.len(), d);
         assert_eq!(nbr_sum.len(), d);
-        let mut rhs = vec![0.0; d];
+        assert_eq!(theta.len(), d);
         for i in 0..d {
-            rhs[i] = self.xty[i] - alpha[i] + self.rho * nbr_sum[i];
+            self.rhs[i] = self.xty[i] - alpha[i] + self.rho * nbr_sum[i];
         }
-        self.chol.solve(&rhs)
+        self.chol.solve_into(&self.rhs, theta);
     }
 
     fn loss(&self, theta: &[f64]) -> f64 {
-        let pred = self.x.matvec(theta);
+        let pred = self.data.x.matvec(theta);
         0.5 * pred
             .iter()
-            .zip(&self.y)
+            .zip(&self.data.y)
             .map(|(p, y)| (p - y) * (p - y))
             .sum::<f64>()
     }
@@ -110,6 +125,28 @@ mod tests {
             let gnorm = crate::util::norm2(&grad);
             assert!(gnorm < 1e-7 * (1.0 + crate::util::norm2(&theta)), "gnorm={gnorm}");
         });
+    }
+
+    #[test]
+    fn update_into_matches_update_and_ignores_stale_theta() {
+        let (x, y) = random_shard(12, 4, 7);
+        let mut solver = LinearSolver::new(x, y, 1.3, 2);
+        let alpha = vec![0.2, -0.4, 0.0, 1.0];
+        let nbr = vec![1.0, 0.5, -0.5, 0.25];
+        let via_update = solver.update(&alpha, &nbr, &vec![0.0; 4]);
+        let mut theta = vec![9.0; 4]; // closed form: warm start is irrelevant
+        solver.update_into(&alpha, &nbr, &mut theta);
+        assert_eq!(via_update, theta);
+    }
+
+    #[test]
+    fn from_shard_shares_data_without_copying() {
+        let (x, y) = random_shard(10, 3, 9);
+        let sh = Arc::new(Shard { worker: 0, x, y });
+        let solver = LinearSolver::from_shard(Arc::clone(&sh), 1.0, 1);
+        // two strong refs: the Arc here and the solver's — no data clone
+        assert_eq!(Arc::strong_count(&sh), 2);
+        assert_eq!(solver.d(), 3);
     }
 
     #[test]

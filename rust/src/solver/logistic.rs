@@ -9,14 +9,24 @@
 //! artifact (`logistic_newton`); the native version iterates to a gradient
 //! tolerance instead of a fixed budget (both land on the same minimizer —
 //! the differential tests in `tests/` check agreement to ~1e-4).
+//!
+//! Perf: construction borrows the worker's shard through a shared
+//! [`Arc<Shard>`] (no per-worker copy of `X`/`y`); `update_into` runs in
+//! the caller's `theta` buffer with persistent `lin`/`grad`/`step`/
+//! candidate scratch, so the O(d) vectors of the Newton loop never
+//! reallocate.  The O(d^2) Hessian (+ its Cholesky factor) and the O(s)
+//! probability vector remain per-step temporaries — they are dwarfed by
+//! the O(s d^2) assembly that produces them.
 
 use super::SubproblemSolver;
+use crate::data::Shard;
 use crate::linalg::{Cholesky, Mat};
+use std::sync::Arc;
 
 /// Newton solver for one worker's logistic shard.
 pub struct LogisticSolver {
-    x: Mat,
-    y: Vec<f64>,
+    /// Shared shard; never copied per worker.
+    data: Arc<Shard>,
     mu0: f64,
     rho: f64,
     rho_dn: f64,
@@ -24,30 +34,48 @@ pub struct LogisticSolver {
     /// gradient-norm stopping tolerance
     tol: f64,
     max_newton: usize,
+    /// persistent scratch: linear term of eq. (22)
+    lin: Vec<f64>,
+    /// persistent scratch: full subproblem gradient
+    grad: Vec<f64>,
+    /// persistent scratch: Newton step direction
+    step: Vec<f64>,
+    /// persistent scratch: Armijo line-search candidate
+    cand: Vec<f64>,
 }
 
 impl LogisticSolver {
-    pub fn new(x: Mat, y: Vec<f64>, mu0: f64, rho: f64, degree: usize) -> LogisticSolver {
-        assert_eq!(x.rows(), y.len());
-        assert!(!y.is_empty());
-        let inv_s = 1.0 / y.len() as f64;
+    /// Build from a shared shard.
+    pub fn from_shard(data: Arc<Shard>, mu0: f64, rho: f64, degree: usize) -> LogisticSolver {
+        assert_eq!(data.x.rows(), data.y.len());
+        assert!(!data.y.is_empty());
+        let inv_s = 1.0 / data.y.len() as f64;
+        let d = data.x.cols();
         LogisticSolver {
-            x,
-            y,
+            data,
             mu0,
             rho,
             rho_dn: rho * degree as f64,
             inv_s,
             tol: 1e-10,
             max_newton: 50,
+            lin: vec![0.0; d],
+            grad: vec![0.0; d],
+            step: vec![0.0; d],
+            cand: vec![0.0; d],
         }
+    }
+
+    /// Owned-data convenience constructor (tests/benches).
+    pub fn new(x: Mat, y: Vec<f64>, mu0: f64, rho: f64, degree: usize) -> LogisticSolver {
+        Self::from_shard(Arc::new(Shard { worker: 0, x, y }), mu0, rho, degree)
     }
 
     /// Per-sample probabilities `p_i = sigmoid(-y_i x_i^T theta)`.
     fn probs(&self, theta: &[f64]) -> Vec<f64> {
-        (0..self.y.len())
+        (0..self.data.y.len())
             .map(|i| {
-                let z = self.y[i] * crate::util::dot(self.x.row(i), theta);
+                let z = self.data.y[i] * crate::util::dot(self.data.x.row(i), theta);
                 1.0 / (1.0 + z.exp())
             })
             .collect()
@@ -55,11 +83,11 @@ impl LogisticSolver {
 
     /// Data-term gradient `g = sum -y_i p_i x_i` from precomputed probs.
     fn grad_data(&self, probs: &[f64]) -> Vec<f64> {
-        let d = self.x.cols();
+        let d = self.data.x.cols();
         let mut g = vec![0.0; d];
         for (i, &p) in probs.iter().enumerate() {
-            let gscale = -self.y[i] * p;
-            let row = self.x.row(i);
+            let gscale = -self.data.y[i] * p;
+            let row = self.data.x.row(i);
             for a in 0..d {
                 g[a] += gscale * row[a];
             }
@@ -71,7 +99,7 @@ impl LogisticSolver {
     /// through contiguous row slices, then mirrored — the assembly is the
     /// per-Newton-step hot spot; see EXPERIMENTS.md §Perf).
     fn hess_data(&self, probs: &[f64]) -> Mat {
-        let d = self.x.cols();
+        let d = self.data.x.cols();
         let mut h = Mat::zeros(d, d);
         for (i, &p) in probs.iter().enumerate() {
             let w = p * (1.0 - p);
@@ -79,11 +107,11 @@ impl LogisticSolver {
                 continue;
             }
             for a in 0..d {
-                let wa = w * self.x.row(i)[a];
+                let wa = w * self.data.x.row(i)[a];
                 if wa == 0.0 {
                     continue;
                 }
-                let (row, hrow) = (self.x.row(i), h.row_mut(a));
+                let (row, hrow) = (self.data.x.row(i), h.row_mut(a));
                 for b in a..d {
                     hrow[b] += wa * row[b];
                 }
@@ -113,65 +141,70 @@ impl LogisticSolver {
 }
 
 impl SubproblemSolver for LogisticSolver {
-    fn update(&mut self, alpha: &[f64], nbr_sum: &[f64], warm: &[f64]) -> Vec<f64> {
-        let d = warm.len();
+    fn update_into(&mut self, alpha: &[f64], nbr_sum: &[f64], theta: &mut [f64]) {
+        let d = theta.len();
         assert_eq!(alpha.len(), d);
+        assert_eq!(nbr_sum.len(), d);
         // linear term of eq. (22): lin = alpha_n - rho * sum theta_hat_m
-        let lin: Vec<f64> = alpha
-            .iter()
-            .zip(nbr_sum)
-            .map(|(a, n)| a - self.rho * n)
-            .collect();
-        let mut theta = warm.to_vec();
+        for i in 0..d {
+            self.lin[i] = alpha[i] - self.rho * nbr_sum[i];
+        }
         for _ in 0..self.max_newton {
             // gradient first: with ADMM warm starts most calls converge in
             // one step, so skipping the Hessian assembly on the final
             // (already-converged) check saves ~half the work (§Perf)
-            let probs = self.probs(&theta);
-            let g_data = self.grad_data(&probs);
-            let mut grad = vec![0.0; d];
+            let probs = self.probs(theta);
+            // data-term gradient accumulated into the persistent buffer
+            // (same accumulation order as `grad_data`)
+            self.grad.iter_mut().for_each(|g| *g = 0.0);
+            for (i, &p) in probs.iter().enumerate() {
+                let gscale = -self.data.y[i] * p;
+                let row = self.data.x.row(i);
+                for a in 0..d {
+                    self.grad[a] += gscale * row[a];
+                }
+            }
             for i in 0..d {
-                grad[i] = self.inv_s * g_data[i]
+                self.grad[i] = self.inv_s * self.grad[i]
                     + self.mu0 * theta[i]
-                    + lin[i]
+                    + self.lin[i]
                     + self.rho_dn * theta[i];
             }
-            let gnorm = crate::util::norm2(&grad);
-            if gnorm < self.tol * (1.0 + crate::util::norm2(&theta)) {
+            let gnorm = crate::util::norm2(&self.grad);
+            if gnorm < self.tol * (1.0 + crate::util::norm2(theta)) {
                 break;
             }
             let h = self
                 .hess_data(&probs)
                 .scale(self.inv_s)
                 .add_diag(self.mu0 + self.rho_dn);
-            let step = Cholesky::new(&h)
+            Cholesky::new(&h)
                 .expect("subproblem Hessian is SPD")
-                .solve(&grad);
+                .solve_into(&self.grad, &mut self.step);
             // Armijo backtracking on the subproblem objective
-            let f0 = self.sub_objective(&theta, &lin);
-            let slope = crate::util::dot(&grad, &step);
+            let f0 = self.sub_objective(theta, &self.lin);
+            let slope = crate::util::dot(&self.grad, &self.step);
             let mut t = 1.0;
             loop {
-                let cand: Vec<f64> = theta
-                    .iter()
-                    .zip(&step)
-                    .map(|(th, st)| th - t * st)
-                    .collect();
-                if self.sub_objective(&cand, &lin) <= f0 - 1e-4 * t * slope || t < 1e-8 {
-                    theta = cand;
+                for j in 0..d {
+                    self.cand[j] = theta[j] - t * self.step[j];
+                }
+                if self.sub_objective(&self.cand, &self.lin) <= f0 - 1e-4 * t * slope
+                    || t < 1e-8
+                {
+                    theta.copy_from_slice(&self.cand);
                     break;
                 }
                 t *= 0.5;
             }
         }
-        theta
     }
 
     fn loss(&self, theta: &[f64]) -> f64 {
-        let s = self.y.len();
+        let s = self.data.y.len();
         let mut acc = 0.0;
         for i in 0..s {
-            let z = self.y[i] * crate::util::dot(self.x.row(i), theta);
+            let z = self.data.y[i] * crate::util::dot(self.data.x.row(i), theta);
             // stable log(1 + exp(-z))
             acc += if z > 0.0 {
                 (-z).exp().ln_1p()
@@ -183,7 +216,7 @@ impl SubproblemSolver for LogisticSolver {
     }
 
     fn d(&self) -> usize {
-        self.x.cols()
+        self.data.x.cols()
     }
 }
 
@@ -233,6 +266,29 @@ mod tests {
             let gn = crate::util::norm2(&grad);
             assert!(gn < 1e-6, "gnorm={gn}");
         });
+    }
+
+    #[test]
+    fn update_into_matches_update() {
+        let (x, y) = random_shard(30, 5, 4);
+        let mut solver = LogisticSolver::new(x, y, 0.05, 0.5, 2);
+        let alpha = vec![0.1; 5];
+        let nbr = vec![0.2; 5];
+        let via_update = solver.update(&alpha, &nbr, &vec![0.0; 5]);
+        let mut theta = vec![0.0; 5];
+        solver.update_into(&alpha, &nbr, &mut theta);
+        for (a, b) in via_update.iter().zip(&theta) {
+            assert!((a - b).abs() < 1e-12, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn from_shard_shares_data_without_copying() {
+        let (x, y) = random_shard(12, 3, 8);
+        let sh = Arc::new(Shard { worker: 0, x, y });
+        let solver = LogisticSolver::from_shard(Arc::clone(&sh), 0.1, 1.0, 1);
+        assert_eq!(Arc::strong_count(&sh), 2);
+        assert_eq!(solver.d(), 3);
     }
 
     #[test]

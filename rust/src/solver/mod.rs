@@ -47,10 +47,19 @@ impl Backend {
 /// A worker's local subproblem solver (rho and the worker degree are baked
 /// in at construction; they are constant over a run).
 pub trait SubproblemSolver: Send {
-    /// Solve the penalized subproblem given the worker's dual `alpha`, the
-    /// sum of its neighbors' latest (reconstructed) models, and a warm
-    /// start.
-    fn update(&mut self, alpha: &[f64], nbr_sum: &[f64], warm: &[f64]) -> Vec<f64>;
+    /// Solve the penalized subproblem in place given the worker's dual
+    /// `alpha` and the sum of its neighbors' latest (reconstructed)
+    /// models.  `theta` enters holding the warm start and exits holding
+    /// the minimizer — the per-iteration hot path allocates nothing.
+    fn update_into(&mut self, alpha: &[f64], nbr_sum: &[f64], theta: &mut [f64]);
+
+    /// Allocating convenience wrapper around [`Self::update_into`]
+    /// (tests, benches and diagnostics; off the hot path).
+    fn update(&mut self, alpha: &[f64], nbr_sum: &[f64], warm: &[f64]) -> Vec<f64> {
+        let mut theta = warm.to_vec();
+        self.update_into(alpha, nbr_sum, &mut theta);
+        theta
+    }
 
     /// Local objective `f_n(theta)` (no penalty terms).
     fn loss(&self, theta: &[f64]) -> f64;

@@ -4,7 +4,10 @@
 //!
 //! These tests need `artifacts/manifest.json` (run `make artifacts`);
 //! they are skipped with a message otherwise so `cargo test` stays green
-//! on a fresh checkout.
+//! on a fresh checkout.  The whole file is additionally gated on the
+//! `pjrt` cargo feature (the `xla` crate is not available in the default
+//! offline build; see rust/Cargo.toml).
+#![cfg(feature = "pjrt")]
 
 use cq_ggadmm::algs::{AlgSpec, Problem, Run, RunOptions};
 use cq_ggadmm::data::{partition_uniform, synthetic};
