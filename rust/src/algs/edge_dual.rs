@@ -33,6 +33,12 @@ pub struct EdgeDualRun {
     epoch: Option<u64>,
     topo_seed: u64,
     connectivity: f64,
+    /// persistent per-phase scratch: aggregated dual of the active worker
+    alpha_buf: Vec<f64>,
+    /// persistent per-phase scratch: neighbor sum of the active worker
+    nbr_buf: Vec<f64>,
+    /// cached `[heads, tails]` (rebuilt on retopologize only)
+    groups: [Vec<usize>; 2],
 }
 
 impl EdgeDualRun {
@@ -46,6 +52,7 @@ impl EdgeDualRun {
         let solvers = build(&problem, &topo);
         let trace = Trace::new("GGADMM(edge-dual)", &problem.dataset_name);
         let thetas = vec![vec![0.0; d]; topo.n()];
+        let topo_groups = (topo.heads(), topo.tails());
         EdgeDualRun {
             problem,
             topo,
@@ -57,6 +64,9 @@ impl EdgeDualRun {
             epoch: None,
             topo_seed: 0,
             connectivity: 0.3,
+            alpha_buf: vec![0.0; d],
+            nbr_buf: vec![0.0; d],
+            groups: [topo_groups.0, topo_groups.1],
         }
     }
 
@@ -71,30 +81,38 @@ impl EdgeDualRun {
         self
     }
 
-    /// Worker-side aggregated dual `alpha_n = sum_m lambda_{n,m}` (eq. 7).
-    pub fn alpha(&self, n: usize) -> Vec<f64> {
-        let d = self.problem.d;
-        let mut a = vec![0.0; d];
-        for (&(h, t), lam) in &self.lambda {
+    /// Fill `buf` with the aggregated dual `alpha_n = sum_m lambda_{n,m}`
+    /// (eq. 7) — free function over the fields so the persistent scratch
+    /// can be borrowed alongside the map.
+    fn fill_alpha(lambda: &BTreeMap<(usize, usize), Vec<f64>>, n: usize, buf: &mut [f64]) {
+        buf.iter_mut().for_each(|v| *v = 0.0);
+        for (&(h, t), lam) in lambda {
             if h == n {
-                crate::util::axpy(&mut a, 1.0, lam);
+                crate::util::axpy(buf, 1.0, lam);
             } else if t == n {
-                crate::util::axpy(&mut a, -1.0, lam);
+                crate::util::axpy(buf, -1.0, lam);
             }
         }
+    }
+
+    fn fill_neighbor_sum(topo: &Topology, thetas: &[Vec<f64>], n: usize, buf: &mut [f64]) {
+        buf.iter_mut().for_each(|v| *v = 0.0);
+        for &m in topo.neighbors(n) {
+            crate::util::axpy(buf, 1.0, &thetas[m]);
+        }
+    }
+
+    /// Worker-side aggregated dual `alpha_n = sum_m lambda_{n,m}` (eq. 7).
+    pub fn alpha(&self, n: usize) -> Vec<f64> {
+        let mut a = vec![0.0; self.problem.d];
+        Self::fill_alpha(&self.lambda, n, &mut a);
         a
     }
 
-    fn neighbor_sum(&self, n: usize) -> Vec<f64> {
-        let d = self.problem.d;
-        let mut s = vec![0.0; d];
-        for &m in self.topo.neighbors(n) {
-            crate::util::axpy(&mut s, 1.0, &self.thetas[m]);
-        }
-        s
-    }
-
     /// One GGADMM iteration with per-edge dual updates (eqs. (4)-(6)).
+    /// Allocation-free after construction: alpha / neighbor-sum scratch
+    /// is persistent and the solvers update `thetas[n]` in place (the
+    /// current value doubles as the warm start, exactly as before).
     pub fn step(&mut self) {
         // resample topology at epoch boundaries (D-GGADMM)
         if let Some(epoch) = self.epoch {
@@ -107,17 +125,13 @@ impl EdgeDualRun {
                 self.retopologize(new_topo);
             }
         }
-        // head phase
-        for &n in &self.topo.heads() {
-            let alpha = self.alpha(n);
-            let nbr = self.neighbor_sum(n);
-            self.thetas[n] = self.solvers[n].update(&alpha, &nbr, &self.thetas[n]);
-        }
-        // tail phase (sees fresh head values)
-        for &m in &self.topo.tails() {
-            let alpha = self.alpha(m);
-            let nbr = self.neighbor_sum(m);
-            self.thetas[m] = self.solvers[m].update(&alpha, &nbr, &self.thetas[m]);
+        // head phase, then tail phase (which sees fresh head values)
+        for group in &self.groups {
+            for &n in group {
+                Self::fill_alpha(&self.lambda, n, &mut self.alpha_buf);
+                Self::fill_neighbor_sum(&self.topo, &self.thetas, n, &mut self.nbr_buf);
+                self.solvers[n].update_into(&self.alpha_buf, &self.nbr_buf, &mut self.thetas[n]);
+            }
         }
         // dual update per edge: lambda += rho (theta_h - theta_t)  (eq. 6)
         let rho = self.problem.rho;
@@ -150,6 +164,7 @@ impl EdgeDualRun {
         }
         self.lambda = new_lambda;
         self.solvers = build(&self.problem, &new_topo);
+        self.groups = [new_topo.heads(), new_topo.tails()];
         self.topo = new_topo;
     }
 

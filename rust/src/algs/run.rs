@@ -5,13 +5,22 @@
 //! [`AlgSpec`] while recording the paper's metrics.  The same state
 //! transitions are reused by the threaded [`crate::coordinator`].
 //!
-//! Perf: the sequential per-iteration path is allocation-free after
-//! construction.  Neighbor sums, quantized candidates, dual increments
-//! and the schedule's phase groups live in persistent scratch buffers;
-//! solvers update `theta` in place through
-//! [`SubproblemSolver::update_into`]; shard data is shared (`Arc`), never
-//! copied per worker.  The opt-in threaded fan-out builds one job list
-//! per phase; snapshots and trace export may still clone.
+//! Perf: the per-iteration path is allocation-free after construction
+//! (persistent scratch buffers, in-place [`SubproblemSolver::update_into`]
+//! solves, `Arc`-shared shards), and the engine is **censoring-aware**:
+//! neighbor sums and dual increments are maintained incrementally, so the
+//! O(deg * d) rebuilds only run for workers whose closed neighborhood
+//! committed a transmission — censored and dropped rounds touch nothing,
+//! making the bookkeeping cost proportional to committed transmissions
+//! rather than to N.  Staleness tracking works at link granularity and a
+//! stale buffer is rebuilt by the exact from-scratch loop, so the engine
+//! is bit-identical to the always-recompute path
+//! (`RunOptions::incremental = false`, locked by `tests/incremental.rs`);
+//! a delta-push scheme (`sum += new - old`) would be cheaper still but is
+//! not IEEE-stable against recomputation, which the differential
+//! guarantees here rely on.  The opt-in `threads > 1` fan-out dispatches
+//! through a persistent barrier-synchronized [`crate::parallel::WorkerPool`]
+//! built once in [`Run::new`] — no per-phase thread spawns or job lists.
 
 use super::{AlgSpec, Problem, Schedule};
 use crate::censor::{gate, Gate};
@@ -41,6 +50,13 @@ pub struct RunOptions {
     /// so sender state stays consistent).
     pub drop_prob: f64,
     pub energy: EnergyParams,
+    /// Censoring-aware incremental bookkeeping (default): neighbor sums
+    /// and dual increments are rebuilt only when a hat in the worker's
+    /// closed neighborhood committed, so censored/dropped rounds skip the
+    /// O(deg * d) walks.  `false` forces the from-scratch recompute every
+    /// phase — bit-identical by construction (differential tests, and the
+    /// scratch baseline of `bench_hotpath`).
+    pub incremental: bool,
 }
 
 impl Default for RunOptions {
@@ -53,6 +69,7 @@ impl Default for RunOptions {
             artifacts_dir: None,
             drop_prob: 0.0,
             energy: EnergyParams::default(),
+            incremental: true,
         }
     }
 }
@@ -89,17 +106,28 @@ pub struct Run {
     trace: Trace,
     iter: u64,
     rng: Pcg64,
-    /// persistent per-worker neighbor-sum buffers (filled each phase)
+    /// persistent per-worker neighbor-sum buffers, maintained
+    /// incrementally (rebuilt only while `nbr_stale`)
     nbr_sums: Vec<Vec<f64>>,
     /// persistent quantize/censor candidate buffer (transmit is sequential)
     cand: Vec<f64>,
-    /// preallocated per-worker dual-update increments
+    /// persistent per-worker dual-update increments, maintained
+    /// incrementally (rebuilt only when the closed neighborhood changed)
     dual_deltas: Vec<Vec<f64>>,
     /// cached phase groups: `[heads, tails]` for alternating schedules,
     /// `[all]` for Jacobian — constant over a run, so `step` never
     /// rebuilds them (taken/restored around the phase loop to satisfy the
     /// borrow checker without cloning)
     phase_groups: Vec<Vec<usize>>,
+    /// `nbr_sums[i]` no longer reflects the hats it sums (a neighbor —
+    /// or, under the Jacobian anchor, the worker itself — committed)
+    nbr_stale: Vec<bool>,
+    /// worker committed a hat update this iteration (cleared in `step`;
+    /// drives the dual-increment rebuild decision)
+    hat_changed: Vec<bool>,
+    /// persistent worker pool for the `threads > 1` fan-out, built once
+    /// (taken/restored around dispatch to satisfy the borrow checker)
+    pool: Option<crate::parallel::WorkerPool>,
 }
 
 impl Run {
@@ -112,7 +140,12 @@ impl Run {
         );
         let d = problem.d;
         let mut rng = Pcg64::new(opts.seed ^ 0xA16_0001);
-        let solvers = build_solvers(&problem, &topo, &opts, spec.schedule);
+        // the persistent pool is built first so the one-time solver
+        // construction (Gram matrices + Cholesky factors) fans out over
+        // it too — one spawn serves both setup and every phase dispatch
+        let mut pool =
+            (opts.threads > 1).then(|| crate::parallel::WorkerPool::new(opts.threads));
+        let solvers = build_solvers(&problem, &topo, &opts, spec.schedule, pool.as_mut());
         let workers = (0..topo.n())
             .map(|i| WorkerState {
                 theta: vec![0.0; d],
@@ -137,6 +170,9 @@ impl Run {
             cand: vec![0.0; d],
             dual_deltas: vec![vec![0.0; d]; n],
             phase_groups,
+            nbr_stale: vec![true; n],
+            hat_changed: vec![false; n],
+            pool,
             problem,
             topo,
             spec,
@@ -151,8 +187,8 @@ impl Run {
         }
     }
 
-    /// Fill the persistent neighbor-sum buffers for `ids` from the current
-    /// hat state (paper eqs. (21)/(22)).
+    /// Refresh the persistent neighbor-sum buffers for `ids` from the
+    /// current hat state (paper eqs. (21)/(22)).
     ///
     /// * Alternating (GGADMM): `sum_{m in N(i)} theta_hat_m`.
     /// * Jacobian (C-ADMM / DCADMM of Shi et al. 2014, Liu et al. 2019):
@@ -160,10 +196,19 @@ impl Run {
     ///   `d_i * theta_hat_i + sum_m theta_hat_m`, with the doubled
     ///   quadratic penalty `rho d_i ||theta||^2` (see `build_solvers`) —
     ///   the naive Jacobi variant without the anchor diverges.
+    ///
+    /// Incremental engine: a buffer is rebuilt only while `nbr_stale[i]`
+    /// (some input hat committed since it was last built).  A clean
+    /// buffer's inputs are unchanged, so the cached value is bit-identical
+    /// to what this exact loop would produce — censored rounds skip the
+    /// O(deg * d) walk entirely.
     fn fill_neighbor_sums(&mut self, ids: &[usize]) {
         let d = self.problem.d;
         let jacobian = self.spec.schedule == Schedule::Jacobian;
         for &i in ids {
+            if self.opts.incremental && !self.nbr_stale[i] {
+                continue;
+            }
             let sum = &mut self.nbr_sums[i];
             sum.iter_mut().for_each(|v| *v = 0.0);
             for &m in self.topo.neighbors(i) {
@@ -179,6 +224,7 @@ impl Run {
                     sum[j] += deg * hat[j];
                 }
             }
+            self.nbr_stale[i] = false;
         }
     }
 
@@ -187,51 +233,41 @@ impl Run {
     ///
     /// Perf: both paths are allocation-free — neighbor sums land in
     /// persistent buffers, and `update_into` solves in place over each
-    /// worker's `theta` (which doubles as the warm start).  Thread fan-out
-    /// only pays for expensive subproblems (logistic Newton), so tiny
-    /// closed-form updates should run with `threads = 1`.
+    /// worker's `theta` (which doubles as the warm start).  The threaded
+    /// path dispatches through the persistent pool built in `Run::new`
+    /// (no per-phase thread spawns or job lists); fan-out only pays for
+    /// expensive subproblems (logistic Newton), so tiny closed-form
+    /// updates should run with `threads = 1`.
     fn update_group(&mut self, ids: &[usize]) {
         debug_assert!(ids.windows(2).all(|w| w[0] < w[1]), "ids must be increasing");
         self.fill_neighbor_sums(ids);
-        if self.opts.threads <= 1 || ids.len() <= 1 {
+        if self.pool.is_none() || ids.len() <= 1 {
             for &i in ids {
                 let w = &mut self.workers[i];
                 self.solvers[i].update_into(&w.alpha, &self.nbr_sums[i], &mut w.theta);
             }
             return;
         }
-        // threaded path: zip disjoint (&mut solver, &mut worker) pairs out
-        // of the two vectors, keep the group's ids, then chunk them across
-        // scoped threads — no input cloning, no output collection, every
-        // solve writes its worker's theta in place
-        let threads = self.opts.threads;
-        let sums = &self.nbr_sums;
-        let jobs: Vec<(&mut Box<dyn SubproblemSolver>, &mut WorkerState, &[f64])> = self
-            .solvers
-            .iter_mut()
-            .zip(self.workers.iter_mut())
-            .enumerate()
-            .filter(|(i, _)| ids.binary_search(i).is_ok())
-            .map(|(i, (solver, worker))| (solver, worker, sums[i].as_slice()))
-            .collect();
-        std::thread::scope(|scope| {
-            let chunk = jobs.len().div_ceil(threads.max(1));
-            let mut jobs = jobs;
-            let mut handles = Vec::new();
-            while !jobs.is_empty() {
-                let take = chunk.min(jobs.len());
-                let rest = jobs.split_off(take);
-                let batch = std::mem::replace(&mut jobs, rest);
-                handles.push(scope.spawn(move || {
-                    for (solver, w, sum) in batch {
-                        solver.update_into(&w.alpha, sum, &mut w.theta);
-                    }
-                }));
-            }
-            for h in handles {
-                h.join().expect("solver thread panicked");
-            }
-        });
+        // pool path: the same in-place solves, claimed dynamically across
+        // the pool's threads.  Access to (&mut solver, &mut worker) pairs
+        // goes through raw base pointers because the borrow checker cannot
+        // see index-disjointness across threads; `ids` are strictly
+        // increasing (checked above), so no two jobs alias, and the pool
+        // barrier ends every access before `for_each` returns.
+        let mut pool = self.pool.take().expect("pool presence checked above");
+        {
+            let solvers = crate::parallel::SyncPtr(self.solvers.as_mut_ptr());
+            let workers = crate::parallel::SyncPtr(self.workers.as_mut_ptr());
+            let sums = &self.nbr_sums;
+            pool.for_each(ids.len(), |j| {
+                let i = ids[j];
+                // SAFETY: distinct ids => disjoint elements; see above
+                let solver = unsafe { &mut *solvers.0.add(i) };
+                let w = unsafe { &mut *workers.0.add(i) };
+                solver.update_into(&w.alpha, &sums[i], &mut w.theta);
+            });
+        }
+        self.pool = Some(pool);
     }
 
     /// Transmission pipeline (quantize -> censor -> broadcast) for one
@@ -243,6 +279,7 @@ impl Run {
     /// per-round vector allocation.
     fn transmit_group(&mut self, ids: &[usize], k_plus_1: u64) {
         let d = self.problem.d;
+        let jacobian = self.spec.schedule == Schedule::Jacobian;
         for &i in ids {
             let w = &mut self.workers[i];
             let payload_bits = match &mut w.quantizer {
@@ -279,17 +316,43 @@ impl Run {
                 if !dropped {
                     w.hat.copy_from_slice(&self.cand);
                     w.transmitted_once = true;
+                    // incremental bookkeeping: this commit staled every
+                    // neighbor's cached sum (and, under the Jacobian
+                    // anchor, the worker's own) plus the dual increments
+                    // of the closed neighborhood this iteration.
+                    // Censored and dropped rounds reach neither branch,
+                    // so they leave all caches untouched.
+                    self.hat_changed[i] = true;
+                    for &m in self.topo.neighbors(i) {
+                        self.nbr_stale[m] = true;
+                    }
+                    if jacobian {
+                        self.nbr_stale[i] = true;
+                    }
                 }
             }
         }
     }
 
-    /// Dual update (eq. (23)): every worker, from the hat values.
-    /// Allocation-free: increments accumulate into preallocated buffers.
+    /// Dual update (eq. (23)): every worker integrates
+    /// `rho * sum_m (hat_n - hat_m)` into its dual.
+    ///
+    /// Allocation-free, and incremental: an increment buffer is rebuilt
+    /// only when a hat in the worker's closed neighborhood committed this
+    /// iteration — otherwise its inputs are unchanged and the cached
+    /// value is bit-identical to what the rebuild would produce.  The
+    /// O(d) `alpha += rho * delta` integration itself runs every
+    /// iteration (duals accumulate even across censored rounds).
     fn dual_update(&mut self) {
         let rho = self.problem.rho;
         let d = self.problem.d;
         for i in 0..self.topo.n() {
+            if self.opts.incremental
+                && !self.hat_changed[i]
+                && !self.topo.neighbors(i).iter().any(|&m| self.hat_changed[m])
+            {
+                continue;
+            }
             let acc = &mut self.dual_deltas[i];
             acc.iter_mut().for_each(|v| *v = 0.0);
             for &m in self.topo.neighbors(i) {
@@ -308,6 +371,7 @@ impl Run {
     /// then transmission, followed by the dual update.
     pub fn step(&mut self) {
         let k_plus_1 = self.iter + 1;
+        self.hat_changed.iter_mut().for_each(|v| *v = false);
         let groups = std::mem::take(&mut self.phase_groups);
         for group in &groups {
             self.update_group(group);
@@ -385,6 +449,21 @@ impl Run {
         &self.topo
     }
 
+    /// Persistent neighbor-sum buffer of worker `i` (tests/diagnostics).
+    /// Reflects the inputs of `i`'s most recent primal update; under the
+    /// incremental engine it is bit-identical to what a from-scratch
+    /// recompute at that point would have produced (`tests/incremental.rs`
+    /// locks this against `RunOptions { incremental: false }`).
+    pub fn neighbor_sum(&self, i: usize) -> &[f64] {
+        &self.nbr_sums[i]
+    }
+
+    /// Persistent dual-increment buffer of worker `i` (tests/diagnostics);
+    /// same bit-identity guarantee as [`Run::neighbor_sum`].
+    pub fn dual_delta(&self, i: usize) -> &[f64] {
+        &self.dual_deltas[i]
+    }
+
     /// Snapshot worker `i` (tests / invariant checks).
     pub fn snapshot(&self, i: usize) -> WorkerSnapshot {
         WorkerSnapshot {
@@ -412,44 +491,51 @@ fn build_solvers(
     topo: &Topology,
     opts: &RunOptions,
     schedule: Schedule,
+    pool: Option<&mut crate::parallel::WorkerPool>,
 ) -> Vec<Box<dyn SubproblemSolver>> {
     use crate::config::Task;
-    (0..topo.n())
-        .map(|i| -> Box<dyn SubproblemSolver> {
-            let sh = &problem.shards[i];
-            // Jacobian updates carry the doubled penalty rho*d_i||theta||^2
-            // of DCADMM (see `fill_neighbor_sums`); the solver's quadratic
-            // coefficient is rho*degree/2, so feed it 2*d_i.
-            let degree = match schedule {
-                Schedule::Alternating => topo.degree(i),
-                Schedule::Jacobian => 2 * topo.degree(i),
-            };
-            match (opts.backend, problem.task) {
-                (Backend::Native, Task::Linear) => Box::new(LinearSolver::from_shard(
-                    Arc::clone(sh),
-                    problem.rho,
-                    degree,
-                )),
-                (Backend::Native, Task::Logistic) => Box::new(LogisticSolver::from_shard(
-                    Arc::clone(sh),
-                    problem.mu0,
-                    problem.rho,
-                    degree,
-                )),
-                (Backend::Pjrt, task) => crate::runtime::pjrt_solver(
-                    opts.artifacts_dir
-                        .as_deref()
-                        .expect("PJRT backend needs artifacts_dir"),
-                    task,
-                    sh,
-                    problem.rho,
-                    problem.mu0,
-                    degree,
-                )
-                .expect("failed to build PJRT solver"),
-            }
-        })
-        .collect()
+    let build_one = |i: usize| -> Box<dyn SubproblemSolver> {
+        let sh = &problem.shards[i];
+        // Jacobian updates carry the doubled penalty rho*d_i||theta||^2
+        // of DCADMM (see `fill_neighbor_sums`); the solver's quadratic
+        // coefficient is rho*degree/2, so feed it 2*d_i.
+        let degree = match schedule {
+            Schedule::Alternating => topo.degree(i),
+            Schedule::Jacobian => 2 * topo.degree(i),
+        };
+        match (opts.backend, problem.task) {
+            (Backend::Native, Task::Linear) => Box::new(LinearSolver::from_shard(
+                Arc::clone(sh),
+                problem.rho,
+                degree,
+            )),
+            (Backend::Native, Task::Logistic) => Box::new(LogisticSolver::from_shard(
+                Arc::clone(sh),
+                problem.mu0,
+                problem.rho,
+                degree,
+            )),
+            (Backend::Pjrt, task) => crate::runtime::pjrt_solver(
+                opts.artifacts_dir
+                    .as_deref()
+                    .expect("PJRT backend needs artifacts_dir"),
+                task,
+                sh,
+                problem.rho,
+                problem.mu0,
+                degree,
+            )
+            .expect("failed to build PJRT solver"),
+        }
+    };
+    // setup-time fan-out over the run's persistent pool: the per-worker
+    // Gram + Cholesky construction is O(s d^2 + d^3) each and
+    // embarrassingly parallel (PJRT is pinned to threads = 1 by the
+    // assertion in `Run::new`, so it always takes the sequential arm)
+    match pool {
+        Some(pool) => crate::parallel::map_with_pool(pool, topo.n(), build_one),
+        None => (0..topo.n()).map(build_one).collect(),
+    }
 }
 
 #[cfg(test)]
@@ -624,6 +710,54 @@ mod tests {
             for (x, y) in a.theta.iter().zip(&b.theta) {
                 assert!((x - y).abs() < 1e-12);
             }
+        }
+    }
+
+    #[test]
+    fn scratch_engine_still_converges() {
+        // incremental = false keeps the always-recompute path alive (the
+        // differential baseline of tests/incremental.rs and the bench)
+        let (p, t) = small_problem(true, 8, 21);
+        let mut run = Run::new(
+            p,
+            t,
+            AlgSpec::c_ggadmm(0.3, 0.85),
+            RunOptions { incremental: false, ..RunOptions::default() },
+        );
+        let trace = run.run(200);
+        assert!(trace.last_gap() < 1e-4, "gap={:.3e}", trace.last_gap());
+    }
+
+    #[test]
+    fn censored_round_leaves_caches_untouched() {
+        // under heavy censoring the incremental engine must stop
+        // rebuilding sums: freeze the run, snapshot the caches, step, and
+        // check pointers-worth of state only moved where a commit happened
+        let (p, t) = small_problem(true, 8, 22);
+        let mut run = Run::new(
+            p,
+            t,
+            AlgSpec::c_ggadmm(50.0, 0.999),
+            RunOptions::default(),
+        );
+        // iteration 1 always transmits (state init), and iteration 2
+        // still drains its staleness (heads built their phase-1 sums
+        // before the tails' first commit); from iteration 3 on the huge
+        // tau0 censors everything and the caches must freeze
+        run.step();
+        run.step();
+        assert_eq!(run.comm().rounds(), 8, "tau0=50 must censor iteration 2");
+        let before: Vec<Vec<f64>> = (0..8).map(|i| run.neighbor_sum(i).to_vec()).collect();
+        let hats: Vec<Vec<f64>> = (0..8).map(|i| run.snapshot(i).hat).collect();
+        run.step();
+        assert_eq!(run.comm().rounds(), 8, "tau0=50 must censor iteration 3");
+        for i in 0..8 {
+            assert_eq!(run.snapshot(i).hat, hats[i], "hat {i} moved while censored");
+            assert_eq!(
+                run.neighbor_sum(i),
+                &before[i][..],
+                "cached sum {i} changed although no neighbor committed"
+            );
         }
     }
 

@@ -73,28 +73,36 @@ impl Coordinator {
         let (event_tx, event_rx) = channel::<Event>();
         let mut cmd_tx = Vec::with_capacity(n);
         let mut handles = Vec::with_capacity(n);
-        for i in 0..n {
-            // Jacobian schedules carry the DCADMM doubled penalty (see
-            // algs::run::build_solvers)
-            let degree = match spec.schedule {
-                Schedule::Alternating => topo.degree(i),
-                Schedule::Jacobian => 2 * topo.degree(i),
-            };
-            // solvers share the shard through the Arc — no per-worker copy
-            // of the underlying X/y data
-            let solver: Box<dyn SubproblemSolver> = match problem.task {
-                crate::config::Task::Linear => Box::new(LinearSolver::from_shard(
-                    std::sync::Arc::clone(&problem.shards[i]),
-                    problem.rho,
-                    degree,
-                )),
-                crate::config::Task::Logistic => Box::new(LogisticSolver::from_shard(
-                    std::sync::Arc::clone(&problem.shards[i]),
-                    problem.mu0,
-                    problem.rho,
-                    degree,
-                )),
-            };
+        // build all solvers before spawning the actors: the per-worker
+        // Gram + Cholesky setup is the expensive part of spawn, and it
+        // fans out over the same pool primitive the simulator uses
+        // (solvers share shards through the Arc — no X/y copies)
+        let solvers = crate::parallel::map_indexed(
+            n,
+            crate::parallel::default_threads().min(n),
+            |i| -> Box<dyn SubproblemSolver> {
+                // Jacobian schedules carry the DCADMM doubled penalty (see
+                // algs::run::build_solvers)
+                let degree = match spec.schedule {
+                    Schedule::Alternating => topo.degree(i),
+                    Schedule::Jacobian => 2 * topo.degree(i),
+                };
+                match problem.task {
+                    crate::config::Task::Linear => Box::new(LinearSolver::from_shard(
+                        std::sync::Arc::clone(&problem.shards[i]),
+                        problem.rho,
+                        degree,
+                    )),
+                    crate::config::Task::Logistic => Box::new(LogisticSolver::from_shard(
+                        std::sync::Arc::clone(&problem.shards[i]),
+                        problem.mu0,
+                        problem.rho,
+                        degree,
+                    )),
+                }
+            },
+        );
+        for (i, solver) in solvers.into_iter().enumerate() {
             let setup = worker::WorkerSetup {
                 id: i,
                 d,

@@ -46,12 +46,15 @@ pub fn worker_main(setup: WorkerSetup, rx: Receiver<Command>, tx: Sender<Event>)
     let mut hat_nbrs: BTreeMap<usize, Vec<f64>> =
         neighbors.iter().map(|&m| (m, vec![0.0; d])).collect();
     let mut transmitted_once = false;
+    // persistent per-phase scratch (zeroed each phase — same arithmetic
+    // as a freshly allocated buffer, without the per-phase allocation)
+    let mut nbr_sum = vec![0.0; d];
 
     while let Ok(cmd) = rx.recv() {
         match cmd {
             Command::Phase { k } => {
                 // primal update (eq. 21/22)
-                let mut nbr_sum = vec![0.0; d];
+                nbr_sum.iter_mut().for_each(|v| *v = 0.0);
                 for v in hat_nbrs.values() {
                     crate::util::axpy(&mut nbr_sum, 1.0, v);
                 }

@@ -212,6 +212,7 @@ pub fn run_figure(spec: &FigureSpec, exec: &ExecOptions) -> FigureResult {
             artifacts_dir: exec.artifacts_dir.clone(),
             drop_prob: 0.0,
             energy: EnergyParams::default(),
+            incremental: true,
         };
         let mut run = Run::new(problem.clone(), topo.clone(), alg.clone(), opts);
         traces.push(run.run(iters));
@@ -254,6 +255,7 @@ pub fn run_fig6(spec: &Fig6Spec, exec: &ExecOptions) -> Vec<FigureResult> {
                     artifacts_dir: exec.artifacts_dir.clone(),
                     drop_prob: 0.0,
                     energy: EnergyParams::default(),
+                    incremental: true,
                 };
                 let mut run = Run::new(problem.clone(), topo.clone(), alg.clone(), opts);
                 let mut trace = run.run(iters);

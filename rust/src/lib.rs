@@ -31,15 +31,19 @@
 //!
 //! ## Perf contract
 //!
-//! The default (sequential) iteration hot path ([`algs::Run::step`]) is
-//! allocation-free after construction: solvers update in place via
-//! [`solver::SubproblemSolver::update_into`], neighbor sums / quantizer
-//! reconstructions / dual increments / phase groups live in persistent
-//! scratch buffers, and shard data is shared behind `Arc` rather than
-//! copied per worker.  (The opt-in `threads > 1` fan-out builds one small
-//! job list per phase; per-step O(d^2)/O(s) solver temporaries are
-//! intrinsic to the math.)  `cargo bench --bench bench_hotpath` tracks
-//! the numbers.
+//! The iteration hot path ([`algs::Run::step`]) is allocation-free after
+//! construction and **censoring-aware**: solvers update in place via
+//! [`solver::SubproblemSolver::update_into`] (the logistic Newton loop is
+//! fully fused — persistent gradient/Hessian/factor scratch, O(s) Armijo
+//! trials from cached margins), neighbor sums and dual increments are
+//! maintained incrementally so censored/dropped rounds skip their
+//! O(deg * d) rebuilds entirely, and shard data is shared behind `Arc`
+//! rather than copied per worker.  The opt-in `threads > 1` fan-out runs
+//! on a persistent barrier-synchronized [`parallel::WorkerPool`] built
+//! once per run (no per-phase thread spawns).  Per-step O(d^2)/O(s)
+//! solver arithmetic is intrinsic to the math.  `cargo bench --bench
+//! bench_hotpath` tracks the numbers and emits machine-readable
+//! `BENCH_hotpath.json` (see EXPERIMENTS.md §Perf).
 
 pub mod algs;
 pub mod analysis;

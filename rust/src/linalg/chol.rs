@@ -1,8 +1,13 @@
 //! Cholesky factorization of symmetric positive-definite matrices.
 //!
-//! Used on the one-time setup path: the GGADMM linear-regression update
-//! matrix `A = X^T X + rho d_n I` is factored (or inverted for the AOT
-//! artifact input) once per worker; every iteration is then a cheap solve.
+//! Two usage patterns:
+//! * one-time setup (linear regression): `A = X^T X + rho d_n I` is
+//!   factored once per worker via [`Cholesky::new`]; every iteration is
+//!   then a cheap [`Cholesky::solve_into`], and
+//! * per-Newton-step refactorization (logistic regression): the solver
+//!   holds a persistent [`Cholesky::workspace`] and calls
+//!   [`Cholesky::factor_into`] each step, so the factor storage never
+//!   reallocates on the hot path.
 
 use super::Mat;
 
@@ -16,9 +21,33 @@ impl Cholesky {
     /// Factor an SPD matrix. Returns `None` if the matrix is not positive
     /// definite (within floating-point tolerance).
     pub fn new(a: &Mat) -> Option<Cholesky> {
+        let mut c = Cholesky::workspace(a.rows());
+        if c.factor_into(a) {
+            Some(c)
+        } else {
+            None
+        }
+    }
+
+    /// An unfactored `n x n` workspace: factor with [`Self::factor_into`]
+    /// before solving.
+    pub fn workspace(n: usize) -> Cholesky {
+        Cholesky { l: Mat::zeros(n, n) }
+    }
+
+    /// Refactor `a` into this workspace, reusing the factor storage (no
+    /// allocation when the dimension matches the workspace).  Returns
+    /// `false` if `a` is not positive definite within floating-point
+    /// tolerance; the workspace contents are then unspecified until the
+    /// next successful factorization (every lower-triangle entry is
+    /// rewritten by it).
+    pub fn factor_into(&mut self, a: &Mat) -> bool {
         assert_eq!(a.rows(), a.cols(), "cholesky needs square");
         let n = a.rows();
-        let mut l = Mat::zeros(n, n);
+        if self.l.rows() != n || self.l.cols() != n {
+            self.l = Mat::zeros(n, n);
+        }
+        let l = &mut self.l;
         for i in 0..n {
             for j in 0..=i {
                 let mut sum = a[(i, j)];
@@ -27,7 +56,7 @@ impl Cholesky {
                 }
                 if i == j {
                     if sum <= 0.0 {
-                        return None;
+                        return false;
                     }
                     l[(i, j)] = sum.sqrt();
                 } else {
@@ -35,7 +64,7 @@ impl Cholesky {
                 }
             }
         }
-        Some(Cholesky { l })
+        true
     }
 
     /// The lower factor.
@@ -158,6 +187,25 @@ mod tests {
     fn rejects_indefinite() {
         let a = Mat::from_rows(&[&[1.0, 2.0], &[2.0, 1.0]]); // eigenvalues 3, -1
         assert!(Cholesky::new(&a).is_none());
+    }
+
+    #[test]
+    fn factor_into_reuses_workspace_and_matches_new() {
+        let mut ws = Cholesky::workspace(7);
+        for seed in 0..5 {
+            let a = random_spd(7, 100 + seed);
+            assert!(ws.factor_into(&a));
+            let fresh = Cholesky::new(&a).unwrap();
+            // refactorization in a reused workspace is bit-identical to
+            // a fresh factorization (every lower entry is rewritten)
+            assert_eq!(ws.l(), fresh.l());
+        }
+        // a failed factor leaves the workspace reusable
+        let bad = Mat::from_rows(&[&[1.0, 2.0], &[2.0, 1.0]]);
+        assert!(!ws.factor_into(&bad)); // also exercises the resize path
+        let good = random_spd(2, 9);
+        assert!(ws.factor_into(&good));
+        assert_eq!(ws.l(), Cholesky::new(&good).unwrap().l());
     }
 
     #[test]

@@ -94,31 +94,25 @@ impl Mat {
         out
     }
 
-    /// Matrix-vector product `self * v`.
+    /// Matrix-vector product `self * v` (each row through the 4-wide
+    /// unrolled [`crate::util::dot`]; reassociated relative to a naive
+    /// inner loop at the last-ulp level).
     pub fn matvec(&self, v: &[f64]) -> Vec<f64> {
         assert_eq!(v.len(), self.cols, "matvec dimension mismatch");
         let mut out = vec![0.0; self.rows];
         for i in 0..self.rows {
-            let row = self.row(i);
-            let mut acc = 0.0;
-            for j in 0..self.cols {
-                acc += row[j] * v[j];
-            }
-            out[i] = acc;
+            out[i] = crate::util::dot(self.row(i), v);
         }
         out
     }
 
-    /// Transposed matvec `self^T * v`.
+    /// Transposed matvec `self^T * v` (row-major friendly: one unrolled
+    /// [`crate::util::axpy`] per row, bit-identical to the naive loop).
     pub fn t_matvec(&self, v: &[f64]) -> Vec<f64> {
         assert_eq!(v.len(), self.rows, "t_matvec dimension mismatch");
         let mut out = vec![0.0; self.cols];
         for i in 0..self.rows {
-            let row = self.row(i);
-            let vi = v[i];
-            for j in 0..self.cols {
-                out[j] += row[j] * vi;
-            }
+            crate::util::axpy(&mut out, v[i], self.row(i));
         }
         out
     }
@@ -283,6 +277,52 @@ mod tests {
         let a = Mat::from_rows(&[&[1.0, 2.0], &[3.0, 4.0], &[5.0, 6.0]]);
         let v = vec![1.0, -1.0, 2.0];
         assert_eq!(a.t_matvec(&v), a.t().matvec(&v));
+    }
+
+    #[test]
+    fn unrolled_matvecs_match_naive_loops() {
+        use crate::testing::prop::check;
+        // matvec reassociates (unrolled dot): tolerance; t_matvec keeps
+        // the naive per-element arithmetic (unrolled axpy): bitwise
+        check("matvec/t_matvec vs naive loops", 100, |g| {
+            let r = g.usize_in(1, 23);
+            let c = g.usize_in(1, 23);
+            let mut m = Mat::zeros(r, c);
+            for i in 0..r {
+                for j in 0..c {
+                    m[(i, j)] = g.normal();
+                }
+            }
+            let v = g.normal_vec(c);
+            let fast = m.matvec(&v);
+            for i in 0..r {
+                let mut acc = 0.0;
+                for j in 0..c {
+                    acc += m[(i, j)] * v[j];
+                }
+                assert!(
+                    (fast[i] - acc).abs() <= 1e-12 * (1.0 + acc.abs()),
+                    "matvec row {i}: {} vs {acc}",
+                    fast[i]
+                );
+            }
+            let w = g.normal_vec(r);
+            let fast_t = m.t_matvec(&w);
+            let mut slow_t = vec![0.0; c];
+            for i in 0..r {
+                for j in 0..c {
+                    slow_t[j] += w[i] * m[(i, j)];
+                }
+            }
+            for j in 0..c {
+                assert!(
+                    fast_t[j].to_bits() == slow_t[j].to_bits(),
+                    "t_matvec col {j}: {:?} vs {:?}",
+                    fast_t[j],
+                    slow_t[j]
+                );
+            }
+        });
     }
 
     #[test]

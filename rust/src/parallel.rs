@@ -1,16 +1,239 @@
-//! Scoped fork-join helper for group-parallel worker updates.
+//! Deterministic parallel primitives: a persistent, barrier-synchronized
+//! [`WorkerPool`] plus the fork-join [`map_indexed`] helper built on it.
 //!
 //! The head (resp. tail) group of GGADMM updates its primal variables in
-//! parallel; this module gives the coordinator a tiny deterministic
-//! fork-join primitive on `std::thread::scope` (no tokio in the sandbox,
-//! and the workloads are CPU-bound anyway).
+//! parallel; the original implementation spawned fresh OS threads through
+//! `std::thread::scope` every phase, which costs more than a paper-scale
+//! linear solve.  [`WorkerPool`] amortizes that: helper threads are
+//! spawned **once** (e.g. in `Run::new`) and every phase dispatches
+//! through a generation counter + condvar barrier.  Work items are
+//! claimed dynamically off an atomic counter, so uneven subproblem costs
+//! (logistic Newton steps) balance across threads, and the caller thread
+//! participates in the claim loop, so a pool of `t` threads uses exactly
+//! `t` cores.  (No tokio in the sandbox, and the workloads are CPU-bound
+//! anyway.)
 
-/// Run `f(i)` for every `i in 0..n`, distributing across at most
-/// `max_threads` OS threads, and collect results in index order.
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+
+/// Raw base pointer handed to pool jobs for disjoint per-index `&mut`
+/// access into a slice (the borrow checker cannot see index-disjointness
+/// across threads).  The creator promises that concurrent jobs touch
+/// distinct indices; the pool barrier orders every access before the
+/// dispatching call returns.
+pub(crate) struct SyncPtr<T>(pub(crate) *mut T);
+
+// SAFETY: the pointer is only dereferenced at indices the caller
+// guarantees are claimed by exactly one job (see users); `T: Send`
+// because the pointee values are produced/consumed across threads.
+unsafe impl<T: Send> Sync for SyncPtr<T> {}
+
+/// One dispatched generation of work: run `f(i)` for every `i in 0..n`.
+#[derive(Clone, Copy)]
+struct Job {
+    /// Lifetime-erased job closure.  Soundness: `for_each` does not
+    /// return before every helper has finished the generation, so the
+    /// referent outlives every call through this reference.
+    f: &'static (dyn Fn(usize) + Sync),
+    n: usize,
+}
+
+struct State {
+    /// Bumped once per dispatched generation.
+    generation: u64,
+    job: Option<Job>,
+    /// Helpers still working on the current generation.
+    active: usize,
+    /// A helper's job closure panicked (re-raised by the caller).
+    panicked: bool,
+    shutdown: bool,
+}
+
+struct Shared {
+    state: Mutex<State>,
+    /// Helpers wait here for a new generation (or shutdown).
+    work_cv: Condvar,
+    /// The dispatching caller waits here for `active == 0`.
+    done_cv: Condvar,
+    /// Next unclaimed work index of the current generation.
+    next: AtomicUsize,
+}
+
+/// A persistent fork-join pool with barrier-synchronized dispatch.
+///
+/// `for_each` takes `&mut self`: one generation runs at a time, and the
+/// call does not return until every index has been processed — so jobs
+/// may soundly borrow caller-local data.
+pub struct WorkerPool {
+    shared: Arc<Shared>,
+    helpers: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl WorkerPool {
+    /// Build a pool that runs jobs on `threads` OS threads in total: the
+    /// caller participates, so `threads - 1` helpers are spawned
+    /// (`threads <= 1` spawns none and `for_each` degrades to a plain
+    /// sequential loop).
+    pub fn new(threads: usize) -> WorkerPool {
+        let shared = Arc::new(Shared {
+            state: Mutex::new(State {
+                generation: 0,
+                job: None,
+                active: 0,
+                panicked: false,
+                shutdown: false,
+            }),
+            work_cv: Condvar::new(),
+            done_cv: Condvar::new(),
+            next: AtomicUsize::new(0),
+        });
+        let helpers = (1..threads.max(1))
+            .map(|k| {
+                let shared = Arc::clone(&shared);
+                std::thread::Builder::new()
+                    .name(format!("pool-{k}"))
+                    .spawn(move || helper_main(&shared))
+                    .expect("spawn pool helper")
+            })
+            .collect();
+        WorkerPool { shared, helpers }
+    }
+
+    /// Total threads the pool dispatches over (helpers + the caller).
+    pub fn threads(&self) -> usize {
+        self.helpers.len() + 1
+    }
+
+    /// Run `f(i)` for every `i in 0..n`, claiming indices dynamically
+    /// across the helpers and the calling thread, and return once all of
+    /// them completed (the barrier that makes borrowing `f`'s captures
+    /// sound).  Panics in `f` are re-raised here after the barrier.
+    pub fn for_each<F: Fn(usize) + Sync>(&mut self, n: usize, f: F) {
+        if n <= 1 || self.helpers.is_empty() {
+            for i in 0..n {
+                f(i);
+            }
+            return;
+        }
+        let f_ref: &(dyn Fn(usize) + Sync) = &f;
+        // SAFETY: lifetime erasure only; the barrier below keeps every
+        // use of the reference within this call frame.
+        let f_static: &'static (dyn Fn(usize) + Sync) = unsafe {
+            std::mem::transmute::<&(dyn Fn(usize) + Sync), &'static (dyn Fn(usize) + Sync)>(f_ref)
+        };
+        {
+            let mut st = self.shared.state.lock().expect("pool state poisoned");
+            debug_assert!(st.job.is_none() && st.active == 0, "generation overlap");
+            self.shared.next.store(0, Ordering::Relaxed);
+            st.job = Some(Job { f: f_static, n });
+            st.generation = st.generation.wrapping_add(1);
+            st.active = self.helpers.len();
+            self.shared.work_cv.notify_all();
+        }
+        // the caller claims work too; catch panics so the barrier always
+        // happens before unwinding can invalidate `f`
+        let caller = catch_unwind(AssertUnwindSafe(|| loop {
+            let i = self.shared.next.fetch_add(1, Ordering::Relaxed);
+            if i >= n {
+                break;
+            }
+            f(i);
+        }));
+        let panicked = {
+            let mut st = self.shared.state.lock().expect("pool state poisoned");
+            while st.active != 0 {
+                st = self.shared.done_cv.wait(st).expect("pool state poisoned");
+            }
+            st.job = None;
+            std::mem::take(&mut st.panicked)
+        };
+        match caller {
+            Err(payload) => resume_unwind(payload),
+            Ok(()) => assert!(!panicked, "worker pool job panicked"),
+        }
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        {
+            let mut st = self.shared.state.lock().expect("pool state poisoned");
+            st.shutdown = true;
+            self.shared.work_cv.notify_all();
+        }
+        for h in self.helpers.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+fn helper_main(shared: &Shared) {
+    let mut seen_gen = 0u64;
+    loop {
+        let job = {
+            let mut st = shared.state.lock().expect("pool state poisoned");
+            loop {
+                if st.shutdown {
+                    return;
+                }
+                if st.generation != seen_gen {
+                    seen_gen = st.generation;
+                    break st.job.expect("generation bumped without a job");
+                }
+                st = shared.work_cv.wait(st).expect("pool state poisoned");
+            }
+        };
+        // claim loop; panics are contained so `active` always reaches 0
+        // and the dispatching caller never deadlocks
+        let result = catch_unwind(AssertUnwindSafe(|| loop {
+            let i = shared.next.fetch_add(1, Ordering::Relaxed);
+            if i >= job.n {
+                break;
+            }
+            (job.f)(i);
+        }));
+        let mut st = shared.state.lock().expect("pool state poisoned");
+        if result.is_err() {
+            st.panicked = true;
+        }
+        st.active -= 1;
+        if st.active == 0 {
+            shared.done_cv.notify_one();
+        }
+    }
+}
+
+/// Collect `f(i)` for every `i in 0..n` through an **existing** pool, in
+/// index order (the reuse path for call sites that already hold a
+/// [`WorkerPool`], e.g. solver construction in `Run::new`).
+pub fn map_with_pool<T, F>(pool: &mut WorkerPool, n: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    if n == 0 {
+        return Vec::new();
+    }
+    let mut out: Vec<Option<T>> = (0..n).map(|_| None).collect();
+    let slots = SyncPtr(out.as_mut_ptr());
+    pool.for_each(n, |i| {
+        // SAFETY: each index in 0..n is claimed by exactly one job, so
+        // the writes are disjoint; the pool barrier orders them before
+        // the reads below.
+        unsafe { *slots.0.add(i) = Some(f(i)) };
+    });
+    out.into_iter().map(|x| x.expect("slot unfilled")).collect()
+}
+
+/// Run `f(i)` for every `i in 0..n` over a transient [`WorkerPool`] of at
+/// most `max_threads` threads and collect results in index order.
 ///
 /// Falls back to a plain sequential loop when `n <= 1` or
 /// `max_threads <= 1` (keeps tests deterministic and avoids thread spawn
-/// overhead for tiny groups).
+/// overhead for tiny inputs).  Call sites with per-iteration dispatch
+/// should hold a [`WorkerPool`] and use [`map_with_pool`] instead of
+/// paying the spawns here.
 pub fn map_indexed<T, F>(n: usize, max_threads: usize, f: F) -> Vec<T>
 where
     T: Send,
@@ -21,32 +244,10 @@ where
     }
     let threads = max_threads.min(n).max(1);
     if threads == 1 {
-        return (0..n).map(&f).collect();
+        return (0..n).map(f).collect();
     }
-    let mut out: Vec<Option<T>> = (0..n).map(|_| None).collect();
-    let chunk = n.div_ceil(threads);
-    std::thread::scope(|scope| {
-        let mut rest: &mut [Option<T>] = &mut out;
-        let mut start = 0usize;
-        let mut handles = Vec::new();
-        while start < n {
-            let len = chunk.min(n - start);
-            let (head, tail) = rest.split_at_mut(len);
-            rest = tail;
-            let fref = &f;
-            let base = start;
-            handles.push(scope.spawn(move || {
-                for (off, slot) in head.iter_mut().enumerate() {
-                    *slot = Some(fref(base + off));
-                }
-            }));
-            start += len;
-        }
-        for h in handles {
-            h.join().expect("worker thread panicked");
-        }
-    });
-    out.into_iter().map(|x| x.expect("slot unfilled")).collect()
+    let mut pool = WorkerPool::new(threads);
+    map_with_pool(&mut pool, n, f)
 }
 
 /// Number of worker threads to use by default (leave one core for the
@@ -93,5 +294,65 @@ mod tests {
     fn empty_is_empty() {
         let out: Vec<usize> = map_indexed(0, 4, |i| i);
         assert!(out.is_empty());
+    }
+
+    #[test]
+    fn pool_reuse_across_generations() {
+        // the persistent-pool contract: one spawn, many dispatches
+        let mut pool = WorkerPool::new(4);
+        assert_eq!(pool.threads(), 4);
+        for round in 0..50usize {
+            let hits: Vec<AtomicUsize> = (0..23).map(|_| AtomicUsize::new(0)).collect();
+            pool.for_each(23, |i| {
+                hits[i].fetch_add(round + 1, Ordering::SeqCst);
+            });
+            for h in &hits {
+                assert_eq!(h.load(Ordering::SeqCst), round + 1);
+            }
+        }
+    }
+
+    #[test]
+    fn pool_single_thread_is_sequential() {
+        let mut pool = WorkerPool::new(1);
+        assert_eq!(pool.threads(), 1);
+        let count = AtomicUsize::new(0);
+        pool.for_each(16, |_| {
+            count.fetch_add(1, Ordering::SeqCst);
+        });
+        assert_eq!(count.load(Ordering::SeqCst), 16);
+    }
+
+    #[test]
+    fn pool_disjoint_writes_match_sequential() {
+        let mut pool = WorkerPool::new(3);
+        let mut out = vec![0usize; 101];
+        let slots = SyncPtr(out.as_mut_ptr());
+        pool.for_each(101, |i| {
+            // SAFETY: indices are claimed exactly once
+            unsafe { *slots.0.add(i) = i * 3 + 1 };
+        });
+        for (i, v) in out.iter().enumerate() {
+            assert_eq!(*v, i * 3 + 1);
+        }
+    }
+
+    #[test]
+    fn pool_survives_a_panicking_job() {
+        let mut pool = WorkerPool::new(3);
+        let hit = catch_unwind(AssertUnwindSafe(|| {
+            pool.for_each(8, |i| {
+                if i == 5 {
+                    panic!("boom");
+                }
+            });
+        }));
+        assert!(hit.is_err(), "panic must propagate to the dispatcher");
+        // the pool stays usable after a failed generation
+        let count = AtomicUsize::new(0);
+        pool.for_each(9, |_| {
+            count.fetch_add(1, Ordering::SeqCst);
+        });
+        assert_eq!(count.load(Ordering::SeqCst), 9);
     }
 }

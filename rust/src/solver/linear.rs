@@ -72,12 +72,14 @@ impl SubproblemSolver for LinearSolver {
     }
 
     fn loss(&self, theta: &[f64]) -> f64 {
-        let pred = self.data.x.matvec(theta);
-        0.5 * pred
-            .iter()
-            .zip(&self.data.y)
-            .map(|(p, y)| (p - y) * (p - y))
-            .sum::<f64>()
+        // row-streamed residual: no prediction vector is materialized,
+        // so trace recording stays allocation-free on this solver
+        let mut acc = 0.0;
+        for (i, y) in self.data.y.iter().enumerate() {
+            let r = crate::util::dot(self.data.x.row(i), theta) - y;
+            acc += r * r;
+        }
+        0.5 * acc
     }
 
     fn d(&self) -> usize {

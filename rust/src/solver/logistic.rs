@@ -10,18 +10,35 @@
 //! tolerance instead of a fixed budget (both land on the same minimizer —
 //! the differential tests in `tests/` check agreement to ~1e-4).
 //!
-//! Perf: construction borrows the worker's shard through a shared
-//! [`Arc<Shard>`] (no per-worker copy of `X`/`y`); `update_into` runs in
-//! the caller's `theta` buffer with persistent `lin`/`grad`/`step`/
-//! candidate scratch, so the O(d) vectors of the Newton loop never
-//! reallocate.  The O(d^2) Hessian (+ its Cholesky factor) and the O(s)
-//! probability vector remain per-step temporaries — they are dwarfed by
-//! the O(s d^2) assembly that produces them.
+//! Perf (the fused Newton kernel; see EXPERIMENTS.md §Perf):
+//! * construction borrows the worker's shard through a shared
+//!   [`Arc<Shard>`] (no per-worker copy of `X`/`y`);
+//! * every Newton-loop vector, the Hessian and its Cholesky factor live
+//!   in persistent scratch ([`Cholesky::factor_into`] reuses the factor
+//!   storage), so `update_into` allocates nothing after warmup;
+//! * one pass over the shard fills margins `z_i = y_i x_i^T theta`,
+//!   probabilities and the data gradient; the Hessian pass reuses the
+//!   cached probabilities (the O(s d^2) assembly remains the per-step
+//!   hot spot);
+//! * the Armijo backtrack is evaluated analytically from cached margins
+//!   and directional margins `u_i = y_i x_i^T step`: each trial costs
+//!   O(s) instead of the former O(s d) objective evaluation, and the
+//!   accepted step updates the margins in O(s) as well.
 
 use super::SubproblemSolver;
 use crate::data::Shard;
 use crate::linalg::{Cholesky, Mat};
 use std::sync::Arc;
+
+/// Stable `log(1 + exp(-m))` (same branches as [`LogisticSolver::loss`]).
+#[inline]
+fn softplus_neg(m: f64) -> f64 {
+    if m > 0.0 {
+        (-m).exp().ln_1p()
+    } else {
+        -m + m.exp().ln_1p()
+    }
+}
 
 /// Newton solver for one worker's logistic shard.
 pub struct LogisticSolver {
@@ -40,8 +57,16 @@ pub struct LogisticSolver {
     grad: Vec<f64>,
     /// persistent scratch: Newton step direction
     step: Vec<f64>,
-    /// persistent scratch: Armijo line-search candidate
-    cand: Vec<f64>,
+    /// persistent scratch (len s): margins `z_i = y_i x_i^T theta`
+    margins: Vec<f64>,
+    /// persistent scratch (len s): probabilities `p_i = sigmoid(-z_i)`
+    probs: Vec<f64>,
+    /// persistent scratch (len s): directional margins `y_i x_i^T step`
+    dir_margins: Vec<f64>,
+    /// persistent scratch: subproblem Hessian
+    hess: Mat,
+    /// persistent factor workspace (refilled via `factor_into`)
+    chol: Cholesky,
 }
 
 impl LogisticSolver {
@@ -49,7 +74,8 @@ impl LogisticSolver {
     pub fn from_shard(data: Arc<Shard>, mu0: f64, rho: f64, degree: usize) -> LogisticSolver {
         assert_eq!(data.x.rows(), data.y.len());
         assert!(!data.y.is_empty());
-        let inv_s = 1.0 / data.y.len() as f64;
+        let s = data.y.len();
+        let inv_s = 1.0 / s as f64;
         let d = data.x.cols();
         LogisticSolver {
             data,
@@ -62,7 +88,11 @@ impl LogisticSolver {
             lin: vec![0.0; d],
             grad: vec![0.0; d],
             step: vec![0.0; d],
-            cand: vec![0.0; d],
+            margins: vec![0.0; s],
+            probs: vec![0.0; s],
+            dir_margins: vec![0.0; s],
+            hess: Mat::zeros(d, d),
+            chol: Cholesky::workspace(d),
         }
     }
 
@@ -72,6 +102,7 @@ impl LogisticSolver {
     }
 
     /// Per-sample probabilities `p_i = sigmoid(-y_i x_i^T theta)`.
+    #[cfg_attr(not(test), allow(dead_code))]
     fn probs(&self, theta: &[f64]) -> Vec<f64> {
         (0..self.data.y.len())
             .map(|i| {
@@ -82,6 +113,7 @@ impl LogisticSolver {
     }
 
     /// Data-term gradient `g = sum -y_i p_i x_i` from precomputed probs.
+    #[cfg_attr(not(test), allow(dead_code))]
     fn grad_data(&self, probs: &[f64]) -> Vec<f64> {
         let d = self.data.x.cols();
         let mut g = vec![0.0; d];
@@ -98,6 +130,7 @@ impl LogisticSolver {
     /// Data-term Hessian `H = sum w_i x_i x_i^T` (upper triangle assembled
     /// through contiguous row slices, then mirrored — the assembly is the
     /// per-Newton-step hot spot; see EXPERIMENTS.md §Perf).
+    #[cfg_attr(not(test), allow(dead_code))]
     fn hess_data(&self, probs: &[f64]) -> Mat {
         let d = self.data.x.cols();
         let mut h = Mat::zeros(d, d);
@@ -131,38 +164,35 @@ impl LogisticSolver {
         let probs = self.probs(theta);
         (self.grad_data(&probs), self.hess_data(&probs))
     }
-
-    /// Subproblem objective (for the Armijo line search).
-    fn sub_objective(&self, theta: &[f64], lin: &[f64]) -> f64 {
-        self.loss(theta)
-            + crate::util::dot(theta, lin)
-            + 0.5 * self.rho_dn * crate::util::dot(theta, theta)
-    }
 }
 
 impl SubproblemSolver for LogisticSolver {
     fn update_into(&mut self, alpha: &[f64], nbr_sum: &[f64], theta: &mut [f64]) {
         let d = theta.len();
+        let s = self.data.y.len();
         assert_eq!(alpha.len(), d);
         assert_eq!(nbr_sum.len(), d);
         // linear term of eq. (22): lin = alpha_n - rho * sum theta_hat_m
         for i in 0..d {
             self.lin[i] = alpha[i] - self.rho * nbr_sum[i];
         }
+        // fresh margins for the incoming warm start; the Newton loop then
+        // maintains them in O(s) per accepted step
+        for i in 0..s {
+            self.margins[i] = self.data.y[i] * crate::util::dot(self.data.x.row(i), theta);
+        }
         for _ in 0..self.max_newton {
             // gradient first: with ADMM warm starts most calls converge in
             // one step, so skipping the Hessian assembly on the final
-            // (already-converged) check saves ~half the work (§Perf)
-            let probs = self.probs(theta);
-            // data-term gradient accumulated into the persistent buffer
-            // (same accumulation order as `grad_data`)
+            // (already-converged) check saves ~half the work (§Perf).
+            // One fused pass over the shard: probabilities from the cached
+            // margins + the data gradient into persistent scratch.
             self.grad.iter_mut().for_each(|g| *g = 0.0);
-            for (i, &p) in probs.iter().enumerate() {
+            for i in 0..s {
+                let p = 1.0 / (1.0 + self.margins[i].exp());
+                self.probs[i] = p;
                 let gscale = -self.data.y[i] * p;
-                let row = self.data.x.row(i);
-                for a in 0..d {
-                    self.grad[a] += gscale * row[a];
-                }
+                crate::util::axpy(&mut self.grad, gscale, self.data.x.row(i));
             }
             for i in 0..d {
                 self.grad[i] = self.inv_s * self.grad[i]
@@ -174,25 +204,80 @@ impl SubproblemSolver for LogisticSolver {
             if gnorm < self.tol * (1.0 + crate::util::norm2(theta)) {
                 break;
             }
-            let h = self
-                .hess_data(&probs)
-                .scale(self.inv_s)
-                .add_diag(self.mu0 + self.rho_dn);
-            Cholesky::new(&h)
-                .expect("subproblem Hessian is SPD")
-                .solve_into(&self.grad, &mut self.step);
-            // Armijo backtracking on the subproblem objective
-            let f0 = self.sub_objective(theta, &self.lin);
+            // Hessian pass from the cached probabilities, assembled into
+            // the persistent buffer: upper triangle accumulated through
+            // contiguous row slices, then scaled + regularized + mirrored
+            // in one finalize sweep
+            self.hess.data_mut().iter_mut().for_each(|v| *v = 0.0);
+            for i in 0..s {
+                let p = self.probs[i];
+                let w = p * (1.0 - p);
+                if w <= 0.0 {
+                    continue;
+                }
+                let row = self.data.x.row(i);
+                for a in 0..d {
+                    let wa = w * row[a];
+                    if wa == 0.0 {
+                        continue;
+                    }
+                    // rows of X and of the Hessian never alias
+                    crate::util::axpy(&mut self.hess.row_mut(a)[a..], wa, &row[a..]);
+                }
+            }
+            let diag = self.mu0 + self.rho_dn;
+            for a in 0..d {
+                for b in a..d {
+                    let mut v = self.inv_s * self.hess[(a, b)];
+                    if a == b {
+                        v += diag;
+                    }
+                    self.hess[(a, b)] = v;
+                    self.hess[(b, a)] = v;
+                }
+            }
+            assert!(
+                self.chol.factor_into(&self.hess),
+                "subproblem Hessian is SPD"
+            );
+            self.chol.solve_into(&self.grad, &mut self.step);
+            // directional margins: u_i = y_i x_i^T step (one pass), after
+            // which every Armijo trial is O(s)
+            for i in 0..s {
+                self.dir_margins[i] =
+                    self.data.y[i] * crate::util::dot(self.data.x.row(i), &self.step);
+            }
+            // Armijo backtracking on the subproblem objective, evaluated
+            // analytically: with theta_t = theta - t*step,
+            //   obj(t) = (1/s) sum softplus(-(z_i - t u_i))
+            //          + <theta, lin> - t <step, lin>
+            //          + (mu0 + rho_dn)/2 (||theta||^2 - 2t <theta, step>
+            //                              + t^2 ||step||^2)
+            let lin_theta = crate::util::dot(theta, &self.lin);
+            let lin_step = crate::util::dot(&self.step, &self.lin);
+            let quad_theta = crate::util::dot(theta, theta);
+            let quad_cross = crate::util::dot(theta, &self.step);
+            let quad_step = crate::util::dot(&self.step, &self.step);
+            let half_pen = 0.5 * (self.mu0 + self.rho_dn);
+            let objective = |t: f64, margins: &[f64], dir: &[f64]| -> f64 {
+                let mut acc = 0.0;
+                for i in 0..s {
+                    acc += softplus_neg(margins[i] - t * dir[i]);
+                }
+                self.inv_s * acc
+                    + (lin_theta - t * lin_step)
+                    + half_pen * (quad_theta - 2.0 * t * quad_cross + t * t * quad_step)
+            };
+            let f0 = objective(0.0, &self.margins, &self.dir_margins);
             let slope = crate::util::dot(&self.grad, &self.step);
             let mut t = 1.0;
             loop {
-                for j in 0..d {
-                    self.cand[j] = theta[j] - t * self.step[j];
-                }
-                if self.sub_objective(&self.cand, &self.lin) <= f0 - 1e-4 * t * slope
-                    || t < 1e-8
-                {
-                    theta.copy_from_slice(&self.cand);
+                let ft = objective(t, &self.margins, &self.dir_margins);
+                if ft <= f0 - 1e-4 * t * slope || t < 1e-8 {
+                    crate::util::axpy(theta, -t, &self.step);
+                    for i in 0..s {
+                        self.margins[i] -= t * self.dir_margins[i];
+                    }
                     break;
                 }
                 t *= 0.5;
@@ -205,12 +290,7 @@ impl SubproblemSolver for LogisticSolver {
         let mut acc = 0.0;
         for i in 0..s {
             let z = self.data.y[i] * crate::util::dot(self.data.x.row(i), theta);
-            // stable log(1 + exp(-z))
-            acc += if z > 0.0 {
-                (-z).exp().ln_1p()
-            } else {
-                -z + z.exp().ln_1p()
-            };
+            acc += softplus_neg(z);
         }
         self.inv_s * acc + 0.5 * self.mu0 * crate::util::dot(theta, theta)
     }
@@ -280,6 +360,50 @@ mod tests {
         for (a, b) in via_update.iter().zip(&theta) {
             assert!((a - b).abs() < 1e-12, "{a} vs {b}");
         }
+    }
+
+    #[test]
+    fn fused_armijo_matches_explicit_objective() {
+        // the analytic line-search objective must agree with literally
+        // forming the candidate and evaluating the subproblem objective
+        check("analytic Armijo objective", 40, |g| {
+            let d = g.usize_in(1, 8);
+            let s = g.usize_in(3, 30);
+            let (x, y) = random_shard(s, d, g.u64());
+            let mu0 = g.f64_in(0.01, 0.5);
+            let rho = g.f64_in(0.1, 2.0);
+            let rho_dn = rho * 2.0;
+            let solver = LogisticSolver::new(x.clone(), y.clone(), mu0, rho, 2);
+            let theta = g.normal_vec(d);
+            let step = g.normal_vec(d);
+            let lin = g.normal_vec(d);
+            let t = g.f64_in(0.0, 1.0);
+            // analytic path (mirrors update_into's closure)
+            let margins: Vec<f64> =
+                (0..s).map(|i| y[i] * crate::util::dot(x.row(i), &theta)).collect();
+            let dirs: Vec<f64> =
+                (0..s).map(|i| y[i] * crate::util::dot(x.row(i), &step)).collect();
+            let mut acc = 0.0;
+            for i in 0..s {
+                acc += softplus_neg(margins[i] - t * dirs[i]);
+            }
+            let analytic = acc / s as f64
+                + (crate::util::dot(&theta, &lin) - t * crate::util::dot(&step, &lin))
+                + 0.5
+                    * (mu0 + rho_dn)
+                    * (crate::util::dot(&theta, &theta)
+                        - 2.0 * t * crate::util::dot(&theta, &step)
+                        + t * t * crate::util::dot(&step, &step));
+            // explicit path: form the candidate
+            let cand: Vec<f64> = theta.iter().zip(&step).map(|(a, b)| a - t * b).collect();
+            let explicit = solver.loss(&cand)
+                + crate::util::dot(&cand, &lin)
+                + 0.5 * rho_dn * crate::util::dot(&cand, &cand);
+            assert!(
+                (analytic - explicit).abs() < 1e-9 * (1.0 + explicit.abs()),
+                "{analytic} vs {explicit}"
+            );
+        });
     }
 
     #[test]

@@ -1,4 +1,14 @@
-//! Small shared utilities: deterministic RNG, float helpers.
+//! Small shared utilities: deterministic RNG, float helpers and the
+//! unrolled scalar kernels (`dot` / `norm2` / `axpy`) under every solver
+//! hot loop.
+//!
+//! The reductions use four independent accumulators: that breaks the
+//! additive dependency chain so the loop pipelines/vectorizes, at the
+//! cost of reassociating the sum — `dot`/`norm2` therefore differ from a
+//! naive left fold at the last-ulp level (bounded by tolerance property
+//! tests below).  `axpy` performs exactly the per-element operation of
+//! the naive loop, so it stays bit-identical (locked by an exact
+//! property test).
 
 pub mod rng;
 
@@ -16,21 +26,58 @@ pub fn max_abs_diff(a: &[f64], b: &[f64]) -> f64 {
         .fold(0.0, f64::max)
 }
 
-/// Euclidean norm of a slice.
+/// Euclidean norm of a slice (4-wide unrolled reduction).
 pub fn norm2(v: &[f64]) -> f64 {
-    v.iter().map(|x| x * x).sum::<f64>().sqrt()
+    let chunks = v.chunks_exact(4);
+    let rem = chunks.remainder();
+    let mut acc = [0.0f64; 4];
+    for c in chunks {
+        acc[0] += c[0] * c[0];
+        acc[1] += c[1] * c[1];
+        acc[2] += c[2] * c[2];
+        acc[3] += c[3] * c[3];
+    }
+    let mut tail = 0.0;
+    for x in rem {
+        tail += x * x;
+    }
+    ((acc[0] + acc[1]) + (acc[2] + acc[3]) + tail).sqrt()
 }
 
-/// Dot product of two slices (panics on length mismatch).
+/// Dot product of two slices (4-wide unrolled reduction; panics on
+/// length mismatch).
 pub fn dot(a: &[f64], b: &[f64]) -> f64 {
     assert_eq!(a.len(), b.len(), "length mismatch");
-    a.iter().zip(b).map(|(x, y)| x * y).sum()
+    let ca = a.chunks_exact(4);
+    let cb = b.chunks_exact(4);
+    let (ra, rb) = (ca.remainder(), cb.remainder());
+    let mut acc = [0.0f64; 4];
+    for (x, y) in ca.zip(cb) {
+        acc[0] += x[0] * y[0];
+        acc[1] += x[1] * y[1];
+        acc[2] += x[2] * y[2];
+        acc[3] += x[3] * y[3];
+    }
+    let mut tail = 0.0;
+    for (x, y) in ra.iter().zip(rb) {
+        tail += x * y;
+    }
+    (acc[0] + acc[1]) + (acc[2] + acc[3]) + tail
 }
 
-/// `a += scale * b` in place.
+/// `a += scale * b` in place (4-wide unrolled; bit-identical to the
+/// naive loop — the per-element operation is unchanged).
 pub fn axpy(a: &mut [f64], scale: f64, b: &[f64]) {
     assert_eq!(a.len(), b.len(), "length mismatch");
-    for (x, y) in a.iter_mut().zip(b) {
+    let mut ca = a.chunks_exact_mut(4);
+    let mut cb = b.chunks_exact(4);
+    for (x, y) in (&mut ca).zip(&mut cb) {
+        x[0] += scale * y[0];
+        x[1] += scale * y[1];
+        x[2] += scale * y[2];
+        x[3] += scale * y[3];
+    }
+    for (x, y) in ca.into_remainder().iter_mut().zip(cb.remainder()) {
         *x += scale * y;
     }
 }
@@ -38,6 +85,21 @@ pub fn axpy(a: &mut [f64], scale: f64, b: &[f64]) {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::testing::prop::check;
+
+    fn naive_dot(a: &[f64], b: &[f64]) -> f64 {
+        a.iter().zip(b).map(|(x, y)| x * y).sum()
+    }
+
+    fn naive_norm2(v: &[f64]) -> f64 {
+        v.iter().map(|x| x * x).sum::<f64>().sqrt()
+    }
+
+    fn naive_axpy(a: &mut [f64], scale: f64, b: &[f64]) {
+        for (x, y) in a.iter_mut().zip(b) {
+            *x += scale * y;
+        }
+    }
 
     #[test]
     fn close_basic() {
@@ -59,5 +121,68 @@ mod tests {
     #[test]
     fn max_abs_diff_basic() {
         assert_eq!(max_abs_diff(&[1.0, 2.0], &[1.5, 2.0]), 0.5);
+    }
+
+    #[test]
+    fn dot_matches_naive_within_reassociation() {
+        // the unrolled reduction reassociates: bound the drift by the
+        // condition of the sum, every length (remainder paths included)
+        check("unrolled dot ~ naive dot", 200, |g| {
+            let n = g.usize_in(0, 67);
+            let a = g.normal_vec(n);
+            let b = g.normal_vec(n);
+            let fast = dot(&a, &b);
+            let slow = naive_dot(&a, &b);
+            let scale: f64 = a.iter().zip(&b).map(|(x, y)| (x * y).abs()).sum();
+            assert!(
+                (fast - slow).abs() <= 1e-12 * (1.0 + scale),
+                "n={n}: {fast} vs {slow}"
+            );
+        });
+    }
+
+    #[test]
+    fn norm2_matches_naive_within_reassociation() {
+        check("unrolled norm2 ~ naive norm2", 200, |g| {
+            let n = g.usize_in(0, 67);
+            let v = g.normal_vec(n);
+            let fast = norm2(&v);
+            let slow = naive_norm2(&v);
+            assert!(
+                (fast - slow).abs() <= 1e-12 * (1.0 + slow),
+                "n={n}: {fast} vs {slow}"
+            );
+        });
+    }
+
+    #[test]
+    fn axpy_bit_identical_to_naive() {
+        // the unroll does not change the per-element arithmetic: exact
+        check("unrolled axpy == naive axpy (bitwise)", 200, |g| {
+            let n = g.usize_in(0, 67);
+            let base = g.normal_vec(n);
+            let b = g.normal_vec(n);
+            let s = g.f64_in(-3.0, 3.0);
+            let mut fast = base.clone();
+            axpy(&mut fast, s, &b);
+            let mut slow = base;
+            naive_axpy(&mut slow, s, &b);
+            for (j, (x, y)) in fast.iter().zip(&slow).enumerate() {
+                assert!(
+                    x.to_bits() == y.to_bits(),
+                    "n={n} j={j}: {x:?} vs {y:?}"
+                );
+            }
+        });
+    }
+
+    #[test]
+    fn empty_and_short_slices() {
+        assert_eq!(dot(&[], &[]), 0.0);
+        assert_eq!(norm2(&[]), 0.0);
+        assert_eq!(dot(&[2.0], &[3.0]), 6.0);
+        let mut a = [1.0];
+        axpy(&mut a, 2.0, &[5.0]);
+        assert_eq!(a, [11.0]);
     }
 }
