@@ -24,8 +24,7 @@ fn main() {
         ExecOptions {
             backend: Backend::Pjrt,
             artifacts_dir: Some(artifacts),
-            threads: 1,
-            record_every: 1,
+            ..ExecOptions::default()
         }
     } else {
         eprintln!("warning: artifacts/manifest.json missing; run `make artifacts`. Using native backend.");

@@ -17,8 +17,7 @@ fn main() {
         ExecOptions {
             backend: Backend::Pjrt,
             artifacts_dir: Some(artifacts),
-            threads: 1,
-            record_every: 1,
+            ..ExecOptions::default()
         }
     } else {
         eprintln!("warning: no artifacts; using native backend");

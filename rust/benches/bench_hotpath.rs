@@ -7,7 +7,7 @@
 //! `BENCH_hotpath.json` (name -> ns/op) that the §Perf table in
 //! EXPERIMENTS.md is regenerated from.
 //!
-//! Three shootouts assert their wins instead of just reporting:
+//! Shootouts assert their wins instead of just reporting:
 //! * **codec**: the word-level (u64) packer vs a faithful copy of the
 //!   original bit-at-a-time loop on a d=10'000, 8-bit message;
 //! * **fused Newton**: `LogisticSolver::update_into` (fused pass, analytic
@@ -15,7 +15,13 @@
 //!   pre-fusion implementation;
 //! * **incremental engine**: the censoring-aware run engine vs the
 //!   from-scratch recompute path (`RunOptions::incremental = false`) at
-//!   paper scale (N=32, d=50) under heavy censoring.
+//!   paper scale (N=32, d=50) under heavy censoring;
+//! * **blocked linalg**: the cache-blocked `gram` / Cholesky
+//!   `factor_into` / `solve_into` kernels vs the retained scalar
+//!   references at d in {50, 200, 500};
+//! * **figure sweep**: pool-scheduled `run_figure`
+//!   (`ExecOptions::sweep_threads`) vs the serial driver (asserted when
+//!   the host has >= 4 cores).
 //!
 //! Run with: `cargo bench --bench bench_hotpath`; set `BENCH_SMOKE=1` for
 //! the low-rep CI smoke mode and `BENCH_OUT=<path>` to redirect the JSON
@@ -92,6 +98,10 @@ impl Harness {
             ("schema".into(), Json::Str("bench_hotpath/v1".into())),
             ("unit".into(), Json::Str("ns_per_op".into())),
             ("smoke".into(), Json::Bool(self.smoke)),
+            (
+                "provenance".into(),
+                Json::Str("cargo bench --bench bench_hotpath".into()),
+            ),
             ("results".into(), results),
         ]);
         std::fs::write(&path, doc.render()).expect("write BENCH_hotpath.json");
@@ -478,6 +488,194 @@ fn bench_incremental_shootout(h: &mut Harness) {
     );
 }
 
+/// Blocked-vs-scalar dense kernel shootouts at d in {50, 200, 500}: the
+/// SYRK-style Gram product, the right-looking blocked Cholesky and the
+/// unit-stride substitution solves against the seed scalar references
+/// retained on `Mat`/`Cholesky`.
+fn bench_blocked_linalg_shootout(h: &mut Harness) {
+    println!("-- blocked linalg shootout: gram / factor / solve --");
+    let slack = if h.smoke { 1.25 } else { 1.0 };
+    for &d in &[50usize, 200, 500] {
+        let mut rng = Pcg64::new(d as u64);
+        let mut x = Mat::zeros(d, d);
+        for i in 0..d {
+            for j in 0..d {
+                x[(i, j)] = rng.normal();
+            }
+        }
+        let spd = x.gram().add_diag(d as f64 * 0.1);
+        let b = rng.normal_vec(d);
+
+        // reps sized so one block is a few ms at the largest d; smoke
+        // mode keeps enough reps/blocks at small d that a single noisy
+        // scheduler episode on a shared runner cannot flip the shootout
+        let cubic_reps = if h.smoke {
+            (4_000_000 / (d * d * d)).clamp(1, 50) as u64
+        } else {
+            (40_000_000 / (d * d * d)).clamp(1, 200) as u64
+        };
+        let blocks = if h.smoke { 4 } else { 3 };
+
+        // gram
+        let (blk, sca) = min_block_pair_ns(
+            blocks,
+            cubic_reps,
+            || {
+                black_box(black_box(&x).gram());
+            },
+            || {
+                black_box(black_box(&x).gram_scalar());
+            },
+        );
+        h.record(&format!("gram d={d} (blocked)"), blk);
+        h.record(&format!("gram d={d} (scalar ref)"), sca);
+        println!("gram d={d} speedup: {:.2}x", sca / blk);
+        assert!(
+            blk < sca * slack,
+            "blocked gram must beat scalar at d={d} ({blk:.0} vs {sca:.0} ns, slack {slack})"
+        );
+
+        // Cholesky factor_into
+        let mut ws_blocked = Cholesky::workspace(d);
+        let mut ws_scalar = Cholesky::workspace(d);
+        let (blk, sca) = min_block_pair_ns(
+            blocks,
+            cubic_reps,
+            || {
+                assert!(ws_blocked.factor_into(black_box(&spd)));
+            },
+            || {
+                assert!(ws_scalar.factor_into_scalar(black_box(&spd)));
+            },
+        );
+        h.record(&format!("cholesky factor_into d={d} (blocked)"), blk);
+        h.record(&format!("cholesky factor_into d={d} (scalar ref)"), sca);
+        println!("factor_into d={d} speedup: {:.2}x", sca / blk);
+        assert!(
+            blk < sca * slack,
+            "blocked factor_into must beat scalar at d={d} ({blk:.0} vs {sca:.0} ns)"
+        );
+
+        // triangular solves (quadratic: scale reps up)
+        let solve_reps = if h.smoke {
+            cubic_reps * 16
+        } else {
+            cubic_reps * (d as u64 / 4).max(8)
+        };
+        let ch = Cholesky::new(&spd).unwrap();
+        let mut out_a = vec![0.0; d];
+        let mut out_b = vec![0.0; d];
+        let (blk, sca) = min_block_pair_ns(
+            blocks,
+            solve_reps,
+            || {
+                ch.solve_into(black_box(&b), black_box(&mut out_a));
+            },
+            || {
+                ch.solve_into_scalar(black_box(&b), black_box(&mut out_b));
+            },
+        );
+        h.record(&format!("cholesky solve d={d} (blocked)"), blk);
+        h.record(&format!("cholesky solve d={d} (scalar ref)"), sca);
+        println!("solve d={d} speedup: {:.2}x", sca / blk);
+        assert!(
+            blk < sca * slack,
+            "blocked solve must beat scalar at d={d} ({blk:.0} vs {sca:.0} ns)"
+        );
+    }
+
+    // the blocked multi-RHS inverse vs the seed per-column formulation
+    let d = 200;
+    let mut rng = Pcg64::new(9);
+    let mut x = Mat::zeros(d, d);
+    for i in 0..d {
+        for j in 0..d {
+            x[(i, j)] = rng.normal();
+        }
+    }
+    let spd = x.gram().add_diag(d as f64 * 0.1);
+    let ch = Cholesky::new(&spd).unwrap();
+    let (blocks, reps) = if h.smoke { (2, 1) } else { (3, 5) };
+    let (blk, sca) = min_block_pair_ns(
+        blocks,
+        reps,
+        || {
+            black_box(ch.inverse());
+        },
+        || {
+            // seed formulation: one allocated solve per identity column
+            let mut inv = Mat::zeros(d, d);
+            let mut e = vec![0.0; d];
+            for j in 0..d {
+                e[j] = 1.0;
+                let col = ch.solve(&e);
+                e[j] = 0.0;
+                for i in 0..d {
+                    inv[(i, j)] = col[i];
+                }
+            }
+            black_box(inv);
+        },
+    );
+    h.record("cholesky inverse d=200 (blocked multi-RHS)", blk);
+    h.record("cholesky inverse d=200 (per-column)", sca);
+    println!("inverse d=200 speedup: {:.2}x", sca / blk);
+}
+
+/// Figure-sweep shootout: pool-scheduled `run_figure` vs the serial
+/// driver on a scaled-down fig2.  Determinism is checked first (the
+/// pooled traces must equal the serial ones bit-for-bit); the wall-clock
+/// win is asserted when the host has >= 4 cores.
+fn bench_sweep_shootout(h: &mut Harness) {
+    use cq_ggadmm::experiments::{self, ExecOptions};
+    println!("-- figure-sweep shootout: pool-scheduled vs serial driver --");
+    let mut spec = experiments::fig2();
+    spec.workers = 6;
+    spec.iters_alt = if h.smoke { 30 } else { 60 };
+    spec.iters_jacobian = if h.smoke { 120 } else { 240 };
+    spec.target_gap = 1e-2;
+    let serial_exec = ExecOptions { record_every: 10, sweep_threads: 1, ..Default::default() };
+    let pooled_exec = ExecOptions { record_every: 10, sweep_threads: 4, ..Default::default() };
+
+    // determinism: pool scheduling must not change a single bit
+    let a = experiments::run_figure(&spec, &serial_exec);
+    let b = experiments::run_figure(&spec, &pooled_exec);
+    for (x, y) in a.traces.iter().zip(&b.traces) {
+        assert_eq!(x.algorithm, y.algorithm);
+        assert_eq!(x.points.len(), y.points.len());
+        for (p, q) in x.points.iter().zip(&y.points) {
+            assert_eq!(p.loss_gap.to_bits(), q.loss_gap.to_bits(), "{}", x.algorithm);
+            assert_eq!(p.cum_bits, q.cum_bits);
+        }
+    }
+
+    let blocks = 2;
+    let (pooled_ns, serial_ns) = min_block_pair_ns(
+        blocks,
+        1,
+        || {
+            black_box(experiments::run_figure(black_box(&spec), &pooled_exec));
+        },
+        || {
+            black_box(experiments::run_figure(black_box(&spec), &serial_exec));
+        },
+    );
+    h.record("figure sweep fig2-small (pooled, 4 jobs)", pooled_ns);
+    h.record("figure sweep fig2-small (serial driver)", serial_ns);
+    println!("sweep speedup: {:.2}x", serial_ns / pooled_ns);
+    let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    if cores >= 4 {
+        let slack = if h.smoke { 1.1 } else { 1.0 };
+        assert!(
+            pooled_ns < serial_ns * slack,
+            "pool-scheduled sweep must beat the serial driver on a {cores}-core host \
+             ({pooled_ns:.0} vs {serial_ns:.0} ns)"
+        );
+    } else {
+        println!("(sweep shootout assertion skipped: only {cores} cores available)");
+    }
+}
+
 #[cfg(feature = "pjrt")]
 fn bench_pjrt(
     h: &mut Harness,
@@ -602,6 +800,10 @@ fn main() {
     });
 
     bench_incremental_shootout(&mut h);
+
+    bench_blocked_linalg_shootout(&mut h);
+
+    bench_sweep_shootout(&mut h);
 
     // threads ablation: fan-out only pays for expensive subproblems, so
     // compare on the logistic workload (Newton-dominated); both variants

@@ -532,10 +532,7 @@ fn build_solvers(
     // Gram + Cholesky construction is O(s d^2 + d^3) each and
     // embarrassingly parallel (PJRT is pinned to threads = 1 by the
     // assertion in `Run::new`, so it always takes the sequential arm)
-    match pool {
-        Some(pool) => crate::parallel::map_with_pool(pool, topo.n(), build_one),
-        None => (0..topo.n()).map(build_one).collect(),
-    }
+    crate::parallel::map_maybe_pool(pool, topo.n(), build_one)
 }
 
 #[cfg(test)]

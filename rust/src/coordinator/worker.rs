@@ -93,9 +93,10 @@ pub fn worker_main(setup: WorkerSetup, rx: Receiver<Command>, tx: Sender<Event>)
                     }
                     Payload::Quantized(bytes) => {
                         let msg = decode_quantized(&bytes, d).expect("bad quantized payload");
-                        // reconstruct against the last value I hold for the
-                        // sender — exactly the sender's own reference
-                        *stored = msg.reconstruct(stored);
+                        // reconstruct in place against the last value I
+                        // hold for the sender — exactly the sender's own
+                        // reference — without allocating per link
+                        msg.reconstruct_into(stored);
                     }
                 }
             }

@@ -5,6 +5,23 @@
 //! [`Trace`]s plus a comparison summary at the paper's reference accuracy.
 //! `DESIGN.md §4` holds the index; the `cq-ggadmm exp <figure>` CLI and
 //! the cargo benches drive these.
+//!
+//! ## Sweep scheduling
+//!
+//! Reproducing a figure means several *independent* runs (one per
+//! algorithm; for fig6 per algorithm x density; for the full paper per
+//! figure as well).  [`run_figure`], [`run_figures`] and [`run_fig6`]
+//! flatten those runs into one job list and dispatch it over a
+//! persistent [`crate::parallel::WorkerPool`]
+//! ([`ExecOptions::sweep_threads`] concurrent runs, collected in job
+//! order), so a sweep saturates the machine instead of one core.
+//! Scheduling is **deterministic**: every job owns its spec-pinned seed
+//! and builds its own engine state, so pool-scheduled sweeps reproduce
+//! the serial driver's traces bit-for-bit regardless of thread count or
+//! claim order (`tests/figures.rs` locks this).  When a sweep is down
+//! to a single job — or run-level parallelism is off — the jobs fall
+//! back to intra-run threading ([`ExecOptions::threads`]), so a single
+//! expensive run can still use the whole pool.
 
 pub mod rates;
 pub mod sensitivity;
@@ -168,8 +185,20 @@ pub struct FigureResult {
 pub struct ExecOptions {
     pub backend: Backend,
     pub artifacts_dir: Option<std::path::PathBuf>,
+    /// Intra-run threads (group-parallel primal updates).  Only applied
+    /// when a run can use the whole pool — i.e. when run-level sweep
+    /// parallelism is off or the sweep has a single job; concurrently
+    /// scheduled runs execute single-threaded to avoid oversubscription.
     pub threads: usize,
     pub record_every: u64,
+    /// Concurrent runs across a figure sweep (run-level parallelism).
+    /// `1` = the serial driver; `0` = auto (all cores via
+    /// [`crate::parallel::default_threads`] — unless `threads > 1`, in
+    /// which case the explicit intra-run request wins and the sweep
+    /// stays serial).  Any value reproduces the serial traces
+    /// bit-for-bit: every run owns its spec-pinned seed and results are
+    /// collected in job order.
+    pub sweep_threads: usize,
 }
 
 impl Default for ExecOptions {
@@ -179,6 +208,17 @@ impl Default for ExecOptions {
             artifacts_dir: None,
             threads: 1,
             record_every: 1,
+            sweep_threads: 1,
+        }
+    }
+}
+
+impl ExecOptions {
+    /// Saturate the machine: run-level parallelism across all cores.
+    pub fn saturating() -> Self {
+        ExecOptions {
+            sweep_threads: crate::parallel::default_threads(),
+            ..ExecOptions::default()
         }
     }
 }
@@ -195,73 +235,147 @@ pub fn build_problem(spec: &FigureSpec, p_override: Option<f64>) -> (Problem, To
     (problem, topo)
 }
 
-/// Run one figure: all algorithm series + the summary table.
-pub fn run_figure(spec: &FigureSpec, exec: &ExecOptions) -> FigureResult {
-    let (problem, topo) = build_problem(spec, None);
-    let mut traces = Vec::new();
-    for alg in &spec.algs {
-        let iters = match alg.schedule {
-            crate::algs::Schedule::Alternating => spec.iters_alt,
-            crate::algs::Schedule::Jacobian => spec.iters_jacobian,
-        };
-        let opts = RunOptions {
-            backend: exec.backend,
-            threads: exec.threads,
-            seed: spec.seed,
-            record_every: exec.record_every,
-            artifacts_dir: exec.artifacts_dir.clone(),
-            drop_prob: 0.0,
-            energy: EnergyParams::default(),
-            incremental: true,
-        };
-        let mut run = Run::new(problem.clone(), topo.clone(), alg.clone(), opts);
-        traces.push(run.run(iters));
-    }
-    if spec.with_dgd {
-        traces.push(dgd::run_dgd(
-            &problem,
-            &topo,
-            0.01,
-            spec.iters_jacobian,
-            EnergyParams::default(),
-        ));
-    }
-    let summary = summarize(&traces, spec.target_gap);
-    FigureResult {
-        id: spec.id.to_string(),
-        title: spec.title.to_string(),
-        traces,
-        summary,
-    }
+/// One independent run of a sweep: an (algorithm, problem instance)
+/// pair, optionally relabelled (fig6 density variants).  Jobs borrow the
+/// prebuilt problem and clone it inside the worker — `Problem` clones
+/// share shards behind `Arc`, so the clone is cheap and every job gets
+/// its own engine state.
+struct SweepJob<'a> {
+    spec: &'a FigureSpec,
+    problem: &'a Problem,
+    topo: &'a Topology,
+    /// `None` runs the DGD first-order baseline instead of an ADMM spec.
+    alg: Option<&'a AlgSpec>,
+    /// Trace-label suffix `(label, p)` for density variants.
+    rename: Option<(&'static str, f64)>,
 }
 
-/// Run figure 6: the same algorithms over the sparse and dense graphs.
-pub fn run_fig6(spec: &Fig6Spec, exec: &ExecOptions) -> Vec<FigureResult> {
-    [("sparse", spec.sparse_p), ("dense", spec.dense_p)]
-        .iter()
-        .map(|(label, p)| {
-            let (problem, topo) = build_problem(&spec.base, Some(*p));
-            let mut traces = Vec::new();
-            for alg in &spec.base.algs {
+/// Dispatch a flattened job list over a persistent pool and collect the
+/// traces in job order (run-level parallelism; see the module docs for
+/// the determinism and fallback-to-intra-run-threading contract).
+fn run_jobs(jobs: &[SweepJob], exec: &ExecOptions) -> Vec<Trace> {
+    let sweep = match (exec.backend, exec.sweep_threads) {
+        // the PJRT backend shares one client per process; keep runs serial
+        (Backend::Pjrt, _) => 1,
+        // auto mode: saturate with run-level parallelism, but an explicit
+        // intra-run thread request wins — the caller asked for that layout,
+        // and sweep scheduling would silently force runs single-threaded
+        (_, 0) if exec.threads > 1 => 1,
+        (_, 0) => crate::parallel::default_threads(),
+        (_, t) => t,
+    };
+    let sweep = sweep.min(jobs.len()).max(1);
+    // concurrently scheduled runs go single-threaded (no nested pools);
+    // a lone job — or a serial sweep — keeps the intra-run fan-out
+    let run_threads = if sweep > 1 { 1 } else { exec.threads };
+    let mut pool = (sweep > 1).then(|| crate::parallel::WorkerPool::new(sweep));
+    crate::parallel::map_maybe_pool(pool.as_mut(), jobs.len(), |j| {
+        let job = &jobs[j];
+        let mut trace = match job.alg {
+            Some(alg) => {
                 let iters = match alg.schedule {
-                    crate::algs::Schedule::Alternating => spec.base.iters_alt,
-                    crate::algs::Schedule::Jacobian => spec.base.iters_jacobian,
+                    crate::algs::Schedule::Alternating => job.spec.iters_alt,
+                    crate::algs::Schedule::Jacobian => job.spec.iters_jacobian,
                 };
                 let opts = RunOptions {
                     backend: exec.backend,
-                    threads: exec.threads,
-                    seed: spec.base.seed,
+                    threads: run_threads,
+                    seed: job.spec.seed,
                     record_every: exec.record_every,
                     artifacts_dir: exec.artifacts_dir.clone(),
                     drop_prob: 0.0,
                     energy: EnergyParams::default(),
                     incremental: true,
                 };
-                let mut run = Run::new(problem.clone(), topo.clone(), alg.clone(), opts);
-                let mut trace = run.run(iters);
-                trace.algorithm = format!("{} ({label} p={p})", trace.algorithm);
-                traces.push(trace);
+                let mut run = Run::new(job.problem.clone(), job.topo.clone(), alg.clone(), opts);
+                run.run(iters)
             }
+            None => dgd::run_dgd(
+                job.problem,
+                job.topo,
+                0.01,
+                job.spec.iters_jacobian,
+                EnergyParams::default(),
+            ),
+        };
+        if let Some((label, p)) = job.rename {
+            trace.algorithm = format!("{} ({label} p={p})", trace.algorithm);
+        }
+        trace
+    })
+}
+
+/// Append one job per algorithm (plus DGD if requested) for `spec`.
+fn push_spec_jobs<'a>(
+    jobs: &mut Vec<SweepJob<'a>>,
+    spec: &'a FigureSpec,
+    problem: &'a Problem,
+    topo: &'a Topology,
+    rename: Option<(&'static str, f64)>,
+) {
+    for alg in &spec.algs {
+        jobs.push(SweepJob { spec, problem, topo, alg: Some(alg), rename });
+    }
+    if spec.with_dgd {
+        jobs.push(SweepJob { spec, problem, topo, alg: None, rename });
+    }
+}
+
+/// Run one figure: all algorithm series + the summary table.  The runs
+/// are scheduled as pool jobs (see [`ExecOptions::sweep_threads`]).
+pub fn run_figure(spec: &FigureSpec, exec: &ExecOptions) -> FigureResult {
+    run_figures(std::slice::from_ref(spec), exec)
+        .pop()
+        .expect("one spec in, one result out")
+}
+
+/// Run several figures as **one** flattened job list on **one** pool —
+/// the full-paper sweep saturates all cores across figure boundaries
+/// instead of draining one figure at a time.  Results come back in spec
+/// order with the per-figure trace order of the serial driver.
+pub fn run_figures(specs: &[FigureSpec], exec: &ExecOptions) -> Vec<FigureResult> {
+    // problem construction is deterministic (spec-pinned seeds) and kept
+    // serial: it computes each figure's reference optimum f* once
+    let built: Vec<(Problem, Topology)> = specs.iter().map(|s| build_problem(s, None)).collect();
+    let mut jobs = Vec::new();
+    for (spec, (problem, topo)) in specs.iter().zip(&built) {
+        push_spec_jobs(&mut jobs, spec, problem, topo, None);
+    }
+    let mut traces = run_jobs(&jobs, exec).into_iter();
+    specs
+        .iter()
+        .map(|spec| {
+            let n = spec.algs.len() + usize::from(spec.with_dgd);
+            let traces: Vec<Trace> = traces.by_ref().take(n).collect();
+            let summary = summarize(&traces, spec.target_gap);
+            FigureResult {
+                id: spec.id.to_string(),
+                title: spec.title.to_string(),
+                traces,
+                summary,
+            }
+        })
+        .collect()
+}
+
+/// Run figure 6: the same algorithms over the sparse and dense graphs,
+/// flattened into one (density x algorithm) job list on one pool.
+pub fn run_fig6(spec: &Fig6Spec, exec: &ExecOptions) -> Vec<FigureResult> {
+    let variants = [("sparse", spec.sparse_p), ("dense", spec.dense_p)];
+    let built: Vec<(Problem, Topology)> = variants
+        .iter()
+        .map(|(_, p)| build_problem(&spec.base, Some(*p)))
+        .collect();
+    let mut jobs = Vec::new();
+    for (&(label, p), (problem, topo)) in variants.iter().zip(&built) {
+        push_spec_jobs(&mut jobs, &spec.base, problem, topo, Some((label, p)));
+    }
+    let mut traces = run_jobs(&jobs, exec).into_iter();
+    let per_variant = spec.base.algs.len() + usize::from(spec.base.with_dgd);
+    variants
+        .iter()
+        .map(|(label, p)| {
+            let traces: Vec<Trace> = traces.by_ref().take(per_variant).collect();
             let summary = summarize(&traces, spec.base.target_gap);
             FigureResult {
                 id: format!("{}-{label}", spec.base.id),
@@ -307,23 +421,32 @@ pub fn summarize(traces: &[Trace], target_gap: f64) -> Table {
     t
 }
 
-/// Table 1 of the paper: the dataset inventory.
+/// Table 1 of the paper: the dataset inventory.  The four dataset loads
+/// (synthesis + normalization) are independent, so they run as pool jobs
+/// too; rows are collected in inventory order, so the rendered table is
+/// identical to the serial build.
 pub fn table1() -> Table {
-    let mut t = Table::new(&["dataset", "task", "type", "model size d", "instances"]);
-    for (id, kind) in [
+    let entries = [
         (DatasetId::SynthLinear, "synthetic"),
         (DatasetId::BodyFat, "real (surrogate)"),
         (DatasetId::SynthLogistic, "synthetic"),
         (DatasetId::Derm, "real (surrogate)"),
-    ] {
+    ];
+    let threads = entries.len().min(crate::parallel::default_threads());
+    let rows = crate::parallel::map_indexed(entries.len(), threads, |i| {
+        let (id, kind) = entries[i];
         let ds = data::load(id, 1);
-        t.row(&[
+        [
             id.name().into(),
             format!("{:?}", ds.task).to_lowercase(),
             kind.into(),
             ds.d().to_string(),
             ds.n().to_string(),
-        ]);
+        ]
+    });
+    let mut t = Table::new(&["dataset", "task", "type", "model size d", "instances"]);
+    for row in &rows {
+        t.row(row);
     }
     t
 }

@@ -6,6 +6,12 @@
 //! unsigned incidence matrices `M_-`, `M_+` (columns indexed by edges,
 //! head end +1, tail end -1 resp. +1/+1) and the identities
 //! `D - A = 1/2 M_- M_-^T`, `D + A = 1/2 M_+ M_+^T`.
+//!
+//! The spectral constants run on the blocked dense kernels: power
+//! iteration drives the blocked matvec, and the normal matrices behind
+//! `sigma~_min(M_-)` are formed by the symmetric row-Gram kernel
+//! ([`Mat::gram_rows`]) rather than a general GEMM against an explicit
+//! transpose.
 
 use super::Topology;
 use crate::linalg::{min_nonzero_singular, power_iteration_sigma_max, Mat};
@@ -136,10 +142,13 @@ mod tests {
             let t = Topology::random_bipartite(n, p, g.u64());
             let m = matrices(&t);
             let lhs_minus = m.degree.sub(&m.adjacency);
-            let rhs_minus = m.m_minus.matmul(&m.m_minus.t()).scale(0.5);
+            let rhs_minus = m.m_minus.gram_rows().scale(0.5);
             assert!(lhs_minus.sub(&rhs_minus).max_abs() < 1e-10);
+            // blocked row-Gram agrees with the general GEMM formulation
+            let gemm_minus = m.m_minus.matmul(&m.m_minus.t()).scale(0.5);
+            assert!(rhs_minus.sub(&gemm_minus).max_abs() < 1e-10);
             let lhs_plus = m.degree.add(&m.adjacency);
-            let rhs_plus = m.m_plus.matmul(&m.m_plus.t()).scale(0.5);
+            let rhs_plus = m.m_plus.gram_rows().scale(0.5);
             assert!(lhs_plus.sub(&rhs_plus).max_abs() < 1e-10);
             // A = C + C^T
             let rebuilt = m.c.add(&m.c.t());

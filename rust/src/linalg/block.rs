@@ -1,0 +1,664 @@
+//! Cache-blocked dense kernels under [`Mat`] and [`super::Cholesky`].
+//!
+//! Every O(d^2)/O(d^3) dense operation of the crate routes through here:
+//! SYRK-style Gram products (plain, row-wise and weighted — the logistic
+//! Newton Hessian), GEMM, matvec, and a right-looking blocked Cholesky
+//! with blocked triangular solves (single- and multi-RHS).  The former
+//! scalar triple-loops are retained on [`Mat`]/[`super::Cholesky`] as
+//! `*_scalar` reference implementations; differential tests
+//! (`tests/blocked_linalg.rs`) lock blocked-vs-scalar agreement and
+//! `bench_hotpath` asserts the blocked kernels win at d in {50, 200, 500}.
+//!
+//! Design (CPU, f64, no external BLAS):
+//! * **Panel packing** — Gram products pack [`PANEL`] rows of `X`
+//!   transposed into a contiguous scratch, so the reduction dimension of
+//!   every inner product is a unit-stride slice.
+//! * **Register tiling** — symmetric-product and trailing-update kernels
+//!   process 2x2 output tiles with four 4-wide accumulator lanes each
+//!   (see [`dot2x2`]): input rows are reused across two outputs and the
+//!   16 independent accumulator chains keep the FMA pipeline full.
+//! * **Cache tiling** — output blocks of [`TILE`] x [`TILE`] keep both
+//!   packed operand panels resident while a tile is produced.
+//! * **No data-dependent branches** — unlike the seed kernels, the inner
+//!   loops never test operand values (`if a == 0.0 { continue; }` is a
+//!   mispredict on dense data); work is bounded by shapes alone.
+//!
+//! Tuning: the block constants below were chosen for ~32 KiB L1 / 512 KiB
+//! L2 caches (packed panel rows of `PANEL * 8` = 512 B; a 2x[`TILE`] tile
+//! pair is 32 KiB).  To re-tune for a different cache hierarchy, adjust
+//! the constants and re-run `cargo bench --bench bench_hotpath` — the
+//! `blocked vs scalar` shootouts print the speedup per dimension (see
+//! README §Performance).
+
+use super::Mat;
+use crate::util::{axpy, dot};
+
+/// Rows of `X` packed per Gram panel (reduction-dimension blocking).
+pub const PANEL: usize = 64;
+
+/// Output tile edge for symmetric products and trailing updates.
+pub const TILE: usize = 32;
+
+/// Columns processed per GEMM reduction block.
+pub const GEMM_KC: usize = 64;
+
+/// Diagonal-block edge of the right-looking blocked Cholesky.
+pub const CHOL_NB: usize = 32;
+
+/// Packed row `i` of a panel: `p` contiguous reduction elements.
+#[inline]
+fn prow(pack: &[f64], i: usize, p: usize) -> &[f64] {
+    &pack[i * p..(i + 1) * p]
+}
+
+/// 2x2 register-tiled micro-kernel: the four inner products between rows
+/// `{a0, a1}` and `{b0, b1}`, each accumulated over four independent
+/// lanes (16 chains total) so the FMA pipeline never stalls on a single
+/// additive dependency.
+#[inline]
+fn dot2x2(a0: &[f64], a1: &[f64], b0: &[f64], b1: &[f64]) -> (f64, f64, f64, f64) {
+    let mut c00 = [0.0f64; 4];
+    let mut c01 = [0.0f64; 4];
+    let mut c10 = [0.0f64; 4];
+    let mut c11 = [0.0f64; 4];
+    let mut ka0 = a0.chunks_exact(4);
+    let mut ka1 = a1.chunks_exact(4);
+    let mut kb0 = b0.chunks_exact(4);
+    let mut kb1 = b1.chunks_exact(4);
+    for (((x0, x1), y0), y1) in (&mut ka0).zip(&mut ka1).zip(&mut kb0).zip(&mut kb1) {
+        for t in 0..4 {
+            c00[t] += x0[t] * y0[t];
+            c01[t] += x0[t] * y1[t];
+            c10[t] += x1[t] * y0[t];
+            c11[t] += x1[t] * y1[t];
+        }
+    }
+    let mut s00 = (c00[0] + c00[1]) + (c00[2] + c00[3]);
+    let mut s01 = (c01[0] + c01[1]) + (c01[2] + c01[3]);
+    let mut s10 = (c10[0] + c10[1]) + (c10[2] + c10[3]);
+    let mut s11 = (c11[0] + c11[1]) + (c11[2] + c11[3]);
+    for (((x0, x1), y0), y1) in ka0
+        .remainder()
+        .iter()
+        .zip(ka1.remainder())
+        .zip(kb0.remainder())
+        .zip(kb1.remainder())
+    {
+        s00 += x0 * y0;
+        s01 += x0 * y1;
+        s10 += x1 * y0;
+        s11 += x1 * y1;
+    }
+    (s00, s01, s10, s11)
+}
+
+/// `out[j] += a0 * b0[j] + a1 * b1[j]` — the two-row GEMM update that
+/// halves output-row traffic relative to two separate axpys.
+#[inline]
+fn axpy2(out: &mut [f64], a0: f64, b0: &[f64], a1: f64, b1: &[f64]) {
+    let mut co = out.chunks_exact_mut(4);
+    let mut c0 = b0.chunks_exact(4);
+    let mut c1 = b1.chunks_exact(4);
+    for ((o, x0), x1) in (&mut co).zip(&mut c0).zip(&mut c1) {
+        for t in 0..4 {
+            o[t] += a0 * x0[t] + a1 * x1[t];
+        }
+    }
+    for ((o, x0), x1) in co
+        .into_remainder()
+        .iter_mut()
+        .zip(c0.remainder())
+        .zip(c1.remainder())
+    {
+        *o += a0 * x0 + a1 * x1;
+    }
+}
+
+/// Pack `p` rows of `x` starting at `p0`, transposed (column-major over
+/// the panel): `pack[j*p + r] = w_r * x[p0+r, j]` with `w_r = 1` when no
+/// weights are given, `sqrt(w[p0+r])` otherwise (so the SYRK kernel
+/// computes `sum w_r x_r x_r^T` without a per-element weight multiply).
+fn pack_panel(x: &Mat, p0: usize, p: usize, w: Option<&[f64]>, pack: &mut [f64]) {
+    for r in 0..p {
+        let row = x.row(p0 + r);
+        let scale = match w {
+            Some(w) => w[p0 + r].sqrt(),
+            None => 1.0,
+        };
+        for (j, &v) in row.iter().enumerate() {
+            pack[j * p + r] = scale * v;
+        }
+    }
+}
+
+/// Accumulate the upper triangle of the self-product of rows
+/// `row(0..n)` into `out` (tiled; 2x2 micro-kernel on full off-diagonal
+/// tiles, plain dots on the diagonal tiles and odd remainders).  Shared
+/// by the packed-panel Gram kernel ([`gram_into`] via `prow`) and the
+/// row-Gram kernel ([`gram_rows_into`] via `Mat::row`).
+fn syrk_upper_tiled<'a, F: Fn(usize) -> &'a [f64]>(row: &F, n: usize, out: &mut Mat) {
+    let mut i0 = 0;
+    while i0 < n {
+        let i1 = (i0 + TILE).min(n);
+        // diagonal tile: plain dots over the triangle
+        for i in i0..i1 {
+            for j in i..i1 {
+                let v = dot(row(i), row(j));
+                out[(i, j)] += v;
+            }
+        }
+        // off-diagonal tiles: full rectangles, 2x2 register tiling
+        let mut j0 = i1;
+        while j0 < n {
+            let j1 = (j0 + TILE).min(n);
+            rect_tile_acc(row, i0, i1, j0, j1, out);
+            j0 = j1;
+        }
+        i0 = i1;
+    }
+}
+
+/// `out[i0..i1, j0..j1] += row_i . row_j` over a full rectangular tile.
+fn rect_tile_acc<'a, F: Fn(usize) -> &'a [f64]>(
+    row: &F,
+    i0: usize,
+    i1: usize,
+    j0: usize,
+    j1: usize,
+    out: &mut Mat,
+) {
+    let mut i = i0;
+    while i + 2 <= i1 {
+        let pi0 = row(i);
+        let pi1 = row(i + 1);
+        let mut j = j0;
+        while j + 2 <= j1 {
+            let (s00, s01, s10, s11) = dot2x2(pi0, pi1, row(j), row(j + 1));
+            out[(i, j)] += s00;
+            out[(i, j + 1)] += s01;
+            out[(i + 1, j)] += s10;
+            out[(i + 1, j + 1)] += s11;
+            j += 2;
+        }
+        if j < j1 {
+            let pj = row(j);
+            out[(i, j)] += dot(pi0, pj);
+            out[(i + 1, j)] += dot(pi1, pj);
+        }
+        i += 2;
+    }
+    if i < i1 {
+        let pi = row(i);
+        for j in j0..j1 {
+            out[(i, j)] += dot(pi, row(j));
+        }
+    }
+}
+
+/// Mirror the upper triangle of a square matrix onto the lower.
+fn mirror_upper(out: &mut Mat) {
+    let n = out.rows();
+    for i in 0..n {
+        for j in 0..i {
+            out[(i, j)] = out[(j, i)];
+        }
+    }
+}
+
+/// Blocked Gram product `out = x^T x` (SYRK; upper triangle computed
+/// through packed panels + the 2x2 micro-kernel, then mirrored).
+pub fn gram_into(x: &Mat, out: &mut Mat) {
+    let d = x.cols();
+    let mut pack = vec![0.0; d * PANEL];
+    weighted_gram_with_pack(x, None, out, &mut pack);
+}
+
+/// Blocked weighted Gram product `out = sum_r w[r] * x_r x_r^T`
+/// (`w[r] >= 0`; the weights enter the packed panel as `sqrt(w)` so the
+/// micro-kernel is identical to the unweighted case).  `pack` is a
+/// caller-held scratch buffer (resized here), so per-Newton-step Hessian
+/// assemblies allocate nothing.
+pub fn weighted_gram_into(x: &Mat, w: &[f64], out: &mut Mat, pack: &mut Vec<f64>) {
+    assert_eq!(w.len(), x.rows(), "weighted_gram weight length mismatch");
+    weighted_gram_with_pack(x, Some(w), out, pack);
+}
+
+fn weighted_gram_with_pack(x: &Mat, w: Option<&[f64]>, out: &mut Mat, pack: &mut Vec<f64>) {
+    let (s, d) = (x.rows(), x.cols());
+    assert_eq!(out.rows(), d, "gram output dimension mismatch");
+    assert_eq!(out.cols(), d, "gram output dimension mismatch");
+    out.data_mut().iter_mut().for_each(|v| *v = 0.0);
+    pack.resize(d * PANEL, 0.0);
+    let mut p0 = 0;
+    while p0 < s {
+        let p = PANEL.min(s - p0);
+        pack_panel(x, p0, p, w, pack);
+        let panel: &[f64] = pack;
+        syrk_upper_tiled(&|i| prow(panel, i, p), d, out);
+        p0 += p;
+    }
+    mirror_upper(out);
+}
+
+/// Blocked row-Gram product `out = x x^T` (rows are already contiguous,
+/// so no packing is needed; tiled 2x2 micro-kernel over row pairs).
+/// Used by the spectral tools on wide matrices (e.g. the paper's signed
+/// incidence matrix `M_-`).
+pub fn gram_rows_into(x: &Mat, out: &mut Mat) {
+    let s = x.rows();
+    assert_eq!(out.rows(), s, "gram_rows output dimension mismatch");
+    assert_eq!(out.cols(), s, "gram_rows output dimension mismatch");
+    out.data_mut().iter_mut().for_each(|v| *v = 0.0);
+    syrk_upper_tiled(&|i| x.row(i), s, out);
+    mirror_upper(out);
+}
+
+/// Blocked GEMM `out = a * b` (k-blocked, two reduction rows per pass
+/// through the output row; branch-free inner loops).  `out` must not
+/// alias `a` or `b`.
+pub fn matmul_into(a: &Mat, b: &Mat, out: &mut Mat) {
+    assert_eq!(a.cols(), b.rows(), "matmul dimension mismatch");
+    assert_eq!(out.rows(), a.rows(), "matmul output dimension mismatch");
+    assert_eq!(out.cols(), b.cols(), "matmul output dimension mismatch");
+    out.data_mut().iter_mut().for_each(|v| *v = 0.0);
+    let k = a.cols();
+    let mut k0 = 0;
+    while k0 < k {
+        let k1 = (k0 + GEMM_KC).min(k);
+        for i in 0..a.rows() {
+            let arow = &a.row(i)[k0..k1];
+            let orow = out.row_mut(i);
+            let mut kk = 0;
+            while kk + 2 <= arow.len() {
+                axpy2(orow, arow[kk], b.row(k0 + kk), arow[kk + 1], b.row(k0 + kk + 1));
+                kk += 2;
+            }
+            if kk < arow.len() {
+                axpy(orow, arow[kk], b.row(k0 + kk));
+            }
+        }
+        k0 = k1;
+    }
+}
+
+/// Blocked matvec `out = a * v`: four rows share each load of `v`.  The
+/// per-row accumulation order is exactly [`crate::util::dot`]'s (four
+/// independent lanes, left-fold tail, pairwise combine), so the result
+/// is bit-identical to the row-by-row dot formulation.
+pub fn matvec_into(a: &Mat, v: &[f64], out: &mut [f64]) {
+    let rows = a.rows();
+    let n = a.cols();
+    assert_eq!(v.len(), n, "matvec dimension mismatch");
+    assert_eq!(out.len(), rows, "matvec output dimension mismatch");
+    let v = &v[..n];
+    let ch = n - n % 4;
+    let mut i = 0;
+    while i + 4 <= rows {
+        let r0 = &a.row(i)[..n];
+        let r1 = &a.row(i + 1)[..n];
+        let r2 = &a.row(i + 2)[..n];
+        let r3 = &a.row(i + 3)[..n];
+        let mut acc = [[0.0f64; 4]; 4];
+        let mut c = 0;
+        while c < ch {
+            for t in 0..4 {
+                let vt = v[c + t];
+                acc[0][t] += r0[c + t] * vt;
+                acc[1][t] += r1[c + t] * vt;
+                acc[2][t] += r2[c + t] * vt;
+                acc[3][t] += r3[c + t] * vt;
+            }
+            c += 4;
+        }
+        let mut tail = [0.0f64; 4];
+        while c < n {
+            tail[0] += r0[c] * v[c];
+            tail[1] += r1[c] * v[c];
+            tail[2] += r2[c] * v[c];
+            tail[3] += r3[c] * v[c];
+            c += 1;
+        }
+        for (r, t) in tail.iter().enumerate() {
+            out[i + r] = (acc[r][0] + acc[r][1]) + (acc[r][2] + acc[r][3]) + t;
+        }
+        i += 4;
+    }
+    while i < rows {
+        out[i] = dot(a.row(i), v);
+        i += 1;
+    }
+}
+
+/// Right-looking blocked Cholesky: factor `a` (SPD) into the lower
+/// triangle of `l` (`l`'s upper triangle is never written).  Returns
+/// `false` when a diagonal pivot is non-positive; `l` is then
+/// unspecified until the next successful factorization.
+///
+/// Per [`CHOL_NB`]-wide panel: (1) factor the diagonal block in place
+/// (left-looking, contiguous-prefix dots), (2) solve the sub-diagonal
+/// panel against it, (3) subtract the panel's self-product from the
+/// trailing lower triangle with the tiled 2x2 SYRK micro-kernel — so the
+/// O(n^3) bulk runs on unit-stride slices of length [`CHOL_NB`].
+pub fn cholesky_factor_blocked(a: &Mat, l: &mut Mat) -> bool {
+    let n = a.rows();
+    debug_assert_eq!(a.cols(), n);
+    debug_assert_eq!(l.rows(), n);
+    debug_assert_eq!(l.cols(), n);
+    for i in 0..n {
+        let src = &a.row(i)[..=i];
+        l.row_mut(i)[..=i].copy_from_slice(src);
+    }
+    let mut k0 = 0;
+    while k0 < n {
+        let k1 = (k0 + CHOL_NB).min(n);
+        // (1) diagonal block, left-looking within the panel (columns
+        // < k0 were already subtracted by earlier trailing updates)
+        for i in k0..k1 {
+            for j in k0..=i {
+                let s = dot(&l.row(i)[k0..j], &l.row(j)[k0..j]);
+                let sum = l[(i, j)] - s;
+                if i == j {
+                    if sum <= 0.0 {
+                        return false;
+                    }
+                    l[(i, j)] = sum.sqrt();
+                } else {
+                    l[(i, j)] = sum / l[(j, j)];
+                }
+            }
+        }
+        // (2) panel solve: L21 = A21 * L11^{-T}
+        for i in k1..n {
+            for j in k0..k1 {
+                let s = dot(&l.row(i)[k0..j], &l.row(j)[k0..j]);
+                l[(i, j)] = (l[(i, j)] - s) / l[(j, j)];
+            }
+        }
+        // (3) trailing update: A22 (lower triangle) -= L21 L21^T
+        syrk_sub_lower(l, k1, k0, k1);
+        k0 = k1;
+    }
+    true
+}
+
+/// Subtract `L[:, k0..k1] L[:, k0..k1]^T` from the lower triangle of the
+/// trailing block `l[start.., start..]` (tiled; 2x2 micro-kernel on full
+/// rectangles, scalar dots on diagonal-crossing tiles).
+fn syrk_sub_lower(l: &mut Mat, start: usize, k0: usize, k1: usize) {
+    let n = l.rows();
+    let mut i0 = start;
+    while i0 < n {
+        let i1 = (i0 + TILE).min(n);
+        let mut j0 = start;
+        while j0 < i1 {
+            let j1 = (j0 + TILE).min(i1);
+            if j1 <= i0 {
+                // full rectangle below the diagonal
+                let mut i = i0;
+                while i + 2 <= i1 {
+                    let mut j = j0;
+                    while j + 2 <= j1 {
+                        let (s00, s01, s10, s11) = dot2x2(
+                            &l.row(i)[k0..k1],
+                            &l.row(i + 1)[k0..k1],
+                            &l.row(j)[k0..k1],
+                            &l.row(j + 1)[k0..k1],
+                        );
+                        l[(i, j)] -= s00;
+                        l[(i, j + 1)] -= s01;
+                        l[(i + 1, j)] -= s10;
+                        l[(i + 1, j + 1)] -= s11;
+                        j += 2;
+                    }
+                    if j < j1 {
+                        let s0 = dot(&l.row(i)[k0..k1], &l.row(j)[k0..k1]);
+                        let s1 = dot(&l.row(i + 1)[k0..k1], &l.row(j)[k0..k1]);
+                        l[(i, j)] -= s0;
+                        l[(i + 1, j)] -= s1;
+                    }
+                    i += 2;
+                }
+                if i < i1 {
+                    for j in j0..j1 {
+                        let s = dot(&l.row(i)[k0..k1], &l.row(j)[k0..k1]);
+                        l[(i, j)] -= s;
+                    }
+                }
+            } else {
+                // diagonal-crossing tile: scalar over the triangle
+                for i in i0..i1 {
+                    let jmax = j1.min(i + 1);
+                    for j in j0..jmax {
+                        let s = dot(&l.row(i)[k0..k1], &l.row(j)[k0..k1]);
+                        l[(i, j)] -= s;
+                    }
+                }
+            }
+            j0 = j1;
+        }
+        i0 = i1;
+    }
+}
+
+/// Forward substitution `L y = b` (`y` into `out`; `b` and `out` must
+/// not alias).  Each step is one unit-stride prefix dot.
+pub fn solve_lower(l: &Mat, b: &[f64], out: &mut [f64]) {
+    let n = l.rows();
+    assert_eq!(b.len(), n, "solve dimension mismatch");
+    assert_eq!(out.len(), n, "solve output dimension mismatch");
+    for i in 0..n {
+        let s = dot(&l.row(i)[..i], &out[..i]);
+        out[i] = (b[i] - s) / l[(i, i)];
+    }
+}
+
+/// Backward substitution `L^T x = y` in place over `out`, right-looking:
+/// once `x[k]` is final, its contribution is pushed into all earlier
+/// entries through one unit-stride axpy over row `k` of `L` — no strided
+/// column walks (the seed implementation's backward pass read `L`
+/// column-wise).
+pub fn solve_lower_transpose_in_place(l: &Mat, out: &mut [f64]) {
+    let n = l.rows();
+    assert_eq!(out.len(), n, "solve output dimension mismatch");
+    for k in (0..n).rev() {
+        let xk = out[k] / l[(k, k)];
+        out[k] = xk;
+        axpy(&mut out[..k], -xk, &l.row(k)[..k]);
+    }
+}
+
+/// Multi-RHS solve `A X = B` with `A = L L^T`, in place over the columns
+/// of `b` (`n x m`): one blocked forward + one blocked backward sweep,
+/// all updates as unit-stride row axpys of width `m` — every element of
+/// `L` is loaded once per sweep instead of once per right-hand side.
+pub fn solve_many_in_place(l: &Mat, b: &mut Mat) {
+    let n = l.rows();
+    assert_eq!(b.rows(), n, "solve_many dimension mismatch");
+    let m = b.cols();
+    // forward, left-looking: row i accumulates -L[i,j] * y_j for j < i
+    for i in 0..n {
+        let (done, rest) = b.data_mut().split_at_mut(i * m);
+        let bi = &mut rest[..m];
+        let li = l.row(i);
+        for j in 0..i {
+            axpy(bi, -li[j], &done[j * m..(j + 1) * m]);
+        }
+        let inv = 1.0 / li[i];
+        for v in bi.iter_mut() {
+            *v *= inv;
+        }
+    }
+    // backward, right-looking: finalize x_k, push into earlier rows
+    for k in (0..n).rev() {
+        let (head, rest) = b.data_mut().split_at_mut(k * m);
+        let bk = &mut rest[..m];
+        let lk = l.row(k);
+        let inv = 1.0 / lk[k];
+        for v in bk.iter_mut() {
+            *v *= inv;
+        }
+        for i in 0..k {
+            axpy(&mut head[i * m..(i + 1) * m], -lk[i], bk);
+        }
+    }
+}
+
+/// Dense inverse `A^{-1} = (L L^T)^{-1}` into `out`, as one blocked
+/// multi-RHS sweep over the identity.  The forward half exploits the
+/// triangular structure of the intermediate `Y = L^{-1}` (row `j` of `Y`
+/// is zero beyond column `j`), cutting its cost to n^3/6; the result is
+/// mirrored at the end so the returned inverse is exactly symmetric.
+pub fn cholesky_inverse_into(l: &Mat, out: &mut Mat) {
+    let n = l.rows();
+    assert_eq!(out.rows(), n, "inverse output dimension mismatch");
+    assert_eq!(out.cols(), n, "inverse output dimension mismatch");
+    out.data_mut().iter_mut().for_each(|v| *v = 0.0);
+    for i in 0..n {
+        out[(i, i)] = 1.0;
+    }
+    // forward: Y = L^{-1} (lower triangular — restrict every axpy to the
+    // structurally non-zero prefix)
+    for i in 0..n {
+        let (done, rest) = out.data_mut().split_at_mut(i * n);
+        let yi = &mut rest[..n];
+        let li = l.row(i);
+        for j in 0..i {
+            axpy(&mut yi[..=j], -li[j], &done[j * n..j * n + j + 1]);
+        }
+        let inv = 1.0 / li[i];
+        for v in yi[..=i].iter_mut() {
+            *v *= inv;
+        }
+    }
+    // backward: X = L^{-T} Y (dense from the first finalized row on)
+    for k in (0..n).rev() {
+        let (head, rest) = out.data_mut().split_at_mut(k * n);
+        let xk = &mut rest[..n];
+        let lk = l.row(k);
+        let inv = 1.0 / lk[k];
+        for v in xk.iter_mut() {
+            *v *= inv;
+        }
+        for i in 0..k {
+            axpy(&mut head[i * n..(i + 1) * n], -lk[i], xk);
+        }
+    }
+    // exact symmetry (the two halves agree to rounding; keep the lower)
+    for i in 0..n {
+        for j in 0..i {
+            out[(j, i)] = out[(i, j)];
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    fn random_mat(r: usize, c: usize, seed: u64) -> Mat {
+        let mut rng = Pcg64::new(seed);
+        let mut m = Mat::zeros(r, c);
+        for i in 0..r {
+            for j in 0..c {
+                m[(i, j)] = rng.normal();
+            }
+        }
+        m
+    }
+
+    #[test]
+    fn gram_matches_scalar_across_block_boundaries() {
+        // hit every remainder path: below/at/above PANEL and TILE edges
+        for &(s, d) in &[(1, 1), (3, 2), (65, 31), (64, 32), (130, 33), (7, 97), (200, 65)] {
+            let x = random_mat(s, d, (s * 1000 + d) as u64);
+            let blocked = x.gram();
+            let scalar = x.gram_scalar();
+            let tol = 1e-12 * (1.0 + scalar.max_abs());
+            assert!(blocked.sub(&scalar).max_abs() < tol, "gram mismatch at s={s} d={d}");
+            assert!(blocked.is_symmetric(0.0));
+        }
+    }
+
+    #[test]
+    fn weighted_gram_matches_direct_sum() {
+        let mut rng = Pcg64::new(9);
+        for &(s, d) in &[(5, 3), (70, 33), (129, 17)] {
+            let x = random_mat(s, d, (s + d) as u64);
+            let w: Vec<f64> = (0..s).map(|_| rng.uniform()).collect();
+            let mut out = Mat::zeros(d, d);
+            let mut pack = Vec::new();
+            weighted_gram_into(&x, &w, &mut out, &mut pack);
+            let mut direct = Mat::zeros(d, d);
+            for r in 0..s {
+                for i in 0..d {
+                    for j in 0..d {
+                        direct[(i, j)] += w[r] * x[(r, i)] * x[(r, j)];
+                    }
+                }
+            }
+            let tol = 1e-11 * (1.0 + direct.max_abs());
+            assert!(out.sub(&direct).max_abs() < tol, "s={s} d={d}");
+        }
+    }
+
+    #[test]
+    fn gram_rows_matches_matmul_transpose() {
+        for &(s, c) in &[(2, 5), (33, 64), (66, 7)] {
+            let x = random_mat(s, c, (s * 7 + c) as u64);
+            let fast = x.gram_rows();
+            let slow = x.matmul_scalar(&x.t());
+            let tol = 1e-12 * (1.0 + slow.max_abs());
+            assert!(fast.sub(&slow).max_abs() < tol, "s={s} c={c}");
+        }
+    }
+
+    #[test]
+    fn matvec_into_bit_identical_to_dot_rows() {
+        for &(r, c) in &[(1, 1), (4, 4), (5, 9), (9, 5), (130, 67)] {
+            let a = random_mat(r, c, (r * 31 + c) as u64);
+            let v: Vec<f64> = random_mat(1, c, c as u64).data().to_vec();
+            let mut out = vec![0.0; r];
+            matvec_into(&a, &v, &mut out);
+            for i in 0..r {
+                let want = crate::util::dot(a.row(i), &v);
+                assert_eq!(out[i].to_bits(), want.to_bits(), "r={r} c={c} row {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn blocked_cholesky_round_trips() {
+        for &n in &[1usize, 2, 31, 32, 33, 70] {
+            let b = random_mat(n, n, n as u64);
+            let a = b.t().matmul(&b).add_diag(n as f64 * 0.1);
+            let mut l = Mat::zeros(n, n);
+            assert!(cholesky_factor_blocked(&a, &mut l), "n={n}");
+            let rec = l.matmul(&l.t());
+            let tol = 1e-9 * (1.0 + a.max_abs());
+            assert!(a.sub(&rec).max_abs() < tol, "n={n}");
+        }
+    }
+
+    #[test]
+    fn solve_many_matches_column_solves() {
+        let n = 37;
+        let m = 9;
+        let b0 = random_mat(n, n, 5);
+        let a = b0.t().matmul(&b0).add_diag(2.0);
+        let ch = super::super::Cholesky::new(&a).unwrap();
+        let rhs = random_mat(n, m, 6);
+        let mut many = rhs.clone();
+        solve_many_in_place(ch.l(), &mut many);
+        for j in 0..m {
+            let col: Vec<f64> = (0..n).map(|i| rhs[(i, j)]).collect();
+            let x = ch.solve(&col);
+            for i in 0..n {
+                assert!(
+                    (many[(i, j)] - x[i]).abs() < 1e-9 * (1.0 + x[i].abs()),
+                    "col {j} row {i}"
+                );
+            }
+        }
+    }
+}

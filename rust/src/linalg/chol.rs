@@ -8,8 +8,15 @@
 //!   holds a persistent [`Cholesky::workspace`] and calls
 //!   [`Cholesky::factor_into`] each step, so the factor storage never
 //!   reallocates on the hot path.
+//!
+//! The factorization and solves run on the cache-blocked kernels of
+//! [`super::block`] (right-looking blocked factor, unit-stride
+//! substitution sweeps, one-sweep multi-RHS solve behind
+//! [`Cholesky::inverse`]).  The seed scalar loops are retained as
+//! [`Cholesky::factor_into_scalar`] / [`Cholesky::solve_into_scalar`]
+//! for differential tests and the `bench_hotpath` shootouts.
 
-use super::Mat;
+use super::{block, Mat};
 
 /// Lower-triangular Cholesky factor `L` with `L L^T = A`.
 #[derive(Clone, Debug)]
@@ -40,8 +47,22 @@ impl Cholesky {
     /// `false` if `a` is not positive definite within floating-point
     /// tolerance; the workspace contents are then unspecified until the
     /// next successful factorization (every lower-triangle entry is
-    /// rewritten by it).
+    /// rewritten by it).  Runs the right-looking blocked factorization
+    /// of [`block::cholesky_factor_blocked`].
     pub fn factor_into(&mut self, a: &Mat) -> bool {
+        assert_eq!(a.rows(), a.cols(), "cholesky needs square");
+        let n = a.rows();
+        if self.l.rows() != n || self.l.cols() != n {
+            self.l = Mat::zeros(n, n);
+        }
+        block::cholesky_factor_blocked(a, &mut self.l)
+    }
+
+    /// Seed-faithful scalar factorization (left-looking triple loop) —
+    /// retained as the reference implementation for differential tests
+    /// and the `bench_hotpath` blocked-vs-scalar shootout.  Same
+    /// contract as [`Cholesky::factor_into`].
+    pub fn factor_into_scalar(&mut self, a: &Mat) -> bool {
         assert_eq!(a.rows(), a.cols(), "cholesky needs square");
         let n = a.rows();
         if self.l.rows() != n || self.l.cols() != n {
@@ -81,9 +102,19 @@ impl Cholesky {
 
     /// Allocation-free solve into a caller-provided buffer (`b` and `out`
     /// must not alias).  `out` doubles as the forward-substitution
-    /// workspace: the backward pass reads `y` only at index `i` and the
-    /// already-final `x` values at indices `> i`, so it is safely in-place.
+    /// workspace; both sweeps run on unit-stride slices of `L`
+    /// ([`block::solve_lower`] + the right-looking in-place backward
+    /// substitution — no strided column walks).
     pub fn solve_into(&self, b: &[f64], out: &mut [f64]) {
+        block::solve_lower(&self.l, b, out);
+        block::solve_lower_transpose_in_place(&self.l, out);
+    }
+
+    /// Seed-faithful scalar solve (column-striding backward pass) —
+    /// retained as the reference implementation for differential tests
+    /// and the `bench_hotpath` blocked-vs-scalar shootout.  Same
+    /// contract as [`Cholesky::solve_into`].
+    pub fn solve_into_scalar(&self, b: &[f64], out: &mut [f64]) {
         let n = self.l.rows();
         assert_eq!(b.len(), n, "solve dimension mismatch");
         assert_eq!(out.len(), n, "solve output dimension mismatch");
@@ -105,21 +136,31 @@ impl Cholesky {
         }
     }
 
+    /// Multi-RHS solve `A X = B` in place over the columns of `b`
+    /// (`n x m`): one blocked forward + one blocked backward sweep —
+    /// every element of `L` is loaded once per sweep instead of once per
+    /// right-hand side.
+    pub fn solve_many_into(&self, b: &mut Mat) {
+        block::solve_many_in_place(&self.l, b);
+    }
+
     /// Dense inverse `A^{-1}` (used to feed the `linear_update` artifact,
-    /// whose fused kernel wants an explicit matrix).
+    /// whose fused kernel wants an explicit matrix).  One blocked
+    /// multi-RHS sweep over the identity; the forward half exploits the
+    /// triangular structure of `L^{-1}` and the result is exactly
+    /// symmetric (see [`block::cholesky_inverse_into`]).  The seed
+    /// implementation solved — and allocated — one column at a time.
     pub fn inverse(&self) -> Mat {
         let n = self.l.rows();
         let mut inv = Mat::zeros(n, n);
-        let mut e = vec![0.0; n];
-        for j in 0..n {
-            e[j] = 1.0;
-            let col = self.solve(&e);
-            e[j] = 0.0;
-            for i in 0..n {
-                inv[(i, j)] = col[i];
-            }
-        }
+        block::cholesky_inverse_into(&self.l, &mut inv);
         inv
+    }
+
+    /// Allocation-free [`Cholesky::inverse`] into a caller-provided
+    /// matrix.
+    pub fn inverse_into(&self, out: &mut Mat) {
+        block::cholesky_inverse_into(&self.l, out);
     }
 
     /// log-determinant of `A` (handy for conditioning diagnostics).

@@ -4,10 +4,15 @@
 //! matvec, Cholesky and LU factorizations with solves and inverses, power
 //! iteration for the largest singular value and Jacobi rotation for
 //! symmetric eigendecompositions (used by the topology-spectrum analysis
-//! of Theorem 2).  Problem sizes here are small (d <= 50, N <= 32), so the
-//! implementations favour clarity + numerical robustness over blocking;
-//! the O(d^2) per-iteration hot path lives in the AOT artifacts anyway.
+//! of Theorem 2).
+//!
+//! Every O(d^2)/O(d^3) kernel (`gram`, `matmul`, `matvec`, the Cholesky
+//! factor/solves) routes through the cache-blocked, register-tiled layer
+//! in [`block`]; the seed scalar triple-loops remain available as
+//! `*_scalar` reference implementations for differential tests and the
+//! `bench_hotpath` blocked-vs-scalar shootouts.
 
+pub mod block;
 mod chol;
 mod lu;
 mod spectral;
@@ -94,16 +99,20 @@ impl Mat {
         out
     }
 
-    /// Matrix-vector product `self * v` (each row through the 4-wide
-    /// unrolled [`crate::util::dot`]; reassociated relative to a naive
-    /// inner loop at the last-ulp level).
+    /// Matrix-vector product `self * v` (blocked kernel: four rows share
+    /// every load of `v`; per-row arithmetic is exactly the 4-wide
+    /// unrolled [`crate::util::dot`], so the result is bit-identical to
+    /// the row-by-row dot formulation and reassociated relative to a
+    /// naive inner loop only at the last-ulp level).
     pub fn matvec(&self, v: &[f64]) -> Vec<f64> {
-        assert_eq!(v.len(), self.cols, "matvec dimension mismatch");
         let mut out = vec![0.0; self.rows];
-        for i in 0..self.rows {
-            out[i] = crate::util::dot(self.row(i), v);
-        }
+        block::matvec_into(self, v, &mut out);
         out
+    }
+
+    /// Allocation-free [`Mat::matvec`] into a caller-provided buffer.
+    pub fn matvec_into(&self, v: &[f64], out: &mut [f64]) {
+        block::matvec_into(self, v, out);
     }
 
     /// Transposed matvec `self^T * v` (row-major friendly: one unrolled
@@ -117,8 +126,20 @@ impl Mat {
         out
     }
 
-    /// Matrix product `self * other` (ikj loop order for cache locality).
+    /// Matrix product `self * other` (blocked kernel: k-blocked with two
+    /// reduction rows per pass and branch-free inner loops — the seed's
+    /// data-dependent `a == 0.0` skip was a mispredict on dense data).
     pub fn matmul(&self, other: &Mat) -> Mat {
+        let mut out = Mat::zeros(self.rows, other.cols);
+        block::matmul_into(self, other, &mut out);
+        out
+    }
+
+    /// Seed-faithful scalar GEMM (ikj triple loop with the zero-skip
+    /// branch) — retained as the reference implementation for the
+    /// differential tests and the `bench_hotpath` blocked-vs-scalar
+    /// shootout.
+    pub fn matmul_scalar(&self, other: &Mat) -> Mat {
         assert_eq!(self.cols, other.rows, "matmul dimension mismatch");
         let mut out = Mat::zeros(self.rows, other.cols);
         for i in 0..self.rows {
@@ -137,9 +158,28 @@ impl Mat {
         out
     }
 
-    /// Gram matrix `self^T * self` (symmetric; only upper computed then
-    /// mirrored).
+    /// Gram matrix `self^T * self` (symmetric; blocked SYRK kernel —
+    /// packed panels + 2x2 register tiling, upper triangle mirrored).
     pub fn gram(&self) -> Mat {
+        let mut out = Mat::zeros(self.cols, self.cols);
+        block::gram_into(self, &mut out);
+        out
+    }
+
+    /// Row Gram matrix `self * self^T` (symmetric; blocked kernel over
+    /// the already-contiguous rows).  Used by the spectral tools on wide
+    /// matrices such as the paper's incidence matrix `M_-`.
+    pub fn gram_rows(&self) -> Mat {
+        let mut out = Mat::zeros(self.rows, self.rows);
+        block::gram_rows_into(self, &mut out);
+        out
+    }
+
+    /// Seed-faithful scalar Gram product (triple loop with the zero-skip
+    /// branch) — retained as the reference implementation for the
+    /// differential tests and the `bench_hotpath` blocked-vs-scalar
+    /// shootout.
+    pub fn gram_scalar(&self) -> Mat {
         let d = self.cols;
         let mut out = Mat::zeros(d, d);
         for r in 0..self.rows {

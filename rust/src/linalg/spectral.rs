@@ -83,12 +83,15 @@ pub fn symmetric_eigen(a: &Mat) -> Vec<f64> {
 }
 
 /// Smallest non-zero singular value of `a` (zero modes below `tol` are
-/// skipped) — the paper's `sigma~_min(M_-)`.
+/// skipped) — the paper's `sigma~_min(M_-)`.  The normal matrix is
+/// formed by the blocked symmetric kernels ([`Mat::gram`] for tall
+/// inputs, [`Mat::gram_rows`] for wide ones such as the incidence
+/// matrices) instead of a general GEMM against an explicit transpose.
 pub fn min_nonzero_singular(a: &Mat, tol: f64) -> f64 {
     let g = if a.rows() >= a.cols() {
-        a.t().matmul(a)
+        a.gram()
     } else {
-        a.matmul(&a.t())
+        a.gram_rows()
     };
     let eig = symmetric_eigen(&g);
     for e in eig {

@@ -24,8 +24,13 @@ fn cli() -> Cli {
                 .opt("out", Some("results"), "output directory for CSV traces")
                 .opt("backend", Some("native"), "native|pjrt")
                 .opt("artifacts", Some("artifacts"), "artifacts dir (pjrt backend)")
-                .opt("threads", Some("1"), "solver threads (native backend)")
+                .opt("threads", Some("1"), "intra-run solver threads (native backend)")
                 .opt("record-every", Some("1"), "trace sampling stride")
+                .opt(
+                    "sweep-threads",
+                    Some("0"),
+                    "concurrent runs (0 = all cores unless --threads > 1, 1 = serial driver)",
+                )
                 .switch("quiet", "suppress the summary tables"),
         )
         .command(
@@ -101,6 +106,7 @@ fn exec_options(a: &Args) -> Result<ExecOptions, String> {
         },
         threads: a.get_usize("threads")?.unwrap_or(1),
         record_every: a.get_u64("record-every")?.unwrap_or(1),
+        sweep_threads: a.get_usize("sweep-threads")?.unwrap_or(0),
     })
 }
 
@@ -117,27 +123,38 @@ fn cmd_exp(a: &Args) -> Result<(), String> {
     } else {
         vec![figure]
     };
-    for id in ids {
+    // standard figures go through run_figures as ONE flattened job list
+    // (the sweep scheduler saturates all cores across figure boundaries);
+    // fig6's density variants are dispatched the same way afterwards
+    let mut specs = Vec::new();
+    let mut want_fig6 = false;
+    for id in &ids {
         if id == "fig6" {
-            let spec = experiments::fig6();
-            for res in experiments::run_fig6(&spec, &exec) {
-                let path = out.join(format!("{}.csv", res.id));
-                save_traces(&res.traces, &path).map_err(|e| e.to_string())?;
-                if !quiet {
-                    println!("\n=== {} ===\n{}", res.title, res.summary.render());
-                    println!("traces -> {}", path.display());
-                }
-            }
+            want_fig6 = true;
         } else {
-            let spec = experiments::figure_by_id(&id)
-                .ok_or_else(|| format!("unknown figure '{id}'"))?;
-            let res = experiments::run_figure(&spec, &exec);
-            let path = out.join(format!("{}.csv", res.id));
-            save_traces(&res.traces, &path).map_err(|e| e.to_string())?;
-            if !quiet {
-                println!("\n=== {} ===\n{}", res.title, res.summary.render());
-                println!("traces -> {}", path.display());
-            }
+            specs.push(
+                experiments::figure_by_id(id).ok_or_else(|| format!("unknown figure '{id}'"))?,
+            );
+        }
+    }
+    let save = |res: &experiments::FigureResult| -> Result<(), String> {
+        let path = out.join(format!("{}.csv", res.id));
+        save_traces(&res.traces, &path).map_err(|e| e.to_string())?;
+        if !quiet {
+            println!("\n=== {} ===\n{}", res.title, res.summary.render());
+            println!("traces -> {}", path.display());
+        }
+        Ok(())
+    };
+    // the standard figures are one flattened sweep (results land together
+    // when it returns); saving them before the fig6 sweep starts means a
+    // fig6 failure cannot lose the figures that already finished
+    for res in experiments::run_figures(&specs, &exec) {
+        save(&res)?;
+    }
+    if want_fig6 {
+        for res in experiments::run_fig6(&experiments::fig6(), &exec) {
+            save(&res)?;
         }
     }
     Ok(())

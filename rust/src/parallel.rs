@@ -226,6 +226,22 @@ where
     out.into_iter().map(|x| x.expect("slot unfilled")).collect()
 }
 
+/// Collect `f(i)` for every `i in 0..n` in index order, through `pool`
+/// when one is provided and sequentially otherwise.  The shared
+/// dispatch-or-degrade shim for call sites whose pool is optional
+/// (solver construction in `Run::new`, the sweep scheduler in
+/// `experiments`).
+pub fn map_maybe_pool<T, F>(pool: Option<&mut WorkerPool>, n: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    match pool {
+        Some(pool) => map_with_pool(pool, n, f),
+        None => (0..n).map(f).collect(),
+    }
+}
+
 /// Run `f(i)` for every `i in 0..n` over a transient [`WorkerPool`] of at
 /// most `max_threads` threads and collect results in index order.
 ///
@@ -335,6 +351,14 @@ mod tests {
         for (i, v) in out.iter().enumerate() {
             assert_eq!(*v, i * 3 + 1);
         }
+    }
+
+    #[test]
+    fn map_maybe_pool_matches_sequential() {
+        let mut pool = WorkerPool::new(3);
+        let seq = map_maybe_pool(None, 12, |i| i * 2);
+        let pooled = map_maybe_pool(Some(&mut pool), 12, |i| i * 2);
+        assert_eq!(seq, pooled);
     }
 
     #[test]

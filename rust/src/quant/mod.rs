@@ -91,6 +91,20 @@ impl QuantMessage {
             .map(|(&q, &r)| r + delta * q as f64 - self.radius)
             .collect()
     }
+
+    /// In-place receiver-side decode: `inout` holds the shared reference
+    /// (the last value the receiver stores for the sender) and is
+    /// overwritten with the reconstruction.  Bit-identical arithmetic to
+    /// [`QuantMessage::reconstruct`] — the run engine's receive path uses
+    /// this so quantized rounds stop allocating a vector per committed
+    /// link.
+    pub fn reconstruct_into(&self, inout: &mut [f64]) {
+        assert_eq!(inout.len(), self.codes.len());
+        let delta = self.step();
+        for (r, &q) in inout.iter_mut().zip(&self.codes) {
+            *r = *r + delta * q as f64 - self.radius;
+        }
+    }
 }
 
 /// Per-worker quantizer state (the sender side).
@@ -359,6 +373,23 @@ mod tests {
                 }
                 assert_eq!(msg.payload_bits(), bits as u64 * d as u64 + 64);
                 reference = recon_a;
+            }
+        });
+    }
+
+    #[test]
+    fn reconstruct_into_bit_identical_to_reconstruct() {
+        check("reconstruct_into == reconstruct", 60, |g| {
+            let d = g.usize_in(1, 64);
+            let mut q = mk(3, 0.9, g.u64());
+            let reference = g.normal_vec(d);
+            let v = g.normal_vec(d);
+            let (msg, _) = q.quantize(&v, &reference);
+            let alloc = msg.reconstruct(&reference);
+            let mut inplace = reference.clone();
+            msg.reconstruct_into(&mut inplace);
+            for (a, b) in alloc.iter().zip(&inplace) {
+                assert_eq!(a.to_bits(), b.to_bits());
             }
         });
     }

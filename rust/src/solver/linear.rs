@@ -10,7 +10,11 @@
 //! Perf: construction borrows the worker's shard through a shared
 //! [`Arc<Shard>`] (no per-worker copy of `X`/`y`), and `update_into`
 //! reuses a persistent right-hand-side buffer + the caller's `theta`
-//! buffer, so a run allocates nothing per iteration.
+//! buffer, so a run allocates nothing per iteration.  The one-time setup
+//! runs on the blocked kernels: `X^T X` through the SYRK Gram kernel,
+//! the factorization through the right-looking blocked Cholesky, and
+//! [`LinearSolver::a_inverse`] through the one-sweep blocked multi-RHS
+//! solve (the seed solved one identity column at a time).
 
 use super::SubproblemSolver;
 use crate::data::Shard;

@@ -17,9 +17,12 @@
 //!   in persistent scratch ([`Cholesky::factor_into`] reuses the factor
 //!   storage), so `update_into` allocates nothing after warmup;
 //! * one pass over the shard fills margins `z_i = y_i x_i^T theta`,
-//!   probabilities and the data gradient; the Hessian pass reuses the
-//!   cached probabilities (the O(s d^2) assembly remains the per-step
-//!   hot spot);
+//!   probabilities, Hessian weights and the data gradient; the O(s d^2)
+//!   Hessian assembly — the per-step hot spot — runs on the blocked
+//!   weighted-Gram kernel (`H_data = X^T diag(w) X` via
+//!   [`crate::linalg::block::weighted_gram_into`]: packed panels, 2x2
+//!   register tiling, no data-dependent branches), and the Newton system
+//!   is factored/solved by the blocked Cholesky;
 //! * the Armijo backtrack is evaluated analytically from cached margins
 //!   and directional margins `u_i = y_i x_i^T step`: each trial costs
 //!   O(s) instead of the former O(s d) objective evaluation, and the
@@ -63,8 +66,13 @@ pub struct LogisticSolver {
     probs: Vec<f64>,
     /// persistent scratch (len s): directional margins `y_i x_i^T step`
     dir_margins: Vec<f64>,
+    /// persistent scratch (len s): Hessian weights `w_i = p_i (1 - p_i)`
+    weights: Vec<f64>,
     /// persistent scratch: subproblem Hessian
     hess: Mat,
+    /// persistent panel-packing scratch of the blocked weighted-Gram
+    /// Hessian assembly (sized by `weighted_gram_into`)
+    pack: Vec<f64>,
     /// persistent factor workspace (refilled via `factor_into`)
     chol: Cholesky,
 }
@@ -91,7 +99,9 @@ impl LogisticSolver {
             margins: vec![0.0; s],
             probs: vec![0.0; s],
             dir_margins: vec![0.0; s],
+            weights: vec![0.0; s],
             hess: Mat::zeros(d, d),
+            pack: Vec::new(),
             chol: Cholesky::workspace(d),
         }
     }
@@ -185,12 +195,14 @@ impl SubproblemSolver for LogisticSolver {
             // gradient first: with ADMM warm starts most calls converge in
             // one step, so skipping the Hessian assembly on the final
             // (already-converged) check saves ~half the work (§Perf).
-            // One fused pass over the shard: probabilities from the cached
-            // margins + the data gradient into persistent scratch.
+            // One fused pass over the shard: probabilities and Hessian
+            // weights from the cached margins + the data gradient into
+            // persistent scratch.
             self.grad.iter_mut().for_each(|g| *g = 0.0);
             for i in 0..s {
                 let p = 1.0 / (1.0 + self.margins[i].exp());
                 self.probs[i] = p;
+                self.weights[i] = p * (1.0 - p);
                 let gscale = -self.data.y[i] * p;
                 crate::util::axpy(&mut self.grad, gscale, self.data.x.row(i));
             }
@@ -204,37 +216,23 @@ impl SubproblemSolver for LogisticSolver {
             if gnorm < self.tol * (1.0 + crate::util::norm2(theta)) {
                 break;
             }
-            // Hessian pass from the cached probabilities, assembled into
-            // the persistent buffer: upper triangle accumulated through
-            // contiguous row slices, then scaled + regularized + mirrored
-            // in one finalize sweep
-            self.hess.data_mut().iter_mut().for_each(|v| *v = 0.0);
-            for i in 0..s {
-                let p = self.probs[i];
-                let w = p * (1.0 - p);
-                if w <= 0.0 {
-                    continue;
-                }
-                let row = self.data.x.row(i);
-                for a in 0..d {
-                    let wa = w * row[a];
-                    if wa == 0.0 {
-                        continue;
-                    }
-                    // rows of X and of the Hessian never alias
-                    crate::util::axpy(&mut self.hess.row_mut(a)[a..], wa, &row[a..]);
-                }
-            }
+            // Hessian from the cached weights: H_data = X^T diag(w) X on
+            // the blocked weighted-Gram kernel (persistent output + panel
+            // scratch, branch-free), then one scale + regularize sweep
+            // (weighted_gram_into mirrors, so scaling all entries keeps
+            // the matrix exactly symmetric)
+            crate::linalg::block::weighted_gram_into(
+                &self.data.x,
+                &self.weights,
+                &mut self.hess,
+                &mut self.pack,
+            );
             let diag = self.mu0 + self.rho_dn;
+            for v in self.hess.data_mut().iter_mut() {
+                *v *= self.inv_s;
+            }
             for a in 0..d {
-                for b in a..d {
-                    let mut v = self.inv_s * self.hess[(a, b)];
-                    if a == b {
-                        v += diag;
-                    }
-                    self.hess[(a, b)] = v;
-                    self.hess[(b, a)] = v;
-                }
+                self.hess[(a, a)] += diag;
             }
             assert!(
                 self.chol.factor_into(&self.hess),

@@ -1,0 +1,228 @@
+//! Differential tests: blocked dense kernels vs the retained scalar
+//! reference implementations.
+//!
+//! The blocked layer (`linalg::block`) reassociates reductions, so the
+//! contracts here are tolerance-based (scaled by the magnitude of the
+//! result); the scalar references are the seed implementations kept on
+//! `Mat`/`Cholesky` as `*_scalar`.  Dimensions sweep 1..=200 including
+//! non-multiples of every block constant (PANEL = 64, TILE = 32,
+//! CHOL_NB = 32), plus an ill-conditioned SPD stress case.
+
+use cq_ggadmm::linalg::{Cholesky, Mat};
+use cq_ggadmm::testing::prop::check;
+use cq_ggadmm::util::rng::Pcg64;
+
+fn random_mat(r: usize, c: usize, seed: u64) -> Mat {
+    let mut rng = Pcg64::new(seed);
+    let mut m = Mat::zeros(r, c);
+    for i in 0..r {
+        for j in 0..c {
+            m[(i, j)] = rng.normal();
+        }
+    }
+    m
+}
+
+fn random_spd(n: usize, seed: u64) -> Mat {
+    let b = random_mat(n, n, seed);
+    b.t().matmul(&b).add_diag(n as f64 * 0.1)
+}
+
+/// Dimensions straddling every block boundary (PANEL = 64, TILE = 32,
+/// CHOL_NB = 32, the 2x2 micro-kernel and the 4-wide lanes).
+const DIMS: &[usize] = &[1, 2, 3, 5, 31, 32, 33, 63, 64, 65, 96, 127, 128, 130, 161, 200];
+
+#[test]
+fn gram_blocked_matches_scalar_across_dims() {
+    for (k, &d) in DIMS.iter().enumerate() {
+        // rows both shorter and longer than a panel
+        for &s in &[d / 2 + 1, d, 2 * d + 3] {
+            let x = random_mat(s, d, (1000 * k + s) as u64);
+            let blocked = x.gram();
+            let scalar = x.gram_scalar();
+            let tol = 1e-11 * (1.0 + scalar.max_abs());
+            assert!(
+                blocked.sub(&scalar).max_abs() < tol,
+                "gram mismatch at s={s} d={d}: {:.3e}",
+                blocked.sub(&scalar).max_abs()
+            );
+            assert!(blocked.is_symmetric(0.0), "gram not exactly symmetric at d={d}");
+        }
+    }
+}
+
+#[test]
+fn matmul_blocked_matches_scalar_across_dims() {
+    for (k, &n) in DIMS.iter().enumerate() {
+        let m = n / 2 + 1;
+        let p = (n % 7) + 1;
+        let a = random_mat(m, n, (2000 + k) as u64);
+        let b = random_mat(n, p, (3000 + k) as u64);
+        let blocked = a.matmul(&b);
+        let scalar = a.matmul_scalar(&b);
+        let tol = 1e-11 * (1.0 + scalar.max_abs());
+        assert!(
+            blocked.sub(&scalar).max_abs() < tol,
+            "matmul mismatch at {m}x{n}x{p}"
+        );
+    }
+}
+
+#[test]
+fn gram_rows_matches_scalar_gemm_across_dims() {
+    for (k, &s) in DIMS.iter().enumerate() {
+        let c = (s % 13) + 2;
+        let x = random_mat(s, c, (4000 + k) as u64);
+        let blocked = x.gram_rows();
+        let scalar = x.matmul_scalar(&x.t());
+        let tol = 1e-11 * (1.0 + scalar.max_abs());
+        assert!(
+            blocked.sub(&scalar).max_abs() < tol,
+            "gram_rows mismatch at s={s} c={c}"
+        );
+        assert!(blocked.is_symmetric(0.0));
+    }
+}
+
+#[test]
+fn cholesky_blocked_matches_scalar_across_dims() {
+    for (k, &n) in DIMS.iter().enumerate() {
+        let a = random_spd(n, (5000 + k) as u64);
+        let mut blocked = Cholesky::workspace(n);
+        assert!(blocked.factor_into(&a), "blocked factor failed at n={n}");
+        let mut scalar = Cholesky::workspace(n);
+        assert!(scalar.factor_into_scalar(&a), "scalar factor failed at n={n}");
+        let diff = blocked.l().sub(scalar.l()).max_abs();
+        let tol = 1e-10 * (1.0 + scalar.l().max_abs());
+        assert!(diff < tol, "factor mismatch at n={n}: {diff:.3e}");
+        // and the factor actually reproduces A
+        let rec = blocked.l().matmul(&blocked.l().t());
+        assert!(a.sub(&rec).max_abs() < 1e-9 * (1.0 + a.max_abs()), "L L^T != A at n={n}");
+    }
+}
+
+#[test]
+fn solve_blocked_matches_scalar_across_dims() {
+    for (k, &n) in DIMS.iter().enumerate() {
+        let a = random_spd(n, (6000 + k) as u64);
+        let ch = Cholesky::new(&a).unwrap();
+        let mut rng = Pcg64::new((7000 + k) as u64);
+        let b = rng.normal_vec(n);
+        let mut blocked = vec![0.0; n];
+        ch.solve_into(&b, &mut blocked);
+        let mut scalar = vec![1.0; n]; // stale contents must not matter
+        ch.solve_into_scalar(&b, &mut scalar);
+        for i in 0..n {
+            let tol = 1e-9 * (1.0 + scalar[i].abs());
+            assert!(
+                (blocked[i] - scalar[i]).abs() < tol,
+                "solve mismatch at n={n} i={i}: {} vs {}",
+                blocked[i],
+                scalar[i]
+            );
+        }
+    }
+}
+
+#[test]
+fn multi_rhs_solve_and_inverse_match_per_column_solves() {
+    check("solve_many / inverse vs per-column scalar solves", 25, |g| {
+        let n = g.usize_in(1, 70);
+        let m = g.usize_in(1, 12);
+        let a = random_spd(n, g.u64());
+        let ch = Cholesky::new(&a).unwrap();
+        let rhs = random_mat(n, m, g.u64());
+        let mut many = rhs.clone();
+        ch.solve_many_into(&mut many);
+        let mut col = vec![0.0; n];
+        let mut x = vec![0.0; n];
+        for j in 0..m {
+            for i in 0..n {
+                col[i] = rhs[(i, j)];
+            }
+            ch.solve_into_scalar(&col, &mut x);
+            for i in 0..n {
+                assert!(
+                    (many[(i, j)] - x[i]).abs() < 1e-8 * (1.0 + x[i].abs()),
+                    "solve_many col {j} row {i}"
+                );
+            }
+        }
+        // inverse: one blocked sweep vs A * A^{-1} = I, exactly symmetric
+        let inv = ch.inverse();
+        assert!(inv.is_symmetric(0.0), "inverse must be exactly symmetric");
+        let id = a.matmul(&inv);
+        assert!(
+            id.sub(&Mat::eye(n)).max_abs() < 1e-7,
+            "A * A^-1 != I at n={n}: {:.3e}",
+            id.sub(&Mat::eye(n)).max_abs()
+        );
+    });
+}
+
+#[test]
+fn matvec_blocked_bit_identical_to_per_row_dot() {
+    check("blocked matvec == per-row dot (bitwise)", 60, |g| {
+        let r = g.usize_in(1, 40);
+        let c = g.usize_in(1, 40);
+        let m = random_mat(r, c, g.u64());
+        let v = g.normal_vec(c);
+        let fast = m.matvec(&v);
+        for i in 0..r {
+            let want = cq_ggadmm::util::dot(m.row(i), &v);
+            assert_eq!(fast[i].to_bits(), want.to_bits(), "row {i} of {r}x{c}");
+        }
+    });
+}
+
+#[test]
+fn ill_conditioned_spd_stress() {
+    // A = B^T B + eps*I with tiny eps: condition number ~1e9-1e12.  The
+    // blocked factorization must still succeed, be backward stable
+    // (L L^T ~ A relative to ||A||), solve to a small residual, and
+    // agree with the scalar reference about positive-definiteness.
+    for &n in &[33usize, 65, 100] {
+        let b = random_mat(n, n, 0xBAD + n as u64);
+        let a = b.t().matmul(&b).add_diag(1e-9);
+        let mut blocked = Cholesky::workspace(n);
+        let ok_blocked = blocked.factor_into(&a);
+        let mut scalar = Cholesky::workspace(n);
+        let ok_scalar = scalar.factor_into_scalar(&a);
+        assert_eq!(ok_blocked, ok_scalar, "PD disagreement at n={n}");
+        assert!(ok_blocked, "ill-conditioned SPD must still factor at n={n}");
+        let rec = blocked.l().matmul(&blocked.l().t());
+        let rel = a.sub(&rec).max_abs() / (1.0 + a.max_abs());
+        assert!(rel < 1e-10, "backward error {rel:.3e} at n={n}");
+        // residual check: ||A x - b|| small relative to ||b||
+        let mut rng = Pcg64::new(n as u64);
+        let rhs = rng.normal_vec(n);
+        let mut x = vec![0.0; n];
+        blocked.solve_into(&rhs, &mut x);
+        let ax = a.matvec(&x);
+        let resid: f64 = ax
+            .iter()
+            .zip(&rhs)
+            .map(|(p, q)| (p - q) * (p - q))
+            .sum::<f64>()
+            .sqrt();
+        // Cholesky is backward stable: the residual stays far below the
+        // forward error a ~1e11 condition number would allow
+        let bnorm = cq_ggadmm::util::norm2(&rhs);
+        assert!(resid < 1e-3 * (1.0 + bnorm), "residual {resid:.3e} at n={n}");
+    }
+}
+
+#[test]
+fn blocked_factor_rejects_indefinite_like_scalar() {
+    let a = Mat::from_rows(&[
+        &[1.0, 2.0, 0.0],
+        &[2.0, 1.0, 0.0],
+        &[0.0, 0.0, 1.0],
+    ]);
+    let mut ws = Cholesky::workspace(3);
+    assert!(!ws.factor_into(&a));
+    assert!(!ws.factor_into_scalar(&a));
+    // and the workspace stays reusable after the failure
+    let good = random_spd(3, 99);
+    assert!(ws.factor_into(&good));
+}

@@ -79,6 +79,69 @@ fn fig5_orderings_hold() {
     assert!(cq.cum_energy_j < gg.cum_energy_j);
 }
 
+/// Two traces must agree bit-for-bit (every f64 compared by bits).
+fn assert_traces_identical(a: &Trace, b: &Trace, ctx: &str) {
+    assert_eq!(a.algorithm, b.algorithm, "{ctx}: algorithm label");
+    assert_eq!(a.points.len(), b.points.len(), "{ctx}: point count");
+    for (i, (p, q)) in a.points.iter().zip(&b.points).enumerate() {
+        assert_eq!(p.iteration, q.iteration, "{ctx} point {i}");
+        assert_eq!(p.cum_rounds, q.cum_rounds, "{ctx} point {i}");
+        assert_eq!(p.cum_bits, q.cum_bits, "{ctx} point {i}");
+        assert_eq!(
+            p.loss_gap.to_bits(),
+            q.loss_gap.to_bits(),
+            "{ctx} point {i}: loss gap {} vs {}",
+            p.loss_gap,
+            q.loss_gap
+        );
+        assert_eq!(
+            p.consensus_gap.to_bits(),
+            q.consensus_gap.to_bits(),
+            "{ctx} point {i}: consensus gap"
+        );
+        assert_eq!(p.cum_energy_j.to_bits(), q.cum_energy_j.to_bits(), "{ctx} point {i}: energy");
+    }
+}
+
+/// The sweep scheduler's determinism contract: a pool-scheduled figure
+/// sweep reproduces the serial driver's traces bit-for-bit (every run
+/// owns its seed; results are collected in job order).  Scaled-down fig2
+/// plus the fig6 density flattening, so the whole contract is exercised
+/// in a normal `cargo test` run.
+#[test]
+fn pool_scheduled_sweep_bit_identical_to_serial() {
+    let mut spec = experiments::fig2();
+    spec.workers = 6;
+    spec.iters_alt = 80;
+    spec.iters_jacobian = 240;
+    spec.target_gap = 1e-2;
+    let serial = ExecOptions { sweep_threads: 1, ..ExecOptions::default() };
+    let pooled = ExecOptions { sweep_threads: 4, ..ExecOptions::default() };
+    let a = experiments::run_figure(&spec, &serial);
+    let b = experiments::run_figure(&spec, &pooled);
+    assert_eq!(a.traces.len(), b.traces.len());
+    for (x, y) in a.traces.iter().zip(&b.traces) {
+        assert_traces_identical(x, y, "fig2-small");
+    }
+    assert_eq!(a.summary.render(), b.summary.render(), "summaries must match");
+
+    // fig6 flattens (density x algorithm) into one job list
+    let mut f6 = experiments::fig6();
+    f6.base.workers = 6;
+    f6.base.iters_alt = 60;
+    f6.base.iters_jacobian = 180;
+    f6.base.target_gap = 1e-2;
+    let ra = experiments::run_fig6(&f6, &serial);
+    let rb = experiments::run_fig6(&f6, &pooled);
+    assert_eq!(ra.len(), 2);
+    for (fa, fb) in ra.iter().zip(&rb) {
+        assert_eq!(fa.id, fb.id);
+        for (x, y) in fa.traces.iter().zip(&fb.traces) {
+            assert_traces_identical(x, y, &fa.id);
+        }
+    }
+}
+
 /// Figure 6: denser graphs converge in fewer iterations for every scheme,
 /// with the scheme ordering preserved.
 #[test]

@@ -1,0 +1,82 @@
+#!/usr/bin/env python3
+"""Report-only diff of two bench_hotpath JSON artifacts.
+
+Usage: python3 tools/bench_diff.py BENCH_baseline.json BENCH_hotpath.json
+
+Prints a per-bench table (baseline ns/op, fresh ns/op, delta) plus the
+benches that were added or removed, so the perf trajectory is readable
+across PRs straight from the CI log.  This script never fails the build
+on a regression — hard perf gates live inside the bench binary itself
+(the asserted shootouts); it exits non-zero only on malformed input.
+
+Schema (bench_hotpath/v1, emitted by rust/benches/bench_hotpath.rs):
+  {
+    "schema": "bench_hotpath/v1",
+    "unit": "ns_per_op",
+    "smoke": bool,            # low-rep CI mode (noisier numbers)
+    "provenance": str,        # how the file was produced
+    "results": {"<bench name>": <ns/op float>, ...}
+  }
+"""
+
+import json
+import sys
+
+
+def load(path):
+    with open(path) as f:
+        doc = json.load(f)
+    schema = doc.get("schema")
+    if schema != "bench_hotpath/v1":
+        raise SystemExit(f"{path}: unexpected schema {schema!r}")
+    results = doc.get("results")
+    if not isinstance(results, dict):
+        raise SystemExit(f"{path}: missing results object")
+    return doc, {k: float(v) for k, v in results.items()}
+
+
+def main(argv):
+    if len(argv) != 3:
+        raise SystemExit(__doc__)
+    base_doc, base = load(argv[1])
+    fresh_doc, fresh = load(argv[2])
+    print(f"baseline: {argv[1]} (smoke={base_doc.get('smoke')}, {len(base)} benches)")
+    print(f"fresh:    {argv[2]} (smoke={fresh_doc.get('smoke')}, {len(fresh)} benches)")
+    if not base:
+        print()
+        print("baseline has no entries — seed it by copying a full-mode")
+        print("BENCH_hotpath.json over BENCH_baseline.json and committing it.")
+
+    common = [k for k in fresh if k in base]
+    if common:
+        width = max(len(k) for k in common)
+        print()
+        print(f"{'bench':<{width}}  {'baseline':>12}  {'fresh':>12}  {'delta':>8}")
+        for k in common:
+            b, f = base[k], fresh[k]
+            delta = (f - b) / b * 100.0 if b > 0 else float("nan")
+            marker = ""
+            if delta > 25.0:
+                marker = "  <-- slower"
+            elif delta < -25.0:
+                marker = "  <-- faster"
+            print(f"{k:<{width}}  {b:>12.0f}  {f:>12.0f}  {delta:>+7.1f}%{marker}")
+
+    added = [k for k in fresh if k not in base]
+    removed = [k for k in base if k not in fresh]
+    if added:
+        print()
+        print("new benches (not in baseline):")
+        for k in added:
+            print(f"  + {k}: {fresh[k]:.0f} ns/op")
+    if removed:
+        print()
+        print("benches missing from the fresh run:")
+        for k in removed:
+            print(f"  - {k}")
+    print()
+    print("(report only: shootout regressions fail inside the bench binary itself)")
+
+
+if __name__ == "__main__":
+    main(sys.argv)
