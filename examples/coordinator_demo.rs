@@ -1,6 +1,7 @@
-//! The distributed system demo: CQ-GGADMM as a real multi-threaded
-//! deployment — one OS thread per worker, explicit message passing,
-//! bit-packed quantized payloads on the (simulated) air.
+//! The distributed system demo: CQ-GGADMM as a real system engine — the
+//! workers sharded over a fixed-size executor pool (not one OS thread
+//! each; see `coordinator_scale` for N = 1024), bit-packed quantized
+//! payloads on the (simulated) air.
 //!
 //! Run with: `cargo run --release --example coordinator_demo`
 
@@ -16,7 +17,7 @@ fn main() {
     let topo = Topology::random_bipartite(workers, 0.3, seed);
     let problem = Problem::new(&ds, &topo, 10.0, 0.0, seed);
     println!(
-        "spawning {workers} worker threads over {} links; f* = {:.6e}",
+        "sharding {workers} workers over {} links; f* = {:.6e}",
         topo.edges().len(),
         problem.f_star
     );

@@ -1,0 +1,69 @@
+//! Large-N scale smoke for the sharded coordinator: N = 1024 simulated
+//! workers on a small fixed-size executor pool (threads ≪ N) — the
+//! workload the seed thread-per-worker engine could not schedule without
+//! spawning a thousand OS threads.  CI runs this on every PR (see
+//! `.github/workflows/ci.yml`, "coordinator scale smoke").
+//!
+//! Run with: `cargo run --release --example coordinator_scale`
+//! Env: `SCALE_WORKERS` (default 1024), `SCALE_THREADS` (default 4),
+//! `SCALE_ITERS` (default 8).
+
+use cq_ggadmm::algs::{AlgSpec, Problem};
+use cq_ggadmm::coordinator::{Coordinator, CoordinatorOptions};
+use cq_ggadmm::data;
+use cq_ggadmm::graph::Topology;
+
+fn env_usize(key: &str, default: usize) -> usize {
+    std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn main() {
+    let seed = 9;
+    let workers = env_usize("SCALE_WORKERS", 1024);
+    let threads = env_usize("SCALE_THREADS", 4);
+    let iters = env_usize("SCALE_ITERS", 8) as u64;
+    let d = 8;
+
+    let ds = data::synthetic::linear_dataset(workers * 4, d, seed);
+    // sparse graph: ~1% connectivity keeps the edge count linear-ish in N
+    let topo = Topology::random_bipartite(workers, 0.01, seed);
+    let problem = Problem::new(&ds, &topo, 10.0, 0.0, seed);
+    println!(
+        "sharding {workers} workers ({} links) over a {threads}-thread executor",
+        topo.edges().len()
+    );
+
+    let spec = AlgSpec::cq_ggadmm(0.05, 0.9, 0.995, 2);
+    let coord = Coordinator::spawn(
+        problem,
+        topo,
+        spec,
+        CoordinatorOptions { seed, threads, record_every: 1, ..CoordinatorOptions::default() },
+    );
+    assert!(
+        coord.threads() <= cq_ggadmm::parallel::resolve_threads(threads),
+        "executor must stay bounded: {} threads for {workers} workers",
+        coord.threads()
+    );
+    let trace = coord.run(iters);
+
+    let first = trace.points.first().expect("trace must not be empty");
+    let last = trace.points.last().expect("trace must not be empty");
+    println!(
+        "iter {:>3}: gap={:.3e} rounds={} bits={}",
+        first.iteration, first.loss_gap, first.cum_rounds, first.cum_bits
+    );
+    println!(
+        "iter {:>3}: gap={:.3e} rounds={} bits={} energy={:.3e} J",
+        last.iteration, last.loss_gap, last.cum_rounds, last.cum_bits, last.cum_energy_j
+    );
+    assert!(last.loss_gap.is_finite(), "diverged");
+    assert!(
+        last.loss_gap < first.loss_gap,
+        "no progress at scale: {:.3e} -> {:.3e}",
+        first.loss_gap,
+        last.loss_gap
+    );
+    assert!(last.cum_rounds > 0, "nothing was transmitted");
+    println!("coordinator scale smoke OK ({workers} workers, {} threads)", threads.max(1));
+}

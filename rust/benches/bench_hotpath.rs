@@ -16,6 +16,9 @@
 //! * **incremental engine**: the censoring-aware run engine vs the
 //!   from-scratch recompute path (`RunOptions::incremental = false`) at
 //!   paper scale (N=32, d=50) under heavy censoring;
+//! * **coordinator**: the sharded-executor coordinator (M workers on a
+//!   fixed-size pool) vs a faithful copy of the seed thread-per-worker
+//!   engine at N in {64, 256} — the sharded path must win at N = 256;
 //! * **blocked linalg**: the cache-blocked `gram` / Cholesky
 //!   `factor_into` / `solve_into` kernels vs the retained scalar
 //!   references at d in {50, 200, 500};
@@ -676,6 +679,326 @@ fn bench_sweep_shootout(h: &mut Harness) {
     }
 }
 
+// ---------------------------------------------------------------------
+// Seed-faithful copy of the pre-refactor thread-per-worker coordinator
+// (the shootout reference): one OS thread per simulated worker, mpsc
+// channels, BTreeMap neighbor state, per-round candidate/payload
+// allocations, from-scratch neighbor sums every phase, and f32
+// full-precision payloads — everything the sharded executor replaced.
+// ---------------------------------------------------------------------
+
+mod seed_coordinator {
+    use cq_ggadmm::algs::{AlgSpec, Problem};
+    use cq_ggadmm::censor::{gate, CensorConfig, Gate};
+    use cq_ggadmm::comm::{CommLog, EnergyModel, Transmission};
+    use cq_ggadmm::graph::Topology;
+    use cq_ggadmm::quant::{codec, Quantizer};
+    use cq_ggadmm::solver::{LinearSolver, SubproblemSolver};
+    use cq_ggadmm::util::rng::Pcg64;
+    use std::collections::BTreeMap;
+    use std::sync::mpsc::{channel, Receiver, Sender};
+
+    #[derive(Clone)]
+    enum Payload {
+        Full(Vec<u8>),
+        Quantized(Vec<u8>),
+    }
+
+    impl Payload {
+        fn bits(&self, d: usize) -> u64 {
+            match self {
+                Payload::Full(_) => 32 * d as u64,
+                Payload::Quantized(bytes) => codec::decode(bytes, d)
+                    .map(|m| m.payload_bits())
+                    .unwrap_or((bytes.len() * 8) as u64),
+            }
+        }
+    }
+
+    enum Command {
+        Phase { k: u64 },
+        Deliver { from: usize, payload: Payload },
+        DualUpdate,
+        Stop,
+    }
+
+    enum Event {
+        Broadcast { from: usize, payload: Payload },
+        PhaseDone,
+        DualDone,
+    }
+
+    struct WorkerSetup {
+        id: usize,
+        d: usize,
+        rho: f64,
+        neighbors: Vec<usize>,
+        solver: Box<dyn SubproblemSolver>,
+        censor: Option<CensorConfig>,
+        quantizer: Option<Quantizer>,
+    }
+
+    fn worker_main(setup: WorkerSetup, rx: Receiver<Command>, tx: Sender<Event>) {
+        let WorkerSetup { id, d, rho, neighbors, mut solver, censor, mut quantizer } = setup;
+        let mut theta = vec![0.0; d];
+        let mut alpha = vec![0.0; d];
+        let mut hat_self = vec![0.0; d];
+        let mut hat_nbrs: BTreeMap<usize, Vec<f64>> =
+            neighbors.iter().map(|&m| (m, vec![0.0; d])).collect();
+        let mut transmitted_once = false;
+        let mut nbr_sum = vec![0.0; d];
+        while let Ok(cmd) = rx.recv() {
+            match cmd {
+                Command::Phase { k } => {
+                    nbr_sum.iter_mut().for_each(|v| *v = 0.0);
+                    for v in hat_nbrs.values() {
+                        for j in 0..d {
+                            nbr_sum[j] += v[j];
+                        }
+                    }
+                    solver.update_into(&alpha, &nbr_sum, &mut theta);
+                    let (candidate_hat, payload) = match &mut quantizer {
+                        Some(q) => {
+                            let (msg, recon) = q.quantize(&theta, &hat_self);
+                            (recon, Payload::Quantized(codec::encode(&msg)))
+                        }
+                        None => {
+                            let mut bytes = Vec::with_capacity(theta.len() * 4);
+                            for &v in &theta {
+                                bytes.extend_from_slice(&(v as f32).to_le_bytes());
+                            }
+                            (theta.clone(), Payload::Full(bytes))
+                        }
+                    };
+                    let decision = match (&censor, transmitted_once) {
+                        (_, false) => Gate::Transmit,
+                        (None, _) => Gate::Transmit,
+                        (Some(c), true) => gate(c, k, &hat_self, &candidate_hat),
+                    };
+                    if decision == Gate::Transmit {
+                        hat_self = candidate_hat;
+                        transmitted_once = true;
+                        let _ = tx.send(Event::Broadcast { from: id, payload });
+                    }
+                    let _ = tx.send(Event::PhaseDone);
+                }
+                Command::Deliver { from, payload } => {
+                    let stored = hat_nbrs.get_mut(&from).expect("non-neighbor");
+                    match payload {
+                        Payload::Full(bytes) => {
+                            *stored = bytes
+                                .chunks_exact(4)
+                                .map(|c| {
+                                    f32::from_le_bytes([c[0], c[1], c[2], c[3]]) as f64
+                                })
+                                .collect();
+                        }
+                        Payload::Quantized(bytes) => {
+                            let msg = codec::decode(&bytes, d).expect("bad payload");
+                            msg.reconstruct_into(stored);
+                        }
+                    }
+                }
+                Command::DualUpdate => {
+                    for v in hat_nbrs.values() {
+                        for j in 0..d {
+                            alpha[j] += rho * (hat_self[j] - v[j]);
+                        }
+                    }
+                    let _ = tx.send(Event::DualDone);
+                }
+                Command::Stop => break,
+            }
+        }
+    }
+
+    /// The seed leader: spawns one OS thread per worker and plays the
+    /// medium over mpsc channels, exactly like the replaced engine.
+    pub struct SeedCoordinator {
+        topo: Topology,
+        d: usize,
+        cmd_tx: Vec<Sender<Command>>,
+        event_rx: Receiver<Event>,
+        handles: Vec<std::thread::JoinHandle<()>>,
+        comm: CommLog,
+        energy: EnergyModel,
+        iter: u64,
+    }
+
+    impl SeedCoordinator {
+        pub fn spawn(problem: &Problem, topo: &Topology, spec: &AlgSpec) -> SeedCoordinator {
+            let n = topo.n();
+            let d = problem.d;
+            let mut rng = Pcg64::new(7 ^ 0xA16_0001);
+            let (event_tx, event_rx) = channel::<Event>();
+            let mut cmd_tx = Vec::with_capacity(n);
+            let mut handles = Vec::with_capacity(n);
+            for i in 0..n {
+                let setup = WorkerSetup {
+                    id: i,
+                    d,
+                    rho: problem.rho,
+                    neighbors: topo.neighbors(i).to_vec(),
+                    solver: Box::new(LinearSolver::from_shard(
+                        std::sync::Arc::clone(&problem.shards[i]),
+                        problem.rho,
+                        topo.degree(i),
+                    )),
+                    censor: spec.censor,
+                    quantizer: spec
+                        .quant
+                        .as_ref()
+                        .map(|q| Quantizer::new(*q, rng.fork(i as u64))),
+                };
+                let (tx, rx) = channel::<Command>();
+                let etx = event_tx.clone();
+                handles.push(
+                    std::thread::Builder::new()
+                        .name(format!("seed-worker-{i}"))
+                        .spawn(move || worker_main(setup, rx, etx))
+                        .expect("spawn seed worker"),
+                );
+                cmd_tx.push(tx);
+            }
+            let energy = EnergyModel::new(
+                cq_ggadmm::comm::EnergyParams::default(),
+                n,
+                spec.concurrent_fraction(),
+            );
+            SeedCoordinator {
+                topo: topo.clone(),
+                d,
+                cmd_tx,
+                event_rx,
+                handles,
+                comm: CommLog::default(),
+                energy,
+                iter: 0,
+            }
+        }
+
+        fn run_phase(&mut self, group: &[usize], k: u64) {
+            for &i in group {
+                self.cmd_tx[i].send(Command::Phase { k }).expect("send phase");
+            }
+            let mut done = 0usize;
+            let mut broadcasts: Vec<(usize, Payload)> = Vec::new();
+            while done < group.len() {
+                match self.event_rx.recv().expect("event channel closed") {
+                    Event::Broadcast { from, payload } => broadcasts.push((from, payload)),
+                    Event::PhaseDone => done += 1,
+                    Event::DualDone => panic!("unexpected event"),
+                }
+            }
+            for (from, payload) in broadcasts {
+                let bits = payload.bits(self.d);
+                let dist = self.topo.max_neighbor_distance(from);
+                self.comm.record(Transmission {
+                    worker: from,
+                    iteration: self.iter,
+                    payload_bits: bits,
+                    distance_m: dist,
+                    energy_j: self.energy.energy_j(bits, dist),
+                });
+                for &m in self.topo.neighbors(from) {
+                    self.cmd_tx[m]
+                        .send(Command::Deliver { from, payload: payload.clone() })
+                        .expect("deliver");
+                }
+            }
+        }
+
+        pub fn step(&mut self) {
+            let k = self.iter + 1;
+            let heads = self.topo.heads();
+            let tails = self.topo.tails();
+            self.run_phase(&heads, k);
+            self.run_phase(&tails, k);
+            for tx in &self.cmd_tx {
+                tx.send(Command::DualUpdate).expect("dual");
+            }
+            let mut done = 0;
+            while done < self.topo.n() {
+                if let Event::DualDone = self.event_rx.recv().expect("event") {
+                    done += 1;
+                }
+            }
+            self.iter += 1;
+        }
+
+        pub fn rounds(&self) -> u64 {
+            self.comm.rounds()
+        }
+    }
+
+    impl Drop for SeedCoordinator {
+        fn drop(&mut self) {
+            for tx in &self.cmd_tx {
+                let _ = tx.send(Command::Stop);
+            }
+            for h in self.handles.drain(..) {
+                let _ = h.join();
+            }
+        }
+    }
+}
+
+/// Coordinator throughput shootout: the sharded executor engine vs the
+/// seed thread-per-worker engine, CQ-GGADMM at N in {64, 256}.  The
+/// sharded path must win at N = 256 — that is the scale where waking
+/// hundreds of OS threads per phase dominates the actual math.
+fn bench_coordinator_shootout(h: &mut Harness) {
+    use cq_ggadmm::coordinator::{Coordinator, CoordinatorOptions};
+    println!("-- coordinator shootout: sharded executor vs thread-per-worker --");
+    let slack = if h.smoke { 1.25 } else { 1.0 };
+    for &n in &[64usize, 256] {
+        let d = 20;
+        let ds = synthetic::linear_dataset(n * 8, d, 51);
+        let topo = Topology::random_bipartite(n, 0.1, 51);
+        let problem = Problem::new(&ds, &topo, 10.0, 0.0, 51);
+        let spec = AlgSpec::cq_ggadmm(0.05, 0.9, 0.995, 2);
+
+        let mut sharded = Coordinator::spawn(
+            problem.clone(),
+            topo.clone(),
+            spec.clone(),
+            CoordinatorOptions { record_every: u64::MAX, ..CoordinatorOptions::default() },
+        );
+        let mut seed = seed_coordinator::SeedCoordinator::spawn(&problem, &topo, &spec);
+
+        // warm both fleets past the always-transmit first iteration
+        for _ in 0..2 {
+            sharded.step();
+            seed.step();
+        }
+        let (blocks, reps) = if h.smoke { (3, 2) } else { (3, 10) };
+        let (sharded_ns, seed_ns) =
+            min_block_pair_ns(blocks, reps, || sharded.step(), || seed.step());
+        h.record(
+            &format!("coordinator iter N={n} d={d} (sharded executor)"),
+            sharded_ns,
+        );
+        h.record(
+            &format!("coordinator iter N={n} d={d} (seed thread-per-worker)"),
+            seed_ns,
+        );
+        println!(
+            "N={n}: sharded executor ({} threads) speedup {:.2}x, rounds sharded={} seed={}",
+            sharded.threads(),
+            seed_ns / sharded_ns,
+            sharded.comm().rounds(),
+            seed.rounds()
+        );
+        if n == 256 {
+            assert!(
+                sharded_ns < seed_ns * slack,
+                "sharded coordinator must beat thread-per-worker at N=256 \
+                 ({sharded_ns:.0} vs {seed_ns:.0} ns, slack {slack})"
+            );
+        }
+    }
+}
+
 #[cfg(feature = "pjrt")]
 fn bench_pjrt(
     h: &mut Harness,
@@ -800,6 +1123,8 @@ fn main() {
     });
 
     bench_incremental_shootout(&mut h);
+
+    bench_coordinator_shootout(&mut h);
 
     bench_blocked_linalg_shootout(&mut h);
 

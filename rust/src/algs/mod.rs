@@ -15,9 +15,10 @@
 //! plus [`dgd`], the decentralized-gradient-descent extra baseline.
 //!
 //! The engine here is the *sequential simulator* used by the experiment
-//! harness (deterministic, allocation-light); [`crate::coordinator`] runs
-//! the same per-worker state machine across threads with explicit message
-//! passing for the end-to-end system demonstration.
+//! harness (deterministic, allocation-light); both it and the sharded
+//! [`crate::coordinator`] are thin drivers over the single per-worker
+//! state machine in [`crate::protocol`], and the two are locked together
+//! bit-for-bit by `tests/coordinator_equivalence.rs`.
 
 pub mod dgd;
 pub mod edge_dual;

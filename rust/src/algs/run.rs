@@ -1,36 +1,35 @@
-//! The run engine: per-worker state machine + sequential simulator.
+//! The sequential run engine: a thin in-process driver over the shared
+//! [`crate::protocol::WorkerCore`] state machine.
 //!
-//! One [`Run`] owns the worker states, the solver backends, the censoring
-//! gates and quantizers, and drives iterations of the configured
-//! [`AlgSpec`] while recording the paper's metrics.  The same state
-//! transitions are reused by the threaded [`crate::coordinator`].
+//! One [`Run`] owns the worker cores (each carrying its solver, censoring
+//! gate, quantizer and incremental caches — see [`crate::protocol`]), the
+//! shared [`Medium`] transmit path (energy/bits accounting + pluggable
+//! [`crate::comm::LinkModel`]), and drives iterations of the configured
+//! [`AlgSpec`] while recording the paper's metrics.  The exact same core
+//! runs inside the sharded [`crate::coordinator`]; the two engines are
+//! locked together bit-for-bit by `tests/coordinator_equivalence.rs`.
 //!
 //! Perf: the per-iteration path is allocation-free after construction
-//! (persistent scratch buffers, in-place [`SubproblemSolver::update_into`]
-//! solves, `Arc`-shared shards), and the engine is **censoring-aware**:
-//! neighbor sums and dual increments are maintained incrementally, so the
-//! O(deg * d) rebuilds only run for workers whose closed neighborhood
-//! committed a transmission — censored and dropped rounds touch nothing,
-//! making the bookkeeping cost proportional to committed transmissions
-//! rather than to N.  Staleness tracking works at link granularity and a
-//! stale buffer is rebuilt by the exact from-scratch loop, so the engine
-//! is bit-identical to the always-recompute path
-//! (`RunOptions::incremental = false`, locked by `tests/incremental.rs`);
-//! a delta-push scheme (`sum += new - old`) would be cheaper still but is
-//! not IEEE-stable against recomputation, which the differential
-//! guarantees here rely on.  The opt-in `threads > 1` fan-out dispatches
-//! through a persistent barrier-synchronized [`crate::parallel::WorkerPool`]
-//! built once in [`Run::new`] — no per-phase thread spawns or job lists.
+//! (persistent scratch inside each core, in-place
+//! [`crate::solver::SubproblemSolver::update_into`] solves, `Arc`-shared
+//! shards), and the core is **censoring-aware**: neighbor sums and dual
+//! increments are maintained incrementally, so the O(deg * d) rebuilds
+//! only run for workers whose closed neighborhood committed a
+//! transmission — censored and dropped rounds touch nothing, making the
+//! bookkeeping cost proportional to committed transmissions rather than
+//! to N.  A stale buffer is rebuilt by the exact from-scratch loop, so
+//! the engine is bit-identical to the always-recompute path
+//! (`RunOptions::incremental = false`, locked by `tests/incremental.rs`).
+//! The opt-in `threads > 1` fan-out dispatches through a persistent
+//! barrier-synchronized [`crate::parallel::WorkerPool`] built once in
+//! [`Run::new`] — no per-phase thread spawns or job lists.
 
 use super::{AlgSpec, Problem, Schedule};
-use crate::censor::{gate, Gate};
-use crate::comm::{full_precision_bits, CommLog, EnergyModel, EnergyParams, Transmission};
+use crate::comm::{CommLog, EnergyModel, EnergyParams, LinkKind, Medium};
 use crate::graph::Topology;
 use crate::metrics::{Trace, TracePoint};
-use crate::quant::Quantizer;
-use crate::solver::{Backend, LinearSolver, LogisticSolver, SubproblemSolver};
-use crate::util::rng::Pcg64;
-use std::sync::Arc;
+use crate::protocol::{build_cores, ProtocolConfig, WorkerCore};
+use crate::solver::Backend;
 
 /// Execution options for a run.
 #[derive(Clone, Debug)]
@@ -47,7 +46,8 @@ pub struct RunOptions {
     /// Broadcast-erasure probability (failure injection): a transmission
     /// is lost with this probability — energy and bits are still spent,
     /// but receivers keep the stale value (erasure with perfect feedback,
-    /// so sender state stays consistent).
+    /// so sender state stays consistent).  Shorthand for
+    /// `link = Some(LinkKind::Erasure { p })`.
     pub drop_prob: f64,
     pub energy: EnergyParams,
     /// Censoring-aware incremental bookkeeping (default): neighbor sums
@@ -57,6 +57,9 @@ pub struct RunOptions {
     /// phase — bit-identical by construction (differential tests, and the
     /// scratch baseline of `bench_hotpath`).
     pub incremental: bool,
+    /// Explicit link model; when `None`, `drop_prob` selects between
+    /// [`LinkKind::Ideal`] and [`LinkKind::Erasure`].
+    pub link: Option<LinkKind>,
 }
 
 impl Default for RunOptions {
@@ -70,6 +73,7 @@ impl Default for RunOptions {
             drop_prob: 0.0,
             energy: EnergyParams::default(),
             incremental: true,
+            link: None,
         }
     }
 }
@@ -82,49 +86,23 @@ pub struct WorkerSnapshot {
     pub alpha: Vec<f64>,
 }
 
-struct WorkerState {
-    theta: Vec<f64>,
-    /// Last value this worker's neighbors hold (theta-tilde / theta-hat).
-    hat: Vec<f64>,
-    alpha: Vec<f64>,
-    quantizer: Option<Quantizer>,
-    /// Whether this worker has ever transmitted (first transmission is
-    /// never censored: neighbors start from zero, as in Algorithm 2 line 2).
-    transmitted_once: bool,
-}
-
 /// A configured, running instance of one algorithm on one problem.
 pub struct Run {
     problem: Problem,
     topo: Topology,
-    spec: AlgSpec,
     opts: RunOptions,
-    solvers: Vec<Box<dyn SubproblemSolver>>,
-    workers: Vec<WorkerState>,
-    energy: EnergyModel,
-    comm: CommLog,
+    cores: Vec<WorkerCore>,
+    medium: Medium,
     trace: Trace,
     iter: u64,
-    rng: Pcg64,
-    /// persistent per-worker neighbor-sum buffers, maintained
-    /// incrementally (rebuilt only while `nbr_stale`)
-    nbr_sums: Vec<Vec<f64>>,
-    /// persistent quantize/censor candidate buffer (transmit is sequential)
-    cand: Vec<f64>,
-    /// persistent per-worker dual-update increments, maintained
-    /// incrementally (rebuilt only when the closed neighborhood changed)
-    dual_deltas: Vec<Vec<f64>>,
     /// cached phase groups: `[heads, tails]` for alternating schedules,
     /// `[all]` for Jacobian — constant over a run, so `step` never
     /// rebuilds them (taken/restored around the phase loop to satisfy the
     /// borrow checker without cloning)
     phase_groups: Vec<Vec<usize>>,
-    /// `nbr_sums[i]` no longer reflects the hats it sums (a neighbor —
-    /// or, under the Jacobian anchor, the worker itself — committed)
-    nbr_stale: Vec<bool>,
-    /// worker committed a hat update this iteration (cleared in `step`;
-    /// drives the dual-increment rebuild decision)
-    hat_changed: Vec<bool>,
+    /// persistent relay buffer: a committed hat is copied here once and
+    /// delivered to every neighbor's core (the in-process "wire")
+    relay: Vec<f64>,
     /// persistent worker pool for the `threads > 1` fan-out, built once
     /// (taken/restored around dispatch to satisfy the borrow checker)
     pool: Option<crate::parallel::WorkerPool>,
@@ -138,27 +116,24 @@ impl Run {
             !(opts.backend == Backend::Pjrt && opts.threads > 1),
             "the PJRT backend shares one client across workers; use threads = 1"
         );
-        let d = problem.d;
-        let mut rng = Pcg64::new(opts.seed ^ 0xA16_0001);
         // the persistent pool is built first so the one-time solver
         // construction (Gram matrices + Cholesky factors) fans out over
         // it too — one spawn serves both setup and every phase dispatch
         let mut pool =
             (opts.threads > 1).then(|| crate::parallel::WorkerPool::new(opts.threads));
-        let solvers = build_solvers(&problem, &topo, &opts, spec.schedule, pool.as_mut());
-        let workers = (0..topo.n())
-            .map(|i| WorkerState {
-                theta: vec![0.0; d],
-                hat: vec![0.0; d],
-                alpha: vec![0.0; d],
-                quantizer: spec
-                    .quant
-                    .as_ref()
-                    .map(|q| Quantizer::new(*q, rng.fork(i as u64))),
-                transmitted_once: false,
-            })
-            .collect();
+        let cfg = ProtocolConfig {
+            backend: opts.backend,
+            artifacts_dir: opts.artifacts_dir.clone(),
+            incremental: opts.incremental,
+            seed: opts.seed,
+        };
+        let (cores, rng) = build_cores(&problem, &topo, &spec, &cfg, pool.as_mut());
         let energy = EnergyModel::new(opts.energy, topo.n(), spec.concurrent_fraction());
+        let medium = Medium::new(
+            energy,
+            opts.energy.slot_s,
+            LinkKind::resolve(opts.link, opts.drop_prob).build(rng),
+        );
         let trace = Trace::new(&spec.name, &problem.dataset_name);
         let n = topo.n();
         let phase_groups = match spec.schedule {
@@ -166,203 +141,75 @@ impl Run {
             Schedule::Jacobian => vec![(0..n).collect()],
         };
         Run {
-            nbr_sums: vec![vec![0.0; d]; n],
-            cand: vec![0.0; d],
-            dual_deltas: vec![vec![0.0; d]; n],
+            relay: vec![0.0; problem.d],
             phase_groups,
-            nbr_stale: vec![true; n],
-            hat_changed: vec![false; n],
             pool,
+            cores,
+            medium,
             problem,
             topo,
-            spec,
             opts,
-            solvers,
-            workers,
-            energy,
-            comm: CommLog::default(),
             trace,
             iter: 0,
-            rng,
-        }
-    }
-
-    /// Refresh the persistent neighbor-sum buffers for `ids` from the
-    /// current hat state (paper eqs. (21)/(22)).
-    ///
-    /// * Alternating (GGADMM): `sum_{m in N(i)} theta_hat_m`.
-    /// * Jacobian (C-ADMM / DCADMM of Shi et al. 2014, Liu et al. 2019):
-    ///   the update anchors on the worker's *own* last broadcast as well,
-    ///   `d_i * theta_hat_i + sum_m theta_hat_m`, with the doubled
-    ///   quadratic penalty `rho d_i ||theta||^2` (see `build_solvers`) —
-    ///   the naive Jacobi variant without the anchor diverges.
-    ///
-    /// Incremental engine: a buffer is rebuilt only while `nbr_stale[i]`
-    /// (some input hat committed since it was last built).  A clean
-    /// buffer's inputs are unchanged, so the cached value is bit-identical
-    /// to what this exact loop would produce — censored rounds skip the
-    /// O(deg * d) walk entirely.
-    fn fill_neighbor_sums(&mut self, ids: &[usize]) {
-        let d = self.problem.d;
-        let jacobian = self.spec.schedule == Schedule::Jacobian;
-        for &i in ids {
-            if self.opts.incremental && !self.nbr_stale[i] {
-                continue;
-            }
-            let sum = &mut self.nbr_sums[i];
-            sum.iter_mut().for_each(|v| *v = 0.0);
-            for &m in self.topo.neighbors(i) {
-                let hat = &self.workers[m].hat;
-                for j in 0..d {
-                    sum[j] += hat[j];
-                }
-            }
-            if jacobian {
-                let deg = self.topo.degree(i) as f64;
-                let hat = &self.workers[i].hat;
-                for j in 0..d {
-                    sum[j] += deg * hat[j];
-                }
-            }
-            self.nbr_stale[i] = false;
         }
     }
 
     /// Primal update for one group of workers (in parallel across the
-    /// group, as the paper's schedule allows).
+    /// group, as the paper's schedule allows): each core refreshes its
+    /// cached neighbor sum if stale and solves in place.
     ///
-    /// Perf: both paths are allocation-free — neighbor sums land in
-    /// persistent buffers, and `update_into` solves in place over each
-    /// worker's `theta` (which doubles as the warm start).  The threaded
-    /// path dispatches through the persistent pool built in `Run::new`
-    /// (no per-phase thread spawns or job lists); fan-out only pays for
-    /// expensive subproblems (logistic Newton), so tiny closed-form
-    /// updates should run with `threads = 1`.
+    /// Perf: allocation-free; the threaded path dispatches through the
+    /// persistent pool built in `Run::new` (no per-phase thread spawns or
+    /// job lists); fan-out only pays for expensive subproblems (logistic
+    /// Newton), so tiny closed-form updates should run with `threads = 1`.
     fn update_group(&mut self, ids: &[usize]) {
         debug_assert!(ids.windows(2).all(|w| w[0] < w[1]), "ids must be increasing");
-        self.fill_neighbor_sums(ids);
         if self.pool.is_none() || ids.len() <= 1 {
             for &i in ids {
-                let w = &mut self.workers[i];
-                self.solvers[i].update_into(&w.alpha, &self.nbr_sums[i], &mut w.theta);
+                self.cores[i].primal_update();
             }
             return;
         }
         // pool path: the same in-place solves, claimed dynamically across
-        // the pool's threads.  Access to (&mut solver, &mut worker) pairs
-        // goes through raw base pointers because the borrow checker cannot
-        // see index-disjointness across threads; `ids` are strictly
-        // increasing (checked above), so no two jobs alias, and the pool
-        // barrier ends every access before `for_each` returns.
+        // the pool's threads.  Access to the per-worker cores goes through
+        // a raw base pointer because the borrow checker cannot see
+        // index-disjointness across threads; `ids` are strictly increasing
+        // (checked above), so no two jobs alias, and the pool barrier ends
+        // every access before `for_each` returns.
         let mut pool = self.pool.take().expect("pool presence checked above");
         {
-            let solvers = crate::parallel::SyncPtr(self.solvers.as_mut_ptr());
-            let workers = crate::parallel::SyncPtr(self.workers.as_mut_ptr());
-            let sums = &self.nbr_sums;
+            let cores = crate::parallel::SyncPtr(self.cores.as_mut_ptr());
             pool.for_each(ids.len(), |j| {
-                let i = ids[j];
                 // SAFETY: distinct ids => disjoint elements; see above
-                let solver = unsafe { &mut *solvers.0.add(i) };
-                let w = unsafe { &mut *workers.0.add(i) };
-                solver.update_into(&w.alpha, &sums[i], &mut w.theta);
+                let core = unsafe { &mut *cores.0.add(ids[j]) };
+                core.primal_update();
             });
         }
         self.pool = Some(pool);
     }
 
-    /// Transmission pipeline (quantize -> censor -> broadcast) for one
-    /// group at censoring iteration index `k_plus_1`.
-    ///
-    /// Perf: the candidate state lands in the persistent `cand` buffer
-    /// (quantizers reconstruct into it; full-precision senders memcpy
-    /// their theta) and a transmit commits with `copy_from_slice` — no
-    /// per-round vector allocation.
+    /// Transmission pipeline for one group at censoring iteration index
+    /// `k_plus_1`: each core builds and gates its candidate, committed
+    /// broadcasts go through the shared [`Medium`] (energy + link fate),
+    /// and deliveries land in the neighbors' cores via the persistent
+    /// relay buffer — no per-round allocation anywhere.
     fn transmit_group(&mut self, ids: &[usize], k_plus_1: u64) {
-        let d = self.problem.d;
-        let jacobian = self.spec.schedule == Schedule::Jacobian;
         for &i in ids {
-            let w = &mut self.workers[i];
-            let payload_bits = match &mut w.quantizer {
-                Some(q) => {
-                    // quantize the difference against the last state the
-                    // neighbors hold (hat) so sender/receiver stay in sync
-                    let (_radius, bits) = q.quantize_into(&w.theta, &w.hat, &mut self.cand);
-                    crate::quant::payload_bits(d, bits)
-                }
-                None => {
-                    self.cand.copy_from_slice(&w.theta);
-                    full_precision_bits(d)
-                }
-            };
-            let decision = match (&self.spec.censor, w.transmitted_once) {
-                // first broadcast always goes out (state init)
-                (_, false) => Gate::Transmit,
-                (None, _) => Gate::Transmit,
-                (Some(c), true) => gate(c, k_plus_1, &w.hat, &self.cand),
-            };
-            if decision == Gate::Transmit {
-                // failure injection: erasure with perfect feedback — cost
-                // is paid, state update is rolled back
-                let dropped =
-                    self.opts.drop_prob > 0.0 && self.rng.bernoulli(self.opts.drop_prob);
-                let dist = self.topo.max_neighbor_distance(i);
-                self.comm.record(Transmission {
-                    worker: i,
-                    iteration: self.iter,
-                    payload_bits,
-                    distance_m: dist,
-                    energy_j: self.energy.energy_j(payload_bits, dist),
-                });
-                if !dropped {
-                    w.hat.copy_from_slice(&self.cand);
-                    w.transmitted_once = true;
-                    // incremental bookkeeping: this commit staled every
-                    // neighbor's cached sum (and, under the Jacobian
-                    // anchor, the worker's own) plus the dual increments
-                    // of the closed neighborhood this iteration.
-                    // Censored and dropped rounds reach neither branch,
-                    // so they leave all caches untouched.
-                    self.hat_changed[i] = true;
-                    for &m in self.topo.neighbors(i) {
-                        self.nbr_stale[m] = true;
-                    }
-                    if jacobian {
-                        self.nbr_stale[i] = true;
-                    }
-                }
-            }
-        }
-    }
-
-    /// Dual update (eq. (23)): every worker integrates
-    /// `rho * sum_m (hat_n - hat_m)` into its dual.
-    ///
-    /// Allocation-free, and incremental: an increment buffer is rebuilt
-    /// only when a hat in the worker's closed neighborhood committed this
-    /// iteration — otherwise its inputs are unchanged and the cached
-    /// value is bit-identical to what the rebuild would produce.  The
-    /// O(d) `alpha += rho * delta` integration itself runs every
-    /// iteration (duals accumulate even across censored rounds).
-    fn dual_update(&mut self) {
-        let rho = self.problem.rho;
-        let d = self.problem.d;
-        for i in 0..self.topo.n() {
-            if self.opts.incremental
-                && !self.hat_changed[i]
-                && !self.topo.neighbors(i).iter().any(|&m| self.hat_changed[m])
-            {
+            let Some(bits) = self.cores[i].prepare_broadcast(k_plus_1) else {
                 continue;
-            }
-            let acc = &mut self.dual_deltas[i];
-            acc.iter_mut().for_each(|v| *v = 0.0);
-            for &m in self.topo.neighbors(i) {
-                for j in 0..d {
-                    acc[j] += self.workers[i].hat[j] - self.workers[m].hat[j];
+            };
+            let dist = self.topo.max_neighbor_distance(i);
+            if self.medium.transmit(i, self.iter, bits, dist) {
+                self.cores[i].commit_pending();
+                self.relay.copy_from_slice(self.cores[i].hat_self());
+                for &m in self.topo.neighbors(i) {
+                    self.cores[m].deliver(i, &self.relay);
                 }
+            } else {
+                // erasure with perfect feedback: cost was paid by the
+                // medium, state update is rolled back
+                self.cores[i].abort_pending();
             }
-        }
-        for i in 0..self.topo.n() {
-            crate::util::axpy(&mut self.workers[i].alpha, rho, &self.dual_deltas[i]);
         }
     }
 
@@ -371,14 +218,16 @@ impl Run {
     /// then transmission, followed by the dual update.
     pub fn step(&mut self) {
         let k_plus_1 = self.iter + 1;
-        self.hat_changed.iter_mut().for_each(|v| *v = false);
         let groups = std::mem::take(&mut self.phase_groups);
         for group in &groups {
             self.update_group(group);
             self.transmit_group(group, k_plus_1);
+            self.medium.end_slot();
         }
         self.phase_groups = groups;
-        self.dual_update();
+        for core in &mut self.cores {
+            core.dual_update();
+        }
         self.iter += 1;
         if self.iter % self.opts.record_every == 0 {
             self.record();
@@ -386,33 +235,29 @@ impl Run {
     }
 
     fn record(&mut self) {
-        // the solvers hold the shard data: evaluate sum_n f_n(theta_n)
+        // the cores hold the shard data: evaluate sum_n f_n(theta_n)
         // without cloning the worker models
-        let obj: f64 = self
-            .solvers
-            .iter()
-            .zip(&self.workers)
-            .map(|(s, w)| s.loss(&w.theta))
-            .sum();
+        let obj: f64 = self.cores.iter().map(|c| c.loss()).sum();
         let gap = (obj - self.problem.f_star).abs();
         let mut consensus: f64 = 0.0;
         for &(h, t) in self.topo.edges() {
-            let diff: f64 = self.workers[h]
-                .theta
+            let diff: f64 = self.cores[h]
+                .theta()
                 .iter()
-                .zip(&self.workers[t].theta)
+                .zip(self.cores[t].theta())
                 .map(|(a, b)| (a - b) * (a - b))
                 .sum::<f64>()
                 .sqrt();
             consensus = consensus.max(diff);
         }
+        let log = self.medium.log();
         self.trace.push(TracePoint {
             iteration: self.iter,
             loss_gap: gap,
             consensus_gap: consensus,
-            cum_rounds: self.comm.rounds(),
-            cum_bits: self.comm.total_bits,
-            cum_energy_j: self.comm.total_energy_j,
+            cum_rounds: log.rounds(),
+            cum_bits: log.total_bits,
+            cum_energy_j: log.total_energy_j,
         });
     }
 
@@ -436,7 +281,13 @@ impl Run {
 
     /// Communication log so far.
     pub fn comm(&self) -> &CommLog {
-        &self.comm
+        self.medium.log()
+    }
+
+    /// Simulated on-air wall clock so far (one upload slot per phase,
+    /// stretched by the link model's latency when one is configured).
+    pub fn sim_time_s(&self) -> f64 {
+        self.medium.sim_time_s()
     }
 
     /// The underlying problem.
@@ -455,21 +306,21 @@ impl Run {
     /// recompute at that point would have produced (`tests/incremental.rs`
     /// locks this against `RunOptions { incremental: false }`).
     pub fn neighbor_sum(&self, i: usize) -> &[f64] {
-        &self.nbr_sums[i]
+        self.cores[i].neighbor_sum()
     }
 
     /// Persistent dual-increment buffer of worker `i` (tests/diagnostics);
     /// same bit-identity guarantee as [`Run::neighbor_sum`].
     pub fn dual_delta(&self, i: usize) -> &[f64] {
-        &self.dual_deltas[i]
+        self.cores[i].dual_delta()
     }
 
     /// Snapshot worker `i` (tests / invariant checks).
     pub fn snapshot(&self, i: usize) -> WorkerSnapshot {
         WorkerSnapshot {
-            theta: self.workers[i].theta.clone(),
-            hat: self.workers[i].hat.clone(),
-            alpha: self.workers[i].alpha.clone(),
+            theta: self.cores[i].theta().to_vec(),
+            hat: self.cores[i].hat_self().to_vec(),
+            alpha: self.cores[i].alpha().to_vec(),
         }
     }
 
@@ -479,60 +330,11 @@ impl Run {
     pub fn dual_sum_norm(&self) -> f64 {
         let d = self.problem.d;
         let mut sum = vec![0.0; d];
-        for w in &self.workers {
-            crate::util::axpy(&mut sum, 1.0, &w.alpha);
+        for c in &self.cores {
+            crate::util::axpy(&mut sum, 1.0, c.alpha());
         }
         crate::util::norm2(&sum)
     }
-}
-
-fn build_solvers(
-    problem: &Problem,
-    topo: &Topology,
-    opts: &RunOptions,
-    schedule: Schedule,
-    pool: Option<&mut crate::parallel::WorkerPool>,
-) -> Vec<Box<dyn SubproblemSolver>> {
-    use crate::config::Task;
-    let build_one = |i: usize| -> Box<dyn SubproblemSolver> {
-        let sh = &problem.shards[i];
-        // Jacobian updates carry the doubled penalty rho*d_i||theta||^2
-        // of DCADMM (see `fill_neighbor_sums`); the solver's quadratic
-        // coefficient is rho*degree/2, so feed it 2*d_i.
-        let degree = match schedule {
-            Schedule::Alternating => topo.degree(i),
-            Schedule::Jacobian => 2 * topo.degree(i),
-        };
-        match (opts.backend, problem.task) {
-            (Backend::Native, Task::Linear) => Box::new(LinearSolver::from_shard(
-                Arc::clone(sh),
-                problem.rho,
-                degree,
-            )),
-            (Backend::Native, Task::Logistic) => Box::new(LogisticSolver::from_shard(
-                Arc::clone(sh),
-                problem.mu0,
-                problem.rho,
-                degree,
-            )),
-            (Backend::Pjrt, task) => crate::runtime::pjrt_solver(
-                opts.artifacts_dir
-                    .as_deref()
-                    .expect("PJRT backend needs artifacts_dir"),
-                task,
-                sh,
-                problem.rho,
-                problem.mu0,
-                degree,
-            )
-            .expect("failed to build PJRT solver"),
-        }
-    };
-    // setup-time fan-out over the run's persistent pool: the per-worker
-    // Gram + Cholesky construction is O(s d^2 + d^3) each and
-    // embarrassingly parallel (PJRT is pinned to threads = 1 by the
-    // assertion in `Run::new`, so it always takes the sequential arm)
-    crate::parallel::map_maybe_pool(pool, topo.n(), build_one)
 }
 
 #[cfg(test)]
@@ -769,6 +571,65 @@ mod tests {
         );
         let trace = run.run(300);
         assert!(trace.last_gap() < 1e-4, "gap={:.3e}", trace.last_gap());
+    }
+
+    #[test]
+    fn explicit_erasure_link_matches_drop_prob() {
+        // the LinkKind plumbing must reproduce the legacy drop_prob knob
+        // exactly (same RNG stream, same draw order)
+        let (p, t) = small_problem(true, 8, 16);
+        let mut a = Run::new(
+            p.clone(),
+            t.clone(),
+            AlgSpec::ggadmm(),
+            RunOptions { drop_prob: 0.25, ..RunOptions::default() },
+        );
+        let mut b = Run::new(
+            p,
+            t,
+            AlgSpec::ggadmm(),
+            RunOptions {
+                link: Some(LinkKind::Erasure { p: 0.25 }),
+                ..RunOptions::default()
+            },
+        );
+        for _ in 0..25 {
+            a.step();
+            b.step();
+        }
+        assert_eq!(a.comm().rounds(), b.comm().rounds());
+        for i in 0..8 {
+            assert_eq!(a.snapshot(i).theta, b.snapshot(i).theta);
+        }
+    }
+
+    #[test]
+    fn latency_link_stretches_sim_time() {
+        let (p, t) = small_problem(true, 6, 17);
+        let mut ideal = Run::new(
+            p.clone(),
+            t.clone(),
+            AlgSpec::ggadmm(),
+            RunOptions::default(),
+        );
+        let mut slow = Run::new(
+            p,
+            t,
+            AlgSpec::ggadmm(),
+            RunOptions {
+                link: Some(LinkKind::Latency { base_s: 0.05, per_bit_s: 0.0 }),
+                ..RunOptions::default()
+            },
+        );
+        ideal.run(10);
+        slow.run(10);
+        // 10 iterations x 2 phases x >= one slot each
+        assert!((ideal.sim_time_s() - 20.0 * EnergyParams::default().slot_s).abs() < 1e-12);
+        assert!(slow.sim_time_s() > ideal.sim_time_s());
+        // latency must not perturb the trajectory, only the clock
+        for i in 0..6 {
+            assert_eq!(ideal.snapshot(i).theta, slow.snapshot(i).theta);
+        }
     }
 
     #[test]

@@ -1,0 +1,274 @@
+//! Pluggable link models + the shared transmit path.
+//!
+//! Every committed broadcast of either engine — the sequential simulator
+//! ([`crate::algs::Run`]) and the sharded coordinator
+//! ([`crate::coordinator`]) — goes through [`Medium::transmit`]: the
+//! paper's §7 energy model is charged, the transmission is logged, and a
+//! [`LinkModel`] decides the broadcast's fate.  Centralizing the path
+//! keeps the accounting (and the erasure RNG stream) bit-identical across
+//! engines, which `tests/coordinator_equivalence.rs` locks.
+//!
+//! Shipped models:
+//! * [`IdealLink`] — every broadcast is delivered within its slot;
+//! * [`ErasureLink`] — a broadcast is lost with probability `p` (erasure
+//!   with perfect feedback: energy and bits are still spent, receivers
+//!   keep the stale value, sender state rolls back);
+//! * [`LatencyLink`] — deterministic per-link delay (propagation +
+//!   serialization): a synchronous phase ends when its slowest broadcast
+//!   lands, so stragglers stretch the simulated wall clock that
+//!   [`Medium::sim_time_s`] accumulates.
+
+use super::{CommLog, EnergyModel, Transmission};
+use crate::util::rng::Pcg64;
+
+/// Fate of one broadcast, as decided by a [`LinkModel`].
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Fate {
+    /// Delivered to every neighbor after `latency_s` seconds (0 = within
+    /// the upload slot).
+    Delivered { latency_s: f64 },
+    /// Lost on the air; the slot's airtime is still consumed.
+    Dropped,
+}
+
+/// A channel impairment model consulted once per committed broadcast.
+pub trait LinkModel: Send {
+    fn fate(&mut self, from: usize, iteration: u64, payload_bits: u64, distance_m: f64) -> Fate;
+}
+
+/// Perfect channel.
+pub struct IdealLink;
+
+impl LinkModel for IdealLink {
+    fn fate(&mut self, _: usize, _: u64, _: u64, _: f64) -> Fate {
+        Fate::Delivered { latency_s: 0.0 }
+    }
+}
+
+/// Broadcast erasure with probability `p` (one Bernoulli draw per
+/// committed broadcast, in commit order — the determinism contract both
+/// engines share).
+pub struct ErasureLink {
+    p: f64,
+    rng: Pcg64,
+}
+
+impl ErasureLink {
+    pub fn new(p: f64, rng: Pcg64) -> ErasureLink {
+        assert!((0.0..=1.0).contains(&p), "erasure probability out of range");
+        ErasureLink { p, rng }
+    }
+}
+
+impl LinkModel for ErasureLink {
+    fn fate(&mut self, _: usize, _: u64, _: u64, _: f64) -> Fate {
+        if self.rng.bernoulli(self.p) {
+            Fate::Dropped
+        } else {
+            Fate::Delivered { latency_s: 0.0 }
+        }
+    }
+}
+
+/// Deterministic per-link latency: fixed processing overhead plus
+/// serialization (`payload_bits * per_bit_s`) plus free-space propagation
+/// at c.  Never drops.
+pub struct LatencyLink {
+    pub base_s: f64,
+    pub per_bit_s: f64,
+}
+
+const SPEED_OF_LIGHT_M_S: f64 = 299_792_458.0;
+
+impl LinkModel for LatencyLink {
+    fn fate(&mut self, _: usize, _: u64, payload_bits: u64, distance_m: f64) -> Fate {
+        Fate::Delivered {
+            latency_s: self.base_s
+                + payload_bits as f64 * self.per_bit_s
+                + distance_m / SPEED_OF_LIGHT_M_S,
+        }
+    }
+}
+
+/// Serializable link-model selection (run/coordinator options).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum LinkKind {
+    Ideal,
+    Erasure { p: f64 },
+    Latency { base_s: f64, per_bit_s: f64 },
+}
+
+impl LinkKind {
+    /// Resolve an optional explicit kind against the legacy `drop_prob`
+    /// knob: an explicit kind wins; otherwise `drop_prob > 0` selects an
+    /// erasure link and `0` the ideal one (no RNG draws — bit-compatible
+    /// with the pre-refactor engines).
+    pub fn resolve(explicit: Option<LinkKind>, drop_prob: f64) -> LinkKind {
+        explicit.unwrap_or(if drop_prob > 0.0 {
+            LinkKind::Erasure { p: drop_prob }
+        } else {
+            LinkKind::Ideal
+        })
+    }
+
+    /// Instantiate the model.  `rng` must be the post-fork root stream of
+    /// [`crate::protocol::build_cores`] so erasure draws line up across
+    /// engines.
+    pub fn build(self, rng: Pcg64) -> Box<dyn LinkModel> {
+        match self {
+            LinkKind::Ideal => Box::new(IdealLink),
+            LinkKind::Erasure { p } => Box::new(ErasureLink::new(p, rng)),
+            LinkKind::Latency { base_s, per_bit_s } => {
+                Box::new(LatencyLink { base_s, per_bit_s })
+            }
+        }
+    }
+}
+
+/// The shared transmit path: §7 energy accounting + transmission log +
+/// link-model fate + simulated wall clock, one instance per run.
+pub struct Medium {
+    log: CommLog,
+    energy: EnergyModel,
+    link: Box<dyn LinkModel>,
+    /// Upload slot duration (each phase occupies at least one slot).
+    slot_s: f64,
+    /// Slowest broadcast of the slot in flight.
+    slot_latency_s: f64,
+    sim_time_s: f64,
+}
+
+impl Medium {
+    pub fn new(energy: EnergyModel, slot_s: f64, link: Box<dyn LinkModel>) -> Medium {
+        Medium {
+            log: CommLog::default(),
+            energy,
+            link,
+            slot_s,
+            slot_latency_s: 0.0,
+            sim_time_s: 0.0,
+        }
+    }
+
+    /// One committed broadcast: charge energy, log it, and return whether
+    /// the neighbors actually receive it (false = erasure; the caller
+    /// rolls the sender's state back — perfect feedback).
+    pub fn transmit(
+        &mut self,
+        worker: usize,
+        iteration: u64,
+        payload_bits: u64,
+        distance_m: f64,
+    ) -> bool {
+        self.log.record(Transmission {
+            worker,
+            iteration,
+            payload_bits,
+            distance_m,
+            energy_j: self.energy.energy_j(payload_bits, distance_m),
+        });
+        match self.link.fate(worker, iteration, payload_bits, distance_m) {
+            Fate::Delivered { latency_s } => {
+                self.slot_latency_s = self.slot_latency_s.max(latency_s);
+                true
+            }
+            Fate::Dropped => {
+                // the airtime is consumed even though nothing lands
+                self.slot_latency_s = self.slot_latency_s.max(self.slot_s);
+                false
+            }
+        }
+    }
+
+    /// Close one synchronous phase: the slot lasts at least `slot_s`, and
+    /// longer when a latency model made a broadcast straggle.
+    pub fn end_slot(&mut self) {
+        self.sim_time_s += self.slot_latency_s.max(self.slot_s);
+        self.slot_latency_s = 0.0;
+    }
+
+    /// Transmission log so far.
+    pub fn log(&self) -> &CommLog {
+        &self.log
+    }
+
+    /// Simulated wall-clock seconds spent on the air so far (slots ×
+    /// phase count, stretched by link latency).
+    pub fn sim_time_s(&self) -> f64 {
+        self.sim_time_s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::EnergyParams;
+
+    fn medium(kind: LinkKind) -> Medium {
+        let params = EnergyParams::default();
+        Medium::new(
+            EnergyModel::new(params, 8, 0.5),
+            params.slot_s,
+            kind.build(Pcg64::new(3)),
+        )
+    }
+
+    #[test]
+    fn ideal_always_delivers_and_charges() {
+        let mut m = medium(LinkKind::Ideal);
+        for k in 0..5 {
+            assert!(m.transmit(0, k, 160, 100.0));
+        }
+        m.end_slot();
+        assert_eq!(m.log().rounds(), 5);
+        assert_eq!(m.log().total_bits, 800);
+        assert!(m.log().total_energy_j > 0.0);
+        assert!((m.sim_time_s() - EnergyParams::default().slot_s).abs() < 1e-15);
+    }
+
+    #[test]
+    fn erasure_rate_roughly_p_and_always_charges() {
+        let mut m = medium(LinkKind::Erasure { p: 0.3 });
+        let trials: u64 = 2000;
+        let delivered = (0..trials).filter(|&k| m.transmit(0, k, 160, 100.0)).count();
+        // every attempt is logged regardless of fate
+        assert_eq!(m.log().rounds(), trials);
+        let rate = 1.0 - delivered as f64 / trials as f64;
+        assert!((rate - 0.3).abs() < 0.05, "erasure rate {rate}");
+    }
+
+    #[test]
+    fn latency_stretches_the_slot() {
+        let mut m = medium(LinkKind::Latency { base_s: 0.5, per_bit_s: 0.0 });
+        assert!(m.transmit(0, 0, 160, 100.0));
+        m.end_slot();
+        assert!(m.sim_time_s() >= 0.5, "straggler must stretch the slot");
+        // an empty (fully censored) phase still occupies one slot
+        m.end_slot();
+        assert!((m.sim_time_s() - (0.5 + 1e-3)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn latency_grows_with_bits_and_distance() {
+        let mut l = LatencyLink { base_s: 0.0, per_bit_s: 1e-6 };
+        let short = match l.fate(0, 0, 100, 10.0) {
+            Fate::Delivered { latency_s } => latency_s,
+            Fate::Dropped => unreachable!(),
+        };
+        let long = match l.fate(0, 0, 10_000, 10.0) {
+            Fate::Delivered { latency_s } => latency_s,
+            Fate::Dropped => unreachable!(),
+        };
+        assert!(long > short);
+    }
+
+    #[test]
+    fn resolve_prefers_explicit_kind() {
+        assert_eq!(LinkKind::resolve(None, 0.0), LinkKind::Ideal);
+        assert_eq!(LinkKind::resolve(None, 0.2), LinkKind::Erasure { p: 0.2 });
+        assert_eq!(
+            LinkKind::resolve(Some(LinkKind::Ideal), 0.2),
+            LinkKind::Ideal
+        );
+    }
+}

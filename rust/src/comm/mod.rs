@@ -10,8 +10,10 @@
 //!   (bottleneck) link, `P = tau * D^2 * N0 * B (2^{R/B} - 1)`, `E = P tau`.
 
 pub mod energy;
+pub mod link;
 
 pub use energy::{EnergyModel, EnergyParams};
+pub use link::{ErasureLink, Fate, IdealLink, LatencyLink, LinkKind, LinkModel, Medium};
 
 /// What one worker put on the air in one slot.
 #[derive(Clone, Copy, Debug)]

@@ -1,126 +1,151 @@
-//! Wire messages of the threaded coordinator.
+//! Wire format of the sharded coordinator.
 //!
-//! Worker-to-worker model exchanges travel as *encoded bytes* (bit-packed
-//! quantized payloads or raw f32 full-precision payloads) through the
-//! leader, which plays the wireless medium: it forwards broadcasts to the
-//! sender's neighbors and charges the energy model.  The byte sizes on
-//! this path are exactly the payloads the paper counts.
+//! Committed broadcasts cross the coordinator's (simulated) air as
+//! encoded bytes: a one-byte kind tag followed by either the bit-packed
+//! quantized payload ([`crate::quant::codec`], exactly the `b*d + 64`
+//! bits the paper counts) or the raw little-endian `f64` model.
+//!
+//! Full-precision payloads travel as `f64` — not the `f32` the paper's
+//! 32-bit accounting suggests — so the coordinator reconstructs the
+//! **exact** hats the sequential simulator holds and the two engines stay
+//! locked bit-for-bit (`tests/coordinator_equivalence.rs`).  The
+//! *accounting* still charges the paper's `32 d` bits per full-precision
+//! broadcast ([`crate::comm::full_precision_bits`]); the tag byte and the
+//! f32→f64 widening are framing, not counted payload — consistent with
+//! the sequential engine, which has always simulated in `f64` while
+//! charging 32-bit payloads.
+//!
+//! Encoding appends into persistent per-worker buffers and decoding
+//! reconstructs straight into the receiver's stored slot
+//! ([`crate::quant::codec::decode_reconstruct_into`]) — the broadcast
+//! path allocates nothing after warm-up.
 
 use crate::quant::codec;
-use crate::quant::QuantMessage;
 
-/// Payload of one broadcast.
-#[derive(Clone, Debug, PartialEq)]
-pub enum Payload {
-    /// 32-bit full precision (f32 little-endian), the unquantized schemes.
-    Full(Vec<u8>),
-    /// Bit-packed quantized message.
-    Quantized(Vec<u8>),
-}
+/// Wire tag: raw little-endian `f64` model follows.
+pub const TAG_FULL: u8 = 0;
+/// Wire tag: bit-packed quantized message follows.
+pub const TAG_QUANTIZED: u8 = 1;
 
-impl Payload {
-    /// Payload size in bits, as the paper counts it.
-    pub fn bits(&self, d: usize) -> u64 {
-        match self {
-            Payload::Full(_) => 32 * d as u64,
-            Payload::Quantized(bytes) => {
-                // recover exact bit count from the header (b*d + 64)
-                codec::decode(bytes, d)
-                    .map(|m| m.payload_bits())
-                    .unwrap_or((bytes.len() * 8) as u64)
-            }
-        }
-    }
-}
-
-/// Encode a full-precision model.
-pub fn encode_full(theta: &[f64]) -> Payload {
-    let mut bytes = Vec::with_capacity(theta.len() * 4);
+/// Encode a full-precision model, appending to `out` (caller clears).
+pub fn encode_full_into(theta: &[f64], out: &mut Vec<u8>) {
+    out.reserve(1 + theta.len() * 8);
+    out.push(TAG_FULL);
     for &v in theta {
-        bytes.extend_from_slice(&(v as f32).to_le_bytes());
+        out.extend_from_slice(&v.to_le_bytes());
     }
-    Payload::Full(bytes)
 }
 
-/// Decode a full-precision model.
-pub fn decode_full(bytes: &[u8], d: usize) -> Option<Vec<f64>> {
-    if bytes.len() != d * 4 {
-        return None;
+/// Encode a quantized message from its parts, appending to `out`.
+pub fn encode_quantized_into(radius: f64, bits: u32, codes: &[u32], out: &mut Vec<u8>) {
+    out.push(TAG_QUANTIZED);
+    codec::encode_parts_into(radius, bits, codes, out);
+}
+
+/// Decode one wire message into the receiver's stored slot for the
+/// sender: full-precision payloads overwrite it, quantized payloads
+/// reconstruct against it in place (eq. (20)).  Returns `false` on a
+/// malformed message (wrong tag, wrong length, truncated stream) — the
+/// slot may then hold a partial reconstruction, so callers treat `false`
+/// as fatal.
+pub fn decode_into_slot(bytes: &[u8], slot: &mut [f64]) -> bool {
+    let Some((&tag, body)) = bytes.split_first() else {
+        return false;
+    };
+    match tag {
+        TAG_FULL => {
+            if body.len() != slot.len() * 8 {
+                return false;
+            }
+            for (v, chunk) in slot.iter_mut().zip(body.chunks_exact(8)) {
+                *v = f64::from_le_bytes(chunk.try_into().expect("chunks_exact(8)"));
+            }
+            true
+        }
+        TAG_QUANTIZED => codec::decode_reconstruct_into(body, slot).is_some(),
+        _ => false,
     }
-    Some(
-        bytes
-            .chunks_exact(4)
-            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]) as f64)
-            .collect(),
-    )
 }
 
-/// Encode a quantized message.
-pub fn encode_quantized(msg: &QuantMessage) -> Payload {
-    Payload::Quantized(codec::encode(msg))
-}
-
-/// Decode a quantized message.
-pub fn decode_quantized(bytes: &[u8], d: usize) -> Option<QuantMessage> {
-    codec::decode(bytes, d)
-}
-
-/// Leader -> worker commands.
-#[derive(Debug)]
-pub enum Command {
-    /// Run the primal update + transmission decision for iteration `k`.
-    Phase { k: u64 },
-    /// Deliver a neighbor's broadcast.
-    Deliver { from: usize, payload: Payload },
-    /// Run the dual update for iteration `k` (both phases delivered).
-    DualUpdate,
-    /// Report local loss `f_n(theta_n)` and diagnostics.
-    Report,
-    /// Shut down.
-    Stop,
-}
-
-/// Worker -> leader events.
-#[derive(Debug)]
-pub enum Event {
-    /// The worker decided to broadcast.
-    Broadcast { from: usize, payload: Payload },
-    /// The worker finished its phase (after an optional broadcast).
-    PhaseDone { worker: usize },
-    /// Dual update finished.
-    DualDone { worker: usize },
-    /// Loss report.
-    Loss { worker: usize, loss: f64, theta: Vec<f64> },
+/// Payload size in bits as the paper counts it, recovered from the wire
+/// bytes (diagnostics; the engines account from the protocol core and
+/// never re-derive this on the hot path).
+pub fn counted_bits(bytes: &[u8], d: usize) -> Option<u64> {
+    let (&tag, body) = bytes.split_first()?;
+    match tag {
+        TAG_FULL => (body.len() == d * 8).then(|| crate::comm::full_precision_bits(d)),
+        TAG_QUANTIZED => codec::decode(body, d).map(|m| m.payload_bits()),
+        _ => None,
+    }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::quant::QuantMessage;
 
     #[test]
-    fn full_roundtrip() {
-        let theta = vec![1.5, -2.25, 0.0];
-        let p = encode_full(&theta);
-        assert_eq!(p.bits(3), 96);
-        match &p {
-            Payload::Full(bytes) => {
-                assert_eq!(decode_full(bytes, 3).unwrap(), theta);
-                assert!(decode_full(bytes, 4).is_none());
-            }
-            _ => unreachable!(),
+    fn full_roundtrip_is_exact_f64() {
+        let theta = vec![1.5, -2.25, 1.0e-17, std::f64::consts::PI];
+        let mut wire = Vec::new();
+        encode_full_into(&theta, &mut wire);
+        assert_eq!(wire.len(), 1 + 4 * 8);
+        let mut slot = vec![0.0; 4];
+        assert!(decode_into_slot(&wire, &mut slot));
+        // f64 on the wire: the decode is bit-exact, unlike the seed's f32
+        for (a, b) in theta.iter().zip(&slot) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        assert_eq!(counted_bits(&wire, 4), Some(32 * 4));
+    }
+
+    #[test]
+    fn full_wrong_dimension_rejected() {
+        let mut wire = Vec::new();
+        encode_full_into(&[1.0, 2.0, 3.0], &mut wire);
+        let mut slot = vec![0.0; 4];
+        assert!(!decode_into_slot(&wire, &mut slot));
+        assert_eq!(counted_bits(&wire, 4), None);
+    }
+
+    #[test]
+    fn quantized_roundtrip_matches_reference_decode() {
+        let msg = QuantMessage { codes: vec![1, 2, 3, 0], radius: 0.5, bits: 3 };
+        let mut wire = Vec::new();
+        encode_quantized_into(msg.radius, msg.bits, &msg.codes, &mut wire);
+        assert_eq!(counted_bits(&wire, 4), Some(3 * 4 + 64));
+        let reference = vec![0.25, -1.0, 2.0, 0.0];
+        let mut slot = reference.clone();
+        assert!(decode_into_slot(&wire, &mut slot));
+        let expected = msg.reconstruct(&reference);
+        for (a, b) in expected.iter().zip(&slot) {
+            assert_eq!(a.to_bits(), b.to_bits());
         }
     }
 
     #[test]
-    fn quantized_roundtrip_and_bits() {
-        let msg = QuantMessage { codes: vec![1, 2, 3, 4], radius: 0.5, bits: 3 };
-        let p = encode_quantized(&msg);
-        assert_eq!(p.bits(4), 3 * 4 + 64);
-        match &p {
-            Payload::Quantized(bytes) => {
-                assert_eq!(decode_quantized(bytes, 4).unwrap(), msg);
-            }
-            _ => unreachable!(),
+    fn garbage_rejected() {
+        let mut slot = vec![0.0; 3];
+        assert!(!decode_into_slot(&[], &mut slot));
+        assert!(!decode_into_slot(&[7, 1, 2, 3], &mut slot));
+        let msg = QuantMessage { codes: vec![1, 2, 3], radius: 0.5, bits: 4 };
+        let mut wire = Vec::new();
+        encode_quantized_into(msg.radius, msg.bits, &msg.codes, &mut wire);
+        let cut = wire.len() - 1;
+        assert!(!decode_into_slot(&wire[..cut], &mut slot));
+    }
+
+    #[test]
+    fn buffers_are_reusable() {
+        // clear + re-encode must not reallocate once capacity is warm
+        let theta = vec![1.0; 16];
+        let mut wire = Vec::new();
+        encode_full_into(&theta, &mut wire);
+        let cap = wire.capacity();
+        for _ in 0..4 {
+            wire.clear();
+            encode_full_into(&theta, &mut wire);
         }
+        assert_eq!(wire.capacity(), cap);
     }
 }

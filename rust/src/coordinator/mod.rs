@@ -1,34 +1,72 @@
 //! The distributed coordinator: the paper's decentralized protocol run as
-//! a real multi-threaded system with explicit message passing.
+//! a real system engine — M simulated workers **sharded over a
+//! fixed-size executor pool** of K threads (K ≪ M), with an event-driven
+//! leader loop and explicit wire-encoded broadcasts.
 //!
-//! One OS thread per worker ([`worker`]); the leader thread plays the
-//! wireless medium and the experiment driver: it triggers head/tail
-//! phases, forwards each broadcast to the sender's neighbors (paying the
-//! §7 energy model for the *encoded byte* payload that actually crossed
-//! the channel), synchronizes the dual update, and collects loss reports.
+//! Architecture (one iteration):
 //!
-//! The per-worker state machine is identical to the sequential simulator
-//! in [`crate::algs`]; `tests/coordinator_equivalence.rs` locks the two
-//! together trajectory-for-trajectory.
+//! 1. **Phase dispatch** — the leader fans the phase group (heads, tails,
+//!    or everyone under Jacobian) out over the
+//!    [`crate::parallel::WorkerPool`]: executor threads claim
+//!    [`worker::ShardWorker`]s dynamically and run each one's primal
+//!    solve + quantize→censor candidate build (all per-worker RNG lives
+//!    in per-worker streams, so scheduling cannot perturb results).
+//! 2. **Broadcast resolution** — back on the leader, pending broadcasts
+//!    are resolved in ascending worker order (the determinism contract
+//!    for the erasure stream) through the shared [`crate::comm::Medium`]:
+//!    energy/bits are charged, the [`crate::comm::LinkModel`] decides the
+//!    fate, delivered payloads are wire-encoded once and decoded straight
+//!    into each neighbor's core slot.
+//! 3. **Dual update** — fanned out over the pool again.
+//!
+//! The per-worker state machine is the shared
+//! [`crate::protocol::WorkerCore`] — the *same* code the sequential
+//! simulator drives — so the two engines are locked together
+//! **bit-for-bit** by `tests/coordinator_equivalence.rs`, across the full
+//! algorithm family and under erasure injection.
+//!
+//! Scale: the seed implementation spawned one OS thread per worker and
+//! topped out around the OS thread ceiling; the sharded executor runs
+//! N = 1024+ simulated workers on a laptop-sized pool (see the
+//! `coordinator_scale` example, exercised in CI).  Shutdown is
+//! deterministic: dropping a [`Coordinator`] mid-run drops the pool,
+//! which joins its helper threads (no detached threads or leaked
+//! channels), and a panic inside a shard solve is re-raised on the
+//! leader after the pool barrier — the pool (and the coordinator)
+//! survive, exactly like [`crate::parallel::WorkerPool`].
 
 pub mod message;
 pub mod worker;
 
 use crate::algs::{AlgSpec, Problem, Schedule};
-use crate::comm::{CommLog, EnergyModel, Transmission};
+use crate::comm::{CommLog, EnergyModel, EnergyParams, LinkKind, Medium};
 use crate::graph::Topology;
 use crate::metrics::{Trace, TracePoint};
-use crate::solver::{LinearSolver, LogisticSolver, SubproblemSolver};
-use crate::util::rng::Pcg64;
-use message::{Command, Event};
-use std::sync::mpsc::{channel, Receiver, Sender};
+use crate::parallel::{resolve_threads, SyncPtr, WorkerPool};
+use crate::protocol::{build_cores, ProtocolConfig};
+use crate::solver::Backend;
+use worker::ShardWorker;
 
 /// Options for a coordinated run.
 #[derive(Clone, Debug)]
 pub struct CoordinatorOptions {
     pub seed: u64,
     pub record_every: u64,
-    pub energy: crate::comm::EnergyParams,
+    pub energy: EnergyParams,
+    /// Executor threads the workers are sharded over (0 = all cores).
+    /// The leader participates in every dispatch, so `threads` is the
+    /// total parallelism — independent of the worker count.
+    pub threads: usize,
+    /// Broadcast-erasure probability; shorthand for
+    /// `link = Some(LinkKind::Erasure { p })` (same stream discipline as
+    /// [`crate::algs::RunOptions::drop_prob`], so trajectories match the
+    /// simulator bit-for-bit).
+    pub drop_prob: f64,
+    /// Explicit link model; `None` resolves from `drop_prob`.
+    pub link: Option<LinkKind>,
+    /// Censoring-aware incremental cache maintenance (diagnostics knob;
+    /// `false` forces from-scratch rebuilds like the simulator's).
+    pub incremental: bool,
 }
 
 impl Default for CoordinatorOptions {
@@ -36,28 +74,36 @@ impl Default for CoordinatorOptions {
         CoordinatorOptions {
             seed: 7,
             record_every: 1,
-            energy: crate::comm::EnergyParams::default(),
+            energy: EnergyParams::default(),
+            threads: 0,
+            drop_prob: 0.0,
+            link: None,
+            incremental: true,
         }
     }
 }
 
-/// Leader handle over the worker fleet.
+/// Leader handle over the sharded worker fleet.
 pub struct Coordinator {
     topo: Topology,
-    spec: AlgSpec,
     problem: Problem,
     opts: CoordinatorOptions,
-    cmd_tx: Vec<Sender<Command>>,
-    event_rx: Receiver<Event>,
-    handles: Vec<std::thread::JoinHandle<()>>,
-    comm: CommLog,
-    energy: EnergyModel,
+    shards: Vec<ShardWorker>,
+    pool: WorkerPool,
+    medium: Medium,
     trace: Trace,
     iter: u64,
+    /// cached phase groups (constant over a run; see `algs::Run`)
+    phase_groups: Vec<Vec<usize>>,
+    /// persistent per-worker loss scratch for `record`
+    losses: Vec<f64>,
 }
 
 impl Coordinator {
-    /// Spawn the worker fleet (native solvers).
+    /// Build the worker fleet (native solvers) and the executor pool.
+    /// The expensive per-worker Gram + Cholesky setup fans out over the
+    /// same pool that later runs the phases — built once, reused for
+    /// every dispatch.
     pub fn spawn(
         problem: Problem,
         topo: Topology,
@@ -66,141 +112,102 @@ impl Coordinator {
     ) -> Coordinator {
         spec.validate().expect("invalid AlgSpec");
         let n = topo.n();
-        let d = problem.d;
-        // fork quantizer RNG streams exactly like the simulator so the two
-        // implementations stay trajectory-equivalent
-        let mut rng = Pcg64::new(opts.seed ^ 0xA16_0001);
-        let (event_tx, event_rx) = channel::<Event>();
-        let mut cmd_tx = Vec::with_capacity(n);
-        let mut handles = Vec::with_capacity(n);
-        // build all solvers before spawning the actors: the per-worker
-        // Gram + Cholesky setup is the expensive part of spawn, and it
-        // fans out over the same pool primitive the simulator uses
-        // (solvers share shards through the Arc — no X/y copies)
-        let solvers = crate::parallel::map_indexed(
-            n,
-            crate::parallel::default_threads().min(n),
-            |i| -> Box<dyn SubproblemSolver> {
-                // Jacobian schedules carry the DCADMM doubled penalty (see
-                // algs::run::build_solvers)
-                let degree = match spec.schedule {
-                    Schedule::Alternating => topo.degree(i),
-                    Schedule::Jacobian => 2 * topo.degree(i),
-                };
-                match problem.task {
-                    crate::config::Task::Linear => Box::new(LinearSolver::from_shard(
-                        std::sync::Arc::clone(&problem.shards[i]),
-                        problem.rho,
-                        degree,
-                    )),
-                    crate::config::Task::Logistic => Box::new(LogisticSolver::from_shard(
-                        std::sync::Arc::clone(&problem.shards[i]),
-                        problem.mu0,
-                        problem.rho,
-                        degree,
-                    )),
-                }
-            },
-        );
-        for (i, solver) in solvers.into_iter().enumerate() {
-            let setup = worker::WorkerSetup {
-                id: i,
-                d,
-                rho: problem.rho,
-                neighbors: topo.neighbors(i).to_vec(),
-                solver,
-                censor: spec.censor,
-                quantizer: spec
-                    .quant
-                    .as_ref()
-                    .map(|q| crate::quant::Quantizer::new(*q, rng.fork(i as u64))),
-                jacobian_anchor: spec.schedule == Schedule::Jacobian,
-            };
-            let (tx, rx) = channel::<Command>();
-            let etx = event_tx.clone();
-            handles.push(
-                std::thread::Builder::new()
-                    .name(format!("worker-{i}"))
-                    .spawn(move || worker::worker_main(setup, rx, etx))
-                    .expect("spawn worker"),
-            );
-            cmd_tx.push(tx);
-        }
+        let mut pool = WorkerPool::new(resolve_threads(opts.threads));
+        let cfg = ProtocolConfig {
+            backend: Backend::Native,
+            artifacts_dir: None,
+            incremental: opts.incremental,
+            seed: opts.seed,
+        };
+        // the shared constructor forks quantizer RNG streams exactly like
+        // the simulator and hands back the root stream for the link model
+        // — the two engines cannot drift
+        let (cores, rng) = build_cores(&problem, &topo, &spec, &cfg, Some(&mut pool));
+        let shards: Vec<ShardWorker> = cores.into_iter().map(ShardWorker::new).collect();
         let energy = EnergyModel::new(opts.energy, n, spec.concurrent_fraction());
+        let medium = Medium::new(
+            energy,
+            opts.energy.slot_s,
+            LinkKind::resolve(opts.link, opts.drop_prob).build(rng),
+        );
         let trace = Trace::new(&spec.name, &problem.dataset_name);
+        let phase_groups = match spec.schedule {
+            Schedule::Alternating => vec![topo.heads(), topo.tails()],
+            Schedule::Jacobian => vec![(0..n).collect()],
+        };
         Coordinator {
+            losses: vec![0.0; n],
+            phase_groups,
+            shards,
+            pool,
+            medium,
             topo,
-            spec,
             problem,
             opts,
-            cmd_tx,
-            event_rx,
-            handles,
-            comm: CommLog::default(),
-            energy,
             trace,
             iter: 0,
         }
     }
 
-    /// Run one phase over `group`: trigger updates, collect broadcasts,
-    /// forward them, wait for completion.
-    fn run_phase(&mut self, group: &[usize], k: u64) {
-        for &i in group {
-            self.cmd_tx[i].send(Command::Phase { k }).expect("send phase");
-        }
-        let mut done = 0usize;
-        let mut broadcasts: Vec<(usize, message::Payload)> = Vec::new();
-        while done < group.len() {
-            match self.event_rx.recv().expect("event channel closed") {
-                Event::Broadcast { from, payload } => broadcasts.push((from, payload)),
-                Event::PhaseDone { .. } => done += 1,
-                other => panic!("unexpected event during phase: {other:?}"),
-            }
-        }
-        // the medium: deliver + charge
-        let d = self.problem.d;
-        for (from, payload) in broadcasts {
-            let bits = payload.bits(d);
-            let dist = self.topo.max_neighbor_distance(from);
-            self.comm.record(Transmission {
-                worker: from,
-                iteration: self.iter,
-                payload_bits: bits,
-                distance_m: dist,
-                energy_j: self.energy.energy_j(bits, dist),
+    /// Total executor threads (pool helpers + the leader).
+    pub fn threads(&self) -> usize {
+        self.pool.threads()
+    }
+
+    /// Run one phase over `group`: shard the primal + candidate work over
+    /// the executor, then resolve the broadcasts event-by-event in
+    /// deterministic worker order.
+    fn run_phase(&mut self, group: &[usize], k_plus_1: u64) {
+        // 1. parallel: primal solve + quantize/censor candidate.  Raw
+        // base pointer for disjoint per-index &mut access (group ids are
+        // strictly increasing, so no two jobs alias; the pool barrier
+        // ends every access before for_each returns).
+        debug_assert!(group.windows(2).all(|w| w[0] < w[1]), "group must be increasing");
+        {
+            let shards = SyncPtr(self.shards.as_mut_ptr());
+            self.pool.for_each(group.len(), |j| {
+                // SAFETY: distinct indices => disjoint elements; see above
+                let s = unsafe { &mut *shards.0.add(group[j]) };
+                s.phase(k_plus_1);
             });
-            for &m in self.topo.neighbors(from) {
-                self.cmd_tx[m]
-                    .send(Command::Deliver { from, payload: payload.clone() })
-                    .expect("deliver");
+        }
+        // 2. sequential resolution on the leader: charge the medium, let
+        // the link decide, deliver wire bytes to the neighbors' cores
+        for &i in group {
+            let Some(bits) = self.shards[i].core.pending_bits() else {
+                continue;
+            };
+            let dist = self.topo.max_neighbor_distance(i);
+            if self.medium.transmit(i, self.iter, bits, dist) {
+                self.shards[i].commit_and_encode();
+                let wire = self.shards[i].take_wire();
+                for &m in self.topo.neighbors(i) {
+                    self.shards[m].deliver(i, &wire);
+                }
+                self.shards[i].put_wire(wire);
+            } else {
+                self.shards[i].core.abort_pending();
             }
         }
+        self.medium.end_slot();
     }
 
     /// Execute one full iteration.
     pub fn step(&mut self) {
-        let k = self.iter + 1;
-        match self.spec.schedule {
-            Schedule::Alternating => {
-                let heads = self.topo.heads();
-                let tails = self.topo.tails();
-                self.run_phase(&heads, k);
-                self.run_phase(&tails, k);
-            }
-            Schedule::Jacobian => {
-                let all: Vec<usize> = (0..self.topo.n()).collect();
-                self.run_phase(&all, k);
-            }
+        let k_plus_1 = self.iter + 1;
+        let groups = std::mem::take(&mut self.phase_groups);
+        for group in &groups {
+            self.run_phase(group, k_plus_1);
         }
-        for tx in &self.cmd_tx {
-            tx.send(Command::DualUpdate).expect("dual");
-        }
-        let mut done = 0;
-        while done < self.topo.n() {
-            if let Event::DualDone { .. } = self.event_rx.recv().expect("event") {
-                done += 1;
-            }
+        self.phase_groups = groups;
+        // dual update, sharded over the executor (disjoint per-worker)
+        {
+            let shards = SyncPtr(self.shards.as_mut_ptr());
+            self.pool.for_each(self.shards.len(), |i| {
+                // SAFETY: each index claimed by exactly one job
+                let s = unsafe { &mut *shards.0.add(i) };
+                s.core.dual_update();
+            });
         }
         self.iter += 1;
         if self.iter % self.opts.record_every == 0 {
@@ -209,51 +216,49 @@ impl Coordinator {
     }
 
     fn record(&mut self) {
-        for tx in &self.cmd_tx {
-            tx.send(Command::Report).expect("report");
+        // per-worker losses, sharded (loss is O(s d) per worker); summed
+        // in worker order on the leader — identical arithmetic to the
+        // simulator's record
+        {
+            let shards = SyncPtr(self.shards.as_mut_ptr());
+            let losses = SyncPtr(self.losses.as_mut_ptr());
+            self.pool.for_each(self.shards.len(), |i| {
+                // SAFETY: disjoint reads of shard i, disjoint write of
+                // slot i; the barrier orders them before the sum below
+                let s = unsafe { &*shards.0.add(i) };
+                unsafe { *losses.0.add(i) = s.core.loss() };
+            });
         }
-        let n = self.topo.n();
-        let mut losses = vec![0.0; n];
-        let mut thetas: Vec<Vec<f64>> = vec![Vec::new(); n];
-        let mut got = 0;
-        while got < n {
-            if let Event::Loss { worker, loss, theta } = self.event_rx.recv().expect("event") {
-                losses[worker] = loss;
-                thetas[worker] = theta;
-                got += 1;
-            }
-        }
-        let obj: f64 = losses.iter().sum();
+        let obj: f64 = self.losses.iter().sum();
         let mut consensus: f64 = 0.0;
         for &(h, t) in self.topo.edges() {
-            let diff: f64 = thetas[h]
+            let diff: f64 = self.shards[h]
+                .core
+                .theta()
                 .iter()
-                .zip(&thetas[t])
+                .zip(self.shards[t].core.theta())
                 .map(|(a, b)| (a - b) * (a - b))
                 .sum::<f64>()
                 .sqrt();
             consensus = consensus.max(diff);
         }
+        let log = self.medium.log();
         self.trace.push(TracePoint {
             iteration: self.iter,
             loss_gap: (obj - self.problem.f_star).abs(),
             consensus_gap: consensus,
-            cum_rounds: self.comm.rounds(),
-            cum_bits: self.comm.total_bits,
-            cum_energy_j: self.comm.total_energy_j,
+            cum_rounds: log.rounds(),
+            cum_bits: log.total_bits,
+            cum_energy_j: log.total_energy_j,
         });
     }
 
-    /// Run `iters` iterations, shut the fleet down, return the trace.
+    /// Run `iters` iterations and return the trace.  The executor pool
+    /// (and its threads) are joined when `self` drops here — shutdown is
+    /// deterministic even if the caller abandons the coordinator earlier.
     pub fn run(mut self, iters: u64) -> Trace {
         for _ in 0..iters {
             self.step();
-        }
-        for tx in &self.cmd_tx {
-            let _ = tx.send(Command::Stop);
-        }
-        for h in self.handles.drain(..) {
-            let _ = h.join();
         }
         std::mem::replace(&mut self.trace, Trace::new("", ""))
     }
@@ -265,18 +270,12 @@ impl Coordinator {
 
     /// Communication log so far.
     pub fn comm(&self) -> &CommLog {
-        &self.comm
+        self.medium.log()
     }
-}
 
-impl Drop for Coordinator {
-    fn drop(&mut self) {
-        for tx in &self.cmd_tx {
-            let _ = tx.send(Command::Stop);
-        }
-        for h in self.handles.drain(..) {
-            let _ = h.join();
-        }
+    /// Simulated on-air wall clock so far (see [`Medium::sim_time_s`]).
+    pub fn sim_time_s(&self) -> f64 {
+        self.medium.sim_time_s()
     }
 }
 
@@ -323,5 +322,61 @@ mod tests {
             coord.step();
         }
         assert_eq!(coord.comm().rounds(), 80);
+    }
+
+    #[test]
+    fn worker_count_exceeds_executor_threads() {
+        // the scale contract: N workers on a K-thread pool, K << N
+        let topo = Topology::random_bipartite(32, 0.2, 4);
+        let ds = synthetic::linear_dataset(320, 4, 4);
+        let p = Problem::new(&ds, &topo, 1.0, 0.0, 4);
+        let coord = Coordinator::spawn(
+            p,
+            topo,
+            AlgSpec::cq_ggadmm(0.2, 0.9, 0.99, 2),
+            CoordinatorOptions { threads: 2, ..CoordinatorOptions::default() },
+        );
+        assert_eq!(coord.threads(), 2);
+        let trace = coord.run(120);
+        assert!(trace.last_gap() < 1e-4, "gap={:.3e}", trace.last_gap());
+    }
+
+    #[test]
+    fn dropping_midrun_joins_cleanly() {
+        // satellite contract: abandoning a coordinator before run()
+        // completes must not detach threads or leak channels — dropping
+        // the pool joins its helpers deterministically.  This test hangs
+        // (and times out) if shutdown regresses.
+        let topo = Topology::random_bipartite(12, 0.4, 5);
+        let ds = synthetic::linear_dataset(120, 4, 5);
+        let p = Problem::new(&ds, &topo, 1.0, 0.0, 5);
+        let mut coord = Coordinator::spawn(
+            p.clone(),
+            topo.clone(),
+            AlgSpec::ggadmm(),
+            CoordinatorOptions { threads: 3, ..CoordinatorOptions::default() },
+        );
+        coord.step();
+        coord.step();
+        drop(coord);
+        // never stepped at all
+        let coord2 =
+            Coordinator::spawn(p, topo, AlgSpec::ggadmm(), CoordinatorOptions::default());
+        drop(coord2);
+    }
+
+    #[test]
+    fn erasure_coordinator_still_converges() {
+        let topo = Topology::random_bipartite(8, 0.5, 6);
+        let ds = synthetic::linear_dataset(96, 4, 6);
+        let p = Problem::new(&ds, &topo, 1.0, 0.0, 6);
+        let coord = Coordinator::spawn(
+            p,
+            topo,
+            AlgSpec::ggadmm(),
+            CoordinatorOptions { drop_prob: 0.15, ..CoordinatorOptions::default() },
+        );
+        let trace = coord.run(300);
+        assert!(trace.last_gap() < 1e-4, "gap={:.3e}", trace.last_gap());
     }
 }

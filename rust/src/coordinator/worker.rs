@@ -1,119 +1,79 @@
-//! Worker actor: one OS thread per worker, owning its shard, solver and
-//! per-link state, driven by leader [`Command`]s.
+//! The sharded execution unit: one [`ShardWorker`] per simulated worker,
+//! **not** one OS thread per worker.
+//!
+//! A `ShardWorker` is the wire adapter over the shared
+//! [`crate::protocol::WorkerCore`] state machine: it runs the core's
+//! phase on whichever executor thread claims it, encodes committed
+//! payloads into a persistent per-worker buffer, and decodes incoming
+//! broadcasts straight into the core's neighbor slot.  The leader
+//! ([`super::Coordinator`]) schedules M of these over a fixed-size
+//! [`crate::parallel::WorkerPool`] of K threads (K ≪ M), which is what
+//! lifts the scale ceiling from ~hundreds of OS threads to thousands of
+//! simulated workers.
 
-use super::message::{
-    decode_full, decode_quantized, encode_full, encode_quantized, Command, Event, Payload,
-};
-use crate::censor::{gate, CensorConfig, Gate};
-use crate::quant::Quantizer;
-use crate::solver::SubproblemSolver;
-use std::collections::BTreeMap;
-use std::sync::mpsc::{Receiver, Sender};
+use super::message;
+use crate::protocol::{PayloadRef, WorkerCore};
 
-/// Everything a worker thread needs at spawn time.
-pub struct WorkerSetup {
-    pub id: usize,
-    pub d: usize,
-    pub rho: f64,
-    pub neighbors: Vec<usize>,
-    pub solver: Box<dyn SubproblemSolver>,
-    pub censor: Option<CensorConfig>,
-    pub quantizer: Option<Quantizer>,
-    /// Jacobian (DCADMM) schedules anchor the update on the worker's own
-    /// last broadcast: `nbr_sum += d_i * hat_self` (the solver then carries
-    /// the doubled penalty; see `algs::run::build_solvers`).
-    pub jacobian_anchor: bool,
+/// One simulated worker, scheduled onto the executor pool by the leader.
+pub struct ShardWorker {
+    pub core: WorkerCore,
+    /// Persistent wire buffer for this worker's outbound payloads
+    /// (cleared per commit, capacity retained — the broadcast path
+    /// allocates nothing after warm-up).
+    wire: Vec<u8>,
 }
 
-/// The worker event loop.  Runs until [`Command::Stop`] or the leader
-/// channel closes.
-pub fn worker_main(setup: WorkerSetup, rx: Receiver<Command>, tx: Sender<Event>) {
-    let WorkerSetup {
-        id,
-        d,
-        rho,
-        neighbors,
-        mut solver,
-        censor,
-        mut quantizer,
-        jacobian_anchor,
-    } = setup;
-    let mut theta = vec![0.0; d];
-    let mut alpha = vec![0.0; d];
-    // what my neighbors believe about me (theta-hat_n)
-    let mut hat_self = vec![0.0; d];
-    // what I believe about my neighbors (init 0, Algorithm 2 line 2)
-    let mut hat_nbrs: BTreeMap<usize, Vec<f64>> =
-        neighbors.iter().map(|&m| (m, vec![0.0; d])).collect();
-    let mut transmitted_once = false;
-    // persistent per-phase scratch (zeroed each phase — same arithmetic
-    // as a freshly allocated buffer, without the per-phase allocation)
-    let mut nbr_sum = vec![0.0; d];
+impl ShardWorker {
+    pub fn new(mut core: WorkerCore) -> ShardWorker {
+        // the wire encoder needs the candidate's integer codes; the
+        // shared core skips collecting them unless a driver opts in
+        core.enable_code_collection();
+        ShardWorker { core, wire: Vec::new() }
+    }
 
-    while let Ok(cmd) = rx.recv() {
-        match cmd {
-            Command::Phase { k } => {
-                // primal update (eq. 21/22)
-                nbr_sum.iter_mut().for_each(|v| *v = 0.0);
-                for v in hat_nbrs.values() {
-                    crate::util::axpy(&mut nbr_sum, 1.0, v);
-                }
-                if jacobian_anchor {
-                    crate::util::axpy(&mut nbr_sum, neighbors.len() as f64, &hat_self);
-                }
-                solver.update_into(&alpha, &nbr_sum, &mut theta);
+    /// One phase turn, run on an executor thread: primal update, then
+    /// build + gate the broadcast candidate for censoring iteration
+    /// `k_plus_1`.  The transmit decision is left pending in the core for
+    /// the leader to resolve (the erasure draw must happen in
+    /// deterministic worker order on the leader).
+    pub fn phase(&mut self, k_plus_1: u64) {
+        self.core.primal_update();
+        self.core.prepare_broadcast(k_plus_1);
+    }
 
-                // transmission pipeline: quantize -> censor -> broadcast
-                let (candidate_hat, payload) = match &mut quantizer {
-                    Some(q) => {
-                        let (msg, recon) = q.quantize(&theta, &hat_self);
-                        (recon, encode_quantized(&msg))
-                    }
-                    None => (theta.clone(), encode_full(&theta)),
-                };
-                let decision = match (&censor, transmitted_once) {
-                    (_, false) => Gate::Transmit,
-                    (None, _) => Gate::Transmit,
-                    (Some(c), true) => gate(c, k, &hat_self, &candidate_hat),
-                };
-                if decision == Gate::Transmit {
-                    hat_self = candidate_hat;
-                    transmitted_once = true;
-                    let _ = tx.send(Event::Broadcast { from: id, payload });
-                }
-                let _ = tx.send(Event::PhaseDone { worker: id });
+    /// Leader-side: the medium delivered this worker's broadcast — commit
+    /// it and encode the wire bytes into the persistent buffer.
+    pub fn commit_and_encode(&mut self) {
+        self.core.commit_pending();
+        self.wire.clear();
+        match self.core.committed_payload() {
+            PayloadRef::Full(theta) => message::encode_full_into(theta, &mut self.wire),
+            PayloadRef::Quantized { radius, bits, codes } => {
+                message::encode_quantized_into(radius, bits, codes, &mut self.wire)
             }
-            Command::Deliver { from, payload } => {
-                let stored = hat_nbrs
-                    .get_mut(&from)
-                    .unwrap_or_else(|| panic!("worker {id}: message from non-neighbor {from}"));
-                match payload {
-                    Payload::Full(bytes) => {
-                        *stored = decode_full(&bytes, d).expect("bad full payload");
-                    }
-                    Payload::Quantized(bytes) => {
-                        let msg = decode_quantized(&bytes, d).expect("bad quantized payload");
-                        // reconstruct in place against the last value I
-                        // hold for the sender — exactly the sender's own
-                        // reference — without allocating per link
-                        msg.reconstruct_into(stored);
-                    }
-                }
-            }
-            Command::DualUpdate => {
-                // eq. (23): alpha += rho * sum_m (hat_self - hat_m)
-                for v in hat_nbrs.values() {
-                    for j in 0..d {
-                        alpha[j] += rho * (hat_self[j] - v[j]);
-                    }
-                }
-                let _ = tx.send(Event::DualDone { worker: id });
-            }
-            Command::Report => {
-                let loss = solver.loss(&theta);
-                let _ = tx.send(Event::Loss { worker: id, loss, theta: theta.clone() });
-            }
-            Command::Stop => break,
         }
+    }
+
+    /// Take the wire buffer out (the leader fans the bytes out to the
+    /// neighbors' `deliver` while this worker stays borrow-free); return
+    /// it via [`ShardWorker::put_wire`].
+    pub fn take_wire(&mut self) -> Vec<u8> {
+        std::mem::take(&mut self.wire)
+    }
+
+    pub fn put_wire(&mut self, wire: Vec<u8>) {
+        self.wire = wire;
+    }
+
+    /// Receive a neighbor's broadcast: decode straight into the core's
+    /// stored slot for `from` (full precision overwrites; quantized
+    /// reconstructs in place against the shared reference).
+    pub fn deliver(&mut self, from: usize, bytes: &[u8]) {
+        self.core.deliver_with(from, |slot| {
+            assert!(
+                message::decode_into_slot(bytes, slot),
+                "malformed broadcast from worker {from}"
+            );
+        });
     }
 }

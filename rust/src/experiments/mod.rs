@@ -286,6 +286,7 @@ fn run_jobs(jobs: &[SweepJob], exec: &ExecOptions) -> Vec<Trace> {
                     drop_prob: 0.0,
                     energy: EnergyParams::default(),
                     incremental: true,
+                    link: None,
                 };
                 let mut run = Run::new(job.problem.clone(), job.topo.clone(), alg.clone(), opts);
                 run.run(iters)

@@ -16,7 +16,10 @@
 //!
 //! * **Layer 3 (this crate)** — the decentralized runtime: topology
 //!   management, head/tail phase scheduling, censoring gates, quantized
-//!   payload codec, per-worker actors, metrics and the experiment harness.
+//!   payload codec, the shared per-worker protocol core ([`protocol`])
+//!   with its two drivers (the sequential simulator in [`algs`] and the
+//!   sharded coordinator in [`coordinator`]), pluggable link models
+//!   ([`comm`]), metrics and the experiment harness.
 //! * **Layer 2 (JAX, build time)** — per-worker subproblem solvers lowered
 //!   AOT to HLO text in `artifacts/` (see `python/compile/model.py`).
 //! * **Layer 1 (Pallas, build time)** — the compute hot-spot kernels the
@@ -59,6 +62,7 @@ pub mod io;
 pub mod linalg;
 pub mod metrics;
 pub mod parallel;
+pub mod protocol;
 pub mod quant;
 pub mod runtime;
 pub mod solver;

@@ -53,12 +53,14 @@ fn cli() -> Cli {
                 .opt("out", None, "write the trace CSV here"),
         )
         .command(
-            Command::new("coordinator", "run the threaded message-passing coordinator demo")
+            Command::new("coordinator", "run the sharded-executor coordinator demo")
                 .opt("dataset", Some("synth-linear"), "dataset id")
                 .opt("alg", Some("cq-ggadmm"), "algorithm")
                 .opt("workers", Some("12"), "number of workers")
                 .opt("iters", Some("150"), "iterations")
-                .opt("seed", Some("1"), "random seed"),
+                .opt("seed", Some("1"), "random seed")
+                .opt("threads", Some("0"), "executor threads (0 = all cores)")
+                .opt("drop-prob", Some("0"), "broadcast-erasure probability"),
         )
         .command(Command::new("datasets", "print Table 1 (dataset inventory)"))
         .command(
@@ -267,21 +269,23 @@ fn cmd_coordinator(a: &Args) -> Result<(), String> {
     let workers = a.get_usize("workers")?.unwrap_or(12);
     let iters = a.get_u64("iters")?.unwrap_or(150);
     let seed = a.get_u64("seed")?.unwrap_or(1);
+    let threads = a.get_usize("threads")?.unwrap_or(0);
+    let drop_prob = a.get_f64("drop-prob")?.unwrap_or(0.0);
     let spec = parse_alg(&a.get_or("alg", "cq-ggadmm"), a)?;
+    let alg_name = spec.name.clone();
     let ds = data::load(dataset, seed);
     let topo = Topology::random_bipartite(workers, 0.3, seed);
     let problem = Problem::new(&ds, &topo, 1.0, 1e-2, seed);
-    println!(
-        "spawning {} worker threads ({} edges), algorithm {}",
-        workers,
-        topo.edges().len(),
-        spec.name
-    );
     let coord = Coordinator::spawn(
         problem,
         topo,
         spec,
-        CoordinatorOptions { seed, ..CoordinatorOptions::default() },
+        CoordinatorOptions { seed, threads, drop_prob, ..CoordinatorOptions::default() },
+    );
+    println!(
+        "sharding {} workers over a {}-thread executor, algorithm {alg_name}",
+        workers,
+        coord.threads(),
     );
     let trace = coord.run(iters);
     let last = trace.points.last().unwrap();

@@ -274,6 +274,18 @@ pub fn default_threads() -> usize {
         .unwrap_or(1)
 }
 
+/// Resolve an executor-size knob: `0` means "all cores" (the sharded
+/// coordinator's convention — its leader participates in every dispatch,
+/// so using every core is the saturating default), any other value is
+/// taken literally.
+pub fn resolve_threads(requested: usize) -> usize {
+    if requested == 0 {
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+    } else {
+        requested
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -359,6 +371,17 @@ mod tests {
         let seq = map_maybe_pool(None, 12, |i| i * 2);
         let pooled = map_maybe_pool(Some(&mut pool), 12, |i| i * 2);
         assert_eq!(seq, pooled);
+    }
+
+    #[test]
+    fn resolve_threads_zero_means_all_cores() {
+        assert_eq!(resolve_threads(3), 3);
+        let all = resolve_threads(0);
+        assert!(all >= 1);
+        assert_eq!(
+            all,
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+        );
     }
 
     #[test]

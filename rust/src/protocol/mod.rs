@@ -1,0 +1,568 @@
+//! The per-worker protocol core — **one** implementation of the paper's
+//! per-link state machine, shared by both execution engines.
+//!
+//! [`WorkerCore`] owns everything a worker carries through a CQ-GGADMM
+//! run (Algorithm 2; same structure as Q-GADMM and GADMM):
+//!
+//! * the primal model `theta`, the dual `alpha`, the worker's own last
+//!   broadcast `hat_self` (what its neighbors hold for it), and one
+//!   `hat_nbrs` slot per neighbor (what it holds for each of them);
+//! * the primal solve (eqs. (21)/(22)) over the cached neighbor sum,
+//!   including the Jacobian (DCADMM) self-anchor `d_i * hat_self`;
+//! * the quantize → censor → broadcast pipeline with persistent
+//!   candidate/code scratch (no per-round allocation);
+//! * the dual update (eq. (23)) over the cached increment;
+//! * the censoring-aware **incremental** bookkeeping: the neighbor sum
+//!   and the dual increment are rebuilt only when some hat in the
+//!   worker's closed neighborhood committed since the last rebuild, by
+//!   the exact from-scratch loops — so the caches are bit-identical to
+//!   an always-recompute engine (`incremental = false`, locked by
+//!   `tests/incremental.rs`) and censored/dropped rounds cost nothing.
+//!
+//! The two drivers are deliberately thin:
+//! * [`crate::algs::Run`] — the sequential simulator — delivers committed
+//!   hats in-process as `f64` slices;
+//! * [`crate::coordinator`] — the sharded system engine — encodes the
+//!   committed payload to wire bytes ([`crate::coordinator::message`]),
+//!   and receivers decode straight into their [`WorkerCore`] slot.
+//!
+//! Both paths reconstruct bit-identical hats (the quantizer's sender-side
+//! reconstruction equals the receiver-side decode by construction, and
+//! full-precision payloads travel as `f64`), so the engines are locked
+//! trajectory-for-trajectory by `tests/coordinator_equivalence.rs` —
+//! including erasure injection through the shared [`crate::comm::Medium`]
+//! transmit path.
+
+use crate::algs::{AlgSpec, Problem, Schedule};
+use crate::censor::{gate, CensorConfig, Gate};
+use crate::comm::full_precision_bits;
+use crate::graph::Topology;
+use crate::quant::{payload_bits, Quantizer};
+use crate::solver::{Backend, LinearSolver, LogisticSolver, SubproblemSolver};
+use crate::util::axpy;
+use crate::util::rng::Pcg64;
+use std::sync::Arc;
+
+/// Everything a [`WorkerCore`] needs at construction.
+pub struct WorkerSetup {
+    pub id: usize,
+    pub d: usize,
+    pub rho: f64,
+    /// Neighbor ids in **ascending** order (the summation order both
+    /// engines share; [`Topology::neighbors`] is already sorted).
+    pub neighbors: Vec<usize>,
+    pub solver: Box<dyn SubproblemSolver>,
+    pub censor: Option<CensorConfig>,
+    pub quantizer: Option<Quantizer>,
+    /// Jacobian (DCADMM) schedules anchor the update on the worker's own
+    /// last broadcast: `nbr_sum += d_i * hat_self` (the solver then
+    /// carries the doubled penalty; see [`build_cores`]).
+    pub jacobian_anchor: bool,
+    /// Censoring-aware incremental cache maintenance (`false` forces the
+    /// from-scratch rebuild every phase — the differential baseline).
+    pub incremental: bool,
+}
+
+/// Borrowed view of the payload a committed broadcast carries; what the
+/// coordinator's wire encoder consumes (the simulator ships the hat
+/// itself).
+pub enum PayloadRef<'a> {
+    /// Full-precision model (unquantized schemes).
+    Full(&'a [f64]),
+    /// Quantized difference message (codes + adaptive `(R, b)` header).
+    Quantized { radius: f64, bits: u32, codes: &'a [u32] },
+}
+
+/// The shared per-worker protocol state machine.
+pub struct WorkerCore {
+    id: usize,
+    d: usize,
+    rho: f64,
+    neighbors: Vec<usize>,
+    solver: Box<dyn SubproblemSolver>,
+    censor: Option<CensorConfig>,
+    quantizer: Option<Quantizer>,
+    jacobian_anchor: bool,
+    incremental: bool,
+    theta: Vec<f64>,
+    alpha: Vec<f64>,
+    /// The worker's own last committed broadcast (theta-tilde / theta-hat
+    /// — exactly what every neighbor holds for this worker).
+    hat_self: Vec<f64>,
+    /// One slot per neighbor (parallel to `neighbors`): the last
+    /// reconstruction received from that neighbor (init 0, Alg. 2 l. 2).
+    hat_nbrs: Vec<Vec<f64>>,
+    /// First transmission is never censored (state initialization).
+    transmitted_once: bool,
+    /// Cached `sum_m hat_m` (+ Jacobian anchor), rebuilt while stale.
+    nbr_sum: Vec<f64>,
+    nbr_stale: bool,
+    /// Cached dual increment `sum_m (hat_self - hat_m)`, rebuilt when the
+    /// closed neighborhood changed since the last dual update.
+    dual_delta: Vec<f64>,
+    dual_stale: bool,
+    /// Persistent quantize/censor candidate buffer.
+    cand: Vec<f64>,
+    /// Persistent code scratch of the current candidate (cleared, never
+    /// reallocated after warm-up; only filled when `collect_codes`).
+    codes: Vec<u32>,
+    /// Whether `prepare_broadcast` materializes the candidate's integer
+    /// codes.  The coordinator's wire encoder needs them; the in-process
+    /// simulator does not and skips the per-coordinate collection
+    /// (bit-identical RNG/arithmetic either way — property-locked).
+    collect_codes: bool,
+    /// `(radius, bits)` of the current candidate when quantized.
+    last_quant: Option<(f64, u32)>,
+    /// Payload bits of a prepared-but-unresolved broadcast.
+    pending_bits: Option<u64>,
+}
+
+impl WorkerCore {
+    pub fn new(setup: WorkerSetup) -> WorkerCore {
+        let WorkerSetup {
+            id,
+            d,
+            rho,
+            neighbors,
+            solver,
+            censor,
+            quantizer,
+            jacobian_anchor,
+            incremental,
+        } = setup;
+        debug_assert!(
+            neighbors.windows(2).all(|w| w[0] < w[1]),
+            "neighbor ids must be strictly increasing"
+        );
+        let deg = neighbors.len();
+        WorkerCore {
+            id,
+            d,
+            rho,
+            hat_nbrs: vec![vec![0.0; d]; deg],
+            neighbors,
+            solver,
+            censor,
+            quantizer,
+            jacobian_anchor,
+            incremental,
+            theta: vec![0.0; d],
+            alpha: vec![0.0; d],
+            hat_self: vec![0.0; d],
+            transmitted_once: false,
+            nbr_sum: vec![0.0; d],
+            // mirror the run engine's seed state: the first fill always
+            // rebuilds (from all-zero hats, so the value is zero anyway)
+            nbr_stale: true,
+            dual_delta: vec![0.0; d],
+            // all hats are zero, so the zero increment is already correct
+            dual_stale: false,
+            cand: vec![0.0; d],
+            codes: Vec::new(),
+            collect_codes: false,
+            last_quant: None,
+            pending_bits: None,
+        }
+    }
+
+    /// Opt in to code collection (see the `collect_codes` field); the
+    /// coordinator calls this once per core at spawn.
+    pub fn enable_code_collection(&mut self) {
+        self.collect_codes = true;
+    }
+
+    /// Primal update (eqs. (21)/(22)): refresh the cached neighbor sum if
+    /// stale, then solve the penalized subproblem in place over `theta`
+    /// (which doubles as the warm start).  Allocation-free.
+    ///
+    /// Incremental engine: a clean cache's inputs are unchanged since its
+    /// last rebuild, and a stale cache is rebuilt by this exact loop — so
+    /// the value is bit-identical to a from-scratch recompute either way.
+    pub fn primal_update(&mut self) {
+        if !self.incremental || self.nbr_stale {
+            self.nbr_sum.iter_mut().for_each(|v| *v = 0.0);
+            for hat in &self.hat_nbrs {
+                axpy(&mut self.nbr_sum, 1.0, hat);
+            }
+            if self.jacobian_anchor {
+                axpy(&mut self.nbr_sum, self.neighbors.len() as f64, &self.hat_self);
+            }
+            self.nbr_stale = false;
+        }
+        self.solver.update_into(&self.alpha, &self.nbr_sum, &mut self.theta);
+    }
+
+    /// Transmission pipeline (quantize → censor) at censoring iteration
+    /// `k_plus_1`.  Builds the candidate hat in the persistent scratch
+    /// (quantizers also advance their `(R, b)` state and RNG stream —
+    /// exactly once per phase, committed or not) and gates it.  Returns
+    /// the payload bits when the worker decided to broadcast; the driver
+    /// must then resolve the attempt with [`WorkerCore::commit_pending`]
+    /// (delivered) or [`WorkerCore::abort_pending`] (erasure).
+    pub fn prepare_broadcast(&mut self, k_plus_1: u64) -> Option<u64> {
+        debug_assert!(self.pending_bits.is_none(), "unresolved broadcast");
+        let payload_bits = match &mut self.quantizer {
+            Some(q) => {
+                // quantize the difference against the last state the
+                // neighbors hold (hat_self) so sender/receiver stay in sync
+                let (radius, bits) = if self.collect_codes {
+                    q.quantize_with_codes(
+                        &self.theta,
+                        &self.hat_self,
+                        &mut self.cand,
+                        &mut self.codes,
+                    )
+                } else {
+                    q.quantize_into(&self.theta, &self.hat_self, &mut self.cand)
+                };
+                self.last_quant = Some((radius, bits));
+                payload_bits(self.d, bits)
+            }
+            None => {
+                self.cand.copy_from_slice(&self.theta);
+                self.last_quant = None;
+                full_precision_bits(self.d)
+            }
+        };
+        let decision = match (&self.censor, self.transmitted_once) {
+            // first broadcast always goes out (state init)
+            (_, false) => Gate::Transmit,
+            (None, _) => Gate::Transmit,
+            (Some(c), true) => gate(c, k_plus_1, &self.hat_self, &self.cand),
+        };
+        if decision == Gate::Transmit {
+            self.pending_bits = Some(payload_bits);
+            Some(payload_bits)
+        } else {
+            None
+        }
+    }
+
+    /// Payload bits of the prepared-but-unresolved broadcast, if any.
+    pub fn pending_bits(&self) -> Option<u64> {
+        self.pending_bits
+    }
+
+    /// The broadcast was delivered: commit the candidate as the new
+    /// `hat_self` and stale the caches its commit invalidates (the dual
+    /// increment always; the neighbor sum only under the Jacobian anchor
+    /// — neighbors stale their own caches in [`WorkerCore::deliver_with`]).
+    pub fn commit_pending(&mut self) {
+        debug_assert!(self.pending_bits.is_some(), "commit without a pending broadcast");
+        self.pending_bits = None;
+        self.hat_self.copy_from_slice(&self.cand);
+        self.transmitted_once = true;
+        self.dual_stale = true;
+        if self.jacobian_anchor {
+            self.nbr_stale = true;
+        }
+    }
+
+    /// The broadcast was lost (erasure with perfect feedback): the cost
+    /// was paid by the medium, but state rolls back — neighbors keep the
+    /// stale value and `hat_self` is unchanged, so every cache stays
+    /// valid.  (The quantizer state has already advanced; both engines
+    /// share that behavior by construction.)
+    pub fn abort_pending(&mut self) {
+        debug_assert!(self.pending_bits.is_some(), "abort without a pending broadcast");
+        self.pending_bits = None;
+    }
+
+    /// Payload of the most recently prepared candidate (valid after
+    /// [`WorkerCore::commit_pending`]; what the wire encoder serializes).
+    pub fn committed_payload(&self) -> PayloadRef<'_> {
+        match self.last_quant {
+            Some((radius, bits)) => {
+                debug_assert!(
+                    self.codes.len() == self.d,
+                    "codes not collected: call enable_code_collection at setup"
+                );
+                PayloadRef::Quantized { radius, bits, codes: &self.codes }
+            }
+            None => PayloadRef::Full(&self.hat_self),
+        }
+    }
+
+    /// Receive a neighbor's committed hat in-process (the simulator's
+    /// delivery path): overwrite the slot with the sender's exact `f64`
+    /// reconstruction.
+    pub fn deliver(&mut self, from: usize, hat: &[f64]) {
+        self.deliver_with(from, |slot| slot.copy_from_slice(hat));
+    }
+
+    /// Receive a neighbor's broadcast through an arbitrary decoder: `f`
+    /// gets mutable access to the stored slot for `from` (which holds the
+    /// shared reference the quantized decode reconstructs against) and
+    /// the caches invalidated by the delivery are staled.  The
+    /// coordinator's wire path decodes straight into the slot here —
+    /// no intermediate allocation.
+    pub fn deliver_with<F: FnOnce(&mut [f64])>(&mut self, from: usize, f: F) {
+        let idx = match self.neighbors.binary_search(&from) {
+            Ok(idx) => idx,
+            Err(_) => panic!("worker {}: delivery from non-neighbor {from}", self.id),
+        };
+        f(&mut self.hat_nbrs[idx]);
+        self.nbr_stale = true;
+        self.dual_stale = true;
+    }
+
+    /// Dual update (eq. (23)): rebuild the cached increment if a hat in
+    /// the closed neighborhood committed since the last dual update, then
+    /// integrate `alpha += rho * sum_m (hat_self - hat_m)`.  The O(d)
+    /// integration runs every iteration (duals accumulate even across
+    /// censored rounds); the O(deg * d) rebuild only when needed.
+    pub fn dual_update(&mut self) {
+        if !self.incremental || self.dual_stale {
+            self.dual_delta.iter_mut().for_each(|v| *v = 0.0);
+            for hat in &self.hat_nbrs {
+                for j in 0..self.d {
+                    self.dual_delta[j] += self.hat_self[j] - hat[j];
+                }
+            }
+            self.dual_stale = false;
+        }
+        axpy(&mut self.alpha, self.rho, &self.dual_delta);
+    }
+
+    /// Local objective `f_n(theta_n)` (no penalty terms).
+    pub fn loss(&self) -> f64 {
+        self.solver.loss(&self.theta)
+    }
+
+    pub fn id(&self) -> usize {
+        self.id
+    }
+
+    pub fn neighbors(&self) -> &[usize] {
+        &self.neighbors
+    }
+
+    pub fn theta(&self) -> &[f64] {
+        &self.theta
+    }
+
+    pub fn alpha(&self) -> &[f64] {
+        &self.alpha
+    }
+
+    pub fn hat_self(&self) -> &[f64] {
+        &self.hat_self
+    }
+
+    /// Cached neighbor sum (tests/diagnostics); under the incremental
+    /// engine, bit-identical to a from-scratch recompute at the point of
+    /// this worker's latest primal update.
+    pub fn neighbor_sum(&self) -> &[f64] {
+        &self.nbr_sum
+    }
+
+    /// Cached dual increment (tests/diagnostics); same bit-identity
+    /// guarantee as [`WorkerCore::neighbor_sum`].
+    pub fn dual_delta(&self) -> &[f64] {
+        &self.dual_delta
+    }
+}
+
+/// Construction options shared by both drivers.
+#[derive(Clone, Debug)]
+pub struct ProtocolConfig {
+    pub backend: Backend,
+    /// Artifact directory for the PJRT backend.
+    pub artifacts_dir: Option<std::path::PathBuf>,
+    pub incremental: bool,
+    /// Seed for the quantizer streams (and, downstream, the link model).
+    pub seed: u64,
+}
+
+/// Build the per-worker solver fleet (optionally fanned out over an
+/// existing pool: the Gram + Cholesky setup is the expensive part of
+/// construction and embarrassingly parallel).
+fn build_solvers(
+    problem: &Problem,
+    topo: &Topology,
+    cfg: &ProtocolConfig,
+    schedule: Schedule,
+    pool: Option<&mut crate::parallel::WorkerPool>,
+) -> Vec<Box<dyn SubproblemSolver>> {
+    use crate::config::Task;
+    let build_one = |i: usize| -> Box<dyn SubproblemSolver> {
+        let sh = &problem.shards[i];
+        // Jacobian updates carry the doubled penalty rho*d_i||theta||^2
+        // of DCADMM (see `WorkerCore::primal_update`'s anchor); the
+        // solver's quadratic coefficient is rho*degree/2, so feed it 2*d_i.
+        let degree = match schedule {
+            Schedule::Alternating => topo.degree(i),
+            Schedule::Jacobian => 2 * topo.degree(i),
+        };
+        match (cfg.backend, problem.task) {
+            (Backend::Native, Task::Linear) => Box::new(LinearSolver::from_shard(
+                Arc::clone(sh),
+                problem.rho,
+                degree,
+            )),
+            (Backend::Native, Task::Logistic) => Box::new(LogisticSolver::from_shard(
+                Arc::clone(sh),
+                problem.mu0,
+                problem.rho,
+                degree,
+            )),
+            (Backend::Pjrt, task) => crate::runtime::pjrt_solver(
+                cfg.artifacts_dir
+                    .as_deref()
+                    .expect("PJRT backend needs artifacts_dir"),
+                task,
+                sh,
+                problem.rho,
+                problem.mu0,
+                degree,
+            )
+            .expect("failed to build PJRT solver"),
+        }
+    };
+    crate::parallel::map_maybe_pool(pool, topo.n(), build_one)
+}
+
+/// Build the worker fleet for one run.  This is the **single** place both
+/// engines construct their state from, so they cannot drift: quantizer
+/// RNG streams are forked from `Pcg64::new(seed ^ 0xA16_0001)` in worker
+/// order (only for quantized specs — unquantized specs leave the root
+/// stream untouched), and the leftover root generator is returned for the
+/// link model's erasure draws (same stream position in both engines).
+pub fn build_cores(
+    problem: &Problem,
+    topo: &Topology,
+    spec: &AlgSpec,
+    cfg: &ProtocolConfig,
+    pool: Option<&mut crate::parallel::WorkerPool>,
+) -> (Vec<WorkerCore>, Pcg64) {
+    assert_eq!(problem.shards.len(), topo.n());
+    let d = problem.d;
+    let mut rng = Pcg64::new(cfg.seed ^ 0xA16_0001);
+    let solvers = build_solvers(problem, topo, cfg, spec.schedule, pool);
+    let cores = solvers
+        .into_iter()
+        .enumerate()
+        .map(|(i, solver)| {
+            WorkerCore::new(WorkerSetup {
+                id: i,
+                d,
+                rho: problem.rho,
+                neighbors: topo.neighbors(i).to_vec(),
+                solver,
+                censor: spec.censor,
+                quantizer: spec
+                    .quant
+                    .as_ref()
+                    .map(|q| Quantizer::new(*q, rng.fork(i as u64))),
+                jacobian_anchor: spec.schedule == Schedule::Jacobian,
+                incremental: cfg.incremental,
+            })
+        })
+        .collect();
+    (cores, rng)
+}
+
+impl Default for ProtocolConfig {
+    fn default() -> Self {
+        ProtocolConfig {
+            backend: Backend::Native,
+            artifacts_dir: None,
+            incremental: true,
+            seed: 7,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic;
+
+    fn two_cores() -> Vec<WorkerCore> {
+        let topo = Topology::chain(2);
+        let ds = synthetic::linear_dataset(24, 3, 5);
+        let p = Problem::new(&ds, &topo, 1.0, 0.0, 5);
+        let (cores, _) =
+            build_cores(&p, &topo, &AlgSpec::ggadmm(), &ProtocolConfig::default(), None);
+        cores
+    }
+
+    #[test]
+    fn first_broadcast_never_censored() {
+        let topo = Topology::chain(2);
+        let ds = synthetic::linear_dataset(24, 3, 5);
+        let p = Problem::new(&ds, &topo, 1.0, 0.0, 5);
+        // huge tau0 would censor everything after state init
+        let spec = AlgSpec::c_ggadmm(1e9, 0.9);
+        let (mut cores, _) =
+            build_cores(&p, &topo, &spec, &ProtocolConfig::default(), None);
+        cores[0].primal_update();
+        assert!(cores[0].prepare_broadcast(1).is_some(), "state init must transmit");
+        cores[0].commit_pending();
+        cores[0].primal_update();
+        assert!(
+            cores[0].prepare_broadcast(2).is_none(),
+            "tau0 = 1e9 must censor every later round"
+        );
+    }
+
+    #[test]
+    fn commit_delivers_exact_hat_and_stales_receiver() {
+        let mut cores = two_cores();
+        cores[0].primal_update();
+        let bits = cores[0].prepare_broadcast(1).expect("must transmit");
+        assert_eq!(bits, full_precision_bits(3));
+        assert_eq!(cores[0].pending_bits(), Some(bits));
+        cores[0].commit_pending();
+        let hat: Vec<f64> = cores[0].hat_self().to_vec();
+        assert_eq!(hat, cores[0].theta(), "full-precision hat is theta exactly");
+        cores[1].deliver(0, &hat);
+        // the receiver's neighbor sum must now reflect the delivery
+        cores[1].primal_update();
+        assert_eq!(cores[1].neighbor_sum(), &hat[..]);
+    }
+
+    #[test]
+    fn abort_rolls_back_nothing() {
+        let mut cores = two_cores();
+        cores[0].primal_update();
+        cores[0].prepare_broadcast(1).expect("must transmit");
+        let hat_before: Vec<f64> = cores[0].hat_self().to_vec();
+        cores[0].abort_pending();
+        assert_eq!(cores[0].hat_self(), &hat_before[..], "dropped broadcast keeps hat");
+        // erasure does not count as the first transmission: the next
+        // round must again transmit unconditionally
+        cores[0].primal_update();
+        assert!(cores[0].prepare_broadcast(2).is_some());
+    }
+
+    #[test]
+    #[should_panic(expected = "non-neighbor")]
+    fn delivery_from_non_neighbor_panics() {
+        let mut cores = two_cores();
+        let hat = vec![0.0; 3];
+        cores[0].deliver(5, &hat);
+    }
+
+    #[test]
+    fn quantized_payload_exposes_codes() {
+        let topo = Topology::chain(2);
+        let ds = synthetic::linear_dataset(24, 3, 5);
+        let p = Problem::new(&ds, &topo, 1.0, 0.0, 5);
+        let spec = AlgSpec::q_ggadmm(0.995, 2);
+        let (mut cores, _) =
+            build_cores(&p, &topo, &spec, &ProtocolConfig::default(), None);
+        cores[0].enable_code_collection();
+        cores[0].primal_update();
+        let bits = cores[0].prepare_broadcast(1).expect("must transmit");
+        assert_eq!(bits, crate::quant::payload_bits(3, 2));
+        cores[0].commit_pending();
+        match cores[0].committed_payload() {
+            PayloadRef::Quantized { bits, codes, .. } => {
+                assert_eq!(bits, 2);
+                assert_eq!(codes.len(), 3);
+            }
+            PayloadRef::Full(_) => panic!("expected a quantized payload"),
+        }
+    }
+}

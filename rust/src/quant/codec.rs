@@ -12,19 +12,21 @@
 
 use super::QuantMessage;
 
-/// Word-level little-endian bit accumulator.
+/// Word-level little-endian bit accumulator over a caller-provided
+/// buffer (so hot paths can reuse one allocation across messages).
 ///
 /// Invariant: fewer than 32 pending bits after every `push`, so a push of
 /// up to 32 bits never overflows the 64-bit accumulator.
-struct BitWriter {
-    buf: Vec<u8>,
+struct BitWriter<'a> {
+    buf: &'a mut Vec<u8>,
     acc: u64,
     pending: u32,
 }
 
-impl BitWriter {
-    fn with_capacity(bytes: usize) -> BitWriter {
-        BitWriter { buf: Vec::with_capacity(bytes), acc: 0, pending: 0 }
+impl<'a> BitWriter<'a> {
+    fn over(buf: &'a mut Vec<u8>, reserve_bytes: usize) -> BitWriter<'a> {
+        buf.reserve(reserve_bytes);
+        BitWriter { buf, acc: 0, pending: 0 }
     }
 
     /// Append the `width` low bits of `value` (width in 1..=32).
@@ -43,13 +45,12 @@ impl BitWriter {
     }
 
     /// Flush the trailing partial word; total bytes = ceil(bits / 8).
-    fn finish(mut self) -> Vec<u8> {
+    fn finish(mut self) {
         while self.pending > 0 {
             self.buf.push(self.acc as u8);
             self.acc >>= 8;
             self.pending = self.pending.saturating_sub(8);
         }
-        self.buf
     }
 }
 
@@ -104,20 +105,30 @@ impl<'a> BitReader<'a> {
     }
 }
 
+/// Encode a message from its parts, **appending** to `out` (the
+/// coordinator's alloc-free wire path: one persistent buffer per worker,
+/// cleared by the caller, capacity retained across rounds).  Byte-for-byte
+/// identical to [`encode`].
+pub fn encode_parts_into(radius: f64, bits: u32, codes: &[u32], out: &mut Vec<u8>) {
+    let payload = super::payload_bits(codes.len(), bits);
+    let mut w = BitWriter::over(out, (payload as usize).div_ceil(8));
+    w.push((radius as f32).to_bits() as u64, 32);
+    w.push(bits as u64, 32);
+    for &c in codes {
+        debug_assert!(
+            bits >= 32 || (c as u64) < (1u64 << bits),
+            "code overflows bit width"
+        );
+        w.push(c as u64, bits);
+    }
+    w.finish();
+}
+
 /// Encode a message into its wire bytes. The *bit* length is exactly
 /// `msg.payload_bits()`; the byte vector rounds up to whole bytes.
 pub fn encode(msg: &QuantMessage) -> Vec<u8> {
-    let mut w = BitWriter::with_capacity((msg.payload_bits() as usize).div_ceil(8));
-    w.push((msg.radius as f32).to_bits() as u64, 32);
-    w.push(msg.bits as u64, 32);
-    for &c in &msg.codes {
-        debug_assert!(
-            msg.bits >= 32 || (c as u64) < (1u64 << msg.bits),
-            "code overflows bit width"
-        );
-        w.push(c as u64, msg.bits);
-    }
-    let buf = w.finish();
+    let mut buf = Vec::new();
+    encode_parts_into(msg.radius, msg.bits, &msg.codes, &mut buf);
     debug_assert_eq!(buf.len(), (msg.payload_bits() as usize).div_ceil(8));
     buf
 }
@@ -136,6 +147,34 @@ pub fn decode(buf: &[u8], d: usize) -> Option<QuantMessage> {
         codes.push(r.read(bits)? as u32);
     }
     Some(QuantMessage { codes, radius, bits })
+}
+
+/// Streaming decode + eq. (20) reconstruction in one pass: `stored` holds
+/// the shared reference (the last value the receiver keeps for the
+/// sender) and is overwritten coordinate-by-coordinate with the
+/// reconstruction, without materializing a code vector.  Bit-identical to
+/// [`decode`] followed by [`QuantMessage::reconstruct_into`] (property
+/// test below) — the coordinator's receive path is allocation-free
+/// through here.  Returns `(radius, bits)`.
+///
+/// On `None` (truncated/garbled input) a prefix of `stored` may already
+/// be overwritten; callers on trusted in-process bytes treat `None` as
+/// fatal.
+pub fn decode_reconstruct_into(buf: &[u8], stored: &mut [f64]) -> Option<(f64, u32)> {
+    let mut r = BitReader::new(buf);
+    let radius = f32::from_bits(r.read(32)? as u32) as f64;
+    let bits = r.read(32)? as u32;
+    if bits == 0 || bits > 32 || !(radius.is_finite()) || radius < 0.0 {
+        return None;
+    }
+    // same expression as `QuantMessage::step` so the arithmetic is
+    // bit-identical to the two-step decode
+    let delta = 2.0 * radius / ((1u64 << bits) - 1) as f64;
+    for slot in stored.iter_mut() {
+        let q = r.read(bits)? as u32;
+        *slot = *slot + delta * q as f64 - radius;
+    }
+    Some((radius, bits))
 }
 
 #[cfg(test)]
@@ -176,6 +215,62 @@ mod tests {
             assert_eq!(bytes.len(), (msg.payload_bits() as usize).div_ceil(8));
             assert_eq!(decode(&bytes, d).expect("decode"), msg);
         });
+    }
+
+    #[test]
+    fn encode_parts_into_matches_encode_and_reuses_capacity() {
+        check("encode_parts_into == encode", 80, |g| {
+            let bits = g.usize_in(1, 32) as u32;
+            let d = g.usize_in(0, 96);
+            let mask = if bits == 32 { u32::MAX } else { (1u32 << bits) - 1 };
+            let codes: Vec<u32> = (0..d).map(|_| g.u64() as u32 & mask).collect();
+            let radius = (g.f64_in(0.0, 1e4) as f32) as f64;
+            let msg = QuantMessage { codes, radius, bits };
+            let mut buf = Vec::new();
+            buf.clear();
+            encode_parts_into(msg.radius, msg.bits, &msg.codes, &mut buf);
+            assert_eq!(buf, encode(&msg));
+            // second round over the same buffer: clear + append again
+            buf.clear();
+            let cap = buf.capacity();
+            encode_parts_into(msg.radius, msg.bits, &msg.codes, &mut buf);
+            assert_eq!(buf, encode(&msg));
+            assert!(buf.capacity() >= cap, "capacity must be retained");
+        });
+    }
+
+    #[test]
+    fn decode_reconstruct_into_matches_two_step_decode() {
+        check("decode_reconstruct_into == decode + reconstruct_into", 100, |g| {
+            let bits = g.usize_in(1, 24) as u32;
+            let d = g.usize_in(1, 96);
+            let mask = if bits == 32 { u32::MAX } else { (1u32 << bits) - 1 };
+            let codes: Vec<u32> = (0..d).map(|_| g.u64() as u32 & mask).collect();
+            let radius = (g.f64_in(1e-9, 1e3) as f32) as f64;
+            let msg = QuantMessage { codes, radius, bits };
+            let bytes = encode(&msg);
+            let reference = g.normal_vec(d);
+
+            let mut two_step = reference.clone();
+            decode(&bytes, d).expect("decode").reconstruct_into(&mut two_step);
+
+            let mut fused = reference.clone();
+            let (r, b) = decode_reconstruct_into(&bytes, &mut fused).expect("fused decode");
+            assert_eq!(r.to_bits(), msg.radius.to_bits());
+            assert_eq!(b, msg.bits);
+            for (a, z) in two_step.iter().zip(&fused) {
+                assert_eq!(a.to_bits(), z.to_bits());
+            }
+        });
+    }
+
+    #[test]
+    fn decode_reconstruct_into_rejects_truncation() {
+        let msg = QuantMessage { codes: vec![1, 2, 3, 4], radius: 0.5, bits: 5 };
+        let bytes = encode(&msg);
+        let mut stored = vec![0.0; 4];
+        assert!(decode_reconstruct_into(&bytes[..bytes.len() - 1], &mut stored).is_none());
+        assert!(decode_reconstruct_into(&[], &mut stored).is_none());
     }
 
     #[test]

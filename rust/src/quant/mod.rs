@@ -217,6 +217,23 @@ impl Quantizer {
         self.quantize_core(value, reference, recon, None)
     }
 
+    /// Allocation-free variant that also collects the integer codes into a
+    /// caller-provided scratch vector (cleared here, capacity retained) —
+    /// the protocol core uses this so the wire encoder can serialize the
+    /// candidate without materializing a [`QuantMessage`].  Bit-identical
+    /// RNG draws, reconstruction and `(R, b)` state evolution to
+    /// [`Quantizer::quantize`].  Returns `(radius, bits)`.
+    pub fn quantize_with_codes(
+        &mut self,
+        value: &[f64],
+        reference: &[f64],
+        recon: &mut [f64],
+        codes: &mut Vec<u32>,
+    ) -> (f64, u32) {
+        codes.clear();
+        self.quantize_core(value, reference, recon, Some(codes))
+    }
+
     /// Step size `Delta^k` that a transmission with this radius would use.
     pub fn step_size(&self, radius: f64, bits: u32) -> f64 {
         2.0 * radius / ((1u64 << bits) - 1) as f64
@@ -372,6 +389,35 @@ mod tests {
                     assert_eq!(a.to_bits(), b.to_bits());
                 }
                 assert_eq!(msg.payload_bits(), bits as u64 * d as u64 + 64);
+                reference = recon_a;
+            }
+        });
+    }
+
+    #[test]
+    fn quantize_with_codes_matches_quantize_bit_exactly() {
+        // the protocol core's wire-capable variant: same draws, same
+        // reconstruction, same state, and exactly the codes the message
+        // would carry — across multiple rounds on one reused scratch
+        check("quantize_with_codes == quantize", 60, |g| {
+            let d = g.usize_in(1, 64);
+            let seed = g.u64();
+            let mut qa = mk(3, 0.9, seed);
+            let mut qb = mk(3, 0.9, seed);
+            let mut reference = g.normal_vec(d);
+            let mut recon_b = vec![0.0; d];
+            let mut codes_b: Vec<u32> = Vec::new();
+            for _ in 0..4 {
+                let v = g.normal_vec(d);
+                let (msg, recon_a) = qa.quantize(&v, &reference);
+                let (radius, bits) =
+                    qb.quantize_with_codes(&v, &reference, &mut recon_b, &mut codes_b);
+                assert_eq!(radius.to_bits(), msg.radius.to_bits());
+                assert_eq!(bits, msg.bits);
+                assert_eq!(codes_b, msg.codes);
+                for (a, b) in recon_a.iter().zip(&recon_b) {
+                    assert_eq!(a.to_bits(), b.to_bits());
+                }
                 reference = recon_a;
             }
         });
