@@ -1,0 +1,87 @@
+//! Topology-zoo smoke: every generator family at N = 64, run through
+//! **both** engines (sequential simulator + sharded coordinator) and
+//! asserted bit-for-bit identical — the generalized-topology analogue of
+//! `coordinator_scale`.  CI runs this on every PR (see
+//! `.github/workflows/ci.yml`, "topology zoo smoke").
+//!
+//! Run with: `cargo run --release --example topology_zoo`
+//! Env: `ZOO_WORKERS` (default 64), `ZOO_THREADS` (default 4),
+//! `ZOO_ITERS` (default 10).
+
+use cq_ggadmm::algs::{AlgSpec, Problem, Run, RunOptions};
+use cq_ggadmm::coordinator::{Coordinator, CoordinatorOptions};
+use cq_ggadmm::data::synthetic;
+use cq_ggadmm::experiments::matrix::default_families;
+use cq_ggadmm::graph::gen;
+
+fn env_usize(key: &str, default: usize) -> usize {
+    std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn main() {
+    let seed = 17;
+    let workers = env_usize("ZOO_WORKERS", 64);
+    let threads = env_usize("ZOO_THREADS", 4);
+    let iters = env_usize("ZOO_ITERS", 10) as u64;
+
+    let ds = synthetic::linear_dataset(workers * 10, 6, seed);
+    let spec = AlgSpec::cq_ggadmm(0.1, 0.85, 0.995, 2);
+    println!(
+        "{:<16} {:>6} {:>8} {:>12} {:>12} {:>12}",
+        "topology", "edges", "dropped", "final gap", "Mbits", "energy (J)"
+    );
+    for family in default_families() {
+        let b = gen::build(&family, workers, seed).unwrap_or_else(|e| panic!("{family}: {e}"));
+        assert!(b.topology.is_connected(), "{family}: disconnected");
+        assert!(b.topology.is_bipartite_consistent(), "{family}");
+        let problem = Problem::new(&ds, &b.topology, 5.0, 0.0, seed);
+
+        let mut sim = Run::new(
+            problem.clone(),
+            b.topology.clone(),
+            spec.clone(),
+            RunOptions { seed, ..RunOptions::default() },
+        );
+        let ts = sim.run(iters);
+        let coord = Coordinator::spawn(
+            problem,
+            b.topology.clone(),
+            spec.clone(),
+            CoordinatorOptions { seed, threads, ..CoordinatorOptions::default() },
+        );
+        let tc = coord.run(iters);
+
+        // both engines, bit for bit, on every family
+        assert_eq!(ts.points.len(), tc.points.len(), "{family}: trace length");
+        for (a, c) in ts.points.iter().zip(&tc.points) {
+            assert_eq!(a.cum_rounds, c.cum_rounds, "{family} iter {}", a.iteration);
+            assert_eq!(a.cum_bits, c.cum_bits, "{family} iter {}", a.iteration);
+            assert_eq!(
+                a.loss_gap.to_bits(),
+                c.loss_gap.to_bits(),
+                "{family} iter {}: loss gap",
+                a.iteration
+            );
+            assert_eq!(
+                a.cum_energy_j.to_bits(),
+                c.cum_energy_j.to_bits(),
+                "{family} iter {}: energy",
+                a.iteration
+            );
+        }
+        let last = ts.points.last().expect("non-empty trace");
+        assert!(last.loss_gap.is_finite(), "{family}: diverged");
+        assert!(last.cum_energy_j.is_finite(), "{family}: energy not finite");
+        assert!(last.cum_rounds > 0, "{family}: nothing transmitted");
+        println!(
+            "{:<16} {:>6} {:>8} {:>12.3e} {:>12.3} {:>12.3e}",
+            family.label(),
+            b.topology.edges().len(),
+            b.dropped_edges,
+            last.loss_gap,
+            last.cum_bits as f64 / 1e6,
+            last.cum_energy_j
+        );
+    }
+    println!("topology zoo OK ({workers} workers, both engines bit-identical)");
+}

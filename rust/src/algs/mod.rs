@@ -79,7 +79,7 @@ impl AlgSpec {
             name: "Q-GGADMM".into(),
             schedule: Schedule::Alternating,
             censor: None,
-            quant: Some(QuantConfig { bits0, omega, ..QuantConfig::default() }),
+            quant: Some(Self::quant_cfg(omega, bits0)),
         }
     }
 
@@ -88,8 +88,16 @@ impl AlgSpec {
             name: "CQ-GGADMM".into(),
             schedule: Schedule::Alternating,
             censor: Some(CensorConfig { tau0, xi }),
-            quant: Some(QuantConfig { bits0, omega, ..QuantConfig::default() }),
+            quant: Some(Self::quant_cfg(omega, bits0)),
         }
+    }
+
+    /// Quantizer config with the bit cap raised to cover `bits0` (a
+    /// `bits0` above the default cap but within the codec's 32-bit wire
+    /// limit is a valid request, not a construction panic).
+    fn quant_cfg(omega: f64, bits0: u32) -> QuantConfig {
+        let default_cap = QuantConfig::default().max_bits;
+        QuantConfig { bits0, omega, max_bits: default_cap.max(bits0) }
     }
 
     pub fn c_admm(tau0: f64, xi: f64) -> AlgSpec {

@@ -48,6 +48,10 @@ impl EnergyModel {
     /// `concurrent_fraction` is the fraction of workers transmitting in a
     /// slot: 0.5 for alternating GGADMM schedules (=> 4/N MHz each),
     /// 1.0 for Jacobian C-ADMM (=> 2/N MHz each).
+    ///
+    /// The transmitter count is clamped to >= 1: a fraction small enough
+    /// to round the count to zero would otherwise hand one worker an
+    /// infinite bandwidth share and poison every downstream energy total.
     pub fn new(params: EnergyParams, n_workers: usize, concurrent_fraction: f64) -> EnergyModel {
         assert!(n_workers >= 1);
         assert!(concurrent_fraction > 0.0 && concurrent_fraction <= 1.0);
@@ -63,19 +67,37 @@ impl EnergyModel {
         bits as f64 / self.params.slot_s
     }
 
+    /// Saturation ceiling for one transmission's power in watts.  Far
+    /// beyond any physical scenario, yet small enough that cumulative
+    /// sums over arbitrarily many saturated transmissions stay finite
+    /// (`f64` overflows only past ~1.8e308).
+    pub const SATURATION_W: f64 = 1e30;
+
     /// Transmit power for `bits` over a bottleneck link of `distance_m`.
+    ///
+    /// Total: the Shannon term `2^{R/B} - 1` overflows `f64` once
+    /// `R/B > 1024` (large payloads over a thin bandwidth share), which
+    /// used to return `inf` — and `NaN` at `distance_m == 0` (the
+    /// `0 * inf` limit).  Both degenerate corners now resolve to their
+    /// physical limits: zero-length links and empty payloads cost
+    /// nothing, and an overflowing power saturates at
+    /// [`EnergyModel::SATURATION_W`] so per-run cumulative energy
+    /// accounting stays finite (ordering is non-strict once saturated).
     pub fn power_w(&self, bits: u64, distance_m: f64) -> f64 {
+        if bits == 0 || distance_m <= 0.0 {
+            return 0.0;
+        }
         let b = self.bandwidth_hz;
         let r = self.rate_bps(bits);
-        self.params.slot_s
-            * distance_m
-            * distance_m
-            * self.params.n0_w_per_hz
-            * b
-            * ((2f64).powf(r / b) - 1.0)
+        let gain = self.params.slot_s * distance_m * distance_m * self.params.n0_w_per_hz * b;
+        // gain is finite > 0 and snr >= 0, so the product is never NaN;
+        // min() turns an overflowed inf into the finite ceiling
+        let snr = (2f64).powf(r / b) - 1.0;
+        (gain * snr).min(Self::SATURATION_W)
     }
 
-    /// Energy of one transmission: `E = P * tau`.
+    /// Energy of one transmission: `E = P * tau` (finite for every
+    /// `bits`/`distance_m`, see [`EnergyModel::power_w`]).
     pub fn energy_j(&self, bits: u64, distance_m: f64) -> f64 {
         self.power_w(bits, distance_m) * self.params.slot_s
     }
@@ -109,6 +131,42 @@ mod tests {
             assert!(m.energy_j(bits + 1000, dist) > e);
             assert!(m.energy_j(bits, dist + 50.0) > e);
         });
+    }
+
+    #[test]
+    fn energy_finite_for_every_payload_and_distance() {
+        // regression: bits up to the full-precision payload 32*d of a
+        // large model over a thin bandwidth share used to overflow
+        // `2^{R/B}` to inf (and to NaN at distance 0)
+        check("energy_j finite for bits in 0..=32d, distance >= 0", 80, |g| {
+            let n = g.usize_in(1, 64);
+            let frac = g.f64_in(0.01, 1.0);
+            let m = EnergyModel::new(EnergyParams::default(), n, frac);
+            assert!(m.bandwidth_hz.is_finite() && m.bandwidth_hz > 0.0);
+            let d = g.usize_in(1, 20_000);
+            let bits = g.usize_in(0, 32 * d) as u64;
+            let dist = if g.bool(0.25) { 0.0 } else { g.f64_in(0.0, 700.0) };
+            let p = m.power_w(bits, dist);
+            let e = m.energy_j(bits, dist);
+            assert!(p.is_finite() && p >= 0.0, "power {p} bits={bits} dist={dist}");
+            assert!(e.is_finite() && e >= 0.0, "energy {e} bits={bits} dist={dist}");
+        });
+    }
+
+    #[test]
+    fn degenerate_corners_have_physical_limits() {
+        let m = EnergyModel::new(EnergyParams::default(), 24, 0.5);
+        // empty payloads and zero-length links cost nothing
+        assert_eq!(m.energy_j(0, 300.0), 0.0);
+        assert_eq!(m.energy_j(32 * 100_000, 0.0), 0.0);
+        // an overflowing SNR saturates finite instead of going inf,
+        // and stays ordered above any representable payload
+        let huge = m.energy_j(32 * 100_000, 300.0);
+        assert!(huge.is_finite());
+        assert!(huge > m.energy_j(32 * 50, 300.0));
+        // a tiny concurrent fraction clamps to one transmitter
+        let tiny = EnergyModel::new(EnergyParams::default(), 1, 0.01);
+        assert!((tiny.bandwidth_hz - EnergyParams::default().total_bandwidth_hz).abs() < 1e-9);
     }
 
     #[test]

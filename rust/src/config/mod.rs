@@ -195,6 +195,170 @@ fn split_top_level(s: &str) -> Vec<&str> {
 // Typed experiment configuration
 // ---------------------------------------------------------------------------
 
+/// A topology family + its parameters (the paper's "generalized" G):
+/// every family is built deterministically from `(spec, n, seed)` by
+/// [`crate::graph::gen::build`] and turned into a valid head/tail
+/// instance by the bipartition pass.
+///
+/// CLI / TOML syntax (`TopologySpec::parse`):
+/// `chain | ring | star | grid | torus | random[:p] | er[:p] |
+/// smallworld[:k[,beta]] | geometric[:radius_m]`.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum TopologySpec {
+    /// Path 0-1-...-(n-1): the original GADMM topology.
+    Chain,
+    /// Cycle; bipartite iff `n` is even (odd rings drop one edge).
+    Ring,
+    /// Hub-and-spoke around worker 0; always bipartite.
+    Star,
+    /// Near-square 2D lattice; `torus` adds wraparound links.
+    Grid { torus: bool },
+    /// The paper's §7 generator: random balanced grouping + uniform
+    /// head-tail edges at connectivity ratio `p`.
+    RandomBipartite { p: f64 },
+    /// Erdős–Rényi G(n, p) over a random spanning tree.
+    ErdosRenyi { p: f64 },
+    /// Watts–Strogatz: ring lattice of degree `k`, each link rewired
+    /// with probability `beta`.
+    SmallWorld { k: usize, beta: f64 },
+    /// Random geometric graph: workers placed uniformly in the 500 m
+    /// deployment square, linked within `radius_m` (energy-model
+    /// distances are the real link lengths).
+    Geometric { radius_m: f64 },
+}
+
+impl TopologySpec {
+    /// Parse the `--topology` CLI / TOML syntax.  Omitted parameters get
+    /// family defaults: `random:0.3`, `er:0.15`, `smallworld:4,0.1`,
+    /// `geometric:200`.
+    pub fn parse(s: &str) -> Result<TopologySpec, String> {
+        let s = s.trim();
+        let (family, params) = match s.split_once(':') {
+            Some((f, p)) => (f.trim(), Some(p.trim())),
+            None => (s, None),
+        };
+        let f64_param = |p: Option<&str>, default: f64, what: &str| -> Result<f64, String> {
+            match p {
+                None | Some("") => Ok(default),
+                Some(v) => v
+                    .parse::<f64>()
+                    .map_err(|_| format!("topology '{family}': bad {what} '{v}'")),
+            }
+        };
+        // parameterless families must reject a ':params' suffix — silently
+        // ignoring it would run a different topology than requested
+        let no_params = |spec: TopologySpec| -> Result<TopologySpec, String> {
+            match params {
+                Some(p) if !p.is_empty() => {
+                    Err(format!("topology '{family}' takes no ':{p}' parameter"))
+                }
+                _ => Ok(spec),
+            }
+        };
+        let spec = match family {
+            "chain" => no_params(TopologySpec::Chain)?,
+            "ring" => no_params(TopologySpec::Ring)?,
+            "star" => no_params(TopologySpec::Star)?,
+            "grid" => no_params(TopologySpec::Grid { torus: false })?,
+            "torus" => no_params(TopologySpec::Grid { torus: true })?,
+            "random" | "bipartite" => {
+                TopologySpec::RandomBipartite { p: f64_param(params, 0.3, "connectivity p")? }
+            }
+            "er" | "erdos-renyi" => {
+                TopologySpec::ErdosRenyi { p: f64_param(params, 0.15, "edge probability p")? }
+            }
+            "smallworld" => {
+                let (k, beta) = match params {
+                    None | Some("") => (4, 0.1),
+                    Some(body) => match body.split_once(',') {
+                        None => {
+                            let k = body
+                                .parse::<usize>()
+                                .map_err(|_| format!("smallworld: bad degree k '{body}'"))?;
+                            (k, 0.1)
+                        }
+                        Some((ks, bs)) => {
+                            let k = ks
+                                .trim()
+                                .parse::<usize>()
+                                .map_err(|_| format!("smallworld: bad degree k '{ks}'"))?;
+                            let beta = bs
+                                .trim()
+                                .parse::<f64>()
+                                .map_err(|_| format!("smallworld: bad beta '{bs}'"))?;
+                            (k, beta)
+                        }
+                    },
+                };
+                TopologySpec::SmallWorld { k, beta }
+            }
+            "geometric" => {
+                TopologySpec::Geometric { radius_m: f64_param(params, 200.0, "radius_m")? }
+            }
+            other => {
+                return Err(format!(
+                    "unknown topology '{other}' (expected chain|ring|star|grid|torus|\
+                     random[:p]|er[:p]|smallworld[:k,beta]|geometric[:r])"
+                ))
+            }
+        };
+        spec.validate()?;
+        Ok(spec)
+    }
+
+    /// Range-check the family parameters (n-independent; worker-count
+    /// constraints are checked by the generator).
+    pub fn validate(&self) -> Result<(), String> {
+        match *self {
+            TopologySpec::RandomBipartite { p } | TopologySpec::ErdosRenyi { p } => {
+                if !(0.0..=1.0).contains(&p) {
+                    return Err(format!("topology edge probability p={p} not in [0, 1]"));
+                }
+            }
+            TopologySpec::SmallWorld { k, beta } => {
+                if k < 2 {
+                    return Err(format!("smallworld degree k={k} must be >= 2"));
+                }
+                if !(0.0..=1.0).contains(&beta) {
+                    return Err(format!("smallworld beta={beta} not in [0, 1]"));
+                }
+            }
+            TopologySpec::Geometric { radius_m } => {
+                if !(radius_m > 0.0 && radius_m.is_finite()) {
+                    return Err(format!("geometric radius_m={radius_m} must be finite and > 0"));
+                }
+            }
+            TopologySpec::Chain
+            | TopologySpec::Ring
+            | TopologySpec::Star
+            | TopologySpec::Grid { .. } => {}
+        }
+        Ok(())
+    }
+
+    /// Canonical label used in trace names and tables (round-trips
+    /// through [`TopologySpec::parse`]).
+    pub fn label(&self) -> String {
+        match *self {
+            TopologySpec::Chain => "chain".into(),
+            TopologySpec::Ring => "ring".into(),
+            TopologySpec::Star => "star".into(),
+            TopologySpec::Grid { torus: false } => "grid".into(),
+            TopologySpec::Grid { torus: true } => "torus".into(),
+            TopologySpec::RandomBipartite { p } => format!("random:{p}"),
+            TopologySpec::ErdosRenyi { p } => format!("er:{p}"),
+            TopologySpec::SmallWorld { k, beta } => format!("smallworld:{k},{beta}"),
+            TopologySpec::Geometric { radius_m } => format!("geometric:{radius_m}"),
+        }
+    }
+}
+
+impl std::fmt::Display for TopologySpec {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(&self.label())
+    }
+}
+
 /// Which regression task a run optimizes (paper §7.1/§7.2).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Task {
@@ -270,6 +434,10 @@ pub struct ExperimentConfig {
     /// initial quantization bits
     pub bits0: u32,
     pub threads: usize,
+    /// Topology family; `None` keeps the legacy default (the paper's
+    /// random-bipartite generator at `connectivity`, or a chain for the
+    /// GADMM baseline).
+    pub topology: Option<TopologySpec>,
 }
 
 impl Default for ExperimentConfig {
@@ -287,6 +455,7 @@ impl Default for ExperimentConfig {
             omega: 0.99,
             bits0: 2,
             threads: 1,
+            topology: None,
         }
     }
 }
@@ -337,6 +506,9 @@ impl ExperimentConfig {
         if let Some(v) = doc.get_usize(sec, "threads")? {
             cfg.threads = v;
         }
+        if let Some(s) = doc.get_str(sec, "topology")? {
+            cfg.topology = Some(TopologySpec::parse(&s)?);
+        }
         cfg.validate()?;
         Ok(cfg)
     }
@@ -362,11 +534,15 @@ impl ExperimentConfig {
         if !(0.0 < self.omega && self.omega < 1.0) {
             return Err("omega must be in (0, 1)".into());
         }
-        if self.bits0 < 1 || self.bits0 > 30 {
-            return Err("bits0 must be in [1, 30]".into());
+        if self.bits0 < 1 || self.bits0 > 32 {
+            // 32 is full precision: the wire codec packs 1..=32-bit codes
+            return Err("bits0 must be in [1, 32]".into());
         }
         if self.iters == 0 {
             return Err("iters must be > 0".into());
+        }
+        if let Some(t) = &self.topology {
+            t.validate()?;
         }
         Ok(())
     }
@@ -458,6 +634,74 @@ mod tests {
         cfg = ExperimentConfig::default();
         cfg.rho = 0.0;
         assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn topology_spec_parse_all_families() {
+        for (s, spec) in [
+            ("chain", TopologySpec::Chain),
+            ("ring", TopologySpec::Ring),
+            ("star", TopologySpec::Star),
+            ("grid", TopologySpec::Grid { torus: false }),
+            ("torus", TopologySpec::Grid { torus: true }),
+            ("random", TopologySpec::RandomBipartite { p: 0.3 }),
+            ("random:0.4", TopologySpec::RandomBipartite { p: 0.4 }),
+            ("er:0.2", TopologySpec::ErdosRenyi { p: 0.2 }),
+            ("smallworld", TopologySpec::SmallWorld { k: 4, beta: 0.1 }),
+            ("smallworld:6", TopologySpec::SmallWorld { k: 6, beta: 0.1 }),
+            ("smallworld:6,0.25", TopologySpec::SmallWorld { k: 6, beta: 0.25 }),
+            ("geometric:150", TopologySpec::Geometric { radius_m: 150.0 }),
+        ] {
+            assert_eq!(TopologySpec::parse(s).unwrap(), spec, "{s}");
+        }
+    }
+
+    #[test]
+    fn topology_spec_labels_roundtrip() {
+        for s in [
+            "chain",
+            "ring",
+            "star",
+            "grid",
+            "torus",
+            "random:0.4",
+            "er:0.2",
+            "smallworld:6,0.25",
+            "geometric:150",
+        ] {
+            let spec = TopologySpec::parse(s).unwrap();
+            assert_eq!(TopologySpec::parse(&spec.label()).unwrap(), spec, "{s}");
+        }
+    }
+
+    #[test]
+    fn topology_spec_rejects_bad_input() {
+        assert!(TopologySpec::parse("moebius").is_err());
+        assert!(TopologySpec::parse("random:1.5").is_err());
+        assert!(TopologySpec::parse("er:-0.1").is_err());
+        assert!(TopologySpec::parse("smallworld:1").is_err());
+        assert!(TopologySpec::parse("smallworld:4,2.0").is_err());
+        assert!(TopologySpec::parse("geometric:0").is_err());
+        assert!(TopologySpec::parse("geometric:abc").is_err());
+        // parameterless families reject a params suffix instead of
+        // silently running something else
+        assert!(TopologySpec::parse("grid:4x8").is_err());
+        assert!(TopologySpec::parse("torus:3").is_err());
+        assert!(TopologySpec::parse("chain:1").is_err());
+    }
+
+    #[test]
+    fn config_parses_topology_key() {
+        let cfg = ExperimentConfig::from_toml(
+            r#"
+            [experiment]
+            topology = "smallworld:6,0.2"
+            "#,
+        )
+        .unwrap();
+        assert_eq!(cfg.topology, Some(TopologySpec::SmallWorld { k: 6, beta: 0.2 }));
+        let err = ExperimentConfig::from_toml("topology = \"nope\"").unwrap_err();
+        assert!(err.contains("unknown topology"), "{err}");
     }
 
     #[test]

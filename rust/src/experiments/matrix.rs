@@ -1,0 +1,233 @@
+//! The (topology × algorithm) scenario matrix.
+//!
+//! The paper evaluates its algorithm family on one generated topology
+//! shape; this module crosses every [`TopologySpec`] family from
+//! [`crate::graph::gen`] with the full algorithm set and reports, per
+//! family, the paper's comparison axes (iterations / rounds / bits /
+//! energy to the reference accuracy) plus the bipartition report
+//! (kept/dropped edges) and the spectral constants driving the
+//! Theorem-3 rate.  Runs are flattened into one job list on the shared
+//! sweep scheduler ([`super::ExecOptions::sweep_threads`]), so the
+//! whole matrix saturates the machine and stays bit-deterministic.
+
+use super::{run_jobs, summarize, ExecOptions, SweepJob};
+use crate::algs::{AlgSpec, Problem, Schedule};
+use crate::config::{DatasetId, Task, TopologySpec};
+use crate::data;
+use crate::graph::{gen, spectral};
+use crate::io::Table;
+use crate::metrics::Trace;
+
+/// Full setup of a matrix sweep.
+#[derive(Clone, Debug)]
+pub struct MatrixSpec {
+    pub dataset: DatasetId,
+    pub workers: usize,
+    pub families: Vec<TopologySpec>,
+    pub algs: Vec<AlgSpec>,
+    pub rho: f64,
+    pub mu0: f64,
+    /// Iteration budget for alternating (GGADMM-family) schedules.
+    pub iters_alt: u64,
+    /// Iteration budget for the Jacobian C-ADMM baseline.
+    pub iters_jacobian: u64,
+    pub seed: u64,
+    pub target_gap: f64,
+}
+
+/// The standard family zoo: one representative per generator, the
+/// random parameters chosen so every family is connected and
+/// interestingly sparse at the default N.
+pub fn default_families() -> Vec<TopologySpec> {
+    vec![
+        TopologySpec::Chain,
+        TopologySpec::Ring,
+        TopologySpec::Star,
+        TopologySpec::Grid { torus: false },
+        TopologySpec::Grid { torus: true },
+        TopologySpec::ErdosRenyi { p: 0.15 },
+        TopologySpec::SmallWorld { k: 4, beta: 0.1 },
+        TopologySpec::Geometric { radius_m: 200.0 },
+        TopologySpec::RandomBipartite { p: 0.3 },
+    ]
+}
+
+/// Matrix over the standard families and the figure algorithm set, with
+/// the figure-tuned per-dataset (rho, mu0).
+pub fn default_matrix(dataset: DatasetId, workers: usize, iters: u64, seed: u64) -> MatrixSpec {
+    let linear = dataset.task() == Task::Linear;
+    let (rho, mu0) = match dataset {
+        DatasetId::SynthLinear => (30.0, 0.0),
+        DatasetId::BodyFat => (5.0, 0.0),
+        DatasetId::SynthLogistic | DatasetId::Derm => (0.1, 1e-2),
+    };
+    MatrixSpec {
+        dataset,
+        workers,
+        families: default_families(),
+        algs: super::default_algs(linear),
+        rho,
+        mu0,
+        iters_alt: iters,
+        iters_jacobian: iters.saturating_mul(4),
+        seed,
+        target_gap: 1e-4,
+    }
+}
+
+/// One family's slice of the matrix.
+pub struct FamilyResult {
+    pub family: TopologySpec,
+    pub label: String,
+    pub edges: usize,
+    /// Same-group edges removed by the bipartition pass (0 for exact
+    /// 2-colorings).
+    pub dropped_edges: usize,
+    pub traces: Vec<Trace>,
+    pub summary: Table,
+}
+
+/// Run the whole matrix as one flattened (family × algorithm) job list
+/// on the shared sweep pool.  Results come back in family order with
+/// traces labelled `"ALG (family)"`.
+pub fn run_matrix(spec: &MatrixSpec, exec: &ExecOptions) -> Result<Vec<FamilyResult>, String> {
+    let ds = data::load(spec.dataset, spec.seed);
+    let built: Vec<gen::BuiltTopology> = spec
+        .families
+        .iter()
+        .map(|f| gen::build(f, spec.workers, spec.seed))
+        .collect::<Result<_, _>>()?;
+    let problems: Vec<Problem> = built
+        .iter()
+        .map(|b| Problem::new(&ds, &b.topology, spec.rho, spec.mu0, spec.seed))
+        .collect();
+    let mut jobs = Vec::new();
+    for ((fam, b), problem) in spec.families.iter().zip(&built).zip(&problems) {
+        for alg in &spec.algs {
+            let iters = match alg.schedule {
+                Schedule::Alternating => spec.iters_alt,
+                Schedule::Jacobian => spec.iters_jacobian,
+            };
+            jobs.push(SweepJob {
+                problem,
+                topo: &b.topology,
+                alg: Some(alg),
+                iters,
+                seed: spec.seed,
+                rename: Some(fam.label()),
+            });
+        }
+    }
+    let mut traces = run_jobs(&jobs, exec).into_iter();
+    Ok(spec
+        .families
+        .iter()
+        .zip(&built)
+        .map(|(fam, b)| {
+            let t: Vec<Trace> = traces.by_ref().take(spec.algs.len()).collect();
+            FamilyResult {
+                family: *fam,
+                label: fam.label(),
+                edges: b.topology.edges().len(),
+                dropped_edges: b.dropped_edges,
+                summary: summarize(&t, spec.target_gap),
+                traces: t,
+            }
+        })
+        .collect())
+}
+
+/// Structural + spectral properties of every family at this `(n, seed)`:
+/// what the bipartition kept/dropped and the Theorem-3 constants.
+pub fn properties_table(
+    workers: usize,
+    families: &[TopologySpec],
+    seed: u64,
+) -> Result<Table, String> {
+    let mut t = Table::new(&[
+        "topology",
+        "edges",
+        "dropped",
+        "heads/tails",
+        "ratio",
+        "sigma_max(C)",
+        "sigma~_min(M-)",
+    ]);
+    for fam in families {
+        let b = gen::build(fam, workers, seed)?;
+        let c = spectral::constants(&b.topology);
+        t.row(&[
+            fam.label(),
+            b.topology.edges().len().to_string(),
+            b.dropped_edges.to_string(),
+            format!("{}/{}", b.topology.heads().len(), b.topology.tails().len()),
+            format!("{:.3}", b.topology.connectivity_ratio()),
+            format!("{:.3}", c.sigma_max_c),
+            format!("{:.3}", c.sigma_min_nz_m_minus),
+        ]);
+    }
+    Ok(t)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tiny_matrix_end_to_end() {
+        let mut spec = default_matrix(DatasetId::SynthLinear, 6, 300, 31);
+        // two contrasting families and the two cheapest algorithms keep
+        // the test fast while exercising rename + per-family summaries
+        spec.families = vec![TopologySpec::Ring, TopologySpec::SmallWorld { k: 4, beta: 0.3 }];
+        spec.algs = vec![AlgSpec::ggadmm(), AlgSpec::cq_ggadmm(0.1, 0.8, 0.995, 2)];
+        spec.target_gap = 1e-2;
+        let results = run_matrix(&spec, &ExecOptions::default()).unwrap();
+        assert_eq!(results.len(), 2);
+        assert_eq!(results[0].label, "ring");
+        assert_eq!(results[0].dropped_edges, 0, "even ring is exact");
+        assert!(results[1].dropped_edges > 0, "small world is not bipartite");
+        for fr in &results {
+            assert_eq!(fr.traces.len(), 2);
+            for tr in &fr.traces {
+                assert!(tr.algorithm.ends_with(&format!("({})", fr.label)), "{}", tr.algorithm);
+                assert!(tr.last_gap().is_finite());
+                let p = tr.points.last().unwrap();
+                assert!(p.cum_bits > 0 && p.cum_energy_j.is_finite());
+            }
+            // GGADMM reaches the relaxed target on these tiny problems
+            assert!(
+                fr.traces[0].first_below(1e-2).is_some(),
+                "{}: {:.3e}",
+                fr.traces[0].algorithm,
+                fr.traces[0].last_gap()
+            );
+        }
+    }
+
+    #[test]
+    fn matrix_is_deterministic() {
+        let mut spec = default_matrix(DatasetId::SynthLinear, 6, 60, 7);
+        spec.families = vec![TopologySpec::Grid { torus: true }];
+        spec.algs = vec![AlgSpec::cq_ggadmm(0.1, 0.8, 0.995, 2)];
+        let a = run_matrix(&spec, &ExecOptions::default()).unwrap();
+        let b = run_matrix(&spec, &ExecOptions::default()).unwrap();
+        let (ta, tb) = (&a[0].traces[0], &b[0].traces[0]);
+        assert_eq!(ta.points.len(), tb.points.len());
+        for (x, y) in ta.points.iter().zip(&tb.points) {
+            assert_eq!(x.loss_gap.to_bits(), y.loss_gap.to_bits());
+            assert_eq!(x.cum_bits, y.cum_bits);
+        }
+    }
+
+    #[test]
+    fn properties_table_covers_all_families() {
+        let t = properties_table(12, &default_families(), 3).unwrap();
+        let s = t.render();
+        for label in ["chain", "ring", "star", "grid", "torus"] {
+            assert!(s.contains(label), "missing {label} in\n{s}");
+        }
+        for label in ["er:", "smallworld:", "geometric:", "random:"] {
+            assert!(s.contains(label), "missing {label} in\n{s}");
+        }
+    }
+}

@@ -23,6 +23,7 @@
 //! back to intra-run threading ([`ExecOptions::threads`]), so a single
 //! expensive run can still use the whole pool.
 
+pub mod matrix;
 pub mod rates;
 pub mod sensitivity;
 
@@ -236,18 +237,19 @@ pub fn build_problem(spec: &FigureSpec, p_override: Option<f64>) -> (Problem, To
 }
 
 /// One independent run of a sweep: an (algorithm, problem instance)
-/// pair, optionally relabelled (fig6 density variants).  Jobs borrow the
-/// prebuilt problem and clone it inside the worker — `Problem` clones
-/// share shards behind `Arc`, so the clone is cheap and every job gets
-/// its own engine state.
+/// pair, optionally relabelled (fig6 density variants, topology-matrix
+/// families).  Jobs borrow the prebuilt problem and clone it inside the
+/// worker — `Problem` clones share shards behind `Arc`, so the clone is
+/// cheap and every job gets its own engine state.
 struct SweepJob<'a> {
-    spec: &'a FigureSpec,
     problem: &'a Problem,
     topo: &'a Topology,
     /// `None` runs the DGD first-order baseline instead of an ADMM spec.
     alg: Option<&'a AlgSpec>,
-    /// Trace-label suffix `(label, p)` for density variants.
-    rename: Option<(&'static str, f64)>,
+    iters: u64,
+    seed: u64,
+    /// Trace-label suffix, rendered as `"NAME (suffix)"`.
+    rename: Option<String>,
 }
 
 /// Dispatch a flattened job list over a persistent pool and collect the
@@ -273,14 +275,10 @@ fn run_jobs(jobs: &[SweepJob], exec: &ExecOptions) -> Vec<Trace> {
         let job = &jobs[j];
         let mut trace = match job.alg {
             Some(alg) => {
-                let iters = match alg.schedule {
-                    crate::algs::Schedule::Alternating => job.spec.iters_alt,
-                    crate::algs::Schedule::Jacobian => job.spec.iters_jacobian,
-                };
                 let opts = RunOptions {
                     backend: exec.backend,
                     threads: run_threads,
-                    seed: job.spec.seed,
+                    seed: job.seed,
                     record_every: exec.record_every,
                     artifacts_dir: exec.artifacts_dir.clone(),
                     drop_prob: 0.0,
@@ -289,18 +287,18 @@ fn run_jobs(jobs: &[SweepJob], exec: &ExecOptions) -> Vec<Trace> {
                     link: None,
                 };
                 let mut run = Run::new(job.problem.clone(), job.topo.clone(), alg.clone(), opts);
-                run.run(iters)
+                run.run(job.iters)
             }
             None => dgd::run_dgd(
                 job.problem,
                 job.topo,
                 0.01,
-                job.spec.iters_jacobian,
+                job.iters,
                 EnergyParams::default(),
             ),
         };
-        if let Some((label, p)) = job.rename {
-            trace.algorithm = format!("{} ({label} p={p})", trace.algorithm);
+        if let Some(suffix) = &job.rename {
+            trace.algorithm = format!("{} ({suffix})", trace.algorithm);
         }
         trace
     })
@@ -312,13 +310,31 @@ fn push_spec_jobs<'a>(
     spec: &'a FigureSpec,
     problem: &'a Problem,
     topo: &'a Topology,
-    rename: Option<(&'static str, f64)>,
+    rename: Option<String>,
 ) {
     for alg in &spec.algs {
-        jobs.push(SweepJob { spec, problem, topo, alg: Some(alg), rename });
+        let iters = match alg.schedule {
+            crate::algs::Schedule::Alternating => spec.iters_alt,
+            crate::algs::Schedule::Jacobian => spec.iters_jacobian,
+        };
+        jobs.push(SweepJob {
+            problem,
+            topo,
+            alg: Some(alg),
+            iters,
+            seed: spec.seed,
+            rename: rename.clone(),
+        });
     }
     if spec.with_dgd {
-        jobs.push(SweepJob { spec, problem, topo, alg: None, rename });
+        jobs.push(SweepJob {
+            problem,
+            topo,
+            alg: None,
+            iters: spec.iters_jacobian,
+            seed: spec.seed,
+            rename,
+        });
     }
 }
 
@@ -369,7 +385,7 @@ pub fn run_fig6(spec: &Fig6Spec, exec: &ExecOptions) -> Vec<FigureResult> {
         .collect();
     let mut jobs = Vec::new();
     for (&(label, p), (problem, topo)) in variants.iter().zip(&built) {
-        push_spec_jobs(&mut jobs, &spec.base, problem, topo, Some((label, p)));
+        push_spec_jobs(&mut jobs, &spec.base, problem, topo, Some(format!("{label} p={p}")));
     }
     let mut traces = run_jobs(&jobs, exec).into_iter();
     let per_variant = spec.base.algs.len() + usize::from(spec.base.with_dgd);

@@ -6,8 +6,13 @@
 //! tail group `T`, and every edge crosses the groups.  [`Topology`] owns
 //! the edge set, the grouping and worker positions (for the free-space
 //! energy model of §7), and exposes the matrices `A`, `D`, `C`, `M_-`,
-//! `M_+` used in Appendix D.
+//! `M_+` used in Appendix D.  [`gen`] grows the family zoo beyond the
+//! seed's chain / random-bipartite shapes: ring, star, grid/torus,
+//! Erdős–Rényi, small-world and random-geometric generators, all routed
+//! through a bipartition pass that makes any connected graph a valid
+//! head/tail instance.
 
+pub mod gen;
 pub mod spectral;
 
 use crate::util::rng::Pcg64;

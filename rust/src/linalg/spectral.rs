@@ -78,7 +78,10 @@ pub fn symmetric_eigen(a: &Mat) -> Vec<f64> {
         }
     }
     let mut eig: Vec<f64> = (0..n).map(|i| m[(i, i)]).collect();
-    eig.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    // total_cmp: a degenerate input (overflow to inf during rotation,
+    // NaN on the diagonal) must not panic the sort — NaNs order last
+    // and the callers' `> tol` filters skip them.
+    eig.sort_by(f64::total_cmp);
     eig
 }
 
@@ -138,6 +141,40 @@ mod tests {
         let e = symmetric_eigen(&a);
         let trace: f64 = e.iter().sum();
         assert!((trace - 8.0).abs() < 1e-8);
+    }
+
+    #[test]
+    fn jacobi_survives_nan_input() {
+        // regression: a NaN on the diagonal (off-diagonals still compare
+        // symmetric) poisons the rotations; the eigenvalue sort used to
+        // panic on `partial_cmp(..).unwrap()`
+        let a = Mat::from_rows(&[&[f64::NAN, 1.0], &[1.0, 0.0]]);
+        let e = symmetric_eigen(&a);
+        assert_eq!(e.len(), 2);
+        // finite values (if any) order before the NaNs
+        assert!(e.windows(2).all(|w| w[0].total_cmp(&w[1]).is_le()));
+    }
+
+    #[test]
+    fn jacobi_survives_inf_diagonal() {
+        // an infinite diagonal entry (overflowed upstream arithmetic)
+        // must come back as an ordinary sorted spectrum, not a panic
+        let a = Mat::from_rows(&[
+            &[f64::INFINITY, 1.0, 0.0],
+            &[1.0, 2.0, 0.5],
+            &[0.0, 0.5, 1.0],
+        ]);
+        let e = symmetric_eigen(&a);
+        assert_eq!(e.len(), 3);
+    }
+
+    #[test]
+    fn min_nonzero_singular_nan_poisoned_returns_zero() {
+        // NaN eigenvalues sort last and fail every `> tol` test, so the
+        // degenerate answer is the conservative 0.0 — not a panic
+        let a = Mat::from_rows(&[&[f64::NAN, 0.0], &[0.0, f64::NAN]]);
+        let s = min_nonzero_singular(&a, 1e-9);
+        assert_eq!(s, 0.0);
     }
 
     #[test]

@@ -6,11 +6,11 @@
 
 use cq_ggadmm::algs::{AlgSpec, Problem, Run, RunOptions};
 use cq_ggadmm::cli::{Args, Cli, Command};
-use cq_ggadmm::config::{DatasetId, ExperimentConfig};
+use cq_ggadmm::config::{DatasetId, ExperimentConfig, TopologySpec};
 use cq_ggadmm::coordinator::{Coordinator, CoordinatorOptions};
 use cq_ggadmm::data;
-use cq_ggadmm::experiments::{self, ExecOptions};
-use cq_ggadmm::graph::{spectral, Topology};
+use cq_ggadmm::experiments::{self, matrix, ExecOptions};
+use cq_ggadmm::graph::{gen, spectral, Topology};
 use cq_ggadmm::metrics::save_traces;
 use cq_ggadmm::solver::Backend;
 use std::path::PathBuf;
@@ -39,6 +39,12 @@ fn cli() -> Cli {
                 .opt("alg", Some("cq-ggadmm"), "ggadmm|c-ggadmm|q-ggadmm|cq-ggadmm|c-admm|gadmm|dgd")
                 .opt("workers", Some("24"), "number of workers")
                 .opt("connectivity", Some("0.3"), "graph connectivity ratio p")
+                .opt(
+                    "topology",
+                    None,
+                    "chain|ring|star|grid|torus|random[:p]|er[:p]|smallworld[:k,beta]|\
+                     geometric[:r] (default: random:<connectivity>; gadmm defaults to chain)",
+                )
                 .opt("iters", Some("300"), "iterations")
                 .opt("rho", Some("1.0"), "ADMM penalty rho")
                 .opt("mu0", Some("0.01"), "logistic ridge mu0")
@@ -60,9 +66,29 @@ fn cli() -> Cli {
                 .opt("iters", Some("150"), "iterations")
                 .opt("seed", Some("1"), "random seed")
                 .opt("threads", Some("0"), "executor threads (0 = all cores)")
-                .opt("drop-prob", Some("0"), "broadcast-erasure probability"),
+                .opt("drop-prob", Some("0"), "broadcast-erasure probability")
+                .opt("topology", None, "topology family (see 'run --help'; default random:0.3)"),
         )
         .command(Command::new("datasets", "print Table 1 (dataset inventory)"))
+        .command(
+            Command::new("matrix", "run the (topology x algorithm) scenario matrix")
+                .opt("dataset", Some("synth-linear"), "dataset id")
+                .opt("workers", Some("24"), "number of workers")
+                .opt("iters", Some("300"), "alternating-schedule iterations (Jacobian runs 4x)")
+                .opt("seed", Some("1"), "random seed")
+                .opt(
+                    "families",
+                    None,
+                    "whitespace-separated topology specs (default: the standard family zoo)",
+                )
+                .opt("out", Some("results"), "output directory for CSV traces")
+                .opt("backend", Some("native"), "native|pjrt")
+                .opt("artifacts", Some("artifacts"), "artifacts dir (pjrt backend)")
+                .opt("threads", Some("1"), "intra-run solver threads")
+                .opt("record-every", Some("1"), "trace sampling stride")
+                .opt("sweep-threads", Some("0"), "concurrent runs (0 = all cores)")
+                .switch("quiet", "suppress the summary tables"),
+        )
         .command(
             Command::new("rates", "empirical vs Theorem-3 convergence rates across densities")
                 .opt("workers", Some("16"), "number of workers")
@@ -78,7 +104,8 @@ fn cli() -> Cli {
             Command::new("topo", "inspect a generated topology's spectral constants")
                 .opt("workers", Some("18"), "number of workers")
                 .opt("connectivity", Some("0.3"), "connectivity ratio")
-                .opt("seed", Some("1"), "seed"),
+                .opt("seed", Some("1"), "seed")
+                .opt("topology", None, "topology family (see 'run --help'; default random:<p>)"),
         )
 }
 
@@ -95,6 +122,37 @@ fn parse_alg(name: &str, a: &Args) -> Result<AlgSpec, String> {
         "c-admm" => Ok(AlgSpec::c_admm(tau0, xi)),
         "gadmm" => Ok(AlgSpec::gadmm_chain()),
         _ => Err(format!("unknown algorithm '{name}'")),
+    }
+}
+
+/// Resolve the effective topology: an explicit `--topology` flag wins,
+/// then a config-file spec, then the legacy default (a chain for the
+/// GADMM baseline, the paper's random-bipartite generator otherwise).
+/// Returns the topology plus its label and the bipartition pass's
+/// dropped-edge count.
+fn build_topology(
+    a: &Args,
+    cfg_spec: Option<TopologySpec>,
+    alg_name: &str,
+    workers: usize,
+    connectivity: f64,
+    seed: u64,
+) -> Result<(Topology, String, usize), String> {
+    let spec = match a.get("topology") {
+        Some(s) => Some(TopologySpec::parse(s)?),
+        None => cfg_spec,
+    };
+    match spec {
+        Some(spec) => {
+            let b = gen::build(&spec, workers, seed)?;
+            Ok((b.topology, spec.label(), b.dropped_edges))
+        }
+        None if alg_name == "gadmm" => Ok((Topology::chain(workers), "chain".into(), 0)),
+        None => Ok((
+            Topology::random_bipartite(workers, connectivity, seed),
+            format!("random:{connectivity}"),
+            0,
+        )),
     }
 }
 
@@ -196,18 +254,26 @@ fn cmd_run(a: &Args) -> Result<(), String> {
 
     let alg_name = a.get_or("alg", "cq-ggadmm");
     let ds = data::load(cfg.dataset, cfg.seed);
-    let topo = if alg_name == "gadmm" {
-        Topology::chain(cfg.workers)
-    } else {
-        Topology::random_bipartite(cfg.workers, cfg.connectivity, cfg.seed)
-    };
+    let (topo, topo_label, dropped) = build_topology(
+        a,
+        cfg.topology,
+        &alg_name,
+        cfg.workers,
+        cfg.connectivity,
+        cfg.seed,
+    )?;
     let problem = Problem::new(&ds, &topo, cfg.rho, cfg.mu0, cfg.seed);
     println!(
-        "dataset={} d={} workers={} edges={} f*={:.6e}",
+        "dataset={} d={} workers={} topology={topo_label} edges={}{} f*={:.6e}",
         ds.name,
         problem.d,
         topo.n(),
         topo.edges().len(),
+        if dropped > 0 {
+            format!(" (bipartition dropped {dropped})")
+        } else {
+            String::new()
+        },
         problem.f_star
     );
 
@@ -274,7 +340,7 @@ fn cmd_coordinator(a: &Args) -> Result<(), String> {
     let spec = parse_alg(&a.get_or("alg", "cq-ggadmm"), a)?;
     let alg_name = spec.name.clone();
     let ds = data::load(dataset, seed);
-    let topo = Topology::random_bipartite(workers, 0.3, seed);
+    let (topo, topo_label, _) = build_topology(a, None, "", workers, 0.3, seed)?;
     let problem = Problem::new(&ds, &topo, 1.0, 1e-2, seed);
     let coord = Coordinator::spawn(
         problem,
@@ -283,7 +349,7 @@ fn cmd_coordinator(a: &Args) -> Result<(), String> {
         CoordinatorOptions { seed, threads, drop_prob, ..CoordinatorOptions::default() },
     );
     println!(
-        "sharding {} workers over a {}-thread executor, algorithm {alg_name}",
+        "sharding {} workers ({topo_label}) over a {}-thread executor, algorithm {alg_name}",
         workers,
         coord.threads(),
     );
@@ -298,6 +364,51 @@ fn cmd_coordinator(a: &Args) -> Result<(), String> {
         last.cum_bits,
         last.cum_energy_j
     );
+    Ok(())
+}
+
+fn cmd_matrix(a: &Args) -> Result<(), String> {
+    let exec = exec_options(a)?;
+    let dataset = DatasetId::parse(&a.get_or("dataset", "synth-linear"))?;
+    let workers = a.get_usize("workers")?.unwrap_or(24);
+    let iters = a.get_u64("iters")?.unwrap_or(300);
+    let seed = a.get_u64("seed")?.unwrap_or(1);
+    let quiet = a.has("quiet");
+    let out = PathBuf::from(a.get_or("out", "results"));
+    let mut spec = matrix::default_matrix(dataset, workers, iters, seed);
+    if let Some(list) = a.get("families") {
+        let families: Result<Vec<TopologySpec>, String> =
+            list.split_whitespace().map(TopologySpec::parse).collect();
+        spec.families = families?;
+        if spec.families.is_empty() {
+            return Err("--families: no topology specs given".into());
+        }
+    }
+    if !quiet {
+        println!(
+            "topology properties (N={workers}, seed={seed}):\n{}",
+            matrix::properties_table(workers, &spec.families, seed)?.render()
+        );
+    }
+    let results = matrix::run_matrix(&spec, &exec)?;
+    let mut all = Vec::new();
+    for fr in &results {
+        if !quiet {
+            println!(
+                "\n=== {} (edges={}, dropped={}) ===\n{}",
+                fr.label,
+                fr.edges,
+                fr.dropped_edges,
+                fr.summary.render()
+            );
+        }
+        all.extend(fr.traces.iter().cloned());
+    }
+    let path = out.join("topology_matrix.csv");
+    save_traces(&all, &path).map_err(|e| e.to_string())?;
+    if !quiet {
+        println!("\ntraces -> {}", path.display());
+    }
     Ok(())
 }
 
@@ -335,10 +446,10 @@ fn cmd_topo(a: &Args) -> Result<(), String> {
     let workers = a.get_usize("workers")?.unwrap_or(18);
     let p = a.get_f64("connectivity")?.unwrap_or(0.3);
     let seed = a.get_u64("seed")?.unwrap_or(1);
-    let topo = Topology::random_bipartite(workers, p, seed);
+    let (topo, topo_label, dropped) = build_topology(a, None, "", workers, p, seed)?;
     let consts = spectral::constants(&topo);
     println!(
-        "workers={} edges={} ratio={:.3} heads={} tails={}",
+        "topology={topo_label} workers={} edges={} dropped={dropped} ratio={:.3} heads={} tails={}",
         topo.n(),
         topo.edges().len(),
         topo.connectivity_ratio(),
@@ -385,6 +496,7 @@ fn main() -> ExitCode {
             println!("{}", experiments::table1().render());
             Ok(())
         }
+        "matrix" => cmd_matrix(&args),
         "rates" => cmd_rates(&args),
         "sweep" => cmd_sweep(&args),
         "topo" => cmd_topo(&args),

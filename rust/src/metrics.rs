@@ -49,15 +49,22 @@ impl Trace {
         self.points.iter().find(|p| p.loss_gap <= target)
     }
 
+    /// Gaps at or below this floor carry no rate information: an exactly
+    /// converged tail (`gap == 0.0`) would feed `ln(0) = -inf` into the
+    /// least-squares fit, and sub-1e-13 values are numerical noise.
+    const RATE_FIT_GAP_FLOOR: f64 = 1e-13;
+
     /// Empirical linear-rate fit: least-squares slope of
     /// `log(gap_k)` over the window where the gap is decreasing and
     /// above numerical noise. Returns the per-iteration contraction factor
-    /// `exp(slope)`.
+    /// `exp(slope)`.  Non-positive, sub-floor and non-finite gaps (exact
+    /// convergence, diverged runs) are skipped so the fit never returns
+    /// NaN; `None` when fewer than 4 informative points remain.
     pub fn fitted_rate(&self) -> Option<f64> {
         let pts: Vec<(f64, f64)> = self
             .points
             .iter()
-            .filter(|p| p.loss_gap > 1e-13 && p.loss_gap.is_finite())
+            .filter(|p| p.loss_gap.is_finite() && p.loss_gap > Self::RATE_FIT_GAP_FLOOR)
             .map(|p| (p.iteration as f64, p.loss_gap.ln()))
             .collect();
         if pts.len() < 4 {
@@ -171,6 +178,33 @@ mod tests {
         let t = mk_trace(&gaps);
         let r = t.fitted_rate().unwrap();
         assert!((r - 0.5).abs() < 1e-6, "rate={r}");
+    }
+
+    #[test]
+    fn fitted_rate_skips_exactly_converged_tail() {
+        // a run that hits the optimum exactly: the zero-gap tail must be
+        // skipped (ln(0) = -inf would poison the fit), leaving the clean
+        // geometric prefix
+        let gaps = [1.0, 0.5, 0.25, 0.125, 0.0625, 0.0, 0.0, 0.0, 0.0];
+        let t = mk_trace(&gaps);
+        let r = t.fitted_rate().expect("prefix has >= 4 informative points");
+        assert!(r.is_finite(), "rate={r}");
+        assert!((r - 0.5).abs() < 1e-6, "rate={r}");
+    }
+
+    #[test]
+    fn fitted_rate_none_when_all_gaps_converged() {
+        let t = mk_trace(&[0.0, 0.0, 0.0, 0.0, 0.0, 0.0]);
+        assert!(t.fitted_rate().is_none());
+    }
+
+    #[test]
+    fn fitted_rate_skips_nonfinite_gaps() {
+        // a diverged spike mid-trace must not leak inf/NaN into the fit
+        let gaps = [1.0, f64::INFINITY, 0.5, f64::NAN, 0.25, 0.125, 0.0625];
+        let t = mk_trace(&gaps);
+        let r = t.fitted_rate().unwrap();
+        assert!(r.is_finite());
     }
 
     #[test]

@@ -41,8 +41,13 @@ impl QuantConfig {
         if !(0.0 < self.omega && self.omega < 1.0) {
             return Err("omega must be in (0,1)".into());
         }
-        if self.max_bits > 30 {
-            return Err("max_bits > 30 would overflow level arithmetic".into());
+        if self.max_bits > 32 {
+            // the wire codec packs u32 codes with a 1..=32-bit layout;
+            // wider codes would silently truncate on the wire
+            return Err(format!(
+                "max_bits {} > 32: the codec packs 1..=32-bit codes",
+                self.max_bits
+            ));
         }
         Ok(())
     }
@@ -438,6 +443,45 @@ mod tests {
                 assert_eq!(a.to_bits(), b.to_bits());
             }
         });
+    }
+
+    #[test]
+    fn validate_locks_the_codec_bit_range() {
+        // full precision (32) is exactly what the codec can pack ...
+        let full = QuantConfig { bits0: 32, omega: 0.9, max_bits: 32 };
+        full.validate().unwrap();
+        // ... and one bit more must be rejected, not silently truncated
+        let wide = QuantConfig { bits0: 2, omega: 0.9, max_bits: 33 };
+        let err = wide.validate().unwrap_err();
+        assert!(err.contains("32"), "{err}");
+        // bits0 above the cap is rejected too
+        let inverted = QuantConfig { bits0: 12, omega: 0.9, max_bits: 8 };
+        let err = inverted.validate().unwrap_err();
+        assert!(err.contains("out of range"), "{err}");
+        assert!(QuantConfig { bits0: 0, omega: 0.9, max_bits: 8 }.validate().is_err());
+        assert!(QuantConfig { bits0: 2, omega: 1.0, max_bits: 8 }.validate().is_err());
+    }
+
+    #[test]
+    fn full_precision_32_bit_quantizer_roundtrips() {
+        // level arithmetic at the 32-bit cap: max_code = 2^32 - 1 must
+        // fit the u32 code type exactly, end to end through the decode
+        let mut q = Quantizer::new(
+            QuantConfig { bits0: 32, omega: 0.9, max_bits: 32 },
+            Pcg64::new(11),
+        );
+        let v: Vec<f64> = (0..16).map(|i| (i as f64 * 0.37).sin() * 3.0).collect();
+        let reference = vec![0.0; 16];
+        let (msg, recon) = q.quantize(&v, &reference);
+        assert_eq!(msg.bits, 32);
+        assert!(msg.step() > 0.0 && msg.step().is_finite());
+        let decoded = msg.reconstruct(&reference);
+        assert_eq!(recon, decoded);
+        // 32-bit steps over a few-unit radius are ~1e-9: reconstruction
+        // is essentially exact
+        for (r, t) in recon.iter().zip(&v) {
+            assert!((r - t).abs() < 1e-6);
+        }
     }
 
     #[test]

@@ -16,9 +16,10 @@
 //! is what makes exact equality possible here.
 
 use cq_ggadmm::algs::{AlgSpec, Problem, Run, RunOptions};
+use cq_ggadmm::config::TopologySpec;
 use cq_ggadmm::coordinator::{Coordinator, CoordinatorOptions};
 use cq_ggadmm::data::synthetic;
-use cq_ggadmm::graph::Topology;
+use cq_ggadmm::graph::{gen, Topology};
 use cq_ggadmm::metrics::Trace;
 
 /// N = 64 simulated workers on 4 executor threads.
@@ -188,4 +189,72 @@ fn c_admm_with_erasure_bit_identical() {
 #[test]
 fn logistic_with_erasure_bit_identical() {
     lock(AlgSpec::c_ggadmm(0.2, 0.85), bipartite(34), false, 0.2, 34, 10);
+}
+
+// ---- generalized topology families (graph::gen) ---------------------
+//
+// The engines must stay bit-for-bit identical on every family the
+// generator zoo produces, not just the seed's chain / random-bipartite
+// shapes — including families that only become bipartite through the
+// max-cut bipartition pass.
+
+fn family(spec: TopologySpec, seed: u64) -> Topology {
+    let b = gen::build(&spec, N, seed).expect("family builds at N=64");
+    assert!(b.topology.is_connected() && b.topology.is_bipartite_consistent());
+    b.topology
+}
+
+#[test]
+fn ring_bit_identical() {
+    // even ring: exact 2-coloring, the sparsest connected family
+    lock(AlgSpec::ggadmm(), family(TopologySpec::Ring, 41), true, 0.0, 41, 30);
+}
+
+#[test]
+fn torus_bit_identical() {
+    // 64 = 8x8 torus: 4-regular, exact checkerboard coloring
+    lock(
+        AlgSpec::cq_ggadmm(0.2, 0.85, 0.995, 2),
+        family(TopologySpec::Grid { torus: true }, 42),
+        true,
+        0.0,
+        42,
+        30,
+    );
+}
+
+#[test]
+fn smallworld_bit_identical() {
+    // Watts-Strogatz is not bipartite: this locks the engines on a
+    // topology produced by the greedy max-cut bipartition
+    let spec = TopologySpec::SmallWorld { k: 4, beta: 0.2 };
+    let b = gen::build(&spec, N, 43).unwrap();
+    assert!(b.dropped_edges > 0, "small world must exercise the max-cut path");
+    lock(AlgSpec::cq_ggadmm(0.2, 0.85, 0.995, 2), b.topology, true, 0.0, 43, 30);
+}
+
+#[test]
+fn smallworld_logistic_bit_identical() {
+    lock(
+        AlgSpec::c_ggadmm(0.2, 0.85),
+        family(TopologySpec::SmallWorld { k: 6, beta: 0.3 }, 44),
+        false,
+        0.0,
+        44,
+        12,
+    );
+}
+
+#[test]
+fn geometric_with_erasure_bit_identical() {
+    // physical link distances + erasure: the energy/link accounting of
+    // both engines must agree on radius-connected deployments too
+    lock(
+        AlgSpec::c_ggadmm(0.2, 0.85),
+        family(TopologySpec::Geometric { radius_m: 120.0 }, 45),
+        true,
+        0.2,
+        45,
+        30,
+    );
 }

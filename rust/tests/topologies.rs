@@ -1,0 +1,130 @@
+//! Property suite for the generalized topology layer (`graph::gen`).
+//!
+//! Every generator × parameter grid point must come out of the
+//! bipartition pass as a **connected**, **bipartite-consistent**
+//! head/tail instance with no isolated workers, deterministically per
+//! seed, with the dropped-edge accounting consistent — at every worker
+//! count, including the degenerate small ones.
+
+use cq_ggadmm::config::TopologySpec;
+use cq_ggadmm::graph::{gen, spectral, Group};
+use cq_ggadmm::testing::prop::{check, Gen};
+
+/// Draw one spec from the full generator × parameter grid.
+fn arbitrary_spec(g: &mut Gen) -> TopologySpec {
+    match g.usize_in(0, 7) {
+        0 => TopologySpec::Chain,
+        1 => TopologySpec::Ring,
+        2 => TopologySpec::Star,
+        3 => TopologySpec::Grid { torus: false },
+        4 => TopologySpec::Grid { torus: true },
+        5 => TopologySpec::ErdosRenyi { p: g.f64_in(0.0, 0.6) },
+        6 => TopologySpec::SmallWorld { k: 2 * g.usize_in(1, 4), beta: g.f64_in(0.0, 1.0) },
+        _ => TopologySpec::Geometric { radius_m: g.f64_in(30.0, 400.0) },
+    }
+}
+
+#[test]
+fn every_family_is_connected_and_bipartite_consistent() {
+    check("generator zoo invariants", 150, |g| {
+        let spec = arbitrary_spec(g);
+        let n = g.usize_in(2, 48);
+        let seed = g.u64();
+        let b = gen::build(&spec, n, seed).unwrap_or_else(|e| panic!("{spec} n={n}: {e}"));
+        let t = &b.topology;
+        assert_eq!(t.n(), n, "{spec}");
+        assert!(t.is_connected(), "{spec} n={n} seed={seed}: disconnected");
+        assert!(t.is_bipartite_consistent(), "{spec} n={n} seed={seed}");
+        // no isolated workers, every worker grouped
+        let heads = t.heads().len();
+        let tails = t.tails().len();
+        assert_eq!(heads + tails, n);
+        assert!(heads >= 1 && tails >= 1, "{spec} n={n}: empty group");
+        for i in 0..n {
+            assert!(t.degree(i) >= 1, "{spec} n={n}: worker {i} isolated");
+            assert!(t.max_neighbor_distance(i).is_finite());
+        }
+        // every edge is head -> tail with real coordinates on both ends
+        for &(h, tl) in t.edges() {
+            assert_eq!(t.group(h), Group::Head);
+            assert_eq!(t.group(tl), Group::Tail);
+            let d = t.distance(h, tl);
+            assert!(d.is_finite() && d >= 0.0);
+        }
+        // exact families keep everything; the max-cut path reports what
+        // it dropped
+        if b.exact {
+            assert_eq!(b.dropped_edges, 0, "{spec}");
+        }
+    });
+}
+
+#[test]
+fn builds_are_deterministic_per_seed() {
+    check("same (spec, n, seed) => same topology", 60, |g| {
+        let spec = arbitrary_spec(g);
+        let n = g.usize_in(2, 32);
+        let seed = g.u64();
+        let a = gen::build(&spec, n, seed).unwrap();
+        let b = gen::build(&spec, n, seed).unwrap();
+        assert_eq!(a.topology.edges(), b.topology.edges(), "{spec}");
+        assert_eq!(a.dropped_edges, b.dropped_edges, "{spec}");
+        assert_eq!(a.exact, b.exact, "{spec}");
+        for i in 0..n {
+            assert_eq!(a.topology.group(i), b.topology.group(i), "{spec}");
+            assert_eq!(a.topology.position(i), b.topology.position(i), "{spec}");
+        }
+    });
+}
+
+#[test]
+fn exact_families_are_exact() {
+    // families with a guaranteed 2-coloring must never drop an edge
+    check("chain/star/grid/even-ring exact", 60, |g| {
+        let specs = [
+            (TopologySpec::Chain, g.usize_in(2, 40)),
+            (TopologySpec::Star, g.usize_in(2, 40)),
+            (TopologySpec::Grid { torus: false }, g.usize_in(2, 40)),
+            (TopologySpec::Ring, 2 * g.usize_in(1, 20)),
+        ];
+        for (spec, n) in specs {
+            let b = gen::build(&spec, n, g.u64()).unwrap();
+            assert!(b.exact, "{spec} n={n}");
+            assert_eq!(b.dropped_edges, 0, "{spec} n={n}");
+        }
+    });
+}
+
+#[test]
+fn spectral_constants_finite_across_the_zoo() {
+    // the Theorem-3 constants must be computable on every family (this
+    // is where degenerate graphs used to surface NaN panics)
+    check("spectral constants finite", 25, |g| {
+        let spec = arbitrary_spec(g);
+        let n = g.usize_in(4, 20);
+        let b = gen::build(&spec, n, g.u64()).unwrap();
+        let c = spectral::constants(&b.topology);
+        assert!(c.sigma_max_c.is_finite() && c.sigma_max_c > 0.0, "{spec}");
+        assert!(c.sigma_max_m_minus.is_finite() && c.sigma_max_m_minus > 0.0, "{spec}");
+        assert!(c.sigma_min_nz_m_minus.is_finite() && c.sigma_min_nz_m_minus > 0.0, "{spec}");
+    });
+}
+
+#[test]
+fn energy_model_is_finite_on_generated_deployments() {
+    // end-to-end: physical distances from every generator through the
+    // (now saturating) Shannon energy model
+    use cq_ggadmm::comm::{EnergyModel, EnergyParams};
+    check("energy finite on zoo deployments", 40, |g| {
+        let spec = arbitrary_spec(g);
+        let n = g.usize_in(2, 32);
+        let b = gen::build(&spec, n, g.u64()).unwrap();
+        let m = EnergyModel::new(EnergyParams::default(), n, 0.5);
+        let d_model = g.usize_in(1, 4096);
+        for i in 0..n {
+            let dist = b.topology.max_neighbor_distance(i);
+            let e = m.energy_j(32 * d_model as u64, dist);
+            assert!(e.is_finite() && e >= 0.0, "{spec} worker {i}: e={e}");
+        }
+    });
+}
