@@ -4,14 +4,23 @@
 //! spawning a thousand OS threads.  CI runs this on every PR (see
 //! `.github/workflows/ci.yml`, "coordinator scale smoke").
 //!
+//! The smoke also exercises the persistence layer at scale: the run
+//! streams a JSONL event log into a run directory, checkpoints midway,
+//! is dropped, and a second coordinator resumed from the bytes on disk
+//! must land on the uninterrupted trajectory **bit-for-bit**.
+//!
 //! Run with: `cargo run --release --example coordinator_scale`
 //! Env: `SCALE_WORKERS` (default 1024), `SCALE_THREADS` (default 4),
-//! `SCALE_ITERS` (default 8).
+//! `SCALE_ITERS` (default 8), `SCALE_RUN_BASE` (run-dir base, default
+//! a temp dir).
 
 use cq_ggadmm::algs::{AlgSpec, Problem};
-use cq_ggadmm::coordinator::{Coordinator, CoordinatorOptions};
+use cq_ggadmm::config::ExecutionConfig;
+use cq_ggadmm::coordinator::Coordinator;
 use cq_ggadmm::data;
 use cq_ggadmm::graph::Topology;
+use cq_ggadmm::io::{checkpoint, run_with_persistence, JsonlSink, PersistableEngine, RunDir};
+use std::path::PathBuf;
 
 fn env_usize(key: &str, default: usize) -> usize {
     std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
@@ -34,12 +43,10 @@ fn main() {
     );
 
     let spec = AlgSpec::cq_ggadmm(0.05, 0.9, 0.995, 2);
-    let coord = Coordinator::spawn(
-        problem,
-        topo,
-        spec,
-        CoordinatorOptions { seed, threads, record_every: 1, ..CoordinatorOptions::default() },
-    );
+    let exec = ExecutionConfig::default().with_seed(seed).with_threads(threads);
+    let spawn = || Coordinator::spawn(problem.clone(), topo.clone(), spec.clone(), exec.clone());
+
+    let coord = spawn();
     assert!(
         coord.threads() <= cq_ggadmm::parallel::resolve_threads(threads),
         "executor must stay bounded: {} threads for {workers} workers",
@@ -65,5 +72,55 @@ fn main() {
         last.loss_gap
     );
     assert!(last.cum_rounds > 0, "nothing was transmitted");
-    println!("coordinator scale smoke OK ({workers} workers, {} threads)", threads.max(1));
+
+    // --- kill-and-resume at scale: run K1, drop, resume, finish -------
+    let base = std::env::var("SCALE_RUN_BASE")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| {
+            std::env::temp_dir().join(format!("cq_scale_runs_{}", std::process::id()))
+        });
+    let k1 = (iters / 2).max(1);
+    let dir = RunDir::create(&base, "coordinator-scale").expect("create run dir");
+    let mut interrupted = spawn();
+    interrupted.start_event_log(Box::new(
+        JsonlSink::create(&dir.events_path()).expect("create event log"),
+    ));
+    run_with_persistence(&mut interrupted, k1, &dir, 0).expect("first life");
+    drop(interrupted); // the "kill": only the run directory survives
+
+    let state = checkpoint::load(&dir.checkpoint_path()).expect("load checkpoint");
+    let mut resumed = spawn();
+    resumed.restore_state(&state);
+    assert_eq!(resumed.iteration(), k1, "resume point");
+    resumed.resume_event_log(Box::new(
+        JsonlSink::append(&dir.events_path()).expect("append event log"),
+    ));
+    run_with_persistence(&mut resumed, iters - k1, &dir, 0).expect("second life");
+
+    // bit-for-bit: the resumed trajectory equals the uninterrupted one
+    let resumed_trace = resumed.trace();
+    assert_eq!(resumed_trace.points.len(), trace.points.len(), "trace length after resume");
+    for (a, b) in trace.points.iter().zip(&resumed_trace.points) {
+        assert_eq!(
+            a.loss_gap.to_bits(),
+            b.loss_gap.to_bits(),
+            "iter {}: resumed loss diverged",
+            a.iteration
+        );
+        assert_eq!(a.cum_bits, b.cum_bits, "iter {}: resumed bits diverged", a.iteration);
+        assert_eq!(
+            a.cum_energy_j.to_bits(),
+            b.cum_energy_j.to_bits(),
+            "iter {}: resumed energy diverged",
+            a.iteration
+        );
+    }
+    let events = std::fs::read_to_string(dir.events_path()).expect("read event log");
+    let n_records = events.lines().filter(|l| l.contains("\"event\":\"record\"")).count();
+    assert_eq!(n_records as u64, iters, "one record event per iteration");
+    println!("events -> {}", dir.events_path().display());
+    println!(
+        "coordinator scale smoke OK ({workers} workers, {} threads, resume bit-identical)",
+        threads.max(1)
+    );
 }

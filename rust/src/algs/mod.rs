@@ -133,6 +133,36 @@ impl AlgSpec {
         }
         Ok(())
     }
+
+    /// Build a variant from its CLI / manifest name plus the censoring
+    /// and quantization knobs (knobs a variant does not use are
+    /// ignored).  `dgd` is *not* an `AlgSpec` — the first-order baseline
+    /// has its own driver; callers route it before this.  Keep the name
+    /// list in sync with `config::manifest::ALG_NAMES`.
+    pub fn parse(
+        name: &str,
+        tau0: f64,
+        xi: f64,
+        omega: f64,
+        bits0: u32,
+    ) -> Result<AlgSpec, String> {
+        let spec = match name {
+            "ggadmm" => AlgSpec::ggadmm(),
+            "c-ggadmm" => AlgSpec::c_ggadmm(tau0, xi),
+            "q-ggadmm" => AlgSpec::q_ggadmm(omega, bits0),
+            "cq-ggadmm" => AlgSpec::cq_ggadmm(tau0, xi, omega, bits0),
+            "c-admm" => AlgSpec::c_admm(tau0, xi),
+            "gadmm" => AlgSpec::gadmm_chain(),
+            other => {
+                return Err(format!(
+                    "unknown algorithm '{other}' \
+                     (expected ggadmm|c-ggadmm|q-ggadmm|cq-ggadmm|c-admm|gadmm)"
+                ))
+            }
+        };
+        spec.validate()?;
+        Ok(spec)
+    }
 }
 
 /// A decentralized consensus problem instance: the partitioned data, the

@@ -26,12 +26,18 @@
 
 use super::{AlgSpec, Problem, Schedule};
 use crate::comm::{CommLog, EnergyModel, EnergyParams, LinkKind, Medium};
+use crate::config::ExecutionConfig;
 use crate::graph::Topology;
+use crate::io::checkpoint::{MediumState, RunState};
+use crate::io::{EventRecorder, EventSink, PersistableEngine};
 use crate::metrics::{Trace, TracePoint};
 use crate::protocol::{build_cores, ProtocolConfig, WorkerCore};
 use crate::solver::Backend;
 
-/// Execution options for a run.
+/// Legacy execution options for a run — a thin shim over
+/// [`ExecutionConfig`], kept so existing call sites compile; new code
+/// should construct an [`ExecutionConfig`] directly (both engines accept
+/// `impl Into<ExecutionConfig>`).
 #[derive(Clone, Debug)]
 pub struct RunOptions {
     pub backend: Backend,
@@ -78,6 +84,23 @@ impl Default for RunOptions {
     }
 }
 
+impl From<RunOptions> for ExecutionConfig {
+    fn from(o: RunOptions) -> ExecutionConfig {
+        ExecutionConfig {
+            backend: o.backend,
+            artifacts_dir: o.artifacts_dir,
+            threads: o.threads,
+            sweep_threads: 1,
+            seed: o.seed,
+            record_every: o.record_every,
+            drop_prob: o.drop_prob,
+            link: o.link,
+            energy: o.energy,
+            incremental: o.incremental,
+        }
+    }
+}
+
 /// Read-only view of a worker's state (tests/diagnostics).
 #[derive(Clone, Debug)]
 pub struct WorkerSnapshot {
@@ -90,11 +113,14 @@ pub struct WorkerSnapshot {
 pub struct Run {
     problem: Problem,
     topo: Topology,
-    opts: RunOptions,
+    opts: ExecutionConfig,
     cores: Vec<WorkerCore>,
     medium: Medium,
     trace: Trace,
     iter: u64,
+    /// optional streaming event log (io::events); emits at the same
+    /// cadence as the trace
+    recorder: Option<EventRecorder>,
     /// cached phase groups: `[heads, tails]` for alternating schedules,
     /// `[all]` for Jacobian — constant over a run, so `step` never
     /// rebuilds them (taken/restored around the phase loop to satisfy the
@@ -109,18 +135,25 @@ pub struct Run {
 }
 
 impl Run {
-    pub fn new(problem: Problem, topo: Topology, spec: AlgSpec, opts: RunOptions) -> Run {
+    pub fn new(
+        problem: Problem,
+        topo: Topology,
+        spec: AlgSpec,
+        opts: impl Into<ExecutionConfig>,
+    ) -> Run {
+        let opts: ExecutionConfig = opts.into();
         spec.validate().expect("invalid AlgSpec");
+        opts.validate().expect("invalid ExecutionConfig");
         assert_eq!(problem.shards.len(), topo.n());
+        let threads = crate::parallel::resolve_threads(opts.threads);
         assert!(
-            !(opts.backend == Backend::Pjrt && opts.threads > 1),
+            !(opts.backend == Backend::Pjrt && threads > 1),
             "the PJRT backend shares one client across workers; use threads = 1"
         );
         // the persistent pool is built first so the one-time solver
         // construction (Gram matrices + Cholesky factors) fans out over
         // it too — one spawn serves both setup and every phase dispatch
-        let mut pool =
-            (opts.threads > 1).then(|| crate::parallel::WorkerPool::new(opts.threads));
+        let mut pool = (threads > 1).then(|| crate::parallel::WorkerPool::new(threads));
         let cfg = ProtocolConfig {
             backend: opts.backend,
             artifacts_dir: opts.artifacts_dir.clone(),
@@ -151,7 +184,32 @@ impl Run {
             opts,
             trace,
             iter: 0,
+            recorder: None,
         }
+    }
+
+    /// Attach a fresh streaming event log: emits `run_start` now and a
+    /// `record` event at every trace sample from here on.
+    pub fn start_event_log(&mut self, sink: Box<dyn EventSink>) {
+        let mut rec = EventRecorder::new(sink, self.topo.n());
+        rec.rebase(self.iter);
+        rec.run_start(
+            &self.trace.algorithm,
+            &self.problem.dataset_name,
+            self.topo.n(),
+            self.problem.d,
+            self.opts.seed,
+        );
+        self.recorder = Some(rec);
+    }
+
+    /// Attach an event log continuing an earlier one (resume): no
+    /// `run_start` line; interval accounting restarts at the current
+    /// iteration.
+    pub fn resume_event_log(&mut self, sink: Box<dyn EventSink>) {
+        let mut rec = EventRecorder::new(sink, self.topo.n());
+        rec.rebase(self.iter);
+        self.recorder = Some(rec);
     }
 
     /// Primal update for one group of workers (in parallel across the
@@ -251,14 +309,18 @@ impl Run {
             consensus = consensus.max(diff);
         }
         let log = self.medium.log();
-        self.trace.push(TracePoint {
+        let point = TracePoint {
             iteration: self.iter,
             loss_gap: gap,
             consensus_gap: consensus,
             cum_rounds: log.rounds(),
             cum_bits: log.total_bits,
             cum_energy_j: log.total_energy_j,
-        });
+        };
+        self.trace.push(point);
+        if let Some(rec) = &mut self.recorder {
+            rec.record(&point, log, self.medium.sim_time_s());
+        }
     }
 
     /// Run `iters` iterations and return the trace.
@@ -334,6 +396,71 @@ impl Run {
             crate::util::axpy(&mut sum, 1.0, c.alpha());
         }
         crate::util::norm2(&sum)
+    }
+
+    /// Export the full durable state at the current iteration boundary:
+    /// every core's protocol state (including quantizer RNGs), the
+    /// medium's cumulative totals + link-model RNG, and the trace so far.
+    /// Restoring this into a freshly constructed engine reproduces the
+    /// uninterrupted trajectory bit-for-bit (`tests/persistence.rs`).
+    pub fn snapshot_state(&self) -> RunState {
+        let log = self.medium.log();
+        RunState {
+            iteration: self.iter,
+            cores: self.cores.iter().map(|c| c.export_state()).collect(),
+            medium: MediumState {
+                rounds: log.rounds(),
+                total_bits: log.total_bits,
+                total_energy_j: log.total_energy_j,
+                sim_time_s: self.medium.sim_time_s(),
+                link: self.medium.link_state(),
+            },
+            trace: self.trace.clone(),
+        }
+    }
+
+    /// Overwrite this engine's state from a checkpoint.  The engine must
+    /// have been constructed for the same problem / topology / spec /
+    /// options the checkpoint came from.
+    pub fn restore_state(&mut self, s: &RunState) {
+        assert_eq!(
+            s.cores.len(),
+            self.cores.len(),
+            "checkpoint is for a different worker count"
+        );
+        for (core, cs) in self.cores.iter_mut().zip(&s.cores) {
+            core.import_state(cs);
+        }
+        self.medium.restore(
+            s.medium.rounds,
+            s.medium.total_bits,
+            s.medium.total_energy_j,
+            s.medium.sim_time_s,
+            &s.medium.link,
+        );
+        self.trace = s.trace.clone();
+        self.iter = s.iteration;
+        if let Some(rec) = &mut self.recorder {
+            rec.rebase(s.iteration);
+        }
+    }
+}
+
+impl PersistableEngine for Run {
+    fn step(&mut self) {
+        Run::step(self);
+    }
+    fn iteration(&self) -> u64 {
+        Run::iteration(self)
+    }
+    fn snapshot_state(&self) -> RunState {
+        Run::snapshot_state(self)
+    }
+    fn restore_state(&mut self, state: &RunState) {
+        Run::restore_state(self, state);
+    }
+    fn recorder_mut(&mut self) -> Option<&mut EventRecorder> {
+        self.recorder.as_mut()
     }
 }
 
@@ -630,6 +757,57 @@ mod tests {
         for i in 0..6 {
             assert_eq!(ideal.snapshot(i).theta, slow.snapshot(i).theta);
         }
+    }
+
+    #[test]
+    fn snapshot_restore_resumes_bit_identically() {
+        // quantized + censored + erasure: every piece of RNG state is live
+        let (p, t) = small_problem(true, 8, 30);
+        let spec = AlgSpec::cq_ggadmm(0.3, 0.85, 0.99, 2);
+        let opts = ExecutionConfig::default().with_seed(11).with_drop_prob(0.2);
+        let mut oracle = Run::new(p.clone(), t.clone(), spec.clone(), opts.clone());
+        let mut a = Run::new(p.clone(), t.clone(), spec.clone(), opts.clone());
+        for _ in 0..12 {
+            oracle.step();
+            a.step();
+        }
+        let state = a.snapshot_state();
+        drop(a); // the engine is gone; resume into a fresh one
+        let mut b = Run::new(p, t, spec, opts);
+        b.restore_state(&state);
+        assert_eq!(b.iteration(), 12);
+        for _ in 0..18 {
+            oracle.step();
+            b.step();
+        }
+        assert_eq!(oracle.trace(), b.trace(), "resumed trace diverged");
+        assert_eq!(oracle.comm().total_bits, b.comm().total_bits);
+        assert_eq!(
+            oracle.sim_time_s().to_bits(),
+            b.sim_time_s().to_bits(),
+            "sim clock diverged"
+        );
+    }
+
+    #[test]
+    fn event_log_streams_run_start_and_records() {
+        let (p, t) = small_problem(true, 6, 31);
+        let mut run = Run::new(
+            p,
+            t,
+            AlgSpec::c_ggadmm(0.5, 0.85),
+            ExecutionConfig::default().with_record_every(2),
+        );
+        let sink = crate::io::MemorySink::new();
+        run.start_event_log(Box::new(sink.clone()));
+        run.run(6);
+        let lines = sink.lines();
+        // run_start + records at iterations 2, 4, 6
+        assert_eq!(lines.len(), 4, "{lines:?}");
+        assert!(lines[0].contains(r#""event":"run_start""#), "{}", lines[0]);
+        assert!(lines[0].contains(r#""workers":6"#), "{}", lines[0]);
+        assert!(lines[1].contains(r#""iteration":2"#), "{}", lines[1]);
+        assert!(lines[3].contains(r#""iteration":6"#), "{}", lines[3]);
     }
 
     #[test]

@@ -46,6 +46,9 @@ pub struct Args {
     pub command: String,
     values: BTreeMap<String, String>,
     switches: Vec<String>,
+    /// Option names the user passed explicitly (declared defaults are
+    /// seeded into `values` but not recorded here).
+    explicit: Vec<String>,
     /// Free (positional) arguments after options.
     pub positional: Vec<String>,
 }
@@ -53,6 +56,14 @@ pub struct Args {
 impl Args {
     pub fn get(&self, name: &str) -> Option<&str> {
         self.values.get(name).map(|s| s.as_str())
+    }
+
+    /// True when the option was passed on the command line (a declared
+    /// default alone does not count).  This is what lets `--manifest`
+    /// layering work: manifest values win over flag *defaults*, explicit
+    /// flags win over the manifest.
+    pub fn given(&self, name: &str) -> bool {
+        self.explicit.iter().any(|s| s == name)
     }
 
     pub fn get_or(&self, name: &str, default: &str) -> String {
@@ -156,6 +167,7 @@ impl Cli {
 
         let mut values = BTreeMap::new();
         let mut switches = Vec::new();
+        let mut explicit = Vec::new();
         let mut positional = Vec::new();
         // seed defaults
         for o in &cmd.opts {
@@ -201,6 +213,7 @@ impl Cli {
                         }
                     };
                     values.insert(name.to_string(), value);
+                    explicit.push(name.to_string());
                 }
             } else {
                 positional.push(tok.clone());
@@ -211,6 +224,7 @@ impl Cli {
             command: cmd.name.to_string(),
             values,
             switches,
+            explicit,
             positional,
         })
     }
@@ -255,6 +269,9 @@ mod tests {
         assert_eq!(a.get("figure"), Some("fig2"));
         assert_eq!(a.get_usize("iters").unwrap(), Some(50));
         assert!(!a.has("quiet"));
+        // defaults are readable but not "given"; explicit flags are both
+        assert!(a.given("iters"));
+        assert!(!a.given("figure"));
     }
 
     #[test]

@@ -16,7 +16,7 @@
 //! see DESIGN.md §Substitutions).
 
 /// Scenario parameters.
-#[derive(Clone, Copy, Debug)]
+#[derive(Clone, Copy, Debug, PartialEq)]
 pub struct EnergyParams {
     /// Total system bandwidth in Hz (paper: 2 MHz).
     pub total_bandwidth_hz: f64,

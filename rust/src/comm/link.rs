@@ -31,9 +31,26 @@ pub enum Fate {
     Dropped,
 }
 
+/// Durable link-model state for checkpointing.  Stateless models
+/// (ideal, latency) carry nothing; the erasure link carries its RNG
+/// stream position so resumed drops line up bit-for-bit.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum LinkState {
+    Stateless,
+    Rng { state: u128, inc: u128 },
+}
+
 /// A channel impairment model consulted once per committed broadcast.
 pub trait LinkModel: Send {
     fn fate(&mut self, from: usize, iteration: u64, payload_bits: u64, distance_m: f64) -> Fate;
+
+    /// Export durable state (default: none).
+    fn state(&self) -> LinkState {
+        LinkState::Stateless
+    }
+
+    /// Restore durable state (default: nothing to restore).
+    fn restore(&mut self, _s: &LinkState) {}
 }
 
 /// Perfect channel.
@@ -66,6 +83,17 @@ impl LinkModel for ErasureLink {
             Fate::Dropped
         } else {
             Fate::Delivered { latency_s: 0.0 }
+        }
+    }
+
+    fn state(&self) -> LinkState {
+        let (state, inc) = self.rng.to_raw();
+        LinkState::Rng { state, inc }
+    }
+
+    fn restore(&mut self, s: &LinkState) {
+        if let LinkState::Rng { state, inc } = *s {
+            self.rng = Pcg64::from_raw(state, inc);
         }
     }
 }
@@ -121,6 +149,54 @@ impl LinkKind {
             LinkKind::Latency { base_s, per_bit_s } => {
                 Box::new(LatencyLink { base_s, per_bit_s })
             }
+        }
+    }
+
+    /// Parse the compact spec syntax used by manifests and CLI flags:
+    /// `ideal`, `erasure:<p>`, `latency:<base_s>,<per_bit_s>`.
+    pub fn parse(s: &str) -> Result<LinkKind, String> {
+        let s = s.trim();
+        let (head, rest) = match s.split_once(':') {
+            Some((h, r)) => (h.trim(), Some(r.trim())),
+            None => (s, None),
+        };
+        let num = |v: &str, what: &str| -> Result<f64, String> {
+            v.trim()
+                .parse::<f64>()
+                .map_err(|_| format!("link spec '{s}': bad {what} '{v}'"))
+        };
+        match (head, rest) {
+            ("ideal", None) => Ok(LinkKind::Ideal),
+            ("erasure", Some(p)) => {
+                let p = num(p, "probability")?;
+                if !(0.0..=1.0).contains(&p) {
+                    return Err(format!("link spec '{s}': probability out of [0,1]"));
+                }
+                Ok(LinkKind::Erasure { p })
+            }
+            ("latency", Some(args)) => {
+                let mut it = args.split(',');
+                let base = num(it.next().unwrap_or(""), "base_s")?;
+                let per_bit = num(it.next().ok_or_else(|| {
+                    format!("link spec '{s}': expected latency:<base_s>,<per_bit_s>")
+                })?, "per_bit_s")?;
+                if it.next().is_some() {
+                    return Err(format!("link spec '{s}': too many fields"));
+                }
+                Ok(LinkKind::Latency { base_s: base, per_bit_s: per_bit })
+            }
+            _ => Err(format!(
+                "unknown link spec '{s}' (expected ideal | erasure:<p> | latency:<base_s>,<per_bit_s>)"
+            )),
+        }
+    }
+
+    /// Canonical label; `LinkKind::parse(kind.label())` round-trips.
+    pub fn label(&self) -> String {
+        match self {
+            LinkKind::Ideal => "ideal".into(),
+            LinkKind::Erasure { p } => format!("erasure:{p}"),
+            LinkKind::Latency { base_s, per_bit_s } => format!("latency:{base_s},{per_bit_s}"),
         }
     }
 }
@@ -196,6 +272,28 @@ impl Medium {
     /// phase count, stretched by link latency).
     pub fn sim_time_s(&self) -> f64 {
         self.sim_time_s
+    }
+
+    /// Durable link-model state (checkpointing).
+    pub fn link_state(&self) -> LinkState {
+        self.link.state()
+    }
+
+    /// Restore the medium at an iteration boundary: checkpointed totals,
+    /// simulated clock, and the link model's RNG position.  The in-slot
+    /// scratch (`slot_latency_s`) is always zero between phases.
+    pub fn restore(
+        &mut self,
+        rounds: u64,
+        total_bits: u64,
+        total_energy_j: f64,
+        sim_time_s: f64,
+        link: &LinkState,
+    ) {
+        self.log.restore_totals(rounds, total_bits, total_energy_j);
+        self.sim_time_s = sim_time_s;
+        self.slot_latency_s = 0.0;
+        self.link.restore(link);
     }
 }
 

@@ -13,7 +13,7 @@ pub mod energy;
 pub mod link;
 
 pub use energy::{EnergyModel, EnergyParams};
-pub use link::{ErasureLink, Fate, IdealLink, LatencyLink, LinkKind, LinkModel, Medium};
+pub use link::{ErasureLink, Fate, IdealLink, LatencyLink, LinkKind, LinkModel, LinkState, Medium};
 
 /// What one worker put on the air in one slot.
 #[derive(Clone, Copy, Debug)]
@@ -27,11 +27,18 @@ pub struct Transmission {
 }
 
 /// Running totals + log of every transmission of a run.
+///
+/// A checkpoint restores only the totals (`prior_rounds`, `total_bits`,
+/// `total_energy_j`), not the per-transmission history, so checkpoints
+/// stay O(state) rather than O(history); `rounds()` folds the restored
+/// prior count into the live tally.
 #[derive(Clone, Debug, Default)]
 pub struct CommLog {
     pub transmissions: Vec<Transmission>,
     pub total_bits: u64,
     pub total_energy_j: f64,
+    /// Rounds from before the last restore (zero for a fresh run).
+    pub prior_rounds: u64,
 }
 
 impl CommLog {
@@ -41,9 +48,18 @@ impl CommLog {
         self.transmissions.push(t);
     }
 
-    /// Cumulative communication rounds (= number of transmissions).
+    /// Cumulative communication rounds (= number of transmissions,
+    /// including rounds restored from a checkpoint).
     pub fn rounds(&self) -> u64 {
-        self.transmissions.len() as u64
+        self.prior_rounds + self.transmissions.len() as u64
+    }
+
+    /// Reset to checkpointed totals, dropping the per-transmission log.
+    pub fn restore_totals(&mut self, rounds: u64, total_bits: u64, total_energy_j: f64) {
+        self.transmissions.clear();
+        self.prior_rounds = rounds;
+        self.total_bits = total_bits;
+        self.total_energy_j = total_energy_j;
     }
 
     /// Transmissions belonging to iteration `k`.

@@ -1,0 +1,176 @@
+//! The **one** execution-configuration surface: both engines
+//! ([`crate::algs::Run`] and the sharded coordinator) and the sweep
+//! scheduler consume the same [`ExecutionConfig`] value, so the
+//! execution knobs cannot drift apart per engine again (the seed repo
+//! grew three near-identical structs — `RunOptions`,
+//! `CoordinatorOptions`, `ExecOptions` — which this replaces; those
+//! names survive as thin legacy shims that convert `Into` this).
+//!
+//! `tests/coordinator_equivalence.rs` constructs both engines from one
+//! shared value, which is what keeps the surfaces unified by force.
+
+use crate::comm::{EnergyParams, LinkKind};
+use crate::solver::Backend;
+
+/// Every knob of one run (engine-agnostic) plus the sweep scheduler's
+/// run-level parallelism.  Construct with [`ExecutionConfig::default`]
+/// and chain the `with_*` builders.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ExecutionConfig {
+    pub backend: Backend,
+    /// Artifact directory for the PJRT backend.
+    pub artifacts_dir: Option<std::path::PathBuf>,
+    /// Intra-run threads: group-parallel primal/dual updates (`1` =
+    /// sequential, `0` = all cores).  In a sweep, only applied when the
+    /// run can use the whole pool — concurrently scheduled runs execute
+    /// single-threaded to avoid oversubscription.
+    pub threads: usize,
+    /// Concurrent runs across a sweep (run-level parallelism).  `1` =
+    /// the serial driver; `0` = auto (all cores — unless `threads > 1`,
+    /// in which case the explicit intra-run request wins and the sweep
+    /// stays serial).  Any value reproduces the serial traces
+    /// bit-for-bit: every run owns its spec-pinned seed and results are
+    /// collected in job order.
+    pub sweep_threads: usize,
+    /// Seed for quantizer randomness and failure injection.
+    pub seed: u64,
+    /// Sample the trace every this many iterations (1 = every iteration).
+    pub record_every: u64,
+    /// Broadcast-erasure probability (failure injection): a transmission
+    /// is lost with this probability — energy and bits are still spent,
+    /// but receivers keep the stale value (erasure with perfect
+    /// feedback).  Shorthand for `link = Some(LinkKind::Erasure { p })`.
+    pub drop_prob: f64,
+    /// Explicit link model; when `None`, `drop_prob` selects between
+    /// [`LinkKind::Ideal`] and [`LinkKind::Erasure`].
+    pub link: Option<LinkKind>,
+    pub energy: EnergyParams,
+    /// Censoring-aware incremental bookkeeping (default): neighbor sums
+    /// and dual increments are rebuilt only when a hat in the worker's
+    /// closed neighborhood committed.  `false` forces the from-scratch
+    /// recompute every phase — bit-identical by construction.
+    pub incremental: bool,
+}
+
+impl Default for ExecutionConfig {
+    fn default() -> Self {
+        ExecutionConfig {
+            backend: Backend::Native,
+            artifacts_dir: None,
+            threads: 1,
+            sweep_threads: 1,
+            seed: 7,
+            record_every: 1,
+            drop_prob: 0.0,
+            link: None,
+            energy: EnergyParams::default(),
+            incremental: true,
+        }
+    }
+}
+
+impl ExecutionConfig {
+    /// Saturate the machine: run-level parallelism across all cores.
+    pub fn saturating() -> Self {
+        ExecutionConfig {
+            sweep_threads: crate::parallel::default_threads(),
+            ..ExecutionConfig::default()
+        }
+    }
+
+    pub fn with_backend(mut self, backend: Backend) -> Self {
+        self.backend = backend;
+        self
+    }
+
+    pub fn with_artifacts_dir(mut self, dir: Option<std::path::PathBuf>) -> Self {
+        self.artifacts_dir = dir;
+        self
+    }
+
+    pub fn with_threads(mut self, threads: usize) -> Self {
+        self.threads = threads;
+        self
+    }
+
+    pub fn with_sweep_threads(mut self, sweep_threads: usize) -> Self {
+        self.sweep_threads = sweep_threads;
+        self
+    }
+
+    pub fn with_seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    pub fn with_record_every(mut self, record_every: u64) -> Self {
+        self.record_every = record_every;
+        self
+    }
+
+    pub fn with_drop_prob(mut self, drop_prob: f64) -> Self {
+        self.drop_prob = drop_prob;
+        self
+    }
+
+    pub fn with_link(mut self, link: Option<LinkKind>) -> Self {
+        self.link = link;
+        self
+    }
+
+    pub fn with_energy(mut self, energy: EnergyParams) -> Self {
+        self.energy = energy;
+        self
+    }
+
+    pub fn with_incremental(mut self, incremental: bool) -> Self {
+        self.incremental = incremental;
+        self
+    }
+
+    /// Validate cross-field constraints shared by all consumers.
+    pub fn validate(&self) -> Result<(), String> {
+        if !(0.0..=1.0).contains(&self.drop_prob) {
+            return Err(format!("drop_prob {} out of [0,1]", self.drop_prob));
+        }
+        if self.record_every == 0 {
+            return Err("record_every must be >= 1".into());
+        }
+        if self.backend == Backend::Pjrt && self.threads > 1 {
+            return Err("the PJRT backend shares one client across workers; use threads = 1".into());
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builders_compose() {
+        let cfg = ExecutionConfig::default()
+            .with_seed(42)
+            .with_threads(4)
+            .with_drop_prob(0.2)
+            .with_record_every(5);
+        assert_eq!(cfg.seed, 42);
+        assert_eq!(cfg.threads, 4);
+        assert_eq!(cfg.drop_prob, 0.2);
+        assert_eq!(cfg.record_every, 5);
+        // untouched knobs keep their defaults
+        assert_eq!(cfg.sweep_threads, 1);
+        assert!(cfg.incremental);
+        assert!(cfg.validate().is_ok());
+    }
+
+    #[test]
+    fn validate_rejects_bad_knobs() {
+        assert!(ExecutionConfig::default().with_drop_prob(1.5).validate().is_err());
+        assert!(ExecutionConfig::default().with_record_every(0).validate().is_err());
+        let pjrt = ExecutionConfig::default()
+            .with_backend(Backend::Pjrt)
+            .with_threads(2);
+        assert!(pjrt.validate().is_err());
+    }
+}

@@ -1,0 +1,361 @@
+//! The experiment manifest: one layered TOML document that subsumes the
+//! CLI flag sprawl — problem parameters, algorithm + quantizer/censor
+//! knobs, topology family, link model, execution layout (threads, sweep
+//! parallelism, backend) and output/checkpoint policy.
+//!
+//! Layering: every key is optional and defaults to the same value the
+//! bare CLI would use; explicit CLI flags override manifest values (the
+//! CLI applies them *after* loading).  `to_toml` serializes the fully
+//! resolved configuration — that is what [`crate::io::RunDir`] stamps
+//! into each run directory as `manifest.toml`, and
+//! `parse(to_toml(m)) == m` holds exactly (property-tested below).
+//!
+//! Sections:
+//!
+//! ```toml
+//! [experiment]      # ExperimentConfig + `alg`
+//! dataset = "synth-linear"
+//! alg = "cq-ggadmm"
+//! workers = 24
+//! topology = "smallworld:6,0.2"
+//! # ... rho, mu0, iters, seed, tau0, xi, omega, bits0, threads
+//!
+//! [exec]            # ExecutionConfig overrides
+//! threads = 4
+//! sweep_threads = 0
+//! backend = "native"
+//! record_every = 1
+//! incremental = true
+//!
+//! [link]
+//! model = "erasure:0.2"   # ideal | erasure:<p> | latency:<base>,<per_bit>
+//! drop_prob = 0.0         # legacy shorthand when `model` is absent
+//!
+//! [energy]
+//! total_bandwidth_hz = 2e6
+//! n0_w_per_hz = 1e-6
+//! slot_s = 1e-3
+//!
+//! [output]
+//! dir = "runs"            # run-directory base (omit = no run dir)
+//! checkpoint_every = 50   # iterations; 0 = only the final checkpoint
+//! ```
+
+use super::exec::ExecutionConfig;
+use super::{parse_toml, ExperimentConfig, TopologySpec};
+use crate::comm::LinkKind;
+use crate::solver::Backend;
+use std::fmt::Write as _;
+use std::path::PathBuf;
+
+/// Algorithm names a manifest accepts (`dgd` is the first-order
+/// baseline; the rest construct an `AlgSpec` — keep in sync with
+/// `AlgSpec::parse`).
+pub const ALG_NAMES: &[&str] =
+    &["ggadmm", "c-ggadmm", "q-ggadmm", "cq-ggadmm", "c-admm", "gadmm", "dgd"];
+
+/// Output / persistence policy of a run.
+#[derive(Clone, Debug, PartialEq)]
+pub struct OutputConfig {
+    /// Run-directory base (`runs/<NNNN-slug>/...`); `None` = no run dir.
+    pub dir: Option<PathBuf>,
+    /// Checkpoint cadence in iterations; 0 = only the final checkpoint.
+    pub checkpoint_every: u64,
+}
+
+impl Default for OutputConfig {
+    fn default() -> Self {
+        OutputConfig { dir: None, checkpoint_every: 0 }
+    }
+}
+
+/// The full resolved configuration of one experiment.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ExperimentManifest {
+    pub experiment: ExperimentConfig,
+    /// Algorithm name (see [`ALG_NAMES`]).
+    pub alg: String,
+    pub exec: ExecutionConfig,
+    pub output: OutputConfig,
+}
+
+impl Default for ExperimentManifest {
+    fn default() -> Self {
+        let experiment = ExperimentConfig::default();
+        // the execution layer inherits the experiment's seed and thread
+        // request unless [exec] overrides them
+        let exec = ExecutionConfig::default()
+            .with_seed(experiment.seed)
+            .with_threads(experiment.threads);
+        ExperimentManifest {
+            experiment,
+            alg: "cq-ggadmm".into(),
+            exec,
+            output: OutputConfig::default(),
+        }
+    }
+}
+
+impl ExperimentManifest {
+    /// Parse a manifest document.  Unknown sections are ignored (forward
+    /// compatibility); unknown values inside known keys error.
+    pub fn from_toml(text: &str) -> Result<ExperimentManifest, String> {
+        let experiment = ExperimentConfig::from_toml(text)?;
+        let doc = parse_toml(text)?;
+        let sec = if doc.sections.contains_key("experiment") { "experiment" } else { "" };
+        let mut m = ExperimentManifest::default();
+        m.exec = m
+            .exec
+            .with_seed(experiment.seed)
+            .with_threads(experiment.threads);
+        m.experiment = experiment;
+        if let Some(alg) = doc.get_str(sec, "alg")? {
+            m.alg = alg;
+        }
+        if let Some(v) = doc.get_usize("exec", "threads")? {
+            m.exec.threads = v;
+        }
+        if let Some(v) = doc.get_usize("exec", "sweep_threads")? {
+            m.exec.sweep_threads = v;
+        }
+        if let Some(s) = doc.get_str("exec", "backend")? {
+            m.exec.backend = Backend::parse(&s)?;
+        }
+        if let Some(s) = doc.get_str("exec", "artifacts_dir")? {
+            m.exec.artifacts_dir = Some(PathBuf::from(s));
+        }
+        if let Some(v) = doc.get_usize("exec", "record_every")? {
+            m.exec.record_every = v as u64;
+        }
+        if let Some(v) = doc.get_bool("exec", "incremental")? {
+            m.exec.incremental = v;
+        }
+        if let Some(s) = doc.get_str("link", "model")? {
+            m.exec.link = Some(LinkKind::parse(&s)?);
+        }
+        if let Some(v) = doc.get_f64("link", "drop_prob")? {
+            m.exec.drop_prob = v;
+        }
+        if let Some(v) = doc.get_f64("energy", "total_bandwidth_hz")? {
+            m.exec.energy.total_bandwidth_hz = v;
+        }
+        if let Some(v) = doc.get_f64("energy", "n0_w_per_hz")? {
+            m.exec.energy.n0_w_per_hz = v;
+        }
+        if let Some(v) = doc.get_f64("energy", "slot_s")? {
+            m.exec.energy.slot_s = v;
+        }
+        if let Some(s) = doc.get_str("output", "dir")? {
+            m.output.dir = Some(PathBuf::from(s));
+        }
+        if let Some(v) = doc.get_usize("output", "checkpoint_every")? {
+            m.output.checkpoint_every = v as u64;
+        }
+        m.validate()?;
+        Ok(m)
+    }
+
+    /// Load a manifest file.
+    pub fn load(path: &std::path::Path) -> Result<ExperimentManifest, String> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| format!("cannot read manifest {}: {e}", path.display()))?;
+        ExperimentManifest::from_toml(&text)
+            .map_err(|e| format!("manifest {}: {e}", path.display()))
+    }
+
+    /// Validate the cross-layer constraints on top of the per-struct ones.
+    pub fn validate(&self) -> Result<(), String> {
+        self.experiment.validate()?;
+        self.exec.validate()?;
+        if !ALG_NAMES.contains(&self.alg.as_str()) {
+            return Err(format!(
+                "unknown algorithm '{}' (expected one of {})",
+                self.alg,
+                ALG_NAMES.join("|")
+            ));
+        }
+        Ok(())
+    }
+
+    /// Serialize the fully resolved configuration.  `{}` formatting of
+    /// `f64` round-trips exactly through the parser, so
+    /// `from_toml(to_toml(m))` reproduces `m` bit-for-bit.
+    pub fn to_toml(&self) -> String {
+        let mut s = String::new();
+        let e = &self.experiment;
+        let _ = writeln!(s, "[experiment]");
+        let _ = writeln!(s, "dataset = \"{}\"", e.dataset.name());
+        let _ = writeln!(s, "alg = \"{}\"", self.alg);
+        let _ = writeln!(s, "workers = {}", e.workers);
+        let _ = writeln!(s, "connectivity = {}", e.connectivity);
+        if let Some(t) = &e.topology {
+            let _ = writeln!(s, "topology = \"{}\"", t.label());
+        }
+        let _ = writeln!(s, "rho = {}", e.rho);
+        let _ = writeln!(s, "mu0 = {}", e.mu0);
+        let _ = writeln!(s, "iters = {}", e.iters);
+        let _ = writeln!(s, "seed = {}", e.seed);
+        let _ = writeln!(s, "tau0 = {}", e.tau0);
+        let _ = writeln!(s, "xi = {}", e.xi);
+        let _ = writeln!(s, "omega = {}", e.omega);
+        let _ = writeln!(s, "bits0 = {}", e.bits0);
+        let _ = writeln!(s, "threads = {}", e.threads);
+        let x = &self.exec;
+        let _ = writeln!(s, "\n[exec]");
+        let _ = writeln!(s, "threads = {}", x.threads);
+        let _ = writeln!(s, "sweep_threads = {}", x.sweep_threads);
+        let _ = writeln!(
+            s,
+            "backend = \"{}\"",
+            match x.backend {
+                Backend::Native => "native",
+                Backend::Pjrt => "pjrt",
+            }
+        );
+        if let Some(dir) = &x.artifacts_dir {
+            let _ = writeln!(s, "artifacts_dir = \"{}\"", dir.display());
+        }
+        let _ = writeln!(s, "record_every = {}", x.record_every);
+        let _ = writeln!(s, "incremental = {}", x.incremental);
+        let _ = writeln!(s, "\n[link]");
+        if let Some(link) = &x.link {
+            let _ = writeln!(s, "model = \"{}\"", link.label());
+        }
+        let _ = writeln!(s, "drop_prob = {}", x.drop_prob);
+        let _ = writeln!(s, "\n[energy]");
+        let _ = writeln!(s, "total_bandwidth_hz = {}", x.energy.total_bandwidth_hz);
+        let _ = writeln!(s, "n0_w_per_hz = {}", x.energy.n0_w_per_hz);
+        let _ = writeln!(s, "slot_s = {}", x.energy.slot_s);
+        let _ = writeln!(s, "\n[output]");
+        if let Some(dir) = &self.output.dir {
+            let _ = writeln!(s, "dir = \"{}\"", dir.display());
+        }
+        let _ = writeln!(s, "checkpoint_every = {}", self.output.checkpoint_every);
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::DatasetId;
+
+    fn assert_round_trips(m: &ExperimentManifest) {
+        let text = m.to_toml();
+        let back = ExperimentManifest::from_toml(&text)
+            .unwrap_or_else(|e| panic!("serialized manifest must re-parse: {e}\n{text}"));
+        assert_eq!(&back, m, "round trip changed the manifest:\n{text}");
+        // parse -> serialize -> parse is a fixpoint
+        assert_eq!(back.to_toml(), text);
+    }
+
+    #[test]
+    fn default_round_trips() {
+        assert_round_trips(&ExperimentManifest::default());
+    }
+
+    #[test]
+    fn round_trip_property_over_knob_space() {
+        // sweep a spread of awkward values through every layer: floats
+        // that need shortest-repr printing, optional fields present and
+        // absent, every link model and backendless knob
+        let links = [
+            None,
+            Some(LinkKind::Ideal),
+            Some(LinkKind::Erasure { p: 0.17 }),
+            Some(LinkKind::Latency { base_s: 1.5e-3, per_bit_s: 1e-9 }),
+        ];
+        let topologies = [
+            None,
+            Some(TopologySpec::SmallWorld { k: 6, beta: 0.2 }),
+            Some(TopologySpec::Geometric { radius_m: 151.25 }),
+        ];
+        let mut case = 0u64;
+        for link in &links {
+            for topo in &topologies {
+                case += 1;
+                let mut m = ExperimentManifest::default();
+                m.alg = ALG_NAMES[(case as usize) % ALG_NAMES.len()].to_string();
+                m.experiment.dataset = DatasetId::Derm;
+                m.experiment.workers = 10 + case as usize;
+                m.experiment.connectivity = 0.1 + 0.07 * case as f64;
+                m.experiment.rho = 0.30000000000000004 * case as f64; // classic non-representable
+                m.experiment.mu0 = 1e-2 / 3.0;
+                m.experiment.seed = 1 << case;
+                m.experiment.tau0 = case as f64 * 0.1;
+                m.experiment.xi = 1.0 - 1.0 / (case + 2) as f64;
+                m.experiment.omega = 0.995;
+                m.experiment.topology = *topo;
+                m.exec.seed = m.experiment.seed;
+                m.exec.threads = case as usize % 5;
+                m.exec.sweep_threads = (case as usize + 1) % 3;
+                m.exec.record_every = 1 + case % 7;
+                m.exec.incremental = case % 2 == 0;
+                m.exec.link = *link;
+                m.exec.drop_prob = if link.is_none() { 0.125 } else { 0.0 };
+                m.exec.energy.slot_s = 1e-3 * (1.0 + case as f64 / 7.0);
+                m.output.dir = if case % 2 == 0 { Some(PathBuf::from("runs")) } else { None };
+                m.output.checkpoint_every = case * 10;
+                assert_round_trips(&m);
+            }
+        }
+        assert!(case >= 12, "property sweep must cover the grid");
+    }
+
+    #[test]
+    fn layering_experiment_seed_and_threads_flow_into_exec() {
+        let m = ExperimentManifest::from_toml(
+            r#"
+            [experiment]
+            seed = 99
+            threads = 3
+            "#,
+        )
+        .unwrap();
+        assert_eq!(m.exec.seed, 99);
+        assert_eq!(m.exec.threads, 3);
+        // ... and [exec] wins over [experiment] when both are given
+        let m = ExperimentManifest::from_toml(
+            r#"
+            [experiment]
+            seed = 99
+            threads = 3
+            [exec]
+            threads = 8
+            "#,
+        )
+        .unwrap();
+        assert_eq!(m.exec.threads, 8);
+        assert_eq!(m.experiment.threads, 3);
+    }
+
+    #[test]
+    fn link_and_output_sections_parse() {
+        let m = ExperimentManifest::from_toml(
+            r#"
+            [experiment]
+            alg = "ggadmm"
+            [link]
+            model = "latency:0.002,1e-9"
+            [output]
+            dir = "runs/smoke"
+            checkpoint_every = 25
+            "#,
+        )
+        .unwrap();
+        assert_eq!(m.alg, "ggadmm");
+        assert_eq!(m.exec.link, Some(LinkKind::Latency { base_s: 0.002, per_bit_s: 1e-9 }));
+        assert_eq!(m.output.dir.as_deref(), Some(std::path::Path::new("runs/smoke")));
+        assert_eq!(m.output.checkpoint_every, 25);
+    }
+
+    #[test]
+    fn rejects_unknown_alg_and_bad_link() {
+        assert!(ExperimentManifest::from_toml("alg = \"sgd\"")
+            .unwrap_err()
+            .contains("unknown algorithm"));
+        assert!(ExperimentManifest::from_toml("[link]\nmodel = \"carrier-pigeon\"")
+            .unwrap_err()
+            .contains("unknown link spec"));
+    }
+}

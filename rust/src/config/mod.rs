@@ -6,6 +6,18 @@
 //! Typed accessors with good error messages sit on top, and
 //! [`ExperimentConfig`] is the validated struct the CLI and the experiment
 //! harness consume.
+//!
+//! Higher layers: [`exec::ExecutionConfig`] is the one execution surface
+//! both engines and the sweep scheduler consume, and
+//! [`manifest::ExperimentManifest`] is the full layered TOML front end
+//! (problem + algorithm + execution + link + output) every CLI
+//! subcommand accepts via `--manifest`.
+
+pub mod exec;
+pub mod manifest;
+
+pub use exec::ExecutionConfig;
+pub use manifest::{ExperimentManifest, OutputConfig};
 
 use std::collections::BTreeMap;
 
@@ -416,7 +428,7 @@ impl DatasetId {
 }
 
 /// Fully validated experiment configuration.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct ExperimentConfig {
     pub dataset: DatasetId,
     pub workers: usize,

@@ -40,14 +40,20 @@ pub mod worker;
 
 use crate::algs::{AlgSpec, Problem, Schedule};
 use crate::comm::{CommLog, EnergyModel, EnergyParams, LinkKind, Medium};
+use crate::config::ExecutionConfig;
 use crate::graph::Topology;
+use crate::io::checkpoint::{MediumState, RunState};
+use crate::io::{EventRecorder, EventSink, PersistableEngine};
 use crate::metrics::{Trace, TracePoint};
 use crate::parallel::{resolve_threads, SyncPtr, WorkerPool};
 use crate::protocol::{build_cores, ProtocolConfig};
 use crate::solver::Backend;
 use worker::ShardWorker;
 
-/// Options for a coordinated run.
+/// Legacy options for a coordinated run — a thin shim over
+/// [`ExecutionConfig`]; new code should construct an
+/// [`ExecutionConfig`] directly ([`Coordinator::spawn`] accepts
+/// `impl Into<ExecutionConfig>`).
 #[derive(Clone, Debug)]
 pub struct CoordinatorOptions {
     pub seed: u64,
@@ -83,11 +89,28 @@ impl Default for CoordinatorOptions {
     }
 }
 
+impl From<CoordinatorOptions> for ExecutionConfig {
+    fn from(o: CoordinatorOptions) -> ExecutionConfig {
+        ExecutionConfig {
+            backend: Backend::Native,
+            artifacts_dir: None,
+            threads: o.threads,
+            sweep_threads: 1,
+            seed: o.seed,
+            record_every: o.record_every,
+            drop_prob: o.drop_prob,
+            link: o.link,
+            energy: o.energy,
+            incremental: o.incremental,
+        }
+    }
+}
+
 /// Leader handle over the sharded worker fleet.
 pub struct Coordinator {
     topo: Topology,
     problem: Problem,
-    opts: CoordinatorOptions,
+    opts: ExecutionConfig,
     shards: Vec<ShardWorker>,
     pool: WorkerPool,
     medium: Medium,
@@ -97,6 +120,9 @@ pub struct Coordinator {
     phase_groups: Vec<Vec<usize>>,
     /// persistent per-worker loss scratch for `record`
     losses: Vec<f64>,
+    /// optional streaming event log (io::events); emits at the same
+    /// cadence as the trace
+    recorder: Option<EventRecorder>,
 }
 
 impl Coordinator {
@@ -108,9 +134,16 @@ impl Coordinator {
         problem: Problem,
         topo: Topology,
         spec: AlgSpec,
-        opts: CoordinatorOptions,
+        opts: impl Into<ExecutionConfig>,
     ) -> Coordinator {
+        let opts: ExecutionConfig = opts.into();
         spec.validate().expect("invalid AlgSpec");
+        opts.validate().expect("invalid ExecutionConfig");
+        assert_eq!(
+            opts.backend,
+            Backend::Native,
+            "the coordinator shards native solvers only"
+        );
         let n = topo.n();
         let mut pool = WorkerPool::new(resolve_threads(opts.threads));
         let cfg = ProtocolConfig {
@@ -146,7 +179,30 @@ impl Coordinator {
             opts,
             trace,
             iter: 0,
+            recorder: None,
         }
+    }
+
+    /// Attach a fresh streaming event log (see [`crate::algs::Run::start_event_log`]).
+    pub fn start_event_log(&mut self, sink: Box<dyn EventSink>) {
+        let mut rec = EventRecorder::new(sink, self.topo.n());
+        rec.rebase(self.iter);
+        rec.run_start(
+            &self.trace.algorithm,
+            &self.problem.dataset_name,
+            self.topo.n(),
+            self.problem.d,
+            self.opts.seed,
+        );
+        self.recorder = Some(rec);
+    }
+
+    /// Attach an event log continuing an earlier one (resume): no
+    /// `run_start` line; interval accounting restarts here.
+    pub fn resume_event_log(&mut self, sink: Box<dyn EventSink>) {
+        let mut rec = EventRecorder::new(sink, self.topo.n());
+        rec.rebase(self.iter);
+        self.recorder = Some(rec);
     }
 
     /// Total executor threads (pool helpers + the leader).
@@ -243,14 +299,18 @@ impl Coordinator {
             consensus = consensus.max(diff);
         }
         let log = self.medium.log();
-        self.trace.push(TracePoint {
+        let point = TracePoint {
             iteration: self.iter,
             loss_gap: (obj - self.problem.f_star).abs(),
             consensus_gap: consensus,
             cum_rounds: log.rounds(),
             cum_bits: log.total_bits,
             cum_energy_j: log.total_energy_j,
-        });
+        };
+        self.trace.push(point);
+        if let Some(rec) = &mut self.recorder {
+            rec.record(&point, log, self.medium.sim_time_s());
+        }
     }
 
     /// Run `iters` iterations and return the trace.  The executor pool
@@ -276,6 +336,73 @@ impl Coordinator {
     /// Simulated on-air wall clock so far (see [`Medium::sim_time_s`]).
     pub fn sim_time_s(&self) -> f64 {
         self.medium.sim_time_s()
+    }
+
+    /// Current iteration count.
+    pub fn iteration(&self) -> u64 {
+        self.iter
+    }
+
+    /// Export the full durable state at the current iteration boundary
+    /// (same layout as [`crate::algs::Run::snapshot_state`] — a
+    /// checkpoint taken by one engine resumes in the other).
+    pub fn snapshot_state(&self) -> RunState {
+        let log = self.medium.log();
+        RunState {
+            iteration: self.iter,
+            cores: self.shards.iter().map(|s| s.core.export_state()).collect(),
+            medium: MediumState {
+                rounds: log.rounds(),
+                total_bits: log.total_bits,
+                total_energy_j: log.total_energy_j,
+                sim_time_s: self.medium.sim_time_s(),
+                link: self.medium.link_state(),
+            },
+            trace: self.trace.clone(),
+        }
+    }
+
+    /// Overwrite this engine's state from a checkpoint (same problem /
+    /// topology / spec the checkpoint came from).
+    pub fn restore_state(&mut self, s: &RunState) {
+        assert_eq!(
+            s.cores.len(),
+            self.shards.len(),
+            "checkpoint is for a different worker count"
+        );
+        for (shard, cs) in self.shards.iter_mut().zip(&s.cores) {
+            shard.core.import_state(cs);
+        }
+        self.medium.restore(
+            s.medium.rounds,
+            s.medium.total_bits,
+            s.medium.total_energy_j,
+            s.medium.sim_time_s,
+            &s.medium.link,
+        );
+        self.trace = s.trace.clone();
+        self.iter = s.iteration;
+        if let Some(rec) = &mut self.recorder {
+            rec.rebase(s.iteration);
+        }
+    }
+}
+
+impl PersistableEngine for Coordinator {
+    fn step(&mut self) {
+        Coordinator::step(self);
+    }
+    fn iteration(&self) -> u64 {
+        Coordinator::iteration(self)
+    }
+    fn snapshot_state(&self) -> RunState {
+        Coordinator::snapshot_state(self)
+    }
+    fn restore_state(&mut self, state: &RunState) {
+        Coordinator::restore_state(self, state);
+    }
+    fn recorder_mut(&mut self) -> Option<&mut EventRecorder> {
+        self.recorder.as_mut()
     }
 }
 

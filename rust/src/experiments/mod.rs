@@ -27,7 +27,7 @@ pub mod matrix;
 pub mod rates;
 pub mod sensitivity;
 
-use crate::algs::{dgd, AlgSpec, Problem, Run, RunOptions};
+use crate::algs::{dgd, AlgSpec, Problem, Run};
 use crate::comm::EnergyParams;
 use crate::config::DatasetId;
 use crate::data;
@@ -181,48 +181,11 @@ pub struct FigureResult {
     pub summary: Table,
 }
 
-/// Execution knobs shared by all figure runs.
-#[derive(Clone, Debug)]
-pub struct ExecOptions {
-    pub backend: Backend,
-    pub artifacts_dir: Option<std::path::PathBuf>,
-    /// Intra-run threads (group-parallel primal updates).  Only applied
-    /// when a run can use the whole pool — i.e. when run-level sweep
-    /// parallelism is off or the sweep has a single job; concurrently
-    /// scheduled runs execute single-threaded to avoid oversubscription.
-    pub threads: usize,
-    pub record_every: u64,
-    /// Concurrent runs across a figure sweep (run-level parallelism).
-    /// `1` = the serial driver; `0` = auto (all cores via
-    /// [`crate::parallel::default_threads`] — unless `threads > 1`, in
-    /// which case the explicit intra-run request wins and the sweep
-    /// stays serial).  Any value reproduces the serial traces
-    /// bit-for-bit: every run owns its spec-pinned seed and results are
-    /// collected in job order.
-    pub sweep_threads: usize,
-}
-
-impl Default for ExecOptions {
-    fn default() -> Self {
-        ExecOptions {
-            backend: Backend::Native,
-            artifacts_dir: None,
-            threads: 1,
-            record_every: 1,
-            sweep_threads: 1,
-        }
-    }
-}
-
-impl ExecOptions {
-    /// Saturate the machine: run-level parallelism across all cores.
-    pub fn saturating() -> Self {
-        ExecOptions {
-            sweep_threads: crate::parallel::default_threads(),
-            ..ExecOptions::default()
-        }
-    }
-}
+/// Execution knobs shared by all figure runs — the unified
+/// [`crate::config::ExecutionConfig`] (this alias is the legacy name;
+/// the sweep-relevant knobs are [`ExecutionConfig::threads`] and
+/// [`ExecutionConfig::sweep_threads`]).
+pub type ExecOptions = crate::config::ExecutionConfig;
 
 /// Build the topology + problem of a figure (shared with the rate study).
 pub fn build_problem(spec: &FigureSpec, p_override: Option<f64>) -> (Problem, Topology) {
@@ -275,17 +238,14 @@ fn run_jobs(jobs: &[SweepJob], exec: &ExecOptions) -> Vec<Trace> {
         let job = &jobs[j];
         let mut trace = match job.alg {
             Some(alg) => {
-                let opts = RunOptions {
-                    backend: exec.backend,
-                    threads: run_threads,
-                    seed: job.seed,
-                    record_every: exec.record_every,
-                    artifacts_dir: exec.artifacts_dir.clone(),
-                    drop_prob: 0.0,
-                    energy: EnergyParams::default(),
-                    incremental: true,
-                    link: None,
-                };
+                // the job inherits every execution knob (link model,
+                // energy, incremental, ...) and pins its own seed and
+                // thread layout
+                let opts = exec
+                    .clone()
+                    .with_threads(run_threads)
+                    .with_seed(job.seed)
+                    .with_sweep_threads(1);
                 let mut run = Run::new(job.problem.clone(), job.topo.clone(), alg.clone(), opts);
                 run.run(job.iters)
             }

@@ -1,0 +1,432 @@
+//! Versioned binary checkpoints of full run state, with **bit-identical**
+//! resume: every `f64` travels as its IEEE-754 bit pattern
+//! (little-endian `to_bits`), every RNG as its raw `(state, inc)` pair,
+//! so a restored run replays the exact trajectory of an uninterrupted
+//! one (`tests/persistence.rs` locks this across all six `AlgSpec`
+//! variants and both engines).
+//!
+//! Layout: 8-byte magic `CQCKPT01`, `u32` format version, then
+//! [`RunState`] — iteration, per-worker [`CoreState`]s, medium totals +
+//! link-model state, and the trace accumulator.  Checkpoints are
+//! O(state), not O(history): the transmission log is folded into its
+//! running totals ([`crate::comm::CommLog::restore_totals`]).
+//!
+//! Writes are atomic (temp file + rename) so a crash mid-checkpoint
+//! leaves the previous checkpoint intact.
+
+use crate::comm::LinkState;
+use crate::metrics::{Trace, TracePoint};
+use crate::protocol::CoreState;
+use crate::quant::QuantizerState;
+use std::path::Path;
+
+const MAGIC: &[u8; 8] = b"CQCKPT01";
+const VERSION: u32 = 1;
+
+/// Everything a resumed engine needs to continue bit-for-bit.
+#[derive(Clone, Debug, PartialEq)]
+pub struct RunState {
+    /// Completed iterations.
+    pub iteration: u64,
+    /// Durable per-worker state, in worker order.
+    pub cores: Vec<CoreState>,
+    pub medium: MediumState,
+    /// The trace accumulated so far (a resumed run appends to it, so the
+    /// final trace equals an uninterrupted run's).
+    pub trace: Trace,
+}
+
+/// The medium's durable state: checkpointed totals + link-model RNG.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct MediumState {
+    pub rounds: u64,
+    pub total_bits: u64,
+    pub total_energy_j: f64,
+    pub sim_time_s: f64,
+    pub link: LinkState,
+}
+
+// ---- encoder ---------------------------------------------------------
+
+struct Enc {
+    buf: Vec<u8>,
+}
+
+impl Enc {
+    fn u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+    fn u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+    fn u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+    fn u128(&mut self, v: u128) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+    fn f64(&mut self, v: f64) {
+        self.u64(v.to_bits());
+    }
+    fn vec_f64(&mut self, v: &[f64]) {
+        self.u64(v.len() as u64);
+        for &x in v {
+            self.f64(x);
+        }
+    }
+    fn str(&mut self, s: &str) {
+        self.u64(s.len() as u64);
+        self.buf.extend_from_slice(s.as_bytes());
+    }
+    fn bool(&mut self, v: bool) {
+        self.u8(v as u8);
+    }
+
+    fn core(&mut self, c: &CoreState) {
+        self.vec_f64(&c.theta);
+        self.vec_f64(&c.alpha);
+        self.vec_f64(&c.hat_self);
+        self.u64(c.hat_nbrs.len() as u64);
+        for hat in &c.hat_nbrs {
+            self.vec_f64(hat);
+        }
+        self.bool(c.transmitted_once);
+        self.vec_f64(&c.nbr_sum);
+        self.bool(c.nbr_stale);
+        self.vec_f64(&c.dual_delta);
+        self.bool(c.dual_stale);
+        match &c.quantizer {
+            None => self.u8(0),
+            Some(q) => {
+                self.u8(1);
+                match q.prev_radius {
+                    None => self.u8(0),
+                    Some(r) => {
+                        self.u8(1);
+                        self.f64(r);
+                    }
+                }
+                self.u32(q.prev_bits);
+                self.u128(q.rng_state);
+                self.u128(q.rng_inc);
+            }
+        }
+    }
+}
+
+/// Serialize a [`RunState`] to the versioned binary format.
+pub fn encode(state: &RunState) -> Vec<u8> {
+    let mut e = Enc { buf: Vec::new() };
+    e.buf.extend_from_slice(MAGIC);
+    e.u32(VERSION);
+    e.u64(state.iteration);
+    e.u64(state.cores.len() as u64);
+    for c in &state.cores {
+        e.core(c);
+    }
+    e.u64(state.medium.rounds);
+    e.u64(state.medium.total_bits);
+    e.f64(state.medium.total_energy_j);
+    e.f64(state.medium.sim_time_s);
+    match state.medium.link {
+        LinkState::Stateless => e.u8(0),
+        LinkState::Rng { state: s, inc } => {
+            e.u8(1);
+            e.u128(s);
+            e.u128(inc);
+        }
+    }
+    e.str(&state.trace.algorithm);
+    e.str(&state.trace.dataset);
+    e.u64(state.trace.points.len() as u64);
+    for p in &state.trace.points {
+        e.u64(p.iteration);
+        e.f64(p.loss_gap);
+        e.f64(p.consensus_gap);
+        e.u64(p.cum_rounds);
+        e.u64(p.cum_bits);
+        e.f64(p.cum_energy_j);
+    }
+    e.buf
+}
+
+// ---- decoder ---------------------------------------------------------
+
+struct Dec<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Dec<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8], String> {
+        if self.pos + n > self.buf.len() {
+            return Err(format!(
+                "checkpoint truncated at byte {} (wanted {n} more of {})",
+                self.pos,
+                self.buf.len()
+            ));
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+    fn u8(&mut self) -> Result<u8, String> {
+        Ok(self.take(1)?[0])
+    }
+    fn u32(&mut self) -> Result<u32, String> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+    fn u64(&mut self) -> Result<u64, String> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+    fn u128(&mut self) -> Result<u128, String> {
+        Ok(u128::from_le_bytes(self.take(16)?.try_into().unwrap()))
+    }
+    fn f64(&mut self) -> Result<f64, String> {
+        Ok(f64::from_bits(self.u64()?))
+    }
+    fn len(&mut self, what: &str) -> Result<usize, String> {
+        let n = self.u64()?;
+        // a corrupt length must not trigger a huge allocation
+        if n > (self.buf.len() as u64) {
+            return Err(format!("checkpoint corrupt: {what} length {n} exceeds file size"));
+        }
+        Ok(n as usize)
+    }
+    fn vec_f64(&mut self, what: &str) -> Result<Vec<f64>, String> {
+        let n = self.len(what)?;
+        let mut v = Vec::with_capacity(n);
+        for _ in 0..n {
+            v.push(self.f64()?);
+        }
+        Ok(v)
+    }
+    fn str(&mut self, what: &str) -> Result<String, String> {
+        let n = self.len(what)?;
+        String::from_utf8(self.take(n)?.to_vec())
+            .map_err(|_| format!("checkpoint corrupt: {what} is not UTF-8"))
+    }
+    fn bool(&mut self, what: &str) -> Result<bool, String> {
+        match self.u8()? {
+            0 => Ok(false),
+            1 => Ok(true),
+            b => Err(format!("checkpoint corrupt: {what} flag byte {b}")),
+        }
+    }
+
+    fn core(&mut self) -> Result<CoreState, String> {
+        let theta = self.vec_f64("theta")?;
+        let alpha = self.vec_f64("alpha")?;
+        let hat_self = self.vec_f64("hat_self")?;
+        let deg = self.len("hat_nbrs")?;
+        let mut hat_nbrs = Vec::with_capacity(deg);
+        for _ in 0..deg {
+            hat_nbrs.push(self.vec_f64("hat_nbr")?);
+        }
+        let transmitted_once = self.bool("transmitted_once")?;
+        let nbr_sum = self.vec_f64("nbr_sum")?;
+        let nbr_stale = self.bool("nbr_stale")?;
+        let dual_delta = self.vec_f64("dual_delta")?;
+        let dual_stale = self.bool("dual_stale")?;
+        let quantizer = match self.u8()? {
+            0 => None,
+            1 => {
+                let prev_radius = match self.u8()? {
+                    0 => None,
+                    1 => Some(self.f64()?),
+                    b => return Err(format!("checkpoint corrupt: radius flag byte {b}")),
+                };
+                Some(QuantizerState {
+                    prev_radius,
+                    prev_bits: self.u32()?,
+                    rng_state: self.u128()?,
+                    rng_inc: self.u128()?,
+                })
+            }
+            b => return Err(format!("checkpoint corrupt: quantizer flag byte {b}")),
+        };
+        Ok(CoreState {
+            theta,
+            alpha,
+            hat_self,
+            hat_nbrs,
+            transmitted_once,
+            nbr_sum,
+            nbr_stale,
+            dual_delta,
+            dual_stale,
+            quantizer,
+        })
+    }
+}
+
+/// Parse a checkpoint produced by [`encode`].
+pub fn decode(bytes: &[u8]) -> Result<RunState, String> {
+    let mut d = Dec { buf: bytes, pos: 0 };
+    if d.take(8)? != MAGIC {
+        return Err("not a checkpoint file (bad magic)".into());
+    }
+    let version = d.u32()?;
+    if version != VERSION {
+        return Err(format!("unsupported checkpoint version {version} (expected {VERSION})"));
+    }
+    let iteration = d.u64()?;
+    let n = d.len("cores")?;
+    let mut cores = Vec::with_capacity(n);
+    for _ in 0..n {
+        cores.push(d.core()?);
+    }
+    let medium = MediumState {
+        rounds: d.u64()?,
+        total_bits: d.u64()?,
+        total_energy_j: d.f64()?,
+        sim_time_s: d.f64()?,
+        link: match d.u8()? {
+            0 => LinkState::Stateless,
+            1 => LinkState::Rng { state: d.u128()?, inc: d.u128()? },
+            b => return Err(format!("checkpoint corrupt: link flag byte {b}")),
+        },
+    };
+    let algorithm = d.str("algorithm")?;
+    let dataset = d.str("dataset")?;
+    let mut trace = Trace::new(&algorithm, &dataset);
+    let npts = d.len("trace points")?;
+    for _ in 0..npts {
+        trace.push(TracePoint {
+            iteration: d.u64()?,
+            loss_gap: d.f64()?,
+            consensus_gap: d.f64()?,
+            cum_rounds: d.u64()?,
+            cum_bits: d.u64()?,
+            cum_energy_j: d.f64()?,
+        });
+    }
+    if d.pos != bytes.len() {
+        return Err(format!("checkpoint corrupt: {} trailing bytes", bytes.len() - d.pos));
+    }
+    Ok(RunState { iteration, cores, medium, trace })
+}
+
+/// Write a checkpoint atomically: temp file in the same directory, then
+/// rename over the target, so a crash never clobbers the previous one.
+pub fn save_atomic(state: &RunState, path: &Path) -> std::io::Result<()> {
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    let tmp = path.with_extension("tmp");
+    std::fs::write(&tmp, encode(state))?;
+    std::fs::rename(&tmp, path)
+}
+
+/// Load and parse a checkpoint.
+pub fn load(path: &Path) -> std::io::Result<RunState> {
+    let bytes = std::fs::read(path)?;
+    decode(&bytes).map_err(|e| {
+        std::io::Error::new(std::io::ErrorKind::InvalidData, format!("{}: {e}", path.display()))
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_state() -> RunState {
+        let mut trace = Trace::new("cq_ggadmm", "synthetic");
+        trace.push(TracePoint {
+            iteration: 2,
+            loss_gap: 0.125,
+            consensus_gap: -0.0, // signed zero must survive (to_bits)
+            cum_rounds: 7,
+            cum_bits: 1234,
+            cum_energy_j: 3.5e-4,
+        });
+        RunState {
+            iteration: 2,
+            cores: vec![
+                CoreState {
+                    theta: vec![1.0, f64::MIN_POSITIVE, -3.25],
+                    alpha: vec![0.0, -0.5, 1e300],
+                    hat_self: vec![0.25; 3],
+                    hat_nbrs: vec![vec![0.5; 3], vec![-0.5; 3]],
+                    transmitted_once: true,
+                    nbr_sum: vec![0.0; 3],
+                    nbr_stale: true,
+                    dual_delta: vec![1.5; 3],
+                    dual_stale: false,
+                    quantizer: Some(QuantizerState {
+                        prev_radius: Some(0.75),
+                        prev_bits: 5,
+                        rng_state: u128::MAX - 17,
+                        rng_inc: 12345,
+                    }),
+                },
+                CoreState {
+                    theta: vec![2.0; 3],
+                    alpha: vec![0.0; 3],
+                    hat_self: vec![0.0; 3],
+                    hat_nbrs: vec![vec![0.0; 3]],
+                    transmitted_once: false,
+                    nbr_sum: vec![0.0; 3],
+                    nbr_stale: false,
+                    dual_delta: vec![0.0; 3],
+                    dual_stale: true,
+                    quantizer: None,
+                },
+            ],
+            medium: MediumState {
+                rounds: 7,
+                total_bits: 1234,
+                total_energy_j: 3.5e-4,
+                sim_time_s: 0.007,
+                link: LinkState::Rng { state: 42, inc: 99 },
+            },
+            trace,
+        }
+    }
+
+    #[test]
+    fn round_trip_is_exact() {
+        let s = sample_state();
+        let decoded = decode(&encode(&s)).expect("decode");
+        assert_eq!(decoded, s);
+        // signed zero specifically: PartialEq on f64 treats -0.0 == 0.0,
+        // so check the bit pattern directly
+        assert_eq!(
+            decoded.trace.points[0].consensus_gap.to_bits(),
+            (-0.0f64).to_bits()
+        );
+    }
+
+    #[test]
+    fn rejects_bad_magic_and_version() {
+        let mut bytes = encode(&sample_state());
+        assert!(decode(&bytes[..4]).is_err(), "truncated magic");
+        bytes[0] ^= 0xFF;
+        assert!(decode(&bytes).unwrap_err().contains("magic"));
+        bytes[0] ^= 0xFF;
+        bytes[8] = 99; // version
+        assert!(decode(&bytes).unwrap_err().contains("version"));
+    }
+
+    #[test]
+    fn rejects_truncation_and_trailing_garbage() {
+        let bytes = encode(&sample_state());
+        assert!(decode(&bytes[..bytes.len() - 1]).unwrap_err().contains("truncated"));
+        let mut longer = bytes.clone();
+        longer.push(0);
+        assert!(decode(&longer).unwrap_err().contains("trailing"));
+    }
+
+    #[test]
+    fn save_atomic_then_load() {
+        let dir = std::env::temp_dir().join(format!("cq_ckpt_test_{}", std::process::id()));
+        let path = dir.join("checkpoint.bin");
+        let s = sample_state();
+        save_atomic(&s, &path).expect("save");
+        assert_eq!(load(&path).expect("load"), s);
+        // a second save replaces atomically
+        save_atomic(&s, &path).expect("resave");
+        assert_eq!(load(&path).expect("reload"), s);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -1,0 +1,251 @@
+//! Streaming run observability: a JSONL event log written incrementally
+//! by both engines through one sink trait, so `tools/tail_events.py` and
+//! future dashboards can tail live runs instead of waiting for process
+//! exit.
+//!
+//! Schema (one JSON object per line, `"event"` discriminates):
+//! * `run_start` — `schema`, `algorithm`, `dataset`, `workers`, `d`,
+//!   `seed`; always the first line of a fresh log.
+//! * `record` — emitted at the engine's `record_every` cadence:
+//!   `iteration`, `loss_gap`, `consensus_gap`, `cum_rounds`, `cum_bits`,
+//!   `cum_energy_j`, `sim_time_s`, plus interval aggregates since the
+//!   previous record: `committed` (broadcast attempts on the air,
+//!   including erasure-dropped ones — the medium charges them),
+//!   `censored` (gate-suppressed attempts), and `worker_bits` (sparse
+//!   `[worker, bits]` pairs in ascending worker order).
+//! * `checkpoint` — `iteration`, `path`; a durable checkpoint landed.
+//!
+//! Cumulative fields restart from checkpointed totals on resume, so a
+//! resumed log concatenated after the original's prefix validates
+//! identically to an uninterrupted one.
+
+use super::Json;
+use crate::comm::CommLog;
+use crate::metrics::TracePoint;
+use std::io::Write as _;
+use std::path::Path;
+use std::sync::{Arc, Mutex};
+
+/// Current event-schema version (the `schema` field of `run_start`).
+pub const EVENT_SCHEMA_VERSION: u64 = 1;
+
+/// Where events go.  One line per event; implementations must keep lines
+/// tailable (flush per event or equivalent).
+pub trait EventSink: Send {
+    fn emit(&mut self, event: &Json) -> std::io::Result<()>;
+}
+
+/// JSONL file sink; flushes after every event so `tail -f` (and the CI
+/// validator) see complete lines while the run is live.
+pub struct JsonlSink {
+    file: std::io::BufWriter<std::fs::File>,
+}
+
+impl JsonlSink {
+    /// Create (truncate) the log at `path`.
+    pub fn create(path: &Path) -> std::io::Result<JsonlSink> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        Ok(JsonlSink { file: std::io::BufWriter::new(std::fs::File::create(path)?) })
+    }
+
+    /// Append to an existing log (resume).
+    pub fn append(path: &Path) -> std::io::Result<JsonlSink> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let file = std::fs::OpenOptions::new().create(true).append(true).open(path)?;
+        Ok(JsonlSink { file: std::io::BufWriter::new(file) })
+    }
+}
+
+impl EventSink for JsonlSink {
+    fn emit(&mut self, event: &Json) -> std::io::Result<()> {
+        self.file.write_all(event.render().as_bytes())?;
+        self.file.write_all(b"\n")?;
+        self.file.flush()
+    }
+}
+
+/// In-memory sink for tests: rendered lines behind a shared handle.
+#[derive(Clone, Default)]
+pub struct MemorySink {
+    lines: Arc<Mutex<Vec<String>>>,
+}
+
+impl MemorySink {
+    pub fn new() -> MemorySink {
+        MemorySink::default()
+    }
+
+    pub fn lines(&self) -> Vec<String> {
+        self.lines.lock().unwrap().clone()
+    }
+}
+
+impl EventSink for MemorySink {
+    fn emit(&mut self, event: &Json) -> std::io::Result<()> {
+        self.lines.lock().unwrap().push(event.render());
+        Ok(())
+    }
+}
+
+/// Shared event emission logic of both engines: turns trace points plus
+/// the transmission log into `record` events with per-interval worker
+/// aggregates.  The recorder watches the [`CommLog`]'s transmission list
+/// incrementally (`seen_tx`), so emission is O(interval), not O(history).
+pub struct EventRecorder {
+    sink: Box<dyn EventSink>,
+    /// Transmissions already folded into an emitted record.
+    seen_tx: usize,
+    /// Iteration of the last emitted record (= resume point's iteration
+    /// after a restore).
+    last_iter: u64,
+    /// Worker count (for the censored-attempt count).
+    workers: usize,
+}
+
+impl EventRecorder {
+    pub fn new(sink: Box<dyn EventSink>, workers: usize) -> EventRecorder {
+        EventRecorder { sink, seen_tx: 0, last_iter: 0, workers }
+    }
+
+    /// Rebase after a restore: interval accounting restarts at
+    /// `iteration` and the (cleared) transmission log is re-watched from
+    /// the top.
+    pub fn rebase(&mut self, iteration: u64) {
+        self.seen_tx = 0;
+        self.last_iter = iteration;
+    }
+
+    fn emit(&mut self, event: Json) {
+        self.sink.emit(&event).expect("event sink write failed");
+    }
+
+    /// First line of a fresh log.
+    pub fn run_start(
+        &mut self,
+        algorithm: &str,
+        dataset: &str,
+        workers: usize,
+        d: usize,
+        seed: u64,
+    ) {
+        self.emit(Json::Obj(vec![
+            ("event".into(), Json::Str("run_start".into())),
+            ("schema".into(), Json::Num(EVENT_SCHEMA_VERSION as f64)),
+            ("algorithm".into(), Json::Str(algorithm.into())),
+            ("dataset".into(), Json::Str(dataset.into())),
+            ("workers".into(), Json::Num(workers as f64)),
+            ("d".into(), Json::Num(d as f64)),
+            ("seed".into(), Json::Num(seed as f64)),
+        ]));
+    }
+
+    /// One sampled point: cumulative metrics from the trace point, plus
+    /// interval aggregates from the unseen tail of the transmission log.
+    pub fn record(&mut self, p: &TracePoint, log: &CommLog, sim_time_s: f64) {
+        let mut bits_by_worker = vec![0u64; self.workers];
+        let fresh = &log.transmissions[self.seen_tx..];
+        for t in fresh {
+            bits_by_worker[t.worker] += t.payload_bits;
+        }
+        let committed = fresh.len() as u64;
+        self.seen_tx = log.transmissions.len();
+        // every worker gates one broadcast attempt per iteration, so the
+        // interval's censored count is the shortfall from n * iters
+        let attempts = self.workers as u64 * (p.iteration - self.last_iter);
+        self.last_iter = p.iteration;
+        let censored = attempts.saturating_sub(committed);
+        let worker_bits = bits_by_worker
+            .iter()
+            .enumerate()
+            .filter(|(_, &b)| b > 0)
+            .map(|(w, &b)| Json::Arr(vec![Json::Num(w as f64), Json::Num(b as f64)]))
+            .collect();
+        self.emit(Json::Obj(vec![
+            ("event".into(), Json::Str("record".into())),
+            ("iteration".into(), Json::Num(p.iteration as f64)),
+            ("loss_gap".into(), Json::Num(p.loss_gap)),
+            ("consensus_gap".into(), Json::Num(p.consensus_gap)),
+            ("cum_rounds".into(), Json::Num(p.cum_rounds as f64)),
+            ("cum_bits".into(), Json::Num(p.cum_bits as f64)),
+            ("cum_energy_j".into(), Json::Num(p.cum_energy_j)),
+            ("sim_time_s".into(), Json::Num(sim_time_s)),
+            ("committed".into(), Json::Num(committed as f64)),
+            ("censored".into(), Json::Num(censored as f64)),
+            ("worker_bits".into(), Json::Arr(worker_bits)),
+        ]));
+    }
+
+    /// A durable checkpoint landed at `path`.
+    pub fn checkpoint(&mut self, iteration: u64, path: &Path) {
+        self.emit(Json::Obj(vec![
+            ("event".into(), Json::Str("checkpoint".into())),
+            ("iteration".into(), Json::Num(iteration as f64)),
+            ("path".into(), Json::Str(path.display().to_string())),
+        ]));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::Transmission;
+
+    fn tx(worker: usize, iteration: u64, bits: u64) -> Transmission {
+        Transmission { worker, iteration, payload_bits: bits, distance_m: 1.0, energy_j: 0.0 }
+    }
+
+    fn point(iteration: u64) -> TracePoint {
+        TracePoint {
+            iteration,
+            loss_gap: 0.5,
+            consensus_gap: 0.25,
+            cum_rounds: 3,
+            cum_bits: 300,
+            cum_energy_j: 1e-3,
+        }
+    }
+
+    #[test]
+    fn record_aggregates_interval_per_worker() {
+        let sink = MemorySink::new();
+        let mut rec = EventRecorder::new(Box::new(sink.clone()), 3);
+        let mut log = CommLog::default();
+        log.record(tx(0, 0, 100));
+        log.record(tx(2, 0, 100));
+        log.record(tx(0, 1, 100));
+        rec.record(&point(2), &log, 0.5);
+        let lines = sink.lines();
+        assert_eq!(lines.len(), 1);
+        let l = &lines[0];
+        assert!(l.contains(r#""event":"record""#), "{l}");
+        assert!(l.contains(r#""committed":3"#), "{l}");
+        // 3 workers x 2 iterations - 3 on the air = 3 censored
+        assert!(l.contains(r#""censored":3"#), "{l}");
+        assert!(l.contains(r#""worker_bits":[[0,200],[2,100]]"#), "{l}");
+        // the next record only sees fresh transmissions
+        log.record(tx(1, 2, 40));
+        rec.record(&point(3), &log, 0.6);
+        let l2 = &sink.lines()[1];
+        assert!(l2.contains(r#""committed":1"#), "{l2}");
+        assert!(l2.contains(r#""censored":2"#), "{l2}");
+        assert!(l2.contains(r#""worker_bits":[[1,40]]"#), "{l2}");
+    }
+
+    #[test]
+    fn rebase_restarts_interval_accounting() {
+        let sink = MemorySink::new();
+        let mut rec = EventRecorder::new(Box::new(sink.clone()), 2);
+        let mut log = CommLog::default();
+        log.restore_totals(10, 1000, 1e-2);
+        rec.rebase(5);
+        log.record(tx(0, 5, 64));
+        rec.record(&point(6), &log, 1.0);
+        let l = &sink.lines()[0];
+        assert!(l.contains(r#""committed":1"#), "{l}");
+        assert!(l.contains(r#""censored":1"#), "{l}");
+    }
+}

@@ -1,6 +1,17 @@
 //! Output writers for the experiment harness: CSV, JSON values and a
 //! fixed-width table pretty-printer (what the bench harness prints so the
-//! figure rows are human-checkable against the paper).
+//! figure rows are human-checkable against the paper) — plus the run
+//! persistence layer: the on-disk run layout ([`run_dir`]), versioned
+//! binary checkpoints with bit-identical resume ([`checkpoint`]) and the
+//! streaming JSONL event log ([`events`]).
+
+pub mod checkpoint;
+pub mod events;
+pub mod run_dir;
+
+pub use checkpoint::{MediumState, RunState};
+pub use events::{EventRecorder, EventSink, JsonlSink, MemorySink, EVENT_SCHEMA_VERSION};
+pub use run_dir::{run_with_persistence, PersistableEngine, RunDir};
 
 use std::fmt::Write as _;
 use std::io::Write as _;

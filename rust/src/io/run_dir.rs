@@ -1,0 +1,178 @@
+//! The versioned on-disk run layout every result emitter shares:
+//!
+//! ```text
+//! <base>/
+//!   0001-<slug>/
+//!     manifest.toml    # provenance: the resolved configuration
+//!     events.jsonl     # streaming event log (io::events schema)
+//!     checkpoint.bin   # latest durable checkpoint (atomic replace)
+//!     trace.csv        # final trace (metrics::Trace::to_csv)
+//!     ...              # extra per-run artifacts (figure CSVs, tables)
+//! ```
+//!
+//! Run ids are `NNNN-<slug>`: a zero-padded sequence number scanned from
+//! the base directory (so concurrent sweeps under one base get distinct
+//! dirs without a clock) plus a human-readable slug.  Single runs,
+//! figure drivers and the topology matrix all emit through [`RunDir`],
+//! so every result carries the same provenance scheme.
+
+use super::checkpoint::{self, RunState};
+use super::events::EventRecorder;
+use std::path::{Path, PathBuf};
+
+/// Handle to one run directory.
+pub struct RunDir {
+    root: PathBuf,
+}
+
+impl RunDir {
+    /// Create the next `NNNN-<slug>` directory under `base`.
+    pub fn create(base: &Path, slug: &str) -> std::io::Result<RunDir> {
+        std::fs::create_dir_all(base)?;
+        let mut next = 1u32;
+        for entry in std::fs::read_dir(base)? {
+            let name = entry?.file_name();
+            let name = name.to_string_lossy();
+            if let Some(seq) = name.split('-').next().and_then(|s| s.parse::<u32>().ok()) {
+                next = next.max(seq + 1);
+            }
+        }
+        // race-safe: create_dir fails if a concurrent process took the id
+        loop {
+            let root = base.join(format!("{next:04}-{}", sanitize(slug)));
+            match std::fs::create_dir(&root) {
+                Ok(()) => return Ok(RunDir { root }),
+                Err(e) if e.kind() == std::io::ErrorKind::AlreadyExists => next += 1,
+                Err(e) => return Err(e),
+            }
+        }
+    }
+
+    /// Open an existing run directory (resume).
+    pub fn open(root: &Path) -> std::io::Result<RunDir> {
+        if !root.is_dir() {
+            return Err(std::io::Error::new(
+                std::io::ErrorKind::NotFound,
+                format!("run directory {} does not exist", root.display()),
+            ));
+        }
+        Ok(RunDir { root: root.to_path_buf() })
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.root
+    }
+
+    pub fn manifest_path(&self) -> PathBuf {
+        self.root.join("manifest.toml")
+    }
+
+    pub fn events_path(&self) -> PathBuf {
+        self.root.join("events.jsonl")
+    }
+
+    pub fn checkpoint_path(&self) -> PathBuf {
+        self.root.join("checkpoint.bin")
+    }
+
+    /// Path for an extra artifact (figure CSV, table, ...) inside the run.
+    pub fn artifact(&self, name: &str) -> PathBuf {
+        self.root.join(name)
+    }
+
+    /// Write the provenance manifest (the resolved configuration).
+    pub fn write_manifest(&self, contents: &str) -> std::io::Result<()> {
+        std::fs::write(self.manifest_path(), contents)
+    }
+
+    /// Save the final trace as `trace.csv`.
+    pub fn save_trace(&self, trace: &crate::metrics::Trace) -> std::io::Result<()> {
+        trace.save_csv(&self.artifact("trace.csv"))
+    }
+}
+
+fn sanitize(slug: &str) -> String {
+    let s: String = slug
+        .chars()
+        .map(|c| if c.is_ascii_alphanumeric() || c == '-' || c == '_' || c == '.' { c } else { '_' })
+        .collect();
+    if s.is_empty() { "run".into() } else { s }
+}
+
+/// What a checkpointable engine exposes to the persistence driver.  Both
+/// engines ([`crate::algs::Run`] and the sharded coordinator) implement
+/// this, so checkpoint cadence and resume logic live in exactly one
+/// place ([`run_with_persistence`]).
+pub trait PersistableEngine {
+    /// Advance one iteration (recording at the engine's cadence).
+    fn step(&mut self);
+    /// Completed iterations.
+    fn iteration(&self) -> u64;
+    /// Export the full durable state (iteration boundary).
+    fn snapshot_state(&self) -> RunState;
+    /// Overwrite state from a checkpoint (same problem/topology/spec).
+    fn restore_state(&mut self, state: &RunState);
+    /// The engine's event recorder, when streaming is enabled.
+    fn recorder_mut(&mut self) -> Option<&mut EventRecorder>;
+}
+
+/// Drive an engine for `iters` further iterations with periodic durable
+/// checkpoints (`checkpoint_every` in iterations; `0` = only the final
+/// one).  A checkpoint always lands on the final iteration so a finished
+/// run can seed follow-on runs.
+pub fn run_with_persistence<E: PersistableEngine>(
+    engine: &mut E,
+    iters: u64,
+    dir: &RunDir,
+    checkpoint_every: u64,
+) -> std::io::Result<()> {
+    let path = dir.checkpoint_path();
+    for i in 0..iters {
+        engine.step();
+        let last = i + 1 == iters;
+        if last || (checkpoint_every > 0 && engine.iteration() % checkpoint_every == 0) {
+            checkpoint::save_atomic(&engine.snapshot_state(), &path)?;
+            let k = engine.iteration();
+            if let Some(rec) = engine.recorder_mut() {
+                rec.checkpoint(k, &path);
+            }
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn scratch(tag: &str) -> PathBuf {
+        std::env::temp_dir().join(format!("cq_rundir_{}_{tag}", std::process::id()))
+    }
+
+    #[test]
+    fn sequential_ids_and_layout() {
+        let base = scratch("seq");
+        let _ = std::fs::remove_dir_all(&base);
+        let a = RunDir::create(&base, "fig2").unwrap();
+        let b = RunDir::create(&base, "fig2").unwrap();
+        let an = a.path().file_name().unwrap().to_string_lossy().to_string();
+        let bn = b.path().file_name().unwrap().to_string_lossy().to_string();
+        assert_eq!(an, "0001-fig2");
+        assert_eq!(bn, "0002-fig2");
+        a.write_manifest("# test\n").unwrap();
+        assert!(a.manifest_path().is_file());
+        assert!(RunDir::open(a.path()).is_ok());
+        assert!(RunDir::open(&base.join("missing")).is_err());
+        let _ = std::fs::remove_dir_all(&base);
+    }
+
+    #[test]
+    fn slug_is_sanitized() {
+        let base = scratch("slug");
+        let _ = std::fs::remove_dir_all(&base);
+        let r = RunDir::create(&base, "a/b c!").unwrap();
+        let name = r.path().file_name().unwrap().to_string_lossy().to_string();
+        assert_eq!(name, "0001-a_b_c_");
+        let _ = std::fs::remove_dir_all(&base);
+    }
+}

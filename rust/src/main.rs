@@ -3,17 +3,27 @@
 //! Subcommands regenerate every table/figure of the paper, run single
 //! configurations (native or PJRT backend), inspect topologies and run the
 //! threaded coordinator demo.  Run with `--help` for details.
+//!
+//! Every subcommand accepts `--manifest <file>`: a layered TOML document
+//! ([`cq_ggadmm::config::ExperimentManifest`]) carrying the problem,
+//! algorithm, execution, link and output configuration.  Explicit CLI
+//! flags override manifest values; without a manifest the flag defaults
+//! reproduce the legacy CLI exactly.  `run` and `coordinator` also
+//! support run directories (`--run-dir`), periodic checkpoints
+//! (`--checkpoint-every`), bit-identical resume (`--resume`) and
+//! streaming JSONL event logs (`--events`).
 
-use cq_ggadmm::algs::{AlgSpec, Problem, Run, RunOptions};
+use cq_ggadmm::algs::{AlgSpec, Problem, Run};
 use cq_ggadmm::cli::{Args, Cli, Command};
-use cq_ggadmm::config::{DatasetId, ExperimentConfig, TopologySpec};
-use cq_ggadmm::coordinator::{Coordinator, CoordinatorOptions};
+use cq_ggadmm::config::{DatasetId, ExperimentConfig, ExperimentManifest, TopologySpec};
+use cq_ggadmm::coordinator::Coordinator;
 use cq_ggadmm::data;
 use cq_ggadmm::experiments::{self, matrix, ExecOptions};
 use cq_ggadmm::graph::{gen, spectral, Topology};
-use cq_ggadmm::metrics::save_traces;
+use cq_ggadmm::io::{checkpoint, run_with_persistence, JsonlSink, RunDir};
+use cq_ggadmm::metrics::{save_traces, Trace};
 use cq_ggadmm::solver::Backend;
-use std::path::PathBuf;
+use std::path::{Path, PathBuf};
 use std::process::ExitCode;
 
 fn cli() -> Cli {
@@ -21,7 +31,9 @@ fn cli() -> Cli {
         .command(
             Command::new("exp", "regenerate a paper figure (fig2|fig3|fig4|fig5|fig6|all)")
                 .opt("figure", Some("fig2"), "figure id")
+                .opt("manifest", None, "layered TOML manifest (flags override)")
                 .opt("out", Some("results"), "output directory for CSV traces")
+                .opt("run-dir", None, "emit into a runs/<NNNN-slug>/ directory under this base")
                 .opt("backend", Some("native"), "native|pjrt")
                 .opt("artifacts", Some("artifacts"), "artifacts dir (pjrt backend)")
                 .opt("threads", Some("1"), "intra-run solver threads (native backend)")
@@ -55,7 +67,12 @@ fn cli() -> Cli {
                 .opt("seed", Some("1"), "random seed")
                 .opt("backend", Some("native"), "native|pjrt")
                 .opt("artifacts", Some("artifacts"), "artifacts dir (pjrt backend)")
-                .opt("config", None, "load parameters from a TOML config file")
+                .opt("config", None, "legacy: load [experiment] keys from a TOML file")
+                .opt("manifest", None, "layered TOML manifest (flags override)")
+                .opt("run-dir", None, "create a runs/<NNNN-slug>/ directory under this base")
+                .opt("resume", None, "resume from this run directory's checkpoint")
+                .opt("checkpoint-every", None, "checkpoint cadence in iterations (0 = final only)")
+                .opt("events", None, "stream JSONL events to this path (default: run dir)")
                 .opt("out", None, "write the trace CSV here"),
         )
         .command(
@@ -67,9 +84,21 @@ fn cli() -> Cli {
                 .opt("seed", Some("1"), "random seed")
                 .opt("threads", Some("0"), "executor threads (0 = all cores)")
                 .opt("drop-prob", Some("0"), "broadcast-erasure probability")
-                .opt("topology", None, "topology family (see 'run --help'; default random:0.3)"),
+                .opt("tau0", Some("1.0"), "censoring threshold tau0")
+                .opt("xi", Some("0.8"), "censoring decay xi")
+                .opt("omega", Some("0.995"), "quantizer step decay omega")
+                .opt("bits0", Some("2"), "initial quantizer bits")
+                .opt("topology", None, "topology family (see 'run --help'; default random:0.3)")
+                .opt("manifest", None, "layered TOML manifest (flags override)")
+                .opt("run-dir", None, "create a runs/<NNNN-slug>/ directory under this base")
+                .opt("resume", None, "resume from this run directory's checkpoint")
+                .opt("checkpoint-every", None, "checkpoint cadence in iterations (0 = final only)")
+                .opt("events", None, "stream JSONL events to this path (default: run dir)"),
         )
-        .command(Command::new("datasets", "print Table 1 (dataset inventory)"))
+        .command(
+            Command::new("datasets", "print Table 1 (dataset inventory)")
+                .opt("manifest", None, "layered TOML manifest (validated; the table is static)"),
+        )
         .command(
             Command::new("matrix", "run the (topology x algorithm) scenario matrix")
                 .opt("dataset", Some("synth-linear"), "dataset id")
@@ -81,7 +110,9 @@ fn cli() -> Cli {
                     None,
                     "whitespace-separated topology specs (default: the standard family zoo)",
                 )
+                .opt("manifest", None, "layered TOML manifest (flags override)")
                 .opt("out", Some("results"), "output directory for CSV traces")
+                .opt("run-dir", None, "emit into a runs/<NNNN-slug>/ directory under this base")
                 .opt("backend", Some("native"), "native|pjrt")
                 .opt("artifacts", Some("artifacts"), "artifacts dir (pjrt backend)")
                 .opt("threads", Some("1"), "intra-run solver threads")
@@ -91,17 +122,20 @@ fn cli() -> Cli {
         )
         .command(
             Command::new("rates", "empirical vs Theorem-3 convergence rates across densities")
+                .opt("manifest", None, "layered TOML manifest (flags override)")
                 .opt("workers", Some("16"), "number of workers")
                 .opt("iters", Some("150"), "iterations per study"),
         )
         .command(
             Command::new("sweep", "sensitivity/ablation sweeps (rho|tau0|bits|components)")
                 .opt("study", Some("components"), "rho|tau0|bits|components")
+                .opt("manifest", None, "layered TOML manifest (flags override)")
                 .opt("iters", Some("250"), "iterations per point")
                 .opt("seed", Some("41"), "random seed"),
         )
         .command(
             Command::new("topo", "inspect a generated topology's spectral constants")
+                .opt("manifest", None, "layered TOML manifest (flags override)")
                 .opt("workers", Some("18"), "number of workers")
                 .opt("connectivity", Some("0.3"), "connectivity ratio")
                 .opt("seed", Some("1"), "seed")
@@ -109,79 +143,223 @@ fn cli() -> Cli {
         )
 }
 
-fn parse_alg(name: &str, a: &Args) -> Result<AlgSpec, String> {
-    let tau0 = a.get_f64("tau0")?.unwrap_or(1.0);
-    let xi = a.get_f64("xi")?.unwrap_or(0.8);
-    let omega = a.get_f64("omega")?.unwrap_or(0.995);
-    let bits0 = a.get_usize("bits0")?.unwrap_or(2) as u32;
-    match name {
-        "ggadmm" => Ok(AlgSpec::ggadmm()),
-        "c-ggadmm" => Ok(AlgSpec::c_ggadmm(tau0, xi)),
-        "q-ggadmm" => Ok(AlgSpec::q_ggadmm(omega, bits0)),
-        "cq-ggadmm" => Ok(AlgSpec::cq_ggadmm(tau0, xi, omega, bits0)),
-        "c-admm" => Ok(AlgSpec::c_admm(tau0, xi)),
-        "gadmm" => Ok(AlgSpec::gadmm_chain()),
-        _ => Err(format!("unknown algorithm '{name}'")),
+/// Resolve a subcommand's layered configuration: `--manifest` (or legacy
+/// `--config`, or a resumed run's stamped manifest) first, then flags.
+/// Explicit flags always override the file; when no file is given, the
+/// declared flag defaults apply — reproducing the legacy CLI exactly.
+fn resolve_manifest(a: &Args) -> Result<ExperimentManifest, String> {
+    let mut from_file = true;
+    let mut m = if let Some(path) = a.get("manifest") {
+        ExperimentManifest::load(Path::new(path))?
+    } else if let Some(dir) = a.get("resume") {
+        // a resumed run replays the configuration it was started with
+        let stamped = Path::new(dir).join("manifest.toml");
+        if stamped.is_file() {
+            ExperimentManifest::load(&stamped)?
+        } else {
+            from_file = false;
+            ExperimentManifest::default()
+        }
+    } else if let Some(path) = a.get("config") {
+        let text = std::fs::read_to_string(path).map_err(|e| e.to_string())?;
+        let e = ExperimentConfig::from_toml(&text)?;
+        let mut m = ExperimentManifest::default();
+        m.exec = m.exec.with_seed(e.seed).with_threads(e.threads);
+        m.experiment = e;
+        m
+    } else {
+        from_file = false;
+        ExperimentManifest::default()
+    };
+    // `take(flag)`: explicit flags always win; flag *defaults* only apply
+    // when no file set the value
+    let take = |name: &str| a.given(name) || !from_file;
+    if take("dataset") {
+        if let Some(v) = a.get("dataset") {
+            m.experiment.dataset = DatasetId::parse(v)?;
+        }
     }
+    if take("workers") {
+        if let Some(v) = a.get_usize("workers")? {
+            m.experiment.workers = v;
+        }
+    }
+    if take("connectivity") {
+        if let Some(v) = a.get_f64("connectivity")? {
+            m.experiment.connectivity = v;
+        }
+    }
+    if take("iters") {
+        if let Some(v) = a.get_usize("iters")? {
+            m.experiment.iters = v;
+        }
+    }
+    if take("rho") {
+        if let Some(v) = a.get_f64("rho")? {
+            m.experiment.rho = v;
+        }
+    }
+    if take("mu0") {
+        if let Some(v) = a.get_f64("mu0")? {
+            m.experiment.mu0 = v;
+        }
+    }
+    if take("seed") {
+        if let Some(v) = a.get_u64("seed")? {
+            m.experiment.seed = v;
+            m.exec.seed = v;
+        }
+    }
+    if take("tau0") {
+        if let Some(v) = a.get_f64("tau0")? {
+            m.experiment.tau0 = v;
+        }
+    }
+    if take("xi") {
+        if let Some(v) = a.get_f64("xi")? {
+            m.experiment.xi = v;
+        }
+    }
+    if take("omega") {
+        if let Some(v) = a.get_f64("omega")? {
+            m.experiment.omega = v;
+        }
+    }
+    if take("bits0") {
+        if let Some(v) = a.get_usize("bits0")? {
+            m.experiment.bits0 = v as u32;
+        }
+    }
+    if take("topology") {
+        if let Some(v) = a.get("topology") {
+            m.experiment.topology = Some(TopologySpec::parse(v)?);
+        }
+    }
+    if take("alg") {
+        if let Some(v) = a.get("alg") {
+            m.alg = v.to_string();
+        }
+    }
+    if take("backend") {
+        if let Some(v) = a.get("backend") {
+            m.exec.backend = Backend::parse(v)?;
+        }
+    }
+    if m.exec.backend == Backend::Pjrt && (a.given("artifacts") || m.exec.artifacts_dir.is_none())
+    {
+        m.exec.artifacts_dir = Some(PathBuf::from(a.get_or("artifacts", "artifacts")));
+    }
+    if take("threads") {
+        if let Some(v) = a.get_usize("threads")? {
+            m.exec.threads = v;
+        }
+    }
+    if take("sweep-threads") {
+        if let Some(v) = a.get_usize("sweep-threads")? {
+            m.exec.sweep_threads = v;
+        }
+    }
+    if take("record-every") {
+        if let Some(v) = a.get_u64("record-every")? {
+            m.exec.record_every = v;
+        }
+    }
+    if take("drop-prob") {
+        if let Some(v) = a.get_f64("drop-prob")? {
+            m.exec.drop_prob = v;
+        }
+    }
+    if let Some(v) = a.get("run-dir") {
+        m.output.dir = Some(PathBuf::from(v));
+    }
+    if let Some(v) = a.get("checkpoint-every") {
+        m.output.checkpoint_every = v
+            .parse::<u64>()
+            .map_err(|_| format!("option --checkpoint-every: expected an integer, got '{v}'"))?;
+    }
+    m.validate()?;
+    Ok(m)
 }
 
-/// Resolve the effective topology: an explicit `--topology` flag wins,
-/// then a config-file spec, then the legacy default (a chain for the
-/// GADMM baseline, the paper's random-bipartite generator otherwise).
-/// Returns the topology plus its label and the bipartition pass's
-/// dropped-edge count.
-fn build_topology(
-    a: &Args,
-    cfg_spec: Option<TopologySpec>,
-    alg_name: &str,
-    workers: usize,
-    connectivity: f64,
-    seed: u64,
-) -> Result<(Topology, String, usize), String> {
-    let spec = match a.get("topology") {
-        Some(s) => Some(TopologySpec::parse(s)?),
-        None => cfg_spec,
-    };
-    match spec {
+/// Build the manifest's topology: an explicit family spec wins; the
+/// legacy default is a chain for the GADMM baseline and the paper's
+/// random-bipartite generator otherwise.  Returns the topology plus its
+/// label and the bipartition pass's dropped-edge count.
+fn build_topology(m: &ExperimentManifest) -> Result<(Topology, String, usize), String> {
+    let e = &m.experiment;
+    match e.topology {
         Some(spec) => {
-            let b = gen::build(&spec, workers, seed)?;
+            let b = gen::build(&spec, e.workers, e.seed)?;
             Ok((b.topology, spec.label(), b.dropped_edges))
         }
-        None if alg_name == "gadmm" => Ok((Topology::chain(workers), "chain".into(), 0)),
+        None if m.alg == "gadmm" => Ok((Topology::chain(e.workers), "chain".into(), 0)),
         None => Ok((
-            Topology::random_bipartite(workers, connectivity, seed),
-            format!("random:{connectivity}"),
+            Topology::random_bipartite(e.workers, e.connectivity, e.seed),
+            format!("random:{}", e.connectivity),
             0,
         )),
     }
 }
 
-fn exec_options(a: &Args) -> Result<ExecOptions, String> {
-    let backend = Backend::parse(&a.get_or("backend", "native"))?;
-    Ok(ExecOptions {
-        backend,
-        artifacts_dir: match backend {
-            Backend::Pjrt => Some(PathBuf::from(a.get_or("artifacts", "artifacts"))),
-            Backend::Native => None,
-        },
-        threads: a.get_usize("threads")?.unwrap_or(1),
-        record_every: a.get_u64("record-every")?.unwrap_or(1),
-        sweep_threads: a.get_usize("sweep-threads")?.unwrap_or(0),
-    })
+/// The persistence layout of a `run` / `coordinator` invocation.
+struct Persistence {
+    dir: RunDir,
+    resuming: bool,
+}
+
+/// Resolve `--resume` / `--run-dir` / `[output] dir` into a run
+/// directory (a fresh one gets the resolved manifest stamped in).
+fn resolve_persistence(a: &Args, m: &ExperimentManifest) -> Result<Option<Persistence>, String> {
+    if let Some(dir) = a.get("resume") {
+        let dir = RunDir::open(Path::new(dir)).map_err(|e| e.to_string())?;
+        return Ok(Some(Persistence { dir, resuming: true }));
+    }
+    let Some(base) = &m.output.dir else {
+        return Ok(None);
+    };
+    let slug = format!("{}-{}", m.alg, m.experiment.dataset.name());
+    let dir = RunDir::create(base, &slug).map_err(|e| e.to_string())?;
+    dir.write_manifest(&m.to_toml()).map_err(|e| e.to_string())?;
+    Ok(Some(Persistence { dir, resuming: false }))
+}
+
+fn print_trace_summary(trace: &Trace) {
+    let last = trace.points.last().expect("no trace points");
+    println!(
+        "{}: iters={} gap={:.3e} rounds={} bits={} energy={:.3e} J",
+        trace.algorithm,
+        last.iteration,
+        last.loss_gap,
+        last.cum_rounds,
+        last.cum_bits,
+        last.cum_energy_j
+    );
 }
 
 fn cmd_exp(a: &Args) -> Result<(), String> {
-    let exec = exec_options(a)?;
-    let out = PathBuf::from(a.get_or("out", "results"));
+    let m = resolve_manifest(a)?;
+    let exec: ExecOptions = m.exec.clone();
     let quiet = a.has("quiet");
     let figure = a.get_or("figure", "fig2");
+    // result routing: a run directory when requested, the legacy flat
+    // CSV directory otherwise
+    let run_dir = match &m.output.dir {
+        Some(base) => {
+            let dir = RunDir::create(base, &format!("exp-{figure}"))
+                .map_err(|e| e.to_string())?;
+            dir.write_manifest(&m.to_toml()).map_err(|e| e.to_string())?;
+            Some(dir)
+        }
+        None => None,
+    };
+    let out = PathBuf::from(a.get_or("out", "results"));
     let ids: Vec<String> = if figure == "all" {
         vec!["fig2", "fig3", "fig4", "fig5", "fig6"]
             .into_iter()
             .map(String::from)
             .collect()
     } else {
-        vec![figure]
+        vec![figure.clone()]
     };
     // standard figures go through run_figures as ONE flattened job list
     // (the sweep scheduler saturates all cores across figure boundaries);
@@ -198,7 +376,10 @@ fn cmd_exp(a: &Args) -> Result<(), String> {
         }
     }
     let save = |res: &experiments::FigureResult| -> Result<(), String> {
-        let path = out.join(format!("{}.csv", res.id));
+        let path = match &run_dir {
+            Some(dir) => dir.artifact(&format!("{}.csv", res.id)),
+            None => out.join(format!("{}.csv", res.id)),
+        };
         save_traces(&res.traces, &path).map_err(|e| e.to_string())?;
         if !quiet {
             println!("\n=== {} ===\n{}", res.title, res.summary.render());
@@ -221,48 +402,11 @@ fn cmd_exp(a: &Args) -> Result<(), String> {
 }
 
 fn cmd_run(a: &Args) -> Result<(), String> {
-    // optional config file, overridden by explicit flags
-    let mut cfg = match a.get("config") {
-        Some(path) => {
-            let text = std::fs::read_to_string(path).map_err(|e| e.to_string())?;
-            ExperimentConfig::from_toml(&text)?
-        }
-        None => ExperimentConfig::default(),
-    };
-    if let Some(ds) = a.get("dataset") {
-        cfg.dataset = DatasetId::parse(ds)?;
-    }
-    if let Some(w) = a.get_usize("workers")? {
-        cfg.workers = w;
-    }
-    if let Some(p) = a.get_f64("connectivity")? {
-        cfg.connectivity = p;
-    }
-    if let Some(v) = a.get_usize("iters")? {
-        cfg.iters = v;
-    }
-    if let Some(v) = a.get_f64("rho")? {
-        cfg.rho = v;
-    }
-    if let Some(v) = a.get_f64("mu0")? {
-        cfg.mu0 = v;
-    }
-    if let Some(v) = a.get_u64("seed")? {
-        cfg.seed = v;
-    }
-    cfg.validate()?;
-
-    let alg_name = a.get_or("alg", "cq-ggadmm");
-    let ds = data::load(cfg.dataset, cfg.seed);
-    let (topo, topo_label, dropped) = build_topology(
-        a,
-        cfg.topology,
-        &alg_name,
-        cfg.workers,
-        cfg.connectivity,
-        cfg.seed,
-    )?;
-    let problem = Problem::new(&ds, &topo, cfg.rho, cfg.mu0, cfg.seed);
+    let m = resolve_manifest(a)?;
+    let e = &m.experiment;
+    let ds = data::load(e.dataset, e.seed);
+    let (topo, topo_label, dropped) = build_topology(&m)?;
+    let problem = Problem::new(&ds, &topo, e.rho, e.mu0, e.seed);
     println!(
         "dataset={} d={} workers={} topology={topo_label} edges={}{} f*={:.6e}",
         ds.name,
@@ -277,42 +421,65 @@ fn cmd_run(a: &Args) -> Result<(), String> {
         problem.f_star
     );
 
-    let trace = if alg_name == "dgd" {
-        cq_ggadmm::algs::dgd::run_dgd(
+    let persist = resolve_persistence(a, &m)?;
+    let iters = e.iters as u64;
+    let trace = if m.alg == "dgd" {
+        if persist.as_ref().is_some_and(|p| p.resuming) || a.get("events").is_some() {
+            return Err("dgd does not support checkpoint/resume or event streaming".into());
+        }
+        let trace = cq_ggadmm::algs::dgd::run_dgd(
             &problem,
             &topo,
             0.01,
-            cfg.iters as u64,
+            iters,
             cq_ggadmm::comm::EnergyParams::default(),
-        )
+        );
+        if let Some(p) = &persist {
+            p.dir.save_trace(&trace).map_err(|err| err.to_string())?;
+            println!("run dir -> {}", p.dir.path().display());
+        }
+        trace
     } else {
-        let spec = parse_alg(&alg_name, a)?;
-        let backend = Backend::parse(&a.get_or("backend", "native"))?;
-        let opts = RunOptions {
-            backend,
-            threads: cfg.threads.max(1),
-            seed: cfg.seed,
-            record_every: 1,
-            artifacts_dir: match backend {
-                Backend::Pjrt => Some(PathBuf::from(a.get_or("artifacts", "artifacts"))),
-                Backend::Native => None,
-            },
-            ..RunOptions::default()
-        };
-        let mut run = Run::new(problem, topo, spec, opts);
-        run.run(cfg.iters as u64)
+        let spec = AlgSpec::parse(&m.alg, e.tau0, e.xi, e.omega, e.bits0)?;
+        let mut run = Run::new(problem, topo, spec, m.exec.clone());
+        match &persist {
+            Some(p) => {
+                let events = match a.get("events") {
+                    Some(path) => PathBuf::from(path),
+                    None => p.dir.events_path(),
+                };
+                if p.resuming {
+                    let state = checkpoint::load(&p.dir.checkpoint_path())
+                        .map_err(|err| format!("cannot load checkpoint: {err}"))?;
+                    run.restore_state(&state);
+                    run.resume_event_log(Box::new(
+                        JsonlSink::append(&events).map_err(|err| err.to_string())?,
+                    ));
+                    println!("resumed at iteration {}", run.iteration());
+                } else {
+                    run.start_event_log(Box::new(
+                        JsonlSink::create(&events).map_err(|err| err.to_string())?,
+                    ));
+                }
+                let remaining = iters.saturating_sub(run.iteration());
+                run_with_persistence(&mut run, remaining, &p.dir, m.output.checkpoint_every)
+                    .map_err(|err| err.to_string())?;
+                p.dir.save_trace(run.trace()).map_err(|err| err.to_string())?;
+                println!("run dir -> {}", p.dir.path().display());
+                run.trace().clone()
+            }
+            None => {
+                if let Some(path) = a.get("events") {
+                    run.start_event_log(Box::new(
+                        JsonlSink::create(Path::new(path)).map_err(|err| err.to_string())?,
+                    ));
+                }
+                run.run(iters)
+            }
+        }
     };
 
-    let last = trace.points.last().expect("no trace points");
-    println!(
-        "{}: iters={} gap={:.3e} rounds={} bits={} energy={:.3e} J",
-        trace.algorithm,
-        last.iteration,
-        last.loss_gap,
-        last.cum_rounds,
-        last.cum_bits,
-        last.cum_energy_j
-    );
+    print_trace_summary(&trace);
     for target in [1e-4, 1e-6] {
         if let Some(p) = trace.first_below(target) {
             println!(
@@ -323,59 +490,89 @@ fn cmd_run(a: &Args) -> Result<(), String> {
     }
     if let Some(path) = a.get("out") {
         trace
-            .save_csv(std::path::Path::new(path))
-            .map_err(|e| e.to_string())?;
+            .save_csv(Path::new(path))
+            .map_err(|err| err.to_string())?;
         println!("trace -> {path}");
     }
     Ok(())
 }
 
 fn cmd_coordinator(a: &Args) -> Result<(), String> {
-    let dataset = DatasetId::parse(&a.get_or("dataset", "synth-linear"))?;
-    let workers = a.get_usize("workers")?.unwrap_or(12);
-    let iters = a.get_u64("iters")?.unwrap_or(150);
-    let seed = a.get_u64("seed")?.unwrap_or(1);
-    let threads = a.get_usize("threads")?.unwrap_or(0);
-    let drop_prob = a.get_f64("drop-prob")?.unwrap_or(0.0);
-    let spec = parse_alg(&a.get_or("alg", "cq-ggadmm"), a)?;
+    let m = resolve_manifest(a)?;
+    if m.exec.backend != Backend::Native {
+        return Err("the coordinator shards native solvers only; use backend = \"native\"".into());
+    }
+    if m.alg == "dgd" {
+        return Err("dgd is a first-order baseline; use 'run --alg dgd'".into());
+    }
+    let e = &m.experiment;
+    let spec = AlgSpec::parse(&m.alg, e.tau0, e.xi, e.omega, e.bits0)?;
     let alg_name = spec.name.clone();
-    let ds = data::load(dataset, seed);
-    let (topo, topo_label, _) = build_topology(a, None, "", workers, 0.3, seed)?;
-    let problem = Problem::new(&ds, &topo, 1.0, 1e-2, seed);
-    let coord = Coordinator::spawn(
-        problem,
-        topo,
-        spec,
-        CoordinatorOptions { seed, threads, drop_prob, ..CoordinatorOptions::default() },
-    );
+    let ds = data::load(e.dataset, e.seed);
+    let (topo, topo_label, _) = build_topology(&m)?;
+    let problem = Problem::new(&ds, &topo, e.rho, e.mu0, e.seed);
+    let mut coord = Coordinator::spawn(problem, topo, spec, m.exec.clone());
     println!(
         "sharding {} workers ({topo_label}) over a {}-thread executor, algorithm {alg_name}",
-        workers,
+        e.workers,
         coord.threads(),
     );
-    let trace = coord.run(iters);
-    let last = trace.points.last().unwrap();
-    println!(
-        "{}: iters={} gap={:.3e} rounds={} bits={} energy={:.3e} J",
-        trace.algorithm,
-        last.iteration,
-        last.loss_gap,
-        last.cum_rounds,
-        last.cum_bits,
-        last.cum_energy_j
-    );
+    let iters = e.iters as u64;
+    let persist = resolve_persistence(a, &m)?;
+    let trace = match &persist {
+        Some(p) => {
+            let events = match a.get("events") {
+                Some(path) => PathBuf::from(path),
+                None => p.dir.events_path(),
+            };
+            if p.resuming {
+                let state = checkpoint::load(&p.dir.checkpoint_path())
+                    .map_err(|err| format!("cannot load checkpoint: {err}"))?;
+                coord.restore_state(&state);
+                coord.resume_event_log(Box::new(
+                    JsonlSink::append(&events).map_err(|err| err.to_string())?,
+                ));
+                println!("resumed at iteration {}", coord.iteration());
+            } else {
+                coord.start_event_log(Box::new(
+                    JsonlSink::create(&events).map_err(|err| err.to_string())?,
+                ));
+            }
+            let remaining = iters.saturating_sub(coord.iteration());
+            run_with_persistence(&mut coord, remaining, &p.dir, m.output.checkpoint_every)
+                .map_err(|err| err.to_string())?;
+            p.dir.save_trace(coord.trace()).map_err(|err| err.to_string())?;
+            println!("run dir -> {}", p.dir.path().display());
+            coord.trace().clone()
+        }
+        None => {
+            if let Some(path) = a.get("events") {
+                coord.start_event_log(Box::new(
+                    JsonlSink::create(Path::new(path)).map_err(|err| err.to_string())?,
+                ));
+            }
+            coord.run(iters)
+        }
+    };
+    print_trace_summary(&trace);
     Ok(())
 }
 
 fn cmd_matrix(a: &Args) -> Result<(), String> {
-    let exec = exec_options(a)?;
-    let dataset = DatasetId::parse(&a.get_or("dataset", "synth-linear"))?;
-    let workers = a.get_usize("workers")?.unwrap_or(24);
-    let iters = a.get_u64("iters")?.unwrap_or(300);
-    let seed = a.get_u64("seed")?.unwrap_or(1);
+    let m = resolve_manifest(a)?;
+    let exec: ExecOptions = m.exec.clone();
+    let e = &m.experiment;
     let quiet = a.has("quiet");
+    let run_dir = match &m.output.dir {
+        Some(base) => {
+            let dir = RunDir::create(base, "matrix").map_err(|err| err.to_string())?;
+            dir.write_manifest(&m.to_toml()).map_err(|err| err.to_string())?;
+            Some(dir)
+        }
+        None => None,
+    };
     let out = PathBuf::from(a.get_or("out", "results"));
-    let mut spec = matrix::default_matrix(dataset, workers, iters, seed);
+    let mut spec = matrix::default_matrix(e.dataset, e.workers, e.iters as u64, e.seed);
     if let Some(list) = a.get("families") {
         let families: Result<Vec<TopologySpec>, String> =
             list.split_whitespace().map(TopologySpec::parse).collect();
@@ -386,8 +583,10 @@ fn cmd_matrix(a: &Args) -> Result<(), String> {
     }
     if !quiet {
         println!(
-            "topology properties (N={workers}, seed={seed}):\n{}",
-            matrix::properties_table(workers, &spec.families, seed)?.render()
+            "topology properties (N={}, seed={}):\n{}",
+            e.workers,
+            e.seed,
+            matrix::properties_table(e.workers, &spec.families, e.seed)?.render()
         );
     }
     let results = matrix::run_matrix(&spec, &exec)?;
@@ -404,8 +603,11 @@ fn cmd_matrix(a: &Args) -> Result<(), String> {
         }
         all.extend(fr.traces.iter().cloned());
     }
-    let path = out.join("topology_matrix.csv");
-    save_traces(&all, &path).map_err(|e| e.to_string())?;
+    let path = match &run_dir {
+        Some(dir) => dir.artifact("topology_matrix.csv"),
+        None => out.join("topology_matrix.csv"),
+    };
+    save_traces(&all, &path).map_err(|err| err.to_string())?;
     if !quiet {
         println!("\ntraces -> {}", path.display());
     }
@@ -413,8 +615,9 @@ fn cmd_matrix(a: &Args) -> Result<(), String> {
 }
 
 fn cmd_rates(a: &Args) -> Result<(), String> {
-    let workers = a.get_usize("workers")?.unwrap_or(16);
-    let iters = a.get_u64("iters")?.unwrap_or(150);
+    let m = resolve_manifest(a)?;
+    let workers = m.experiment.workers;
+    let iters = m.experiment.iters as u64;
     let studies = experiments::rates::study(&[0.15, 0.3, 0.5, 0.8], workers, 11, iters);
     println!("{}", experiments::rates::render(&studies).render());
     Ok(())
@@ -422,8 +625,9 @@ fn cmd_rates(a: &Args) -> Result<(), String> {
 
 fn cmd_sweep(a: &Args) -> Result<(), String> {
     use cq_ggadmm::experiments::sensitivity as sens;
-    let iters = a.get_u64("iters")?.unwrap_or(250);
-    let seed = a.get_u64("seed")?.unwrap_or(41);
+    let m = resolve_manifest(a)?;
+    let iters = m.experiment.iters as u64;
+    let seed = m.experiment.seed;
     let study = a.get_or("study", "components");
     let (title, points) = match study.as_str() {
         "rho" => (
@@ -443,10 +647,8 @@ fn cmd_sweep(a: &Args) -> Result<(), String> {
 }
 
 fn cmd_topo(a: &Args) -> Result<(), String> {
-    let workers = a.get_usize("workers")?.unwrap_or(18);
-    let p = a.get_f64("connectivity")?.unwrap_or(0.3);
-    let seed = a.get_u64("seed")?.unwrap_or(1);
-    let (topo, topo_label, dropped) = build_topology(a, None, "", workers, p, seed)?;
+    let m = resolve_manifest(a)?;
+    let (topo, topo_label, dropped) = build_topology(&m)?;
     let consts = spectral::constants(&topo);
     println!(
         "topology={topo_label} workers={} edges={} dropped={dropped} ratio={:.3} heads={} tails={}",
@@ -492,10 +694,9 @@ fn main() -> ExitCode {
         "exp" => cmd_exp(&args),
         "run" => cmd_run(&args),
         "coordinator" => cmd_coordinator(&args),
-        "datasets" => {
+        "datasets" => resolve_manifest(&args).map(|_| {
             println!("{}", experiments::table1().render());
-            Ok(())
-        }
+        }),
         "matrix" => cmd_matrix(&args),
         "rates" => cmd_rates(&args),
         "sweep" => cmd_sweep(&args),

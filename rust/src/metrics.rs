@@ -5,7 +5,7 @@ use crate::io::CsvWriter;
 use std::path::Path;
 
 /// One sampled point of a run.
-#[derive(Clone, Copy, Debug)]
+#[derive(Clone, Copy, Debug, PartialEq)]
 pub struct TracePoint {
     pub iteration: u64,
     /// Objective error `|sum_n f_n(theta_n^k) - f*|`.
@@ -18,7 +18,7 @@ pub struct TracePoint {
 }
 
 /// Full trace of a run plus identity metadata.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct Trace {
     pub algorithm: String,
     pub dataset: String,

@@ -37,7 +37,7 @@ use crate::algs::{AlgSpec, Problem, Schedule};
 use crate::censor::{gate, CensorConfig, Gate};
 use crate::comm::full_precision_bits;
 use crate::graph::Topology;
-use crate::quant::{payload_bits, Quantizer};
+use crate::quant::{payload_bits, Quantizer, QuantizerState};
 use crate::solver::{Backend, LinearSolver, LogisticSolver, SubproblemSolver};
 use crate::util::axpy;
 use crate::util::rng::Pcg64;
@@ -361,6 +361,81 @@ impl WorkerCore {
     pub fn dual_delta(&self) -> &[f64] {
         &self.dual_delta
     }
+
+    /// Export the full durable state at an iteration boundary (after
+    /// `dual_update`, before the next `primal_update`).  The candidate /
+    /// code / `last_quant` scratch and `pending_bits` are deliberately
+    /// excluded: between iterations every broadcast is resolved
+    /// (`pending_bits` is `None`) and the scratch is overwritten before
+    /// its next read, so it carries no information.
+    pub fn export_state(&self) -> CoreState {
+        debug_assert!(self.pending_bits.is_none(), "export with unresolved broadcast");
+        CoreState {
+            theta: self.theta.clone(),
+            alpha: self.alpha.clone(),
+            hat_self: self.hat_self.clone(),
+            hat_nbrs: self.hat_nbrs.clone(),
+            transmitted_once: self.transmitted_once,
+            nbr_sum: self.nbr_sum.clone(),
+            nbr_stale: self.nbr_stale,
+            dual_delta: self.dual_delta.clone(),
+            dual_stale: self.dual_stale,
+            quantizer: self.quantizer.as_ref().map(|q| q.state()),
+        }
+    }
+
+    /// Overwrite the durable state from a checkpoint.  The core must have
+    /// been constructed for the same problem/topology/spec (dimension,
+    /// degree, and quantizer presence are asserted).
+    pub fn import_state(&mut self, s: &CoreState) {
+        assert_eq!(s.theta.len(), self.d, "checkpoint dimension mismatch");
+        assert_eq!(
+            s.hat_nbrs.len(),
+            self.neighbors.len(),
+            "checkpoint degree mismatch for worker {}",
+            self.id
+        );
+        assert_eq!(
+            s.quantizer.is_some(),
+            self.quantizer.is_some(),
+            "checkpoint quantizer presence mismatch for worker {}",
+            self.id
+        );
+        self.theta.copy_from_slice(&s.theta);
+        self.alpha.copy_from_slice(&s.alpha);
+        self.hat_self.copy_from_slice(&s.hat_self);
+        for (slot, hat) in self.hat_nbrs.iter_mut().zip(&s.hat_nbrs) {
+            slot.copy_from_slice(hat);
+        }
+        self.transmitted_once = s.transmitted_once;
+        self.nbr_sum.copy_from_slice(&s.nbr_sum);
+        self.nbr_stale = s.nbr_stale;
+        self.dual_delta.copy_from_slice(&s.dual_delta);
+        self.dual_stale = s.dual_stale;
+        if let (Some(q), Some(qs)) = (&mut self.quantizer, &s.quantizer) {
+            q.restore(qs);
+        }
+        self.pending_bits = None;
+    }
+}
+
+/// The durable per-worker state a checkpoint carries — everything the
+/// trajectory depends on between iteration boundaries (model, dual, hat
+/// slots, censor init flag, incremental caches with their staleness, and
+/// the quantizer's adaptive `(R, b)` history + RNG stream position).
+#[derive(Clone, Debug, PartialEq)]
+pub struct CoreState {
+    pub theta: Vec<f64>,
+    pub alpha: Vec<f64>,
+    pub hat_self: Vec<f64>,
+    /// Parallel to the core's (sorted) neighbor list.
+    pub hat_nbrs: Vec<Vec<f64>>,
+    pub transmitted_once: bool,
+    pub nbr_sum: Vec<f64>,
+    pub nbr_stale: bool,
+    pub dual_delta: Vec<f64>,
+    pub dual_stale: bool,
+    pub quantizer: Option<QuantizerState>,
 }
 
 /// Construction options shared by both drivers.

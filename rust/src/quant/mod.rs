@@ -112,6 +112,18 @@ impl QuantMessage {
     }
 }
 
+/// Durable quantizer state for checkpointing: the adaptive-range history
+/// and the exact position of the stochastic-rounding RNG stream.  The
+/// static [`QuantConfig`] is *not* part of the state — it is rebuilt from
+/// the `AlgSpec` on resume.
+#[derive(Clone, Debug, PartialEq)]
+pub struct QuantizerState {
+    pub prev_radius: Option<f64>,
+    pub prev_bits: u32,
+    pub rng_state: u128,
+    pub rng_inc: u128,
+}
+
 /// Per-worker quantizer state (the sender side).
 #[derive(Clone, Debug)]
 pub struct Quantizer {
@@ -127,6 +139,25 @@ impl Quantizer {
     pub fn new(cfg: QuantConfig, rng: Pcg64) -> Quantizer {
         cfg.validate().expect("invalid quant config");
         Quantizer { cfg, prev_radius: None, prev_bits: cfg.bits0, rng }
+    }
+
+    /// Export the durable state (see [`QuantizerState`]).
+    pub fn state(&self) -> QuantizerState {
+        let (rng_state, rng_inc) = self.rng.to_raw();
+        QuantizerState {
+            prev_radius: self.prev_radius,
+            prev_bits: self.prev_bits,
+            rng_state,
+            rng_inc,
+        }
+    }
+
+    /// Overwrite the durable state from a checkpoint.  The config stays
+    /// as constructed; only the adaptive history and RNG position move.
+    pub fn restore(&mut self, s: &QuantizerState) {
+        self.prev_radius = s.prev_radius;
+        self.prev_bits = s.prev_bits;
+        self.rng = Pcg64::from_raw(s.rng_state, s.rng_inc);
     }
 
     /// Current bit width (next transmission will use at least this many).

@@ -15,9 +15,9 @@
 //! carries f64 (the accounting still charges the paper's 32d bits), which
 //! is what makes exact equality possible here.
 
-use cq_ggadmm::algs::{AlgSpec, Problem, Run, RunOptions};
-use cq_ggadmm::config::TopologySpec;
-use cq_ggadmm::coordinator::{Coordinator, CoordinatorOptions};
+use cq_ggadmm::algs::{AlgSpec, Problem, Run};
+use cq_ggadmm::config::{ExecutionConfig, TopologySpec};
+use cq_ggadmm::coordinator::Coordinator;
 use cq_ggadmm::data::synthetic;
 use cq_ggadmm::graph::{gen, Topology};
 use cq_ggadmm::metrics::Trace;
@@ -64,7 +64,12 @@ fn assert_traces_bit_identical(sim: &Trace, coord: &Trace, what: &str) {
     }
 }
 
-/// Run both engines on the same problem/spec/seed and compare bitwise.
+/// Run both engines from ONE shared [`ExecutionConfig`] on the same
+/// problem/spec/seed and compare bitwise.  Constructing both from the
+/// same value is the point: the unified config must mean the same thing
+/// to both engines (`Run` solves worker subproblems on `threads`
+/// cores, the coordinator shards workers over `threads` executors —
+/// either way the trajectory cannot move by a bit).
 fn lock(spec: AlgSpec, topo: Topology, linear: bool, drop_prob: f64, seed: u64, iters: u64) {
     let p = problem(linear, &topo, seed);
     let what = format!(
@@ -72,24 +77,13 @@ fn lock(spec: AlgSpec, topo: Topology, linear: bool, drop_prob: f64, seed: u64, 
         spec.name,
         if linear { "linear" } else { "logistic" }
     );
-    let mut sim = Run::new(
-        p.clone(),
-        topo.clone(),
-        spec.clone(),
-        RunOptions { seed, drop_prob, ..RunOptions::default() },
-    );
+    let exec = ExecutionConfig::default()
+        .with_seed(seed)
+        .with_drop_prob(drop_prob)
+        .with_threads(THREADS);
+    let mut sim = Run::new(p.clone(), topo.clone(), spec.clone(), exec.clone());
     let ts = sim.run(iters);
-    let coord = Coordinator::spawn(
-        p,
-        topo,
-        spec,
-        CoordinatorOptions {
-            seed,
-            drop_prob,
-            threads: THREADS,
-            ..CoordinatorOptions::default()
-        },
-    );
+    let coord = Coordinator::spawn(p, topo, spec, exec);
     let tc = coord.run(iters);
     assert_traces_bit_identical(&ts, &tc, &what);
 }

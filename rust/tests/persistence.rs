@@ -1,0 +1,309 @@
+//! Checkpoint / resume is **bit-identical**, not merely close.
+//!
+//! Every run's durable state (worker cores with quantizer RNGs and
+//! censor history, link-model RNG, energy/bit accounting, trace
+//! accumulator) round-trips through the on-disk checkpoint codec such
+//! that a killed-and-resumed run reproduces the uninterrupted run's
+//! trajectory exactly.  These tests lock that across the paper's six
+//! `AlgSpec` variants, both engines (sequential simulator and sharded
+//! coordinator), both tasks, and under broadcast erasure — plus the
+//! cross-engine direction (a checkpoint written by one engine resumes
+//! in the other) and the manifest front end (a manifest-driven run
+//! reproduces the equivalent flag-driven run bit-for-bit).
+//!
+//! "Bit-identical" is asserted by comparing the serialized checkpoint
+//! bytes of the final states: every f64 crosses `encode` via `to_bits`,
+//! so byte equality *is* bit equality over the entire durable state
+//! (models, duals, RNG positions, totals, and the full trace).
+
+use cq_ggadmm::algs::{AlgSpec, Problem, Run};
+use cq_ggadmm::config::{ExecutionConfig, ExperimentManifest};
+use cq_ggadmm::coordinator::Coordinator;
+use cq_ggadmm::data::synthetic;
+use cq_ggadmm::graph::Topology;
+use cq_ggadmm::io::checkpoint::{self, RunState};
+use cq_ggadmm::io::{run_with_persistence, JsonlSink, PersistableEngine, RunDir};
+use std::path::PathBuf;
+
+const N: usize = 12;
+const K1: u64 = 9;
+const K2: u64 = 14;
+
+fn scratch(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("cq_persist_{}_{tag}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+fn problem(linear: bool, topo: &Topology, seed: u64) -> Problem {
+    let n = topo.n();
+    if linear {
+        let ds = synthetic::linear_dataset(n * 8, 5, seed);
+        Problem::new(&ds, topo, 5.0, 0.0, seed)
+    } else {
+        let ds = synthetic::logistic_dataset(n * 8, 5, seed);
+        Problem::new(&ds, topo, 0.5, 0.05, seed)
+    }
+}
+
+fn exec(seed: u64, drop_prob: f64) -> ExecutionConfig {
+    ExecutionConfig::default()
+        .with_seed(seed)
+        .with_drop_prob(drop_prob)
+}
+
+fn assert_states_bit_identical(a: &RunState, b: &RunState, what: &str) {
+    assert_eq!(a.iteration, b.iteration, "{what}: iteration");
+    assert_eq!(
+        checkpoint::encode(a),
+        checkpoint::encode(b),
+        "{what}: resumed state diverges from the uninterrupted run"
+    );
+}
+
+/// Drive `full` for K1+K2 steps; drive `first` for K1, checkpoint it to
+/// disk, drop it, load the checkpoint into `second` (simulating a fresh
+/// process), drive K2 more — the final states must serialize to the
+/// same bytes.
+fn kill_and_resume<A, B, C>(mut full: A, mut first: B, mut second: C, what: &str)
+where
+    A: PersistableEngine,
+    B: PersistableEngine,
+    C: PersistableEngine,
+{
+    let dir = scratch(&what.replace([' ', '/'], "_"));
+    let path = dir.join("state.ckpt");
+    for _ in 0..(K1 + K2) {
+        full.step();
+    }
+    for _ in 0..K1 {
+        first.step();
+    }
+    checkpoint::save_atomic(&first.snapshot_state(), &path).unwrap();
+    drop(first); // the "kill": nothing survives but the bytes on disk
+    let state = checkpoint::load(&path).unwrap();
+    second.restore_state(&state);
+    assert_eq!(second.iteration(), K1, "{what}: resume point");
+    for _ in 0..K2 {
+        second.step();
+    }
+    assert_states_bit_identical(&full.snapshot_state(), &second.snapshot_state(), what);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// One (spec, task, link) cell of the matrix, for both engines — each
+/// engine pair is built from ONE shared `ExecutionConfig`.
+fn lock_resume(spec: AlgSpec, linear: bool, drop_prob: f64, seed: u64) {
+    let topo = if spec.name == "GADMM" {
+        Topology::chain(N)
+    } else {
+        Topology::random_bipartite(N, 0.3, seed)
+    };
+    let p = problem(linear, &topo, seed);
+    let e = exec(seed, drop_prob);
+    let what = format!(
+        "{} {} drop={drop_prob}",
+        spec.name,
+        if linear { "linear" } else { "logistic" }
+    );
+    let run = |ex: &ExecutionConfig| Run::new(p.clone(), topo.clone(), spec.clone(), ex.clone());
+    kill_and_resume(run(&e), run(&e), run(&e), &format!("run {what}"));
+    let coord = |ex: &ExecutionConfig| {
+        Coordinator::spawn(p.clone(), topo.clone(), spec.clone(), ex.clone().with_threads(3))
+    };
+    kill_and_resume(coord(&e), coord(&e), coord(&e), &format!("coord {what}"));
+}
+
+// ---- all six variants, in-process engine + coordinator --------------
+
+#[test]
+fn ggadmm_resumes_bit_identically() {
+    lock_resume(AlgSpec::ggadmm(), true, 0.0, 51);
+}
+
+#[test]
+fn c_ggadmm_resumes_bit_identically() {
+    // the censor's last-transmitted slots and threshold decay cross the
+    // checkpoint; a mismatch would flip a transmit decision immediately
+    lock_resume(AlgSpec::c_ggadmm(0.2, 0.85), true, 0.0, 52);
+}
+
+#[test]
+fn q_ggadmm_resumes_bit_identically() {
+    // quantizer RNG positions cross the checkpoint: the first stochastic
+    // rounding after resume must reuse the exact next draw
+    lock_resume(AlgSpec::q_ggadmm(0.995, 2), true, 0.0, 53);
+}
+
+#[test]
+fn cq_ggadmm_resumes_bit_identically() {
+    lock_resume(AlgSpec::cq_ggadmm(0.2, 0.85, 0.995, 2), true, 0.0, 54);
+}
+
+#[test]
+fn c_admm_resumes_bit_identically() {
+    lock_resume(AlgSpec::c_admm(0.1, 0.9), true, 0.0, 55);
+}
+
+#[test]
+fn gadmm_chain_resumes_bit_identically() {
+    lock_resume(AlgSpec::gadmm_chain(), true, 0.0, 56);
+}
+
+// ---- logistic task and erasure links --------------------------------
+
+#[test]
+fn logistic_variants_resume_bit_identically() {
+    lock_resume(AlgSpec::ggadmm(), false, 0.0, 61);
+    lock_resume(AlgSpec::cq_ggadmm(0.2, 0.85, 0.995, 2), false, 0.0, 62);
+}
+
+#[test]
+fn erasure_link_resumes_bit_identically() {
+    // the link-model RNG position crosses the checkpoint: the drop
+    // pattern after resume must continue the same Bernoulli stream
+    lock_resume(AlgSpec::cq_ggadmm(0.2, 0.85, 0.995, 2), true, 0.25, 63);
+    lock_resume(AlgSpec::c_admm(0.1, 0.9), false, 0.2, 64);
+}
+
+// ---- cross-engine resume --------------------------------------------
+
+#[test]
+fn checkpoint_resumes_across_engines() {
+    // the checkpoint layout is engine-agnostic: a sharded-coordinator
+    // checkpoint resumes in the sequential simulator and vice versa,
+    // still matching the uninterrupted trajectory bit-for-bit
+    let topo = Topology::random_bipartite(N, 0.3, 71);
+    let p = problem(true, &topo, 71);
+    let e = exec(71, 0.2);
+    let spec = AlgSpec::cq_ggadmm(0.2, 0.85, 0.995, 2);
+    let run = || Run::new(p.clone(), topo.clone(), spec.clone(), e.clone());
+    let coord = || {
+        Coordinator::spawn(p.clone(), topo.clone(), spec.clone(), e.clone().with_threads(3))
+    };
+    kill_and_resume(run(), coord(), run(), "coord checkpoint -> run");
+    kill_and_resume(run(), run(), coord(), "run checkpoint -> coord");
+}
+
+// ---- the run-directory driver and the event stream ------------------
+
+#[test]
+fn run_dir_persistence_resumes_and_streams_events() {
+    let base = scratch("rundir");
+    let topo = Topology::random_bipartite(N, 0.3, 81);
+    let p = problem(true, &topo, 81);
+    let e = exec(81, 0.1);
+    let spec = AlgSpec::cq_ggadmm(0.2, 0.85, 0.995, 2);
+
+    // uninterrupted reference
+    let mut full = Run::new(p.clone(), topo.clone(), spec.clone(), e.clone());
+    for _ in 0..(K1 + K2) {
+        full.step();
+    }
+
+    // first life: stream events, checkpoint every 4 iterations, stop at K1
+    let dir = RunDir::create(&base, "cq-test").unwrap();
+    let mut first = Run::new(p.clone(), topo.clone(), spec.clone(), e.clone());
+    first.start_event_log(Box::new(JsonlSink::create(&dir.events_path()).unwrap()));
+    run_with_persistence(&mut first, K1, &dir, 4).unwrap();
+    drop(first);
+
+    // second life: reopen, restore, append to the same event stream
+    let reopened = RunDir::open(dir.path()).unwrap();
+    let state = checkpoint::load(&reopened.checkpoint_path()).unwrap();
+    let mut second = Run::new(p.clone(), topo.clone(), spec.clone(), e.clone());
+    second.restore_state(&state);
+    second.resume_event_log(Box::new(JsonlSink::append(&reopened.events_path()).unwrap()));
+    run_with_persistence(&mut second, K2, &reopened, 4).unwrap();
+
+    assert_states_bit_identical(
+        &full.snapshot_state(),
+        &second.snapshot_state(),
+        "run-dir driver",
+    );
+
+    // the event stream: exactly one run_start, a record per iteration,
+    // checkpoint markers, and no rewound iterations at the resume seam
+    let text = std::fs::read_to_string(reopened.events_path()).unwrap();
+    let lines: Vec<&str> = text.lines().collect();
+    assert!(lines[0].contains("\"event\":\"run_start\""), "first line: {}", lines[0]);
+    assert_eq!(
+        lines.iter().filter(|l| l.contains("\"event\":\"run_start\"")).count(),
+        1,
+        "resume must append, not restart, the stream"
+    );
+    let records: Vec<&&str> = lines
+        .iter()
+        .filter(|l| l.contains("\"event\":\"record\""))
+        .collect();
+    assert_eq!(records.len() as u64, K1 + K2);
+    let mut last_iter = 0u64;
+    for r in &records {
+        let iter: u64 = r
+            .split("\"iteration\":")
+            .nth(1)
+            .and_then(|s| s.split([',', '}']).next())
+            .and_then(|s| s.trim().parse().ok())
+            .unwrap_or_else(|| panic!("record without iteration: {r}"));
+        assert!(iter > last_iter || last_iter == 0, "iteration rewound: {r}");
+        last_iter = iter;
+    }
+    assert_eq!(last_iter, K1 + K2);
+    assert!(
+        lines.iter().any(|l| l.contains("\"event\":\"checkpoint\"")),
+        "checkpoint events missing"
+    );
+    let _ = std::fs::remove_dir_all(&base);
+}
+
+// ---- the manifest front end -----------------------------------------
+
+#[test]
+fn manifest_driven_run_matches_flag_driven_run() {
+    // the acceptance criterion of the manifest API: a run configured
+    // through a TOML manifest is bit-for-bit the run configured through
+    // direct (flag-style) construction of the same values
+    let toml = r#"
+[experiment]
+dataset = "synth-linear"
+alg = "cq-ggadmm"
+workers = 12
+connectivity = 0.3
+rho = 5.0
+iters = 20
+seed = 91
+tau0 = 0.2
+xi = 0.85
+omega = 0.995
+bits0 = 2
+
+[link]
+drop_prob = 0.15
+"#;
+    let m = ExperimentManifest::from_toml(toml).unwrap();
+    let e = &m.experiment;
+    let ds = synthetic::linear_dataset(e.workers * 8, 5, e.seed);
+    let topo = Topology::random_bipartite(e.workers, e.connectivity, e.seed);
+    let p = Problem::new(&ds, &topo, e.rho, e.mu0, e.seed);
+
+    let spec = AlgSpec::parse(&m.alg, e.tau0, e.xi, e.omega, e.bits0).unwrap();
+    let mut via_manifest = Run::new(p.clone(), topo.clone(), spec, m.exec.clone());
+    let tm = via_manifest.run(e.iters as u64);
+
+    let flag_exec = ExecutionConfig::default().with_seed(91).with_drop_prob(0.15);
+    let flag_spec = AlgSpec::cq_ggadmm(0.2, 0.85, 0.995, 2);
+    let mut via_flags = Run::new(p, topo, flag_spec, flag_exec);
+    let tf = via_flags.run(20);
+
+    assert_eq!(tm.points.len(), tf.points.len());
+    for (a, b) in tm.points.iter().zip(&tf.points) {
+        assert_eq!(a.loss_gap.to_bits(), b.loss_gap.to_bits());
+        assert_eq!(a.cum_bits, b.cum_bits);
+        assert_eq!(a.cum_energy_j.to_bits(), b.cum_energy_j.to_bits());
+    }
+
+    // and the manifest itself round-trips through its serializer
+    let reparsed = ExperimentManifest::from_toml(&m.to_toml()).unwrap();
+    assert_eq!(reparsed, m);
+}

@@ -1,0 +1,172 @@
+#!/usr/bin/env python3
+"""Validate a run's JSONL event stream (see rust/src/io/events.rs).
+
+Schema v1, one JSON object per line, discriminated by "event":
+
+* run_start  -- schema, algorithm, dataset, workers, d, seed; must be
+                the first line of the stream.
+* record     -- iteration, loss_gap, consensus_gap, cum_rounds,
+                cum_bits, cum_energy_j, sim_time_s, committed, censored,
+                worker_bits (sparse [worker, bits] pairs, ascending).
+* checkpoint -- iteration, path.
+
+Checks: every line parses, the stream starts with exactly one
+run_start, record iterations strictly increase, cumulative counters
+never decrease, interval accounting conserves (committed + censored
+attempts = workers x interval; interval bits = sum of worker_bits),
+and worker ids stay within range.  A resumed (appended-to) log must
+validate identically to an uninterrupted one — that invariant is the
+point of checkpointed cumulative totals.
+
+Usage: tail_events.py EVENTS.jsonl [EVENTS.jsonl ...]
+Exit 0 and a summary per file on success; exit 1 on the first violation.
+Stdlib only.
+"""
+
+import json
+import sys
+
+SCHEMA_VERSION = 1
+
+RUN_START_KEYS = {"event", "schema", "algorithm", "dataset", "workers", "d", "seed"}
+RECORD_KEYS = {
+    "event",
+    "iteration",
+    "loss_gap",
+    "consensus_gap",
+    "cum_rounds",
+    "cum_bits",
+    "cum_energy_j",
+    "sim_time_s",
+    "committed",
+    "censored",
+    "worker_bits",
+}
+CHECKPOINT_KEYS = {"event", "iteration", "path"}
+
+
+class Violation(Exception):
+    pass
+
+
+def check_keys(obj, required, lineno):
+    missing = required - obj.keys()
+    if missing:
+        raise Violation(f"line {lineno}: missing keys {sorted(missing)}")
+    extra = obj.keys() - required
+    if extra:
+        raise Violation(f"line {lineno}: unknown keys {sorted(extra)}")
+
+
+def validate(path):
+    workers = None
+    last_iter = 0
+    prev = None  # previous record, for monotonicity and conservation
+    counts = {"run_start": 0, "record": 0, "checkpoint": 0}
+    with open(path, encoding="utf-8") as fh:
+        for lineno, line in enumerate(fh, 1):
+            line = line.strip()
+            if not line:
+                raise Violation(f"line {lineno}: blank line in stream")
+            try:
+                obj = json.loads(line)
+            except json.JSONDecodeError as e:
+                raise Violation(f"line {lineno}: bad JSON ({e})") from e
+            if not isinstance(obj, dict) or "event" not in obj:
+                raise Violation(f"line {lineno}: not an event object")
+            kind = obj["event"]
+            if lineno == 1 and kind != "run_start":
+                raise Violation(f"line 1: stream must open with run_start, got {kind!r}")
+            if kind == "run_start":
+                check_keys(obj, RUN_START_KEYS, lineno)
+                if lineno != 1:
+                    raise Violation(f"line {lineno}: duplicate run_start (resume must append)")
+                if obj["schema"] != SCHEMA_VERSION:
+                    raise Violation(
+                        f"line {lineno}: schema {obj['schema']} != {SCHEMA_VERSION}"
+                    )
+                if not (isinstance(obj["workers"], int) and obj["workers"] > 0):
+                    raise Violation(f"line {lineno}: bad workers {obj['workers']!r}")
+                workers = obj["workers"]
+            elif kind == "record":
+                check_keys(obj, RECORD_KEYS, lineno)
+                it = obj["iteration"]
+                if it <= last_iter:
+                    raise Violation(f"line {lineno}: iteration {it} after {last_iter}")
+                bits_sum = 0
+                last_w = -1
+                for pair in obj["worker_bits"]:
+                    if not (isinstance(pair, list) and len(pair) == 2):
+                        raise Violation(f"line {lineno}: bad worker_bits entry {pair!r}")
+                    w, b = pair
+                    if not (0 <= w < workers):
+                        raise Violation(f"line {lineno}: worker {w} out of range")
+                    if w <= last_w:
+                        raise Violation(f"line {lineno}: worker_bits not ascending")
+                    if b <= 0:
+                        raise Violation(f"line {lineno}: non-positive bits for worker {w}")
+                    last_w = w
+                    bits_sum += b
+                attempts = workers * (it - last_iter)
+                if obj["committed"] + obj["censored"] != attempts:
+                    raise Violation(
+                        f"line {lineno}: committed {obj['committed']} + censored "
+                        f"{obj['censored']} != {attempts} attempts"
+                    )
+                if prev is not None:
+                    for key in ("cum_rounds", "cum_bits", "cum_energy_j", "sim_time_s"):
+                        if obj[key] < prev[key]:
+                            raise Violation(
+                                f"line {lineno}: {key} decreased "
+                                f"({prev[key]} -> {obj[key]})"
+                            )
+                    if obj["cum_bits"] - prev["cum_bits"] != bits_sum:
+                        raise Violation(
+                            f"line {lineno}: interval bits {bits_sum} != cum_bits delta "
+                            f"{obj['cum_bits'] - prev['cum_bits']}"
+                        )
+                last_iter = it
+                prev = obj
+            elif kind == "checkpoint":
+                check_keys(obj, CHECKPOINT_KEYS, lineno)
+                # a checkpoint may land between record strides, but never
+                # behind what the stream has already reported
+                if obj["iteration"] < last_iter:
+                    raise Violation(
+                        f"line {lineno}: checkpoint at {obj['iteration']} behind "
+                        f"record {last_iter}"
+                    )
+                if not obj["path"]:
+                    raise Violation(f"line {lineno}: empty checkpoint path")
+            else:
+                raise Violation(f"line {lineno}: unknown event {kind!r}")
+            counts[kind] += 1
+    if counts["run_start"] != 1:
+        raise Violation("stream has no run_start")
+    if counts["record"] == 0:
+        raise Violation("stream has no record events")
+    return counts, last_iter
+
+
+def main(argv):
+    if not argv or argv[0] in ("-h", "--help"):
+        print(__doc__.strip())
+        return 0 if argv else 1
+    for path in argv:
+        try:
+            counts, last_iter = validate(path)
+        except Violation as v:
+            print(f"{path}: INVALID — {v}", file=sys.stderr)
+            return 1
+        except OSError as e:
+            print(f"{path}: {e}", file=sys.stderr)
+            return 1
+        print(
+            f"{path}: OK — {counts['record']} records to iteration {last_iter}, "
+            f"{counts['checkpoint']} checkpoints"
+        )
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))
