@@ -22,6 +22,10 @@
 //! * **blocked linalg**: the cache-blocked `gram` / Cholesky
 //!   `factor_into` / `solve_into` kernels vs the retained scalar
 //!   references at d in {50, 200, 500};
+//! * **kernel tiers at large d**: gram / factor / solve / matvec and the
+//!   fused Newton step at d in {1000, 10000}, SIMD tier vs scalar tier
+//!   and pooled vs serial (skipped entirely under `BENCH_SMOKE=1` — the
+//!   d=10000 legs take minutes);
 //! * **figure sweep**: pool-scheduled `run_figure`
 //!   (`ExecOptions::sweep_threads`) vs the serial driver (asserted when
 //!   the host has >= 4 cores).
@@ -625,6 +629,335 @@ fn bench_blocked_linalg_shootout(h: &mut Harness) {
     println!("inverse d=200 speedup: {:.2}x", sca / blk);
 }
 
+/// Fill an `r x c` matrix with standard normals.
+fn random_mat(r: usize, c: usize, seed: u64) -> Mat {
+    let mut rng = Pcg64::new(seed);
+    let mut x = Mat::zeros(r, c);
+    for i in 0..r {
+        for j in 0..c {
+            x[(i, j)] = rng.normal();
+        }
+    }
+    x
+}
+
+/// Large-dimension kernel-tier shootouts — the acceptance matrix for the
+/// SIMD tier: d in {1000, 10000} for gram / Cholesky factor / solve (plus
+/// matvec and the fused Newton step at the sizes where they are
+/// tractable), asserting both SIMD-vs-scalar (when the host has AVX2+FMA)
+/// and pooled-vs-serial (when the host has >= 4 cores).  Minutes of
+/// wall-clock at d=10000, so the whole matrix is skipped under
+/// `BENCH_SMOKE=1` — run the full `cargo bench --bench bench_hotpath` to
+/// exercise it.
+fn bench_large_linalg_shootout(h: &mut Harness) {
+    use cq_ggadmm::linalg::block::{self, KernelCtx};
+    use cq_ggadmm::linalg::{kernel_tier, set_kernel_tier, KernelTier};
+
+    if h.smoke {
+        println!("(large-d kernel-tier shootouts skipped under BENCH_SMOKE=1)");
+        return;
+    }
+    println!("-- large-d kernel-tier shootouts: d in {{1000, 10000}} --");
+    let simd = KernelTier::vectorized();
+    let tier = kernel_tier();
+    let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    if simd.is_none() {
+        println!("(SIMD-vs-scalar assertions skipped: no vectorized tier on this host)");
+    }
+    if cores < 4 {
+        println!("(pooled-vs-serial assertions skipped: only {cores} cores available)");
+    }
+
+    // ---------------- d = 1000 ----------------
+    let d = 1000usize;
+    let x = random_mat(d, d, 1000);
+    let mut out_a = Mat::zeros(d, d);
+    let mut out_b = Mat::zeros(d, d);
+
+    if let Some(t) = simd {
+        let (vec_ns, sca_ns) = min_block_pair_ns(
+            3,
+            2,
+            || block::gram_into_ctx(KernelCtx::serial(t), black_box(&x), &mut out_a),
+            || {
+                block::gram_into_ctx(
+                    KernelCtx::serial(KernelTier::Scalar),
+                    black_box(&x),
+                    &mut out_b,
+                )
+            },
+        );
+        h.record("gram d=1000 (simd serial)", vec_ns);
+        h.record("gram d=1000 (scalar serial)", sca_ns);
+        println!("gram d=1000 simd speedup: {:.2}x", sca_ns / vec_ns);
+        assert!(
+            vec_ns < sca_ns,
+            "SIMD gram must beat scalar at d=1000 ({vec_ns:.0} vs {sca_ns:.0} ns)"
+        );
+    }
+    let (pool_ns, ser_ns) = min_block_pair_ns(
+        3,
+        2,
+        || block::gram_into_ctx(KernelCtx::with_tier(tier), black_box(&x), &mut out_a),
+        || block::gram_into_ctx(KernelCtx::serial(tier), black_box(&x), &mut out_b),
+    );
+    h.record("gram d=1000 (pooled)", pool_ns);
+    h.record("gram d=1000 (serial)", ser_ns);
+    println!("gram d=1000 pool speedup: {:.2}x ({cores} cores)", ser_ns / pool_ns);
+    if cores >= 4 {
+        assert!(
+            pool_ns < ser_ns,
+            "pooled gram must beat serial at d=1000 on a {cores}-core host \
+             ({pool_ns:.0} vs {ser_ns:.0} ns)"
+        );
+    }
+
+    let spd = x.gram().add_diag(d as f64 * 0.1);
+    let mut ws_a = Cholesky::workspace(d);
+    let mut ws_b = Cholesky::workspace(d);
+    if let Some(t) = simd {
+        let (vec_ns, sca_ns) = min_block_pair_ns(
+            3,
+            2,
+            || assert!(ws_a.factor_into_ctx(KernelCtx::serial(t), black_box(&spd))),
+            || {
+                let ctx = KernelCtx::serial(KernelTier::Scalar);
+                assert!(ws_b.factor_into_ctx(ctx, black_box(&spd)));
+            },
+        );
+        h.record("cholesky factor d=1000 (simd serial)", vec_ns);
+        h.record("cholesky factor d=1000 (scalar serial)", sca_ns);
+        println!("factor d=1000 simd speedup: {:.2}x", sca_ns / vec_ns);
+        assert!(
+            vec_ns < sca_ns,
+            "SIMD factor must beat scalar at d=1000 ({vec_ns:.0} vs {sca_ns:.0} ns)"
+        );
+    }
+    let (pool_ns, ser_ns) = min_block_pair_ns(
+        3,
+        2,
+        || assert!(ws_a.factor_into_ctx(KernelCtx::with_tier(tier), black_box(&spd))),
+        || assert!(ws_b.factor_into_ctx(KernelCtx::serial(tier), black_box(&spd))),
+    );
+    h.record("cholesky factor d=1000 (pooled)", pool_ns);
+    h.record("cholesky factor d=1000 (serial)", ser_ns);
+    println!("factor d=1000 pool speedup: {:.2}x ({cores} cores)", ser_ns / pool_ns);
+    if cores >= 4 {
+        assert!(
+            pool_ns < ser_ns,
+            "pooled factor must beat serial at d=1000 on a {cores}-core host \
+             ({pool_ns:.0} vs {ser_ns:.0} ns)"
+        );
+    }
+
+    if let Some(t) = simd {
+        let mut rng = Pcg64::new(1001);
+        let b = rng.normal_vec(d);
+        let mut sol_a = vec![0.0; d];
+        let mut sol_b = vec![0.0; d];
+        let (vec_ns, sca_ns) = min_block_pair_ns(
+            3,
+            64,
+            || ws_a.solve_into_with_tier(t, black_box(&b), &mut sol_a),
+            || ws_a.solve_into_with_tier(KernelTier::Scalar, black_box(&b), &mut sol_b),
+        );
+        h.record("cholesky solve d=1000 (simd)", vec_ns);
+        h.record("cholesky solve d=1000 (scalar)", sca_ns);
+        println!("solve d=1000 simd speedup: {:.2}x", sca_ns / vec_ns);
+        assert!(
+            vec_ns < sca_ns,
+            "SIMD solve must beat scalar at d=1000 ({vec_ns:.0} vs {sca_ns:.0} ns)"
+        );
+    }
+
+    // fused Newton step at s=1000, d=1000: the whole production solver
+    // (blocked matvec margins, weighted-Gram Hessian, blocked Cholesky)
+    // under each tier.  The bench binary is single-threaded, so flipping
+    // the process-global tier between the paired closures is safe.
+    if let Some(t) = simd {
+        println!("-- fused Newton tier shootout: s=1000, d=1000, cold start --");
+        let xl = random_mat(1000, d, 1002);
+        let mut rng = Pcg64::new(1003);
+        let yl: Vec<f64> =
+            (0..1000).map(|_| if rng.bernoulli(0.5) { 1.0 } else { -1.0 }).collect();
+        let alpha = rng.normal_vec(d);
+        let nbr = rng.normal_vec(d);
+        let mut fused_a = LogisticSolver::new(xl.clone(), yl.clone(), 0.01, 0.1, 7);
+        let mut fused_b = LogisticSolver::new(xl, yl, 0.01, 0.1, 7);
+        let mut theta_a = vec![0.0; d];
+        let mut theta_b = vec![0.0; d];
+        let (vec_ns, sca_ns) = min_block_pair_ns(
+            2,
+            1,
+            || {
+                set_kernel_tier(t);
+                theta_a.iter_mut().for_each(|v| *v = 0.0);
+                fused_a.update_into(black_box(&alpha), black_box(&nbr), &mut theta_a);
+            },
+            || {
+                set_kernel_tier(KernelTier::Scalar);
+                theta_b.iter_mut().for_each(|v| *v = 0.0);
+                fused_b.update_into(black_box(&alpha), black_box(&nbr), &mut theta_b);
+            },
+        );
+        set_kernel_tier(tier);
+        h.record("logistic Newton s=1000 d=1000 (simd tier)", vec_ns);
+        h.record("logistic Newton s=1000 d=1000 (scalar tier)", sca_ns);
+        println!("fused Newton d=1000 simd speedup: {:.2}x", sca_ns / vec_ns);
+        assert!(
+            vec_ns < sca_ns,
+            "SIMD fused Newton must beat scalar at d=1000 ({vec_ns:.0} vs {sca_ns:.0} ns)"
+        );
+    }
+    drop(spd);
+    drop(ws_a);
+    drop(ws_b);
+    drop(out_a);
+    drop(out_b);
+    drop(x);
+
+    // ---------------- d = 10000 ----------------
+    // A full 10k x 10k Gram output would be 800 MB, so the d=10000 gram
+    // exercises the long-accumulation axis instead: X is 10000 x 256.
+    {
+        let x10 = random_mat(10_000, 256, 2000);
+        let mut g_a = Mat::zeros(256, 256);
+        let mut g_b = Mat::zeros(256, 256);
+        if let Some(t) = simd {
+            let (vec_ns, sca_ns) = min_block_pair_ns(
+                3,
+                4,
+                || block::gram_into_ctx(KernelCtx::serial(t), black_box(&x10), &mut g_a),
+                || {
+                    block::gram_into_ctx(
+                        KernelCtx::serial(KernelTier::Scalar),
+                        black_box(&x10),
+                        &mut g_b,
+                    )
+                },
+            );
+            h.record("gram 10000x256 (simd serial)", vec_ns);
+            h.record("gram 10000x256 (scalar serial)", sca_ns);
+            println!("gram 10000x256 simd speedup: {:.2}x", sca_ns / vec_ns);
+            assert!(
+                vec_ns < sca_ns,
+                "SIMD gram must beat scalar at 10000x256 ({vec_ns:.0} vs {sca_ns:.0} ns)"
+            );
+        }
+    }
+
+    // matvec at d=10000 (2048 rows also crosses the pooling threshold)
+    {
+        let a = random_mat(2048, 10_000, 2001);
+        let mut rng = Pcg64::new(2002);
+        let v = rng.normal_vec(10_000);
+        let mut mv_a = vec![0.0; 2048];
+        let mut mv_b = vec![0.0; 2048];
+        if let Some(t) = simd {
+            let (vec_ns, sca_ns) = min_block_pair_ns(
+                3,
+                8,
+                || block::matvec_into_ctx(KernelCtx::serial(t), black_box(&a), &v, &mut mv_a),
+                || {
+                    let ctx = KernelCtx::serial(KernelTier::Scalar);
+                    block::matvec_into_ctx(ctx, black_box(&a), &v, &mut mv_b);
+                },
+            );
+            h.record("matvec 2048x10000 (simd serial)", vec_ns);
+            h.record("matvec 2048x10000 (scalar serial)", sca_ns);
+            println!("matvec d=10000 simd speedup: {:.2}x", sca_ns / vec_ns);
+            assert!(
+                vec_ns < sca_ns,
+                "SIMD matvec must beat scalar at d=10000 ({vec_ns:.0} vs {sca_ns:.0} ns)"
+            );
+        }
+        let (pool_ns, ser_ns) = min_block_pair_ns(
+            3,
+            8,
+            || block::matvec_into_ctx(KernelCtx::with_tier(tier), black_box(&a), &v, &mut mv_a),
+            || block::matvec_into_ctx(KernelCtx::serial(tier), black_box(&a), &v, &mut mv_b),
+        );
+        h.record("matvec 2048x10000 (pooled)", pool_ns);
+        h.record("matvec 2048x10000 (serial)", ser_ns);
+        println!("matvec d=10000 pool speedup: {:.2}x ({cores} cores)", ser_ns / pool_ns);
+        if cores >= 4 {
+            assert!(
+                pool_ns < ser_ns,
+                "pooled matvec must beat serial at d=10000 on a {cores}-core host \
+                 ({pool_ns:.0} vs {ser_ns:.0} ns)"
+            );
+        }
+    }
+
+    // Cholesky factor + solve at d=10000 (800 MB matrix, ~3e11 flops):
+    // each variant is timed once — the run is long enough that a single
+    // shot is stable.  The SPD input is a scaled random symmetric matrix
+    // plus a dominant diagonal (semicircle radius 1, diagonal 10), built
+    // directly because forming it as a Gram product would cost more than
+    // the factorization itself.
+    {
+        let d = 10_000usize;
+        let mut rng = Pcg64::new(3000);
+        let mut spd = Mat::zeros(d, d);
+        let off = 0.5 / (d as f64).sqrt();
+        for i in 0..d {
+            for j in 0..=i {
+                let v = if i == j { 10.0 } else { rng.normal() * off };
+                spd[(i, j)] = v;
+                spd[(j, i)] = v;
+            }
+        }
+        let mut ws = Cholesky::workspace(d);
+        let time_factor = |ws: &mut Cholesky, ctx: KernelCtx, a: &Mat| {
+            let t0 = Instant::now();
+            assert!(ws.factor_into_ctx(ctx, a));
+            t0.elapsed().as_nanos() as f64
+        };
+        let sca_ns = time_factor(&mut ws, KernelCtx::serial(KernelTier::Scalar), &spd);
+        h.record("cholesky factor d=10000 (scalar serial)", sca_ns);
+        let mut vec_ns = sca_ns;
+        if let Some(t) = simd {
+            vec_ns = time_factor(&mut ws, KernelCtx::serial(t), &spd);
+            h.record("cholesky factor d=10000 (simd serial)", vec_ns);
+            println!("factor d=10000 simd speedup: {:.2}x", sca_ns / vec_ns);
+            assert!(
+                vec_ns < sca_ns,
+                "SIMD factor must beat scalar at d=10000 ({vec_ns:.0} vs {sca_ns:.0} ns)"
+            );
+        }
+        let pool_ns = time_factor(&mut ws, KernelCtx::with_tier(tier), &spd);
+        h.record("cholesky factor d=10000 (pooled)", pool_ns);
+        println!("factor d=10000 pool speedup: {:.2}x ({cores} cores)", vec_ns / pool_ns);
+        if cores >= 4 {
+            assert!(
+                pool_ns < vec_ns,
+                "pooled factor must beat serial at d=10000 on a {cores}-core host \
+                 ({pool_ns:.0} vs {vec_ns:.0} ns)"
+            );
+        }
+        drop(spd);
+
+        if let Some(t) = simd {
+            let b = rng.normal_vec(d);
+            let mut sol_a = vec![0.0; d];
+            let mut sol_b = vec![0.0; d];
+            let (vec_ns, sca_ns) = min_block_pair_ns(
+                3,
+                4,
+                || ws.solve_into_with_tier(t, black_box(&b), &mut sol_a),
+                || ws.solve_into_with_tier(KernelTier::Scalar, black_box(&b), &mut sol_b),
+            );
+            h.record("cholesky solve d=10000 (simd)", vec_ns);
+            h.record("cholesky solve d=10000 (scalar)", sca_ns);
+            println!("solve d=10000 simd speedup: {:.2}x", sca_ns / vec_ns);
+            assert!(
+                vec_ns < sca_ns,
+                "SIMD solve must beat scalar at d=10000 ({vec_ns:.0} vs {sca_ns:.0} ns)"
+            );
+        }
+    }
+}
+
 /// Figure-sweep shootout: pool-scheduled `run_figure` vs the serial
 /// driver on a scaled-down fig2.  Determinism is checked first (the
 /// pooled traces must equal the serial ones bit-for-bit); the wall-clock
@@ -1127,6 +1460,8 @@ fn main() {
     bench_coordinator_shootout(&mut h);
 
     bench_blocked_linalg_shootout(&mut h);
+
+    bench_large_linalg_shootout(&mut h);
 
     bench_sweep_shootout(&mut h);
 

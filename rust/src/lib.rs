@@ -43,10 +43,17 @@
 //! O(deg * d) rebuilds entirely, and shard data is shared behind `Arc`
 //! rather than copied per worker.  The opt-in `threads > 1` fan-out runs
 //! on a persistent barrier-synchronized [`parallel::WorkerPool`] built
-//! once per run (no per-phase thread spawns).  Per-step O(d^2)/O(s)
-//! solver arithmetic is intrinsic to the math.  `cargo bench --bench
-//! bench_hotpath` tracks the numbers and emits machine-readable
-//! `BENCH_hotpath.json` (see EXPERIMENTS.md §Perf).
+//! once per run (no per-phase thread spawns).  The dense kernels under
+//! [`linalg`] dispatch through a runtime-selected **kernel tier**
+//! (AVX2+FMA when detected, scalar reference otherwise — see
+//! [`linalg::KernelTier`]; override with `CQ_KERNEL_TIER` or
+//! `--kernel-tier`) and pool their Gram/GEMM/Cholesky trailing updates
+//! across cores above size thresholds, bit-identically to serial.
+//! Per-step O(d^2)/O(s) solver arithmetic is intrinsic to the math.
+//! `cargo bench --bench bench_hotpath` tracks the numbers and emits
+//! machine-readable `BENCH_hotpath.json` (see EXPERIMENTS.md §Perf);
+//! CI gates the run against `BENCH_baseline.json` via
+//! `tools/bench_diff.py`.
 
 pub mod algs;
 pub mod analysis;

@@ -6,32 +6,71 @@
 //! with blocked triangular solves (single- and multi-RHS).  The former
 //! scalar triple-loops are retained on [`Mat`]/[`super::Cholesky`] as
 //! `*_scalar` reference implementations; differential tests
-//! (`tests/blocked_linalg.rs`) lock blocked-vs-scalar agreement and
-//! `bench_hotpath` asserts the blocked kernels win at d in {50, 200, 500}.
+//! (`tests/blocked_linalg.rs`, `tests/simd_kernels.rs`) lock
+//! blocked-vs-scalar and vectorized-vs-scalar agreement and
+//! `bench_hotpath` asserts the blocked kernels win at d in
+//! {50, 200, 500, 1000, 10000}.
 //!
 //! Design (CPU, f64, no external BLAS):
 //! * **Panel packing** — Gram products pack [`PANEL`] rows of `X`
 //!   transposed into a contiguous scratch, so the reduction dimension of
 //!   every inner product is a unit-stride slice.
 //! * **Register tiling** — symmetric-product and trailing-update kernels
-//!   process 2x2 output tiles with four 4-wide accumulator lanes each
-//!   (see [`dot2x2`]): input rows are reused across two outputs and the
-//!   16 independent accumulator chains keep the FMA pipeline full.
+//!   process 2x2 output tiles with four accumulator lanes each (see
+//!   `dot2x2`): input rows are reused across two outputs and the 16
+//!   independent accumulator chains keep the FMA pipeline full.
 //! * **Cache tiling** — output blocks of [`TILE`] x [`TILE`] keep both
 //!   packed operand panels resident while a tile is produced.
 //! * **No data-dependent branches** — unlike the seed kernels, the inner
 //!   loops never test operand values (`if a == 0.0 { continue; }` is a
 //!   mispredict on dense data); work is bounded by shapes alone.
 //!
+//! # Kernel tiers
+//!
+//! Each micro-kernel exists in two tiers dispatched through
+//! [`KernelTier`] (resolved once at startup; `CQ_KERNEL_TIER` /
+//! `--kernel-tier` override): the 4-wide unrolled **scalar** reference
+//! (bit-exact baseline, fallback on non-AVX2 machines) and explicit
+//! **AVX2+FMA** intrinsics.  AVX2 lane layout:
+//!
+//! * `dot2x2` keeps its four accumulators as one `__m256d` each (the
+//!   scalar tier's four `[f64; 4]` lane arrays map 1:1 onto the four
+//!   vector registers); 4-element steps, scalar tail.
+//! * plain reductions (`util::dot`, per-row matvec) run two independent
+//!   4-lane FMA chains over 8-element steps, combined as one vector add
+//!   + the `(l0+l1)+(l2+l3)` horizontal sum — the matvec micro-kernel
+//!   replicates `util`'s layout exactly so `matvec == per-row dot`
+//!   stays **bit-identical within each tier**.
+//! * `axpy`-family updates are multiply-then-add (no FMA), so all
+//!   triangular solves/backsubstitutions and `cholesky_inverse_into`
+//!   are bit-identical **across** tiers; `axpy2` (GEMM) does use FMA.
+//!
+//! Cross-tier agreement of the FMA reductions is rounding-level only
+//! (tolerance property tests); per-tier results are deterministic.
+//!
+//! # Pool-parallel trailing updates
+//!
+//! Large SYRK/GEMM trailing updates and the blocked-Cholesky trailing
+//! block dispatch over the shared [`crate::parallel::WorkerPool`]
+//! (`CQ_LINALG_THREADS`, [`crate::parallel::kernel_threads`]) once the
+//! parallel dimension reaches [`PAR_MIN_DIM`] (resp. [`PAR_MIN_FLOPS`] /
+//! [`PAR_MIN_MV`] flop floors for GEMM/matvec).  Jobs own disjoint
+//! output row stripes and the per-entry reduction order is unchanged, so
+//! pooled results are **bit-identical to the serial path** on every
+//! tier.
+//!
 //! Tuning: the block constants below were chosen for ~32 KiB L1 / 512 KiB
 //! L2 caches (packed panel rows of `PANEL * 8` = 512 B; a 2x[`TILE`] tile
-//! pair is 32 KiB).  To re-tune for a different cache hierarchy, adjust
-//! the constants and re-run `cargo bench --bench bench_hotpath` — the
-//! `blocked vs scalar` shootouts print the speedup per dimension (see
-//! README §Performance).
+//! pair is 32 KiB).  AVX2 re-tune notes: the micro-kernels are bound by
+//! two loads per FMA, so widening [`TILE`] helps only once the packed
+//! panels outgrow L1; re-run `cargo bench --bench bench_hotpath` after
+//! any change — the `blocked vs scalar` and `simd vs scalar` shootouts
+//! print the speedup per dimension (see README §Performance).
 
 use super::Mat;
-use crate::util::{axpy, dot};
+use crate::parallel::{with_kernel_pool, SyncPtr, WorkerPool};
+use crate::util::tier::{kernel_tier, KernelTier};
+use crate::util::{axpy, axpy_with_tier, dot_with_tier};
 
 /// Rows of `X` packed per Gram panel (reduction-dimension blocking).
 pub const PANEL: usize = 64;
@@ -45,18 +84,109 @@ pub const GEMM_KC: usize = 64;
 /// Diagonal-block edge of the right-looking blocked Cholesky.
 pub const CHOL_NB: usize = 32;
 
+/// Minimum extent of the parallel dimension before a SYRK/Cholesky
+/// trailing update pays the pool dispatch barrier.
+pub const PAR_MIN_DIM: usize = 256;
+
+/// Minimum GEMM flop volume (`2 m n k`) before output rows are pooled.
+pub const PAR_MIN_FLOPS: usize = 1 << 24;
+
+/// Minimum matvec flop volume (`2 rows cols`) before row quads are
+/// pooled.
+pub const PAR_MIN_MV: usize = 1 << 22;
+
+/// Output rows per pooled GEMM job (preserves reduction-panel reuse
+/// while keeping claim overhead negligible).
+const PAR_ROWBLOCK: usize = 16;
+
+/// Rows per pooled Cholesky panel-solve job.
+const PAR_CHOLBLOCK: usize = 32;
+
+/// Execution context for the blocked kernels: instruction tier plus
+/// whether large trailing updates may dispatch over the shared kernel
+/// pool.  Pooled and serial runs produce identical bits on every tier;
+/// explicit-tier contexts exist so differential tests and bench
+/// shootouts never mutate process-global state.
+#[derive(Clone, Copy, Debug)]
+pub struct KernelCtx {
+    /// Instruction tier for every reduction in the call.
+    pub tier: KernelTier,
+    /// Allow pool-parallel trailing updates (subject to the size
+    /// thresholds above and pool availability).
+    pub pooled: bool,
+}
+
+impl KernelCtx {
+    /// The process-wide default: resolved tier, pooling allowed.
+    pub fn auto() -> KernelCtx {
+        KernelCtx { tier: kernel_tier(), pooled: true }
+    }
+
+    /// Explicit tier, pooling allowed.
+    pub fn with_tier(tier: KernelTier) -> KernelCtx {
+        KernelCtx { tier, pooled: true }
+    }
+
+    /// Explicit tier, strictly single-threaded.
+    pub fn serial(tier: KernelTier) -> KernelCtx {
+        KernelCtx { tier, pooled: false }
+    }
+}
+
+/// Whether `tier` may take the AVX2 paths on this machine.
+#[cfg(target_arch = "x86_64")]
+#[inline]
+fn use_avx2(tier: KernelTier) -> bool {
+    tier == KernelTier::Avx2 && crate::util::tier::avx2_available()
+}
+
+#[cfg(not(target_arch = "x86_64"))]
+#[inline]
+fn use_avx2(_tier: KernelTier) -> bool {
+    false
+}
+
 /// Packed row `i` of a panel: `p` contiguous reduction elements.
 #[inline]
 fn prow(pack: &[f64], i: usize, p: usize) -> &[f64] {
     &pack[i * p..(i + 1) * p]
 }
 
-/// 2x2 register-tiled micro-kernel: the four inner products between rows
-/// `{a0, a1}` and `{b0, b1}`, each accumulated over four independent
-/// lanes (16 chains total) so the FMA pipeline never stalls on a single
-/// additive dependency.
+/// Shared slice over columns `c0..c1` of row `i`, through the raw base
+/// pointer of a row-major matrix (used inside pooled jobs where the
+/// borrow checker cannot see row disjointness).
+///
+/// # Safety
+/// The indexed range must lie inside the allocation and no concurrent
+/// write may overlap columns `c0..c1` of row `i` for the slice's
+/// lifetime.
 #[inline]
-fn dot2x2(a0: &[f64], a1: &[f64], b0: &[f64], b1: &[f64]) -> (f64, f64, f64, f64) {
+unsafe fn raw_row<'a>(base: *const f64, cols: usize, i: usize, c0: usize, c1: usize) -> &'a [f64] {
+    std::slice::from_raw_parts(base.add(i * cols + c0), c1 - c0)
+}
+
+/// 2x2 register-tiled micro-kernel (tier-dispatched): the four inner
+/// products between rows `{a0, a1}` and `{b0, b1}`.
+#[inline]
+fn dot2x2(
+    tier: KernelTier,
+    a0: &[f64],
+    a1: &[f64],
+    b0: &[f64],
+    b1: &[f64],
+) -> (f64, f64, f64, f64) {
+    if use_avx2(tier) {
+        // SAFETY: `use_avx2` confirmed AVX2+FMA at runtime.
+        return unsafe { avx2::dot2x2(a0, a1, b0, b1) };
+    }
+    dot2x2_scalar(a0, a1, b0, b1)
+}
+
+/// Scalar reference 2x2 micro-kernel: each product accumulates over
+/// four independent lanes (16 chains total) so the pipeline never
+/// stalls on a single additive dependency.
+#[inline]
+fn dot2x2_scalar(a0: &[f64], a1: &[f64], b0: &[f64], b1: &[f64]) -> (f64, f64, f64, f64) {
     let mut c00 = [0.0f64; 4];
     let mut c01 = [0.0f64; 4];
     let mut c10 = [0.0f64; 4];
@@ -92,10 +222,22 @@ fn dot2x2(a0: &[f64], a1: &[f64], b0: &[f64], b1: &[f64]) -> (f64, f64, f64, f64
     (s00, s01, s10, s11)
 }
 
-/// `out[j] += a0 * b0[j] + a1 * b1[j]` — the two-row GEMM update that
-/// halves output-row traffic relative to two separate axpys.
+/// `out[j] += a0 * b0[j] + a1 * b1[j]` (tier-dispatched) — the two-row
+/// GEMM update that halves output-row traffic relative to two separate
+/// axpys.
 #[inline]
-fn axpy2(out: &mut [f64], a0: f64, b0: &[f64], a1: f64, b1: &[f64]) {
+fn axpy2(tier: KernelTier, out: &mut [f64], a0: f64, b0: &[f64], a1: f64, b1: &[f64]) {
+    if use_avx2(tier) {
+        // SAFETY: `use_avx2` confirmed AVX2+FMA at runtime.
+        unsafe { avx2::axpy2(out, a0, b0, a1, b1) };
+        return;
+    }
+    axpy2_scalar(out, a0, b0, a1, b1)
+}
+
+/// Scalar reference two-row GEMM update.
+#[inline]
+fn axpy2_scalar(out: &mut [f64], a0: f64, b0: &[f64], a1: f64, b1: &[f64]) {
     let mut co = out.chunks_exact_mut(4);
     let mut c0 = b0.chunks_exact(4);
     let mut c1 = b1.chunks_exact(4);
@@ -131,41 +273,54 @@ fn pack_panel(x: &Mat, p0: usize, p: usize, w: Option<&[f64]>, pack: &mut [f64])
     }
 }
 
-/// Accumulate the upper triangle of the self-product of rows
-/// `row(0..n)` into `out` (tiled; 2x2 micro-kernel on full off-diagonal
-/// tiles, plain dots on the diagonal tiles and odd remainders).  Shared
-/// by the packed-panel Gram kernel ([`gram_into`] via `prow`) and the
-/// row-Gram kernel ([`gram_rows_into`] via `Mat::row`).
-fn syrk_upper_tiled<'a, F: Fn(usize) -> &'a [f64]>(row: &F, n: usize, out: &mut Mat) {
-    let mut i0 = 0;
-    while i0 < n {
-        let i1 = (i0 + TILE).min(n);
-        // diagonal tile: plain dots over the triangle
-        for i in i0..i1 {
-            for j in i..i1 {
-                let v = dot(row(i), row(j));
-                out[(i, j)] += v;
-            }
+/// One [`TILE`]-stripe of the upper-triangle SYRK: the diagonal tile at
+/// `i0` plus every full rectangle to its right.  Writes only rows
+/// `i0..min(i0+TILE, n)` of the `n x cols` output at `out`, so
+/// concurrent stripes are disjoint; the arithmetic is identical whether
+/// stripes run serially or pooled.
+///
+/// # Safety
+/// `out` must point at an `n x cols` row-major buffer; no concurrent
+/// access may touch rows `i0..min(i0+TILE, n)`; `row(i)` must not read
+/// from `out`.
+unsafe fn syrk_upper_stripe<'a, F: Fn(usize) -> &'a [f64]>(
+    tier: KernelTier,
+    row: &F,
+    n: usize,
+    cols: usize,
+    out: *mut f64,
+    i0: usize,
+) {
+    let i1 = (i0 + TILE).min(n);
+    // diagonal tile: plain dots over the triangle
+    for i in i0..i1 {
+        for j in i..i1 {
+            let v = dot_with_tier(tier, row(i), row(j));
+            *out.add(i * cols + j) += v;
         }
-        // off-diagonal tiles: full rectangles, 2x2 register tiling
-        let mut j0 = i1;
-        while j0 < n {
-            let j1 = (j0 + TILE).min(n);
-            rect_tile_acc(row, i0, i1, j0, j1, out);
-            j0 = j1;
-        }
-        i0 = i1;
+    }
+    // off-diagonal tiles: full rectangles, 2x2 register tiling
+    let mut j0 = i1;
+    while j0 < n {
+        let j1 = (j0 + TILE).min(n);
+        rect_tile_acc(tier, row, i0, i1, j0, j1, cols, out);
+        j0 = j1;
     }
 }
 
 /// `out[i0..i1, j0..j1] += row_i . row_j` over a full rectangular tile.
-fn rect_tile_acc<'a, F: Fn(usize) -> &'a [f64]>(
+///
+/// # Safety
+/// Same contract as [`syrk_upper_stripe`] (which is the only caller).
+unsafe fn rect_tile_acc<'a, F: Fn(usize) -> &'a [f64]>(
+    tier: KernelTier,
     row: &F,
     i0: usize,
     i1: usize,
     j0: usize,
     j1: usize,
-    out: &mut Mat,
+    cols: usize,
+    out: *mut f64,
 ) {
     let mut i = i0;
     while i + 2 <= i1 {
@@ -173,24 +328,59 @@ fn rect_tile_acc<'a, F: Fn(usize) -> &'a [f64]>(
         let pi1 = row(i + 1);
         let mut j = j0;
         while j + 2 <= j1 {
-            let (s00, s01, s10, s11) = dot2x2(pi0, pi1, row(j), row(j + 1));
-            out[(i, j)] += s00;
-            out[(i, j + 1)] += s01;
-            out[(i + 1, j)] += s10;
-            out[(i + 1, j + 1)] += s11;
+            let (s00, s01, s10, s11) = dot2x2(tier, pi0, pi1, row(j), row(j + 1));
+            *out.add(i * cols + j) += s00;
+            *out.add(i * cols + j + 1) += s01;
+            *out.add((i + 1) * cols + j) += s10;
+            *out.add((i + 1) * cols + j + 1) += s11;
             j += 2;
         }
         if j < j1 {
             let pj = row(j);
-            out[(i, j)] += dot(pi0, pj);
-            out[(i + 1, j)] += dot(pi1, pj);
+            *out.add(i * cols + j) += dot_with_tier(tier, pi0, pj);
+            *out.add((i + 1) * cols + j) += dot_with_tier(tier, pi1, pj);
         }
         i += 2;
     }
     if i < i1 {
         let pi = row(i);
         for j in j0..j1 {
-            out[(i, j)] += dot(pi, row(j));
+            *out.add(i * cols + j) += dot_with_tier(tier, pi, row(j));
+        }
+    }
+}
+
+/// Accumulate the upper triangle of the self-product of rows
+/// `row(0..n)` into `out`, one [`TILE`]-stripe at a time — pooled over
+/// stripes when a pool is supplied and `n >= PAR_MIN_DIM` (stripes own
+/// disjoint output rows, so pooled == serial bitwise).  Shared by the
+/// packed-panel Gram kernel ([`gram_into`] via `prow`) and the row-Gram
+/// kernel ([`gram_rows_into`] via `Mat::row`).
+fn syrk_upper_tiled<'a, F: Fn(usize) -> &'a [f64] + Sync>(
+    tier: KernelTier,
+    row: &F,
+    n: usize,
+    out: &mut Mat,
+    pool: Option<&mut WorkerPool>,
+) {
+    let cols = out.cols();
+    let base = out.data_mut().as_mut_ptr();
+    let stripes = n.div_ceil(TILE);
+    match pool {
+        Some(pool) if n >= PAR_MIN_DIM => {
+            let ptr = SyncPtr(base);
+            pool.for_each(stripes, |s| {
+                // SAFETY: stripe `s` writes only rows s*TILE..(s+1)*TILE
+                // and each stripe is claimed by exactly one job; `row`
+                // reads a different buffer than `out`.
+                unsafe { syrk_upper_stripe(tier, row, n, cols, ptr.0, s * TILE) };
+            });
+        }
+        _ => {
+            for s in 0..stripes {
+                // SAFETY: exclusive access through `&mut Mat`.
+                unsafe { syrk_upper_stripe(tier, row, n, cols, base, s * TILE) };
+            }
         }
     }
 }
@@ -208,9 +398,18 @@ fn mirror_upper(out: &mut Mat) {
 /// Blocked Gram product `out = x^T x` (SYRK; upper triangle computed
 /// through packed panels + the 2x2 micro-kernel, then mirrored).
 pub fn gram_into(x: &Mat, out: &mut Mat) {
+    gram_into_ctx(KernelCtx::auto(), x, out);
+}
+
+/// [`gram_into`] under an explicit [`KernelCtx`].
+pub fn gram_into_ctx(ctx: KernelCtx, x: &Mat, out: &mut Mat) {
     let d = x.cols();
     let mut pack = vec![0.0; d * PANEL];
-    weighted_gram_with_pack(x, None, out, &mut pack);
+    if ctx.pooled && d >= PAR_MIN_DIM {
+        with_kernel_pool(|pool| weighted_gram_with_pack(ctx.tier, x, None, out, &mut pack, pool));
+    } else {
+        weighted_gram_with_pack(ctx.tier, x, None, out, &mut pack, None);
+    }
 }
 
 /// Blocked weighted Gram product `out = sum_r w[r] * x_r x_r^T`
@@ -219,11 +418,33 @@ pub fn gram_into(x: &Mat, out: &mut Mat) {
 /// caller-held scratch buffer (resized here), so per-Newton-step Hessian
 /// assemblies allocate nothing.
 pub fn weighted_gram_into(x: &Mat, w: &[f64], out: &mut Mat, pack: &mut Vec<f64>) {
-    assert_eq!(w.len(), x.rows(), "weighted_gram weight length mismatch");
-    weighted_gram_with_pack(x, Some(w), out, pack);
+    weighted_gram_into_ctx(KernelCtx::auto(), x, w, out, pack);
 }
 
-fn weighted_gram_with_pack(x: &Mat, w: Option<&[f64]>, out: &mut Mat, pack: &mut Vec<f64>) {
+/// [`weighted_gram_into`] under an explicit [`KernelCtx`].
+pub fn weighted_gram_into_ctx(
+    ctx: KernelCtx,
+    x: &Mat,
+    w: &[f64],
+    out: &mut Mat,
+    pack: &mut Vec<f64>,
+) {
+    assert_eq!(w.len(), x.rows(), "weighted_gram weight length mismatch");
+    if ctx.pooled && x.cols() >= PAR_MIN_DIM {
+        with_kernel_pool(|pool| weighted_gram_with_pack(ctx.tier, x, Some(w), out, pack, pool));
+    } else {
+        weighted_gram_with_pack(ctx.tier, x, Some(w), out, pack, None);
+    }
+}
+
+fn weighted_gram_with_pack(
+    tier: KernelTier,
+    x: &Mat,
+    w: Option<&[f64]>,
+    out: &mut Mat,
+    pack: &mut Vec<f64>,
+    mut pool: Option<&mut WorkerPool>,
+) {
     let (s, d) = (x.rows(), x.cols());
     assert_eq!(out.rows(), d, "gram output dimension mismatch");
     assert_eq!(out.cols(), d, "gram output dimension mismatch");
@@ -234,7 +455,7 @@ fn weighted_gram_with_pack(x: &Mat, w: Option<&[f64]>, out: &mut Mat, pack: &mut
         let p = PANEL.min(s - p0);
         pack_panel(x, p0, p, w, pack);
         let panel: &[f64] = pack;
-        syrk_upper_tiled(&|i| prow(panel, i, p), d, out);
+        syrk_upper_tiled(tier, &|i| prow(panel, i, p), d, out, pool.as_deref_mut());
         p0 += p;
     }
     mirror_upper(out);
@@ -245,87 +466,213 @@ fn weighted_gram_with_pack(x: &Mat, w: Option<&[f64]>, out: &mut Mat, pack: &mut
 /// Used by the spectral tools on wide matrices (e.g. the paper's signed
 /// incidence matrix `M_-`).
 pub fn gram_rows_into(x: &Mat, out: &mut Mat) {
+    gram_rows_into_ctx(KernelCtx::auto(), x, out);
+}
+
+/// [`gram_rows_into`] under an explicit [`KernelCtx`].
+pub fn gram_rows_into_ctx(ctx: KernelCtx, x: &Mat, out: &mut Mat) {
     let s = x.rows();
     assert_eq!(out.rows(), s, "gram_rows output dimension mismatch");
     assert_eq!(out.cols(), s, "gram_rows output dimension mismatch");
     out.data_mut().iter_mut().for_each(|v| *v = 0.0);
-    syrk_upper_tiled(&|i| x.row(i), s, out);
+    if ctx.pooled && s >= PAR_MIN_DIM {
+        with_kernel_pool(|pool| syrk_upper_tiled(ctx.tier, &|i| x.row(i), s, out, pool));
+    } else {
+        syrk_upper_tiled(ctx.tier, &|i| x.row(i), s, out, None);
+    }
     mirror_upper(out);
 }
 
-/// Blocked GEMM `out = a * b` (k-blocked, two reduction rows per pass
-/// through the output row; branch-free inner loops).  `out` must not
-/// alias `a` or `b`.
-pub fn matmul_into(a: &Mat, b: &Mat, out: &mut Mat) {
-    assert_eq!(a.cols(), b.rows(), "matmul dimension mismatch");
-    assert_eq!(out.rows(), a.rows(), "matmul output dimension mismatch");
-    assert_eq!(out.cols(), b.cols(), "matmul output dimension mismatch");
-    out.data_mut().iter_mut().for_each(|v| *v = 0.0);
+/// GEMM over output rows `r0..r1`: per row, reduction blocks of
+/// [`GEMM_KC`] in ascending order, two reduction rows per pass — the
+/// per-row operation order is independent of how rows are grouped, so
+/// serial and pooled runs are bit-identical.
+///
+/// # Safety
+/// `base` must point at the `a.rows() x b.cols()` row-major output; no
+/// concurrent access may touch rows `r0..r1`.
+unsafe fn matmul_rows(
+    tier: KernelTier,
+    a: &Mat,
+    b: &Mat,
+    base: *mut f64,
+    r0: usize,
+    r1: usize,
+) {
     let k = a.cols();
+    let m = b.cols();
     let mut k0 = 0;
     while k0 < k {
         let k1 = (k0 + GEMM_KC).min(k);
-        for i in 0..a.rows() {
+        for i in r0..r1 {
             let arow = &a.row(i)[k0..k1];
-            let orow = out.row_mut(i);
+            let orow = std::slice::from_raw_parts_mut(base.add(i * m), m);
             let mut kk = 0;
             while kk + 2 <= arow.len() {
-                axpy2(orow, arow[kk], b.row(k0 + kk), arow[kk + 1], b.row(k0 + kk + 1));
+                axpy2(
+                    tier,
+                    orow,
+                    arow[kk],
+                    b.row(k0 + kk),
+                    arow[kk + 1],
+                    b.row(k0 + kk + 1),
+                );
                 kk += 2;
             }
             if kk < arow.len() {
-                axpy(orow, arow[kk], b.row(k0 + kk));
+                axpy_with_tier(tier, orow, arow[kk], b.row(k0 + kk));
             }
         }
         k0 = k1;
     }
 }
 
+/// Blocked GEMM `out = a * b` (k-blocked, two reduction rows per pass
+/// through the output row; branch-free inner loops).  `out` must not
+/// alias `a` or `b`.
+pub fn matmul_into(a: &Mat, b: &Mat, out: &mut Mat) {
+    matmul_into_ctx(KernelCtx::auto(), a, b, out);
+}
+
+/// [`matmul_into`] under an explicit [`KernelCtx`].
+pub fn matmul_into_ctx(ctx: KernelCtx, a: &Mat, b: &Mat, out: &mut Mat) {
+    assert_eq!(a.cols(), b.rows(), "matmul dimension mismatch");
+    assert_eq!(out.rows(), a.rows(), "matmul output dimension mismatch");
+    assert_eq!(out.cols(), b.cols(), "matmul output dimension mismatch");
+    out.data_mut().iter_mut().for_each(|v| *v = 0.0);
+    let rows = a.rows();
+    let flops = 2 * rows * a.cols() * b.cols();
+    let base = out.data_mut().as_mut_ptr();
+    if ctx.pooled && rows >= 2 * PAR_ROWBLOCK && flops >= PAR_MIN_FLOPS {
+        with_kernel_pool(|pool| match pool {
+            Some(pool) => {
+                let ptr = SyncPtr(base);
+                let blocks = rows.div_ceil(PAR_ROWBLOCK);
+                pool.for_each(blocks, |blk| {
+                    let r0 = blk * PAR_ROWBLOCK;
+                    let r1 = (r0 + PAR_ROWBLOCK).min(rows);
+                    // SAFETY: each row block is claimed by exactly one
+                    // job; blocks partition 0..rows disjointly.
+                    unsafe { matmul_rows(ctx.tier, a, b, ptr.0, r0, r1) };
+                });
+            }
+            // SAFETY: exclusive access through `&mut Mat`.
+            None => unsafe { matmul_rows(ctx.tier, a, b, base, 0, rows) },
+        });
+    } else {
+        // SAFETY: exclusive access through `&mut Mat`.
+        unsafe { matmul_rows(ctx.tier, a, b, base, 0, rows) };
+    }
+}
+
+/// Matvec over row quads `q0..q1` (quad `q` covers rows
+/// `4q..min(4q+4, rows)`): full quads through the four-rows-share-`v`
+/// micro-kernel, the trailing partial quad row-by-row.  Per-row
+/// accumulation matches `util::dot`'s layout on each tier, so results
+/// are bit-identical to the row-by-row dot formulation (and pooled ==
+/// serial bitwise).
+///
+/// # Safety
+/// `base` must point at the length-`rows` output; no concurrent access
+/// may touch rows `4*q0..min(4*q1, rows)`.
+unsafe fn matvec_quads(
+    tier: KernelTier,
+    a: &Mat,
+    v: &[f64],
+    base: *mut f64,
+    q0: usize,
+    q1: usize,
+) {
+    let rows = a.rows();
+    let n = a.cols();
+    for q in q0..q1 {
+        let i = 4 * q;
+        if i + 4 <= rows {
+            let vals = if use_avx2(tier) {
+                // SAFETY: `use_avx2` confirmed AVX2+FMA at runtime.
+                avx2::matvec4(a.row(i), a.row(i + 1), a.row(i + 2), a.row(i + 3), v)
+            } else {
+                matvec4_scalar(a.row(i), a.row(i + 1), a.row(i + 2), a.row(i + 3), v)
+            };
+            for (r, val) in vals.iter().enumerate() {
+                *base.add(i + r) = *val;
+            }
+        } else {
+            for r in i..rows {
+                *base.add(r) = dot_with_tier(tier, a.row(r), v);
+            }
+        }
+    }
+}
+
+/// Scalar reference four-row matvec micro-kernel: four rows share each
+/// load of `v`; per-row accumulation order is exactly
+/// [`crate::util::dot_scalar`]'s (four independent lanes, left-fold
+/// tail, pairwise combine).
+#[inline]
+fn matvec4_scalar(r0: &[f64], r1: &[f64], r2: &[f64], r3: &[f64], v: &[f64]) -> [f64; 4] {
+    let n = v.len();
+    let (r0, r1, r2, r3) = (&r0[..n], &r1[..n], &r2[..n], &r3[..n]);
+    let ch = n - n % 4;
+    let mut acc = [[0.0f64; 4]; 4];
+    let mut c = 0;
+    while c < ch {
+        for t in 0..4 {
+            let vt = v[c + t];
+            acc[0][t] += r0[c + t] * vt;
+            acc[1][t] += r1[c + t] * vt;
+            acc[2][t] += r2[c + t] * vt;
+            acc[3][t] += r3[c + t] * vt;
+        }
+        c += 4;
+    }
+    let mut tail = [0.0f64; 4];
+    while c < n {
+        tail[0] += r0[c] * v[c];
+        tail[1] += r1[c] * v[c];
+        tail[2] += r2[c] * v[c];
+        tail[3] += r3[c] * v[c];
+        c += 1;
+    }
+    let mut out = [0.0f64; 4];
+    for (r, t) in tail.iter().enumerate() {
+        out[r] = (acc[r][0] + acc[r][1]) + (acc[r][2] + acc[r][3]) + t;
+    }
+    out
+}
+
 /// Blocked matvec `out = a * v`: four rows share each load of `v`.  The
-/// per-row accumulation order is exactly [`crate::util::dot`]'s (four
-/// independent lanes, left-fold tail, pairwise combine), so the result
-/// is bit-identical to the row-by-row dot formulation.
+/// per-row accumulation order is exactly [`crate::util::dot`]'s on the
+/// same tier, so the result is bit-identical to the row-by-row dot
+/// formulation.
 pub fn matvec_into(a: &Mat, v: &[f64], out: &mut [f64]) {
+    matvec_into_ctx(KernelCtx::auto(), a, v, out);
+}
+
+/// [`matvec_into`] under an explicit [`KernelCtx`].
+pub fn matvec_into_ctx(ctx: KernelCtx, a: &Mat, v: &[f64], out: &mut [f64]) {
     let rows = a.rows();
     let n = a.cols();
     assert_eq!(v.len(), n, "matvec dimension mismatch");
     assert_eq!(out.len(), rows, "matvec output dimension mismatch");
-    let v = &v[..n];
-    let ch = n - n % 4;
-    let mut i = 0;
-    while i + 4 <= rows {
-        let r0 = &a.row(i)[..n];
-        let r1 = &a.row(i + 1)[..n];
-        let r2 = &a.row(i + 2)[..n];
-        let r3 = &a.row(i + 3)[..n];
-        let mut acc = [[0.0f64; 4]; 4];
-        let mut c = 0;
-        while c < ch {
-            for t in 0..4 {
-                let vt = v[c + t];
-                acc[0][t] += r0[c + t] * vt;
-                acc[1][t] += r1[c + t] * vt;
-                acc[2][t] += r2[c + t] * vt;
-                acc[3][t] += r3[c + t] * vt;
+    let quads = rows.div_ceil(4);
+    let base = out.as_mut_ptr();
+    if ctx.pooled && 2 * rows * n >= PAR_MIN_MV && quads >= 2 {
+        with_kernel_pool(|pool| match pool {
+            Some(pool) => {
+                let ptr = SyncPtr(base);
+                pool.for_each(quads, |q| {
+                    // SAFETY: each quad is claimed by exactly one job;
+                    // quads partition the output disjointly.
+                    unsafe { matvec_quads(ctx.tier, a, v, ptr.0, q, q + 1) };
+                });
             }
-            c += 4;
-        }
-        let mut tail = [0.0f64; 4];
-        while c < n {
-            tail[0] += r0[c] * v[c];
-            tail[1] += r1[c] * v[c];
-            tail[2] += r2[c] * v[c];
-            tail[3] += r3[c] * v[c];
-            c += 1;
-        }
-        for (r, t) in tail.iter().enumerate() {
-            out[i + r] = (acc[r][0] + acc[r][1]) + (acc[r][2] + acc[r][3]) + t;
-        }
-        i += 4;
-    }
-    while i < rows {
-        out[i] = dot(a.row(i), v);
-        i += 1;
+            // SAFETY: exclusive access through `&mut [f64]`.
+            None => unsafe { matvec_quads(ctx.tier, a, v, base, 0, quads) },
+        });
+    } else {
+        // SAFETY: exclusive access through `&mut [f64]`.
+        unsafe { matvec_quads(ctx.tier, a, v, base, 0, quads) };
     }
 }
 
@@ -338,8 +685,30 @@ pub fn matvec_into(a: &Mat, v: &[f64], out: &mut [f64]) {
 /// (left-looking, contiguous-prefix dots), (2) solve the sub-diagonal
 /// panel against it, (3) subtract the panel's self-product from the
 /// trailing lower triangle with the tiled 2x2 SYRK micro-kernel — so the
-/// O(n^3) bulk runs on unit-stride slices of length [`CHOL_NB`].
+/// O(n^3) bulk runs on unit-stride slices of length [`CHOL_NB`].  Steps
+/// (2)/(3) pool over row blocks / tile stripes while the trailing
+/// dimension stays above [`PAR_MIN_DIM`] (disjoint row ownership; reads
+/// are confined to panel columns finalized before the dispatch, so
+/// pooled == serial bitwise).
 pub fn cholesky_factor_blocked(a: &Mat, l: &mut Mat) -> bool {
+    cholesky_factor_blocked_ctx(KernelCtx::auto(), a, l)
+}
+
+/// [`cholesky_factor_blocked`] under an explicit [`KernelCtx`].
+pub fn cholesky_factor_blocked_ctx(ctx: KernelCtx, a: &Mat, l: &mut Mat) -> bool {
+    if ctx.pooled && a.rows() >= PAR_MIN_DIM {
+        with_kernel_pool(|pool| cholesky_factor_core(ctx.tier, a, l, pool))
+    } else {
+        cholesky_factor_core(ctx.tier, a, l, None)
+    }
+}
+
+fn cholesky_factor_core(
+    tier: KernelTier,
+    a: &Mat,
+    l: &mut Mat,
+    mut pool: Option<&mut WorkerPool>,
+) -> bool {
     let n = a.rows();
     debug_assert_eq!(a.cols(), n);
     debug_assert_eq!(l.rows(), n);
@@ -348,6 +717,7 @@ pub fn cholesky_factor_blocked(a: &Mat, l: &mut Mat) -> bool {
         let src = &a.row(i)[..=i];
         l.row_mut(i)[..=i].copy_from_slice(src);
     }
+    let cols = l.cols();
     let mut k0 = 0;
     while k0 < n {
         let k1 = (k0 + CHOL_NB).min(n);
@@ -355,7 +725,7 @@ pub fn cholesky_factor_blocked(a: &Mat, l: &mut Mat) -> bool {
         // < k0 were already subtracted by earlier trailing updates)
         for i in k0..k1 {
             for j in k0..=i {
-                let s = dot(&l.row(i)[k0..j], &l.row(j)[k0..j]);
+                let s = dot_with_tier(tier, &l.row(i)[k0..j], &l.row(j)[k0..j]);
                 let sum = l[(i, j)] - s;
                 if i == j {
                     if sum <= 0.0 {
@@ -367,87 +737,186 @@ pub fn cholesky_factor_blocked(a: &Mat, l: &mut Mat) -> bool {
                 }
             }
         }
-        // (2) panel solve: L21 = A21 * L11^{-T}
-        for i in k1..n {
-            for j in k0..k1 {
-                let s = dot(&l.row(i)[k0..j], &l.row(j)[k0..j]);
-                l[(i, j)] = (l[(i, j)] - s) / l[(j, j)];
+        // (2) panel solve: L21 = A21 * L11^{-T} — row-parallel (each
+        // row only reads its own prefix and the finalized panel rows)
+        let base = l.data_mut().as_mut_ptr();
+        match pool.as_deref_mut() {
+            Some(pool) if n - k1 >= PAR_MIN_DIM => {
+                let ptr = SyncPtr(base);
+                let blocks = (n - k1).div_ceil(PAR_CHOLBLOCK);
+                pool.for_each(blocks, |blk| {
+                    let r0 = k1 + blk * PAR_CHOLBLOCK;
+                    let r1 = (r0 + PAR_CHOLBLOCK).min(n);
+                    // SAFETY: row blocks partition k1..n disjointly;
+                    // reads touch only finalized panel rows < k1 and
+                    // the writing row itself.
+                    unsafe { chol_panel_solve_rows(tier, ptr.0, cols, k0, k1, r0, r1) };
+                });
+            }
+            _ => {
+                // SAFETY: exclusive access through `&mut Mat`.
+                unsafe { chol_panel_solve_rows(tier, base, cols, k0, k1, k1, n) };
             }
         }
-        // (3) trailing update: A22 (lower triangle) -= L21 L21^T
-        syrk_sub_lower(l, k1, k0, k1);
+        // (3) trailing update: A22 (lower triangle) -= L21 L21^T —
+        // stripe-parallel (stripes own disjoint rows; reads are
+        // confined to panel columns k0..k1, never written here)
+        match pool.as_deref_mut() {
+            Some(pool) if n - k1 >= PAR_MIN_DIM => {
+                let ptr = SyncPtr(base);
+                let stripes = (n - k1).div_ceil(TILE);
+                pool.for_each(stripes, |s| {
+                    // heaviest stripes (largest i0) first for balance
+                    let i0 = k1 + (stripes - 1 - s) * TILE;
+                    // SAFETY: stripes partition rows k1..n disjointly.
+                    unsafe { syrk_sub_stripe(tier, ptr.0, cols, n, k1, k0, k1, i0) };
+                });
+            }
+            _ => {
+                let mut i0 = k1;
+                while i0 < n {
+                    // SAFETY: exclusive access through `&mut Mat`.
+                    unsafe { syrk_sub_stripe(tier, base, cols, n, k1, k0, k1, i0) };
+                    i0 += TILE;
+                }
+            }
+        }
         k0 = k1;
     }
     true
 }
 
-/// Subtract `L[:, k0..k1] L[:, k0..k1]^T` from the lower triangle of the
-/// trailing block `l[start.., start..]` (tiled; 2x2 micro-kernel on full
-/// rectangles, scalar dots on diagonal-crossing tiles).
-fn syrk_sub_lower(l: &mut Mat, start: usize, k0: usize, k1: usize) {
-    let n = l.rows();
-    let mut i0 = start;
-    while i0 < n {
-        let i1 = (i0 + TILE).min(n);
-        let mut j0 = start;
-        while j0 < i1 {
-            let j1 = (j0 + TILE).min(i1);
-            if j1 <= i0 {
-                // full rectangle below the diagonal
-                let mut i = i0;
-                while i + 2 <= i1 {
-                    let mut j = j0;
-                    while j + 2 <= j1 {
-                        let (s00, s01, s10, s11) = dot2x2(
-                            &l.row(i)[k0..k1],
-                            &l.row(i + 1)[k0..k1],
-                            &l.row(j)[k0..k1],
-                            &l.row(j + 1)[k0..k1],
-                        );
-                        l[(i, j)] -= s00;
-                        l[(i, j + 1)] -= s01;
-                        l[(i + 1, j)] -= s10;
-                        l[(i + 1, j + 1)] -= s11;
-                        j += 2;
-                    }
-                    if j < j1 {
-                        let s0 = dot(&l.row(i)[k0..k1], &l.row(j)[k0..k1]);
-                        let s1 = dot(&l.row(i + 1)[k0..k1], &l.row(j)[k0..k1]);
-                        l[(i, j)] -= s0;
-                        l[(i + 1, j)] -= s1;
-                    }
-                    i += 2;
+/// Panel-solve rows `r0..r1` of the blocked Cholesky: for each row,
+/// `L[i, j] = (A[i, j] - L[i, k0..j] . L[j, k0..j]) / L[j, j]` over the
+/// panel columns `j in k0..k1`.
+///
+/// # Safety
+/// `base` must point at the `n x cols` row-major factor; rows `k0..k1`
+/// must be finalized; no concurrent access may touch rows `r0..r1`.
+unsafe fn chol_panel_solve_rows(
+    tier: KernelTier,
+    base: *mut f64,
+    cols: usize,
+    k0: usize,
+    k1: usize,
+    r0: usize,
+    r1: usize,
+) {
+    for i in r0..r1 {
+        for j in k0..k1 {
+            let s = dot_with_tier(
+                tier,
+                raw_row(base, cols, i, k0, j),
+                raw_row(base, cols, j, k0, j),
+            );
+            let ljj = *base.add(j * cols + j);
+            let idx = i * cols + j;
+            *base.add(idx) = (*base.add(idx) - s) / ljj;
+        }
+    }
+}
+
+/// One [`TILE`]-stripe of the Cholesky trailing update: subtract
+/// `L[:, k0..k1] L[:, k0..k1]^T` from the lower triangle rows
+/// `i0..min(i0+TILE, n)` of the trailing block `l[start.., start..]`
+/// (2x2 micro-kernel on full rectangles, plain dots on
+/// diagonal-crossing tiles).
+///
+/// # Safety
+/// `base` must point at the `n x cols` row-major factor; writes stay in
+/// rows `i0..min(i0+TILE, n)` at columns `>= start`; reads stay in
+/// columns `k0..k1 <= start`, which no concurrent stripe writes.
+unsafe fn syrk_sub_stripe(
+    tier: KernelTier,
+    base: *mut f64,
+    cols: usize,
+    n: usize,
+    start: usize,
+    k0: usize,
+    k1: usize,
+    i0: usize,
+) {
+    let i1 = (i0 + TILE).min(n);
+    let mut j0 = start;
+    while j0 < i1 {
+        let j1 = (j0 + TILE).min(i1);
+        if j1 <= i0 {
+            // full rectangle below the diagonal
+            let mut i = i0;
+            while i + 2 <= i1 {
+                let mut j = j0;
+                while j + 2 <= j1 {
+                    let (s00, s01, s10, s11) = dot2x2(
+                        tier,
+                        raw_row(base, cols, i, k0, k1),
+                        raw_row(base, cols, i + 1, k0, k1),
+                        raw_row(base, cols, j, k0, k1),
+                        raw_row(base, cols, j + 1, k0, k1),
+                    );
+                    *base.add(i * cols + j) -= s00;
+                    *base.add(i * cols + j + 1) -= s01;
+                    *base.add((i + 1) * cols + j) -= s10;
+                    *base.add((i + 1) * cols + j + 1) -= s11;
+                    j += 2;
                 }
-                if i < i1 {
-                    for j in j0..j1 {
-                        let s = dot(&l.row(i)[k0..k1], &l.row(j)[k0..k1]);
-                        l[(i, j)] -= s;
-                    }
+                if j < j1 {
+                    let s0 = dot_with_tier(
+                        tier,
+                        raw_row(base, cols, i, k0, k1),
+                        raw_row(base, cols, j, k0, k1),
+                    );
+                    let s1 = dot_with_tier(
+                        tier,
+                        raw_row(base, cols, i + 1, k0, k1),
+                        raw_row(base, cols, j, k0, k1),
+                    );
+                    *base.add(i * cols + j) -= s0;
+                    *base.add((i + 1) * cols + j) -= s1;
                 }
-            } else {
-                // diagonal-crossing tile: scalar over the triangle
-                for i in i0..i1 {
-                    let jmax = j1.min(i + 1);
-                    for j in j0..jmax {
-                        let s = dot(&l.row(i)[k0..k1], &l.row(j)[k0..k1]);
-                        l[(i, j)] -= s;
-                    }
+                i += 2;
+            }
+            if i < i1 {
+                for j in j0..j1 {
+                    let s = dot_with_tier(
+                        tier,
+                        raw_row(base, cols, i, k0, k1),
+                        raw_row(base, cols, j, k0, k1),
+                    );
+                    *base.add(i * cols + j) -= s;
                 }
             }
-            j0 = j1;
+        } else {
+            // diagonal-crossing tile: plain dots over the triangle
+            for i in i0..i1 {
+                let jmax = j1.min(i + 1);
+                for j in j0..jmax {
+                    let s = dot_with_tier(
+                        tier,
+                        raw_row(base, cols, i, k0, k1),
+                        raw_row(base, cols, j, k0, k1),
+                    );
+                    *base.add(i * cols + j) -= s;
+                }
+            }
         }
-        i0 = i1;
+        j0 = j1;
     }
 }
 
 /// Forward substitution `L y = b` (`y` into `out`; `b` and `out` must
-/// not alias).  Each step is one unit-stride prefix dot.
+/// not alias).  Each step is one unit-stride prefix dot (sequential
+/// dependency — never pooled).
 pub fn solve_lower(l: &Mat, b: &[f64], out: &mut [f64]) {
+    solve_lower_with_tier(kernel_tier(), l, b, out);
+}
+
+/// [`solve_lower`] under an explicit tier.
+pub fn solve_lower_with_tier(tier: KernelTier, l: &Mat, b: &[f64], out: &mut [f64]) {
     let n = l.rows();
     assert_eq!(b.len(), n, "solve dimension mismatch");
     assert_eq!(out.len(), n, "solve output dimension mismatch");
     for i in 0..n {
-        let s = dot(&l.row(i)[..i], &out[..i]);
+        let s = dot_with_tier(tier, &l.row(i)[..i], &out[..i]);
         out[i] = (b[i] - s) / l[(i, i)];
     }
 }
@@ -456,7 +925,8 @@ pub fn solve_lower(l: &Mat, b: &[f64], out: &mut [f64]) {
 /// once `x[k]` is final, its contribution is pushed into all earlier
 /// entries through one unit-stride axpy over row `k` of `L` — no strided
 /// column walks (the seed implementation's backward pass read `L`
-/// column-wise).
+/// column-wise).  Built entirely on `axpy`, so the result is
+/// bit-identical across kernel tiers.
 pub fn solve_lower_transpose_in_place(l: &Mat, out: &mut [f64]) {
     let n = l.rows();
     assert_eq!(out.len(), n, "solve output dimension mismatch");
@@ -471,6 +941,8 @@ pub fn solve_lower_transpose_in_place(l: &Mat, out: &mut [f64]) {
 /// of `b` (`n x m`): one blocked forward + one blocked backward sweep,
 /// all updates as unit-stride row axpys of width `m` — every element of
 /// `L` is loaded once per sweep instead of once per right-hand side.
+/// Built entirely on `axpy`, so the result is bit-identical across
+/// kernel tiers.
 pub fn solve_many_in_place(l: &Mat, b: &mut Mat) {
     let n = l.rows();
     assert_eq!(b.rows(), n, "solve_many dimension mismatch");
@@ -508,6 +980,8 @@ pub fn solve_many_in_place(l: &Mat, b: &mut Mat) {
 /// triangular structure of the intermediate `Y = L^{-1}` (row `j` of `Y`
 /// is zero beyond column `j`), cutting its cost to n^3/6; the result is
 /// mirrored at the end so the returned inverse is exactly symmetric.
+/// Built entirely on `axpy`, so the result is bit-identical across
+/// kernel tiers.
 pub fn cholesky_inverse_into(l: &Mat, out: &mut Mat) {
     let n = l.rows();
     assert_eq!(out.rows(), n, "inverse output dimension mismatch");
@@ -548,6 +1022,166 @@ pub fn cholesky_inverse_into(l: &Mat, out: &mut Mat) {
         for j in 0..i {
             out[(j, i)] = out[(i, j)];
         }
+    }
+}
+
+/// AVX2+FMA micro-kernels (see the module docs for the lane layout; the
+/// `matvec4` accumulation must mirror `util::avx2::dot` exactly for the
+/// per-tier `matvec == dot` bit-identity contract).
+#[cfg(target_arch = "x86_64")]
+mod avx2 {
+    use core::arch::x86_64::*;
+
+    /// Horizontal sum in the shared `(l0 + l1) + (l2 + l3)` order.
+    ///
+    /// # Safety
+    /// Requires AVX2.
+    #[target_feature(enable = "avx2")]
+    unsafe fn hsum(v: __m256d) -> f64 {
+        let mut l = [0.0f64; 4];
+        _mm256_storeu_pd(l.as_mut_ptr(), v);
+        (l[0] + l[1]) + (l[2] + l[3])
+    }
+
+    /// 2x2 micro-kernel: four `__m256d` FMA accumulators (one per
+    /// output), 4-element steps, scalar tail.
+    ///
+    /// # Safety
+    /// Requires AVX2+FMA; all four slices must share one length.
+    #[target_feature(enable = "avx2,fma")]
+    pub unsafe fn dot2x2(
+        a0: &[f64],
+        a1: &[f64],
+        b0: &[f64],
+        b1: &[f64],
+    ) -> (f64, f64, f64, f64) {
+        let n = a0.len();
+        let (p0, p1) = (a0.as_ptr(), a1.as_ptr());
+        let (q0, q1) = (b0.as_ptr(), b1.as_ptr());
+        let mut c00 = _mm256_setzero_pd();
+        let mut c01 = _mm256_setzero_pd();
+        let mut c10 = _mm256_setzero_pd();
+        let mut c11 = _mm256_setzero_pd();
+        let mut i = 0usize;
+        while i + 4 <= n {
+            let x0 = _mm256_loadu_pd(p0.add(i));
+            let x1 = _mm256_loadu_pd(p1.add(i));
+            let y0 = _mm256_loadu_pd(q0.add(i));
+            let y1 = _mm256_loadu_pd(q1.add(i));
+            c00 = _mm256_fmadd_pd(x0, y0, c00);
+            c01 = _mm256_fmadd_pd(x0, y1, c01);
+            c10 = _mm256_fmadd_pd(x1, y0, c10);
+            c11 = _mm256_fmadd_pd(x1, y1, c11);
+            i += 4;
+        }
+        let mut s00 = hsum(c00);
+        let mut s01 = hsum(c01);
+        let mut s10 = hsum(c10);
+        let mut s11 = hsum(c11);
+        while i < n {
+            let (x0, x1) = (*p0.add(i), *p1.add(i));
+            let (y0, y1) = (*q0.add(i), *q1.add(i));
+            s00 += x0 * y0;
+            s01 += x0 * y1;
+            s10 += x1 * y0;
+            s11 += x1 * y1;
+            i += 1;
+        }
+        (s00, s01, s10, s11)
+    }
+
+    /// Two-row GEMM update `out += a0*b0 + a1*b1` (FMA on the second
+    /// product).
+    ///
+    /// # Safety
+    /// Requires AVX2+FMA; `b0`/`b1` must be at least `out.len()` long.
+    #[target_feature(enable = "avx2,fma")]
+    pub unsafe fn axpy2(out: &mut [f64], a0: f64, b0: &[f64], a1: f64, b1: &[f64]) {
+        let n = out.len();
+        let po = out.as_mut_ptr();
+        let (p0, p1) = (b0.as_ptr(), b1.as_ptr());
+        let va0 = _mm256_set1_pd(a0);
+        let va1 = _mm256_set1_pd(a1);
+        let mut i = 0usize;
+        while i + 4 <= n {
+            let t = _mm256_fmadd_pd(
+                va1,
+                _mm256_loadu_pd(p1.add(i)),
+                _mm256_mul_pd(va0, _mm256_loadu_pd(p0.add(i))),
+            );
+            _mm256_storeu_pd(po.add(i), _mm256_add_pd(_mm256_loadu_pd(po.add(i)), t));
+            i += 4;
+        }
+        while i < n {
+            *po.add(i) += a0 * *p0.add(i) + a1 * *p1.add(i);
+            i += 1;
+        }
+    }
+
+    /// Four-row matvec: two FMA chains per row over 8-element steps —
+    /// per row this is exactly `util::avx2::dot`'s accumulation, so the
+    /// results match the row-by-row dot bit-for-bit.
+    ///
+    /// # Safety
+    /// Requires AVX2+FMA; every row must be at least `v.len()` long.
+    #[target_feature(enable = "avx2,fma")]
+    pub unsafe fn matvec4(r0: &[f64], r1: &[f64], r2: &[f64], r3: &[f64], v: &[f64]) -> [f64; 4] {
+        let n = v.len();
+        let p = [r0.as_ptr(), r1.as_ptr(), r2.as_ptr(), r3.as_ptr()];
+        let pv = v.as_ptr();
+        let mut a0 = [_mm256_setzero_pd(); 4];
+        let mut a1 = [_mm256_setzero_pd(); 4];
+        let mut i = 0usize;
+        while i + 8 <= n {
+            let v0 = _mm256_loadu_pd(pv.add(i));
+            let v1 = _mm256_loadu_pd(pv.add(i + 4));
+            for r in 0..4 {
+                a0[r] = _mm256_fmadd_pd(_mm256_loadu_pd(p[r].add(i)), v0, a0[r]);
+                a1[r] = _mm256_fmadd_pd(_mm256_loadu_pd(p[r].add(i + 4)), v1, a1[r]);
+            }
+            i += 8;
+        }
+        let mut out = [0.0f64; 4];
+        for r in 0..4 {
+            let mut l = [0.0f64; 4];
+            _mm256_storeu_pd(l.as_mut_ptr(), _mm256_add_pd(a0[r], a1[r]));
+            let mut tail = 0.0;
+            let mut c = i;
+            while c < n {
+                tail += *p[r].add(c) * *pv.add(c);
+                c += 1;
+            }
+            out[r] = (l[0] + l[1]) + (l[2] + l[3]) + tail;
+        }
+        out
+    }
+}
+
+/// Scalar delegates so non-x86 builds monomorphize the same call sites
+/// (`use_avx2` is statically false there, so these never run).
+#[cfg(not(target_arch = "x86_64"))]
+mod avx2 {
+    /// # Safety
+    /// Trivially safe (scalar delegate); unreachable behind `use_avx2`.
+    pub unsafe fn dot2x2(
+        a0: &[f64],
+        a1: &[f64],
+        b0: &[f64],
+        b1: &[f64],
+    ) -> (f64, f64, f64, f64) {
+        super::dot2x2_scalar(a0, a1, b0, b1)
+    }
+
+    /// # Safety
+    /// Trivially safe (scalar delegate); unreachable behind `use_avx2`.
+    pub unsafe fn axpy2(out: &mut [f64], a0: f64, b0: &[f64], a1: f64, b1: &[f64]) {
+        super::axpy2_scalar(out, a0, b0, a1, b1)
+    }
+
+    /// # Safety
+    /// Trivially safe (scalar delegate); unreachable behind `use_avx2`.
+    pub unsafe fn matvec4(r0: &[f64], r1: &[f64], r2: &[f64], r3: &[f64], v: &[f64]) -> [f64; 4] {
+        super::matvec4_scalar(r0, r1, r2, r3, v)
     }
 }
 
@@ -659,6 +1293,47 @@ mod tests {
                     "col {j} row {i}"
                 );
             }
+        }
+    }
+
+    #[test]
+    fn pooled_kernels_bit_identical_to_serial() {
+        // above PAR_MIN_DIM so the pooled branch genuinely dispatches
+        // (when kernel_threads() > 1); explicit-tier ctx keeps this
+        // independent of process-global state
+        let tier = kernel_tier();
+        let d = PAR_MIN_DIM + 37;
+        let x = random_mat(48, d, 11);
+        let mut pooled = Mat::zeros(d, d);
+        let mut serial = Mat::zeros(d, d);
+        gram_into_ctx(KernelCtx::with_tier(tier), &x, &mut pooled);
+        gram_into_ctx(KernelCtx::serial(tier), &x, &mut serial);
+        assert_bits_eq(pooled.data(), serial.data(), "gram");
+
+        let a = pooled.add_diag(d as f64);
+        let mut lp = Mat::zeros(d, d);
+        let mut ls = Mat::zeros(d, d);
+        assert!(cholesky_factor_blocked_ctx(KernelCtx::with_tier(tier), &a, &mut lp));
+        assert!(cholesky_factor_blocked_ctx(KernelCtx::serial(tier), &a, &mut ls));
+        for i in 0..d {
+            assert_bits_eq(&lp.row(i)[..=i], &ls.row(i)[..=i], "cholesky row");
+        }
+
+        // wide enough that 2*rows*cols crosses PAR_MIN_MV
+        let (mr, mc) = (2048, 1200);
+        let wide = random_mat(mr, mc, 13);
+        let v: Vec<f64> = random_mat(1, mc, 17).data().to_vec();
+        let mut mp = vec![0.0; mr];
+        let mut ms = vec![0.0; mr];
+        matvec_into_ctx(KernelCtx::with_tier(tier), &wide, &v, &mut mp);
+        matvec_into_ctx(KernelCtx::serial(tier), &wide, &v, &mut ms);
+        assert_bits_eq(&mp, &ms, "matvec");
+    }
+
+    fn assert_bits_eq(a: &[f64], b: &[f64], what: &str) {
+        assert_eq!(a.len(), b.len(), "{what} length");
+        for (i, (x, y)) in a.iter().zip(b).enumerate() {
+            assert!(x.to_bits() == y.to_bits(), "{what} [{i}]: {x:?} vs {y:?}");
         }
     }
 }

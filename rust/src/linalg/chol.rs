@@ -15,8 +15,17 @@
 //! [`Cholesky::inverse`]).  The seed scalar loops are retained as
 //! [`Cholesky::factor_into_scalar`] / [`Cholesky::solve_into_scalar`]
 //! for differential tests and the `bench_hotpath` shootouts.
+//!
+//! Kernel tiers: the factorization inherits the process-wide
+//! [`crate::util::tier::KernelTier`] (its trailing updates also pool
+//! across threads at large `n`; pooled == serial bitwise per tier).
+//! The solve's forward sweep is tier-dependent (prefix dots), while the
+//! backward sweep is axpy-built and bit-identical across tiers.
+//! [`Cholesky::factor_into_ctx`] / [`Cholesky::solve_into_with_tier`]
+//! take the tier explicitly for differential tests and bench shootouts.
 
 use super::{block, Mat};
+use crate::util::tier::KernelTier;
 
 /// Lower-triangular Cholesky factor `L` with `L L^T = A`.
 #[derive(Clone, Debug)]
@@ -56,6 +65,17 @@ impl Cholesky {
             self.l = Mat::zeros(n, n);
         }
         block::cholesky_factor_blocked(a, &mut self.l)
+    }
+
+    /// [`Cholesky::factor_into`] under an explicit [`block::KernelCtx`]
+    /// (tier + pooling), for differential tests and bench shootouts.
+    pub fn factor_into_ctx(&mut self, ctx: block::KernelCtx, a: &Mat) -> bool {
+        assert_eq!(a.rows(), a.cols(), "cholesky needs square");
+        let n = a.rows();
+        if self.l.rows() != n || self.l.cols() != n {
+            self.l = Mat::zeros(n, n);
+        }
+        block::cholesky_factor_blocked_ctx(ctx, a, &mut self.l)
     }
 
     /// Seed-faithful scalar factorization (left-looking triple loop) —
@@ -107,6 +127,14 @@ impl Cholesky {
     /// substitution — no strided column walks).
     pub fn solve_into(&self, b: &[f64], out: &mut [f64]) {
         block::solve_lower(&self.l, b, out);
+        block::solve_lower_transpose_in_place(&self.l, out);
+    }
+
+    /// [`Cholesky::solve_into`] under an explicit kernel tier (the
+    /// backward sweep is tier-invariant; only the forward prefix dots
+    /// change), for differential tests and bench shootouts.
+    pub fn solve_into_with_tier(&self, tier: KernelTier, b: &[f64], out: &mut [f64]) {
+        block::solve_lower_with_tier(tier, &self.l, b, out);
         block::solve_lower_transpose_in_place(&self.l, out);
     }
 

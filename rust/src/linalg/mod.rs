@@ -11,15 +11,26 @@
 //! in [`block`]; the seed scalar triple-loops remain available as
 //! `*_scalar` reference implementations for differential tests and the
 //! `bench_hotpath` blocked-vs-scalar shootouts.
+//!
+//! The blocked layer is additionally **tiered** ([`KernelTier`]: scalar
+//! reference vs runtime-detected AVX2+FMA, override via
+//! `CQ_KERNEL_TIER` / `--kernel-tier`) and its large trailing updates
+//! pool across `parallel::WorkerPool` threads (`CQ_LINALG_THREADS`).
+//! Results are deterministic and bit-stable per tier (pooled == serial
+//! bitwise); cross-tier agreement is rounding-level for FMA reductions
+//! and exact for the axpy-built solves — see [`block`]'s module docs.
 
 pub mod block;
 mod chol;
 mod lu;
 mod spectral;
 
+pub use block::KernelCtx;
 pub use chol::Cholesky;
 pub use lu::Lu;
 pub use spectral::{power_iteration_sigma_max, symmetric_eigen, min_nonzero_singular};
+
+pub use crate::util::tier::{kernel_tier, set_kernel_tier, KernelTier};
 
 /// Dense row-major matrix of `f64`.
 #[derive(Clone, Debug, PartialEq)]

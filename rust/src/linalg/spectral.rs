@@ -5,6 +5,11 @@
 //! `sigma~_min(M_-)` of the signed incidence matrix.  We compute the
 //! largest singular value by power iteration on `A^T A` and full symmetric
 //! spectra with cyclic Jacobi (matrices here are at most N+|E| ~ 100 wide).
+//!
+//! The power iteration runs on [`Mat::matvec`] / [`Mat::t_matvec`] and so
+//! inherits the process-wide kernel tier ([`crate::util::tier`]); at
+//! these tiny dimensions the tiers agree to rounding and the iteration
+//! count dominates, so no tier-pinning is done here.
 
 use super::Mat;
 

@@ -43,6 +43,7 @@ fn cli() -> Cli {
                     Some("0"),
                     "concurrent runs (0 = all cores unless --threads > 1, 1 = serial driver)",
                 )
+                .opt("kernel-tier", None, "kernel tier: scalar|avx2|auto (default: env/detect)")
                 .switch("quiet", "suppress the summary tables"),
         )
         .command(
@@ -73,7 +74,8 @@ fn cli() -> Cli {
                 .opt("resume", None, "resume from this run directory's checkpoint")
                 .opt("checkpoint-every", None, "checkpoint cadence in iterations (0 = final only)")
                 .opt("events", None, "stream JSONL events to this path (default: run dir)")
-                .opt("out", None, "write the trace CSV here"),
+                .opt("out", None, "write the trace CSV here")
+                .opt("kernel-tier", None, "kernel tier: scalar|avx2|auto (default: env/detect)"),
         )
         .command(
             Command::new("coordinator", "run the sharded-executor coordinator demo")
@@ -93,7 +95,8 @@ fn cli() -> Cli {
                 .opt("run-dir", None, "create a runs/<NNNN-slug>/ directory under this base")
                 .opt("resume", None, "resume from this run directory's checkpoint")
                 .opt("checkpoint-every", None, "checkpoint cadence in iterations (0 = final only)")
-                .opt("events", None, "stream JSONL events to this path (default: run dir)"),
+                .opt("events", None, "stream JSONL events to this path (default: run dir)")
+                .opt("kernel-tier", None, "kernel tier: scalar|avx2|auto (default: env/detect)"),
         )
         .command(
             Command::new("datasets", "print Table 1 (dataset inventory)")
@@ -118,20 +121,23 @@ fn cli() -> Cli {
                 .opt("threads", Some("1"), "intra-run solver threads")
                 .opt("record-every", Some("1"), "trace sampling stride")
                 .opt("sweep-threads", Some("0"), "concurrent runs (0 = all cores)")
+                .opt("kernel-tier", None, "kernel tier: scalar|avx2|auto (default: env/detect)")
                 .switch("quiet", "suppress the summary tables"),
         )
         .command(
             Command::new("rates", "empirical vs Theorem-3 convergence rates across densities")
                 .opt("manifest", None, "layered TOML manifest (flags override)")
                 .opt("workers", Some("16"), "number of workers")
-                .opt("iters", Some("150"), "iterations per study"),
+                .opt("iters", Some("150"), "iterations per study")
+                .opt("kernel-tier", None, "kernel tier: scalar|avx2|auto (default: env/detect)"),
         )
         .command(
             Command::new("sweep", "sensitivity/ablation sweeps (rho|tau0|bits|components)")
                 .opt("study", Some("components"), "rho|tau0|bits|components")
                 .opt("manifest", None, "layered TOML manifest (flags override)")
                 .opt("iters", Some("250"), "iterations per point")
-                .opt("seed", Some("41"), "random seed"),
+                .opt("seed", Some("41"), "random seed")
+                .opt("kernel-tier", None, "kernel tier: scalar|avx2|auto (default: env/detect)"),
         )
         .command(
             Command::new("topo", "inspect a generated topology's spectral constants")
@@ -690,6 +696,17 @@ fn main() -> ExitCode {
             return ExitCode::FAILURE;
         }
     };
+    // Pin the linalg kernel tier before any dense work runs: the flag
+    // beats the CQ_KERNEL_TIER env var, which beats runtime detection.
+    if let Some(v) = args.get("kernel-tier") {
+        match cq_ggadmm::util::tier::apply_tier_override(v) {
+            Ok(t) => eprintln!("kernel tier: {t}"),
+            Err(e) => {
+                eprintln!("error: --kernel-tier: {e}");
+                return ExitCode::FAILURE;
+            }
+        }
+    }
     let result = match args.command.as_str() {
         "exp" => cmd_exp(&args),
         "run" => cmd_run(&args),

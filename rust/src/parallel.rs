@@ -266,6 +266,76 @@ where
     map_with_pool(&mut pool, n, f)
 }
 
+/// 0 = unresolved; otherwise the resolved kernel-pool width + 1 (so a
+/// resolved width of 0 is representable — it is not, widths are >= 1).
+static KERNEL_THREADS: AtomicUsize = AtomicUsize::new(0);
+
+/// The shared dense-kernel pool (`linalg::block` trailing updates).
+/// Guarded by a mutex so one generation dispatches at a time;
+/// [`with_kernel_pool`] falls back to serial on contention instead of
+/// queueing, so nested dense ops (e.g. per-worker solves already running
+/// inside a [`WorkerPool`] job) never deadlock or oversubscribe.
+static KERNEL_POOL: Mutex<Option<(usize, WorkerPool)>> = Mutex::new(None);
+
+/// Thread budget for the shared dense-kernel pool: `CQ_LINALG_THREADS`
+/// when set (`0` = all cores, `1` disables pooling), otherwise
+/// [`default_threads`].  Resolved once and cached.
+pub fn kernel_threads() -> usize {
+    match KERNEL_THREADS.load(Ordering::Relaxed) {
+        0 => {
+            let resolved = match std::env::var("CQ_LINALG_THREADS") {
+                Ok(v) => match v.trim().parse::<usize>() {
+                    Ok(n) => resolve_threads(n),
+                    Err(_) => {
+                        eprintln!(
+                            "warning: unparseable CQ_LINALG_THREADS={v:?}; using default"
+                        );
+                        default_threads()
+                    }
+                },
+                Err(_) => default_threads(),
+            };
+            // benign race: concurrent first calls resolve identically
+            KERNEL_THREADS.store(resolved + 1, Ordering::Relaxed);
+            resolved
+        }
+        n => n - 1,
+    }
+}
+
+/// Override the dense-kernel pool width (`0` = all cores, `1` disables
+/// pooling).  Drops any cached pool so the next dispatch rebuilds at the
+/// new width; bench shootouts use this to time serial vs pooled kernels
+/// in one process.
+pub fn set_kernel_threads(threads: usize) {
+    let resolved = resolve_threads(threads).max(1);
+    KERNEL_THREADS.store(resolved + 1, Ordering::Relaxed);
+    if let Ok(mut guard) = KERNEL_POOL.lock() {
+        *guard = None;
+    }
+}
+
+/// Run `f` with the shared dense-kernel pool when it is available:
+/// `f(Some(pool))` after lazily (re)building the pool at the current
+/// [`kernel_threads`] width, or `f(None)` when pooling is disabled
+/// (width <= 1) or another thread currently holds the pool (nested or
+/// concurrent dense ops degrade to serial rather than blocking).
+pub fn with_kernel_pool<R>(f: impl FnOnce(Option<&mut WorkerPool>) -> R) -> R {
+    let threads = kernel_threads();
+    if threads <= 1 {
+        return f(None);
+    }
+    match KERNEL_POOL.try_lock() {
+        Ok(mut guard) => {
+            if guard.as_ref().map(|(t, _)| *t) != Some(threads) {
+                *guard = Some((threads, WorkerPool::new(threads)));
+            }
+            f(guard.as_mut().map(|(_, pool)| pool))
+        }
+        Err(_) => f(None),
+    }
+}
+
 /// Number of worker threads to use by default (leave one core for the
 /// coordinator/metrics thread).
 pub fn default_threads() -> usize {
@@ -382,6 +452,25 @@ mod tests {
             all,
             std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
         );
+    }
+
+    #[test]
+    fn kernel_pool_dispatch_and_nested_fallback() {
+        // outer call may get the shared pool (or serial if another test
+        // holds it / pooling is disabled); a nested call must degrade to
+        // serial instead of deadlocking on the pool mutex
+        let sum = with_kernel_pool(|outer| {
+            assert!(outer.is_none() || kernel_threads() > 1);
+            with_kernel_pool(|nested| {
+                // the outer closure holds the lock, so if the outer got
+                // the pool, the nested call cannot also get it
+                if outer.is_some() {
+                    assert!(nested.is_none(), "nested dispatch must run serial");
+                }
+                7usize
+            })
+        });
+        assert_eq!(sum, 7);
     }
 
     #[test]

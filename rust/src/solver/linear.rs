@@ -14,7 +14,12 @@
 //! runs on the blocked kernels: `X^T X` through the SYRK Gram kernel,
 //! the factorization through the right-looking blocked Cholesky, and
 //! [`LinearSolver::a_inverse`] through the one-sweep blocked multi-RHS
-//! solve (the seed solved one identity column at a time).
+//! solve (the seed solved one identity column at a time).  All of these
+//! inherit the process-wide kernel tier
+//! ([`crate::linalg::KernelTier`]): on x86-64 with AVX2+FMA the Gram
+//! and factorization run vectorized (and pool across threads at large
+//! `d`), while the per-iteration solve is tier-stable — its backward
+//! sweep is axpy-built and bit-identical across tiers.
 
 use super::SubproblemSolver;
 use crate::data::Shard;

@@ -16,8 +16,12 @@
 //! * every Newton-loop vector, the Hessian and its Cholesky factor live
 //!   in persistent scratch ([`Cholesky::factor_into`] reuses the factor
 //!   storage), so `update_into` allocates nothing after warmup;
-//! * one pass over the shard fills margins `z_i = y_i x_i^T theta`,
-//!   probabilities, Hessian weights and the data gradient; the O(s d^2)
+//! * margins `z_i = y_i x_i^T theta` and directional margins come from
+//!   one blocked [`crate::linalg::block::matvec_into`] pass each (the
+//!   blocked matvec runs on the active kernel tier — SIMD when
+//!   available — and is bit-identical to the per-row dot within a
+//!   tier); probabilities, Hessian weights and the data gradient follow
+//!   in one O(s) / O(s d) sweep; the O(s d^2)
 //!   Hessian assembly — the per-step hot spot — runs on the blocked
 //!   weighted-Gram kernel (`H_data = X^T diag(w) X` via
 //!   [`crate::linalg::block::weighted_gram_into`]: packed panels, 2x2
@@ -68,6 +72,10 @@ pub struct LogisticSolver {
     dir_margins: Vec<f64>,
     /// persistent scratch (len s): Hessian weights `w_i = p_i (1 - p_i)`
     weights: Vec<f64>,
+    /// persistent scratch (len s): raw products `x_i^T v` from the
+    /// blocked matvec (margins/dir_margins are `y_i *` this; the blocked
+    /// matvec is bit-identical to the per-row dot on every kernel tier)
+    xv: Vec<f64>,
     /// persistent scratch: subproblem Hessian
     hess: Mat,
     /// persistent panel-packing scratch of the blocked weighted-Gram
@@ -100,6 +108,7 @@ impl LogisticSolver {
             probs: vec![0.0; s],
             dir_margins: vec![0.0; s],
             weights: vec![0.0; s],
+            xv: vec![0.0; s],
             hess: Mat::zeros(d, d),
             pack: Vec::new(),
             chol: Cholesky::workspace(d),
@@ -186,10 +195,13 @@ impl SubproblemSolver for LogisticSolver {
         for i in 0..d {
             self.lin[i] = alpha[i] - self.rho * nbr_sum[i];
         }
-        // fresh margins for the incoming warm start; the Newton loop then
-        // maintains them in O(s) per accepted step
+        // fresh margins for the incoming warm start, via one blocked
+        // matvec (bit-identical to the per-row dot formulation on every
+        // kernel tier); the Newton loop then maintains them in O(s) per
+        // accepted step
+        crate::linalg::block::matvec_into(&self.data.x, theta, &mut self.xv);
         for i in 0..s {
-            self.margins[i] = self.data.y[i] * crate::util::dot(self.data.x.row(i), theta);
+            self.margins[i] = self.data.y[i] * self.xv[i];
         }
         for _ in 0..self.max_newton {
             // gradient first: with ADMM warm starts most calls converge in
@@ -239,11 +251,11 @@ impl SubproblemSolver for LogisticSolver {
                 "subproblem Hessian is SPD"
             );
             self.chol.solve_into(&self.grad, &mut self.step);
-            // directional margins: u_i = y_i x_i^T step (one pass), after
-            // which every Armijo trial is O(s)
+            // directional margins: u_i = y_i x_i^T step, via one blocked
+            // matvec; every Armijo trial afterwards is O(s)
+            crate::linalg::block::matvec_into(&self.data.x, &self.step, &mut self.xv);
             for i in 0..s {
-                self.dir_margins[i] =
-                    self.data.y[i] * crate::util::dot(self.data.x.row(i), &self.step);
+                self.dir_margins[i] = self.data.y[i] * self.xv[i];
             }
             // Armijo backtracking on the subproblem objective, evaluated
             // analytically: with theta_t = theta - t*step,

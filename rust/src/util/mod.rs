@@ -1,16 +1,30 @@
 //! Small shared utilities: deterministic RNG, float helpers and the
-//! unrolled scalar kernels (`dot` / `norm2` / `axpy`) under every solver
-//! hot loop.
+//! tiered kernels (`dot` / `norm2` / `axpy`) under every solver hot
+//! loop.
 //!
-//! The reductions use four independent accumulators: that breaks the
-//! additive dependency chain so the loop pipelines/vectorizes, at the
-//! cost of reassociating the sum — `dot`/`norm2` therefore differ from a
-//! naive left fold at the last-ulp level (bounded by tolerance property
-//! tests below).  `axpy` performs exactly the per-element operation of
-//! the naive loop, so it stays bit-identical (locked by an exact
-//! property test).
+//! Each kernel exists in two tiers (see [`tier`]): the 4-wide unrolled
+//! **scalar** reference (`*_scalar`, kept verbatim as the bit-exact
+//! baseline and the fallback on non-AVX2 machines) and an explicit
+//! **AVX2+FMA** path dispatched at runtime through [`kernel_tier`].
+//! `*_with_tier` variants take the tier explicitly so differential tests
+//! can compare both without touching process-global state.
+//!
+//! Determinism: every tier is deterministic and bit-stable run-to-run.
+//! The scalar reductions use four independent accumulators (breaking the
+//! additive dependency chain so the loop pipelines), and the AVX2
+//! reductions use two 4-lane FMA chains — both reassociate relative to a
+//! naive left fold, and FMA removes one rounding per multiply-add, so
+//! `dot`/`norm2` agree across tiers only to rounding (bounded by
+//! tolerance property tests below).  `axpy` is the deliberate exception:
+//! its AVX2 path uses multiply-then-add (no FMA), so the per-element
+//! operation matches the naive loop exactly and `axpy` stays
+//! **bit-identical across tiers** (locked by an exact property test) —
+//! `linalg`'s transpose-matvec and triangular back-solves lean on that.
 
 pub mod rng;
+pub mod tier;
+
+pub use tier::{avx2_available, kernel_tier, set_kernel_tier, KernelTier};
 
 /// Relative closeness check used across tests and differential checks.
 pub fn close(a: f64, b: f64, rtol: f64, atol: f64) -> bool {
@@ -26,8 +40,21 @@ pub fn max_abs_diff(a: &[f64], b: &[f64]) -> f64 {
         .fold(0.0, f64::max)
 }
 
-/// Euclidean norm of a slice (4-wide unrolled reduction).
+/// Euclidean norm of a slice (tier-dispatched).
 pub fn norm2(v: &[f64]) -> f64 {
+    norm2_with_tier(kernel_tier(), v)
+}
+
+/// [`norm2`] under an explicit tier.
+pub fn norm2_with_tier(t: KernelTier, v: &[f64]) -> f64 {
+    match t {
+        KernelTier::Scalar => norm2_scalar(v),
+        KernelTier::Avx2 => norm2_vectorized(v),
+    }
+}
+
+/// Scalar reference norm (4-wide unrolled reduction).
+pub fn norm2_scalar(v: &[f64]) -> f64 {
     let chunks = v.chunks_exact(4);
     let rem = chunks.remainder();
     let mut acc = [0.0f64; 4];
@@ -44,9 +71,23 @@ pub fn norm2(v: &[f64]) -> f64 {
     ((acc[0] + acc[1]) + (acc[2] + acc[3]) + tail).sqrt()
 }
 
-/// Dot product of two slices (4-wide unrolled reduction; panics on
-/// length mismatch).
+/// Dot product of two slices (tier-dispatched; panics on length
+/// mismatch).
 pub fn dot(a: &[f64], b: &[f64]) -> f64 {
+    dot_with_tier(kernel_tier(), a, b)
+}
+
+/// [`dot`] under an explicit tier.
+pub fn dot_with_tier(t: KernelTier, a: &[f64], b: &[f64]) -> f64 {
+    assert_eq!(a.len(), b.len(), "length mismatch");
+    match t {
+        KernelTier::Scalar => dot_scalar(a, b),
+        KernelTier::Avx2 => dot_vectorized(a, b),
+    }
+}
+
+/// Scalar reference dot (4-wide unrolled reduction).
+pub fn dot_scalar(a: &[f64], b: &[f64]) -> f64 {
     assert_eq!(a.len(), b.len(), "length mismatch");
     let ca = a.chunks_exact(4);
     let cb = b.chunks_exact(4);
@@ -65,9 +106,24 @@ pub fn dot(a: &[f64], b: &[f64]) -> f64 {
     (acc[0] + acc[1]) + (acc[2] + acc[3]) + tail
 }
 
-/// `a += scale * b` in place (4-wide unrolled; bit-identical to the
-/// naive loop — the per-element operation is unchanged).
+/// `a += scale * b` in place (tier-dispatched; bit-identical to the
+/// naive loop on **every** tier — the per-element operation is
+/// `a[i] + (scale * b[i])` with both roundings on each tier).
 pub fn axpy(a: &mut [f64], scale: f64, b: &[f64]) {
+    axpy_with_tier(kernel_tier(), a, scale, b)
+}
+
+/// [`axpy`] under an explicit tier (all tiers produce identical bits).
+pub fn axpy_with_tier(t: KernelTier, a: &mut [f64], scale: f64, b: &[f64]) {
+    assert_eq!(a.len(), b.len(), "length mismatch");
+    match t {
+        KernelTier::Scalar => axpy_scalar(a, scale, b),
+        KernelTier::Avx2 => axpy_vectorized(a, scale, b),
+    }
+}
+
+/// Scalar reference axpy (4-wide unrolled).
+pub fn axpy_scalar(a: &mut [f64], scale: f64, b: &[f64]) {
     assert_eq!(a.len(), b.len(), "length mismatch");
     let mut ca = a.chunks_exact_mut(4);
     let mut cb = b.chunks_exact(4);
@@ -79,6 +135,161 @@ pub fn axpy(a: &mut [f64], scale: f64, b: &[f64]) {
     }
     for (x, y) in ca.into_remainder().iter_mut().zip(cb.remainder()) {
         *x += scale * y;
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+#[inline]
+fn dot_vectorized(a: &[f64], b: &[f64]) -> f64 {
+    if tier::avx2_available() {
+        // SAFETY: runtime detection confirmed AVX2+FMA on this CPU.
+        unsafe { avx2::dot(a, b) }
+    } else {
+        dot_scalar(a, b)
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+#[inline]
+fn norm2_vectorized(v: &[f64]) -> f64 {
+    if tier::avx2_available() {
+        // SAFETY: runtime detection confirmed AVX2+FMA on this CPU.
+        unsafe { avx2::norm2(v) }
+    } else {
+        norm2_scalar(v)
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+#[inline]
+fn axpy_vectorized(a: &mut [f64], scale: f64, b: &[f64]) {
+    if tier::avx2_available() {
+        // SAFETY: runtime detection confirmed AVX2+FMA on this CPU.
+        unsafe { avx2::axpy(a, scale, b) }
+    } else {
+        axpy_scalar(a, scale, b)
+    }
+}
+
+#[cfg(not(target_arch = "x86_64"))]
+#[inline]
+fn dot_vectorized(a: &[f64], b: &[f64]) -> f64 {
+    dot_scalar(a, b)
+}
+
+#[cfg(not(target_arch = "x86_64"))]
+#[inline]
+fn norm2_vectorized(v: &[f64]) -> f64 {
+    norm2_scalar(v)
+}
+
+#[cfg(not(target_arch = "x86_64"))]
+#[inline]
+fn axpy_vectorized(a: &mut [f64], scale: f64, b: &[f64]) {
+    axpy_scalar(a, scale, b)
+}
+
+/// AVX2+FMA vector kernels.  Lane layout (shared with
+/// `linalg::block`'s vectorized micro-kernels, which must mirror it for
+/// the per-tier `matvec == dot` bit-identity contract):
+///
+/// * reductions run two independent 4-lane FMA chains over 8-element
+///   steps (`acc0` holds elements `8k + 0..4`, `acc1` elements
+///   `8k + 4..8`),
+/// * the chains combine as one 4-lane vector add, then the horizontal
+///   sum `(l0 + l1) + (l2 + l3)`,
+/// * the scalar tail (`< 8` trailing elements) folds left with separate
+///   multiply and add (no FMA).
+#[cfg(target_arch = "x86_64")]
+pub(crate) mod avx2 {
+    use core::arch::x86_64::*;
+
+    /// 8-wide FMA dot product.
+    ///
+    /// # Safety
+    /// Requires AVX2+FMA (callers gate on `tier::avx2_available`);
+    /// `a.len() == b.len()` must hold.
+    #[target_feature(enable = "avx2,fma")]
+    pub unsafe fn dot(a: &[f64], b: &[f64]) -> f64 {
+        let n = a.len();
+        let pa = a.as_ptr();
+        let pb = b.as_ptr();
+        let mut acc0 = _mm256_setzero_pd();
+        let mut acc1 = _mm256_setzero_pd();
+        let mut i = 0usize;
+        while i + 8 <= n {
+            let x0 = _mm256_loadu_pd(pa.add(i));
+            let y0 = _mm256_loadu_pd(pb.add(i));
+            let x1 = _mm256_loadu_pd(pa.add(i + 4));
+            let y1 = _mm256_loadu_pd(pb.add(i + 4));
+            acc0 = _mm256_fmadd_pd(x0, y0, acc0);
+            acc1 = _mm256_fmadd_pd(x1, y1, acc1);
+            i += 8;
+        }
+        let mut l = [0.0f64; 4];
+        _mm256_storeu_pd(l.as_mut_ptr(), _mm256_add_pd(acc0, acc1));
+        let mut tail = 0.0;
+        while i < n {
+            tail += *pa.add(i) * *pb.add(i);
+            i += 1;
+        }
+        (l[0] + l[1]) + (l[2] + l[3]) + tail
+    }
+
+    /// 8-wide FMA sum of squares, rooted.
+    ///
+    /// # Safety
+    /// Requires AVX2+FMA (callers gate on `tier::avx2_available`).
+    #[target_feature(enable = "avx2,fma")]
+    pub unsafe fn norm2(v: &[f64]) -> f64 {
+        let n = v.len();
+        let p = v.as_ptr();
+        let mut acc0 = _mm256_setzero_pd();
+        let mut acc1 = _mm256_setzero_pd();
+        let mut i = 0usize;
+        while i + 8 <= n {
+            let x0 = _mm256_loadu_pd(p.add(i));
+            let x1 = _mm256_loadu_pd(p.add(i + 4));
+            acc0 = _mm256_fmadd_pd(x0, x0, acc0);
+            acc1 = _mm256_fmadd_pd(x1, x1, acc1);
+            i += 8;
+        }
+        let mut l = [0.0f64; 4];
+        _mm256_storeu_pd(l.as_mut_ptr(), _mm256_add_pd(acc0, acc1));
+        let mut tail = 0.0;
+        while i < n {
+            let x = *p.add(i);
+            tail += x * x;
+            i += 1;
+        }
+        ((l[0] + l[1]) + (l[2] + l[3]) + tail).sqrt()
+    }
+
+    /// 4-wide axpy.  Deliberately multiply-then-add (NOT FMA): each
+    /// element computes `a[i] + (scale * b[i])` with both roundings, so
+    /// the result is bit-identical to the scalar tier and the naive
+    /// loop.
+    ///
+    /// # Safety
+    /// Requires AVX2 (callers gate on `tier::avx2_available`);
+    /// `a.len() == b.len()` must hold.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn axpy(a: &mut [f64], scale: f64, b: &[f64]) {
+        let n = a.len();
+        let pa = a.as_mut_ptr();
+        let pb = b.as_ptr();
+        let s = _mm256_set1_pd(scale);
+        let mut i = 0usize;
+        while i + 4 <= n {
+            let acc = _mm256_loadu_pd(pa.add(i));
+            let prod = _mm256_mul_pd(s, _mm256_loadu_pd(pb.add(i)));
+            _mm256_storeu_pd(pa.add(i), _mm256_add_pd(acc, prod));
+            i += 4;
+        }
+        while i < n {
+            *pa.add(i) += scale * *pb.add(i);
+            i += 1;
+        }
     }
 }
 
@@ -125,9 +336,9 @@ mod tests {
 
     #[test]
     fn dot_matches_naive_within_reassociation() {
-        // the unrolled reduction reassociates: bound the drift by the
-        // condition of the sum, every length (remainder paths included)
-        check("unrolled dot ~ naive dot", 200, |g| {
+        // both tiers reassociate (and AVX2 adds FMA): bound the drift by
+        // the condition of the sum, every length (tail paths included)
+        check("tiered dot ~ naive dot", 200, |g| {
             let n = g.usize_in(0, 67);
             let a = g.normal_vec(n);
             let b = g.normal_vec(n);
@@ -143,7 +354,7 @@ mod tests {
 
     #[test]
     fn norm2_matches_naive_within_reassociation() {
-        check("unrolled norm2 ~ naive norm2", 200, |g| {
+        check("tiered norm2 ~ naive norm2", 200, |g| {
             let n = g.usize_in(0, 67);
             let v = g.normal_vec(n);
             let fast = norm2(&v);
@@ -157,15 +368,15 @@ mod tests {
 
     #[test]
     fn axpy_bit_identical_to_naive() {
-        // the unroll does not change the per-element arithmetic: exact
-        check("unrolled axpy == naive axpy (bitwise)", 200, |g| {
+        // no tier changes the per-element arithmetic: exact on both
+        check("tiered axpy == naive axpy (bitwise)", 200, |g| {
             let n = g.usize_in(0, 67);
             let base = g.normal_vec(n);
             let b = g.normal_vec(n);
             let s = g.f64_in(-3.0, 3.0);
             let mut fast = base.clone();
             axpy(&mut fast, s, &b);
-            let mut slow = base;
+            let mut slow = base.clone();
             naive_axpy(&mut slow, s, &b);
             for (j, (x, y)) in fast.iter().zip(&slow).enumerate() {
                 assert!(
@@ -173,7 +384,53 @@ mod tests {
                     "n={n} j={j}: {x:?} vs {y:?}"
                 );
             }
+            if let Some(vec_tier) = KernelTier::vectorized() {
+                let mut v = base;
+                axpy_with_tier(vec_tier, &mut v, s, &b);
+                for (j, (x, y)) in v.iter().zip(&slow).enumerate() {
+                    assert!(
+                        x.to_bits() == y.to_bits(),
+                        "avx2 n={n} j={j}: {x:?} vs {y:?}"
+                    );
+                }
+            }
         });
+    }
+
+    #[test]
+    fn avx2_dot_norm2_match_scalar_within_fma_drift() {
+        // cross-tier agreement is tolerance-level (FMA drops one
+        // rounding per multiply-add); skip silently on non-AVX2 hosts
+        let Some(vec_tier) = KernelTier::vectorized() else {
+            return;
+        };
+        check("avx2 dot/norm2 ~ scalar", 200, |g| {
+            let n = g.usize_in(0, 131);
+            let a = g.normal_vec(n);
+            let b = g.normal_vec(n);
+            let dv = dot_with_tier(vec_tier, &a, &b);
+            let ds = dot_scalar(&a, &b);
+            let scale: f64 = a.iter().zip(&b).map(|(x, y)| (x * y).abs()).sum();
+            assert!(
+                (dv - ds).abs() <= 1e-12 * (1.0 + scale),
+                "dot n={n}: {dv} vs {ds}"
+            );
+            let nv = norm2_with_tier(vec_tier, &a);
+            let ns = norm2_scalar(&a);
+            assert!(
+                (nv - ns).abs() <= 1e-12 * (1.0 + ns),
+                "norm2 n={n}: {nv} vs {ns}"
+            );
+        });
+    }
+
+    #[test]
+    fn explicit_tier_matches_implicit_dispatch() {
+        let t = kernel_tier();
+        let a = vec![1.5, -2.0, 0.25, 3.0, -1.0, 0.5, 2.0, -0.75, 1.0];
+        let b = vec![0.5, 1.0, -2.0, 0.25, 3.0, -1.5, 0.125, 2.0, -1.0];
+        assert_eq!(dot(&a, &b).to_bits(), dot_with_tier(t, &a, &b).to_bits());
+        assert_eq!(norm2(&a).to_bits(), norm2_with_tier(t, &a).to_bits());
     }
 
     #[test]

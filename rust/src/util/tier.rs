@@ -1,0 +1,221 @@
+//! Kernel-tier dispatch: one process-wide [`KernelTier`] selects between
+//! the scalar-unrolled reference kernels and the explicitly vectorized
+//! AVX2+FMA paths in `util` and `linalg::block`.
+//!
+//! Resolution happens once, on the first kernel call, with precedence
+//!
+//! 1. an explicit [`set_kernel_tier`] call (CLI `--kernel-tier`, tests),
+//! 2. the `CQ_KERNEL_TIER` environment variable (`scalar` | `avx2` |
+//!    `auto`),
+//! 3. runtime CPU detection (`is_x86_feature_detected!("avx2")` + FMA).
+//!
+//! Requesting `avx2` on a machine without the features (or on a non-x86
+//! target) degrades loudly to [`KernelTier::Scalar`] — the vectorized
+//! entry points additionally re-check [`avx2_available`] before touching
+//! an intrinsic, so a hand-constructed `KernelTier::Avx2` can never fault
+//! on unsupported hardware.
+//!
+//! Determinism contract (see `linalg::block` for the kernel-level
+//! details): results are deterministic and bit-stable **per tier**; the
+//! AVX2 tier uses FMA inside `dot`/`norm2`-style reductions, so it agrees
+//! with the scalar tier only to rounding (tolerance property tests), with
+//! one deliberate exception — `util::axpy` avoids FMA and stays
+//! bit-identical across tiers.
+
+use std::sync::atomic::{AtomicBool, AtomicU8, Ordering};
+
+/// Which kernel implementation family the dense hot loops dispatch to.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[repr(u8)]
+pub enum KernelTier {
+    /// The 4-wide unrolled scalar kernels: the bit-exact reference and
+    /// the fallback on every non-AVX2 machine.
+    Scalar = 1,
+    /// Explicit AVX2+FMA intrinsics (`core::arch::x86_64`), selected
+    /// only when runtime detection confirms both features.
+    Avx2 = 2,
+}
+
+impl KernelTier {
+    /// Stable lower-case name (`scalar` / `avx2`) used by the CLI, the
+    /// env var and bench labels.
+    pub fn name(self) -> &'static str {
+        match self {
+            KernelTier::Scalar => "scalar",
+            KernelTier::Avx2 => "avx2",
+        }
+    }
+
+    /// The vectorized tier when this machine supports it, `None`
+    /// otherwise.  Differential tests use this instead of constructing
+    /// [`KernelTier::Avx2`] directly so they skip (rather than fall back
+    /// silently) on non-AVX2 hardware.
+    pub fn vectorized() -> Option<KernelTier> {
+        if avx2_available() {
+            Some(KernelTier::Avx2)
+        } else {
+            None
+        }
+    }
+}
+
+impl std::fmt::Display for KernelTier {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// `true` when the running CPU reports both AVX2 and FMA.  `std`'s
+/// feature detection caches internally, so this is an atomic load after
+/// the first call.
+pub fn avx2_available() -> bool {
+    #[cfg(target_arch = "x86_64")]
+    {
+        std::is_x86_feature_detected!("avx2") && std::is_x86_feature_detected!("fma")
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    {
+        false
+    }
+}
+
+/// 0 = unresolved, otherwise a `KernelTier as u8` value.
+static TIER: AtomicU8 = AtomicU8::new(0);
+/// Warn at most once when an `avx2` request degrades to scalar.
+static WARNED: AtomicBool = AtomicBool::new(false);
+
+fn warn_unsupported(source: &str) {
+    if !WARNED.swap(true, Ordering::Relaxed) {
+        eprintln!(
+            "warning: {source} requested kernel tier 'avx2' but this CPU \
+             lacks AVX2+FMA; falling back to 'scalar'"
+        );
+    }
+}
+
+fn detect() -> KernelTier {
+    if avx2_available() {
+        KernelTier::Avx2
+    } else {
+        KernelTier::Scalar
+    }
+}
+
+fn resolve_from_env() -> KernelTier {
+    match std::env::var("CQ_KERNEL_TIER") {
+        Ok(v) => match v.trim().to_ascii_lowercase().as_str() {
+            "scalar" => KernelTier::Scalar,
+            "avx2" => {
+                if avx2_available() {
+                    KernelTier::Avx2
+                } else {
+                    warn_unsupported("CQ_KERNEL_TIER");
+                    KernelTier::Scalar
+                }
+            }
+            "" | "auto" => detect(),
+            other => {
+                eprintln!(
+                    "warning: unrecognized CQ_KERNEL_TIER={other:?} \
+                     (expected scalar|avx2|auto); auto-detecting"
+                );
+                detect()
+            }
+        },
+        Err(_) => detect(),
+    }
+}
+
+/// The process-wide tier every implicit-tier kernel dispatches through.
+/// Resolved once (see module docs for precedence) and cached.
+pub fn kernel_tier() -> KernelTier {
+    match TIER.load(Ordering::Relaxed) {
+        1 => KernelTier::Scalar,
+        2 => KernelTier::Avx2,
+        _ => {
+            let t = resolve_from_env();
+            // benign race: concurrent first calls resolve identically
+            TIER.store(t as u8, Ordering::Relaxed);
+            t
+        }
+    }
+}
+
+/// Force the process-wide tier (CLI override, tier-pinned tests, bench
+/// shootouts).  Returns the tier actually installed: an `Avx2` request
+/// on a machine without the features degrades to `Scalar` with a
+/// one-time warning.
+pub fn set_kernel_tier(tier: KernelTier) -> KernelTier {
+    let effective = match tier {
+        KernelTier::Avx2 if !avx2_available() => {
+            warn_unsupported("set_kernel_tier");
+            KernelTier::Scalar
+        }
+        t => t,
+    };
+    TIER.store(effective as u8, Ordering::Relaxed);
+    effective
+}
+
+/// Parse a CLI-style tier request (`scalar` | `avx2` | `auto`;
+/// case-insensitive).  `Ok(None)` means `auto` (run detection); unknown
+/// values are an error so flag typos fail fast instead of silently
+/// benchmarking the wrong tier.
+pub fn parse_tier(value: &str) -> Result<Option<KernelTier>, String> {
+    match value.trim().to_ascii_lowercase().as_str() {
+        "scalar" => Ok(Some(KernelTier::Scalar)),
+        "avx2" => Ok(Some(KernelTier::Avx2)),
+        "auto" => Ok(None),
+        other => Err(format!(
+            "invalid kernel tier {other:?}: expected scalar|avx2|auto"
+        )),
+    }
+}
+
+/// Parse and apply a CLI-style tier override.  `auto` re-runs detection
+/// (discarding any earlier pin and the env var).
+pub fn apply_tier_override(value: &str) -> Result<KernelTier, String> {
+    match parse_tier(value)? {
+        Some(t) => Ok(set_kernel_tier(t)),
+        None => {
+            let t = detect();
+            TIER.store(t as u8, Ordering::Relaxed);
+            Ok(t)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn names_round_trip() {
+        assert_eq!(KernelTier::Scalar.name(), "scalar");
+        assert_eq!(KernelTier::Avx2.name(), "avx2");
+        assert_eq!(format!("{}", KernelTier::Scalar), "scalar");
+    }
+
+    #[test]
+    fn vectorized_matches_availability() {
+        match KernelTier::vectorized() {
+            Some(t) => {
+                assert!(avx2_available());
+                assert_eq!(t, KernelTier::Avx2);
+            }
+            None => assert!(!avx2_available()),
+        }
+    }
+
+    #[test]
+    fn parse_tier_accepts_and_rejects() {
+        // apply_tier_override mutates process-global state that every
+        // implicit-tier unit test in this binary reads, so only the pure
+        // parser is exercised here (application is covered by the CLI
+        // and the tier-pinned integration tests).
+        assert_eq!(parse_tier("scalar"), Ok(Some(KernelTier::Scalar)));
+        assert_eq!(parse_tier("AVX2"), Ok(Some(KernelTier::Avx2)));
+        assert_eq!(parse_tier(" auto "), Ok(None));
+        assert!(parse_tier("bogus").is_err());
+    }
+}

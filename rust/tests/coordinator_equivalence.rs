@@ -26,6 +26,18 @@ use cq_ggadmm::metrics::Trace;
 const N: usize = 64;
 const THREADS: usize = 4;
 
+/// Pin the kernel tier for the whole test binary.  Engine
+/// bit-equivalence is a **per-tier** contract: both engines of every
+/// pair must run under one explicitly resolved tier, because the SIMD
+/// and scalar tiers legitimately differ by FMA reassociation.  The
+/// first call freezes the ambient resolution (the `CQ_KERNEL_TIER`
+/// override, or runtime detection); nothing in this binary flips it
+/// afterwards — cross-tier handoff is covered by tests/simd_kernels.rs.
+fn pin_tier() {
+    let t = cq_ggadmm::linalg::kernel_tier();
+    cq_ggadmm::linalg::set_kernel_tier(t);
+}
+
 fn problem(linear: bool, topo: &Topology, seed: u64) -> Problem {
     let n = topo.n();
     if linear {
@@ -71,6 +83,7 @@ fn assert_traces_bit_identical(sim: &Trace, coord: &Trace, what: &str) {
 /// cores, the coordinator shards workers over `threads` executors —
 /// either way the trajectory cannot move by a bit).
 fn lock(spec: AlgSpec, topo: Topology, linear: bool, drop_prob: f64, seed: u64, iters: u64) {
+    pin_tier();
     let p = problem(linear, &topo, seed);
     let what = format!(
         "{} / {} / drop={drop_prob}",

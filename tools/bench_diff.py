@@ -1,13 +1,32 @@
 #!/usr/bin/env python3
-"""Report-only diff of two bench_hotpath JSON artifacts.
+"""Diff two bench_hotpath JSON artifacts and gate on regressions.
 
-Usage: python3 tools/bench_diff.py BENCH_baseline.json BENCH_hotpath.json
+Usage:
+  python3 tools/bench_diff.py [options] BENCH_baseline.json BENCH_hotpath.json
+
+Options:
+  --threshold PCT   fail when a common bench regresses by more than PCT
+                    percent vs the baseline (default: 60)
+  --allow SUBSTR    exempt benches whose name contains SUBSTR from the
+                    gate (repeatable; they still appear in the report)
+  --report-only     print the table and always exit 0 (the pre-gating
+                    behavior)
+  --reseed          overwrite the baseline file with the fresh results
+                    (stamped with reseed provenance) and exit 0; used by
+                    CI to populate an empty baseline from a real run
 
 Prints a per-bench table (baseline ns/op, fresh ns/op, delta) plus the
 benches that were added or removed, so the perf trajectory is readable
-across PRs straight from the CI log.  This script never fails the build
-on a regression — hard perf gates live inside the bench binary itself
-(the asserted shootouts); it exits non-zero only on malformed input.
+across PRs straight from the CI log.  The gate exits 1 when any
+non-allowlisted common bench regresses past the threshold.  The gate is
+skipped (report only, exit 0) when:
+  * the baseline has no entries (not yet seeded — CI reseeds it), or
+  * the two files disagree on `smoke` (full-mode numbers are not
+    comparable to low-rep smoke numbers).
+
+Hard *absolute* perf contracts (SIMD beats scalar, pooled beats serial,
+fused beats seed, ...) live inside the bench binary itself as asserted
+shootouts; this gate catches *relative drift* between commits.
 
 Schema (bench_hotpath/v1, emitted by rust/benches/bench_hotpath.rs):
   {
@@ -19,6 +38,7 @@ Schema (bench_hotpath/v1, emitted by rust/benches/bench_hotpath.rs):
   }
 """
 
+import argparse
 import json
 import sys
 
@@ -35,18 +55,56 @@ def load(path):
     return doc, {k: float(v) for k, v in results.items()}
 
 
+def reseed(base_path, fresh_doc):
+    doc = dict(fresh_doc)
+    doc["provenance"] = (
+        f"{fresh_doc.get('provenance', 'unknown')} (reseeded via tools/bench_diff.py)"
+    )
+    with open(base_path, "w") as f:
+        json.dump(doc, f, indent=2, sort_keys=False)
+        f.write("\n")
+    print(f"reseeded {base_path} with {len(doc.get('results', {}))} benches")
+
+
 def main(argv):
-    if len(argv) != 3:
-        raise SystemExit(__doc__)
-    base_doc, base = load(argv[1])
-    fresh_doc, fresh = load(argv[2])
-    print(f"baseline: {argv[1]} (smoke={base_doc.get('smoke')}, {len(base)} benches)")
-    print(f"fresh:    {argv[2]} (smoke={fresh_doc.get('smoke')}, {len(fresh)} benches)")
+    ap = argparse.ArgumentParser(
+        description="diff + regression-gate two bench_hotpath artifacts",
+        usage="bench_diff.py [options] BASELINE FRESH",
+    )
+    ap.add_argument("baseline")
+    ap.add_argument("fresh")
+    ap.add_argument("--threshold", type=float, default=60.0)
+    ap.add_argument("--allow", action="append", default=[])
+    ap.add_argument("--report-only", action="store_true")
+    ap.add_argument("--reseed", action="store_true")
+    args = ap.parse_args(argv[1:])
+
+    base_doc, base = load(args.baseline)
+    fresh_doc, fresh = load(args.fresh)
+
+    if args.reseed:
+        reseed(args.baseline, fresh_doc)
+        return
+
+    print(f"baseline: {args.baseline} (smoke={base_doc.get('smoke')}, {len(base)} benches)")
+    print(f"fresh:    {args.fresh} (smoke={fresh_doc.get('smoke')}, {len(fresh)} benches)")
+
+    gating = not args.report_only
     if not base:
         print()
-        print("baseline has no entries — seed it by copying a full-mode")
-        print("BENCH_hotpath.json over BENCH_baseline.json and committing it.")
+        print("baseline has no entries — gate skipped.  Seed it with")
+        print("  python3 tools/bench_diff.py --reseed BENCH_baseline.json BENCH_hotpath.json")
+        print("(CI does this automatically on the next main-branch bench run.)")
+        gating = False
+    elif base_doc.get("smoke") != fresh_doc.get("smoke"):
+        print()
+        print(
+            "warning: smoke-mode mismatch between baseline and fresh run — "
+            "numbers are not comparable, gate skipped"
+        )
+        gating = False
 
+    violations = []
     common = [k for k in fresh if k in base]
     if common:
         width = max(len(k) for k in common)
@@ -55,9 +113,13 @@ def main(argv):
         for k in common:
             b, f = base[k], fresh[k]
             delta = (f - b) / b * 100.0 if b > 0 else float("nan")
+            allowed = any(sub in k for sub in args.allow)
             marker = ""
-            if delta > 25.0:
-                marker = "  <-- slower"
+            if gating and delta > args.threshold and not allowed:
+                violations.append((k, delta))
+                marker = "  <-- REGRESSION"
+            elif delta > 25.0:
+                marker = "  <-- slower" + (" (allowlisted)" if allowed else "")
             elif delta < -25.0:
                 marker = "  <-- faster"
             print(f"{k:<{width}}  {b:>12.0f}  {f:>12.0f}  {delta:>+7.1f}%{marker}")
@@ -74,8 +136,19 @@ def main(argv):
         print("benches missing from the fresh run:")
         for k in removed:
             print(f"  - {k}")
+
     print()
-    print("(report only: shootout regressions fail inside the bench binary itself)")
+    if violations:
+        print(f"FAIL: {len(violations)} bench(es) regressed past {args.threshold:.0f}%:")
+        for k, delta in violations:
+            print(f"  {k}: {delta:+.1f}%")
+        print("(re-seed the baseline deliberately if the regression is accepted:")
+        print(" see EXPERIMENTS.md, 'Re-seeding the benchmark baseline')")
+        raise SystemExit(1)
+    if gating:
+        print(f"gate passed: no common bench regressed past {args.threshold:.0f}%")
+    else:
+        print("(report only: gate not applied)")
 
 
 if __name__ == "__main__":
