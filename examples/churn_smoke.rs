@@ -1,0 +1,105 @@
+//! Dynamic-network smoke at N = 256: a seeded churn schedule (leaves +
+//! warm-started rejoins), a rotating straggler subset, and the
+//! bounded-staleness round policy — run through BOTH engines (the
+//! sequential simulator and the sharded coordinator) from one shared
+//! `ExecutionConfig`, asserting progress and cross-engine bit-identity
+//! under faults.  CI runs this on every PR (see
+//! `.github/workflows/ci.yml`, "churn smoke").
+//!
+//! Run with: `cargo run --release --example churn_smoke`
+//! Env: `CHURN_WORKERS` (default 256), `CHURN_THREADS` (default 4),
+//! `CHURN_ITERS` (default 14).
+
+use cq_ggadmm::algs::{AlgSpec, Problem, Run};
+use cq_ggadmm::comm::LinkKind;
+use cq_ggadmm::config::ExecutionConfig;
+use cq_ggadmm::coordinator::Coordinator;
+use cq_ggadmm::data;
+use cq_ggadmm::graph::{ChurnSchedule, Topology};
+use cq_ggadmm::io::{MemorySink, PersistableEngine};
+
+fn env_usize(key: &str, default: usize) -> usize {
+    std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn main() {
+    let seed = 19;
+    let workers = env_usize("CHURN_WORKERS", 256);
+    let threads = env_usize("CHURN_THREADS", 4);
+    let iters = env_usize("CHURN_ITERS", 14) as u64;
+    let d = 6;
+
+    let ds = data::synthetic::linear_dataset(workers * 4, d, seed);
+    let topo = Topology::random_bipartite(workers, 0.02, seed);
+    let problem = Problem::new(&ds, &topo, 10.0, 0.0, seed);
+
+    // ~6% of workers cycle through leave -> warm-started rejoin, a
+    // rotating 10% straggler subset injects late slots, and censored
+    // workers are force-refreshed after 3 silent rounds
+    let churn = ChurnSchedule::generate(workers, iters, 0.06, seed);
+    let stragglers =
+        LinkKind::Straggler { frac: 0.1, rotate_every: 4, base_s: 8e-4, alpha: 1.3 };
+    let exec = ExecutionConfig::default()
+        .with_seed(seed)
+        .with_threads(threads)
+        .with_churn(Some(churn.clone()))
+        .with_staleness_bound(Some(3))
+        .with_link(Some(stragglers));
+    println!(
+        "{workers} workers ({} links), {} churn events, stragglers rotating every 4 iters",
+        topo.edges().len(),
+        churn.events().len()
+    );
+
+    let spec = AlgSpec::cq_ggadmm(0.05, 0.9, 0.995, 2);
+    let sink = MemorySink::new();
+    let mut sim = Run::new(problem.clone(), topo.clone(), spec.clone(), exec.clone());
+    sim.start_event_log(Box::new(sink.clone()));
+    let mut coord = Coordinator::spawn(problem, topo, spec, exec);
+    for _ in 0..iters {
+        sim.step();
+        coord.step();
+    }
+
+    let (ts, tc) = (sim.trace(), coord.trace());
+    let first = ts.points.first().expect("trace must not be empty");
+    let last = ts.points.last().expect("trace must not be empty");
+    println!(
+        "iter {:>3}: gap={:.3e}   iter {:>3}: gap={:.3e} rounds={} bits={}",
+        first.iteration, first.loss_gap, last.iteration, last.loss_gap, last.cum_rounds,
+        last.cum_bits
+    );
+    assert!(last.loss_gap.is_finite(), "diverged under faults");
+    assert!(
+        last.loss_gap < first.loss_gap,
+        "no progress under churn: {:.3e} -> {:.3e}",
+        first.loss_gap,
+        last.loss_gap
+    );
+    assert!(last.cum_rounds > 0, "nothing was transmitted");
+
+    // both engines walked the identical faulted trajectory
+    assert_eq!(ts.points.len(), tc.points.len(), "trace length");
+    for (a, b) in ts.points.iter().zip(&tc.points) {
+        assert_eq!(a.loss_gap.to_bits(), b.loss_gap.to_bits(), "iter {}: loss", a.iteration);
+        assert_eq!(a.cum_bits, b.cum_bits, "iter {}: bits", a.iteration);
+        assert_eq!(
+            a.cum_energy_j.to_bits(),
+            b.cum_energy_j.to_bits(),
+            "iter {}: energy",
+            a.iteration
+        );
+    }
+
+    // every scheduled transition hit the event stream
+    let lines = sink.lines();
+    let leaves = lines.iter().filter(|l| l.contains("\"event\":\"worker_leave\"")).count();
+    let joins = lines.iter().filter(|l| l.contains("\"event\":\"worker_join\"")).count();
+    let expected = churn.events().len() / 2;
+    assert_eq!(leaves, expected, "leave events");
+    assert_eq!(joins, expected, "join events");
+    println!(
+        "churn smoke OK ({workers} workers, {leaves} leaves + {joins} rejoins, \
+         engines bit-identical)"
+    );
+}

@@ -25,13 +25,15 @@
 //! [`Run::new`] — no per-phase thread spawns or job lists.
 
 use super::{AlgSpec, Problem, Schedule};
-use crate::comm::{CommLog, EnergyModel, EnergyParams, LinkKind, Medium};
+use crate::comm::{CommLog, EnergyModel, EnergyParams, LinkKind, Medium, SlotOutcome};
 use crate::config::ExecutionConfig;
-use crate::graph::Topology;
+use crate::graph::{ChurnEvent, ChurnKind, Topology};
 use crate::io::checkpoint::{MediumState, RunState};
 use crate::io::{EventRecorder, EventSink, PersistableEngine};
 use crate::metrics::{Trace, TracePoint};
-use crate::protocol::{build_cores, ProtocolConfig, WorkerCore};
+use crate::protocol::{
+    apply_churn_event, build_cores, replay_churn_structure, ProtocolConfig, WorkerCore,
+};
 use crate::solver::Backend;
 
 /// Legacy execution options for a run — a thin shim over
@@ -97,6 +99,8 @@ impl From<RunOptions> for ExecutionConfig {
             link: o.link,
             energy: o.energy,
             incremental: o.incremental,
+            churn: None,
+            staleness_bound: None,
         }
     }
 }
@@ -126,6 +130,19 @@ pub struct Run {
     /// rebuilds them (taken/restored around the phase loop to satisfy the
     /// borrow checker without cloning)
     phase_groups: Vec<Vec<usize>>,
+    /// `phase_groups` filtered to active, degree >= 1 workers; equal to
+    /// `phase_groups` on a static graph and rebuilt only when a churn
+    /// event fires
+    live_groups: Vec<Vec<usize>>,
+    /// per-worker membership under churn (all `true` on a static graph)
+    active: Vec<bool>,
+    /// consecutive rounds each worker's broadcast stayed off the air
+    /// (censored, dropped or late); only maintained under the
+    /// bounded-staleness policy, all zero otherwise
+    stale: Vec<u64>,
+    /// churn events applied so far (restore-time sanity: replaying a
+    /// checkpoint's structure needs a freshly constructed engine)
+    churn_applied: usize,
     /// persistent relay buffer: a committed hat is copied here once and
     /// delivered to every neighbor's core (the in-process "wire")
     relay: Vec<f64>,
@@ -165,17 +182,24 @@ impl Run {
         let medium = Medium::new(
             energy,
             opts.energy.slot_s,
-            LinkKind::resolve(opts.link, opts.drop_prob).build(rng),
+            LinkKind::resolve(opts.link, opts.drop_prob).build(rng, topo.n()),
         );
         let trace = Trace::new(&spec.name, &problem.dataset_name);
         let n = topo.n();
+        if let Some(w) = opts.churn.as_ref().and_then(|c| c.max_worker()) {
+            assert!(w < n, "churn schedule names worker {w}, but the topology has {n} workers");
+        }
         let phase_groups = match spec.schedule {
             Schedule::Alternating => vec![topo.heads(), topo.tails()],
             Schedule::Jacobian => vec![(0..n).collect()],
         };
         Run {
             relay: vec![0.0; problem.d],
+            live_groups: phase_groups.clone(),
             phase_groups,
+            active: vec![true; n],
+            stale: vec![0; n],
+            churn_applied: 0,
             pool,
             cores,
             medium,
@@ -246,45 +270,136 @@ impl Run {
         self.pool = Some(pool);
     }
 
+    /// Bottleneck broadcast distance of worker `i` over its **active**
+    /// neighbors; equal to [`Topology::max_neighbor_distance`] on a
+    /// static graph (same fold over the same set).
+    fn active_neighbor_distance(&self, i: usize) -> f64 {
+        self.topo
+            .neighbors(i)
+            .iter()
+            .filter(|&&m| self.active[m])
+            .map(|&m| self.topo.distance(i, m))
+            .fold(0.0, f64::max)
+    }
+
     /// Transmission pipeline for one group at censoring iteration index
     /// `k_plus_1`: each core builds and gates its candidate, committed
     /// broadcasts go through the shared [`Medium`] (energy + link fate),
     /// and deliveries land in the neighbors' cores via the persistent
     /// relay buffer — no per-round allocation anywhere.
+    ///
+    /// Under the bounded-staleness policy (`staleness_bound = Some(tau)`)
+    /// the fate call is [`Medium::transmit_bounded`]: broadcasts that
+    /// straggle past the slot are aborted (the round closes on time),
+    /// per-worker staleness counts censored/lost rounds, and a worker at
+    /// `stale >= tau` bypasses its censor gate and transmits reliably.
     fn transmit_group(&mut self, ids: &[usize], k_plus_1: u64) {
+        let tau = self.opts.staleness_bound;
         for &i in ids {
-            let Some(bits) = self.cores[i].prepare_broadcast(k_plus_1) else {
+            if let Some(rec) = &mut self.recorder {
+                rec.note_attempt();
+            }
+            let force = tau.is_some_and(|t| self.stale[i] >= t);
+            let Some(bits) = self.cores[i].prepare_broadcast_gated(k_plus_1, force) else {
+                if tau.is_some() {
+                    self.stale[i] += 1;
+                }
                 continue;
             };
-            let dist = self.topo.max_neighbor_distance(i);
-            if self.medium.transmit(i, self.iter, bits, dist) {
+            let dist = self.active_neighbor_distance(i);
+            let landed = match tau {
+                None => self.medium.transmit(i, self.iter, bits, dist),
+                Some(_) => matches!(
+                    self.medium.transmit_bounded(i, self.iter, bits, dist, force),
+                    SlotOutcome::Landed
+                ),
+            };
+            if landed {
                 self.cores[i].commit_pending();
                 self.relay.copy_from_slice(self.cores[i].hat_self());
                 for &m in self.topo.neighbors(i) {
-                    self.cores[m].deliver(i, &self.relay);
+                    if self.active[m] {
+                        self.cores[m].deliver(i, &self.relay);
+                    }
                 }
+                if force {
+                    let staleness = self.stale[i];
+                    if let Some(rec) = &mut self.recorder {
+                        rec.stale_refresh(self.iter, i, staleness);
+                    }
+                }
+                self.stale[i] = 0;
             } else {
-                // erasure with perfect feedback: cost was paid by the
-                // medium, state update is rolled back
+                // erasure/straggler with perfect feedback: cost was paid
+                // by the medium, state update is rolled back
                 self.cores[i].abort_pending();
+                if tau.is_some() {
+                    self.stale[i] += 1;
+                }
             }
         }
     }
 
-    /// Execute one iteration of the configured schedule: for each phase
-    /// group (heads then tails, or everyone under Jacobian), primal update
-    /// then transmission, followed by the dual update.
+    /// Apply the churn events scheduled for the start of this iteration
+    /// (shared transition logic: [`crate::protocol::apply_churn_event`])
+    /// and rebuild the live phase groups.
+    fn apply_churn_events(&mut self) {
+        let events: Vec<ChurnEvent> = match &self.opts.churn {
+            Some(c) => c.events_at(self.iter).to_vec(),
+            None => return,
+        };
+        if events.is_empty() {
+            return;
+        }
+        for e in &events {
+            apply_churn_event(&mut self.cores, &mut self.active, &self.topo, e);
+            self.stale[e.worker] = 0;
+            self.churn_applied += 1;
+            if let Some(rec) = &mut self.recorder {
+                match e.kind {
+                    ChurnKind::Leave => rec.worker_leave(self.iter, e.worker),
+                    ChurnKind::Join => rec.worker_join(self.iter, e.worker),
+                }
+            }
+        }
+        self.refresh_live_groups();
+    }
+
+    /// Rebuild `live_groups` from the membership flags: a worker updates
+    /// and transmits only while active with at least one active neighbor
+    /// (a stranded degree-0 worker freezes in place until an edge
+    /// returns).
+    fn refresh_live_groups(&mut self) {
+        self.live_groups = self
+            .phase_groups
+            .iter()
+            .map(|g| {
+                g.iter()
+                    .copied()
+                    .filter(|&i| self.active[i] && !self.cores[i].neighbors().is_empty())
+                    .collect()
+            })
+            .collect();
+    }
+
+    /// Execute one iteration of the configured schedule: apply scheduled
+    /// churn, then for each phase group (heads then tails, or everyone
+    /// under Jacobian), primal update then transmission, followed by the
+    /// dual update over the active workers.
     pub fn step(&mut self) {
+        self.apply_churn_events();
         let k_plus_1 = self.iter + 1;
-        let groups = std::mem::take(&mut self.phase_groups);
+        let groups = std::mem::take(&mut self.live_groups);
         for group in &groups {
             self.update_group(group);
             self.transmit_group(group, k_plus_1);
             self.medium.end_slot();
         }
-        self.phase_groups = groups;
-        for core in &mut self.cores {
-            core.dual_update();
+        self.live_groups = groups;
+        for i in 0..self.cores.len() {
+            if self.active[i] && !self.cores[i].neighbors().is_empty() {
+                self.cores[i].dual_update();
+            }
         }
         self.iter += 1;
         if self.iter % self.opts.record_every == 0 {
@@ -298,7 +413,12 @@ impl Run {
         let obj: f64 = self.cores.iter().map(|c| c.loss()).sum();
         let gap = (obj - self.problem.f_star).abs();
         let mut consensus: f64 = 0.0;
+        // consensus over live edges only: a detached worker's frozen
+        // model is not part of the current constraint set
         for &(h, t) in self.topo.edges() {
+            if !(self.active[h] && self.active[t]) {
+                continue;
+            }
             let diff: f64 = self.cores[h]
                 .theta()
                 .iter()
@@ -416,18 +536,47 @@ impl Run {
                 link: self.medium.link_state(),
             },
             trace: self.trace.clone(),
+            active: self.active.clone(),
+            stale: self.stale.clone(),
         }
     }
 
     /// Overwrite this engine's state from a checkpoint.  The engine must
-    /// have been constructed for the same problem / topology / spec /
-    /// options the checkpoint came from.
+    /// have been constructed **fresh** for the same problem / topology /
+    /// spec / options the checkpoint came from; under churn, the
+    /// structural effect of every event before the checkpoint is replayed
+    /// first so the cores' shapes match before values are imported.
     pub fn restore_state(&mut self, s: &RunState) {
         assert_eq!(
             s.cores.len(),
             self.cores.len(),
             "checkpoint is for a different worker count"
         );
+        assert_eq!(s.active.len(), self.cores.len(), "checkpoint dynamic section size");
+        assert_eq!(s.stale.len(), self.cores.len(), "checkpoint dynamic section size");
+        if let Some(churn) = self.opts.churn.clone() {
+            if !churn.is_empty() {
+                assert_eq!(
+                    self.churn_applied, 0,
+                    "restore with churn requires a freshly constructed engine"
+                );
+                replay_churn_structure(
+                    &mut self.cores,
+                    &mut self.active,
+                    &self.topo,
+                    &churn,
+                    s.iteration,
+                );
+                self.churn_applied =
+                    churn.events().iter().filter(|e| e.at < s.iteration).count();
+                self.refresh_live_groups();
+            }
+        }
+        assert_eq!(
+            self.active, s.active,
+            "checkpoint membership does not match the configured churn schedule"
+        );
+        self.stale.copy_from_slice(&s.stale);
         for (core, cs) in self.cores.iter_mut().zip(&s.cores) {
             core.import_state(cs);
         }
@@ -808,6 +957,111 @@ mod tests {
         assert!(lines[0].contains(r#""workers":6"#), "{}", lines[0]);
         assert!(lines[1].contains(r#""iteration":2"#), "{}", lines[1]);
         assert!(lines[3].contains(r#""iteration":6"#), "{}", lines[3]);
+    }
+
+    #[test]
+    fn churn_leave_and_rejoin_converges_and_streams_events() {
+        let (p, t) = small_problem(true, 8, 40);
+        let churn = crate::graph::ChurnSchedule::parse("5:leave:2 15:join:2").unwrap();
+        let mut run = Run::new(
+            p,
+            t,
+            AlgSpec::ggadmm(),
+            ExecutionConfig::default().with_churn(Some(churn)),
+        );
+        let sink = crate::io::MemorySink::new();
+        run.start_event_log(Box::new(sink.clone()));
+        let trace = run.run(250);
+        assert!(trace.last_gap() < 1e-4, "gap={:.3e}", trace.last_gap());
+        let lines = sink.lines().join("\n");
+        assert!(lines.contains(r#""event":"worker_leave""#), "{lines}");
+        assert!(lines.contains(r#""event":"worker_join""#), "{lines}");
+    }
+
+    #[test]
+    fn bounded_staleness_refreshes_heavily_censored_workers() {
+        let (p, t) = small_problem(true, 8, 41);
+        // tau0 = 50 censors every broadcast after state init; the
+        // staleness bound must force workers back on the air anyway
+        let mut run = Run::new(
+            p,
+            t,
+            AlgSpec::c_ggadmm(50.0, 0.999),
+            ExecutionConfig::default().with_staleness_bound(Some(3)),
+        );
+        let sink = crate::io::MemorySink::new();
+        run.start_event_log(Box::new(sink.clone()));
+        run.run(12);
+        assert!(run.comm().rounds() > 8, "rounds={}", run.comm().rounds());
+        let lines = sink.lines().join("\n");
+        assert!(lines.contains(r#""event":"stale_refresh""#), "{lines}");
+        assert!(lines.contains(r#""staleness":3"#), "{lines}");
+    }
+
+    #[test]
+    fn degree_zero_mid_run_freezes_then_recovers() {
+        // chain(2): worker 1 leaving strands worker 0 at degree 0 — the
+        // run must idle through the gap without NaNs and recover after
+        // the rejoin
+        let topo = Topology::chain(2);
+        let ds = synthetic::linear_dataset(24, 3, 43);
+        let p = Problem::new(&ds, &topo, 1.0, 0.0, 43);
+        let churn = crate::graph::ChurnSchedule::parse("3:leave:1 8:join:1").unwrap();
+        let mut run = Run::new(
+            p,
+            topo,
+            AlgSpec::ggadmm(),
+            ExecutionConfig::default().with_churn(Some(churn)),
+        );
+        let trace = run.run(80);
+        for pnt in &trace.points {
+            assert!(pnt.loss_gap.is_finite() && pnt.consensus_gap.is_finite());
+            assert!(pnt.cum_energy_j.is_finite());
+        }
+        for i in 0..2 {
+            let s = run.snapshot(i);
+            assert!(s.theta.iter().all(|v| v.is_finite()));
+            assert!(s.alpha.iter().all(|v| v.is_finite()));
+        }
+        assert!(trace.last_gap() < 1e-5, "gap={:.3e}", trace.last_gap());
+    }
+
+    #[test]
+    fn snapshot_restore_mid_churn_resumes_bit_identically() {
+        // checkpoint while a worker is detached, restore into a fresh
+        // engine, and cross the rejoin: trajectory, clock and structure
+        // must all match the uninterrupted oracle
+        let (p, t) = small_problem(true, 8, 42);
+        let churn = crate::graph::ChurnSchedule::parse("4:leave:3 14:join:3").unwrap();
+        let spec = AlgSpec::cq_ggadmm(0.3, 0.85, 0.99, 2);
+        let opts = ExecutionConfig::default()
+            .with_churn(Some(churn))
+            .with_staleness_bound(Some(2))
+            .with_drop_prob(0.2);
+        let mut oracle = Run::new(p.clone(), t.clone(), spec.clone(), opts.clone());
+        let mut a = Run::new(p.clone(), t.clone(), spec.clone(), opts.clone());
+        for _ in 0..9 {
+            oracle.step();
+            a.step();
+        }
+        let state = a.snapshot_state();
+        assert!(!state.active[3], "worker 3 must be out at the checkpoint");
+        drop(a);
+        let mut b = Run::new(p, t, spec, opts);
+        b.restore_state(&state);
+        for _ in 0..12 {
+            oracle.step();
+            b.step();
+        }
+        assert_eq!(oracle.trace(), b.trace(), "resumed trace diverged");
+        assert_eq!(
+            oracle.sim_time_s().to_bits(),
+            b.sim_time_s().to_bits(),
+            "sim clock diverged"
+        );
+        for i in 0..8 {
+            assert_eq!(oracle.snapshot(i).theta, b.snapshot(i).theta);
+        }
     }
 
     #[test]

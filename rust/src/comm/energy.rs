@@ -170,6 +170,29 @@ mod tests {
     }
 
     #[test]
+    fn degree_zero_worker_accounting_stays_finite() {
+        // regression (dynamic networks): after a churn departure a worker
+        // can be left with an empty neighbor set.  Its bottleneck
+        // distance folds over nothing (0.0) and the engines skip its
+        // broadcast entirely — but if anything ever does price such a
+        // transmission, every quantity must stay finite and the
+        // zero-length link must cost nothing.
+        for n in [1usize, 2, 64] {
+            for frac in [0.5, 1.0] {
+                let m = EnergyModel::new(EnergyParams::default(), n, frac);
+                let empty_bottleneck: f64 =
+                    [].iter().copied().fold(0.0f64, f64::max);
+                assert_eq!(empty_bottleneck, 0.0);
+                for bits in [0u64, 64, 32 * 10_000] {
+                    let e = m.energy_j(bits, empty_bottleneck);
+                    assert!(e.is_finite());
+                    assert_eq!(e, 0.0, "zero-length link must cost nothing");
+                }
+            }
+        }
+    }
+
+    #[test]
     fn quantization_saves_orders_of_magnitude() {
         // the paper's headline: exponential rate-power tradeoff makes
         // 2-bit payloads orders of magnitude cheaper than 32-bit

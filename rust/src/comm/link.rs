@@ -16,7 +16,19 @@
 //! * [`LatencyLink`] — deterministic per-link delay (propagation +
 //!   serialization): a synchronous phase ends when its slowest broadcast
 //!   lands, so stragglers stretch the simulated wall clock that
-//!   [`Medium::sim_time_s`] accumulates.
+//!   [`Medium::sim_time_s`] accumulates;
+//! * [`TimeVaryingLink`] — a periodic Gilbert–Elliott good/bad channel:
+//!   drop probability (and an optional extra delay) are piecewise
+//!   functions of [`Medium::sim_time_s`], so link quality drifts over
+//!   the run instead of being drawn i.i.d.;
+//! * [`StragglerLink`] — a seeded, rotating subset of workers is tagged
+//!   as stragglers whose broadcasts suffer heavy-tailed (Pareto) delays;
+//!   everyone else lands within the slot.
+//!
+//! Every stochastic model draws **once per committed broadcast, in
+//! commit order** (ascending worker id within a phase) and exports its
+//! RNG position as durable [`LinkState`], which is what keeps
+//! checkpoint/resume bit-identical across both engines.
 
 use super::{CommLog, EnergyModel, Transmission};
 use crate::util::rng::Pcg64;
@@ -32,8 +44,9 @@ pub enum Fate {
 }
 
 /// Durable link-model state for checkpointing.  Stateless models
-/// (ideal, latency) carry nothing; the erasure link carries its RNG
-/// stream position so resumed drops line up bit-for-bit.
+/// (ideal, latency) carry nothing; the stochastic links (erasure,
+/// time-varying, straggler) carry their RNG stream position so resumed
+/// draws line up bit-for-bit.
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub enum LinkState {
     Stateless,
@@ -41,8 +54,17 @@ pub enum LinkState {
 }
 
 /// A channel impairment model consulted once per committed broadcast.
+/// `now_s` is the medium's simulated clock at the start of the slot, so
+/// models can vary over simulated time.
 pub trait LinkModel: Send {
-    fn fate(&mut self, from: usize, iteration: u64, payload_bits: u64, distance_m: f64) -> Fate;
+    fn fate(
+        &mut self,
+        from: usize,
+        iteration: u64,
+        payload_bits: u64,
+        distance_m: f64,
+        now_s: f64,
+    ) -> Fate;
 
     /// Export durable state (default: none).
     fn state(&self) -> LinkState {
@@ -57,7 +79,7 @@ pub trait LinkModel: Send {
 pub struct IdealLink;
 
 impl LinkModel for IdealLink {
-    fn fate(&mut self, _: usize, _: u64, _: u64, _: f64) -> Fate {
+    fn fate(&mut self, _: usize, _: u64, _: u64, _: f64, _: f64) -> Fate {
         Fate::Delivered { latency_s: 0.0 }
     }
 }
@@ -78,7 +100,7 @@ impl ErasureLink {
 }
 
 impl LinkModel for ErasureLink {
-    fn fate(&mut self, _: usize, _: u64, _: u64, _: f64) -> Fate {
+    fn fate(&mut self, _: usize, _: u64, _: u64, _: f64, _: f64) -> Fate {
         if self.rng.bernoulli(self.p) {
             Fate::Dropped
         } else {
@@ -109,11 +131,171 @@ pub struct LatencyLink {
 const SPEED_OF_LIGHT_M_S: f64 = 299_792_458.0;
 
 impl LinkModel for LatencyLink {
-    fn fate(&mut self, _: usize, _: u64, payload_bits: u64, distance_m: f64) -> Fate {
+    fn fate(&mut self, _: usize, _: u64, payload_bits: u64, distance_m: f64, _: f64) -> Fate {
         Fate::Delivered {
             latency_s: self.base_s
                 + payload_bits as f64 * self.per_bit_s
                 + distance_m / SPEED_OF_LIGHT_M_S,
+        }
+    }
+}
+
+/// Periodic Gilbert–Elliott channel: each period of `period_s` simulated
+/// seconds opens with a *bad* burst covering the first `bad_frac` of the
+/// period (drop probability `p_bad`, extra delivery delay `bad_latency_s`)
+/// and spends the rest in the *good* state (`p_good`, no extra delay).
+/// The good/bad phase is a pure function of the medium's clock — only the
+/// Bernoulli stream is durable state, so checkpoint/resume needs nothing
+/// beyond the RNG position.
+pub struct TimeVaryingLink {
+    period_s: f64,
+    bad_frac: f64,
+    p_good: f64,
+    p_bad: f64,
+    bad_latency_s: f64,
+    rng: Pcg64,
+}
+
+impl TimeVaryingLink {
+    pub fn new(
+        period_s: f64,
+        bad_frac: f64,
+        p_good: f64,
+        p_bad: f64,
+        bad_latency_s: f64,
+        rng: Pcg64,
+    ) -> TimeVaryingLink {
+        assert!(period_s > 0.0, "period_s must be positive");
+        assert!((0.0..=1.0).contains(&bad_frac), "bad_frac out of [0,1]");
+        assert!((0.0..=1.0).contains(&p_good), "p_good out of [0,1]");
+        assert!((0.0..=1.0).contains(&p_bad), "p_bad out of [0,1]");
+        assert!(bad_latency_s >= 0.0, "bad_latency_s must be non-negative");
+        TimeVaryingLink { period_s, bad_frac, p_good, p_bad, bad_latency_s, rng }
+    }
+
+    /// True when the clock sits inside a bad burst (pure in `now_s`).
+    pub fn in_bad_state(&self, now_s: f64) -> bool {
+        let phase = (now_s / self.period_s).fract();
+        phase < self.bad_frac
+    }
+}
+
+impl LinkModel for TimeVaryingLink {
+    fn fate(&mut self, _: usize, _: u64, _: u64, _: f64, now_s: f64) -> Fate {
+        let bad = self.in_bad_state(now_s);
+        let p = if bad { self.p_bad } else { self.p_good };
+        if self.rng.bernoulli(p) {
+            Fate::Dropped
+        } else {
+            Fate::Delivered {
+                latency_s: if bad { self.bad_latency_s } else { 0.0 },
+            }
+        }
+    }
+
+    fn state(&self) -> LinkState {
+        let (state, inc) = self.rng.to_raw();
+        LinkState::Rng { state, inc }
+    }
+
+    fn restore(&mut self, s: &LinkState) {
+        if let LinkState::Rng { state, inc } = *s {
+            self.rng = Pcg64::from_raw(state, inc);
+        }
+    }
+}
+
+/// Heavy-tailed straggler injection: `ceil(frac * n)` workers are tagged
+/// as stragglers; the subset is re-sampled every `rotate_every`
+/// iterations from a seed fixed at construction, so membership is a pure
+/// function of the epoch (`iteration / rotate_every`) — no stream-order
+/// dependence and nothing extra to checkpoint.  A straggler's broadcast
+/// is delivered after a Pareto(`alpha`) delay scaled by `base_s`
+/// (drawn from the durable RNG stream); everyone else lands within the
+/// slot.  Nothing is ever dropped.
+pub struct StragglerLink {
+    n: usize,
+    k: usize,
+    rotate_every: u64,
+    base_s: f64,
+    alpha: f64,
+    subset_seed: u64,
+    rng: Pcg64,
+    /// Cached membership for `cached_epoch` (recomputed on demand; pure
+    /// in the epoch, so it is scratch, not durable state).
+    cached_epoch: u64,
+    straggler: Vec<bool>,
+}
+
+impl StragglerLink {
+    pub fn new(
+        n: usize,
+        frac: f64,
+        rotate_every: u64,
+        base_s: f64,
+        alpha: f64,
+        subset_seed: u64,
+        rng: Pcg64,
+    ) -> StragglerLink {
+        assert!(n > 0, "straggler link needs at least one worker");
+        assert!((0.0..=1.0).contains(&frac), "straggler fraction out of [0,1]");
+        assert!(rotate_every >= 1, "rotate_every must be >= 1");
+        assert!(base_s >= 0.0, "base_s must be non-negative");
+        assert!(alpha > 0.0, "Pareto alpha must be positive");
+        let k = ((frac * n as f64).ceil() as usize).min(n);
+        StragglerLink {
+            n,
+            k,
+            rotate_every,
+            base_s,
+            alpha,
+            subset_seed,
+            rng,
+            cached_epoch: u64::MAX,
+            straggler: vec![false; n],
+        }
+    }
+
+    /// Straggler membership at `iteration` (pure: a throwaway generator
+    /// keyed by the epoch, independent of the fate stream).
+    pub fn is_straggler(&mut self, from: usize, iteration: u64) -> bool {
+        let epoch = iteration / self.rotate_every;
+        if epoch != self.cached_epoch {
+            self.straggler.iter_mut().for_each(|s| *s = false);
+            let mut pick = Pcg64::with_stream(
+                self.subset_seed ^ epoch.wrapping_mul(0x9e37_79b9_7f4a_7c15),
+                0x5747_a6_1e_55,
+            );
+            for i in pick.sample_indices(self.n, self.k) {
+                self.straggler[i] = true;
+            }
+            self.cached_epoch = epoch;
+        }
+        self.straggler[from]
+    }
+}
+
+impl LinkModel for StragglerLink {
+    fn fate(&mut self, from: usize, iteration: u64, _: u64, _: f64, _: f64) -> Fate {
+        if self.is_straggler(from, iteration) {
+            // Pareto tail: base_s * (1-u)^(-1/alpha), u in [0,1) => the
+            // scale factor is >= 1 and finite
+            let u = self.rng.uniform();
+            let delay = self.base_s * (1.0 - u).powf(-1.0 / self.alpha);
+            Fate::Delivered { latency_s: delay }
+        } else {
+            Fate::Delivered { latency_s: 0.0 }
+        }
+    }
+
+    fn state(&self) -> LinkState {
+        let (state, inc) = self.rng.to_raw();
+        LinkState::Rng { state, inc }
+    }
+
+    fn restore(&mut self, s: &LinkState) {
+        if let LinkState::Rng { state, inc } = *s {
+            self.rng = Pcg64::from_raw(state, inc);
         }
     }
 }
@@ -124,7 +306,26 @@ pub enum LinkKind {
     Ideal,
     Erasure { p: f64 },
     Latency { base_s: f64, per_bit_s: f64 },
+    TimeVarying {
+        period_s: f64,
+        bad_frac: f64,
+        p_good: f64,
+        p_bad: f64,
+        bad_latency_s: f64,
+    },
+    Straggler {
+        frac: f64,
+        rotate_every: u64,
+        base_s: f64,
+        alpha: f64,
+    },
 }
+
+/// The one place the link-spec grammar lives; every parse error reports
+/// it verbatim.
+pub const LINK_GRAMMAR: &str = "ideal | erasure:<p> | latency:<base_s>,<per_bit_s> | \
+     timevarying:<period_s>,<bad_frac>,<p_good>,<p_bad>[,<bad_latency_s>] | \
+     straggler:<frac>,<rotate_every>,<base_s>,<alpha>";
 
 impl LinkKind {
     /// Resolve an optional explicit kind against the legacy `drop_prob`
@@ -140,54 +341,127 @@ impl LinkKind {
     }
 
     /// Instantiate the model.  `rng` must be the post-fork root stream of
-    /// [`crate::protocol::build_cores`] so erasure draws line up across
-    /// engines.
-    pub fn build(self, rng: Pcg64) -> Box<dyn LinkModel> {
+    /// [`crate::protocol::build_cores`] so stochastic draws line up
+    /// across engines; `n_workers` sizes worker-indexed models (the
+    /// straggler subset).
+    pub fn build(self, rng: Pcg64, n_workers: usize) -> Box<dyn LinkModel> {
         match self {
             LinkKind::Ideal => Box::new(IdealLink),
             LinkKind::Erasure { p } => Box::new(ErasureLink::new(p, rng)),
             LinkKind::Latency { base_s, per_bit_s } => {
                 Box::new(LatencyLink { base_s, per_bit_s })
             }
+            LinkKind::TimeVarying { period_s, bad_frac, p_good, p_bad, bad_latency_s } => {
+                Box::new(TimeVaryingLink::new(
+                    period_s,
+                    bad_frac,
+                    p_good,
+                    p_bad,
+                    bad_latency_s,
+                    rng,
+                ))
+            }
+            LinkKind::Straggler { frac, rotate_every, base_s, alpha } => {
+                let mut rng = rng;
+                // the subset seed comes off the same root stream, so both
+                // engines derive the identical rotating membership
+                let subset_seed = rng.next_u64();
+                Box::new(StragglerLink::new(
+                    n_workers,
+                    frac,
+                    rotate_every,
+                    base_s,
+                    alpha,
+                    subset_seed,
+                    rng,
+                ))
+            }
         }
     }
 
-    /// Parse the compact spec syntax used by manifests and CLI flags:
-    /// `ideal`, `erasure:<p>`, `latency:<base_s>,<per_bit_s>`.
+    /// Parse the compact spec syntax used by manifests and CLI flags
+    /// ([`LINK_GRAMMAR`]).  Trailing garbage — extra fields, stray
+    /// suffixes, arguments on `ideal` — is rejected, not ignored.
     pub fn parse(s: &str) -> Result<LinkKind, String> {
         let s = s.trim();
         let (head, rest) = match s.split_once(':') {
             Some((h, r)) => (h.trim(), Some(r.trim())),
             None => (s, None),
         };
-        let num = |v: &str, what: &str| -> Result<f64, String> {
-            v.trim()
-                .parse::<f64>()
-                .map_err(|_| format!("link spec '{s}': bad {what} '{v}'"))
+        let bad = |why: &str| -> String {
+            format!("link spec '{s}': {why} (grammar: {LINK_GRAMMAR})")
         };
-        match (head, rest) {
-            ("ideal", None) => Ok(LinkKind::Ideal),
-            ("erasure", Some(p)) => {
-                let p = num(p, "probability")?;
-                if !(0.0..=1.0).contains(&p) {
-                    return Err(format!("link spec '{s}': probability out of [0,1]"));
-                }
-                Ok(LinkKind::Erasure { p })
+        // split the argument list and parse each field as f64, enforcing
+        // the exact arity [min, max] — extra fields are trailing garbage
+        let args = |min: usize, max: usize| -> Result<Vec<f64>, String> {
+            let raw = rest.ok_or_else(|| bad("missing arguments"))?;
+            let fields: Vec<&str> = raw.split(',').map(str::trim).collect();
+            if fields.len() < min {
+                return Err(bad(&format!("expected at least {min} fields")));
             }
-            ("latency", Some(args)) => {
-                let mut it = args.split(',');
-                let base = num(it.next().unwrap_or(""), "base_s")?;
-                let per_bit = num(it.next().ok_or_else(|| {
-                    format!("link spec '{s}': expected latency:<base_s>,<per_bit_s>")
-                })?, "per_bit_s")?;
-                if it.next().is_some() {
-                    return Err(format!("link spec '{s}': too many fields"));
-                }
-                Ok(LinkKind::Latency { base_s: base, per_bit_s: per_bit })
+            if fields.len() > max {
+                return Err(bad("too many fields"));
             }
-            _ => Err(format!(
-                "unknown link spec '{s}' (expected ideal | erasure:<p> | latency:<base_s>,<per_bit_s>)"
-            )),
+            fields
+                .iter()
+                .map(|f| {
+                    f.parse::<f64>()
+                        .map_err(|_| bad(&format!("bad number '{f}'")))
+                })
+                .collect()
+        };
+        let prob = |p: f64, what: &str| -> Result<f64, String> {
+            if (0.0..=1.0).contains(&p) {
+                Ok(p)
+            } else {
+                Err(bad(&format!("{what} out of [0,1]")))
+            }
+        };
+        match head {
+            "ideal" => {
+                if rest.is_some() {
+                    return Err(bad("takes no arguments"));
+                }
+                Ok(LinkKind::Ideal)
+            }
+            "erasure" => {
+                let a = args(1, 1)?;
+                Ok(LinkKind::Erasure { p: prob(a[0], "probability")? })
+            }
+            "latency" => {
+                let a = args(2, 2)?;
+                Ok(LinkKind::Latency { base_s: a[0], per_bit_s: a[1] })
+            }
+            "timevarying" => {
+                let a = args(4, 5)?;
+                if a[0] <= 0.0 {
+                    return Err(bad("period_s must be positive"));
+                }
+                Ok(LinkKind::TimeVarying {
+                    period_s: a[0],
+                    bad_frac: prob(a[1], "bad_frac")?,
+                    p_good: prob(a[2], "p_good")?,
+                    p_bad: prob(a[3], "p_bad")?,
+                    bad_latency_s: *a.get(4).unwrap_or(&0.0),
+                })
+            }
+            "straggler" => {
+                let a = args(4, 4)?;
+                let rotate = a[1];
+                if rotate < 1.0 || rotate.fract() != 0.0 {
+                    return Err(bad("rotate_every must be a positive integer"));
+                }
+                if a[3] <= 0.0 {
+                    return Err(bad("alpha must be positive"));
+                }
+                Ok(LinkKind::Straggler {
+                    frac: prob(a[0], "frac")?,
+                    rotate_every: rotate as u64,
+                    base_s: a[2],
+                    alpha: a[3],
+                })
+            }
+            _ => Err(bad("unknown link spec")),
         }
     }
 
@@ -197,8 +471,28 @@ impl LinkKind {
             LinkKind::Ideal => "ideal".into(),
             LinkKind::Erasure { p } => format!("erasure:{p}"),
             LinkKind::Latency { base_s, per_bit_s } => format!("latency:{base_s},{per_bit_s}"),
+            LinkKind::TimeVarying { period_s, bad_frac, p_good, p_bad, bad_latency_s } => {
+                format!("timevarying:{period_s},{bad_frac},{p_good},{p_bad},{bad_latency_s}")
+            }
+            LinkKind::Straggler { frac, rotate_every, base_s, alpha } => {
+                format!("straggler:{frac},{rotate_every},{base_s},{alpha}")
+            }
         }
     }
+}
+
+/// Outcome of one slot under the bounded-staleness round policy (see
+/// [`Medium::transmit_bounded`]).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SlotOutcome {
+    /// Delivered within the slot; receivers update.
+    Landed,
+    /// Lost on the air (erasure); sender rolls back.
+    Dropped,
+    /// Delivered, but after the slot closed — the round proceeded
+    /// without it, so receivers keep the stale value and the sender
+    /// rolls back (identical to a drop, but counted as straggling).
+    Late,
 }
 
 /// The shared transmit path: §7 energy accounting + transmission log +
@@ -243,7 +537,10 @@ impl Medium {
             distance_m,
             energy_j: self.energy.energy_j(payload_bits, distance_m),
         });
-        match self.link.fate(worker, iteration, payload_bits, distance_m) {
+        match self
+            .link
+            .fate(worker, iteration, payload_bits, distance_m, self.sim_time_s)
+        {
             Fate::Delivered { latency_s } => {
                 self.slot_latency_s = self.slot_latency_s.max(latency_s);
                 true
@@ -252,6 +549,52 @@ impl Medium {
                 // the airtime is consumed even though nothing lands
                 self.slot_latency_s = self.slot_latency_s.max(self.slot_s);
                 false
+            }
+        }
+    }
+
+    /// One committed broadcast under the bounded-staleness round policy:
+    /// same accounting as [`Medium::transmit`], but a delivery that
+    /// would straggle past the slot counts as [`SlotOutcome::Late`] —
+    /// the round closes on time without it instead of stretching the
+    /// clock.  `reliable = true` models the forced staleness refresh
+    /// (retransmit-until-success): the broadcast always lands, consumes
+    /// the full slot, and — crucially for engine equivalence — skips
+    /// the link-model fate draw entirely.
+    pub fn transmit_bounded(
+        &mut self,
+        worker: usize,
+        iteration: u64,
+        payload_bits: u64,
+        distance_m: f64,
+        reliable: bool,
+    ) -> SlotOutcome {
+        self.log.record(Transmission {
+            worker,
+            iteration,
+            payload_bits,
+            distance_m,
+            energy_j: self.energy.energy_j(payload_bits, distance_m),
+        });
+        if reliable {
+            self.slot_latency_s = self.slot_latency_s.max(self.slot_s);
+            return SlotOutcome::Landed;
+        }
+        match self
+            .link
+            .fate(worker, iteration, payload_bits, distance_m, self.sim_time_s)
+        {
+            Fate::Delivered { latency_s } if latency_s <= self.slot_s => {
+                self.slot_latency_s = self.slot_latency_s.max(latency_s);
+                SlotOutcome::Landed
+            }
+            Fate::Delivered { .. } => {
+                self.slot_latency_s = self.slot_latency_s.max(self.slot_s);
+                SlotOutcome::Late
+            }
+            Fate::Dropped => {
+                self.slot_latency_s = self.slot_latency_s.max(self.slot_s);
+                SlotOutcome::Dropped
             }
         }
     }
@@ -307,7 +650,7 @@ mod tests {
         Medium::new(
             EnergyModel::new(params, 8, 0.5),
             params.slot_s,
-            kind.build(Pcg64::new(3)),
+            kind.build(Pcg64::new(3), 8),
         )
     }
 
@@ -349,11 +692,11 @@ mod tests {
     #[test]
     fn latency_grows_with_bits_and_distance() {
         let mut l = LatencyLink { base_s: 0.0, per_bit_s: 1e-6 };
-        let short = match l.fate(0, 0, 100, 10.0) {
+        let short = match l.fate(0, 0, 100, 10.0, 0.0) {
             Fate::Delivered { latency_s } => latency_s,
             Fate::Dropped => unreachable!(),
         };
-        let long = match l.fate(0, 0, 10_000, 10.0) {
+        let long = match l.fate(0, 0, 10_000, 10.0, 0.0) {
             Fate::Delivered { latency_s } => latency_s,
             Fate::Dropped => unreachable!(),
         };
@@ -368,5 +711,187 @@ mod tests {
             LinkKind::resolve(Some(LinkKind::Ideal), 0.2),
             LinkKind::Ideal
         );
+    }
+
+    // ---- time-varying (Gilbert-Elliott) link -------------------------
+
+    #[test]
+    fn timevarying_phase_is_pure_in_sim_time() {
+        let mut l = TimeVaryingLink::new(1.0, 0.25, 0.0, 1.0, 0.1, Pcg64::new(5));
+        assert!(l.in_bad_state(0.0));
+        assert!(l.in_bad_state(0.2));
+        assert!(!l.in_bad_state(0.3));
+        assert!(!l.in_bad_state(0.9));
+        assert!(l.in_bad_state(1.1)); // periodic
+        // p_bad = 1: everything inside the burst drops
+        assert_eq!(l.fate(0, 0, 32, 1.0, 0.1), Fate::Dropped);
+        // p_good = 0: everything outside the burst lands within the slot
+        assert_eq!(l.fate(0, 0, 32, 1.0, 0.5), Fate::Delivered { latency_s: 0.0 });
+    }
+
+    #[test]
+    fn timevarying_drop_rate_tracks_the_burst() {
+        let mut m = medium(LinkKind::TimeVarying {
+            period_s: 1.0,
+            bad_frac: 0.5,
+            p_good: 0.0,
+            p_bad: 0.8,
+            bad_latency_s: 0.0,
+        });
+        // sim_time starts at 0 => inside the bad burst until end_slot
+        // pushes the clock past bad_frac * period
+        let trials: u64 = 500;
+        let dropped = (0..trials).filter(|&k| !m.transmit(0, k, 160, 10.0)).count();
+        let rate = dropped as f64 / trials as f64;
+        assert!((rate - 0.8).abs() < 0.08, "bad-state drop rate {rate}");
+    }
+
+    #[test]
+    fn timevarying_state_round_trips_through_rng() {
+        let mut a = TimeVaryingLink::new(2.0, 0.3, 0.2, 0.9, 0.0, Pcg64::new(11));
+        for k in 0..17 {
+            a.fate(0, k, 64, 5.0, k as f64 * 0.1);
+        }
+        let s = a.state();
+        assert!(matches!(s, LinkState::Rng { .. }));
+        let mut b = TimeVaryingLink::new(2.0, 0.3, 0.2, 0.9, 0.0, Pcg64::new(999));
+        b.restore(&s);
+        for k in 0..64 {
+            let now = k as f64 * 0.07;
+            assert_eq!(a.fate(0, k, 64, 5.0, now), b.fate(0, k, 64, 5.0, now));
+        }
+        // byte-level contract: state after identical draws is identical
+        assert_eq!(a.state(), b.state());
+    }
+
+    // ---- straggler link ----------------------------------------------
+
+    #[test]
+    fn straggler_subset_rotates_and_is_deterministic() {
+        let mk = || StragglerLink::new(16, 0.25, 10, 0.01, 1.5, 77, Pcg64::new(4));
+        let (mut a, mut b) = (mk(), mk());
+        for iter in [0u64, 5, 9, 10, 25, 100] {
+            let sa: Vec<bool> = (0..16).map(|w| a.is_straggler(w, iter)).collect();
+            let sb: Vec<bool> = (0..16).map(|w| b.is_straggler(w, iter)).collect();
+            assert_eq!(sa, sb, "membership must be a pure function of the epoch");
+            assert_eq!(sa.iter().filter(|&&s| s).count(), 4, "ceil(0.25 * 16)");
+        }
+        // epochs 0 and 1 should (for this seed) pick different subsets
+        let e0: Vec<bool> = (0..16).map(|w| a.is_straggler(w, 0)).collect();
+        let e1: Vec<bool> = (0..16).map(|w| a.is_straggler(w, 10)).collect();
+        assert_ne!(e0, e1, "rotation must re-sample the subset");
+    }
+
+    #[test]
+    fn straggler_delays_are_heavy_tailed_and_positive() {
+        let mut l = StragglerLink::new(4, 1.0, 1, 0.02, 1.2, 3, Pcg64::new(8));
+        for k in 0..200 {
+            match l.fate(k as usize % 4, k, 64, 5.0, 0.0) {
+                Fate::Delivered { latency_s } => {
+                    assert!(latency_s >= 0.02 && latency_s.is_finite());
+                }
+                Fate::Dropped => panic!("straggler link never drops"),
+            }
+        }
+    }
+
+    #[test]
+    fn straggler_state_round_trips_through_rng() {
+        let mut a = StragglerLink::new(8, 0.5, 4, 0.01, 2.0, 55, Pcg64::new(21));
+        for k in 0..13 {
+            a.fate(k as usize % 8, k, 64, 5.0, 0.0);
+        }
+        let s = a.state();
+        let mut b = StragglerLink::new(8, 0.5, 4, 0.01, 2.0, 55, Pcg64::new(1234));
+        b.restore(&s);
+        for k in 0..64 {
+            assert_eq!(
+                a.fate(k as usize % 8, k, 64, 5.0, 0.0),
+                b.fate(k as usize % 8, k, 64, 5.0, 0.0)
+            );
+        }
+        assert_eq!(a.state(), b.state());
+    }
+
+    // ---- bounded-staleness transmit path -----------------------------
+
+    #[test]
+    fn transmit_bounded_classifies_late_and_caps_the_slot() {
+        let slot = EnergyParams::default().slot_s;
+        let mut m = medium(LinkKind::Latency { base_s: 10.0 * slot, per_bit_s: 0.0 });
+        assert_eq!(m.transmit_bounded(0, 0, 160, 10.0, false), SlotOutcome::Late);
+        m.end_slot();
+        // the round closed on time: the straggler did NOT stretch the clock
+        assert!((m.sim_time_s() - slot).abs() < 1e-15);
+        // the attempt is still charged
+        assert_eq!(m.log().rounds(), 1);
+        assert!(m.log().total_energy_j > 0.0);
+    }
+
+    #[test]
+    fn transmit_bounded_reliable_always_lands_without_a_fate_draw() {
+        // p = 1 erasure would drop everything; reliable delivery bypasses
+        // the draw entirely (and must not advance the RNG stream)
+        let mut m = medium(LinkKind::Erasure { p: 1.0 });
+        let before = m.link_state();
+        assert_eq!(m.transmit_bounded(0, 0, 160, 10.0, true), SlotOutcome::Landed);
+        assert_eq!(m.link_state(), before, "reliable send must not draw");
+        assert_eq!(m.transmit_bounded(1, 0, 160, 10.0, false), SlotOutcome::Dropped);
+        assert_ne!(m.link_state(), before, "unreliable send draws");
+    }
+
+    // ---- parse round trips: every family (satellite bugfix) ----------
+
+    #[test]
+    fn parse_round_trips_every_family() {
+        let kinds = [
+            LinkKind::Ideal,
+            LinkKind::Erasure { p: 0.17 },
+            LinkKind::Latency { base_s: 1.5e-3, per_bit_s: 1e-9 },
+            LinkKind::TimeVarying {
+                period_s: 0.5,
+                bad_frac: 0.2,
+                p_good: 0.01,
+                p_bad: 0.6,
+                bad_latency_s: 0.002,
+            },
+            LinkKind::Straggler { frac: 0.125, rotate_every: 20, base_s: 0.0015, alpha: 1.5 },
+        ];
+        for k in kinds {
+            let label = k.label();
+            assert_eq!(LinkKind::parse(&label).unwrap(), k, "round trip of '{label}'");
+        }
+        // the 4-field timevarying form defaults bad_latency_s to 0
+        assert_eq!(
+            LinkKind::parse("timevarying:1,0.25,0.05,0.5").unwrap(),
+            LinkKind::TimeVarying {
+                period_s: 1.0,
+                bad_frac: 0.25,
+                p_good: 0.05,
+                p_bad: 0.5,
+                bad_latency_s: 0.0,
+            }
+        );
+    }
+
+    #[test]
+    fn parse_rejects_trailing_garbage_and_reports_the_grammar() {
+        for bad in [
+            "ideal:1",            // ideal takes no arguments
+            "erasure:0.2,junk",   // trailing field
+            "erasure:0.2extra",   // trailing garbage inside the number
+            "latency:1e-3,1e-9,0",
+            "timevarying:1,0.2,0.1,0.5,0.001,9",
+            "straggler:0.1,10,0.001,1.5,0",
+            "straggler:0.1,10.5,0.001,1.5", // non-integer rotate_every
+            "carrier-pigeon",
+        ] {
+            let err = LinkKind::parse(bad).unwrap_err();
+            assert!(err.contains("grammar:"), "'{bad}' error must cite the grammar: {err}");
+        }
+        // out-of-range probabilities stay rejected
+        assert!(LinkKind::parse("erasure:1.5").is_err());
+        assert!(LinkKind::parse("timevarying:1,2,0.1,0.5").is_err());
+        assert!(LinkKind::parse("straggler:-0.1,10,0.001,1.5").is_err());
     }
 }

@@ -13,7 +13,10 @@ pub mod energy;
 pub mod link;
 
 pub use energy::{EnergyModel, EnergyParams};
-pub use link::{ErasureLink, Fate, IdealLink, LatencyLink, LinkKind, LinkModel, LinkState, Medium};
+pub use link::{
+    ErasureLink, Fate, IdealLink, LatencyLink, LinkKind, LinkModel, LinkState, Medium,
+    SlotOutcome, StragglerLink, TimeVaryingLink, LINK_GRAMMAR,
+};
 
 /// What one worker put on the air in one slot.
 #[derive(Clone, Copy, Debug)]

@@ -10,6 +10,7 @@
 //! shared value, which is what keeps the surfaces unified by force.
 
 use crate::comm::{EnergyParams, LinkKind};
+use crate::graph::ChurnSchedule;
 use crate::solver::Backend;
 
 /// Every knob of one run (engine-agnostic) plus the sweep scheduler's
@@ -50,6 +51,15 @@ pub struct ExecutionConfig {
     /// closed neighborhood committed.  `false` forces the from-scratch
     /// recompute every phase — bit-identical by construction.
     pub incremental: bool,
+    /// Deterministic worker join/leave schedule (`None` = static graph;
+    /// the legacy code path, bit-identical to before churn existed).
+    pub churn: Option<ChurnSchedule>,
+    /// Bounded-staleness round policy: rounds proceed without broadcasts
+    /// that straggle past the slot, and a neighbor copy that has been
+    /// stale for this many consecutive rounds is force-refreshed
+    /// (censor gate bypassed, reliable delivery).  `None` = the legacy
+    /// fully synchronous barrier.
+    pub staleness_bound: Option<u64>,
 }
 
 impl Default for ExecutionConfig {
@@ -65,6 +75,8 @@ impl Default for ExecutionConfig {
             link: None,
             energy: EnergyParams::default(),
             incremental: true,
+            churn: None,
+            staleness_bound: None,
         }
     }
 }
@@ -128,6 +140,16 @@ impl ExecutionConfig {
         self
     }
 
+    pub fn with_churn(mut self, churn: Option<ChurnSchedule>) -> Self {
+        self.churn = churn;
+        self
+    }
+
+    pub fn with_staleness_bound(mut self, tau: Option<u64>) -> Self {
+        self.staleness_bound = tau;
+        self
+    }
+
     /// Validate cross-field constraints shared by all consumers.
     pub fn validate(&self) -> Result<(), String> {
         if !(0.0..=1.0).contains(&self.drop_prob) {
@@ -138,6 +160,16 @@ impl ExecutionConfig {
         }
         if self.backend == Backend::Pjrt && self.threads > 1 {
             return Err("the PJRT backend shares one client across workers; use threads = 1".into());
+        }
+        if self.backend == Backend::Pjrt && self.churn.as_ref().is_some_and(|c| !c.is_empty()) {
+            return Err(
+                "churn re-derives solver degrees, which the PJRT backend's staged \
+                 device constants cannot do; use the native backend"
+                    .into(),
+            );
+        }
+        if self.staleness_bound == Some(0) {
+            return Err("staleness_bound must be >= 1 (use none for the synchronous barrier)".into());
         }
         Ok(())
     }
@@ -172,5 +204,27 @@ mod tests {
             .with_backend(Backend::Pjrt)
             .with_threads(2);
         assert!(pjrt.validate().is_err());
+    }
+
+    #[test]
+    fn validate_rejects_bad_dynamic_knobs() {
+        assert!(ExecutionConfig::default()
+            .with_staleness_bound(Some(0))
+            .validate()
+            .is_err());
+        assert!(ExecutionConfig::default()
+            .with_staleness_bound(Some(1))
+            .validate()
+            .is_ok());
+        let churn = ChurnSchedule::parse("3:leave:1 6:join:1").unwrap();
+        assert!(ExecutionConfig::default()
+            .with_churn(Some(churn.clone()))
+            .validate()
+            .is_ok());
+        assert!(ExecutionConfig::default()
+            .with_backend(Backend::Pjrt)
+            .with_churn(Some(churn))
+            .validate()
+            .is_err());
     }
 }

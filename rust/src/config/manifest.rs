@@ -36,6 +36,10 @@
 //! n0_w_per_hz = 1e-6
 //! slot_s = 1e-3
 //!
+//! [churn]                     # dynamic-network policy (omit = static graph)
+//! schedule = "10:leave:3 40:join:3"   # ChurnSchedule::parse grammar
+//! staleness_bound = 4         # force a refresh after this many silent rounds
+//!
 //! [output]
 //! dir = "runs"            # run-directory base (omit = no run dir)
 //! checkpoint_every = 50   # iterations; 0 = only the final checkpoint
@@ -44,6 +48,7 @@
 use super::exec::ExecutionConfig;
 use super::{parse_toml, ExperimentConfig, TopologySpec};
 use crate::comm::LinkKind;
+use crate::graph::ChurnSchedule;
 use crate::solver::Backend;
 use std::fmt::Write as _;
 use std::path::PathBuf;
@@ -145,6 +150,12 @@ impl ExperimentManifest {
         if let Some(v) = doc.get_f64("energy", "slot_s")? {
             m.exec.energy.slot_s = v;
         }
+        if let Some(s) = doc.get_str("churn", "schedule")? {
+            m.exec.churn = Some(ChurnSchedule::parse(&s)?);
+        }
+        if let Some(v) = doc.get_usize("churn", "staleness_bound")? {
+            m.exec.staleness_bound = Some(v as u64);
+        }
         if let Some(s) = doc.get_str("output", "dir")? {
             m.output.dir = Some(PathBuf::from(s));
         }
@@ -226,6 +237,15 @@ impl ExperimentManifest {
         let _ = writeln!(s, "total_bandwidth_hz = {}", x.energy.total_bandwidth_hz);
         let _ = writeln!(s, "n0_w_per_hz = {}", x.energy.n0_w_per_hz);
         let _ = writeln!(s, "slot_s = {}", x.energy.slot_s);
+        if x.churn.is_some() || x.staleness_bound.is_some() {
+            let _ = writeln!(s, "\n[churn]");
+            if let Some(c) = &x.churn {
+                let _ = writeln!(s, "schedule = \"{}\"", c.label());
+            }
+            if let Some(t) = x.staleness_bound {
+                let _ = writeln!(s, "staleness_bound = {t}");
+            }
+        }
         let _ = writeln!(s, "\n[output]");
         if let Some(dir) = &self.output.dir {
             let _ = writeln!(s, "dir = \"{}\"", dir.display());
@@ -293,6 +313,11 @@ mod tests {
                 m.exec.incremental = case % 2 == 0;
                 m.exec.link = *link;
                 m.exec.drop_prob = if link.is_none() { 0.125 } else { 0.0 };
+                if case % 3 == 0 {
+                    m.exec.churn =
+                        Some(ChurnSchedule::parse("4:leave:2 9:join:2").unwrap());
+                    m.exec.staleness_bound = Some(1 + case % 6);
+                }
                 m.exec.energy.slot_s = 1e-3 * (1.0 + case as f64 / 7.0);
                 m.output.dir = if case % 2 == 0 { Some(PathBuf::from("runs")) } else { None };
                 m.output.checkpoint_every = case * 10;
@@ -347,6 +372,38 @@ mod tests {
         assert_eq!(m.exec.link, Some(LinkKind::Latency { base_s: 0.002, per_bit_s: 1e-9 }));
         assert_eq!(m.output.dir.as_deref(), Some(std::path::Path::new("runs/smoke")));
         assert_eq!(m.output.checkpoint_every, 25);
+    }
+
+    #[test]
+    fn churn_section_parses_and_round_trips() {
+        let m = ExperimentManifest::from_toml(
+            r#"
+            [churn]
+            schedule = "10:leave:3 40:join:3"
+            staleness_bound = 4
+            "#,
+        )
+        .unwrap();
+        let schedule = m.exec.churn.as_ref().expect("schedule parsed");
+        assert_eq!(schedule.label(), "10:leave:3 40:join:3");
+        assert_eq!(m.exec.staleness_bound, Some(4));
+        assert_round_trips(&m);
+        // each key works without the other
+        let m = ExperimentManifest::from_toml("[churn]\nstaleness_bound = 2").unwrap();
+        assert!(m.exec.churn.is_none());
+        assert_eq!(m.exec.staleness_bound, Some(2));
+        assert_round_trips(&m);
+    }
+
+    #[test]
+    fn rejects_bad_churn_section() {
+        assert!(ExperimentManifest::from_toml("[churn]\nschedule = \"10:evaporate:3\"")
+            .unwrap_err()
+            .contains("kind must be leave|join"));
+        // staleness_bound = 0 is rejected by ExecutionConfig::validate
+        assert!(ExperimentManifest::from_toml("[churn]\nstaleness_bound = 0")
+            .unwrap_err()
+            .contains("staleness_bound"));
     }
 
     #[test]

@@ -39,14 +39,14 @@ pub mod message;
 pub mod worker;
 
 use crate::algs::{AlgSpec, Problem, Schedule};
-use crate::comm::{CommLog, EnergyModel, EnergyParams, LinkKind, Medium};
+use crate::comm::{CommLog, EnergyModel, EnergyParams, LinkKind, Medium, SlotOutcome};
 use crate::config::ExecutionConfig;
-use crate::graph::Topology;
+use crate::graph::{ChurnEvent, ChurnKind, Topology};
 use crate::io::checkpoint::{MediumState, RunState};
 use crate::io::{EventRecorder, EventSink, PersistableEngine};
 use crate::metrics::{Trace, TracePoint};
 use crate::parallel::{resolve_threads, SyncPtr, WorkerPool};
-use crate::protocol::{build_cores, ProtocolConfig};
+use crate::protocol::{apply_churn_event, build_cores, replay_churn_structure, ProtocolConfig};
 use crate::solver::Backend;
 use worker::ShardWorker;
 
@@ -102,6 +102,8 @@ impl From<CoordinatorOptions> for ExecutionConfig {
             link: o.link,
             energy: o.energy,
             incremental: o.incremental,
+            churn: None,
+            staleness_bound: None,
         }
     }
 }
@@ -118,6 +120,21 @@ pub struct Coordinator {
     iter: u64,
     /// cached phase groups (constant over a run; see `algs::Run`)
     phase_groups: Vec<Vec<usize>>,
+    /// `phase_groups` filtered to active, degree >= 1 workers (equal to
+    /// `phase_groups` on a static graph)
+    live_groups: Vec<Vec<usize>>,
+    /// per-worker membership under churn (leader-owned; all `true` on a
+    /// static graph)
+    active: Vec<bool>,
+    /// consecutive off-the-air rounds per worker (bounded-staleness
+    /// policy; all zero without one)
+    stale: Vec<u64>,
+    /// per-worker force-refresh flags, computed leader-side before each
+    /// phase dispatch (the executors must not read the mutable staleness
+    /// bookkeeping)
+    force_scratch: Vec<bool>,
+    /// churn events applied so far (restore-time sanity)
+    churn_applied: usize,
     /// persistent per-worker loss scratch for `record`
     losses: Vec<f64>,
     /// optional streaming event log (io::events); emits at the same
@@ -161,16 +178,24 @@ impl Coordinator {
         let medium = Medium::new(
             energy,
             opts.energy.slot_s,
-            LinkKind::resolve(opts.link, opts.drop_prob).build(rng),
+            LinkKind::resolve(opts.link, opts.drop_prob).build(rng, n),
         );
         let trace = Trace::new(&spec.name, &problem.dataset_name);
+        if let Some(w) = opts.churn.as_ref().and_then(|c| c.max_worker()) {
+            assert!(w < n, "churn schedule names worker {w}, but the topology has {n} workers");
+        }
         let phase_groups = match spec.schedule {
             Schedule::Alternating => vec![topo.heads(), topo.tails()],
             Schedule::Jacobian => vec![(0..n).collect()],
         };
         Coordinator {
             losses: vec![0.0; n],
+            live_groups: phase_groups.clone(),
             phase_groups,
+            active: vec![true; n],
+            stale: vec![0; n],
+            force_scratch: vec![false; n],
+            churn_applied: 0,
             shards,
             pool,
             medium,
@@ -210,10 +235,28 @@ impl Coordinator {
         self.pool.threads()
     }
 
+    /// Bottleneck broadcast distance of worker `i` over its **active**
+    /// neighbors (see [`crate::algs::Run`]'s twin — same fold, so the
+    /// engines agree bit-for-bit).
+    fn active_neighbor_distance(&self, i: usize) -> f64 {
+        self.topo
+            .neighbors(i)
+            .iter()
+            .filter(|&&m| self.active[m])
+            .map(|&m| self.topo.distance(i, m))
+            .fold(0.0, f64::max)
+    }
+
     /// Run one phase over `group`: shard the primal + candidate work over
     /// the executor, then resolve the broadcasts event-by-event in
     /// deterministic worker order.
     fn run_phase(&mut self, group: &[usize], k_plus_1: u64) {
+        let tau = self.opts.staleness_bound;
+        // leader-side: derive force-refresh flags from the staleness
+        // bookkeeping before dispatch (the executors read them immutably)
+        for &i in group {
+            self.force_scratch[i] = tau.is_some_and(|t| self.stale[i] >= t);
+        }
         // 1. parallel: primal solve + quantize/censor candidate.  Raw
         // base pointer for disjoint per-index &mut access (group ids are
         // strictly increasing, so no two jobs alias; the pool barrier
@@ -221,48 +264,120 @@ impl Coordinator {
         debug_assert!(group.windows(2).all(|w| w[0] < w[1]), "group must be increasing");
         {
             let shards = SyncPtr(self.shards.as_mut_ptr());
+            let force = &self.force_scratch;
             self.pool.for_each(group.len(), |j| {
                 // SAFETY: distinct indices => disjoint elements; see above
                 let s = unsafe { &mut *shards.0.add(group[j]) };
-                s.phase(k_plus_1);
+                s.phase(k_plus_1, force[group[j]]);
             });
         }
         // 2. sequential resolution on the leader: charge the medium, let
         // the link decide, deliver wire bytes to the neighbors' cores
         for &i in group {
+            if let Some(rec) = &mut self.recorder {
+                rec.note_attempt();
+            }
+            let force = self.force_scratch[i];
             let Some(bits) = self.shards[i].core.pending_bits() else {
+                if tau.is_some() {
+                    self.stale[i] += 1;
+                }
                 continue;
             };
-            let dist = self.topo.max_neighbor_distance(i);
-            if self.medium.transmit(i, self.iter, bits, dist) {
+            let dist = self.active_neighbor_distance(i);
+            let landed = match tau {
+                None => self.medium.transmit(i, self.iter, bits, dist),
+                Some(_) => matches!(
+                    self.medium.transmit_bounded(i, self.iter, bits, dist, force),
+                    SlotOutcome::Landed
+                ),
+            };
+            if landed {
                 self.shards[i].commit_and_encode();
                 let wire = self.shards[i].take_wire();
                 for &m in self.topo.neighbors(i) {
-                    self.shards[m].deliver(i, &wire);
+                    if self.active[m] {
+                        self.shards[m].deliver(i, &wire);
+                    }
                 }
                 self.shards[i].put_wire(wire);
+                if force {
+                    let staleness = self.stale[i];
+                    if let Some(rec) = &mut self.recorder {
+                        rec.stale_refresh(self.iter, i, staleness);
+                    }
+                }
+                self.stale[i] = 0;
             } else {
                 self.shards[i].core.abort_pending();
+                if tau.is_some() {
+                    self.stale[i] += 1;
+                }
             }
         }
         self.medium.end_slot();
     }
 
+    /// Apply the churn events scheduled for the start of this iteration
+    /// (leader-side; shared transition logic with the simulator) and
+    /// rebuild the live phase groups.
+    fn apply_churn_events(&mut self) {
+        let events: Vec<ChurnEvent> = match &self.opts.churn {
+            Some(c) => c.events_at(self.iter).to_vec(),
+            None => return,
+        };
+        if events.is_empty() {
+            return;
+        }
+        for e in &events {
+            apply_churn_event(&mut self.shards, &mut self.active, &self.topo, e);
+            self.stale[e.worker] = 0;
+            self.churn_applied += 1;
+            if let Some(rec) = &mut self.recorder {
+                match e.kind {
+                    ChurnKind::Leave => rec.worker_leave(self.iter, e.worker),
+                    ChurnKind::Join => rec.worker_join(self.iter, e.worker),
+                }
+            }
+        }
+        self.refresh_live_groups();
+    }
+
+    /// Rebuild `live_groups` from the membership flags (see
+    /// [`crate::algs::Run`]'s twin).
+    fn refresh_live_groups(&mut self) {
+        self.live_groups = self
+            .phase_groups
+            .iter()
+            .map(|g| {
+                g.iter()
+                    .copied()
+                    .filter(|&i| self.active[i] && !self.shards[i].core.neighbors().is_empty())
+                    .collect()
+            })
+            .collect();
+    }
+
     /// Execute one full iteration.
     pub fn step(&mut self) {
+        self.apply_churn_events();
         let k_plus_1 = self.iter + 1;
-        let groups = std::mem::take(&mut self.phase_groups);
+        let groups = std::mem::take(&mut self.live_groups);
         for group in &groups {
             self.run_phase(group, k_plus_1);
         }
-        self.phase_groups = groups;
-        // dual update, sharded over the executor (disjoint per-worker)
+        self.live_groups = groups;
+        // dual update, sharded over the executor (disjoint per-worker;
+        // detached and stranded degree-0 workers stay frozen)
         {
             let shards = SyncPtr(self.shards.as_mut_ptr());
+            let active = &self.active;
             self.pool.for_each(self.shards.len(), |i| {
                 // SAFETY: each index claimed by exactly one job
                 let s = unsafe { &mut *shards.0.add(i) };
-                s.core.dual_update();
+                if active[i] && !s.core.neighbors().is_empty() {
+                    s.core.dual_update();
+                }
             });
         }
         self.iter += 1;
@@ -287,7 +402,11 @@ impl Coordinator {
         }
         let obj: f64 = self.losses.iter().sum();
         let mut consensus: f64 = 0.0;
+        // consensus over live edges only (matches the simulator)
         for &(h, t) in self.topo.edges() {
+            if !(self.active[h] && self.active[t]) {
+                continue;
+            }
             let diff: f64 = self.shards[h]
                 .core
                 .theta()
@@ -359,17 +478,45 @@ impl Coordinator {
                 link: self.medium.link_state(),
             },
             trace: self.trace.clone(),
+            active: self.active.clone(),
+            stale: self.stale.clone(),
         }
     }
 
     /// Overwrite this engine's state from a checkpoint (same problem /
-    /// topology / spec the checkpoint came from).
+    /// topology / spec the checkpoint came from; under churn the engine
+    /// must be freshly spawned — see [`crate::algs::Run::restore_state`]).
     pub fn restore_state(&mut self, s: &RunState) {
         assert_eq!(
             s.cores.len(),
             self.shards.len(),
             "checkpoint is for a different worker count"
         );
+        assert_eq!(s.active.len(), self.shards.len(), "checkpoint dynamic section size");
+        assert_eq!(s.stale.len(), self.shards.len(), "checkpoint dynamic section size");
+        if let Some(churn) = self.opts.churn.clone() {
+            if !churn.is_empty() {
+                assert_eq!(
+                    self.churn_applied, 0,
+                    "restore with churn requires a freshly spawned coordinator"
+                );
+                replay_churn_structure(
+                    &mut self.shards,
+                    &mut self.active,
+                    &self.topo,
+                    &churn,
+                    s.iteration,
+                );
+                self.churn_applied =
+                    churn.events().iter().filter(|e| e.at < s.iteration).count();
+                self.refresh_live_groups();
+            }
+        }
+        assert_eq!(
+            self.active, s.active,
+            "checkpoint membership does not match the configured churn schedule"
+        );
+        self.stale.copy_from_slice(&s.stale);
         for (shard, cs) in self.shards.iter_mut().zip(&s.cores) {
             shard.core.import_state(cs);
         }
@@ -490,6 +637,35 @@ mod tests {
         let coord2 =
             Coordinator::spawn(p, topo, AlgSpec::ggadmm(), CoordinatorOptions::default());
         drop(coord2);
+    }
+
+    #[test]
+    fn churned_coordinator_converges_and_streams_events() {
+        let topo = Topology::random_bipartite(8, 0.5, 7);
+        let ds = synthetic::linear_dataset(96, 4, 7);
+        let p = Problem::new(&ds, &topo, 1.0, 0.0, 7);
+        let churn = crate::graph::ChurnSchedule::parse("5:leave:2 15:join:2").unwrap();
+        let mut coord = Coordinator::spawn(
+            p,
+            topo,
+            AlgSpec::c_ggadmm(0.3, 0.85),
+            ExecutionConfig::default()
+                .with_churn(Some(churn))
+                .with_staleness_bound(Some(4)),
+        );
+        let sink = crate::io::MemorySink::new();
+        coord.start_event_log(Box::new(sink.clone()));
+        for _ in 0..250 {
+            coord.step();
+        }
+        assert!(
+            coord.trace().last_gap() < 1e-4,
+            "gap={:.3e}",
+            coord.trace().last_gap()
+        );
+        let lines = sink.lines().join("\n");
+        assert!(lines.contains(r#""event":"worker_leave""#), "{lines}");
+        assert!(lines.contains(r#""event":"worker_join""#), "{lines}");
     }
 
     #[test]

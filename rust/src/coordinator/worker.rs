@@ -33,12 +33,14 @@ impl ShardWorker {
 
     /// One phase turn, run on an executor thread: primal update, then
     /// build + gate the broadcast candidate for censoring iteration
-    /// `k_plus_1`.  The transmit decision is left pending in the core for
-    /// the leader to resolve (the erasure draw must happen in
-    /// deterministic worker order on the leader).
-    pub fn phase(&mut self, k_plus_1: u64) {
+    /// `k_plus_1` (`force` bypasses the censor gate — the leader sets it
+    /// from its staleness bookkeeping before dispatch).  The transmit
+    /// decision is left pending in the core for the leader to resolve
+    /// (the erasure draw must happen in deterministic worker order on
+    /// the leader).
+    pub fn phase(&mut self, k_plus_1: u64, force: bool) {
         self.core.primal_update();
-        self.core.prepare_broadcast(k_plus_1);
+        self.core.prepare_broadcast_gated(k_plus_1, force);
     }
 
     /// Leader-side: the medium delivered this worker's broadcast — commit
@@ -75,5 +77,21 @@ impl ShardWorker {
                 "malformed broadcast from worker {from}"
             );
         });
+    }
+}
+
+// The shared churn helpers (`crate::protocol::apply_churn_event`,
+// `replay_churn_structure`) operate on any fleet that can expose its
+// `WorkerCore`s — the simulator's `Vec<WorkerCore>` or this engine's
+// `Vec<ShardWorker>`.
+impl AsRef<WorkerCore> for ShardWorker {
+    fn as_ref(&self) -> &WorkerCore {
+        &self.core
+    }
+}
+
+impl AsMut<WorkerCore> for ShardWorker {
+    fn as_mut(&mut self) -> &mut WorkerCore {
+        &mut self.core
     }
 }

@@ -11,12 +11,14 @@
 //! whole matrix saturates the machine and stays bit-deterministic.
 
 use super::{run_jobs, summarize, ExecOptions, SweepJob};
-use crate::algs::{AlgSpec, Problem, Schedule};
+use crate::algs::{AlgSpec, Problem, Run, Schedule};
+use crate::comm::LinkKind;
 use crate::config::{DatasetId, Task, TopologySpec};
 use crate::data;
-use crate::graph::{gen, spectral};
+use crate::graph::{gen, spectral, ChurnSchedule};
 use crate::io::Table;
 use crate::metrics::Trace;
+use std::fmt::Write as _;
 
 /// Full setup of a matrix sweep.
 #[derive(Clone, Debug)]
@@ -169,6 +171,232 @@ pub fn properties_table(
     Ok(t)
 }
 
+/// The (churn × straggler × topology × algorithm) robustness matrix.
+///
+/// Every cell re-runs the same problem under a generated worker-churn
+/// schedule ([`ChurnSchedule::generate`]) and, optionally, a rotating
+/// straggler subset ([`LinkKind::Straggler`]), with the bounded-staleness
+/// round policy keeping censored workers from starving.  The output is a
+/// degradation surface: final gap and cost-to-target per perturbation
+/// level, serialized by [`churn_matrix_csv`].
+#[derive(Clone, Debug)]
+pub struct ChurnMatrixSpec {
+    pub dataset: DatasetId,
+    pub workers: usize,
+    pub families: Vec<TopologySpec>,
+    pub algs: Vec<AlgSpec>,
+    /// Fraction of workers that get one leave→rejoin cycle (0 = static;
+    /// see [`ChurnSchedule::generate`]).
+    pub churn_rates: Vec<f64>,
+    /// Fraction of workers in the rotating straggler subset (0 = none).
+    pub straggler_fracs: Vec<f64>,
+    /// Bounded-staleness refresh threshold applied to every cell.
+    pub staleness_bound: Option<u64>,
+    pub rho: f64,
+    pub mu0: f64,
+    pub iters: u64,
+    pub seed: u64,
+    pub target_gap: f64,
+}
+
+/// The acceptance grid: {chain, torus, smallworld} × {GADMM, CQ-GGADMM}
+/// under increasing churn, with and without stragglers.
+pub fn default_churn_matrix(
+    dataset: DatasetId,
+    workers: usize,
+    iters: u64,
+    seed: u64,
+) -> ChurnMatrixSpec {
+    let (rho, mu0) = match dataset {
+        DatasetId::SynthLinear => (30.0, 0.0),
+        DatasetId::BodyFat => (5.0, 0.0),
+        DatasetId::SynthLogistic | DatasetId::Derm => (0.1, 1e-2),
+    };
+    let linear = dataset.task() == Task::Linear;
+    let (tau0, xi) = if linear { (0.1, 0.8) } else { (0.3, 0.9) };
+    ChurnMatrixSpec {
+        dataset,
+        workers,
+        families: vec![
+            TopologySpec::Chain,
+            TopologySpec::Grid { torus: true },
+            TopologySpec::SmallWorld { k: 4, beta: 0.1 },
+        ],
+        algs: vec![AlgSpec::gadmm_chain(), AlgSpec::cq_ggadmm(tau0, xi, 0.995, 2)],
+        churn_rates: vec![0.0, 0.5, 1.0],
+        straggler_fracs: vec![0.0, 0.25],
+        staleness_bound: Some(4),
+        rho,
+        mu0,
+        iters,
+        seed,
+        target_gap: 1e-4,
+    }
+}
+
+/// One cell of the churn matrix: a full trace plus its coordinates.
+pub struct ChurnCell {
+    pub family: String,
+    pub alg: String,
+    pub churn_rate: f64,
+    pub straggler_frac: f64,
+    pub trace: Trace,
+}
+
+/// Run the robustness matrix as one flattened job list on the sweep
+/// pool.  Unlike [`run_matrix`], every cell carries its *own*
+/// [`ExecOptions`] (churn schedule, straggler link, staleness bound), so
+/// the jobs are built eagerly and only the engine runs are pooled.
+/// Deterministic for a fixed spec regardless of thread count.
+pub fn run_churn_matrix(
+    spec: &ChurnMatrixSpec,
+    exec: &ExecOptions,
+) -> Result<Vec<ChurnCell>, String> {
+    let ds = data::load(spec.dataset, spec.seed);
+    let built: Vec<gen::BuiltTopology> = spec
+        .families
+        .iter()
+        .map(|f| gen::build(f, spec.workers, spec.seed))
+        .collect::<Result<_, _>>()?;
+    let problems: Vec<Problem> = built
+        .iter()
+        .map(|b| Problem::new(&ds, &b.topology, spec.rho, spec.mu0, spec.seed))
+        .collect();
+    let sweep = match (exec.backend, exec.sweep_threads) {
+        (crate::solver::Backend::Pjrt, _) => {
+            return Err("the churn matrix re-derives solver degrees; use the native backend".into())
+        }
+        (_, 0) if exec.threads > 1 => 1,
+        (_, 0) => crate::parallel::default_threads(),
+        (_, t) => t,
+    };
+    struct Cell<'a> {
+        problem: &'a Problem,
+        topo: &'a crate::graph::Topology,
+        family: String,
+        alg: &'a AlgSpec,
+        rate: f64,
+        frac: f64,
+        opts: ExecOptions,
+    }
+    let mut cells = Vec::new();
+    for ((fam, b), problem) in spec.families.iter().zip(&built).zip(&problems) {
+        for alg in &spec.algs {
+            for &rate in &spec.churn_rates {
+                for &frac in &spec.straggler_fracs {
+                    let churn = (rate > 0.0)
+                        .then(|| ChurnSchedule::generate(spec.workers, spec.iters, rate, spec.seed));
+                    let link = (frac > 0.0).then(|| LinkKind::Straggler {
+                        frac,
+                        rotate_every: 25,
+                        base_s: 2e-3,
+                        alpha: 1.5,
+                    });
+                    let opts = exec
+                        .clone()
+                        .with_seed(spec.seed)
+                        .with_sweep_threads(1)
+                        .with_churn(churn)
+                        .with_link(link.or(exec.link))
+                        .with_staleness_bound(spec.staleness_bound);
+                    cells.push(Cell {
+                        problem,
+                        topo: &b.topology,
+                        family: fam.label(),
+                        alg,
+                        rate,
+                        frac,
+                        opts,
+                    });
+                }
+            }
+        }
+    }
+    let sweep = sweep.min(cells.len()).max(1);
+    let run_threads = if sweep > 1 { 1 } else { exec.threads };
+    let mut pool = (sweep > 1).then(|| crate::parallel::WorkerPool::new(sweep));
+    let traces = crate::parallel::map_maybe_pool(pool.as_mut(), cells.len(), |j| {
+        let c = &cells[j];
+        let opts = c.opts.clone().with_threads(run_threads);
+        let mut run = Run::new(c.problem.clone(), c.topo.clone(), c.alg.clone(), opts);
+        run.run(spec.iters)
+    });
+    Ok(cells
+        .into_iter()
+        .zip(traces)
+        .map(|(c, trace)| ChurnCell {
+            family: c.family,
+            alg: c.alg.name.clone(),
+            churn_rate: c.rate,
+            straggler_frac: c.frac,
+            trace,
+        })
+        .collect())
+}
+
+/// Serialize the degradation surface: one CSV row per cell, empty
+/// to-target fields when the cell never reached `target_gap`.
+pub fn churn_matrix_csv(cells: &[ChurnCell], target_gap: f64) -> String {
+    let mut s = String::from(
+        "family,algorithm,churn_rate,straggler_frac,final_gap,\
+         iters_to_target,rounds_to_target,mbits_to_target,energy_j_to_target\n",
+    );
+    for c in cells {
+        // family labels can carry commas (e.g. `smallworld:4,0.1`)
+        let family = if c.family.contains(',') {
+            format!("\"{}\"", c.family)
+        } else {
+            c.family.clone()
+        };
+        let _ = write!(
+            s,
+            "{},{},{},{},{:e}",
+            family, c.alg, c.churn_rate, c.straggler_frac,
+            c.trace.last_gap()
+        );
+        match c.trace.first_below(target_gap) {
+            Some(p) => {
+                let _ = writeln!(
+                    s,
+                    ",{},{},{},{:e}",
+                    p.iteration,
+                    p.cum_rounds,
+                    p.cum_bits as f64 / 1e6,
+                    p.cum_energy_j
+                );
+            }
+            None => s.push_str(",,,,\n"),
+        }
+    }
+    s
+}
+
+/// Per (family, algorithm) degradation summary of a churn-matrix run.
+pub fn churn_summary(cells: &[ChurnCell], target_gap: f64) -> Table {
+    let mut t = Table::new(&[
+        "family",
+        "algorithm",
+        "churn",
+        "stragglers",
+        "final gap",
+        &format!("iters to {target_gap:.0e}"),
+    ]);
+    for c in cells {
+        t.row(&[
+            c.family.clone(),
+            c.alg.clone(),
+            format!("{}", c.churn_rate),
+            format!("{}", c.straggler_frac),
+            format!("{:.2e}", c.trace.last_gap()),
+            match c.trace.first_below(target_gap) {
+                Some(p) => p.iteration.to_string(),
+                None => "—".into(),
+            },
+        ]);
+    }
+    t
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -216,6 +444,66 @@ mod tests {
         for (x, y) in ta.points.iter().zip(&tb.points) {
             assert_eq!(x.loss_gap.to_bits(), y.loss_gap.to_bits());
             assert_eq!(x.cum_bits, y.cum_bits);
+        }
+    }
+
+    #[test]
+    fn tiny_churn_matrix_degrades_gracefully() {
+        let mut spec = default_churn_matrix(DatasetId::SynthLinear, 6, 120, 17);
+        spec.families = vec![TopologySpec::Chain, TopologySpec::SmallWorld { k: 4, beta: 0.1 }];
+        spec.churn_rates = vec![0.0, 0.5];
+        spec.straggler_fracs = vec![0.0];
+        spec.target_gap = 1e-2;
+        let cells = run_churn_matrix(&spec, &ExecOptions::default()).unwrap();
+        // families × algs × rates × fracs
+        assert_eq!(cells.len(), 2 * 2 * 2);
+        for c in &cells {
+            assert!(
+                c.trace.last_gap().is_finite(),
+                "{} ({}) churn={} diverged",
+                c.alg,
+                c.family,
+                c.churn_rate
+            );
+        }
+        // the static chain GADMM baseline still converges
+        let base = cells
+            .iter()
+            .find(|c| c.family == "chain" && c.alg == "GADMM" && c.churn_rate == 0.0)
+            .unwrap();
+        assert!(base.trace.last_gap() < 1e-2, "{:.2e}", base.trace.last_gap());
+        let csv = churn_matrix_csv(&cells, spec.target_gap);
+        assert!(csv.starts_with("family,algorithm,churn_rate,straggler_frac"));
+        assert_eq!(csv.lines().count(), 1 + cells.len());
+        assert!(csv.contains("chain,GADMM,0,0,"), "{csv}");
+        // comma-bearing family labels are quoted so columns stay aligned
+        assert!(csv.contains("\"smallworld:4,0.1\",GADMM,"), "{csv}");
+        let table = churn_summary(&cells, spec.target_gap).render();
+        assert!(table.contains("CQ-GGADMM"), "{table}");
+    }
+
+    #[test]
+    fn churn_matrix_is_deterministic_across_sweep_layouts() {
+        let mut spec = default_churn_matrix(DatasetId::SynthLinear, 6, 60, 9);
+        spec.families = vec![TopologySpec::Grid { torus: true }];
+        spec.churn_rates = vec![0.5];
+        spec.straggler_fracs = vec![0.25];
+        let serial = ExecOptions::default().with_sweep_threads(1);
+        let pooled = ExecOptions::default().with_sweep_threads(2);
+        let a = run_churn_matrix(&spec, &serial).unwrap();
+        let b = run_churn_matrix(&spec, &pooled).unwrap();
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(
+                x.trace.last_gap().to_bits(),
+                y.trace.last_gap().to_bits(),
+                "{} ({})",
+                x.alg,
+                x.family
+            );
+            let (px, py) = (x.trace.points.last().unwrap(), y.trace.points.last().unwrap());
+            assert_eq!(px.cum_bits, py.cum_bits);
+            assert_eq!(px.cum_rounds, py.cum_rounds);
         }
     }
 

@@ -1,0 +1,240 @@
+//! Deterministic worker-churn schedules (dynamic networks).
+//!
+//! A [`ChurnSchedule`] is a sorted list of join/leave events applied by
+//! both engines at the **start** of the iteration they name: a leaving
+//! worker is detached from every surviving neighbor (and frozen in
+//! place), a rejoining worker warm-starts from the current
+//! group-consensus iterate and re-attaches its edges.  Schedules are
+//! plain data — explicitly constructed, parsed from the compact
+//! `<at>:<kind>:<worker>` syntax, or generated from a seed — so an
+//! identical schedule drives bit-identical runs on both engines and
+//! replays exactly across checkpoint/resume.
+
+use crate::util::rng::Pcg64;
+
+/// What happens to a worker at a scheduled iteration.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ChurnKind {
+    /// The worker departs: neighbors drop it, its state freezes.
+    Leave,
+    /// The worker returns: warm start + edge re-attachment.
+    Join,
+}
+
+impl ChurnKind {
+    pub fn label(self) -> &'static str {
+        match self {
+            ChurnKind::Leave => "leave",
+            ChurnKind::Join => "join",
+        }
+    }
+}
+
+/// One scheduled membership change.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ChurnEvent {
+    /// Iteration (0-based) at whose start the event applies.
+    pub at: u64,
+    pub worker: usize,
+    pub kind: ChurnKind,
+}
+
+/// A validated, sorted churn schedule.
+#[derive(Clone, Debug, PartialEq, Default)]
+pub struct ChurnSchedule {
+    /// Sorted by `(at, worker)`; per worker the kinds alternate starting
+    /// with [`ChurnKind::Leave`] (everyone starts present).
+    events: Vec<ChurnEvent>,
+}
+
+impl ChurnSchedule {
+    /// Build from explicit events (any order; sorted internally).
+    ///
+    /// Validation: at most one event per worker per iteration, and per
+    /// worker the kinds must alternate starting with a leave — every
+    /// worker is present at iteration 0, may only leave while present
+    /// and only join while absent.
+    pub fn try_new(mut events: Vec<ChurnEvent>) -> Result<ChurnSchedule, String> {
+        events.sort_by_key(|e| (e.at, e.worker));
+        for w in events.windows(2) {
+            if w[0].at == w[1].at && w[0].worker == w[1].worker {
+                return Err(format!(
+                    "worker {} has two churn events at iteration {}",
+                    w[0].worker, w[0].at
+                ));
+            }
+        }
+        let max_worker = events.iter().map(|e| e.worker).max().unwrap_or(0);
+        let mut present = vec![true; max_worker + 1];
+        for e in &events {
+            match e.kind {
+                ChurnKind::Leave if !present[e.worker] => {
+                    return Err(format!(
+                        "worker {} leaves at iteration {} while absent",
+                        e.worker, e.at
+                    ));
+                }
+                ChurnKind::Join if present[e.worker] => {
+                    return Err(format!(
+                        "worker {} joins at iteration {} while present",
+                        e.worker, e.at
+                    ));
+                }
+                _ => present[e.worker] = e.kind == ChurnKind::Join,
+            }
+        }
+        Ok(ChurnSchedule { events })
+    }
+
+    /// All events, sorted by `(at, worker)`.
+    pub fn events(&self) -> &[ChurnEvent] {
+        &self.events
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    /// Events applying at the start of iteration `at`, in worker order.
+    pub fn events_at(&self, at: u64) -> &[ChurnEvent] {
+        let lo = self.events.partition_point(|e| e.at < at);
+        let hi = self.events.partition_point(|e| e.at <= at);
+        &self.events[lo..hi]
+    }
+
+    /// Largest worker id named by the schedule (`None` when empty); the
+    /// engines check it against the topology size.
+    pub fn max_worker(&self) -> Option<usize> {
+        self.events.iter().map(|e| e.worker).max()
+    }
+
+    /// Seeded generator: `ceil(rate * n)` distinct workers each get one
+    /// leave + rejoin cycle inside `(0, iters)`.  Leaves land in the
+    /// first half of the run and every absence spans at least one
+    /// iteration, so the schedule exercises detach, absent rounds and
+    /// warm-started rejoin.  Pure in `(n, iters, rate, seed)`.
+    pub fn generate(n: usize, iters: u64, rate: f64, seed: u64) -> ChurnSchedule {
+        assert!(n >= 1);
+        assert!((0.0..=1.0).contains(&rate), "churn rate out of [0,1]");
+        if rate == 0.0 || iters < 3 {
+            return ChurnSchedule::default();
+        }
+        let k = ((rate * n as f64).ceil() as usize).min(n);
+        let mut rng = Pcg64::new(seed ^ 0xC4A2_0005);
+        let mut chosen = rng.sample_indices(n, k);
+        chosen.sort_unstable();
+        let mut events = Vec::with_capacity(2 * k);
+        for w in chosen {
+            // leave in [1, iters/2], rejoin in (leave, iters)
+            let leave = 1 + rng.below((iters / 2).max(1)) as u64;
+            let span = iters - leave - 1;
+            let join = leave + 1 + rng.below(span.max(1)) as u64;
+            debug_assert!(join < iters);
+            events.push(ChurnEvent { at: leave, worker: w, kind: ChurnKind::Leave });
+            events.push(ChurnEvent { at: join, worker: w, kind: ChurnKind::Join });
+        }
+        ChurnSchedule::try_new(events).expect("generated schedule must validate")
+    }
+
+    /// Parse the compact syntax: space-separated `<at>:<kind>:<worker>`
+    /// tokens, e.g. `"10:leave:5 20:join:5"`.  The empty string is the
+    /// empty schedule.
+    pub fn parse(s: &str) -> Result<ChurnSchedule, String> {
+        let mut events = Vec::new();
+        for tok in s.split_whitespace() {
+            let mut it = tok.split(':');
+            let (at, kind, worker) = match (it.next(), it.next(), it.next(), it.next()) {
+                (Some(a), Some(k), Some(w), None) => (a, k, w),
+                _ => {
+                    return Err(format!(
+                        "churn token '{tok}': expected <at>:<kind>:<worker>"
+                    ))
+                }
+            };
+            let at: u64 = at
+                .parse()
+                .map_err(|_| format!("churn token '{tok}': bad iteration '{at}'"))?;
+            let kind = match kind {
+                "leave" => ChurnKind::Leave,
+                "join" => ChurnKind::Join,
+                _ => {
+                    return Err(format!(
+                        "churn token '{tok}': kind must be leave|join"
+                    ))
+                }
+            };
+            let worker: usize = worker
+                .parse()
+                .map_err(|_| format!("churn token '{tok}': bad worker '{worker}'"))?;
+            events.push(ChurnEvent { at, worker, kind });
+        }
+        ChurnSchedule::try_new(events)
+    }
+
+    /// Canonical label; `ChurnSchedule::parse(s.label())` round-trips.
+    pub fn label(&self) -> String {
+        self.events
+            .iter()
+            .map(|e| format!("{}:{}:{}", e.at, e.kind.label(), e.worker))
+            .collect::<Vec<_>>()
+            .join(" ")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_label_round_trip() {
+        let s = ChurnSchedule::parse("10:leave:5 20:join:5 3:leave:1").unwrap();
+        assert_eq!(s.events().len(), 3);
+        // sorted by (at, worker)
+        assert_eq!(s.events()[0], ChurnEvent { at: 3, worker: 1, kind: ChurnKind::Leave });
+        assert_eq!(ChurnSchedule::parse(&s.label()).unwrap(), s);
+        assert_eq!(ChurnSchedule::parse("").unwrap(), ChurnSchedule::default());
+    }
+
+    #[test]
+    fn rejects_invalid_sequences() {
+        // join while present
+        assert!(ChurnSchedule::parse("5:join:0").is_err());
+        // double leave
+        assert!(ChurnSchedule::parse("5:leave:0 9:leave:0").is_err());
+        // two events for one worker at one iteration
+        assert!(ChurnSchedule::parse("5:leave:0 5:join:0").is_err());
+        // malformed tokens
+        assert!(ChurnSchedule::parse("5:leave").is_err());
+        assert!(ChurnSchedule::parse("5:vanish:0").is_err());
+        assert!(ChurnSchedule::parse("x:leave:0").is_err());
+        assert!(ChurnSchedule::parse("5:leave:0:9").is_err());
+    }
+
+    #[test]
+    fn events_at_slices_by_iteration() {
+        let s = ChurnSchedule::parse("2:leave:3 2:leave:7 4:join:3").unwrap();
+        assert_eq!(s.events_at(2).len(), 2);
+        assert_eq!(s.events_at(2)[0].worker, 3, "worker order within an iteration");
+        assert_eq!(s.events_at(3).len(), 0);
+        assert_eq!(s.events_at(4).len(), 1);
+        assert_eq!(s.max_worker(), Some(7));
+    }
+
+    #[test]
+    fn generate_is_deterministic_and_valid() {
+        let a = ChurnSchedule::generate(32, 40, 0.25, 9);
+        let b = ChurnSchedule::generate(32, 40, 0.25, 9);
+        assert_eq!(a, b);
+        assert_ne!(a, ChurnSchedule::generate(32, 40, 0.25, 10));
+        // ceil(0.25 * 32) = 8 workers, each with a leave + rejoin cycle
+        let leaves = a.events().iter().filter(|e| e.kind == ChurnKind::Leave).count();
+        let joins = a.events().iter().filter(|e| e.kind == ChurnKind::Join).count();
+        assert_eq!(leaves, 8);
+        assert_eq!(joins, 8);
+        for e in a.events() {
+            assert!(e.at >= 1 && e.at < 40);
+            assert!(e.worker < 32);
+        }
+        assert!(ChurnSchedule::generate(32, 40, 0.0, 9).is_empty());
+    }
+}

@@ -12,8 +12,11 @@
 //! through a bipartition pass that makes any connected graph a valid
 //! head/tail instance.
 
+pub mod churn;
 pub mod gen;
 pub mod spectral;
+
+pub use churn::{ChurnEvent, ChurnKind, ChurnSchedule};
 
 use crate::util::rng::Pcg64;
 

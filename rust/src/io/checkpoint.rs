@@ -7,9 +7,13 @@
 //!
 //! Layout: 8-byte magic `CQCKPT01`, `u32` format version, then
 //! [`RunState`] — iteration, per-worker [`CoreState`]s, medium totals +
-//! link-model state, and the trace accumulator.  Checkpoints are
-//! O(state), not O(history): the transmission log is folded into its
-//! running totals ([`crate::comm::CommLog::restore_totals`]).
+//! link-model state, the trace accumulator, and (since version 2) the
+//! dynamic-network section: per-worker membership (`active`) and
+//! staleness counters (`stale`).  Version-1 checkpoints still decode —
+//! they predate churn, so the dynamic section defaults to everyone
+//! present with zero staleness.  Checkpoints are O(state), not
+//! O(history): the transmission log is folded into its running totals
+//! ([`crate::comm::CommLog::restore_totals`]).
 //!
 //! Writes are atomic (temp file + rename) so a crash mid-checkpoint
 //! leaves the previous checkpoint intact.
@@ -21,7 +25,7 @@ use crate::quant::QuantizerState;
 use std::path::Path;
 
 const MAGIC: &[u8; 8] = b"CQCKPT01";
-const VERSION: u32 = 1;
+const VERSION: u32 = 2;
 
 /// Everything a resumed engine needs to continue bit-for-bit.
 #[derive(Clone, Debug, PartialEq)]
@@ -34,6 +38,13 @@ pub struct RunState {
     /// The trace accumulated so far (a resumed run appends to it, so the
     /// final trace equals an uninterrupted run's).
     pub trace: Trace,
+    /// Per-worker membership under churn (all `true` on a static graph
+    /// and in version-1 checkpoints).
+    pub active: Vec<bool>,
+    /// Per-worker consecutive-censored-round counters under the
+    /// bounded-staleness policy (all zero without one, and in version-1
+    /// checkpoints).
+    pub stale: Vec<u64>,
 }
 
 /// The medium's durable state: checkpointed totals + link-model RNG.
@@ -146,6 +157,16 @@ pub fn encode(state: &RunState) -> Vec<u8> {
         e.u64(p.cum_rounds);
         e.u64(p.cum_bits);
         e.f64(p.cum_energy_j);
+    }
+    // version-2 dynamic-network section (last, so a v1 decoder's
+    // trailing-bytes check would catch a version mismatch)
+    e.u64(state.active.len() as u64);
+    for &a in &state.active {
+        e.bool(a);
+    }
+    e.u64(state.stale.len() as u64);
+    for &s in &state.stale {
+        e.u64(s);
     }
     e.buf
 }
@@ -267,8 +288,8 @@ pub fn decode(bytes: &[u8]) -> Result<RunState, String> {
         return Err("not a checkpoint file (bad magic)".into());
     }
     let version = d.u32()?;
-    if version != VERSION {
-        return Err(format!("unsupported checkpoint version {version} (expected {VERSION})"));
+    if version == 0 || version > VERSION {
+        return Err(format!("unsupported checkpoint version {version} (expected 1..={VERSION})"));
     }
     let iteration = d.u64()?;
     let n = d.len("cores")?;
@@ -301,10 +322,26 @@ pub fn decode(bytes: &[u8]) -> Result<RunState, String> {
             cum_energy_j: d.f64()?,
         });
     }
+    let (active, stale) = if version >= 2 {
+        let na = d.len("active")?;
+        let mut active = Vec::with_capacity(na);
+        for _ in 0..na {
+            active.push(d.bool("active")?);
+        }
+        let ns = d.len("stale")?;
+        let mut stale = Vec::with_capacity(ns);
+        for _ in 0..ns {
+            stale.push(d.u64()?);
+        }
+        (active, stale)
+    } else {
+        // v1 predates dynamic networks: everyone present, nothing stale
+        (vec![true; n], vec![0u64; n])
+    };
     if d.pos != bytes.len() {
         return Err(format!("checkpoint corrupt: {} trailing bytes", bytes.len() - d.pos));
     }
-    Ok(RunState { iteration, cores, medium, trace })
+    Ok(RunState { iteration, cores, medium, trace, active, stale })
 }
 
 /// Write a checkpoint atomically: temp file in the same directory, then
@@ -381,6 +418,8 @@ mod tests {
                 link: LinkState::Rng { state: 42, inc: 99 },
             },
             trace,
+            active: vec![true, false],
+            stale: vec![3, 0],
         }
     }
 
@@ -406,6 +445,22 @@ mod tests {
         bytes[0] ^= 0xFF;
         bytes[8] = 99; // version
         assert!(decode(&bytes).unwrap_err().contains("version"));
+    }
+
+    #[test]
+    fn decodes_version_1_with_default_dynamic_section() {
+        let s = sample_state();
+        let mut bytes = encode(&s);
+        // strip the trailing dynamic section and stamp version 1: the
+        // section is (len + n bools) + (len + n u64s) at the very end
+        let n = s.cores.len();
+        bytes.truncate(bytes.len() - (8 + n) - (8 + 8 * n));
+        bytes[8..12].copy_from_slice(&1u32.to_le_bytes());
+        let decoded = decode(&bytes).expect("v1 checkpoint must decode");
+        assert_eq!(decoded.active, vec![true; n]);
+        assert_eq!(decoded.stale, vec![0u64; n]);
+        assert_eq!(decoded.cores, s.cores);
+        assert_eq!(decoded.medium, s.medium);
     }
 
     #[test]

@@ -14,10 +14,19 @@
 //!   `censored` (gate-suppressed attempts), and `worker_bits` (sparse
 //!   `[worker, bits]` pairs in ascending worker order).
 //! * `checkpoint` — `iteration`, `path`; a durable checkpoint landed.
+//! * `worker_leave` / `worker_join` (schema ≥ 2) — `iteration`,
+//!   `worker`; a churn event applied at the start of that iteration.
+//! * `stale_refresh` (schema ≥ 2) — `iteration`, `worker`, `staleness`;
+//!   the bounded-staleness policy force-refreshed a worker whose
+//!   broadcast had been censored or lost for `staleness` rounds.
 //!
-//! Cumulative fields restart from checkpointed totals on resume, so a
-//! resumed log concatenated after the original's prefix validates
-//! identically to an uninterrupted one.
+//! Schema history: v1 derived the `censored` count as
+//! `workers x interval - committed`, which over-counts when churned-out
+//! workers skip the gate entirely; v2 counts actual gate entries
+//! ([`EventRecorder::note_attempt`]) — identical to v1 on a static
+//! graph.  Cumulative fields restart from checkpointed totals on
+//! resume, so a resumed log concatenated after the original's prefix
+//! validates identically to an uninterrupted one.
 
 use super::Json;
 use crate::comm::CommLog;
@@ -27,7 +36,7 @@ use std::path::Path;
 use std::sync::{Arc, Mutex};
 
 /// Current event-schema version (the `schema` field of `run_start`).
-pub const EVENT_SCHEMA_VERSION: u64 = 1;
+pub const EVENT_SCHEMA_VERSION: u64 = 2;
 
 /// Where events go.  One line per event; implementations must keep lines
 /// tailable (flush per event or equivalent).
@@ -102,13 +111,17 @@ pub struct EventRecorder {
     /// Iteration of the last emitted record (= resume point's iteration
     /// after a restore).
     last_iter: u64,
-    /// Worker count (for the censored-attempt count).
+    /// Worker count (sizes the per-worker bit aggregates).
     workers: usize,
+    /// Broadcast-gate entries since the last record (engines call
+    /// [`EventRecorder::note_attempt`] once per gate entry; censored =
+    /// attempts - committed).
+    attempts: u64,
 }
 
 impl EventRecorder {
     pub fn new(sink: Box<dyn EventSink>, workers: usize) -> EventRecorder {
-        EventRecorder { sink, seen_tx: 0, last_iter: 0, workers }
+        EventRecorder { sink, seen_tx: 0, last_iter: 0, workers, attempts: 0 }
     }
 
     /// Rebase after a restore: interval accounting restarts at
@@ -117,6 +130,15 @@ impl EventRecorder {
     pub fn rebase(&mut self, iteration: u64) {
         self.seen_tx = 0;
         self.last_iter = iteration;
+        self.attempts = 0;
+    }
+
+    /// One broadcast-gate entry (called by the engines for every worker
+    /// that reaches the censor gate, committed or not).  On a static
+    /// graph this is `workers` per iteration — the v1 closed form;
+    /// under churn, absent and degree-0 workers never reach the gate.
+    pub fn note_attempt(&mut self) {
+        self.attempts += 1;
     }
 
     fn emit(&mut self, event: Json) {
@@ -153,9 +175,8 @@ impl EventRecorder {
         }
         let committed = fresh.len() as u64;
         self.seen_tx = log.transmissions.len();
-        // every worker gates one broadcast attempt per iteration, so the
-        // interval's censored count is the shortfall from n * iters
-        let attempts = self.workers as u64 * (p.iteration - self.last_iter);
+        // censored = gate entries that did not go on the air
+        let attempts = std::mem::take(&mut self.attempts);
         self.last_iter = p.iteration;
         let censored = attempts.saturating_sub(committed);
         let worker_bits = bits_by_worker
@@ -187,6 +208,35 @@ impl EventRecorder {
             ("path".into(), Json::Str(path.display().to_string())),
         ]));
     }
+
+    /// A churn event detached `worker` at the start of `iteration`.
+    pub fn worker_leave(&mut self, iteration: u64, worker: usize) {
+        self.membership("worker_leave", iteration, worker);
+    }
+
+    /// A churn event re-attached `worker` at the start of `iteration`.
+    pub fn worker_join(&mut self, iteration: u64, worker: usize) {
+        self.membership("worker_join", iteration, worker);
+    }
+
+    fn membership(&mut self, event: &str, iteration: u64, worker: usize) {
+        self.emit(Json::Obj(vec![
+            ("event".into(), Json::Str(event.into())),
+            ("iteration".into(), Json::Num(iteration as f64)),
+            ("worker".into(), Json::Num(worker as f64)),
+        ]));
+    }
+
+    /// The bounded-staleness policy force-refreshed `worker` during
+    /// `iteration` after `staleness` consecutive stale rounds.
+    pub fn stale_refresh(&mut self, iteration: u64, worker: usize, staleness: u64) {
+        self.emit(Json::Obj(vec![
+            ("event".into(), Json::Str("stale_refresh".into())),
+            ("iteration".into(), Json::Num(iteration as f64)),
+            ("worker".into(), Json::Num(worker as f64)),
+            ("staleness".into(), Json::Num(staleness as f64)),
+        ]));
+    }
 }
 
 #[cfg(test)]
@@ -214,6 +264,10 @@ mod tests {
         let sink = MemorySink::new();
         let mut rec = EventRecorder::new(Box::new(sink.clone()), 3);
         let mut log = CommLog::default();
+        // 3 workers x 2 iterations reach the gate, 3 go on the air
+        for _ in 0..6 {
+            rec.note_attempt();
+        }
         log.record(tx(0, 0, 100));
         log.record(tx(2, 0, 100));
         log.record(tx(0, 1, 100));
@@ -223,10 +277,12 @@ mod tests {
         let l = &lines[0];
         assert!(l.contains(r#""event":"record""#), "{l}");
         assert!(l.contains(r#""committed":3"#), "{l}");
-        // 3 workers x 2 iterations - 3 on the air = 3 censored
         assert!(l.contains(r#""censored":3"#), "{l}");
         assert!(l.contains(r#""worker_bits":[[0,200],[2,100]]"#), "{l}");
-        // the next record only sees fresh transmissions
+        // the next record only sees fresh attempts and transmissions
+        for _ in 0..3 {
+            rec.note_attempt();
+        }
         log.record(tx(1, 2, 40));
         rec.record(&point(3), &log, 0.6);
         let l2 = &sink.lines()[1];
@@ -241,11 +297,30 @@ mod tests {
         let mut rec = EventRecorder::new(Box::new(sink.clone()), 2);
         let mut log = CommLog::default();
         log.restore_totals(10, 1000, 1e-2);
+        rec.note_attempt(); // stale pre-restore attempt must be dropped
         rec.rebase(5);
+        rec.note_attempt();
+        rec.note_attempt();
         log.record(tx(0, 5, 64));
         rec.record(&point(6), &log, 1.0);
         let l = &sink.lines()[0];
         assert!(l.contains(r#""committed":1"#), "{l}");
         assert!(l.contains(r#""censored":1"#), "{l}");
+    }
+
+    #[test]
+    fn dynamic_network_events_render() {
+        let sink = MemorySink::new();
+        let mut rec = EventRecorder::new(Box::new(sink.clone()), 2);
+        rec.worker_leave(3, 1);
+        rec.worker_join(7, 1);
+        rec.stale_refresh(5, 0, 4);
+        let lines = sink.lines();
+        assert!(lines[0].contains(r#""event":"worker_leave""#), "{}", lines[0]);
+        assert!(lines[0].contains(r#""iteration":3"#), "{}", lines[0]);
+        assert!(lines[0].contains(r#""worker":1"#), "{}", lines[0]);
+        assert!(lines[1].contains(r#""event":"worker_join""#), "{}", lines[1]);
+        assert!(lines[2].contains(r#""event":"stale_refresh""#), "{}", lines[2]);
+        assert!(lines[2].contains(r#""staleness":4"#), "{}", lines[2]);
     }
 }

@@ -19,7 +19,7 @@ use cq_ggadmm::config::{DatasetId, ExperimentConfig, ExperimentManifest, Topolog
 use cq_ggadmm::coordinator::Coordinator;
 use cq_ggadmm::data;
 use cq_ggadmm::experiments::{self, matrix, ExecOptions};
-use cq_ggadmm::graph::{gen, spectral, Topology};
+use cq_ggadmm::graph::{gen, spectral, ChurnSchedule, Topology};
 use cq_ggadmm::io::{checkpoint, run_with_persistence, JsonlSink, RunDir};
 use cq_ggadmm::metrics::{save_traces, Trace};
 use cq_ggadmm::solver::Backend;
@@ -75,6 +75,8 @@ fn cli() -> Cli {
                 .opt("checkpoint-every", None, "checkpoint cadence in iterations (0 = final only)")
                 .opt("events", None, "stream JSONL events to this path (default: run dir)")
                 .opt("out", None, "write the trace CSV here")
+                .opt("churn", None, "worker-churn schedule: '<at>:<leave|join>:<worker> ...'")
+                .opt("staleness", None, "bounded-staleness refresh threshold (rounds)")
                 .opt("kernel-tier", None, "kernel tier: scalar|avx2|auto (default: env/detect)"),
         )
         .command(
@@ -96,6 +98,8 @@ fn cli() -> Cli {
                 .opt("resume", None, "resume from this run directory's checkpoint")
                 .opt("checkpoint-every", None, "checkpoint cadence in iterations (0 = final only)")
                 .opt("events", None, "stream JSONL events to this path (default: run dir)")
+                .opt("churn", None, "worker-churn schedule: '<at>:<leave|join>:<worker> ...'")
+                .opt("staleness", None, "bounded-staleness refresh threshold (rounds)")
                 .opt("kernel-tier", None, "kernel tier: scalar|avx2|auto (default: env/detect)"),
         )
         .command(
@@ -123,6 +127,31 @@ fn cli() -> Cli {
                 .opt("sweep-threads", Some("0"), "concurrent runs (0 = all cores)")
                 .opt("kernel-tier", None, "kernel tier: scalar|avx2|auto (default: env/detect)")
                 .switch("quiet", "suppress the summary tables"),
+        )
+        .command(
+            Command::new(
+                "churn-matrix",
+                "run the (churn x straggler x topology x algorithm) robustness matrix",
+            )
+            .opt("dataset", Some("synth-linear"), "dataset id")
+            .opt("workers", Some("24"), "number of workers")
+            .opt("iters", Some("300"), "iterations per cell")
+            .opt("seed", Some("1"), "random seed")
+            .opt(
+                "families",
+                None,
+                "whitespace-separated topology specs (default: chain torus smallworld:4,0.1)",
+            )
+            .opt("churn-rates", None, "comma-separated churned-worker fractions (default: 0,0.5,1)")
+            .opt("straggler-fracs", None, "comma-separated straggler fractions (default: 0,0.25)")
+            .opt("staleness", None, "bounded-staleness refresh threshold (default: 4)")
+            .opt("manifest", None, "layered TOML manifest (flags override)")
+            .opt("out", Some("results"), "output directory for the degradation CSV")
+            .opt("run-dir", None, "emit into a runs/<NNNN-slug>/ directory under this base")
+            .opt("threads", Some("1"), "intra-run solver threads")
+            .opt("sweep-threads", Some("0"), "concurrent runs (0 = all cores)")
+            .opt("kernel-tier", None, "kernel tier: scalar|avx2|auto (default: env/detect)")
+            .switch("quiet", "suppress the summary table"),
         )
         .command(
             Command::new("rates", "empirical vs Theorem-3 convergence rates across densities")
@@ -274,6 +303,12 @@ fn resolve_manifest(a: &Args) -> Result<ExperimentManifest, String> {
         if let Some(v) = a.get_f64("drop-prob")? {
             m.exec.drop_prob = v;
         }
+    }
+    if let Some(v) = a.get("churn") {
+        m.exec.churn = Some(ChurnSchedule::parse(v)?);
+    }
+    if let Some(v) = a.get_u64("staleness")? {
+        m.exec.staleness_bound = Some(v);
     }
     if let Some(v) = a.get("run-dir") {
         m.output.dir = Some(PathBuf::from(v));
@@ -620,6 +655,71 @@ fn cmd_matrix(a: &Args) -> Result<(), String> {
     Ok(())
 }
 
+fn cmd_churn_matrix(a: &Args) -> Result<(), String> {
+    let m = resolve_manifest(a)?;
+    let exec: ExecOptions = m.exec.clone();
+    let e = &m.experiment;
+    let quiet = a.has("quiet");
+    let run_dir = match &m.output.dir {
+        Some(base) => {
+            let dir = RunDir::create(base, "churn-matrix").map_err(|err| err.to_string())?;
+            dir.write_manifest(&m.to_toml()).map_err(|err| err.to_string())?;
+            Some(dir)
+        }
+        None => None,
+    };
+    let out = PathBuf::from(a.get_or("out", "results"));
+    let mut spec = matrix::default_churn_matrix(e.dataset, e.workers, e.iters as u64, e.seed);
+    if let Some(list) = a.get("families") {
+        let families: Result<Vec<TopologySpec>, String> =
+            list.split_whitespace().map(TopologySpec::parse).collect();
+        spec.families = families?;
+        if spec.families.is_empty() {
+            return Err("--families: no topology specs given".into());
+        }
+    }
+    let parse_fracs = |flag: &str| -> Result<Option<Vec<f64>>, String> {
+        match a.get(flag) {
+            None => Ok(None),
+            Some(list) => list
+                .split(',')
+                .map(|v| {
+                    v.trim()
+                        .parse::<f64>()
+                        .map_err(|_| format!("option --{flag}: expected a number, got '{v}'"))
+                })
+                .collect::<Result<Vec<f64>, String>>()
+                .map(Some),
+        }
+    };
+    if let Some(rates) = parse_fracs("churn-rates")? {
+        spec.churn_rates = rates;
+    }
+    if let Some(fracs) = parse_fracs("straggler-fracs")? {
+        spec.straggler_fracs = fracs;
+    }
+    if let Some(v) = a.get_u64("staleness")? {
+        spec.staleness_bound = Some(v);
+    }
+    let cells = matrix::run_churn_matrix(&spec, &exec)?;
+    if !quiet {
+        println!("{}", matrix::churn_summary(&cells, spec.target_gap).render());
+    }
+    let csv = matrix::churn_matrix_csv(&cells, spec.target_gap);
+    let path = match &run_dir {
+        Some(dir) => dir.artifact("churn_matrix.csv"),
+        None => out.join("churn_matrix.csv"),
+    };
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir).map_err(|err| err.to_string())?;
+    }
+    std::fs::write(&path, csv).map_err(|err| err.to_string())?;
+    if !quiet {
+        println!("\ndegradation surface -> {}", path.display());
+    }
+    Ok(())
+}
+
 fn cmd_rates(a: &Args) -> Result<(), String> {
     let m = resolve_manifest(a)?;
     let workers = m.experiment.workers;
@@ -715,6 +815,7 @@ fn main() -> ExitCode {
             println!("{}", experiments::table1().render());
         }),
         "matrix" => cmd_matrix(&args),
+        "churn-matrix" => cmd_churn_matrix(&args),
         "rates" => cmd_rates(&args),
         "sweep" => cmd_sweep(&args),
         "topo" => cmd_topo(&args),

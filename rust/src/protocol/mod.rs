@@ -36,7 +36,7 @@
 use crate::algs::{AlgSpec, Problem, Schedule};
 use crate::censor::{gate, CensorConfig, Gate};
 use crate::comm::full_precision_bits;
-use crate::graph::Topology;
+use crate::graph::{ChurnEvent, ChurnKind, ChurnSchedule, Topology};
 use crate::quant::{payload_bits, Quantizer, QuantizerState};
 use crate::solver::{Backend, LinearSolver, LogisticSolver, SubproblemSolver};
 use crate::util::axpy;
@@ -200,6 +200,16 @@ impl WorkerCore {
     /// must then resolve the attempt with [`WorkerCore::commit_pending`]
     /// (delivered) or [`WorkerCore::abort_pending`] (erasure).
     pub fn prepare_broadcast(&mut self, k_plus_1: u64) -> Option<u64> {
+        self.prepare_broadcast_gated(k_plus_1, false)
+    }
+
+    /// [`WorkerCore::prepare_broadcast`] with an optional staleness
+    /// override: `force = true` bypasses the censor gate (the bounded-
+    /// staleness policy's force-refresh once a neighbor's copy is τ
+    /// rounds stale).  The candidate pipeline — including the
+    /// quantizer's `(R, b)` advance and RNG draw — is identical either
+    /// way, so forcing changes only the gate decision, never the stream.
+    pub fn prepare_broadcast_gated(&mut self, k_plus_1: u64, force: bool) -> Option<u64> {
         debug_assert!(self.pending_bits.is_none(), "unresolved broadcast");
         let payload_bits = match &mut self.quantizer {
             Some(q) => {
@@ -225,6 +235,7 @@ impl WorkerCore {
             }
         };
         let decision = match (&self.censor, self.transmitted_once) {
+            _ if force => Gate::Transmit,
             // first broadcast always goes out (state init)
             (_, false) => Gate::Transmit,
             (None, _) => Gate::Transmit,
@@ -360,6 +371,73 @@ impl WorkerCore {
     /// guarantee as [`WorkerCore::neighbor_sum`].
     pub fn dual_delta(&self) -> &[f64] {
         &self.dual_delta
+    }
+
+    /// Solver degree corresponding to a graph degree (Jacobian-anchored
+    /// schedules carry the doubled DCADMM penalty; see [`build_cores`]).
+    fn solver_degree(&self, graph_degree: usize) -> usize {
+        if self.jacobian_anchor {
+            2 * graph_degree
+        } else {
+            graph_degree
+        }
+    }
+
+    /// Drop a departed neighbor (churn): remove its id and hat slot,
+    /// stale the incremental caches (the next primal/dual update rebuilds
+    /// them from scratch over the surviving neighbors — bit-identical to
+    /// a core constructed on the shrunken graph), and re-derive the
+    /// solver's degree-dependent terms.  A worker left at degree 0 keeps
+    /// its old solver untouched: the engines skip it entirely until a
+    /// neighbor (re)attaches.
+    pub fn detach_neighbor(&mut self, id: usize) {
+        let idx = match self.neighbors.binary_search(&id) {
+            Ok(idx) => idx,
+            Err(_) => panic!("worker {}: detach of non-neighbor {id}", self.id),
+        };
+        self.neighbors.remove(idx);
+        self.hat_nbrs.remove(idx);
+        self.nbr_stale = true;
+        self.dual_stale = true;
+        let deg = self.neighbors.len();
+        if deg >= 1 {
+            self.solver.set_degree(self.solver_degree(deg));
+        }
+    }
+
+    /// Attach a (re)joining neighbor (churn): insert its id in sorted
+    /// position with `hat` as the reconstruction slot (the joiner's
+    /// current `hat_self` — both sides agree on it by construction),
+    /// stale the caches, and re-derive the solver degree.
+    pub fn attach_neighbor(&mut self, id: usize, hat: &[f64]) {
+        assert_eq!(hat.len(), self.d);
+        let idx = match self.neighbors.binary_search(&id) {
+            Ok(_) => panic!("worker {}: attach of existing neighbor {id}", self.id),
+            Err(idx) => idx,
+        };
+        self.neighbors.insert(idx, id);
+        self.hat_nbrs.insert(idx, hat.to_vec());
+        self.nbr_stale = true;
+        self.dual_stale = true;
+        self.solver.set_degree(self.solver_degree(self.neighbors.len()));
+    }
+
+    /// Warm-start a rejoining worker from the group-consensus iterate
+    /// `warm`: the model, its own broadcast state and the dual all reset
+    /// (`alpha = 0` — the departed dual trajectory is meaningless on the
+    /// new graph), and the handoff counts as the state-initializing first
+    /// transmission, so the censor gate applies from the next round.  The
+    /// caller attaches neighbors separately (both directions).
+    pub fn rejoin_with(&mut self, warm: &[f64]) {
+        assert_eq!(warm.len(), self.d);
+        debug_assert!(self.pending_bits.is_none(), "rejoin with unresolved broadcast");
+        debug_assert!(self.neighbors.is_empty(), "rejoin before neighbors re-attach");
+        self.theta.copy_from_slice(warm);
+        self.hat_self.copy_from_slice(warm);
+        self.alpha.iter_mut().for_each(|v| *v = 0.0);
+        self.transmitted_once = true;
+        self.nbr_stale = true;
+        self.dual_stale = true;
     }
 
     /// Export the full durable state at an iteration boundary (after
@@ -548,6 +626,124 @@ impl Default for ProtocolConfig {
     }
 }
 
+/// Apply one churn event to the fleet.  Both engines call this with
+/// identical arguments at the start of the event's iteration, so the
+/// membership transitions — detach order, warm-start arithmetic,
+/// re-attachment order — cannot drift between them.  `C` is whatever
+/// the engine wraps its cores in (`WorkerCore` itself in the simulator,
+/// `ShardWorker` in the coordinator).
+///
+/// * Leave: the worker is detached from every current neighbor (both
+///   directions, ascending neighbor order) and its state freezes in
+///   place; `active[w]` flips off.
+/// * Join: the worker warm-starts from the mean `hat_self` of the
+///   active workers sharing its bipartite group (ascending worker
+///   order; its own frozen hat when the group is empty), then
+///   re-attaches every edge to an active topology neighbor.
+pub fn apply_churn_event<C>(cores: &mut [C], active: &mut [bool], topo: &Topology, e: &ChurnEvent)
+where
+    C: AsRef<WorkerCore> + AsMut<WorkerCore>,
+{
+    let w = e.worker;
+    assert!(w < cores.len(), "churn event names worker {w} of {}", cores.len());
+    match e.kind {
+        ChurnKind::Leave => {
+            assert!(active[w], "validated schedule: leave while present");
+            let nbrs: Vec<usize> = cores[w].as_ref().neighbors().to_vec();
+            for m in nbrs {
+                cores[m].as_mut().detach_neighbor(w);
+                cores[w].as_mut().detach_neighbor(m);
+            }
+            active[w] = false;
+        }
+        ChurnKind::Join => {
+            assert!(!active[w], "validated schedule: join while absent");
+            let d = cores[w].as_ref().hat_self().len();
+            let mut warm = vec![0.0; d];
+            let mut count = 0usize;
+            for (j, core) in cores.iter().enumerate() {
+                if j != w && active[j] && topo.group(j) == topo.group(w) {
+                    axpy(&mut warm, 1.0, core.as_ref().hat_self());
+                    count += 1;
+                }
+            }
+            if count > 0 {
+                let inv = 1.0 / count as f64;
+                warm.iter_mut().for_each(|v| *v *= inv);
+            } else {
+                warm.copy_from_slice(cores[w].as_ref().hat_self());
+            }
+            cores[w].as_mut().rejoin_with(&warm);
+            for &m in topo.neighbors(w) {
+                if active[m] {
+                    let hat_m = cores[m].as_ref().hat_self().to_vec();
+                    cores[w].as_mut().attach_neighbor(m, &hat_m);
+                    cores[m].as_mut().attach_neighbor(w, &warm);
+                }
+            }
+            active[w] = true;
+        }
+    }
+}
+
+/// Replay only the **structural** effect of every churn event strictly
+/// before `upto` — neighbor lists, solver degrees, membership flags —
+/// on a freshly built fleet, so a checkpoint taken mid-churn restores
+/// onto cores whose shapes match its [`CoreState`]s.  Values (hats,
+/// warm starts) are left as placeholders: the caller's `import_state`
+/// pass overwrites them, and `set_degree` is a pure function of the
+/// final degree, so the result is bit-identical to the live engine.
+pub fn replay_churn_structure<C>(
+    cores: &mut [C],
+    active: &mut [bool],
+    topo: &Topology,
+    schedule: &ChurnSchedule,
+    upto: u64,
+) where
+    C: AsRef<WorkerCore> + AsMut<WorkerCore>,
+{
+    let zeros = vec![0.0; cores.first().map_or(0, |c| c.as_ref().hat_self().len())];
+    for e in schedule.events() {
+        if e.at >= upto {
+            break;
+        }
+        let w = e.worker;
+        match e.kind {
+            ChurnKind::Leave => {
+                let nbrs: Vec<usize> = cores[w].as_ref().neighbors().to_vec();
+                for m in nbrs {
+                    cores[m].as_mut().detach_neighbor(w);
+                    cores[w].as_mut().detach_neighbor(m);
+                }
+                active[w] = false;
+            }
+            ChurnKind::Join => {
+                for &m in topo.neighbors(w) {
+                    if active[m] {
+                        cores[w].as_mut().attach_neighbor(m, &zeros);
+                        cores[m].as_mut().attach_neighbor(w, &zeros);
+                    }
+                }
+                active[w] = true;
+            }
+        }
+    }
+}
+
+// Reflexive impls so the simulator's bare `Vec<WorkerCore>` satisfies
+// the churn helpers' bounds (std has no blanket reflexive `AsRef`).
+impl AsRef<WorkerCore> for WorkerCore {
+    fn as_ref(&self) -> &WorkerCore {
+        self
+    }
+}
+
+impl AsMut<WorkerCore> for WorkerCore {
+    fn as_mut(&mut self) -> &mut WorkerCore {
+        self
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -617,6 +813,48 @@ mod tests {
         let mut cores = two_cores();
         let hat = vec![0.0; 3];
         cores[0].deliver(5, &hat);
+    }
+
+    #[test]
+    fn churn_leave_then_join_restores_edges_and_warm_starts() {
+        let topo = Topology::chain(4);
+        let ds = synthetic::linear_dataset(32, 3, 5);
+        let p = Problem::new(&ds, &topo, 1.0, 0.0, 5);
+        let (mut cores, _) =
+            build_cores(&p, &topo, &AlgSpec::ggadmm(), &ProtocolConfig::default(), None);
+        // give the fleet distinct hats so the warm start is observable
+        for c in cores.iter_mut() {
+            c.primal_update();
+            c.prepare_broadcast(1).expect("first broadcast");
+            c.commit_pending();
+        }
+        let mut active = vec![true; 4];
+        apply_churn_event(
+            &mut cores,
+            &mut active,
+            &topo,
+            &ChurnEvent { at: 1, worker: 1, kind: ChurnKind::Leave },
+        );
+        assert!(!active[1]);
+        assert!(cores[1].neighbors().is_empty());
+        assert_eq!(cores[0].neighbors(), &[] as &[usize]);
+        assert_eq!(cores[2].neighbors(), &[3]);
+        apply_churn_event(
+            &mut cores,
+            &mut active,
+            &topo,
+            &ChurnEvent { at: 5, worker: 1, kind: ChurnKind::Join },
+        );
+        assert!(active[1]);
+        assert_eq!(cores[1].neighbors(), &[0, 2]);
+        assert_eq!(cores[0].neighbors(), &[1]);
+        assert_eq!(cores[2].neighbors(), &[1, 3]);
+        // warm start = mean hat over the same bipartite group's active
+        // workers (chain groups alternate, so worker 1's peer is 3)
+        let expect: Vec<f64> = cores[3].hat_self().to_vec();
+        assert_eq!(cores[1].hat_self(), &expect[..]);
+        assert_eq!(cores[1].theta(), &expect[..]);
+        assert!(cores[1].alpha().iter().all(|&a| a == 0.0));
     }
 
     #[test]

@@ -270,6 +270,12 @@ impl SubproblemSolver for PjrtLinearSolver {
     fn d(&self) -> usize {
         self.d
     }
+
+    fn set_degree(&mut self, _degree: usize) {
+        // the degree is baked into the staged A^{-1} device constant;
+        // churn is rejected for the PJRT backend at config validation
+        unimplemented!("PJRT backend does not support churn (set_degree)");
+    }
 }
 
 /// Logistic PJRT solver: fixed-budget Newton+CG artifact per iteration
@@ -394,6 +400,12 @@ impl SubproblemSolver for PjrtLogisticSolver {
 
     fn d(&self) -> usize {
         self.d
+    }
+
+    fn set_degree(&mut self, _degree: usize) {
+        // rho * degree is a staged device constant; churn is rejected
+        // for the PJRT backend at config validation
+        unimplemented!("PJRT backend does not support churn (set_degree)");
     }
 }
 

@@ -94,6 +94,16 @@ impl SubproblemSolver for LinearSolver {
     fn d(&self) -> usize {
         self.xty.len()
     }
+
+    fn set_degree(&mut self, degree: usize) {
+        assert!(degree >= 1, "degree-0 workers are never solved");
+        // re-factor from the retained Gram matrix: a pure function of
+        // (xtx, rho, degree), so a solver mutated to `degree` is
+        // bit-identical to one constructed at `degree`
+        let a = self.xtx.clone().add_diag(self.rho * degree as f64);
+        self.chol = Cholesky::new(&a)
+            .expect("X^T X + rho d I must be SPD (rho > 0, degree >= 1)");
+    }
 }
 
 #[cfg(test)]
@@ -180,6 +190,25 @@ mod tests {
         for (a, b) in via_inv.iter().zip(&via_chol) {
             assert!((a - b).abs() < 1e-8);
         }
+    }
+
+    #[test]
+    fn set_degree_matches_from_scratch_bit_for_bit() {
+        check("set_degree == fresh construction", 30, |g| {
+            let d = g.usize_in(1, 12);
+            let s = g.usize_in(d, 40);
+            let (x, y) = random_shard(s, d, g.u64());
+            let rho = g.f64_in(0.1, 3.0);
+            let (d_old, d_new) = (g.usize_in(1, 6), g.usize_in(1, 6));
+            let mut mutated = LinearSolver::new(x.clone(), y.clone(), rho, d_old);
+            mutated.set_degree(d_new);
+            let mut fresh = LinearSolver::new(x, y, rho, d_new);
+            let alpha = g.normal_vec(d);
+            let nbr = g.normal_vec(d);
+            let a = mutated.update(&alpha, &nbr, &vec![0.0; d]);
+            let b = fresh.update(&alpha, &nbr, &vec![0.0; d]);
+            assert_eq!(a, b, "churn re-derivation must be bit-identical");
+        });
     }
 
     #[test]

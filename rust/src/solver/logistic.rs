@@ -308,6 +308,14 @@ impl SubproblemSolver for LogisticSolver {
     fn d(&self) -> usize {
         self.data.x.cols()
     }
+
+    fn set_degree(&mut self, degree: usize) {
+        assert!(degree >= 1, "degree-0 workers are never solved");
+        // rho_dn is the only degree-dependent term (gradient, Hessian
+        // diagonal and Armijo penalty all read it), so mutating it is
+        // bit-identical to constructing at `degree`
+        self.rho_dn = self.rho * degree as f64;
+    }
 }
 
 #[cfg(test)]
@@ -370,6 +378,27 @@ mod tests {
         for (a, b) in via_update.iter().zip(&theta) {
             assert!((a - b).abs() < 1e-12, "{a} vs {b}");
         }
+    }
+
+    #[test]
+    fn set_degree_matches_from_scratch_bit_for_bit() {
+        check("set_degree == fresh construction", 20, |g| {
+            let d = g.usize_in(1, 8);
+            let s = g.usize_in(4, 30);
+            let (x, y) = random_shard(s, d, g.u64());
+            let mu0 = g.f64_in(0.01, 0.5);
+            let rho = g.f64_in(0.1, 2.0);
+            let (d_old, d_new) = (g.usize_in(1, 5), g.usize_in(1, 5));
+            let mut mutated = LogisticSolver::new(x.clone(), y.clone(), mu0, rho, d_old);
+            mutated.set_degree(d_new);
+            let mut fresh = LogisticSolver::new(x, y, mu0, rho, d_new);
+            let alpha = g.normal_vec(d);
+            let nbr = g.normal_vec(d);
+            let warm = g.normal_vec(d);
+            let a = mutated.update(&alpha, &nbr, &warm);
+            let b = fresh.update(&alpha, &nbr, &warm);
+            assert_eq!(a, b, "churn re-derivation must be bit-identical");
+        });
     }
 
     #[test]

@@ -44,8 +44,10 @@ impl Backend {
     }
 }
 
-/// A worker's local subproblem solver (rho and the worker degree are baked
-/// in at construction; they are constant over a run).
+/// A worker's local subproblem solver.  `rho` and the worker degree are
+/// baked in at construction; under a static graph they are constant over
+/// a run, and churn (worker join/leave) re-derives the degree-dependent
+/// terms through [`SubproblemSolver::set_degree`].
 pub trait SubproblemSolver: Send {
     /// Solve the penalized subproblem in place given the worker's dual
     /// `alpha` and the sum of its neighbors' latest (reconstructed)
@@ -66,6 +68,16 @@ pub trait SubproblemSolver: Send {
 
     /// Model dimension.
     fn d(&self) -> usize;
+
+    /// Re-derive the degree-dependent penalty terms after a neighbor
+    /// change (churn).  `degree` is the *solver* degree — twice the graph
+    /// degree for Jacobian-anchored schedules, matching what the engine
+    /// passed at construction.  Must be a pure function of `degree`: the
+    /// result is bit-identical whether the solver was built at this
+    /// degree or mutated into it, which the checkpoint/resume and engine
+    /// equivalence tests rely on.  `degree >= 1` (degree-0 workers are
+    /// skipped by the engines, never solved).
+    fn set_degree(&mut self, degree: usize);
 }
 
 #[cfg(test)]

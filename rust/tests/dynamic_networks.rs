@@ -1,0 +1,287 @@
+//! Dynamic networks are a **bit-for-bit** cross-engine contract, exactly
+//! like the static graphs of tests/coordinator_equivalence.rs.
+//!
+//! Both engines (sequential simulator, sharded coordinator) consume ONE
+//! shared [`ExecutionConfig`] carrying the full fault schedule — a seeded
+//! worker-churn schedule, a straggler or time-varying link model, and the
+//! bounded-staleness round policy — and must produce identical traces
+//! (loss/consensus gaps, rounds, bits, energy), identical simulated
+//! clocks, identical membership/staleness bookkeeping, and identical
+//! durable checkpoint bytes across all six `AlgSpec` variants at N = 64
+//! workers on a 4-thread executor.
+//!
+//! Why this must hold: churn transitions go through the shared
+//! `protocol::apply_churn_event` (fate draws and warm-start averaging in
+//! ascending worker order on the leader), straggler membership and Pareto
+//! delays come off the same forked link RNG, and the bounded-staleness
+//! force flags are pure functions of the per-worker staleness counters —
+//! none of it depends on executor scheduling.
+
+use cq_ggadmm::algs::{AlgSpec, Problem, Run};
+use cq_ggadmm::comm::LinkKind;
+use cq_ggadmm::config::ExecutionConfig;
+use cq_ggadmm::coordinator::Coordinator;
+use cq_ggadmm::data::synthetic;
+use cq_ggadmm::graph::{ChurnSchedule, Topology};
+use cq_ggadmm::io::{checkpoint, MemorySink, PersistableEngine};
+use cq_ggadmm::metrics::Trace;
+
+/// N = 64 simulated workers on 4 executor threads (N ≫ K: scheduling
+/// must not perturb a single bit, even while workers come and go).
+const N: usize = 64;
+const THREADS: usize = 4;
+
+/// Pin the kernel tier for the whole test binary — engine equivalence is
+/// a per-tier contract (see tests/coordinator_equivalence.rs).
+fn pin_tier() {
+    let t = cq_ggadmm::linalg::kernel_tier();
+    cq_ggadmm::linalg::set_kernel_tier(t);
+}
+
+fn problem(linear: bool, topo: &Topology, seed: u64) -> Problem {
+    let n = topo.n();
+    if linear {
+        let ds = synthetic::linear_dataset(n * 10, 6, seed);
+        Problem::new(&ds, topo, 5.0, 0.0, seed)
+    } else {
+        let ds = synthetic::logistic_dataset(n * 10, 6, seed);
+        Problem::new(&ds, topo, 0.5, 0.05, seed)
+    }
+}
+
+/// The shared fault schedule: three workers leave early and rejoin
+/// mid-run, so the window covers detach, absent rounds, warm-started
+/// rejoin, and post-rejoin catch-up under the staleness bound.
+fn churn() -> ChurnSchedule {
+    ChurnSchedule::parse("3:leave:5 11:join:5 4:leave:20 13:join:20 6:leave:41 16:join:41")
+        .expect("static schedule parses")
+}
+
+/// A rotating straggler subset whose Pareto delays straddle the slot
+/// deadline — some transmissions land, some arrive late and abort.
+fn straggler_link() -> LinkKind {
+    LinkKind::Straggler { frac: 0.15, rotate_every: 7, base_s: 8e-4, alpha: 1.3 }
+}
+
+/// A bursty good/bad link whose phase is driven by the shared simulated
+/// clock — drops and extra latency come and go with the bad bursts.
+fn timevarying_link() -> LinkKind {
+    LinkKind::TimeVarying {
+        period_s: 0.02,
+        bad_frac: 0.3,
+        p_good: 0.05,
+        p_bad: 0.6,
+        bad_latency_s: 5e-4,
+    }
+}
+
+fn assert_traces_bit_identical(sim: &Trace, coord: &Trace, what: &str) {
+    assert_eq!(sim.points.len(), coord.points.len(), "{what}: trace length");
+    for (a, b) in sim.points.iter().zip(&coord.points) {
+        let k = a.iteration;
+        assert_eq!(a.iteration, b.iteration, "{what} iter {k}");
+        assert_eq!(a.cum_rounds, b.cum_rounds, "{what} iter {k}: rounds");
+        assert_eq!(a.cum_bits, b.cum_bits, "{what} iter {k}: bits");
+        assert_eq!(
+            a.loss_gap.to_bits(),
+            b.loss_gap.to_bits(),
+            "{what} iter {k}: loss gap {:.17e} vs {:.17e}",
+            a.loss_gap,
+            b.loss_gap
+        );
+        assert_eq!(
+            a.consensus_gap.to_bits(),
+            b.consensus_gap.to_bits(),
+            "{what} iter {k}: consensus gap"
+        );
+        assert_eq!(a.cum_energy_j.to_bits(), b.cum_energy_j.to_bits(), "{what} iter {k}: energy");
+    }
+}
+
+/// Drive both engines step-by-step from ONE shared `ExecutionConfig`
+/// under the full fault schedule and compare everything durable:
+/// the trace, the simulated clock, the membership/staleness vectors,
+/// and the complete serialized checkpoint bytes.
+fn lock_dynamic(spec: AlgSpec, topo: Topology, linear: bool, link: LinkKind, seed: u64, iters: u64) {
+    pin_tier();
+    let p = problem(linear, &topo, seed);
+    let what = format!(
+        "{} / {} / {}",
+        spec.name,
+        if linear { "linear" } else { "logistic" },
+        link.label()
+    );
+    let exec = ExecutionConfig::default()
+        .with_seed(seed)
+        .with_threads(THREADS)
+        .with_churn(Some(churn()))
+        .with_staleness_bound(Some(3))
+        .with_link(Some(link));
+    let mut sim = Run::new(p.clone(), topo.clone(), spec.clone(), exec.clone());
+    let mut coord = Coordinator::spawn(p, topo, spec, exec);
+    for _ in 0..iters {
+        sim.step();
+        coord.step();
+    }
+    assert_traces_bit_identical(sim.trace(), coord.trace(), &what);
+    let (ss, sc) = (sim.snapshot_state(), coord.snapshot_state());
+    assert_eq!(
+        ss.medium.sim_time_s.to_bits(),
+        sc.medium.sim_time_s.to_bits(),
+        "{what}: simulated clock"
+    );
+    assert_eq!(ss.active, sc.active, "{what}: membership");
+    assert_eq!(ss.stale, sc.stale, "{what}: staleness counters");
+    // the strongest form: the engines' durable states serialize to the
+    // same bytes (cores, quantizer/link RNG positions, totals, trace)
+    assert_eq!(
+        checkpoint::encode(&ss),
+        checkpoint::encode(&sc),
+        "{what}: checkpoint bytes diverge"
+    );
+}
+
+fn bipartite(seed: u64) -> Topology {
+    Topology::random_bipartite(N, 0.2, seed)
+}
+
+// ---- all six variants under churn + stragglers ----------------------
+
+#[test]
+fn ggadmm_faulted_bit_identical() {
+    lock_dynamic(AlgSpec::ggadmm(), bipartite(111), true, straggler_link(), 111, 22);
+}
+
+#[test]
+fn c_ggadmm_faulted_bit_identical() {
+    // censor thresholds keep decaying while a worker is absent; both
+    // engines must age them identically through the churn window
+    lock_dynamic(AlgSpec::c_ggadmm(0.2, 0.85), bipartite(112), true, straggler_link(), 112, 25);
+}
+
+#[test]
+fn q_ggadmm_faulted_bit_identical() {
+    // forced staleness refreshes advance the quantizer exactly like
+    // voluntary broadcasts — the forked RNG streams must stay aligned
+    lock_dynamic(AlgSpec::q_ggadmm(0.995, 2), bipartite(113), true, straggler_link(), 113, 25);
+}
+
+#[test]
+fn cq_ggadmm_faulted_bit_identical() {
+    lock_dynamic(
+        AlgSpec::cq_ggadmm(0.2, 0.85, 0.995, 2),
+        bipartite(114),
+        true,
+        straggler_link(),
+        114,
+        25,
+    );
+}
+
+#[test]
+fn c_admm_faulted_bit_identical() {
+    lock_dynamic(AlgSpec::c_admm(0.1, 0.9), bipartite(115), true, straggler_link(), 115, 25);
+}
+
+#[test]
+fn gadmm_chain_faulted_bit_identical() {
+    // chain + churn covers the degree-0 freeze: worker 41's lone
+    // neighbors detach and reattach without perturbing the clock
+    lock_dynamic(AlgSpec::gadmm_chain(), Topology::chain(N), true, straggler_link(), 116, 25);
+}
+
+// ---- all six variants under churn + time-varying drops --------------
+
+#[test]
+fn ggadmm_timevarying_bit_identical() {
+    lock_dynamic(AlgSpec::ggadmm(), bipartite(121), true, timevarying_link(), 121, 22);
+}
+
+#[test]
+fn c_ggadmm_timevarying_bit_identical() {
+    lock_dynamic(AlgSpec::c_ggadmm(0.2, 0.85), bipartite(122), true, timevarying_link(), 122, 25);
+}
+
+#[test]
+fn q_ggadmm_timevarying_bit_identical() {
+    lock_dynamic(AlgSpec::q_ggadmm(0.995, 2), bipartite(123), true, timevarying_link(), 123, 25);
+}
+
+#[test]
+fn cq_ggadmm_timevarying_bit_identical() {
+    lock_dynamic(
+        AlgSpec::cq_ggadmm(0.2, 0.85, 0.995, 2),
+        bipartite(124),
+        true,
+        timevarying_link(),
+        124,
+        25,
+    );
+}
+
+#[test]
+fn c_admm_timevarying_bit_identical() {
+    lock_dynamic(AlgSpec::c_admm(0.1, 0.9), bipartite(125), true, timevarying_link(), 125, 25);
+}
+
+#[test]
+fn gadmm_chain_timevarying_bit_identical() {
+    lock_dynamic(AlgSpec::gadmm_chain(), Topology::chain(N), true, timevarying_link(), 126, 25);
+}
+
+// ---- logistic task ---------------------------------------------------
+
+#[test]
+fn cq_ggadmm_logistic_faulted_bit_identical() {
+    lock_dynamic(
+        AlgSpec::cq_ggadmm(0.2, 0.85, 0.995, 2),
+        bipartite(131),
+        false,
+        straggler_link(),
+        131,
+        10,
+    );
+}
+
+// ---- the event streams of both engines match line-for-line ----------
+
+#[test]
+fn faulted_event_streams_are_identical() {
+    pin_tier();
+    let topo = bipartite(141);
+    let p = problem(true, &topo, 141);
+    let exec = ExecutionConfig::default()
+        .with_seed(141)
+        .with_threads(THREADS)
+        .with_churn(Some(churn()))
+        .with_staleness_bound(Some(3))
+        .with_link(Some(straggler_link()));
+    let spec = AlgSpec::cq_ggadmm(0.2, 0.85, 0.995, 2);
+    let (ms, mc) = (MemorySink::new(), MemorySink::new());
+    let mut sim = Run::new(p.clone(), topo.clone(), spec.clone(), exec.clone());
+    sim.start_event_log(Box::new(ms.clone()));
+    let mut coord = Coordinator::spawn(p, topo, spec, exec);
+    coord.start_event_log(Box::new(mc.clone()));
+    for _ in 0..20 {
+        sim.step();
+        coord.step();
+    }
+    let (ls, lc) = (ms.lines(), mc.lines());
+    assert_eq!(ls, lc, "event streams diverge");
+    // the schedule's transitions all appear, in order, exactly once
+    for (ev, iter, w) in [
+        ("worker_leave", 3, 5),
+        ("worker_leave", 4, 20),
+        ("worker_leave", 6, 41),
+        ("worker_join", 11, 5),
+        ("worker_join", 13, 20),
+        ("worker_join", 16, 41),
+    ] {
+        let needle = format!("\"event\":\"{ev}\",\"iteration\":{iter},\"worker\":{w}");
+        assert_eq!(
+            ls.iter().filter(|l| l.contains(&needle)).count(),
+            1,
+            "missing or duplicated {needle}"
+        );
+    }
+}

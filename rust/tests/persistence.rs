@@ -25,10 +25,11 @@
 //! asserted, is covered by tests/simd_kernels.rs.
 
 use cq_ggadmm::algs::{AlgSpec, Problem, Run};
+use cq_ggadmm::comm::{LinkKind, LinkState};
 use cq_ggadmm::config::{ExecutionConfig, ExperimentManifest};
 use cq_ggadmm::coordinator::Coordinator;
 use cq_ggadmm::data::synthetic;
-use cq_ggadmm::graph::Topology;
+use cq_ggadmm::graph::{ChurnSchedule, Topology};
 use cq_ggadmm::io::checkpoint::{self, RunState};
 use cq_ggadmm::io::{run_with_persistence, JsonlSink, PersistableEngine, RunDir};
 use std::path::PathBuf;
@@ -202,6 +203,107 @@ fn checkpoint_resumes_across_engines() {
     };
     kill_and_resume(run(), coord(), run(), "coord checkpoint -> run");
     kill_and_resume(run(), run(), coord(), "run checkpoint -> coord");
+}
+
+// ---- dynamic networks: churn, stragglers, staleness ------------------
+
+/// The kill-and-resume fault schedule: workers 3 and 7 leave before the
+/// checkpoint at K1 = 9 and rejoin after it, so the checkpoint captures
+/// a *shrunk* graph and the resumed engine must replay the structural
+/// transitions before importing values.
+fn churned_exec(seed: u64, drop_prob: f64) -> ExecutionConfig {
+    let churn = ChurnSchedule::parse("4:leave:3 14:join:3 6:leave:7 16:join:7").unwrap();
+    exec(seed, drop_prob)
+        .with_churn(Some(churn))
+        .with_staleness_bound(Some(3))
+}
+
+#[test]
+fn mid_churn_kill_and_resume_bit_identically() {
+    // both engines, checkpointed while two workers are detached
+    let topo = Topology::random_bipartite(N, 0.3, 72);
+    let p = problem(true, &topo, 72);
+    let e = churned_exec(72, 0.2);
+    let spec = AlgSpec::cq_ggadmm(0.2, 0.85, 0.995, 2);
+    let run = || Run::new(p.clone(), topo.clone(), spec.clone(), e.clone());
+    let coord = || {
+        Coordinator::spawn(p.clone(), topo.clone(), spec.clone(), e.clone().with_threads(3))
+    };
+    kill_and_resume(run(), run(), run(), "run mid-churn");
+    kill_and_resume(coord(), coord(), coord(), "coord mid-churn");
+    // ... and across the engine boundary, over the same churn seam
+    kill_and_resume(run(), coord(), run(), "coord mid-churn ckpt -> run");
+    kill_and_resume(run(), run(), coord(), "run mid-churn ckpt -> coord");
+}
+
+#[test]
+fn straggler_link_resumes_bit_identically() {
+    // the straggler link holds durable RNG state (Pareto delay draws);
+    // its position crosses the checkpoint like the erasure stream's
+    let topo = Topology::random_bipartite(N, 0.3, 73);
+    let p = problem(true, &topo, 73);
+    let e = churned_exec(73, 0.0).with_link(Some(LinkKind::Straggler {
+        frac: 0.25,
+        rotate_every: 5,
+        base_s: 8e-4,
+        alpha: 1.3,
+    }));
+    let spec = AlgSpec::c_ggadmm(0.2, 0.85);
+    let run = || Run::new(p.clone(), topo.clone(), spec.clone(), e.clone());
+    kill_and_resume(run(), run(), run(), "run straggler");
+}
+
+#[test]
+fn timevarying_link_resumes_bit_identically() {
+    let topo = Topology::random_bipartite(N, 0.3, 74);
+    let p = problem(true, &topo, 74);
+    let e = churned_exec(74, 0.0).with_link(Some(LinkKind::TimeVarying {
+        period_s: 0.02,
+        bad_frac: 0.3,
+        p_good: 0.05,
+        p_bad: 0.6,
+        bad_latency_s: 5e-4,
+    }));
+    let spec = AlgSpec::cq_ggadmm(0.2, 0.85, 0.995, 2);
+    let run = || Run::new(p.clone(), topo.clone(), spec.clone(), e.clone());
+    kill_and_resume(run(), run(), run(), "run timevarying");
+}
+
+#[test]
+fn checkpoint_bytes_round_trip_with_dynamic_link_states() {
+    pin_tier();
+    // encode ∘ decode is the identity on the bytes for every new link
+    // model's durable state, mid-churn (shrunk graph, nonzero staleness)
+    for (tag, link) in [
+        ("straggler", LinkKind::Straggler { frac: 0.25, rotate_every: 5, base_s: 8e-4, alpha: 1.3 }),
+        (
+            "timevarying",
+            LinkKind::TimeVarying {
+                period_s: 0.02,
+                bad_frac: 0.3,
+                p_good: 0.05,
+                p_bad: 0.6,
+                bad_latency_s: 5e-4,
+            },
+        ),
+    ] {
+        let topo = Topology::random_bipartite(N, 0.3, 75);
+        let p = problem(true, &topo, 75);
+        let e = churned_exec(75, 0.0).with_link(Some(link));
+        let mut run = Run::new(p, topo, AlgSpec::cq_ggadmm(0.2, 0.85, 0.995, 2), e);
+        for _ in 0..K1 {
+            run.step();
+        }
+        let s = run.snapshot_state();
+        assert!(
+            matches!(s.medium.link, LinkState::Rng { .. }),
+            "{tag}: link state must be durable RNG position"
+        );
+        assert!(!s.active.iter().all(|&a| a), "{tag}: checkpoint must capture absent workers");
+        let bytes = checkpoint::encode(&s);
+        let back = checkpoint::decode(&bytes).unwrap();
+        assert_eq!(checkpoint::encode(&back), bytes, "{tag}: re-encode changed the bytes");
+    }
 }
 
 // ---- the run-directory driver and the event stream ------------------

@@ -1,22 +1,30 @@
 #!/usr/bin/env python3
 """Validate a run's JSONL event stream (see rust/src/io/events.rs).
 
-Schema v1, one JSON object per line, discriminated by "event":
+One JSON object per line, discriminated by "event".  Schema v1 and v2
+streams both validate (the run_start's "schema" field selects the rules):
 
-* run_start  -- schema, algorithm, dataset, workers, d, seed; must be
-                the first line of the stream.
-* record     -- iteration, loss_gap, consensus_gap, cum_rounds,
-                cum_bits, cum_energy_j, sim_time_s, committed, censored,
-                worker_bits (sparse [worker, bits] pairs, ascending).
-* checkpoint -- iteration, path.
+* run_start     -- schema, algorithm, dataset, workers, d, seed; must be
+                   the first line of the stream.
+* record        -- iteration, loss_gap, consensus_gap, cum_rounds,
+                   cum_bits, cum_energy_j, sim_time_s, committed,
+                   censored, worker_bits ([worker, bits] pairs, ascending).
+* checkpoint    -- iteration, path.
+* worker_leave  -- iteration, worker        (v2: churn detached a worker)
+* worker_join   -- iteration, worker        (v2: churn re-attached one)
+* stale_refresh -- iteration, worker, staleness  (v2: bounded-staleness
+                   policy force-refreshed a heavily censored worker)
 
 Checks: every line parses, the stream starts with exactly one
 run_start, record iterations strictly increase, cumulative counters
-never decrease, interval accounting conserves (committed + censored
-attempts = workers x interval; interval bits = sum of worker_bits),
-and worker ids stay within range.  A resumed (appended-to) log must
-validate identically to an uninterrupted one — that invariant is the
-point of checkpointed cumulative totals.
+never decrease, interval accounting conserves, and worker ids stay
+within range.  Conservation is schema-dependent: v1 (static graphs)
+requires committed + censored == workers x interval exactly; v2 counts
+censoring per gate *attempt*, and workers absent under churn attempt
+nothing, so committed + censored <= workers x interval.  The dynamic
+event kinds are v2-only — in a v1 stream they are violations.  A
+resumed (appended-to) log must validate identically to an uninterrupted
+one — that invariant is the point of checkpointed cumulative totals.
 
 Usage: tail_events.py EVENTS.jsonl [EVENTS.jsonl ...]
 Exit 0 and a summary per file on success; exit 1 on the first violation.
@@ -26,9 +34,11 @@ Stdlib only.
 import json
 import sys
 
-SCHEMA_VERSION = 1
+SCHEMA_VERSIONS = (1, 2)
 
 RUN_START_KEYS = {"event", "schema", "algorithm", "dataset", "workers", "d", "seed"}
+MEMBERSHIP_KEYS = {"event", "iteration", "worker"}
+STALE_REFRESH_KEYS = {"event", "iteration", "worker", "staleness"}
 RECORD_KEYS = {
     "event",
     "iteration",
@@ -60,9 +70,17 @@ def check_keys(obj, required, lineno):
 
 def validate(path):
     workers = None
+    schema = None
     last_iter = 0
     prev = None  # previous record, for monotonicity and conservation
-    counts = {"run_start": 0, "record": 0, "checkpoint": 0}
+    counts = {
+        "run_start": 0,
+        "record": 0,
+        "checkpoint": 0,
+        "worker_leave": 0,
+        "worker_join": 0,
+        "stale_refresh": 0,
+    }
     with open(path, encoding="utf-8") as fh:
         for lineno, line in enumerate(fh, 1):
             line = line.strip()
@@ -81,10 +99,11 @@ def validate(path):
                 check_keys(obj, RUN_START_KEYS, lineno)
                 if lineno != 1:
                     raise Violation(f"line {lineno}: duplicate run_start (resume must append)")
-                if obj["schema"] != SCHEMA_VERSION:
+                if obj["schema"] not in SCHEMA_VERSIONS:
                     raise Violation(
-                        f"line {lineno}: schema {obj['schema']} != {SCHEMA_VERSION}"
+                        f"line {lineno}: schema {obj['schema']} not in {SCHEMA_VERSIONS}"
                     )
+                schema = obj["schema"]
                 if not (isinstance(obj["workers"], int) and obj["workers"] > 0):
                     raise Violation(f"line {lineno}: bad workers {obj['workers']!r}")
                 workers = obj["workers"]
@@ -107,11 +126,23 @@ def validate(path):
                         raise Violation(f"line {lineno}: non-positive bits for worker {w}")
                     last_w = w
                     bits_sum += b
-                attempts = workers * (it - last_iter)
-                if obj["committed"] + obj["censored"] != attempts:
+                slots = workers * (it - last_iter)
+                total = obj["committed"] + obj["censored"]
+                if schema == 1:
+                    # static graph: every worker reaches the gate each
+                    # iteration, so the interval conserves exactly
+                    if total != slots:
+                        raise Violation(
+                            f"line {lineno}: committed {obj['committed']} + censored "
+                            f"{obj['censored']} != {slots} attempts"
+                        )
+                elif total > slots:
+                    # v2 counts per-attempt: workers absent under churn
+                    # attempt nothing, so the interval can undershoot but
+                    # never exceed the slot budget
                     raise Violation(
                         f"line {lineno}: committed {obj['committed']} + censored "
-                        f"{obj['censored']} != {attempts} attempts"
+                        f"{obj['censored']} > {slots} slots"
                     )
                 if prev is not None:
                     for key in ("cum_rounds", "cum_bits", "cum_energy_j", "sim_time_s"):
@@ -138,6 +169,23 @@ def validate(path):
                     )
                 if not obj["path"]:
                     raise Violation(f"line {lineno}: empty checkpoint path")
+            elif kind in ("worker_leave", "worker_join", "stale_refresh"):
+                if schema == 1:
+                    raise Violation(
+                        f"line {lineno}: {kind} is a schema-2 event in a v1 stream"
+                    )
+                keys = STALE_REFRESH_KEYS if kind == "stale_refresh" else MEMBERSHIP_KEYS
+                check_keys(obj, keys, lineno)
+                w = obj["worker"]
+                if not (0 <= w < workers):
+                    raise Violation(f"line {lineno}: worker {w} out of range")
+                if obj["iteration"] < last_iter:
+                    raise Violation(
+                        f"line {lineno}: {kind} at {obj['iteration']} behind "
+                        f"record {last_iter}"
+                    )
+                if kind == "stale_refresh" and obj["staleness"] < 1:
+                    raise Violation(f"line {lineno}: stale_refresh staleness < 1")
             else:
                 raise Violation(f"line {lineno}: unknown event {kind!r}")
             counts[kind] += 1
@@ -161,9 +209,15 @@ def main(argv):
         except OSError as e:
             print(f"{path}: {e}", file=sys.stderr)
             return 1
+        dynamic = ""
+        if counts["worker_leave"] or counts["worker_join"] or counts["stale_refresh"]:
+            dynamic = (
+                f", {counts['worker_leave']} leaves / {counts['worker_join']} joins"
+                f" / {counts['stale_refresh']} stale refreshes"
+            )
         print(
             f"{path}: OK — {counts['record']} records to iteration {last_iter}, "
-            f"{counts['checkpoint']} checkpoints"
+            f"{counts['checkpoint']} checkpoints{dynamic}"
         )
     return 0
 
