@@ -19,6 +19,9 @@
 //! * **coordinator**: the sharded-executor coordinator (M workers on a
 //!   fixed-size pool) vs a faithful copy of the seed thread-per-worker
 //!   engine at N in {64, 256} — the sharded path must win at N = 256;
+//! * **transport**: one round of broadcast frames over real loopback
+//!   sockets at N in {64, 256}, the networked coordinator's coalesced
+//!   one-flush-per-connection policy vs a write+flush per frame;
 //! * **blocked linalg**: the cache-blocked `gram` / Cholesky
 //!   `factor_into` / `solve_into` kernels vs the retained scalar
 //!   references at d in {50, 200, 500};
@@ -1332,6 +1335,113 @@ fn bench_coordinator_shootout(h: &mut Harness) {
     }
 }
 
+// ---------------------------------------------------------------------
+// Transport shootout: the networked coordinator's batched-flush policy
+// (queue every frame for a connection, then one flush) vs the naive
+// write+flush per frame, over real loopback sockets.  Payload shape
+// matches a d=50 full-precision broadcast round: 8 frames x 400 bytes
+// per connection.
+// ---------------------------------------------------------------------
+
+/// N server-side [`Conn`]s paired with N draining client sockets.
+struct LoopbackFleet {
+    conns: Vec<cq_ggadmm::net::conn::Conn>,
+    clients: Vec<std::net::TcpStream>,
+}
+
+fn loopback_fleet(n: usize) -> LoopbackFleet {
+    let listener = std::net::TcpListener::bind("127.0.0.1:0").expect("bind loopback");
+    let addr = listener.local_addr().expect("local addr");
+    let mut conns = Vec::with_capacity(n);
+    let mut clients = Vec::with_capacity(n);
+    for _ in 0..n {
+        let c = std::net::TcpStream::connect(addr).expect("connect");
+        let (s, _) = listener.accept().expect("accept");
+        conns.push(cq_ggadmm::net::conn::Conn::new(s).expect("conn"));
+        c.set_nonblocking(true).expect("nonblocking client");
+        clients.push(c);
+    }
+    LoopbackFleet { conns, clients }
+}
+
+/// One broadcast round: `frames` frames to every connection, then drain
+/// until every byte has crossed the loopback (reads included in the
+/// timed region on both sides, so only the write policy differs).
+fn net_round(
+    fleet: &mut LoopbackFleet,
+    payload: &[u8],
+    frames: usize,
+    per_frame_flush: bool,
+    sink: &mut [u8],
+) {
+    use cq_ggadmm::net::wire::kind;
+    use std::io::Read;
+    for c in fleet.conns.iter_mut() {
+        for _ in 0..frames {
+            let h = c.begin(kind::DELIVER);
+            c.payload().extend_from_slice(payload);
+            c.end(h);
+            if per_frame_flush {
+                while !c.flush().expect("flush") {}
+            }
+        }
+    }
+    let total = fleet.conns.len() * frames * (payload.len() + 5);
+    let mut received = 0usize;
+    loop {
+        let mut pending = false;
+        for c in fleet.conns.iter_mut() {
+            if c.has_pending_send() && !c.flush().expect("flush") {
+                pending = true;
+            }
+        }
+        for s in fleet.clients.iter_mut() {
+            loop {
+                match s.read(sink) {
+                    Ok(0) => panic!("bench peer closed"),
+                    Ok(k) => received += k,
+                    Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+                    Err(e) => panic!("bench read: {e}"),
+                }
+            }
+        }
+        if received == total && !pending {
+            break;
+        }
+    }
+}
+
+fn bench_net_shootout(h: &mut Harness) {
+    println!("-- net transport shootout: batched flush vs per-frame flush --");
+    let slack = if h.smoke { 1.25 } else { 1.0 };
+    let frames = 8usize;
+    let payload = vec![0u8; 400];
+    let mut sink_a = vec![0u8; 1 << 16];
+    let mut sink_b = vec![0u8; 1 << 16];
+    for &n in &[64usize, 256] {
+        let mut batched = loopback_fleet(n);
+        let mut naive = loopback_fleet(n);
+        // warm both fleets (first rounds grow the persistent buffers)
+        net_round(&mut batched, &payload, frames, false, &mut sink_a);
+        net_round(&mut naive, &payload, frames, true, &mut sink_b);
+        let (blocks, reps) = if h.smoke { (4, 10) } else { (3, 100) };
+        let (bat_ns, per_ns) = min_block_pair_ns(
+            blocks,
+            reps,
+            || net_round(&mut batched, &payload, frames, false, &mut sink_a),
+            || net_round(&mut naive, &payload, frames, true, &mut sink_b),
+        );
+        h.record(&format!("net round N={n} 8x400B (batched flush)"), bat_ns);
+        h.record(&format!("net round N={n} 8x400B (per-frame flush)"), per_ns);
+        println!("N={n}: batched-flush speedup {:.2}x", per_ns / bat_ns);
+        assert!(
+            bat_ns < per_ns * slack,
+            "one coalesced flush per connection must beat a write per frame at N={n} \
+             ({bat_ns:.0} vs {per_ns:.0} ns, slack {slack})"
+        );
+    }
+}
+
 #[cfg(feature = "pjrt")]
 fn bench_pjrt(
     h: &mut Harness,
@@ -1458,6 +1568,8 @@ fn main() {
     bench_incremental_shootout(&mut h);
 
     bench_coordinator_shootout(&mut h);
+
+    bench_net_shootout(&mut h);
 
     bench_blocked_linalg_shootout(&mut h);
 

@@ -1,7 +1,8 @@
 //! Wire format of the sharded coordinator.
 //!
-//! Committed broadcasts cross the coordinator's (simulated) air as
-//! encoded bytes: a one-byte kind tag followed by either the bit-packed
+//! Committed broadcasts cross the coordinator's medium — the in-process
+//! simulated air or the TCP transport in [`crate::net`] — as encoded
+//! bytes: a one-byte kind tag followed by either the bit-packed
 //! quantized payload ([`crate::quant::codec`], exactly the `b*d + 64`
 //! bits the paper counts) or the raw little-endian `f64` model.
 //!
@@ -26,6 +27,73 @@ use crate::quant::codec;
 pub const TAG_FULL: u8 = 0;
 /// Wire tag: bit-packed quantized message follows.
 pub const TAG_QUANTIZED: u8 = 1;
+
+/// Hard upper bound on the body of one length-prefixed frame (64 MiB).
+///
+/// Large enough for any payload the protocol produces (a full-precision
+/// model frame is `8d + O(1)` bytes, a checkpoint export is a few
+/// multiples of that), small enough that a corrupt or hostile length
+/// prefix can never drive a multi-gigabyte allocation.  Both ends of the
+/// TCP transport ([`crate::net`]) enforce it via [`parse_frame`].
+pub const MAX_FRAME_LEN: usize = 1 << 26;
+
+/// Reserve the 4-byte little-endian length slot of a frame in `out` and
+/// return its offset; append the body, then call [`finish_frame`] with
+/// that offset to patch the length in.  Appending into a persistent
+/// buffer keeps the transport hot path allocation-free after warm-up.
+pub fn begin_frame(out: &mut Vec<u8>) -> usize {
+    let header = out.len();
+    out.extend_from_slice(&[0u8; 4]);
+    header
+}
+
+/// Patch the length prefix reserved by [`begin_frame`] at `header`.
+/// Panics if the body outgrew [`MAX_FRAME_LEN`] — an encoder bug, not a
+/// wire condition (decoders report it as an error instead).
+pub fn finish_frame(out: &mut Vec<u8>, header: usize) {
+    let body = out.len() - header - 4;
+    assert!(body <= MAX_FRAME_LEN, "encoded frame body {body} bytes exceeds MAX_FRAME_LEN {MAX_FRAME_LEN}");
+    out[header..header + 4].copy_from_slice(&(body as u32).to_le_bytes());
+}
+
+/// Parse the frame at the front of `buf` without copying.
+///
+/// - `Ok(None)`: the frame is incomplete — read more bytes and retry.
+/// - `Ok(Some(body))`: one whole frame; the caller consumes exactly
+///   `4 + body.len()` bytes.  The body borrows `buf` (no allocation) and
+///   never reaches past the frame's declared length.
+/// - `Err(..)`: the stream can never become valid (length prefix exceeds
+///   [`MAX_FRAME_LEN`]) — the connection should be dropped with the
+///   returned description.
+pub fn parse_frame(buf: &[u8]) -> Result<Option<&[u8]>, String> {
+    if buf.len() < 4 {
+        return Ok(None);
+    }
+    let len = u32::from_le_bytes(buf[..4].try_into().expect("4-byte prefix")) as usize;
+    if len > MAX_FRAME_LEN {
+        return Err(format!(
+            "frame length prefix {len} exceeds MAX_FRAME_LEN {MAX_FRAME_LEN} (corrupt stream)"
+        ));
+    }
+    if buf.len() < 4 + len {
+        return Ok(None);
+    }
+    Ok(Some(&buf[4..4 + len]))
+}
+
+/// [`parse_frame`] for a stream that has ended (peer closed the socket):
+/// leftover bytes that do not form a complete frame are an error — a
+/// truncated length prefix or body must not be silently discarded.
+pub fn parse_frame_eof(buf: &[u8]) -> Result<Option<&[u8]>, String> {
+    match parse_frame(buf)? {
+        Some(body) => Ok(Some(body)),
+        None if buf.is_empty() => Ok(None),
+        None => Err(format!(
+            "stream ended mid-frame: {} trailing byte(s) do not form a complete frame",
+            buf.len()
+        )),
+    }
+}
 
 /// Encode a full-precision model, appending to `out` (caller clears).
 pub fn encode_full_into(theta: &[f64], out: &mut Vec<u8>) {
@@ -133,6 +201,96 @@ mod tests {
         encode_quantized_into(msg.radius, msg.bits, &msg.codes, &mut wire);
         let cut = wire.len() - 1;
         assert!(!decode_into_slot(&wire[..cut], &mut slot));
+    }
+
+    #[test]
+    fn frame_roundtrip_and_bounds() {
+        let mut buf = Vec::new();
+        let h = begin_frame(&mut buf);
+        buf.extend_from_slice(b"hello");
+        finish_frame(&mut buf, h);
+        // a second frame back to back in the same buffer
+        let h2 = begin_frame(&mut buf);
+        buf.extend_from_slice(b"!");
+        finish_frame(&mut buf, h2);
+
+        let body = parse_frame(&buf).unwrap().unwrap();
+        assert_eq!(body, b"hello");
+        let consumed = 4 + body.len();
+        let body2 = parse_frame(&buf[consumed..]).unwrap().unwrap();
+        assert_eq!(body2, b"!");
+
+        // incomplete prefixes and bodies wait for more bytes ...
+        assert_eq!(parse_frame(&buf[..3]).unwrap(), None);
+        assert_eq!(parse_frame(&buf[..6]).unwrap(), None);
+        // ... unless the stream has ended, which is a descriptive error
+        assert!(parse_frame_eof(&buf[..3]).unwrap_err().contains("mid-frame"));
+        assert_eq!(parse_frame_eof(&[]).unwrap(), None);
+
+        // an oversized length prefix is rejected, never allocated
+        let huge = ((MAX_FRAME_LEN + 1) as u32).to_le_bytes();
+        let err = parse_frame(&huge).unwrap_err();
+        assert!(err.contains("MAX_FRAME_LEN"), "{err}");
+    }
+
+    #[test]
+    fn fuzz_corrupted_streams_never_panic_or_over_read() {
+        // Deterministic fuzz over three corruption families: pure noise,
+        // bit-flipped valid frames, and truncations.  The contract under
+        // test: `parse_frame` never panics and any body it yields lies
+        // inside the input; `decode_into_slot` never panics on arbitrary
+        // bytes and only ever reports success/failure.
+        let mut rng = crate::util::rng::Pcg64::new(0xF4A2);
+        let mut slot = vec![0.0_f64; 24];
+        for round in 0..400 {
+            let mut bytes: Vec<u8> = match round % 3 {
+                0 => {
+                    let len = (rng.next_u64() % 96) as usize;
+                    (0..len).map(|_| rng.next_u64() as u8).collect()
+                }
+                _ => {
+                    // start from a valid framed payload, then corrupt it
+                    let mut v = Vec::new();
+                    let h = begin_frame(&mut v);
+                    if round % 2 == 0 {
+                        let theta: Vec<f64> =
+                            (0..24).map(|_| rng.next_u64() as i64 as f64 * 1e-9).collect();
+                        encode_full_into(&theta, &mut v);
+                    } else {
+                        let codes: Vec<u32> = (0..24).map(|_| rng.next_u64() as u32 & 7).collect();
+                        encode_quantized_into(0.5, 3, &codes, &mut v);
+                    }
+                    finish_frame(&mut v, h);
+                    v
+                }
+            };
+            if !bytes.is_empty() {
+                for _ in 0..1 + (rng.next_u64() % 4) {
+                    let at = (rng.next_u64() as usize) % bytes.len();
+                    bytes[at] ^= 1 << (rng.next_u64() % 8);
+                }
+                let keep = (rng.next_u64() as usize) % (bytes.len() + 1);
+                bytes.truncate(keep);
+            }
+            match parse_frame(&bytes) {
+                Ok(Some(body)) => {
+                    // never over-reads: the body lies strictly within the input
+                    assert!(4 + body.len() <= bytes.len());
+                    let _ = decode_into_slot(body, &mut slot);
+                    let _ = counted_bits(body, slot.len());
+                }
+                Ok(None) => assert!(matches!(parse_frame_eof(&bytes), Ok(None) | Err(_))),
+                Err(e) => assert!(!e.is_empty()),
+            }
+            // decoding the raw (unframed) corruption must not panic either
+            let _ = decode_into_slot(&bytes, &mut slot);
+            let _ = counted_bits(&bytes, slot.len());
+            for v in &mut slot {
+                if !v.is_finite() {
+                    *v = 0.0;
+                }
+            }
+        }
     }
 
     #[test]

@@ -34,6 +34,11 @@
 //! channels), and a panic inside a shard solve is re-raised on the
 //! leader after the pool barrier — the pool (and the coordinator)
 //! survive, exactly like [`crate::parallel::WorkerPool`].
+//!
+//! This engine has a networked twin: [`crate::net`] runs the same
+//! leader loop over real TCP connections (worker cores hosted in
+//! remote processes, `serve`/`worker` subcommands), locked
+//! bit-for-bit against this one by `tests/net_equivalence.rs`.
 
 pub mod message;
 pub mod worker;

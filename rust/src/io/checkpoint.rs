@@ -171,6 +171,27 @@ pub fn encode(state: &RunState) -> Vec<u8> {
     e.buf
 }
 
+/// Serialize a single [`CoreState`] standalone (no magic/version header)
+/// — the networked transport ships worker state in registration and
+/// clean-shutdown frames using the exact checkpoint layout, so state that
+/// crossed the wire is bit-identical to state that crossed a file.
+pub fn encode_core(core: &CoreState) -> Vec<u8> {
+    let mut e = Enc { buf: Vec::new() };
+    e.core(core);
+    e.buf
+}
+
+/// Parse a [`CoreState`] produced by [`encode_core`]; rejects trailing
+/// bytes like the full-checkpoint decoder.
+pub fn decode_core(bytes: &[u8]) -> Result<CoreState, String> {
+    let mut d = Dec { buf: bytes, pos: 0 };
+    let core = d.core()?;
+    if d.pos != bytes.len() {
+        return Err(format!("core state corrupt: {} trailing bytes", bytes.len() - d.pos));
+    }
+    Ok(core)
+}
+
 // ---- decoder ---------------------------------------------------------
 
 struct Dec<'a> {
@@ -470,6 +491,18 @@ mod tests {
         let mut longer = bytes.clone();
         longer.push(0);
         assert!(decode(&longer).unwrap_err().contains("trailing"));
+    }
+
+    #[test]
+    fn core_round_trip_standalone() {
+        for core in sample_state().cores {
+            let bytes = encode_core(&core);
+            assert_eq!(decode_core(&bytes).expect("decode core"), core);
+            let mut longer = bytes.clone();
+            longer.push(7);
+            assert!(decode_core(&longer).unwrap_err().contains("trailing"));
+            assert!(decode_core(&bytes[..bytes.len() - 1]).unwrap_err().contains("truncated"));
+        }
     }
 
     #[test]

@@ -16,6 +16,11 @@
 //! * `checkpoint` — `iteration`, `path`; a durable checkpoint landed.
 //! * `worker_leave` / `worker_join` (schema ≥ 2) — `iteration`,
 //!   `worker`; a churn event applied at the start of that iteration.
+//! * `worker_connect` / `worker_disconnect` (schema ≥ 2) — `iteration`,
+//!   `worker`; a networked worker's socket registered with / dropped
+//!   from the serve loop ([`crate::net`]).  Transport-level membership:
+//!   a disconnect is followed by a `worker_leave` when the run degrades,
+//!   a reconnect by a `worker_join` when it rejoins.
 //! * `stale_refresh` (schema ≥ 2) — `iteration`, `worker`, `staleness`;
 //!   the bounded-staleness policy force-refreshed a worker whose
 //!   broadcast had been censored or lost for `staleness` rounds.
@@ -219,6 +224,16 @@ impl EventRecorder {
         self.membership("worker_join", iteration, worker);
     }
 
+    /// A networked worker's socket registered with the serve loop.
+    pub fn worker_connect(&mut self, iteration: u64, worker: usize) {
+        self.membership("worker_connect", iteration, worker);
+    }
+
+    /// A networked worker's socket dropped from the serve loop.
+    pub fn worker_disconnect(&mut self, iteration: u64, worker: usize) {
+        self.membership("worker_disconnect", iteration, worker);
+    }
+
     fn membership(&mut self, event: &str, iteration: u64, worker: usize) {
         self.emit(Json::Obj(vec![
             ("event".into(), Json::Str(event.into())),
@@ -315,6 +330,8 @@ mod tests {
         rec.worker_leave(3, 1);
         rec.worker_join(7, 1);
         rec.stale_refresh(5, 0, 4);
+        rec.worker_connect(0, 1);
+        rec.worker_disconnect(9, 1);
         let lines = sink.lines();
         assert!(lines[0].contains(r#""event":"worker_leave""#), "{}", lines[0]);
         assert!(lines[0].contains(r#""iteration":3"#), "{}", lines[0]);
@@ -322,5 +339,8 @@ mod tests {
         assert!(lines[1].contains(r#""event":"worker_join""#), "{}", lines[1]);
         assert!(lines[2].contains(r#""event":"stale_refresh""#), "{}", lines[2]);
         assert!(lines[2].contains(r#""staleness":4"#), "{}", lines[2]);
+        assert!(lines[3].contains(r#""event":"worker_connect""#), "{}", lines[3]);
+        assert!(lines[4].contains(r#""event":"worker_disconnect""#), "{}", lines[4]);
+        assert!(lines[4].contains(r#""iteration":9"#), "{}", lines[4]);
     }
 }

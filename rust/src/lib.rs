@@ -17,9 +17,10 @@
 //! * **Layer 3 (this crate)** — the decentralized runtime: topology
 //!   management, head/tail phase scheduling, censoring gates, quantized
 //!   payload codec, the shared per-worker protocol core ([`protocol`])
-//!   with its two drivers (the sequential simulator in [`algs`] and the
-//!   sharded coordinator in [`coordinator`]), pluggable link models
-//!   ([`comm`]), metrics and the experiment harness.
+//!   with its three drivers (the sequential simulator in [`algs`], the
+//!   sharded coordinator in [`coordinator`], and the TCP transport in
+//!   [`net`]), pluggable link models ([`comm`]), metrics and the
+//!   experiment harness.
 //! * **Layer 2 (JAX, build time)** — per-worker subproblem solvers lowered
 //!   AOT to HLO text in `artifacts/` (see `python/compile/model.py`).
 //! * **Layer 1 (Pallas, build time)** — the compute hot-spot kernels the
@@ -68,6 +69,7 @@ pub mod graph;
 pub mod io;
 pub mod linalg;
 pub mod metrics;
+pub mod net;
 pub mod parallel;
 pub mod protocol;
 pub mod quant;

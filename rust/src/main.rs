@@ -8,10 +8,11 @@
 //! ([`cq_ggadmm::config::ExperimentManifest`]) carrying the problem,
 //! algorithm, execution, link and output configuration.  Explicit CLI
 //! flags override manifest values; without a manifest the flag defaults
-//! reproduce the legacy CLI exactly.  `run` and `coordinator` also
-//! support run directories (`--run-dir`), periodic checkpoints
+//! reproduce the legacy CLI exactly.  `run`, `coordinator` and `serve`
+//! also support run directories (`--run-dir`), periodic checkpoints
 //! (`--checkpoint-every`), bit-identical resume (`--resume`) and
-//! streaming JSONL event logs (`--events`).
+//! streaming JSONL event logs (`--events`).  `serve` + `worker` run the
+//! same protocol over TCP (see README §Networked mode).
 
 use cq_ggadmm::algs::{AlgSpec, Problem, Run};
 use cq_ggadmm::cli::{Args, Cli, Command};
@@ -22,6 +23,7 @@ use cq_ggadmm::experiments::{self, matrix, ExecOptions};
 use cq_ggadmm::graph::{gen, spectral, ChurnSchedule, Topology};
 use cq_ggadmm::io::{checkpoint, run_with_persistence, JsonlSink, RunDir};
 use cq_ggadmm::metrics::{save_traces, Trace};
+use cq_ggadmm::net;
 use cq_ggadmm::solver::Backend;
 use std::path::{Path, PathBuf};
 use std::process::ExitCode;
@@ -100,6 +102,39 @@ fn cli() -> Cli {
                 .opt("events", None, "stream JSONL events to this path (default: run dir)")
                 .opt("churn", None, "worker-churn schedule: '<at>:<leave|join>:<worker> ...'")
                 .opt("staleness", None, "bounded-staleness refresh threshold (rounds)")
+                .opt("kernel-tier", None, "kernel tier: scalar|avx2|auto (default: env/detect)"),
+        )
+        .command(
+            Command::new("serve", "run the coordinator as a TCP server (pair with 'worker')")
+                .opt("bind", Some("127.0.0.1"), "listen address")
+                .opt("port", Some("0"), "listen port (0 = ephemeral)")
+                .opt("port-file", None, "write the bound port here (atomically) once listening")
+                .opt("dataset", Some("synth-linear"), "dataset id")
+                .opt("alg", Some("cq-ggadmm"), "algorithm")
+                .opt("workers", Some("12"), "number of workers")
+                .opt("connectivity", Some("0.3"), "graph connectivity ratio p")
+                .opt("iters", Some("150"), "iterations")
+                .opt("seed", Some("1"), "random seed")
+                .opt("drop-prob", Some("0"), "broadcast-erasure probability")
+                .opt("tau0", Some("1.0"), "censoring threshold tau0")
+                .opt("xi", Some("0.8"), "censoring decay xi")
+                .opt("omega", Some("0.995"), "quantizer step decay omega")
+                .opt("bits0", Some("2"), "initial quantizer bits")
+                .opt("topology", None, "topology family (see 'run --help'; default random:0.3)")
+                .opt("manifest", None, "layered TOML manifest (flags override)")
+                .opt("run-dir", None, "create a runs/<NNNN-slug>/ directory under this base")
+                .opt("resume", None, "resume from this run directory's checkpoint")
+                .opt("checkpoint-every", None, "checkpoint cadence in iterations (0 = final only)")
+                .opt("events", None, "stream JSONL events to this path (default: run dir)")
+                .opt("churn", None, "worker-churn schedule: '<at>:<leave|join>:<worker> ...'")
+                .opt("staleness", None, "bounded-staleness refresh threshold (rounds)")
+                .opt("kernel-tier", None, "kernel tier: scalar|avx2|auto (default: env/detect)"),
+        )
+        .command(
+            Command::new("worker", "host one or more workers of a 'serve' run over TCP")
+                .opt("connect", None, "server address, e.g. 127.0.0.1:4800 (required)")
+                .opt("ids", None, "worker id or half-open range, e.g. '7' or '0..16' (required)")
+                .opt("exit-after-iter", None, "depart cleanly after completing this iteration")
                 .opt("kernel-tier", None, "kernel tier: scalar|avx2|auto (default: env/detect)"),
         )
         .command(
@@ -599,6 +634,102 @@ fn cmd_coordinator(a: &Args) -> Result<(), String> {
     Ok(())
 }
 
+/// Publish the bound port for test harnesses and launch scripts: write
+/// to a temp file, then rename — a reader never sees a partial write.
+fn write_port_file(path: &Path, port: u16) -> Result<(), String> {
+    let tmp = path.with_extension("port.tmp");
+    std::fs::write(&tmp, format!("{port}\n")).map_err(|e| e.to_string())?;
+    std::fs::rename(&tmp, path).map_err(|e| e.to_string())?;
+    Ok(())
+}
+
+fn cmd_serve(a: &Args) -> Result<(), String> {
+    let m = resolve_manifest(a)?;
+    if m.exec.backend != Backend::Native {
+        return Err("the networked coordinator runs native solvers only".into());
+    }
+    if m.alg == "dgd" {
+        return Err("dgd is a first-order baseline; use 'run --alg dgd'".into());
+    }
+    let (problem, topo, spec) = net::build_session(&m)?;
+    let alg_name = spec.name.clone();
+    let bind = a.get_or("bind", "127.0.0.1");
+    let port = a.get_or("port", "0");
+    let mut coord = net::server::NetCoordinator::bind(
+        problem,
+        topo,
+        spec,
+        m.exec.clone(),
+        m.to_toml(),
+        &format!("{bind}:{port}"),
+    )
+    .map_err(|e| format!("cannot bind {bind}:{port}: {e}"))?;
+    let addr = coord.local_addr();
+    println!(
+        "serving {} workers on {addr}, algorithm {alg_name}",
+        m.experiment.workers
+    );
+    if let Some(path) = a.get("port-file") {
+        write_port_file(Path::new(path), addr.port())?;
+    }
+    let iters = m.experiment.iters as u64;
+    let persist = resolve_persistence(a, &m)?;
+    let trace = match &persist {
+        Some(p) => {
+            let events = match a.get("events") {
+                Some(path) => PathBuf::from(path),
+                None => p.dir.events_path(),
+            };
+            if p.resuming {
+                let state = checkpoint::load(&p.dir.checkpoint_path())
+                    .map_err(|err| format!("cannot load checkpoint: {err}"))?;
+                coord.restore_state(&state);
+                coord.resume_event_log(Box::new(
+                    JsonlSink::append(&events).map_err(|err| err.to_string())?,
+                ));
+                println!("resumed at iteration {}", coord.iteration());
+            } else {
+                coord.start_event_log(Box::new(
+                    JsonlSink::create(&events).map_err(|err| err.to_string())?,
+                ));
+            }
+            coord.wait_for_fleet();
+            let remaining = iters.saturating_sub(coord.iteration());
+            run_with_persistence(&mut coord, remaining, &p.dir, m.output.checkpoint_every)
+                .map_err(|err| err.to_string())?;
+            p.dir.save_trace(&coord.trace()).map_err(|err| err.to_string())?;
+            println!("run dir -> {}", p.dir.path().display());
+            coord.trace()
+        }
+        None => {
+            if let Some(path) = a.get("events") {
+                coord.start_event_log(Box::new(
+                    JsonlSink::create(Path::new(path)).map_err(|err| err.to_string())?,
+                ));
+            }
+            coord.wait_for_fleet();
+            coord.run(iters)
+        }
+    };
+    coord.shutdown();
+    print_trace_summary(&trace);
+    Ok(())
+}
+
+fn cmd_worker(a: &Args) -> Result<(), String> {
+    let connect = a
+        .get("connect")
+        .ok_or("worker: --connect <host:port> is required")?
+        .to_string();
+    let ids = net::client::parse_ids(a.get("ids").ok_or("worker: --ids is required")?)?;
+    let opts = net::client::WorkerOptions {
+        connect,
+        ids,
+        exit_after_iter: a.get_u64("exit-after-iter")?,
+    };
+    net::client::run_worker(&opts)
+}
+
 fn cmd_matrix(a: &Args) -> Result<(), String> {
     let m = resolve_manifest(a)?;
     let exec: ExecOptions = m.exec.clone();
@@ -811,6 +942,8 @@ fn main() -> ExitCode {
         "exp" => cmd_exp(&args),
         "run" => cmd_run(&args),
         "coordinator" => cmd_coordinator(&args),
+        "serve" => cmd_serve(&args),
+        "worker" => cmd_worker(&args),
         "datasets" => resolve_manifest(&args).map(|_| {
             println!("{}", experiments::table1().render());
         }),

@@ -1,0 +1,414 @@
+//! The worker side of the TCP transport: one process hosts one or more
+//! worker ids, each driving its own [`WorkerCore`] over its own framed
+//! connection.
+//!
+//! A session is a pure frame-driven state machine — the server decides
+//! *when* anything happens (phases, commits, deliveries, churn, record
+//! and checkpoint reads); the worker only runs the protocol arithmetic
+//! locally and replies.  Per-connection TCP FIFO order is the only
+//! synchronization: the server queues core mutations in the exact order
+//! the in-process engines apply them, so replaying them here is
+//! bit-identical.
+//!
+//! Construction is self-contained: the `Welcome` frame carries the
+//! resolved manifest TOML, from which the worker rebuilds the problem,
+//! topology and algorithm via [`super::build_session`] and its own core
+//! via [`build_core_at`] — the same replayed RNG forks the in-process
+//! fleet constructor uses.  The membership bitmap shapes the core for
+//! mid-run structure (detached or degraded), and an optional `CoreState`
+//! restores checkpointed or parked values.
+
+use std::net::TcpStream;
+use std::time::{Duration, Instant};
+
+use super::conn::Conn;
+use super::wire::{self, kind};
+use crate::algs::{AlgSpec, Problem};
+use crate::config::ExperimentManifest;
+use crate::coordinator::message;
+use crate::graph::Topology;
+use crate::io::checkpoint;
+use crate::protocol::{build_core_at, PayloadRef, ProtocolConfig, WorkerCore};
+use crate::solver::Backend;
+
+/// Mirror of the server's barrier backstop: give up (with a clear
+/// error) instead of spinning forever against a dead or wedged server.
+const WAIT_TIMEOUT: Duration = Duration::from_secs(300);
+const IDLE_BACKOFF: Duration = Duration::from_micros(100);
+
+/// Options for one worker process.
+pub struct WorkerOptions {
+    /// Server address, e.g. `127.0.0.1:4800`.
+    pub connect: String,
+    /// Worker ids hosted by this process (each gets its own connection).
+    pub ids: Vec<usize>,
+    /// Exit cleanly (goodbye + state handoff) after completing this
+    /// iteration — the socket analogue of a scheduled `leave`.
+    pub exit_after_iter: Option<u64>,
+}
+
+/// Parse `--ids`: a single id (`"7"`) or a half-open range (`"0..16"`).
+pub fn parse_ids(s: &str) -> Result<Vec<usize>, String> {
+    let bad = |_| format!("--ids: cannot parse '{s}' (expected e.g. '7' or '0..16')");
+    if let Some((a, b)) = s.split_once("..") {
+        let a: usize = a.trim().parse().map_err(bad)?;
+        let b: usize = b.trim().parse().map_err(bad)?;
+        if a >= b {
+            return Err(format!("--ids: empty range '{s}'"));
+        }
+        Ok((a..b).collect())
+    } else {
+        Ok(vec![s.trim().parse().map_err(bad)?])
+    }
+}
+
+/// Run the worker process: register every id, then serve frames until
+/// the server shuts the run down (or `exit_after_iter` departs cleanly).
+pub fn run_worker(opts: &WorkerOptions) -> Result<(), String> {
+    assert!(!opts.ids.is_empty(), "worker needs at least one id");
+    // connect + hello for every hosted id
+    let mut conns: Vec<(usize, Conn)> = Vec::with_capacity(opts.ids.len());
+    for &id in &opts.ids {
+        let stream = TcpStream::connect(&opts.connect)
+            .map_err(|e| format!("cannot connect to {}: {e}", opts.connect))?;
+        let mut c = Conn::new(stream).map_err(|e| format!("socket setup: {e}"))?;
+        let h = c.begin(kind::HELLO);
+        wire::put_u64(c.payload(), id as u64);
+        c.end(h);
+        conns.push((id, c));
+    }
+    // handshake: the first welcome's manifest builds the shared session;
+    // every id then constructs its own core from it
+    let mut ctx: Option<SessionContext> = None;
+    let mut sessions: Vec<Session> = Vec::with_capacity(conns.len());
+    for (id, mut conn) in conns {
+        let body = await_frame(&mut conn, "welcome")?;
+        let mut s = welcome_session(id, conn, &body, &mut ctx)
+            .map_err(|e| format!("worker {id}: {e}"))?;
+        s.exit_after = opts.exit_after_iter;
+        sessions.push(s);
+    }
+    // main loop: serve frames on every session until all are done
+    let mut deadline = Instant::now() + WAIT_TIMEOUT;
+    loop {
+        let mut progress = false;
+        let mut all_done = true;
+        for s in &mut sessions {
+            progress |= s.pump()?;
+            if !s.done || s.linger || s.conn.has_pending_send() {
+                all_done = false;
+            }
+        }
+        if all_done {
+            return Ok(());
+        }
+        if progress {
+            deadline = Instant::now() + WAIT_TIMEOUT;
+        } else {
+            if Instant::now() > deadline {
+                return Err("timed out waiting for server frames".into());
+            }
+            std::thread::sleep(IDLE_BACKOFF);
+        }
+    }
+}
+
+/// Everything the hosted ids share, built once from the first welcome.
+struct SessionContext {
+    problem: Problem,
+    topo: Topology,
+    spec: AlgSpec,
+    cfg: ProtocolConfig,
+}
+
+struct Session {
+    id: usize,
+    conn: Conn,
+    core: WorkerCore,
+    /// Iteration most recently computed (`k_plus_1` of the last phase).
+    last_k1: u64,
+    exit_after: Option<u64>,
+    /// Decode scratch for warm/hat vectors (capacity retained).
+    vec_scratch: Vec<f64>,
+    /// Dispatch copy of the frame body (capacity retained) — splits the
+    /// receive-buffer borrow from the core/send-buffer mutations.
+    frame_scratch: Vec<u8>,
+    done: bool,
+    /// Departed via goodbye: hold the socket open (discarding frames)
+    /// until the server closes its end.  Closing first could turn the
+    /// server's in-flight writes into an RST that destroys the goodbye
+    /// bytes still queued in the server's receive buffer.
+    linger: bool,
+}
+
+/// Parse one `Welcome` frame and build the session for `id`.
+fn welcome_session(
+    id: usize,
+    conn: Conn,
+    body: &[u8],
+    ctx: &mut Option<SessionContext>,
+) -> Result<Session, String> {
+    let (&k, rest) = body.split_first().ok_or("empty frame")?;
+    if k != kind::WELCOME {
+        return Err(format!("expected welcome, got frame kind {k}"));
+    }
+    let mut r = wire::Reader::new(rest);
+    let resume_iter = r.u64("resume iteration")?;
+    let n = r.u64("worker count")? as usize;
+    let mut active = Vec::with_capacity(n);
+    for _ in 0..n {
+        active.push(r.u8("membership bitmap")? != 0);
+    }
+    let state = if r.u8("state flag")? != 0 {
+        let len = r.u64("state length")? as usize;
+        let rest = r.rest();
+        if rest.len() < len {
+            return Err("welcome state truncated".into());
+        }
+        let cs = checkpoint::decode_core(&rest[..len])?;
+        r = wire::Reader::new(&rest[len..]);
+        Some(cs)
+    } else {
+        None
+    };
+    if ctx.is_none() {
+        let toml = std::str::from_utf8(r.rest())
+            .map_err(|_| "welcome manifest is not UTF-8".to_string())?;
+        let manifest = ExperimentManifest::from_toml(toml)?;
+        manifest.validate()?;
+        if manifest.exec.backend != Backend::Native {
+            return Err("networked workers run native solvers only".into());
+        }
+        let (problem, topo, spec) = super::build_session(&manifest)?;
+        let cfg = ProtocolConfig {
+            backend: Backend::Native,
+            artifacts_dir: None,
+            incremental: manifest.exec.incremental,
+            seed: manifest.exec.seed,
+        };
+        *ctx = Some(SessionContext { problem, topo, spec, cfg });
+    }
+    let ctx = ctx.as_ref().expect("session context");
+    if n != ctx.topo.n() {
+        return Err(format!(
+            "welcome bitmap has {n} workers, manifest topology has {}",
+            ctx.topo.n()
+        ));
+    }
+    if id >= n {
+        return Err(format!("worker id {id} out of range for n = {n}"));
+    }
+    let mut core = build_core_at(&ctx.problem, &ctx.topo, &ctx.spec, &ctx.cfg, id);
+    core.enable_code_collection();
+    // shape the core to the server's membership view: a detached self
+    // drops every edge, an attached self drops edges to absent peers
+    // (`set_degree` is a pure function of the final degree, so the
+    // shape — not the detach history — determines the solver state)
+    for m in core.neighbors().to_vec() {
+        if !active[id] || !active[m] {
+            core.detach_neighbor(m);
+        }
+    }
+    if let Some(cs) = &state {
+        core.import_state(cs);
+    }
+    Ok(Session {
+        id,
+        conn,
+        core,
+        last_k1: resume_iter,
+        exit_after: None,
+        vec_scratch: vec![0.0; ctx.problem.d],
+        frame_scratch: Vec::new(),
+        done: false,
+        linger: false,
+    })
+}
+
+/// Block (with timeout) until one complete frame arrives; returns the
+/// copied body.
+fn await_frame(conn: &mut Conn, what: &str) -> Result<Vec<u8>, String> {
+    let deadline = Instant::now() + WAIT_TIMEOUT;
+    loop {
+        conn.flush()?;
+        conn.pump_recv()?;
+        if let Some(r) = conn.frame_range()? {
+            let body = conn.bytes(r.clone()).to_vec();
+            conn.consume(&r);
+            return Ok(body);
+        }
+        if conn.peer_closed() {
+            return Err(format!("server closed the connection before {what}"));
+        }
+        if Instant::now() > deadline {
+            return Err(format!("timed out waiting for {what}"));
+        }
+        std::thread::sleep(IDLE_BACKOFF);
+    }
+}
+
+impl Session {
+    /// Drain the socket, handle every complete frame, flush replies.
+    /// Returns `true` when bytes moved in either direction.
+    fn pump(&mut self) -> Result<bool, String> {
+        let mut progress = false;
+        if !self.done {
+            progress |= self.conn.pump_recv().map_err(|e| self.err(&e))?;
+            loop {
+                let Some(r) = self.conn.frame_range().map_err(|e| self.err(&e))? else {
+                    if self.conn.peer_closed() {
+                        return Err(self.err("server closed the connection mid-run"));
+                    }
+                    break;
+                };
+                let mut body = std::mem::take(&mut self.frame_scratch);
+                body.clear();
+                body.extend_from_slice(self.conn.bytes(r.clone()));
+                self.conn.consume(&r);
+                let res = self.handle_frame(&body);
+                self.frame_scratch = body;
+                res.map_err(|e| self.err(&e))?;
+                progress = true;
+                if self.done {
+                    break;
+                }
+            }
+        } else if self.linger {
+            progress |= self.conn.pump_recv().map_err(|e| self.err(&e))?;
+            while let Some(r) = self.conn.frame_range().map_err(|e| self.err(&e))? {
+                self.conn.consume(&r);
+                progress = true;
+            }
+            if self.conn.peer_closed() {
+                self.linger = false;
+            }
+        }
+        if self.conn.has_pending_send() {
+            progress |= self.conn.flush().map_err(|e| self.err(&e))?;
+        }
+        Ok(progress)
+    }
+
+    /// Dispatch one server frame against the core.
+    fn handle_frame(&mut self, body: &[u8]) -> Result<(), String> {
+        let (&k, rest) = body.split_first().ok_or("empty frame")?;
+        let mut r = wire::Reader::new(rest);
+        match k {
+            kind::PHASE => {
+                let k1 = r.u64("phase iteration")?;
+                let force = r.u8("force flag")? != 0;
+                self.last_k1 = k1;
+                self.core.primal_update();
+                let decision = self.core.prepare_broadcast_gated(k1, force);
+                let h = self.conn.begin(kind::CANDIDATE);
+                match decision {
+                    Some(bits) => {
+                        self.conn.payload().push(1);
+                        wire::put_u64(self.conn.payload(), bits);
+                        match self.core.pending_payload() {
+                            PayloadRef::Full(v) => {
+                                message::encode_full_into(v, self.conn.payload());
+                            }
+                            PayloadRef::Quantized { radius, bits, codes } => {
+                                message::encode_quantized_into(
+                                    radius,
+                                    bits,
+                                    codes,
+                                    self.conn.payload(),
+                                );
+                            }
+                        }
+                    }
+                    None => self.conn.payload().push(0),
+                }
+                self.conn.end(h);
+            }
+            kind::COMMIT => self.core.commit_pending(),
+            kind::ABORT => self.core.abort_pending(),
+            kind::DELIVER => {
+                let from = r.u64("sender id")? as usize;
+                let payload = r.rest();
+                if self.core.neighbors().binary_search(&from).is_err() {
+                    return Err(format!("delivery from non-neighbor {from}"));
+                }
+                let mut ok = true;
+                self.core
+                    .deliver_with(from, |slot| ok = message::decode_into_slot(payload, slot));
+                if !ok {
+                    return Err(format!("malformed broadcast payload from worker {from}"));
+                }
+            }
+            kind::DUAL => {
+                if !self.core.neighbors().is_empty() {
+                    self.core.dual_update();
+                }
+                if self.exit_after == Some(self.last_k1) {
+                    self.leave_cleanly();
+                }
+            }
+            kind::REPORT_REQ => {
+                let h = self.conn.begin(kind::REPORT);
+                wire::put_f64(self.conn.payload(), self.core.loss());
+                wire::put_f64s(self.conn.payload(), self.core.theta());
+                self.conn.end(h);
+            }
+            kind::EXPORT_REQ => {
+                let bytes = checkpoint::encode_core(&self.core.export_state());
+                let h = self.conn.begin(kind::EXPORT);
+                self.conn.payload().extend_from_slice(&bytes);
+                self.conn.end(h);
+            }
+            kind::DETACH => {
+                let peer = r.u64("departed peer")? as usize;
+                if self.core.neighbors().binary_search(&peer).is_err() {
+                    return Err(format!("detach of non-neighbor {peer}"));
+                }
+                self.core.detach_neighbor(peer);
+            }
+            kind::DETACH_ALL => {
+                for m in self.core.neighbors().to_vec() {
+                    self.core.detach_neighbor(m);
+                }
+            }
+            kind::ATTACH => {
+                let peer = r.u64("joining peer")? as usize;
+                r.f64s_into(&mut self.vec_scratch, "joining hat")?;
+                self.core.attach_neighbor(peer, &self.vec_scratch);
+            }
+            kind::REJOIN => {
+                r.f64s_into(&mut self.vec_scratch, "warm start")?;
+                self.core.rejoin_with(&self.vec_scratch);
+                let count = r.u64("peer count")?;
+                for _ in 0..count {
+                    let peer = r.u64("peer id")? as usize;
+                    r.f64s_into(&mut self.vec_scratch, "peer hat")?;
+                    self.core.attach_neighbor(peer, &self.vec_scratch);
+                }
+            }
+            kind::SHUTDOWN => self.done = true,
+            other => return Err(format!("unexpected frame kind {other}")),
+        }
+        Ok(())
+    }
+
+    /// Clean departure at the end of the current iteration: ship the
+    /// loss plus the post-detach state — exactly the frozen shape a
+    /// scheduled leave parks in-process.
+    fn leave_cleanly(&mut self) {
+        let loss = self.core.loss();
+        for m in self.core.neighbors().to_vec() {
+            self.core.detach_neighbor(m);
+        }
+        let bytes = checkpoint::encode_core(&self.core.export_state());
+        let h = self.conn.begin(kind::GOODBYE);
+        wire::put_f64(self.conn.payload(), loss);
+        self.conn.payload().extend_from_slice(&bytes);
+        self.conn.end(h);
+        self.done = true;
+        self.linger = true;
+    }
+
+    fn err(&self, e: &str) -> String {
+        format!("worker {}: {e}", self.id)
+    }
+}

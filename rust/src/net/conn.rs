@@ -1,0 +1,209 @@
+//! Nonblocking framed connection with persistent buffers.
+//!
+//! One [`Conn`] wraps one `TcpStream` set to nonblocking + `TCP_NODELAY`.
+//! Reads drain into a persistent receive buffer and frames are parsed in
+//! place via [`crate::coordinator::message::parse_frame`]; writes append
+//! into a persistent send buffer and [`Conn::flush`] resumes partial
+//! writes across readiness passes.  Both buffers keep their capacity, so
+//! after the first few rounds the transport hot path allocates nothing.
+
+use std::io::{ErrorKind, Read, Write};
+use std::net::TcpStream;
+use std::ops::Range;
+
+use crate::coordinator::message::{begin_frame, finish_frame, parse_frame};
+
+pub struct Conn {
+    stream: TcpStream,
+    recv: Vec<u8>,
+    recv_pos: usize,
+    send: Vec<u8>,
+    send_pos: usize,
+    /// Offset of the open frame header while one is being built.
+    open_frame: Option<usize>,
+    peer_closed: bool,
+}
+
+impl Conn {
+    pub fn new(stream: TcpStream) -> std::io::Result<Conn> {
+        stream.set_nodelay(true)?;
+        stream.set_nonblocking(true)?;
+        Ok(Conn {
+            stream,
+            recv: Vec::new(),
+            recv_pos: 0,
+            send: Vec::new(),
+            send_pos: 0,
+            open_frame: None,
+            peer_closed: false,
+        })
+    }
+
+    /// True once the peer has closed its end (a later `pump_recv` saw EOF).
+    pub fn peer_closed(&self) -> bool {
+        self.peer_closed
+    }
+
+    /// Drain whatever the socket has ready into the receive buffer.
+    /// Returns `true` if any bytes arrived.
+    pub fn pump_recv(&mut self) -> Result<bool, String> {
+        let mut chunk = [0u8; 16 * 1024];
+        let mut got = false;
+        loop {
+            match self.stream.read(&mut chunk) {
+                Ok(0) => {
+                    self.peer_closed = true;
+                    return Ok(got);
+                }
+                Ok(k) => {
+                    self.recv.extend_from_slice(&chunk[..k]);
+                    got = true;
+                }
+                Err(e) if e.kind() == ErrorKind::WouldBlock => return Ok(got),
+                Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+                Err(e) if e.kind() == ErrorKind::ConnectionReset => {
+                    self.peer_closed = true;
+                    return Ok(got);
+                }
+                Err(e) => return Err(format!("socket read: {e}")),
+            }
+        }
+    }
+
+    /// Byte range of the next complete frame body inside the receive
+    /// buffer, if one has fully arrived.  When no complete frame is
+    /// buffered the consumed prefix is compacted away (`copy_within`, no
+    /// reallocation) so the buffer cannot grow without bound.
+    pub fn frame_range(&mut self) -> Result<Option<Range<usize>>, String> {
+        match parse_frame(&self.recv[self.recv_pos..])? {
+            Some(body) => {
+                let start = self.recv_pos + 4;
+                Ok(Some(start..start + body.len()))
+            }
+            None => {
+                if self.recv_pos > 0 {
+                    self.recv.copy_within(self.recv_pos.., 0);
+                    let left = self.recv.len() - self.recv_pos;
+                    self.recv.truncate(left);
+                    self.recv_pos = 0;
+                }
+                Ok(None)
+            }
+        }
+    }
+
+    /// Borrow frame bytes returned by [`Conn::frame_range`].
+    pub fn bytes(&self, r: Range<usize>) -> &[u8] {
+        &self.recv[r]
+    }
+
+    /// Mark the frame at `r` as consumed.
+    pub fn consume(&mut self, r: &Range<usize>) {
+        self.recv_pos = r.end;
+    }
+
+    /// Open a frame of the given kind in the send buffer.  Append the
+    /// payload through [`Conn::payload`], then seal with [`Conn::end`].
+    pub fn begin(&mut self, kind: u8) -> usize {
+        assert!(self.open_frame.is_none(), "nested frame write");
+        let h = begin_frame(&mut self.send);
+        self.send.push(kind);
+        self.open_frame = Some(h);
+        h
+    }
+
+    /// The send buffer, positioned inside the currently open frame.
+    pub fn payload(&mut self) -> &mut Vec<u8> {
+        debug_assert!(self.open_frame.is_some(), "payload outside an open frame");
+        &mut self.send
+    }
+
+    pub fn end(&mut self, h: usize) {
+        assert_eq!(self.open_frame.take(), Some(h), "mismatched frame seal");
+        finish_frame(&mut self.send, h);
+    }
+
+    /// Convenience: queue a payload-free frame.
+    pub fn push_frame(&mut self, kind: u8) {
+        let h = self.begin(kind);
+        self.end(h);
+    }
+
+    /// True when queued bytes are waiting to go out.
+    pub fn has_pending_send(&self) -> bool {
+        self.send_pos < self.send.len()
+    }
+
+    /// Write as much queued data as the socket accepts right now;
+    /// `Ok(true)` once everything queued has been flushed.
+    pub fn flush(&mut self) -> Result<bool, String> {
+        debug_assert!(self.open_frame.is_none(), "flush with an unsealed frame");
+        while self.send_pos < self.send.len() {
+            match self.stream.write(&self.send[self.send_pos..]) {
+                Ok(0) => return Err("socket write: connection closed".into()),
+                Ok(k) => self.send_pos += k,
+                Err(e) if e.kind() == ErrorKind::WouldBlock => return Ok(false),
+                Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+                Err(e) => return Err(format!("socket write: {e}")),
+            }
+        }
+        self.send.clear();
+        self.send_pos = 0;
+        Ok(true)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::net::TcpListener;
+
+    fn pair() -> (Conn, Conn) {
+        let listener = TcpListener::bind("127.0.0.1:0").expect("bind");
+        let addr = listener.local_addr().expect("addr");
+        let a = TcpStream::connect(addr).expect("connect");
+        let (b, _) = listener.accept().expect("accept");
+        (Conn::new(a).expect("conn a"), Conn::new(b).expect("conn b"))
+    }
+
+    fn pump_until_frame(c: &mut Conn) -> Vec<u8> {
+        for _ in 0..10_000 {
+            c.pump_recv().expect("recv");
+            if let Some(r) = c.frame_range().expect("parse") {
+                let body = c.bytes(r.clone()).to_vec();
+                c.consume(&r);
+                return body;
+            }
+            std::thread::sleep(std::time::Duration::from_micros(100));
+        }
+        panic!("no frame arrived");
+    }
+
+    #[test]
+    fn frames_cross_a_loopback_socket() {
+        let (mut a, mut b) = pair();
+        let h = a.begin(7);
+        a.payload().extend_from_slice(b"hello");
+        a.end(h);
+        a.push_frame(9);
+        while !a.flush().expect("flush") {}
+        let first = pump_until_frame(&mut b);
+        assert_eq!(first, b"\x07hello");
+        let second = pump_until_frame(&mut b);
+        assert_eq!(second, b"\x09");
+    }
+
+    #[test]
+    fn eof_is_reported_without_error() {
+        let (a, mut b) = pair();
+        drop(a);
+        for _ in 0..10_000 {
+            b.pump_recv().expect("recv");
+            if b.peer_closed() {
+                return;
+            }
+            std::thread::sleep(std::time::Duration::from_micros(100));
+        }
+        panic!("peer close not observed");
+    }
+}

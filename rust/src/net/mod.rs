@@ -1,0 +1,62 @@
+//! TCP transport for the coordinator — networked runs on std sockets.
+//!
+//! The in-process engines ([`crate::algs::Run`], the sharded
+//! [`crate::coordinator::Coordinator`]) are the reference; this module
+//! runs the *same* protocol over localhost or a real network with no
+//! runtime dependencies beyond `std::net`:
+//!
+//! * [`server::NetCoordinator`] — the coordinator side.  A nonblocking
+//!   `TcpListener` plus a poll-style readiness loop multiplexes every
+//!   worker connection on one thread.  It owns the shared medium (the
+//!   paper's bit/energy accounting), the link model, the trace and the
+//!   event log; per-round broadcasts are coalesced into one batched
+//!   write per connection.
+//! * [`client::run_worker`] — the worker side.  One process hosts one or
+//!   more worker ids, each driving a [`crate::protocol::WorkerCore`]
+//!   built locally via [`crate::protocol::build_core_at`] from the
+//!   manifest the server ships at registration.
+//!
+//! Framing is `[u32 LE length][u8 kind][payload]`
+//! ([`crate::coordinator::message::MAX_FRAME_LEN`]-bounded); kinds and
+//! payload primitives live in [`wire`].  Both ends keep persistent
+//! per-connection buffers, so the round hot path is allocation-free
+//! after warm-up.
+//!
+//! Determinism: the server resolves every phase in ascending worker
+//! order against the same medium and RNG state as the in-process
+//! engines, so a networked run is bit-for-bit identical to
+//! `Coordinator` — trace, bits, energy and checkpoint bytes
+//! (`tests/net_equivalence.rs` locks this across all six algorithm
+//! variants).  A worker disconnect maps onto the churn machinery: the
+//! run degrades exactly like a scheduled `leave`, and a reconnect
+//! warm-starts like a scheduled `join`.
+
+pub mod client;
+pub mod conn;
+pub mod server;
+pub mod wire;
+
+use crate::algs::{AlgSpec, Problem};
+use crate::config::ExperimentManifest;
+use crate::data;
+use crate::graph::{gen, Topology};
+
+/// Build the (problem, topology, algorithm) triple a manifest describes.
+///
+/// Both ends of the transport call this — the server from its local
+/// manifest, the worker from the TOML shipped in the `Welcome` frame —
+/// and must agree bit-for-bit, so the construction mirrors the CLI
+/// exactly: explicit topology spec, else chain for `gadmm`, else the
+/// seeded random bipartite graph.
+pub fn build_session(m: &ExperimentManifest) -> Result<(Problem, Topology, AlgSpec), String> {
+    let e = &m.experiment;
+    let spec = AlgSpec::parse(&m.alg, e.tau0, e.xi, e.omega, e.bits0)?;
+    let topo = match e.topology {
+        Some(spec) => gen::build(&spec, e.workers, e.seed)?.topology,
+        None if m.alg == "gadmm" => Topology::chain(e.workers),
+        None => Topology::random_bipartite(e.workers, e.connectivity, e.seed),
+    };
+    let ds = data::load(e.dataset, e.seed);
+    let problem = Problem::new(&ds, &topo, e.rho, e.mu0, e.seed);
+    Ok((problem, topo, spec))
+}

@@ -1,0 +1,1013 @@
+//! The networked coordinator: the leader loop of
+//! [`crate::coordinator::Coordinator`] run against remote workers over
+//! TCP instead of an in-process shard pool.
+//!
+//! One thread, one nonblocking `TcpListener`, one [`Conn`] per worker —
+//! a poll-style readiness loop pumps every connection, parses frames in
+//! place and resumes partial writes, so N workers multiplex onto a
+//! single I/O thread.  The server owns everything global: the
+//! [`crate::comm::Medium`] (bit/energy accounting and the erasure
+//! stream), the link RNG, churn membership, staleness bookkeeping, the
+//! trace and the event log.  Workers own their
+//! [`crate::protocol::WorkerCore`]s and ship candidates optimistically
+//! (payload + transmit decision in one frame), so a phase costs one
+//! round trip.
+//!
+//! Determinism: phases are resolved in ascending worker order against
+//! the identical medium/RNG state as the in-process engines, and the
+//! server keeps a **hat mirror** — its copy of every worker's last
+//! committed reconstruction, updated by decoding the same wire bytes
+//! every receiver decodes — which makes churn warm-starts and rejoin
+//! payloads bit-identical to the in-process arithmetic.
+//!
+//! Failure model: a clean worker departure (`Goodbye`, carrying loss +
+//! post-detach state) degrades the run exactly like a scheduled
+//! `leave` at the next iteration boundary, and a reconnect rejoins like
+//! a scheduled `join`; an abrupt kill degrades best-effort (the round
+//! treats the worker as censored until the boundary) without the
+//! bit-exactness guarantee.
+
+use std::cell::RefCell;
+use std::net::{SocketAddr, TcpListener};
+use std::time::{Duration, Instant};
+
+use super::conn::Conn;
+use super::wire::{self, kind};
+use crate::algs::{AlgSpec, Problem, Schedule};
+use crate::comm::{EnergyModel, LinkKind, Medium, SlotOutcome};
+use crate::config::ExecutionConfig;
+use crate::coordinator::message;
+use crate::graph::{ChurnKind, Topology};
+use crate::io::checkpoint::{self, MediumState, RunState};
+use crate::io::{EventRecorder, EventSink, PersistableEngine};
+use crate::metrics::{Trace, TracePoint};
+use crate::protocol::{build_core_at, link_rng, CoreState, ProtocolConfig};
+use crate::solver::Backend;
+
+/// Hard ceiling on any wait for remote progress — a wedged worker (or a
+/// worker that was SIGSTOPped rather than killed) fails the run loudly
+/// instead of hanging CI forever.
+const BARRIER_TIMEOUT: Duration = Duration::from_secs(300);
+
+/// Backoff while no connection made progress (the readiness loop spins
+/// on nonblocking sockets; localhost latencies make longer sleeps the
+/// dominant cost).
+const IDLE_BACKOFF: Duration = Duration::from_micros(100);
+
+/// The networked twin of [`crate::coordinator::Coordinator`] — same
+/// engine surface (`step` / `record` cadence / event log /
+/// [`PersistableEngine`]), transport-backed fleet.
+pub struct NetCoordinator {
+    inner: RefCell<NetServer>,
+}
+
+struct NetServer {
+    topo: Topology,
+    problem: Problem,
+    spec: AlgSpec,
+    opts: ExecutionConfig,
+    manifest_toml: String,
+    medium: Medium,
+    trace: Trace,
+    iter: u64,
+    phase_groups: Vec<Vec<usize>>,
+    live_groups: Vec<Vec<usize>>,
+    active: Vec<bool>,
+    stale: Vec<u64>,
+    force_scratch: Vec<bool>,
+    /// The server's copy of every worker's last committed `hat_self` —
+    /// decoded from the same wire bytes the receivers decode, so it is
+    /// bit-identical to what every neighbor holds.  Feeds churn
+    /// warm-start arithmetic and rejoin/attach payloads.
+    mirror: Vec<Vec<f64>>,
+    /// Frozen state of departed workers (from `Goodbye`, or a restored
+    /// checkpoint until the worker re-registers).
+    parked: Vec<Option<CoreState>>,
+    /// Last known per-worker loss (reported each record; frozen at the
+    /// parked value while a worker is away).
+    losses: Vec<f64>,
+    /// Last reported per-worker model (consensus-gap input).
+    thetas: Vec<Vec<f64>>,
+    recorder: Option<EventRecorder>,
+    started: bool,
+    /// Set during the shutdown drain: worker-side closes are then the
+    /// expected end-of-run handshake, not disconnects worth recording.
+    closing: bool,
+
+    // transport
+    listener: TcpListener,
+    conns: Vec<Option<Conn>>,
+    /// Accepted sockets that have not said `Hello` yet.
+    lobby: Vec<Conn>,
+    /// Frame-copy scratch (capacity retained across rounds).
+    frame_scratch: Vec<u8>,
+    /// Per-worker candidate payload bytes for the phase in flight.
+    cand_buf: Vec<Vec<u8>>,
+    /// Candidate metadata: `None` until the reply arrives, then
+    /// `Some(None)` for censored / `Some(Some(bits))` for a transmit.
+    cand: Vec<Option<Option<u64>>>,
+    report_ready: Vec<bool>,
+    exports: Vec<Option<CoreState>>,
+    /// Disconnects awaiting the next iteration boundary (mapped onto
+    /// the churn machinery there).
+    pending_leave: Vec<usize>,
+    /// Reconnects awaiting the next iteration boundary.
+    pending_join: Vec<usize>,
+}
+
+impl NetCoordinator {
+    /// Bind the coordinator on `addr` (e.g. `127.0.0.1:0` for an
+    /// ephemeral port) and build the leader-side run state.  Workers
+    /// register over TCP; [`NetCoordinator::wait_for_fleet`] gates the
+    /// first iteration on all of them being present.
+    pub fn bind(
+        problem: Problem,
+        topo: Topology,
+        spec: AlgSpec,
+        opts: ExecutionConfig,
+        manifest_toml: String,
+        addr: &str,
+    ) -> std::io::Result<NetCoordinator> {
+        spec.validate().expect("invalid AlgSpec");
+        opts.validate().expect("invalid ExecutionConfig");
+        assert_eq!(opts.backend, Backend::Native, "the networked coordinator is native-only");
+        let n = topo.n();
+        let cfg = ProtocolConfig {
+            backend: Backend::Native,
+            artifacts_dir: None,
+            incremental: opts.incremental,
+            seed: opts.seed,
+        };
+        // same stream discipline as `build_cores`: the link model gets
+        // the root RNG advanced past the quantizer forks, so the
+        // networked erasure stream cannot drift from the in-process one
+        let rng = link_rng(&spec, &cfg, n);
+        let energy = EnergyModel::new(opts.energy, n, spec.concurrent_fraction());
+        let medium = Medium::new(
+            energy,
+            opts.energy.slot_s,
+            LinkKind::resolve(opts.link, opts.drop_prob).build(rng, n),
+        );
+        let trace = Trace::new(&spec.name, &problem.dataset_name);
+        if let Some(w) = opts.churn.as_ref().and_then(|c| c.max_worker()) {
+            assert!(w < n, "churn schedule names worker {w}, but the topology has {n} workers");
+        }
+        let phase_groups = match spec.schedule {
+            Schedule::Alternating => vec![topo.heads(), topo.tails()],
+            Schedule::Jacobian => vec![(0..n).collect()],
+        };
+        let listener = TcpListener::bind(addr)?;
+        listener.set_nonblocking(true)?;
+        let d = problem.d;
+        Ok(NetCoordinator {
+            inner: RefCell::new(NetServer {
+                live_groups: phase_groups.clone(),
+                phase_groups,
+                active: vec![true; n],
+                stale: vec![0; n],
+                force_scratch: vec![false; n],
+                mirror: vec![vec![0.0; d]; n],
+                parked: vec![None; n],
+                losses: vec![0.0; n],
+                thetas: vec![vec![0.0; d]; n],
+                recorder: None,
+                started: false,
+                closing: false,
+                listener,
+                conns: (0..n).map(|_| None).collect(),
+                lobby: Vec::new(),
+                frame_scratch: Vec::new(),
+                cand_buf: vec![Vec::new(); n],
+                cand: vec![None; n],
+                report_ready: vec![false; n],
+                exports: vec![None; n],
+                pending_leave: Vec::new(),
+                pending_join: Vec::new(),
+                topo,
+                problem,
+                spec,
+                opts,
+                manifest_toml,
+                medium,
+                trace,
+                iter: 0,
+            }),
+        })
+    }
+
+    /// The bound address (read the ephemeral port back after `:0`).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.inner.borrow().listener.local_addr().expect("listener address")
+    }
+
+    /// Attach a fresh streaming event log (same shape as the in-process
+    /// engines; transport adds `worker_connect` / `worker_disconnect`).
+    pub fn start_event_log(&mut self, sink: Box<dyn EventSink>) {
+        let s = self.inner.get_mut();
+        let mut rec = EventRecorder::new(sink, s.topo.n());
+        rec.rebase(s.iter);
+        rec.run_start(
+            &s.trace.algorithm,
+            &s.problem.dataset_name,
+            s.topo.n(),
+            s.problem.d,
+            s.opts.seed,
+        );
+        s.recorder = Some(rec);
+    }
+
+    /// Attach an event log continuing an earlier one (resume).
+    pub fn resume_event_log(&mut self, sink: Box<dyn EventSink>) {
+        let s = self.inner.get_mut();
+        let mut rec = EventRecorder::new(sink, s.topo.n());
+        rec.rebase(s.iter);
+        s.recorder = Some(rec);
+    }
+
+    /// Block (pumping the readiness loop) until every worker id has
+    /// registered, then mark the run started.
+    pub fn wait_for_fleet(&mut self) {
+        let s = self.inner.get_mut();
+        s.pump_until("fleet registration", |s| s.conns.iter().all(|c| c.is_some()));
+        s.started = true;
+    }
+
+    /// Execute one full iteration (the [`PersistableEngine`] step).
+    pub fn step(&mut self) {
+        self.inner.get_mut().step();
+    }
+
+    /// Run `iters` iterations, then return the trace accumulated so far.
+    pub fn run(&mut self, iters: u64) -> Trace {
+        for _ in 0..iters {
+            self.step();
+        }
+        self.inner.borrow().trace.clone()
+    }
+
+    pub fn iteration(&self) -> u64 {
+        self.inner.borrow().iter
+    }
+
+    pub fn trace(&self) -> Trace {
+        self.inner.borrow().trace.clone()
+    }
+
+    /// Snapshot the durable run state — same layout as the in-process
+    /// engines (`tests/net_equivalence.rs` compares the encoded bytes),
+    /// assembled from live worker exports plus parked departed state.
+    pub fn snapshot_state(&self) -> RunState {
+        self.inner.borrow_mut().snapshot_state()
+    }
+
+    /// Restore from a checkpoint **before** the fleet registers: workers
+    /// receive their `CoreState` (and the membership bitmap) in the
+    /// `Welcome` frame when they connect.
+    pub fn restore_state(&mut self, s: &RunState) {
+        self.inner.get_mut().restore_state(s);
+    }
+
+    /// Send `Shutdown` to every connected worker and drain the sockets.
+    pub fn shutdown(&mut self) {
+        self.inner.get_mut().shutdown();
+    }
+}
+
+impl PersistableEngine for NetCoordinator {
+    fn step(&mut self) {
+        NetCoordinator::step(self);
+    }
+    fn iteration(&self) -> u64 {
+        NetCoordinator::iteration(self)
+    }
+    fn snapshot_state(&self) -> RunState {
+        NetCoordinator::snapshot_state(self)
+    }
+    fn restore_state(&mut self, state: &RunState) {
+        NetCoordinator::restore_state(self, state);
+    }
+    fn recorder_mut(&mut self) -> Option<&mut EventRecorder> {
+        self.inner.get_mut().recorder.as_mut()
+    }
+}
+
+impl NetServer {
+    // ---- readiness loop ------------------------------------------------
+
+    /// One pass over every socket: accept, read, parse + handle complete
+    /// frames, resume partial writes.  Returns whether anything moved.
+    fn pump_io(&mut self) -> bool {
+        let mut progress = self.accept_new();
+        progress |= self.pump_lobby();
+        for i in 0..self.conns.len() {
+            progress |= self.pump_worker(i);
+        }
+        self.flush_all();
+        progress
+    }
+
+    /// Pump until `done` holds, with the barrier timeout as a backstop.
+    fn pump_until(&mut self, what: &str, done: impl Fn(&NetServer) -> bool) {
+        let deadline = Instant::now() + BARRIER_TIMEOUT;
+        loop {
+            let progress = self.pump_io();
+            if done(self) {
+                return;
+            }
+            if !progress {
+                assert!(
+                    Instant::now() < deadline,
+                    "transport barrier timed out waiting for {what} at iteration {}",
+                    self.iter
+                );
+                std::thread::sleep(IDLE_BACKOFF);
+            }
+        }
+    }
+
+    fn accept_new(&mut self) -> bool {
+        let mut got = false;
+        loop {
+            match self.listener.accept() {
+                Ok((stream, _)) => match Conn::new(stream) {
+                    Ok(c) => {
+                        self.lobby.push(c);
+                        got = true;
+                    }
+                    Err(e) => eprintln!("rejecting connection: {e}"),
+                },
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => return got,
+                Err(e) => panic!("listener accept failed: {e}"),
+            }
+        }
+    }
+
+    /// Pump unregistered sockets; the first frame must be `Hello`.
+    fn pump_lobby(&mut self) -> bool {
+        let mut progress = false;
+        let mut k = 0;
+        while k < self.lobby.len() {
+            let mut drop_it = false;
+            let mut hello: Option<usize> = None;
+            {
+                let c = &mut self.lobby[k];
+                match c.pump_recv() {
+                    Ok(g) => progress |= g,
+                    Err(e) => {
+                        eprintln!("lobby socket error: {e}");
+                        drop_it = true;
+                    }
+                }
+                if !drop_it {
+                    match c.frame_range() {
+                        Ok(Some(r)) => {
+                            match parse_hello(c.bytes(r.clone())) {
+                                Ok(id) => hello = Some(id),
+                                Err(e) => {
+                                    eprintln!("rejecting connection: {e}");
+                                    drop_it = true;
+                                }
+                            }
+                            c.consume(&r);
+                        }
+                        Ok(None) => drop_it = c.peer_closed(),
+                        Err(e) => {
+                            eprintln!("rejecting connection: {e}");
+                            drop_it = true;
+                        }
+                    }
+                }
+            }
+            if let Some(id) = hello {
+                let c = self.lobby.swap_remove(k);
+                self.register(id, c);
+                progress = true;
+            } else if drop_it {
+                self.lobby.swap_remove(k);
+                progress = true;
+            } else {
+                k += 1;
+            }
+        }
+        progress
+    }
+
+    /// A worker said `Hello`: welcome it with the resume iteration, the
+    /// membership bitmap, its parked state (if any) and the manifest.
+    fn register(&mut self, id: usize, mut c: Conn) {
+        let n = self.topo.n();
+        if id >= n {
+            eprintln!("rejecting hello: worker id {id} out of range for n = {n}");
+            return;
+        }
+        if self.conns[id].is_some() {
+            eprintln!("rejecting hello: worker {id} is already connected");
+            return;
+        }
+        // A reconnect mid-run rejoins at the next boundary; its own
+        // bitmap entry is forced inactive so it builds the detached
+        // structure its parked state (if any) matches.
+        let rejoining = self.started;
+        let h = c.begin(kind::WELCOME);
+        wire::put_u64(c.payload(), self.iter);
+        wire::put_u64(c.payload(), n as u64);
+        for (j, &on) in self.active.iter().enumerate() {
+            let on = on && !(rejoining && j == id);
+            c.payload().push(on as u8);
+        }
+        match &self.parked[id] {
+            Some(state) => {
+                c.payload().push(1);
+                let bytes = checkpoint::encode_core(state);
+                wire::put_u64(c.payload(), bytes.len() as u64);
+                c.payload().extend_from_slice(&bytes);
+            }
+            None => c.payload().push(0),
+        }
+        c.payload().extend_from_slice(self.manifest_toml.as_bytes());
+        c.end(h);
+        self.conns[id] = Some(c);
+        if rejoining {
+            self.pending_join.push(id);
+        }
+        if let Some(rec) = &mut self.recorder {
+            rec.worker_connect(self.iter, id);
+        }
+    }
+
+    /// Read frames from worker `i`'s socket and dispatch them.
+    fn pump_worker(&mut self, i: usize) -> bool {
+        let Some(c) = self.conns[i].as_mut() else { return false };
+        let mut progress = match c.pump_recv() {
+            Ok(g) => g,
+            Err(e) => {
+                self.drop_worker(i, &format!("read failed: {e}"));
+                return true;
+            }
+        };
+        loop {
+            let Some(c) = self.conns[i].as_mut() else { break };
+            let range = match c.frame_range() {
+                Ok(r) => r,
+                Err(e) => {
+                    self.drop_worker(i, &format!("bad frame: {e}"));
+                    return true;
+                }
+            };
+            let Some(range) = range else {
+                if c.peer_closed() {
+                    self.drop_worker(i, "peer closed without goodbye");
+                    return true;
+                }
+                break;
+            };
+            let mut scratch = std::mem::take(&mut self.frame_scratch);
+            scratch.clear();
+            {
+                let c = self.conns[i].as_mut().expect("conn");
+                scratch.extend_from_slice(c.bytes(range.clone()));
+                c.consume(&range);
+            }
+            let res = self.handle_worker_frame(i, &scratch);
+            self.frame_scratch = scratch;
+            if let Err(e) = res {
+                self.drop_worker(i, &e);
+                return true;
+            }
+            progress = true;
+        }
+        progress
+    }
+
+    fn handle_worker_frame(&mut self, i: usize, body: &[u8]) -> Result<(), String> {
+        let (&k, rest) = body.split_first().ok_or("empty frame")?;
+        let mut r = wire::Reader::new(rest);
+        match k {
+            kind::CANDIDATE => {
+                let transmit = r.u8("transmit flag")? != 0;
+                if transmit {
+                    let bits = r.u64("payload bits")?;
+                    self.cand_buf[i].clear();
+                    self.cand_buf[i].extend_from_slice(r.rest());
+                    self.cand[i] = Some(Some(bits));
+                } else {
+                    self.cand[i] = Some(None);
+                }
+            }
+            kind::REPORT => {
+                self.losses[i] = r.f64("reported loss")?;
+                r.f64s_into(&mut self.thetas[i], "reported theta")?;
+                self.report_ready[i] = true;
+            }
+            kind::EXPORT => {
+                self.exports[i] = Some(checkpoint::decode_core(r.rest())?);
+            }
+            kind::GOODBYE => {
+                let loss = r.f64("goodbye loss")?;
+                let state = checkpoint::decode_core(r.rest())?;
+                self.losses[i] = loss;
+                self.thetas[i].copy_from_slice(&state.theta);
+                self.parked[i] = Some(state);
+                self.conns[i] = None;
+                if self.active[i] && !self.pending_leave.contains(&i) {
+                    self.pending_leave.push(i);
+                }
+                if let Some(rec) = &mut self.recorder {
+                    rec.worker_disconnect(self.iter, i);
+                }
+            }
+            kind::HELLO => return Err("unexpected hello on a registered connection".into()),
+            other => return Err(format!("unexpected frame kind {other} from worker {i}")),
+        }
+        Ok(())
+    }
+
+    /// Tear down worker `i`'s connection (abrupt path: no parked state).
+    /// The run degrades at the next boundary like a scheduled leave.
+    fn drop_worker(&mut self, i: usize, reason: &str) {
+        if self.conns[i].take().is_none() || self.closing {
+            return;
+        }
+        eprintln!("worker {i} disconnected: {reason}");
+        if self.active[i] && !self.pending_leave.contains(&i) {
+            self.pending_leave.push(i);
+        }
+        if let Some(rec) = &mut self.recorder {
+            rec.worker_disconnect(self.iter, i);
+        }
+    }
+
+    fn flush_all(&mut self) {
+        for i in 0..self.conns.len() {
+            self.flush_one(i);
+        }
+    }
+
+    fn flush_one(&mut self, i: usize) {
+        let err = {
+            let Some(c) = self.conns[i].as_mut() else { return };
+            c.flush().err()
+        };
+        if let Some(e) = err {
+            self.drop_worker(i, &format!("flush failed: {e}"));
+        }
+    }
+
+    // ---- engine --------------------------------------------------------
+
+    /// Bottleneck broadcast distance over **active** neighbors (the
+    /// in-process engines' twin fold).
+    fn active_neighbor_distance(&self, i: usize) -> f64 {
+        self.topo
+            .neighbors(i)
+            .iter()
+            .filter(|&&m| self.active[m])
+            .map(|&m| self.topo.distance(i, m))
+            .fold(0.0, f64::max)
+    }
+
+    /// One phase over `group`: dispatch `Phase` frames (one batched
+    /// write per connection), barrier on the candidate replies, then
+    /// resolve the broadcasts in ascending worker order — identical
+    /// bookkeeping to `Coordinator::run_phase`.
+    fn run_phase(&mut self, group: &[usize], k_plus_1: u64) {
+        let tau = self.opts.staleness_bound;
+        for &i in group {
+            self.force_scratch[i] = tau.is_some_and(|t| self.stale[i] >= t);
+        }
+        debug_assert!(group.windows(2).all(|w| w[0] < w[1]), "group must be increasing");
+        // 1. dispatch: every live member computes its primal + candidate
+        // remotely and replies with the payload and transmit decision
+        for &i in group {
+            self.cand[i] = None;
+            match self.conns[i].as_mut() {
+                Some(c) => {
+                    let h = c.begin(kind::PHASE);
+                    wire::put_u64(c.payload(), k_plus_1);
+                    c.payload().push(self.force_scratch[i] as u8);
+                    c.end(h);
+                }
+                // vanished abruptly mid-iteration: the round sees it as
+                // censored; the boundary will degrade it properly
+                None => self.cand[i] = Some(None),
+            }
+        }
+        self.flush_all();
+        self.pump_until("phase candidates", |s| {
+            group.iter().all(|&i| s.cand[i].is_some() || s.conns[i].is_none())
+        });
+        // 2. sequential resolution on the leader, ascending worker order
+        for &i in group {
+            if let Some(rec) = &mut self.recorder {
+                rec.note_attempt();
+            }
+            let force = self.force_scratch[i];
+            let Some(Some(bits)) = self.cand[i] else {
+                if tau.is_some() {
+                    self.stale[i] += 1;
+                }
+                continue;
+            };
+            let dist = self.active_neighbor_distance(i);
+            let landed = match tau {
+                None => self.medium.transmit(i, self.iter, bits, dist),
+                Some(_) => matches!(
+                    self.medium.transmit_bounded(i, self.iter, bits, dist, force),
+                    SlotOutcome::Landed
+                ),
+            };
+            if landed {
+                assert!(
+                    message::decode_into_slot(&self.cand_buf[i], &mut self.mirror[i]),
+                    "malformed candidate payload from worker {i}"
+                );
+                if let Some(c) = self.conns[i].as_mut() {
+                    c.push_frame(kind::COMMIT);
+                }
+                for &m in self.topo.neighbors(i) {
+                    if !self.active[m] {
+                        continue;
+                    }
+                    if let Some(c) = self.conns[m].as_mut() {
+                        let h = c.begin(kind::DELIVER);
+                        wire::put_u64(c.payload(), i as u64);
+                        c.payload().extend_from_slice(&self.cand_buf[i]);
+                        c.end(h);
+                    }
+                }
+                if force {
+                    let staleness = self.stale[i];
+                    if let Some(rec) = &mut self.recorder {
+                        rec.stale_refresh(self.iter, i, staleness);
+                    }
+                }
+                self.stale[i] = 0;
+            } else {
+                if let Some(c) = self.conns[i].as_mut() {
+                    c.push_frame(kind::ABORT);
+                }
+                if tau.is_some() {
+                    self.stale[i] += 1;
+                }
+            }
+        }
+        self.medium.end_slot();
+    }
+
+    fn refresh_live_groups(&mut self) {
+        self.live_groups = self
+            .phase_groups
+            .iter()
+            .map(|g| {
+                g.iter()
+                    .copied()
+                    .filter(|&i| {
+                        self.active[i]
+                            && self.topo.neighbors(i).iter().any(|&m| self.active[m])
+                    })
+                    .collect()
+            })
+            .collect();
+    }
+
+    /// Scheduled leave (or the boundary half of a clean disconnect):
+    /// detach the worker everywhere, both directions, ascending order —
+    /// the wire version of `protocol::apply_churn_event`.
+    fn leave(&mut self, w: usize) {
+        assert!(self.active[w], "leave while absent");
+        if let Some(c) = self.conns[w].as_mut() {
+            c.push_frame(kind::DETACH_ALL);
+        }
+        for &m in self.topo.neighbors(w) {
+            if !self.active[m] {
+                continue;
+            }
+            if let Some(c) = self.conns[m].as_mut() {
+                let h = c.begin(kind::DETACH);
+                wire::put_u64(c.payload(), w as u64);
+                c.end(h);
+            }
+        }
+        self.active[w] = false;
+    }
+
+    /// Scheduled join (or the boundary half of a reconnect): warm-start
+    /// from the mirror mean over the active bipartite group — the same
+    /// arithmetic as `protocol::apply_churn_event`, evaluated against
+    /// the mirror, which holds exactly the live cores' `hat_self`s.
+    fn join(&mut self, w: usize) {
+        assert!(!self.active[w], "join while present");
+        let d = self.problem.d;
+        let mut warm = vec![0.0; d];
+        let mut count = 0usize;
+        for (j, &on) in self.active.iter().enumerate() {
+            if j != w && on && self.topo.group(j) == self.topo.group(w) {
+                for (acc, v) in warm.iter_mut().zip(&self.mirror[j]) {
+                    *acc += *v;
+                }
+                count += 1;
+            }
+        }
+        if count > 0 {
+            let inv = 1.0 / count as f64;
+            warm.iter_mut().for_each(|v| *v *= inv);
+        } else {
+            warm.copy_from_slice(&self.mirror[w]);
+        }
+        if let Some(c) = self.conns[w].as_mut() {
+            let h = c.begin(kind::REJOIN);
+            wire::put_f64s(c.payload(), &warm);
+            let peers: Vec<usize> = self
+                .topo
+                .neighbors(w)
+                .iter()
+                .copied()
+                .filter(|&m| self.active[m])
+                .collect();
+            wire::put_u64(c.payload(), peers.len() as u64);
+            for m in peers {
+                wire::put_u64(c.payload(), m as u64);
+                wire::put_f64s(c.payload(), &self.mirror[m]);
+            }
+            c.end(h);
+        }
+        for &m in self.topo.neighbors(w) {
+            if !self.active[m] {
+                continue;
+            }
+            if let Some(c) = self.conns[m].as_mut() {
+                let h = c.begin(kind::ATTACH);
+                wire::put_u64(c.payload(), w as u64);
+                wire::put_f64s(c.payload(), &warm);
+                c.end(h);
+            }
+        }
+        self.mirror[w].copy_from_slice(&warm);
+        self.parked[w] = None;
+        self.active[w] = true;
+    }
+
+    /// Start-of-iteration boundary: disconnect-driven leaves, reconnect
+    /// joins, then the scheduled churn events — each one logged, each
+    /// one mirrored to the fleet over the wire.
+    fn apply_boundary_churn(&mut self) {
+        let mut changed = false;
+        let mut leaves = std::mem::take(&mut self.pending_leave);
+        leaves.sort_unstable();
+        leaves.dedup();
+        for w in leaves {
+            if !self.active[w] {
+                continue;
+            }
+            self.leave(w);
+            self.stale[w] = 0;
+            changed = true;
+            if let Some(rec) = &mut self.recorder {
+                rec.worker_leave(self.iter, w);
+            }
+        }
+        let mut joins = std::mem::take(&mut self.pending_join);
+        joins.sort_unstable();
+        joins.dedup();
+        for w in joins {
+            if self.active[w] || self.conns[w].is_none() {
+                continue;
+            }
+            self.join(w);
+            self.stale[w] = 0;
+            changed = true;
+            if let Some(rec) = &mut self.recorder {
+                rec.worker_join(self.iter, w);
+            }
+        }
+        if let Some(churn) = &self.opts.churn {
+            let events = churn.events_at(self.iter).to_vec();
+            for e in &events {
+                match e.kind {
+                    ChurnKind::Leave => self.leave(e.worker),
+                    ChurnKind::Join => self.join(e.worker),
+                }
+                self.stale[e.worker] = 0;
+                changed = true;
+                if let Some(rec) = &mut self.recorder {
+                    match e.kind {
+                        ChurnKind::Leave => rec.worker_leave(self.iter, e.worker),
+                        ChurnKind::Join => rec.worker_join(self.iter, e.worker),
+                    }
+                }
+            }
+        }
+        if changed {
+            self.refresh_live_groups();
+        }
+    }
+
+    fn step(&mut self) {
+        assert!(self.started, "step before wait_for_fleet");
+        self.apply_boundary_churn();
+        let k_plus_1 = self.iter + 1;
+        let groups = std::mem::take(&mut self.live_groups);
+        for group in &groups {
+            self.run_phase(group, k_plus_1);
+        }
+        self.live_groups = groups;
+        // dual update: every connected worker runs it iff it has
+        // neighbors — for active workers that is exactly the in-process
+        // `active && !neighbors.is_empty()` condition (detached workers
+        // have no neighbors by construction)
+        for c in self.conns.iter_mut().flatten() {
+            c.push_frame(kind::DUAL);
+        }
+        self.flush_all();
+        self.iter += 1;
+        if self.iter % self.opts.record_every == 0 {
+            self.record();
+        }
+    }
+
+    fn record(&mut self) {
+        // losses + thetas from every connected worker (inactive ones
+        // report their frozen state — same values the in-process record
+        // reads from frozen cores); departed workers contribute the
+        // loss/theta parked at their goodbye
+        for (ready, conn) in self.report_ready.iter_mut().zip(self.conns.iter_mut()) {
+            *ready = false;
+            if let Some(c) = conn {
+                c.push_frame(kind::REPORT_REQ);
+            }
+        }
+        self.flush_all();
+        self.pump_until("record reports", |s| {
+            s.report_ready
+                .iter()
+                .enumerate()
+                .all(|(i, &ready)| ready || s.conns[i].is_none())
+        });
+        let obj: f64 = self.losses.iter().sum();
+        let mut consensus: f64 = 0.0;
+        for &(h, t) in self.topo.edges() {
+            if !(self.active[h] && self.active[t]) {
+                continue;
+            }
+            let diff: f64 = self.thetas[h]
+                .iter()
+                .zip(&self.thetas[t])
+                .map(|(a, b)| (a - b) * (a - b))
+                .sum::<f64>()
+                .sqrt();
+            consensus = consensus.max(diff);
+        }
+        let log = self.medium.log();
+        let point = TracePoint {
+            iteration: self.iter,
+            loss_gap: (obj - self.problem.f_star).abs(),
+            consensus_gap: consensus,
+            cum_rounds: log.rounds(),
+            cum_bits: log.total_bits,
+            cum_energy_j: log.total_energy_j,
+        };
+        self.trace.push(point);
+        if let Some(rec) = &mut self.recorder {
+            rec.record(&point, log, self.medium.sim_time_s());
+        }
+    }
+
+    // ---- persistence ---------------------------------------------------
+
+    fn snapshot_state(&mut self) -> RunState {
+        for (slot, conn) in self.exports.iter_mut().zip(self.conns.iter_mut()) {
+            *slot = None;
+            if let Some(c) = conn {
+                c.push_frame(kind::EXPORT_REQ);
+            }
+        }
+        self.flush_all();
+        self.pump_until("checkpoint exports", |s| {
+            s.exports
+                .iter()
+                .enumerate()
+                .all(|(i, e)| e.is_some() || s.conns[i].is_none())
+        });
+        let cores: Vec<CoreState> = (0..self.conns.len())
+            .map(|i| match self.exports[i].take() {
+                Some(cs) => cs,
+                None => self.parked[i].clone().unwrap_or_else(|| {
+                    panic!("cannot checkpoint: worker {i} vanished without exporting state")
+                }),
+            })
+            .collect();
+        let log = self.medium.log();
+        RunState {
+            iteration: self.iter,
+            cores,
+            medium: MediumState {
+                rounds: log.rounds(),
+                total_bits: log.total_bits,
+                total_energy_j: log.total_energy_j,
+                sim_time_s: self.medium.sim_time_s(),
+                link: self.medium.link_state(),
+            },
+            trace: self.trace.clone(),
+            active: self.active.clone(),
+            stale: self.stale.clone(),
+        }
+    }
+
+    fn restore_state(&mut self, s: &RunState) {
+        let n = self.topo.n();
+        assert_eq!(s.cores.len(), n, "checkpoint is for a different worker count");
+        assert_eq!(s.active.len(), n, "checkpoint dynamic section size");
+        assert_eq!(s.stale.len(), n, "checkpoint dynamic section size");
+        assert!(
+            !self.started && self.conns.iter().all(|c| c.is_none()),
+            "restore must happen before the fleet registers"
+        );
+        // the transport takes the checkpoint's membership as-is (it may
+        // include disconnect-driven leaves no schedule describes);
+        // workers rebuild their structure from the bitmap in `Welcome`
+        self.active.clone_from(&s.active);
+        self.stale.copy_from_slice(&s.stale);
+        for (i, cs) in s.cores.iter().enumerate() {
+            self.mirror[i].copy_from_slice(&cs.hat_self);
+            self.thetas[i].copy_from_slice(&cs.theta);
+            self.parked[i] = Some(cs.clone());
+            if !s.active[i] {
+                // a departed worker may never reconnect; its frozen loss
+                // must survive the restore for the record sums
+                self.losses[i] = self.frozen_loss(i, cs);
+            }
+        }
+        self.medium.restore(
+            s.medium.rounds,
+            s.medium.total_bits,
+            s.medium.total_energy_j,
+            s.medium.sim_time_s,
+            &s.medium.link,
+        );
+        self.trace = s.trace.clone();
+        self.iter = s.iteration;
+        self.refresh_live_groups();
+        if let Some(rec) = &mut self.recorder {
+            rec.rebase(s.iteration);
+        }
+    }
+
+    /// Loss of a frozen (departed) worker, recomputed server-side: build
+    /// its core, shape it to the parked (detached) structure, import and
+    /// evaluate — the same arithmetic the worker itself ran.
+    fn frozen_loss(&self, i: usize, state: &CoreState) -> f64 {
+        let cfg = ProtocolConfig {
+            backend: Backend::Native,
+            artifacts_dir: None,
+            incremental: self.opts.incremental,
+            seed: self.opts.seed,
+        };
+        let mut core = build_core_at(&self.problem, &self.topo, &self.spec, &cfg, i);
+        let nbrs: Vec<usize> = core.neighbors().to_vec();
+        let keep = state.hat_nbrs.len();
+        if keep == 0 {
+            for m in nbrs {
+                core.detach_neighbor(m);
+            }
+        } else {
+            assert_eq!(keep, nbrs.len(), "parked state for worker {i} has unexpected degree");
+        }
+        core.import_state(state);
+        core.loss()
+    }
+
+    fn shutdown(&mut self) {
+        self.closing = true;
+        for c in self.conns.iter_mut().flatten() {
+            c.push_frame(kind::SHUTDOWN);
+        }
+        let deadline = Instant::now() + BARRIER_TIMEOUT;
+        loop {
+            let progress = self.pump_io();
+            let pending = self
+                .conns
+                .iter()
+                .flatten()
+                .any(|c| c.has_pending_send() && !c.peer_closed());
+            if !pending || Instant::now() > deadline {
+                break;
+            }
+            if !progress {
+                std::thread::sleep(IDLE_BACKOFF);
+            }
+        }
+        for c in self.conns.iter_mut() {
+            *c = None;
+        }
+    }
+}
+
+fn parse_hello(body: &[u8]) -> Result<usize, String> {
+    let (&k, rest) = body.split_first().ok_or("empty frame")?;
+    if k != kind::HELLO {
+        return Err(format!("expected hello, got frame kind {k}"));
+    }
+    let mut r = wire::Reader::new(rest);
+    let id = r.u64("worker id")? as usize;
+    Ok(id)
+}

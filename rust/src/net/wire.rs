@@ -1,0 +1,160 @@
+//! Frame-body primitives of the TCP transport.
+//!
+//! Every frame is `[u32 LE length][u8 kind][payload]` — the length layer
+//! lives in [`crate::coordinator::message`] (`begin_frame` /
+//! `parse_frame`, bounded by `MAX_FRAME_LEN`); this module defines the
+//! kind bytes and the little-endian payload primitives both ends share.
+//! Writers append into persistent per-connection send buffers and the
+//! reader borrows the receive buffer in place, so the round hot path
+//! allocates nothing after connection warm-up.
+
+/// Frame kinds.  Workers send the low range, the server the high range —
+/// a stray frame in the wrong direction fails loudly instead of aliasing.
+pub mod kind {
+    /// Worker -> server: register worker `id` on this connection.
+    pub const HELLO: u8 = 1;
+    /// Worker -> server: phase reply — transmit decision plus the
+    /// optimistically encoded pending payload (trailing bytes).
+    pub const CANDIDATE: u8 = 2;
+    /// Worker -> server: loss + theta for a trace record.
+    pub const REPORT: u8 = 3;
+    /// Worker -> server: checkpoint export (`CoreState` bytes trail).
+    pub const EXPORT: u8 = 4;
+    /// Worker -> server: clean departure — loss + post-detach state.
+    pub const GOODBYE: u8 = 5;
+
+    /// Server -> worker: registration accepted; resume iteration,
+    /// membership bitmap, optional `CoreState`, manifest TOML (trailing).
+    pub const WELCOME: u8 = 16;
+    /// Server -> worker: run one phase (`k_plus_1`, force flag).
+    pub const PHASE: u8 = 17;
+    /// Server -> worker: the pending broadcast landed — commit it.
+    pub const COMMIT: u8 = 18;
+    /// Server -> worker: the pending broadcast was lost — abort it.
+    pub const ABORT: u8 = 19;
+    /// Server -> worker: a neighbor's committed payload (trailing bytes).
+    pub const DELIVER: u8 = 20;
+    /// Server -> worker: end of iteration — run the dual update.
+    pub const DUAL: u8 = 21;
+    /// Server -> worker: send a `REPORT`.
+    pub const REPORT_REQ: u8 = 22;
+    /// Server -> worker: send an `EXPORT`.
+    pub const EXPORT_REQ: u8 = 23;
+    /// Server -> worker: detach the named departed peer.
+    pub const DETACH: u8 = 24;
+    /// Server -> worker: scheduled leave — detach every neighbor.
+    pub const DETACH_ALL: u8 = 25;
+    /// Server -> worker: attach a rejoining peer with its warm hat.
+    pub const ATTACH: u8 = 26;
+    /// Server -> worker: warm-start a rejoin and attach the listed peers.
+    pub const REJOIN: u8 = 27;
+    /// Server -> worker: run complete — close cleanly.
+    pub const SHUTDOWN: u8 = 28;
+}
+
+pub fn put_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+pub fn put_f64(out: &mut Vec<u8>, v: f64) {
+    put_u64(out, v.to_bits());
+}
+
+/// Length-prefixed `f64` vector (bit-exact, like the checkpoint codec).
+pub fn put_f64s(out: &mut Vec<u8>, v: &[f64]) {
+    put_u64(out, v.len() as u64);
+    out.reserve(v.len() * 8);
+    for &x in v {
+        put_f64(out, x);
+    }
+}
+
+/// Cursor over one frame body with descriptive errors — a malformed
+/// frame drops the connection, it never panics the engine.
+pub struct Reader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    pub fn new(buf: &'a [u8]) -> Reader<'a> {
+        Reader { buf, pos: 0 }
+    }
+
+    fn take(&mut self, n: usize, what: &str) -> Result<&'a [u8], String> {
+        if self.pos + n > self.buf.len() {
+            return Err(format!(
+                "frame truncated reading {what}: wanted {n} bytes at offset {} of {}",
+                self.pos,
+                self.buf.len()
+            ));
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    pub fn u8(&mut self, what: &str) -> Result<u8, String> {
+        Ok(self.take(1, what)?[0])
+    }
+
+    pub fn u64(&mut self, what: &str) -> Result<u64, String> {
+        Ok(u64::from_le_bytes(self.take(8, what)?.try_into().expect("8 bytes")))
+    }
+
+    pub fn f64(&mut self, what: &str) -> Result<f64, String> {
+        Ok(f64::from_bits(self.u64(what)?))
+    }
+
+    /// Decode a `put_f64s` vector **in place** into `slot` (dimension
+    /// must match — the transport never resizes model buffers).
+    pub fn f64s_into(&mut self, slot: &mut [f64], what: &str) -> Result<(), String> {
+        let n = self.u64(what)? as usize;
+        if n != slot.len() {
+            return Err(format!("{what}: dimension {n} does not match expected {}", slot.len()));
+        }
+        for v in slot.iter_mut() {
+            *v = self.f64(what)?;
+        }
+        Ok(())
+    }
+
+    /// Remaining bytes of the frame (trailing payload fields).
+    pub fn rest(self) -> &'a [u8] {
+        &self.buf[self.pos..]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn primitives_round_trip() {
+        let mut buf = Vec::new();
+        put_u64(&mut buf, 42);
+        put_f64(&mut buf, -0.0);
+        put_f64s(&mut buf, &[1.5, f64::MIN_POSITIVE]);
+        buf.extend_from_slice(b"tail");
+        let mut r = Reader::new(&buf);
+        assert_eq!(r.u64("a").unwrap(), 42);
+        assert_eq!(r.f64("b").unwrap().to_bits(), (-0.0f64).to_bits());
+        let mut slot = [0.0; 2];
+        r.f64s_into(&mut slot, "v").unwrap();
+        assert_eq!(slot[0], 1.5);
+        assert_eq!(slot[1].to_bits(), f64::MIN_POSITIVE.to_bits());
+        assert_eq!(r.rest(), b"tail");
+    }
+
+    #[test]
+    fn reader_errors_are_descriptive() {
+        let mut r = Reader::new(&[1, 2]);
+        let err = r.u64("field-x").unwrap_err();
+        assert!(err.contains("field-x"), "{err}");
+        let mut buf = Vec::new();
+        put_f64s(&mut buf, &[1.0; 3]);
+        let mut r = Reader::new(&buf);
+        let mut slot = [0.0; 2];
+        assert!(r.f64s_into(&mut slot, "hat").unwrap_err().contains("dimension"));
+    }
+}

@@ -19,12 +19,15 @@
 //!   an always-recompute engine (`incremental = false`, locked by
 //!   `tests/incremental.rs`) and censored/dropped rounds cost nothing.
 //!
-//! The two drivers are deliberately thin:
+//! The drivers are deliberately thin:
 //! * [`crate::algs::Run`] — the sequential simulator — delivers committed
 //!   hats in-process as `f64` slices;
 //! * [`crate::coordinator`] — the sharded system engine — encodes the
 //!   committed payload to wire bytes ([`crate::coordinator::message`]),
-//!   and receivers decode straight into their [`WorkerCore`] slot.
+//!   and receivers decode straight into their [`WorkerCore`] slot;
+//! * [`crate::net`] — the TCP transport — runs the same state machine in
+//!   a separate worker process ([`build_core_at`] replays the fleet's
+//!   construction for one id) and ships the wire bytes over a socket.
 //!
 //! Both paths reconstruct bit-identical hats (the quantizer's sender-side
 //! reconstruction equals the receiver-side decode by construction, and
@@ -294,6 +297,28 @@ impl WorkerCore {
         }
     }
 
+    /// Payload of the prepared-but-**unresolved** candidate (valid
+    /// between [`WorkerCore::prepare_broadcast_gated`] and the
+    /// commit/abort resolution).  The networked worker encodes this
+    /// optimistically and ships it alongside its transmit decision —
+    /// the leader then resolves the erasure draw without a second round
+    /// trip.  Full-precision reads the candidate scratch (identical to
+    /// `hat_self` only *after* a commit); quantized parts are the same
+    /// either side of the commit.
+    pub fn pending_payload(&self) -> PayloadRef<'_> {
+        debug_assert!(self.pending_bits.is_some(), "pending payload without a pending broadcast");
+        match self.last_quant {
+            Some((radius, bits)) => {
+                debug_assert!(
+                    self.codes.len() == self.d,
+                    "codes not collected: call enable_code_collection at setup"
+                );
+                PayloadRef::Quantized { radius, bits, codes: &self.codes }
+            }
+            None => PayloadRef::Full(&self.cand),
+        }
+    }
+
     /// Receive a neighbor's committed hat in-process (the simulator's
     /// delivery path): overwrite the slot with the sender's exact `f64`
     /// reconstruction.
@@ -537,42 +562,51 @@ fn build_solvers(
     schedule: Schedule,
     pool: Option<&mut crate::parallel::WorkerPool>,
 ) -> Vec<Box<dyn SubproblemSolver>> {
+    crate::parallel::map_maybe_pool(pool, topo.n(), |i| {
+        build_solver_at(problem, topo, cfg, schedule, i)
+    })
+}
+
+/// Build worker `i`'s solver alone (what [`build_solvers`] fans out, and
+/// what a networked worker process builds for just its own ids).
+fn build_solver_at(
+    problem: &Problem,
+    topo: &Topology,
+    cfg: &ProtocolConfig,
+    schedule: Schedule,
+    i: usize,
+) -> Box<dyn SubproblemSolver> {
     use crate::config::Task;
-    let build_one = |i: usize| -> Box<dyn SubproblemSolver> {
-        let sh = &problem.shards[i];
-        // Jacobian updates carry the doubled penalty rho*d_i||theta||^2
-        // of DCADMM (see `WorkerCore::primal_update`'s anchor); the
-        // solver's quadratic coefficient is rho*degree/2, so feed it 2*d_i.
-        let degree = match schedule {
-            Schedule::Alternating => topo.degree(i),
-            Schedule::Jacobian => 2 * topo.degree(i),
-        };
-        match (cfg.backend, problem.task) {
-            (Backend::Native, Task::Linear) => Box::new(LinearSolver::from_shard(
-                Arc::clone(sh),
-                problem.rho,
-                degree,
-            )),
-            (Backend::Native, Task::Logistic) => Box::new(LogisticSolver::from_shard(
-                Arc::clone(sh),
-                problem.mu0,
-                problem.rho,
-                degree,
-            )),
-            (Backend::Pjrt, task) => crate::runtime::pjrt_solver(
-                cfg.artifacts_dir
-                    .as_deref()
-                    .expect("PJRT backend needs artifacts_dir"),
-                task,
-                sh,
-                problem.rho,
-                problem.mu0,
-                degree,
-            )
-            .expect("failed to build PJRT solver"),
-        }
+    let sh = &problem.shards[i];
+    // Jacobian updates carry the doubled penalty rho*d_i||theta||^2
+    // of DCADMM (see `WorkerCore::primal_update`'s anchor); the
+    // solver's quadratic coefficient is rho*degree/2, so feed it 2*d_i.
+    let degree = match schedule {
+        Schedule::Alternating => topo.degree(i),
+        Schedule::Jacobian => 2 * topo.degree(i),
     };
-    crate::parallel::map_maybe_pool(pool, topo.n(), build_one)
+    match (cfg.backend, problem.task) {
+        (Backend::Native, Task::Linear) => {
+            Box::new(LinearSolver::from_shard(Arc::clone(sh), problem.rho, degree))
+        }
+        (Backend::Native, Task::Logistic) => Box::new(LogisticSolver::from_shard(
+            Arc::clone(sh),
+            problem.mu0,
+            problem.rho,
+            degree,
+        )),
+        (Backend::Pjrt, task) => crate::runtime::pjrt_solver(
+            cfg.artifacts_dir
+                .as_deref()
+                .expect("PJRT backend needs artifacts_dir"),
+            task,
+            sh,
+            problem.rho,
+            problem.mu0,
+            degree,
+        )
+        .expect("failed to build PJRT solver"),
+    }
 }
 
 /// Build the worker fleet for one run.  This is the **single** place both
@@ -613,6 +647,56 @@ pub fn build_cores(
         })
         .collect();
     (cores, rng)
+}
+
+/// Build **one** worker's core in isolation — the networked worker
+/// process's construction path.  Replays the exact quantizer-stream fork
+/// sequence of [`build_cores`] up to worker `i` (each fork consumes one
+/// root draw, so replay is `i + 1` cheap RNG steps, no solver work for
+/// the other workers), so the resulting core is bit-identical to the
+/// in-process fleet's `cores[i]`.
+pub fn build_core_at(
+    problem: &Problem,
+    topo: &Topology,
+    spec: &AlgSpec,
+    cfg: &ProtocolConfig,
+    i: usize,
+) -> WorkerCore {
+    assert_eq!(problem.shards.len(), topo.n());
+    assert!(i < topo.n(), "worker id {i} out of range for n = {}", topo.n());
+    let mut rng = Pcg64::new(cfg.seed ^ 0xA16_0001);
+    let quantizer = spec.quant.as_ref().map(|q| {
+        for j in 0..i {
+            let _ = rng.fork(j as u64);
+        }
+        Quantizer::new(*q, rng.fork(i as u64))
+    });
+    WorkerCore::new(WorkerSetup {
+        id: i,
+        d: problem.d,
+        rho: problem.rho,
+        neighbors: topo.neighbors(i).to_vec(),
+        solver: build_solver_at(problem, topo, cfg, spec.schedule, i),
+        censor: spec.censor,
+        quantizer,
+        jacobian_anchor: spec.schedule == Schedule::Jacobian,
+        incremental: cfg.incremental,
+    })
+}
+
+/// The link-model RNG both engines hand to `LinkKind::build`: the
+/// construction root stream after [`build_cores`]'s quantizer forks
+/// (`n` draws for quantized specs, none otherwise).  Lets the networked
+/// server — which builds no cores of its own — derive the identical
+/// stream position.
+pub fn link_rng(spec: &AlgSpec, cfg: &ProtocolConfig, n: usize) -> Pcg64 {
+    let mut rng = Pcg64::new(cfg.seed ^ 0xA16_0001);
+    if spec.quant.is_some() {
+        for j in 0..n {
+            let _ = rng.fork(j as u64);
+        }
+    }
+    rng
 }
 
 impl Default for ProtocolConfig {
@@ -855,6 +939,34 @@ mod tests {
         assert_eq!(cores[1].hat_self(), &expect[..]);
         assert_eq!(cores[1].theta(), &expect[..]);
         assert!(cores[1].alpha().iter().all(|&a| a == 0.0));
+    }
+
+    #[test]
+    fn build_core_at_matches_fleet_construction() {
+        let topo = Topology::random_bipartite(6, 0.5, 9);
+        let ds = synthetic::linear_dataset(48, 4, 9);
+        let p = Problem::new(&ds, &topo, 1.0, 0.0, 9);
+        for spec in [AlgSpec::ggadmm(), AlgSpec::cq_ggadmm(2.0, 0.9, 0.995, 3)] {
+            let cfg = ProtocolConfig::default();
+            let (mut fleet, mut fleet_rng) = build_cores(&p, &topo, &spec, &cfg, None);
+            // state equality via export (covers quantizer RNG position)
+            for i in 0..topo.n() {
+                let mut solo = build_core_at(&p, &topo, &spec, &cfg, i);
+                assert_eq!(solo.export_state(), fleet[i].export_state(), "worker {i}");
+                // run a phase on both so the quantizer streams draw
+                solo.primal_update();
+                fleet[i].primal_update();
+                let a = solo.prepare_broadcast(1);
+                let b = fleet[i].prepare_broadcast(1);
+                assert_eq!(a, b, "worker {i} transmit decision");
+                solo.abort_pending();
+                fleet[i].abort_pending();
+                assert_eq!(solo.export_state(), fleet[i].export_state(), "worker {i} post-phase");
+            }
+            // the derived link stream equals build_cores' leftover root
+            let mut derived = link_rng(&spec, &cfg, topo.n());
+            assert_eq!(derived.next_u64(), fleet_rng.next_u64(), "{}", spec.name);
+        }
     }
 
     #[test]

@@ -1,0 +1,308 @@
+//! The TCP transport is the in-process coordinator, bit for bit.
+//!
+//! `serve` + `worker` run the same `protocol::WorkerCore` state machine
+//! over localhost sockets that `coordinator::Coordinator` runs over
+//! channels, against the same `comm::Medium` (bit/energy accounting,
+//! erasure RNG) resolved in the same ascending worker order — so a
+//! networked run must reproduce the in-process run **exactly**: trace,
+//! rounds, bits, energy, and every f64 of durable worker state.
+//!
+//! "Exactly" is asserted through the checkpoint codec: the server's
+//! final `checkpoint.bin` (written by `--checkpoint-every 0`, i.e.
+//! final-iteration-only) is compared byte-for-byte against
+//! `checkpoint::encode` of an in-process run built from the *same
+//! manifest* — the `RunState` covers worker cores (quantizer RNGs,
+//! censor history), medium totals, link RNG position, and the full
+//! trace, so byte equality is bit equality over everything the paper's
+//! figures are computed from.  Locked across all six `AlgSpec`
+//! variants at N = 64 workers sharded over four worker processes.
+//!
+//! The disconnect test additionally locks the churn mapping: a worker
+//! process that exits mid-run (`--exit-after-iter`) and rejoins must
+//! leave the run in exactly the state a scheduled
+//! [`ChurnSchedule`] leave/join pair would — the schedule is
+//! reconstructed post-hoc from the server's event log and replayed
+//! in-process.
+//!
+//! Like every bit-identity suite in this repo, the contract is
+//! per-kernel-tier: the test binary pins the ambient tier and exports
+//! it to the spawned processes via `CQ_KERNEL_TIER`.
+
+use cq_ggadmm::config::ExperimentManifest;
+use cq_ggadmm::coordinator::Coordinator;
+use cq_ggadmm::graph::ChurnSchedule;
+use cq_ggadmm::io::checkpoint;
+use cq_ggadmm::io::PersistableEngine;
+use cq_ggadmm::net;
+use std::path::{Path, PathBuf};
+use std::process::{Child, Command, Stdio};
+use std::time::{Duration, Instant};
+
+/// The compiled CLI under test.
+const BIN: &str = env!("CARGO_BIN_EXE_cq-ggadmm");
+
+/// N = 64 simulated workers, sharded over four worker processes.
+const N: usize = 64;
+const PROCS: usize = 4;
+
+/// Generous per-process deadline: CI machines run these binaries in
+/// debug profile under heavy parallelism.
+const DEADLINE: Duration = Duration::from_secs(240);
+
+/// Pin the kernel tier for the whole test binary and return its name.
+/// Bit-equivalence is a per-tier contract; the spawned server/worker
+/// processes inherit the same tier through `CQ_KERNEL_TIER`.
+fn pin_tier() -> &'static str {
+    let t = cq_ggadmm::linalg::kernel_tier();
+    cq_ggadmm::linalg::set_kernel_tier(t);
+    t.name()
+}
+
+fn scratch(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("cq_net_{}_{tag}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+/// The manifest both sides run from.  Everything rides the defaults
+/// (synth-linear, connectivity 0.3, the paper's censor/quantizer knobs)
+/// except the identity of the run: algorithm, seed, iteration count,
+/// and the erasure probability.
+fn manifest(alg: &str, seed: u64, iters: usize, drop_prob: f64) -> ExperimentManifest {
+    let mut m = ExperimentManifest::default();
+    m.alg = alg.into();
+    m.experiment.workers = N;
+    m.experiment.iters = iters;
+    m.experiment.seed = seed;
+    m.exec.seed = seed;
+    m.exec.drop_prob = drop_prob;
+    m.validate().unwrap();
+    m
+}
+
+/// Run the manifest in-process on the sharded coordinator and return
+/// the final checkpoint bytes.
+fn in_process_checkpoint(m: &ExperimentManifest) -> Vec<u8> {
+    let (problem, topo, spec) = net::build_session(m).unwrap();
+    let mut coord = Coordinator::spawn(problem, topo, spec, m.exec.clone());
+    for _ in 0..m.experiment.iters {
+        coord.step();
+    }
+    checkpoint::encode(&coord.snapshot_state())
+}
+
+fn spawn_serve(tier: &str, manifest_path: &Path, run_base: &Path, port_file: &Path) -> Child {
+    Command::new(BIN)
+        .arg("serve")
+        .args(["--manifest".as_ref(), manifest_path.as_os_str()])
+        .args(["--run-dir".as_ref(), run_base.as_os_str()])
+        .args(["--checkpoint-every", "0"])
+        .args(["--port-file".as_ref(), port_file.as_os_str()])
+        .env("CQ_KERNEL_TIER", tier)
+        .stdout(Stdio::null())
+        .spawn()
+        .expect("spawn serve")
+}
+
+fn spawn_worker(tier: &str, port: u16, ids: &str, exit_after: Option<u64>) -> Child {
+    let mut cmd = Command::new(BIN);
+    cmd.arg("worker")
+        .args(["--connect", &format!("127.0.0.1:{port}")])
+        .args(["--ids", ids])
+        .env("CQ_KERNEL_TIER", tier)
+        .stdout(Stdio::null());
+    if let Some(k) = exit_after {
+        cmd.args(["--exit-after-iter", &k.to_string()]);
+    }
+    cmd.spawn().expect("spawn worker")
+}
+
+/// Poll the server's `--port-file` until it appears (written atomically
+/// via rename, so a present file is a complete file).
+fn await_port(port_file: &Path, serve: &mut Child) -> u16 {
+    let deadline = Instant::now() + DEADLINE;
+    loop {
+        if let Ok(text) = std::fs::read_to_string(port_file) {
+            return text.trim().parse().expect("port file contents");
+        }
+        if let Some(status) = serve.try_wait().expect("poll serve") {
+            panic!("serve exited before publishing its port: {status}");
+        }
+        assert!(Instant::now() < deadline, "timed out waiting for the port file");
+        std::thread::sleep(Duration::from_millis(10));
+    }
+}
+
+/// Wait for a child with a deadline; panic (after killing it) on
+/// timeout or nonzero exit.
+fn await_exit(mut child: Child, what: &str) {
+    let deadline = Instant::now() + DEADLINE;
+    loop {
+        if let Some(status) = child.try_wait().expect("poll child") {
+            assert!(status.success(), "{what} failed: {status}");
+            return;
+        }
+        if Instant::now() >= deadline {
+            let _ = child.kill();
+            let _ = child.wait();
+            panic!("{what} timed out");
+        }
+        std::thread::sleep(Duration::from_millis(20));
+    }
+}
+
+/// The run directory `serve --run-dir <base>` created (the sole child
+/// of a base this test owns).
+fn sole_run_dir(base: &Path) -> PathBuf {
+    let mut dirs: Vec<PathBuf> = std::fs::read_dir(base)
+        .unwrap()
+        .map(|e| e.unwrap().path())
+        .filter(|p| p.is_dir())
+        .collect();
+    assert_eq!(dirs.len(), 1, "expected exactly one run dir under {}", base.display());
+    dirs.pop().unwrap()
+}
+
+fn networked_checkpoint(m: &ExperimentManifest, tier: &str, tag: &str) -> Vec<u8> {
+    let dir = scratch(tag);
+    let manifest_path = dir.join("manifest.toml");
+    std::fs::write(&manifest_path, m.to_toml()).unwrap();
+    let run_base = dir.join("runs");
+    let port_file = dir.join("server.port");
+    let mut serve = spawn_serve(tier, &manifest_path, &run_base, &port_file);
+    let port = await_port(&port_file, &mut serve);
+    let per = N / PROCS;
+    let workers: Vec<Child> = (0..PROCS)
+        .map(|p| spawn_worker(tier, port, &format!("{}..{}", p * per, (p + 1) * per), None))
+        .collect();
+    for (p, w) in workers.into_iter().enumerate() {
+        await_exit(w, &format!("{tag}: worker process {p}"));
+    }
+    await_exit(serve, &format!("{tag}: serve"));
+    let state = checkpoint::load(&sole_run_dir(&run_base).join("checkpoint.bin")).unwrap();
+    let bytes = checkpoint::encode(&state);
+    let _ = std::fs::remove_dir_all(&dir);
+    bytes
+}
+
+/// All six algorithm variants, networked vs in-process, N = 64.
+/// One test function: the variants share nothing but must each hold,
+/// and running them sequentially keeps the process fan-out bounded.
+#[test]
+fn networked_run_matches_in_process_across_variants() {
+    let tier = pin_tier();
+    let variants: &[(&str, u64, f64)] = &[
+        ("ggadmm", 11, 0.0),
+        ("c-ggadmm", 12, 0.10),
+        ("q-ggadmm", 13, 0.0),
+        ("cq-ggadmm", 14, 0.15),
+        ("c-admm", 15, 0.10),
+        ("gadmm", 16, 0.0),
+    ];
+    for &(alg, seed, drop_prob) in variants {
+        let m = manifest(alg, seed, 5, drop_prob);
+        let net_bytes = networked_checkpoint(&m, tier, alg);
+        let ref_bytes = in_process_checkpoint(&m);
+        assert_eq!(
+            net_bytes, ref_bytes,
+            "{alg}: networked checkpoint diverges from the in-process run"
+        );
+    }
+}
+
+/// Iterations at which the server logged a membership event for one
+/// worker.  Membership events serialize as
+/// `{"event":"<ev>","iteration":<k>,"worker":<w>}` (schema v2).
+fn membership_iters(events: &str, ev: &str, worker: usize) -> Vec<u64> {
+    let ev_needle = format!("\"event\":\"{ev}\"");
+    let worker_needle = format!("\"worker\":{worker}}}");
+    let key = "\"iteration\":";
+    events
+        .lines()
+        .filter(|l| l.contains(&ev_needle) && l.contains(&worker_needle))
+        .map(|l| {
+            let at = l.find(key).unwrap() + key.len();
+            l[at..]
+                .chars()
+                .take_while(|c| c.is_ascii_digit())
+                .collect::<String>()
+                .parse()
+                .unwrap()
+        })
+        .collect()
+}
+
+/// A worker process that exits mid-run and reconnects is
+/// indistinguishable from a scheduled churn leave/join pair.
+///
+/// Worker 5 runs alone in its own process with `--exit-after-iter 4`;
+/// once that process exits a fresh one re-registers the id.  The
+/// *wall-clock* iteration the rejoin lands on is nondeterministic, so
+/// the equivalent `ChurnSchedule` is reconstructed from the server's
+/// own `worker_leave` / `worker_join` events and replayed in-process.
+/// (Disconnect equivalence requires the default `record_every = 1` —
+/// the record barrier is what pins the departure to a deterministic
+/// boundary — and final-only checkpointing, both of which this test
+/// uses.)
+#[test]
+fn worker_disconnect_reconnect_matches_scheduled_churn() {
+    let tier = pin_tier();
+    let m = manifest("cq-ggadmm", 21, 16, 0.10);
+    let dir = scratch("churn");
+    let manifest_path = dir.join("manifest.toml");
+    std::fs::write(&manifest_path, m.to_toml()).unwrap();
+    let run_base = dir.join("runs");
+    let port_file = dir.join("server.port");
+    let mut serve = spawn_serve(tier, &manifest_path, &run_base, &port_file);
+    let port = await_port(&port_file, &mut serve);
+
+    let fleet: Vec<Child> = ["0..5", "6..32", "32..64"]
+        .iter()
+        .map(|ids| spawn_worker(tier, port, ids, None))
+        .collect();
+    let transient = spawn_worker(tier, port, "5", Some(4));
+    // the transient process lingers until the server has consumed its
+    // goodbye, so once it exits the leave is committed server-side
+    await_exit(transient, "transient worker 5");
+    let rejoined = spawn_worker(tier, port, "5", None);
+
+    for (p, w) in fleet.into_iter().enumerate() {
+        await_exit(w, &format!("fleet process {p}"));
+    }
+    await_exit(rejoined, "rejoined worker 5");
+    await_exit(serve, "serve");
+
+    let run_dir = sole_run_dir(&run_base);
+    let state = checkpoint::load(&run_dir.join("checkpoint.bin")).unwrap();
+    let net_bytes = checkpoint::encode(&state);
+
+    // reconstruct the schedule the run actually experienced
+    let events = std::fs::read_to_string(run_dir.join("events.jsonl")).unwrap();
+    let leaves = membership_iters(&events, "worker_leave", 5);
+    let joins = membership_iters(&events, "worker_join", 5);
+    assert_eq!(leaves, vec![4], "worker 5 must leave at the --exit-after-iter boundary");
+    assert!(joins.len() <= 1, "worker 5 rejoined more than once: {joins:?}");
+    let mut sched = format!("{}:leave:5", leaves[0]);
+    for j in &joins {
+        sched.push_str(&format!(" {j}:join:5"));
+    }
+
+    let (problem, topo, spec) = net::build_session(&m).unwrap();
+    let churn = ChurnSchedule::parse(&sched).unwrap();
+    let mut coord = Coordinator::spawn(
+        problem,
+        topo,
+        spec,
+        m.exec.clone().with_churn(Some(churn)),
+    );
+    for _ in 0..m.experiment.iters {
+        coord.step();
+    }
+    let ref_bytes = checkpoint::encode(&coord.snapshot_state());
+    assert_eq!(
+        net_bytes, ref_bytes,
+        "disconnect/reconnect (schedule '{sched}') diverges from scheduled churn"
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}

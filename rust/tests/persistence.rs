@@ -429,3 +429,148 @@ drop_prob = 0.15
     let reparsed = ExperimentManifest::from_toml(&m.to_toml()).unwrap();
     assert_eq!(reparsed, m);
 }
+
+// ---- the networked engine -------------------------------------------
+
+/// The compiled CLI, for spawning `serve` / `worker` processes.
+const BIN: &str = env!("CARGO_BIN_EXE_cq-ggadmm");
+const NET_DEADLINE: std::time::Duration = std::time::Duration::from_secs(240);
+
+/// Pin the ambient tier and return its name, so spawned processes can
+/// inherit it through `CQ_KERNEL_TIER` (bit-identity is per-tier).
+fn net_tier() -> &'static str {
+    pin_tier();
+    cq_ggadmm::linalg::kernel_tier().name()
+}
+
+fn spawn_net(args: &[&str], tier: &str) -> std::process::Child {
+    std::process::Command::new(BIN)
+        .args(args)
+        .env("CQ_KERNEL_TIER", tier)
+        .stdout(std::process::Stdio::null())
+        .spawn()
+        .expect("spawn subprocess")
+}
+
+fn await_port(port_file: &std::path::Path, serve: &mut std::process::Child) -> u16 {
+    let deadline = std::time::Instant::now() + NET_DEADLINE;
+    loop {
+        if let Ok(text) = std::fs::read_to_string(port_file) {
+            return text.trim().parse().expect("port file contents");
+        }
+        if let Some(status) = serve.try_wait().expect("poll serve") {
+            panic!("serve exited before publishing its port: {status}");
+        }
+        assert!(
+            std::time::Instant::now() < deadline,
+            "timed out waiting for the port file"
+        );
+        std::thread::sleep(std::time::Duration::from_millis(10));
+    }
+}
+
+fn await_exit(mut child: std::process::Child, what: &str) {
+    let deadline = std::time::Instant::now() + NET_DEADLINE;
+    loop {
+        if let Some(status) = child.try_wait().expect("poll child") {
+            assert!(status.success(), "{what} failed: {status}");
+            return;
+        }
+        if std::time::Instant::now() >= deadline {
+            let _ = child.kill();
+            let _ = child.wait();
+            panic!("{what} timed out");
+        }
+        std::thread::sleep(std::time::Duration::from_millis(20));
+    }
+}
+
+/// Kill-and-resume for the networked engine.  A server runs to K1,
+/// writes its final checkpoint, and shuts down; a *second* server
+/// process resumes the run directory with a completely fresh worker
+/// fleet (new processes, new sockets) and must land bit-identically
+/// on the uninterrupted in-process run — the workers' durable state
+/// lives in the checkpoint, not in the connections.
+#[test]
+fn networked_server_resume_is_bit_identical() {
+    let tier = net_tier();
+    let base = scratch("net_resume");
+    let mut m = ExperimentManifest::default();
+    m.alg = "cq-ggadmm".into();
+    m.experiment.workers = N;
+    m.experiment.iters = K1 as usize;
+    m.experiment.seed = 77;
+    m.exec.seed = 77;
+    m.exec.drop_prob = 0.1;
+    let manifest_path = base.join("manifest.toml").display().to_string();
+    std::fs::write(&manifest_path, m.to_toml()).unwrap();
+    let runs = base.join("runs");
+    let runs_s = runs.display().to_string();
+
+    // first life: run to K1, final-only checkpoint, clean shutdown
+    let pf1 = base.join("first.port");
+    let pf1_s = pf1.display().to_string();
+    let mut serve = spawn_net(
+        &[
+            "serve", "--manifest", &manifest_path, "--run-dir", &runs_s,
+            "--checkpoint-every", "0", "--port-file", &pf1_s,
+        ],
+        tier,
+    );
+    let port = await_port(&pf1, &mut serve);
+    let addr = format!("127.0.0.1:{port}");
+    let half = format!("{}..{}", 0, N / 2);
+    let rest = format!("{}..{}", N / 2, N);
+    let w0 = spawn_net(&["worker", "--connect", &addr, "--ids", &half], tier);
+    let w1 = spawn_net(&["worker", "--connect", &addr, "--ids", &rest], tier);
+    await_exit(w0, "first-life worker 0");
+    await_exit(w1, "first-life worker 1");
+    await_exit(serve, "first-life serve");
+    let run_dir = {
+        let mut dirs: Vec<PathBuf> = std::fs::read_dir(&runs)
+            .unwrap()
+            .map(|e| e.unwrap().path())
+            .filter(|p| p.is_dir())
+            .collect();
+        assert_eq!(dirs.len(), 1, "expected one run dir");
+        dirs.pop().unwrap()
+    };
+
+    // second life: resume to K1 + K2 with a fresh fleet
+    let pf2 = base.join("second.port");
+    let pf2_s = pf2.display().to_string();
+    let run_dir_s = run_dir.display().to_string();
+    let total = (K1 + K2).to_string();
+    let mut serve = spawn_net(
+        &["serve", "--resume", &run_dir_s, "--iters", &total, "--port-file", &pf2_s],
+        tier,
+    );
+    let port = await_port(&pf2, &mut serve);
+    let addr = format!("127.0.0.1:{port}");
+    let w0 = spawn_net(&["worker", "--connect", &addr, "--ids", &half], tier);
+    let w1 = spawn_net(&["worker", "--connect", &addr, "--ids", &rest], tier);
+    await_exit(w0, "second-life worker 0");
+    await_exit(w1, "second-life worker 1");
+    await_exit(serve, "second-life serve");
+
+    // uninterrupted in-process reference from the same manifest
+    let mut full = m.clone();
+    full.experiment.iters = (K1 + K2) as usize;
+    let (problem, topo, spec) = cq_ggadmm::net::build_session(&full).unwrap();
+    let mut coord = Coordinator::spawn(problem, topo, spec, full.exec.clone());
+    for _ in 0..(K1 + K2) {
+        coord.step();
+    }
+
+    let resumed = checkpoint::load(&run_dir.join("checkpoint.bin")).unwrap();
+    assert_states_bit_identical(&coord.snapshot_state(), &resumed, "networked resume");
+
+    // the event stream survived the handoff: one run_start, appended
+    let text = std::fs::read_to_string(run_dir.join("events.jsonl")).unwrap();
+    assert_eq!(
+        text.lines().filter(|l| l.contains("\"event\":\"run_start\"")).count(),
+        1,
+        "resume must append to the event stream, not restart it"
+    );
+    let _ = std::fs::remove_dir_all(&base);
+}

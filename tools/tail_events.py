@@ -12,6 +12,10 @@ streams both validate (the run_start's "schema" field selects the rules):
 * checkpoint    -- iteration, path.
 * worker_leave  -- iteration, worker        (v2: churn detached a worker)
 * worker_join   -- iteration, worker        (v2: churn re-attached one)
+* worker_connect    -- iteration, worker    (v2: networked runs — a
+                       worker registered on the TCP server)
+* worker_disconnect -- iteration, worker    (v2: networked runs — a
+                       connection dropped without a clean goodbye)
 * stale_refresh -- iteration, worker, staleness  (v2: bounded-staleness
                    policy force-refreshed a heavily censored worker)
 
@@ -79,6 +83,8 @@ def validate(path):
         "checkpoint": 0,
         "worker_leave": 0,
         "worker_join": 0,
+        "worker_connect": 0,
+        "worker_disconnect": 0,
         "stale_refresh": 0,
     }
     with open(path, encoding="utf-8") as fh:
@@ -169,7 +175,13 @@ def validate(path):
                     )
                 if not obj["path"]:
                     raise Violation(f"line {lineno}: empty checkpoint path")
-            elif kind in ("worker_leave", "worker_join", "stale_refresh"):
+            elif kind in (
+                "worker_leave",
+                "worker_join",
+                "worker_connect",
+                "worker_disconnect",
+                "stale_refresh",
+            ):
                 if schema == 1:
                     raise Violation(
                         f"line {lineno}: {kind} is a schema-2 event in a v1 stream"
@@ -214,6 +226,11 @@ def main(argv):
             dynamic = (
                 f", {counts['worker_leave']} leaves / {counts['worker_join']} joins"
                 f" / {counts['stale_refresh']} stale refreshes"
+            )
+        if counts["worker_connect"] or counts["worker_disconnect"]:
+            dynamic += (
+                f", {counts['worker_connect']} connects"
+                f" / {counts['worker_disconnect']} disconnects"
             )
         print(
             f"{path}: OK — {counts['record']} records to iteration {last_iter}, "
