@@ -27,9 +27,10 @@ mod run;
 pub use run::{Run, RunOptions, WorkerSnapshot};
 
 use crate::censor::CensorConfig;
-use crate::config::Task;
+use crate::config::{ModelSpec, Task};
 use crate::data::{partition_uniform, Dataset, Shard};
 use crate::graph::Topology;
+use crate::param::Blocks;
 use crate::quant::QuantConfig;
 use crate::solver::{
     central_linear_optimum, central_logistic_optimum, global_objective,
@@ -46,6 +47,19 @@ pub enum Schedule {
     Jacobian,
 }
 
+/// Per-iteration primal/dual update rule: the ADMM family of the paper,
+/// or the first-order QDGD baseline (Reisizadeh et al. 2018) that rides
+/// the same schedule/quantizer/transport machinery.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum UpdateRule {
+    /// Subproblem solve + dual ascent (every GGADMM-family variant).
+    Admm,
+    /// Quantized decentralized gradient descent: average the latest
+    /// neighbor reconstructions with the local model, then take one
+    /// gradient step of size `lr`.  No dual variables, no censoring.
+    Qdgd { lr: f64 },
+}
+
 /// A fully specified algorithm variant.
 #[derive(Clone, Debug)]
 pub struct AlgSpec {
@@ -53,6 +67,13 @@ pub struct AlgSpec {
     pub schedule: Schedule,
     pub censor: Option<CensorConfig>,
     pub quant: Option<QuantConfig>,
+    /// Primal/dual update rule ([`UpdateRule::Admm`] for the paper's
+    /// schemes).
+    pub update: UpdateRule,
+    /// Per-layer initial bit allocation for multi-block models (`None` =
+    /// uniform `quant.bits0` on every block; ignored without a
+    /// quantizer).
+    pub bits_split: Option<Vec<u32>>,
 }
 
 impl AlgSpec {
@@ -62,6 +83,8 @@ impl AlgSpec {
             schedule: Schedule::Alternating,
             censor: None,
             quant: None,
+            update: UpdateRule::Admm,
+            bits_split: None,
         }
     }
 
@@ -71,6 +94,8 @@ impl AlgSpec {
             schedule: Schedule::Alternating,
             censor: Some(CensorConfig { tau0, xi }),
             quant: None,
+            update: UpdateRule::Admm,
+            bits_split: None,
         }
     }
 
@@ -80,6 +105,8 @@ impl AlgSpec {
             schedule: Schedule::Alternating,
             censor: None,
             quant: Some(Self::quant_cfg(omega, bits0)),
+            update: UpdateRule::Admm,
+            bits_split: None,
         }
     }
 
@@ -89,6 +116,8 @@ impl AlgSpec {
             schedule: Schedule::Alternating,
             censor: Some(CensorConfig { tau0, xi }),
             quant: Some(Self::quant_cfg(omega, bits0)),
+            update: UpdateRule::Admm,
+            bits_split: None,
         }
     }
 
@@ -106,7 +135,32 @@ impl AlgSpec {
             schedule: Schedule::Jacobian,
             censor: Some(CensorConfig { tau0, xi }),
             quant: None,
+            update: UpdateRule::Admm,
+            bits_split: None,
         }
+    }
+
+    /// QDGD (Reisizadeh et al. 2018): quantized decentralized gradient
+    /// descent — the first-order baseline the paper compares against
+    /// conceptually.  All workers update in parallel (Jacobian
+    /// schedule, no anchor/degree-doubling), broadcast quantized model
+    /// differences, and never censor.
+    pub fn qdgd(omega: f64, bits0: u32) -> AlgSpec {
+        AlgSpec {
+            name: "QDGD".into(),
+            schedule: Schedule::Jacobian,
+            censor: None,
+            quant: Some(Self::quant_cfg(omega, bits0)),
+            update: UpdateRule::Qdgd { lr: 0.05 },
+            bits_split: None,
+        }
+    }
+
+    /// Attach a per-layer bit allocation (kept only when the variant
+    /// quantizes — the knob-ignoring policy of [`AlgSpec::parse`]).
+    pub fn with_bits_split(mut self, split: Option<Vec<u32>>) -> AlgSpec {
+        self.bits_split = if self.quant.is_some() { split } else { None };
+        self
     }
 
     /// Chain GADMM is GGADMM run on [`Topology::chain`]; this alias exists
@@ -131,6 +185,20 @@ impl AlgSpec {
         if let Some(q) = &self.quant {
             q.validate()?;
         }
+        if let UpdateRule::Qdgd { lr } = self.update {
+            if !(lr > 0.0 && lr.is_finite()) {
+                return Err(format!("qdgd learning rate {lr} must be finite and > 0"));
+            }
+        }
+        if let Some(split) = &self.bits_split {
+            if split.is_empty() {
+                return Err("bits_split must name at least one width".into());
+            }
+            let cap = self.quant.map(|q| q.max_bits).unwrap_or(32).min(32);
+            if let Some(b) = split.iter().find(|b| !(1..=cap).contains(*b)) {
+                return Err(format!("bits_split width {b} out of range [1, {cap}]"));
+            }
+        }
         Ok(())
     }
 
@@ -153,10 +221,11 @@ impl AlgSpec {
             "cq-ggadmm" => AlgSpec::cq_ggadmm(tau0, xi, omega, bits0),
             "c-admm" => AlgSpec::c_admm(tau0, xi),
             "gadmm" => AlgSpec::gadmm_chain(),
+            "qdgd" => AlgSpec::qdgd(omega, bits0),
             other => {
                 return Err(format!(
                     "unknown algorithm '{other}' \
-                     (expected ggadmm|c-ggadmm|q-ggadmm|cq-ggadmm|c-admm|gadmm)"
+                     (expected ggadmm|c-ggadmm|q-ggadmm|cq-ggadmm|c-admm|gadmm|qdgd)"
                 ))
             }
         };
@@ -179,6 +248,15 @@ pub struct Problem {
     pub d: usize,
     pub theta_star: Vec<f64>,
     pub f_star: f64,
+    /// Model parameterization ([`ModelSpec::Glm`] for the paper's
+    /// single-block problems).
+    pub model: ModelSpec,
+    /// Parameter-block layout; [`Blocks::single`] for GLM models.
+    pub blocks: Blocks,
+    /// Initial model every worker starts from.  All-zeros for GLM
+    /// (bit-identical to the pre-refactor engines); a deterministic
+    /// seeded nonzero point for the MLP, whose zero point is a saddle.
+    pub theta0: Vec<f64>,
 }
 
 impl Problem {
@@ -193,16 +271,66 @@ impl Problem {
             Task::Logistic => central_logistic_optimum(&shards, mu0),
         };
         let f_star = global_objective(&shards, ds.task, mu0, &theta_star);
+        let d = ds.d();
         Problem {
             task: ds.task,
             dataset_name: ds.name.clone(),
             shards,
             rho,
             mu0,
-            d: ds.d(),
+            d,
             theta_star,
             f_star,
+            model: ModelSpec::Glm,
+            blocks: Blocks::single(d),
+            theta0: vec![0.0; d],
         }
+    }
+
+    /// Like [`Problem::new`], but parameterized by [`ModelSpec`]: `glm`
+    /// delegates to `new` (bit-identical), `mlp:h` builds the two-block
+    /// one-hidden-layer model with a seeded nonzero start and a
+    /// Gauss–Newton centralized reference optimum.
+    pub fn with_model(
+        ds: &Dataset,
+        topo: &Topology,
+        rho: f64,
+        mu0: f64,
+        seed: u64,
+        model: ModelSpec,
+    ) -> Result<Problem, String> {
+        let hidden = match model {
+            ModelSpec::Glm => return Ok(Problem::new(ds, topo, rho, mu0, seed)),
+            ModelSpec::Mlp { hidden } => hidden,
+        };
+        if ds.task != Task::Linear {
+            return Err(format!(
+                "model 'mlp' fits regression targets; dataset '{}' is a {:?} task",
+                ds.name, ds.task
+            ));
+        }
+        let shards: Vec<Arc<Shard>> = partition_uniform(ds, topo.n(), seed)
+            .into_iter()
+            .map(Arc::new)
+            .collect();
+        let d_in = ds.d();
+        let blocks = crate::solver::mlp::mlp_blocks(d_in, hidden);
+        let theta0 = crate::solver::mlp::mlp_theta0(d_in, hidden, seed);
+        let theta_star = crate::solver::mlp::central_mlp_optimum(&shards, mu0, hidden, &theta0);
+        let f_star = crate::solver::mlp::mlp_global_objective(&shards, mu0, hidden, &theta_star);
+        Ok(Problem {
+            task: ds.task,
+            dataset_name: ds.name.clone(),
+            shards,
+            rho,
+            mu0,
+            d: blocks.d(),
+            theta_star,
+            f_star,
+            model,
+            blocks,
+            theta0,
+        })
     }
 
     /// Convenience: linear problem with default seed/regularization.
@@ -222,7 +350,17 @@ impl Problem {
         assert_eq!(thetas.len(), self.shards.len());
         let mut total = 0.0;
         for (sh, th) in self.shards.iter().zip(thetas) {
-            total += global_objective(std::slice::from_ref(sh), self.task, self.mu0, th);
+            total += match self.model {
+                ModelSpec::Glm => {
+                    global_objective(std::slice::from_ref(sh), self.task, self.mu0, th)
+                }
+                ModelSpec::Mlp { hidden } => crate::solver::mlp::mlp_global_objective(
+                    std::slice::from_ref(sh),
+                    self.mu0,
+                    hidden,
+                    th,
+                ),
+            };
         }
         total
     }

@@ -140,6 +140,17 @@ pub struct Run {
     /// (censored, dropped or late); only maintained under the
     /// bounded-staleness policy, all zero otherwise
     stale: Vec<u64>,
+    /// per-(worker, block) ages under bounded staleness, flattened
+    /// row-major by worker; a multi-block worker's partial commit resets
+    /// only the blocks that went on the air, so a perpetually-censored
+    /// layer still forces a refresh.  Empty for flat (single-block)
+    /// models, where `stale` alone carries the policy.
+    block_stale: Vec<u64>,
+    /// scratch: committed-block mask of the sender being relayed (copied
+    /// out of the sender's core so neighbors can be borrowed mutably)
+    mask_scratch: Vec<bool>,
+    /// scratch: per-block candidate bits masked to transmitting blocks
+    block_bits_scratch: Vec<u64>,
     /// churn events applied so far (restore-time sanity: replaying a
     /// checkpoint's structure needs a freshly constructed engine)
     churn_applied: usize,
@@ -193,12 +204,16 @@ impl Run {
             Schedule::Alternating => vec![topo.heads(), topo.tails()],
             Schedule::Jacobian => vec![(0..n).collect()],
         };
+        let nblocks = problem.blocks.count();
         Run {
             relay: vec![0.0; problem.d],
             live_groups: phase_groups.clone(),
             phase_groups,
             active: vec![true; n],
             stale: vec![0; n],
+            block_stale: vec![0; if nblocks > 1 { n * nblocks } else { 0 }],
+            mask_scratch: Vec::with_capacity(nblocks),
+            block_bits_scratch: Vec::with_capacity(nblocks),
             churn_applied: 0,
             pool,
             cores,
@@ -299,13 +314,39 @@ impl Run {
             if let Some(rec) = &mut self.recorder {
                 rec.note_attempt();
             }
-            let force = tau.is_some_and(|t| self.stale[i] >= t);
+            let nb = self.cores[i].block_count();
+            let multi = nb > 1;
+            // multi-block: any single block past the bound forces a full
+            // reliable refresh (a censored layer cannot lag forever while
+            // its siblings keep committing)
+            let force = match tau {
+                None => false,
+                Some(t) if multi => {
+                    self.block_stale[i * nb..(i + 1) * nb].iter().any(|&a| a >= t)
+                }
+                Some(t) => self.stale[i] >= t,
+            };
             let Some(bits) = self.cores[i].prepare_broadcast_gated(k_plus_1, force) else {
                 if tau.is_some() {
                     self.stale[i] += 1;
+                    if multi {
+                        for a in &mut self.block_stale[i * nb..(i + 1) * nb] {
+                            *a += 1;
+                        }
+                    }
                 }
                 continue;
             };
+            if multi {
+                // per-block ledger: like the medium's totals, bits are
+                // spent whether or not the broadcast lands
+                let mask = self.cores[i].broadcast_mask().expect("multi-block candidate");
+                let per = self.cores[i].candidate_block_bits().expect("multi-block candidate");
+                self.block_bits_scratch.clear();
+                self.block_bits_scratch
+                    .extend(per.iter().zip(mask).map(|(&b, &on)| if on { b } else { 0 }));
+                self.medium.record_block_bits(&self.block_bits_scratch);
+            }
             let dist = self.active_neighbor_distance(i);
             let landed = match tau {
                 None => self.medium.transmit(i, self.iter, bits, dist),
@@ -317,9 +358,25 @@ impl Run {
             if landed {
                 self.cores[i].commit_pending();
                 self.relay.copy_from_slice(self.cores[i].hat_self());
-                for &m in self.topo.neighbors(i) {
-                    if self.active[m] {
-                        self.cores[m].deliver(i, &self.relay);
+                if multi {
+                    // partial commit: only the transmitting blocks'
+                    // spans land at the neighbors — censored spans were
+                    // never on the air, so receivers must keep their
+                    // stale copies (the TCP transport can't resync them
+                    // either; tests lock the engines together)
+                    let mask = self.cores[i].broadcast_mask().expect("multi-block commit");
+                    self.mask_scratch.clear();
+                    self.mask_scratch.extend_from_slice(mask);
+                    for &m in self.topo.neighbors(i) {
+                        if self.active[m] {
+                            self.cores[m].deliver_spans(i, &self.relay, &self.mask_scratch);
+                        }
+                    }
+                } else {
+                    for &m in self.topo.neighbors(i) {
+                        if self.active[m] {
+                            self.cores[m].deliver(i, &self.relay);
+                        }
                     }
                 }
                 if force {
@@ -328,13 +385,33 @@ impl Run {
                         rec.stale_refresh(self.iter, i, staleness);
                     }
                 }
-                self.stale[i] = 0;
+                if multi && tau.is_some() {
+                    // committed blocks reset; still-censored blocks keep
+                    // aging.  `stale[i]` mirrors the worst block so the
+                    // worker-level counter stays meaningful in events.
+                    let ages = &mut self.block_stale[i * nb..(i + 1) * nb];
+                    for (a, &on) in ages.iter_mut().zip(&self.mask_scratch) {
+                        if on {
+                            *a = 0;
+                        } else {
+                            *a += 1;
+                        }
+                    }
+                    self.stale[i] = ages.iter().copied().max().unwrap_or(0);
+                } else {
+                    self.stale[i] = 0;
+                }
             } else {
                 // erasure/straggler with perfect feedback: cost was paid
                 // by the medium, state update is rolled back
                 self.cores[i].abort_pending();
                 if tau.is_some() {
                     self.stale[i] += 1;
+                    if multi {
+                        for a in &mut self.block_stale[i * nb..(i + 1) * nb] {
+                            *a += 1;
+                        }
+                    }
                 }
             }
         }
@@ -354,6 +431,12 @@ impl Run {
         for e in &events {
             apply_churn_event(&mut self.cores, &mut self.active, &self.topo, e);
             self.stale[e.worker] = 0;
+            let nb = self.cores[e.worker].block_count();
+            if nb > 1 {
+                for a in &mut self.block_stale[e.worker * nb..(e.worker + 1) * nb] {
+                    *a = 0;
+                }
+            }
             self.churn_applied += 1;
             if let Some(rec) = &mut self.recorder {
                 match e.kind {
@@ -538,6 +621,8 @@ impl Run {
             trace: self.trace.clone(),
             active: self.active.clone(),
             stale: self.stale.clone(),
+            block_stale: self.block_stale.clone(),
+            block_bits: log.block_bits.clone(),
         }
     }
 
@@ -577,6 +662,17 @@ impl Run {
             "checkpoint membership does not match the configured churn schedule"
         );
         self.stale.copy_from_slice(&s.stale);
+        if s.block_stale.is_empty() {
+            // v2 checkpoints carry no per-block section (flat-model era)
+            self.block_stale.iter_mut().for_each(|a| *a = 0);
+        } else {
+            assert_eq!(
+                s.block_stale.len(),
+                self.block_stale.len(),
+                "checkpoint per-block staleness section size"
+            );
+            self.block_stale.copy_from_slice(&s.block_stale);
+        }
         for (core, cs) in self.cores.iter_mut().zip(&s.cores) {
             core.import_state(cs);
         }
@@ -587,6 +683,7 @@ impl Run {
             s.medium.sim_time_s,
             &s.medium.link,
         );
+        self.medium.restore_block_bits(s.block_bits.clone());
         self.trace = s.trace.clone();
         self.iter = s.iteration;
         if let Some(rec) = &mut self.recorder {
@@ -691,6 +788,8 @@ mod tests {
             schedule: Schedule::Alternating,
             censor: Some(crate::censor::CensorConfig { tau0: 0.0, xi: 0.5 }),
             quant: None,
+            update: crate::algs::UpdateRule::Admm,
+            bits_split: None,
         };
         let mut b = Run::new(p, t, spec_zero, RunOptions::default());
         for _ in 0..30 {
@@ -1062,6 +1161,86 @@ mod tests {
         for i in 0..8 {
             assert_eq!(oracle.snapshot(i).theta, b.snapshot(i).theta);
         }
+    }
+
+    fn mlp_problem(n: usize, seed: u64) -> (Problem, Topology) {
+        let topo = Topology::chain(n);
+        let ds = synthetic::linear_dataset(n * 12, 3, seed);
+        let p = Problem::with_model(
+            &ds,
+            &topo,
+            1.0,
+            0.05,
+            seed,
+            crate::config::ModelSpec::Mlp { hidden: 2 },
+        )
+        .expect("mlp problem");
+        (p, topo)
+    }
+
+    #[test]
+    fn mlp_multi_block_run_ledgers_per_block_bits() {
+        let (p, t) = mlp_problem(4, 44);
+        let spec = AlgSpec::q_ggadmm(0.995, 4).with_bits_split(Some(vec![4, 2]));
+        let mut run = Run::new(p, t, spec, RunOptions::default());
+        let trace = run.run(40);
+        let log = run.comm();
+        assert_eq!(log.block_bits.len(), 2, "two parameter blocks must be ledgered");
+        assert_eq!(
+            log.block_bits.iter().sum::<u64>(),
+            log.total_bits,
+            "per-block bits must sum to the medium's total"
+        );
+        assert!(log.block_bits.iter().all(|&b| b > 0));
+        assert!(trace.last_gap().is_finite());
+        assert!(trace.points.last().unwrap().consensus_gap.is_finite());
+    }
+
+    #[test]
+    fn mlp_snapshot_restore_resumes_bit_identically() {
+        // multi-block + censored + quantized + erasure + staleness bound:
+        // per-block quantizer RNGs, tx_once flags and block ages are live
+        let (p, t) = mlp_problem(4, 45);
+        let spec = AlgSpec::cq_ggadmm(0.3, 0.85, 0.995, 4).with_bits_split(Some(vec![4, 2]));
+        let opts = ExecutionConfig::default()
+            .with_seed(11)
+            .with_drop_prob(0.2)
+            .with_staleness_bound(Some(2));
+        let mut oracle = Run::new(p.clone(), t.clone(), spec.clone(), opts.clone());
+        let mut a = Run::new(p.clone(), t.clone(), spec.clone(), opts.clone());
+        for _ in 0..10 {
+            oracle.step();
+            a.step();
+        }
+        let state = a.snapshot_state();
+        drop(a);
+        let mut b = Run::new(p, t, spec, opts);
+        b.restore_state(&state);
+        for _ in 0..14 {
+            oracle.step();
+            b.step();
+        }
+        assert_eq!(oracle.trace(), b.trace(), "resumed trace diverged");
+        assert_eq!(oracle.comm().total_bits, b.comm().total_bits);
+        assert_eq!(oracle.comm().block_bits, b.comm().block_bits, "block ledger diverged");
+        assert_eq!(
+            oracle.sim_time_s().to_bits(),
+            b.sim_time_s().to_bits(),
+            "sim clock diverged"
+        );
+    }
+
+    #[test]
+    fn qdgd_run_descends() {
+        let (p, t) = small_problem(true, 6, 46);
+        let mut run = Run::new(p, t, AlgSpec::qdgd(0.995, 8), RunOptions::default());
+        let trace = run.run(120);
+        let first = trace.points.first().unwrap().loss_gap;
+        let last = trace.last_gap();
+        assert!(last.is_finite());
+        assert!(last < first, "qdgd failed to descend: {first} -> {last}");
+        // primal-only baseline: duals never move off the zero init
+        assert!(run.dual_sum_norm() == 0.0);
     }
 
     #[test]

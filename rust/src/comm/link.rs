@@ -611,6 +611,19 @@ impl Medium {
         &self.log
     }
 
+    /// Account one multi-block broadcast's per-block bits next to the
+    /// transmission just recorded (see [`CommLog::record_block_bits`];
+    /// the caller has already zeroed censored blocks).
+    pub fn record_block_bits(&mut self, per_block: &[u64]) {
+        self.log.record_block_bits(per_block);
+    }
+
+    /// Restore the per-block bits ledger alongside [`Medium::restore`]
+    /// (v3 checkpoints; empty resets it for flat models).
+    pub fn restore_block_bits(&mut self, block_bits: Vec<u64>) {
+        self.log.restore_block_bits(block_bits);
+    }
+
     /// Simulated wall-clock seconds spent on the air so far (slots ×
     /// phase count, stretched by link latency).
     pub fn sim_time_s(&self) -> f64 {

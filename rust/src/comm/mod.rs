@@ -42,6 +42,11 @@ pub struct CommLog {
     pub total_energy_j: f64,
     /// Rounds from before the last restore (zero for a fresh run).
     pub prior_rounds: u64,
+    /// Cumulative transmitted bits **per parameter block** (multi-block
+    /// models only; empty for flat models — a multi-block transmission's
+    /// `payload_bits` is the sum of its transmitting blocks' bits, so
+    /// `block_bits` always sums to `total_bits` when present).
+    pub block_bits: Vec<u64>,
 }
 
 impl CommLog {
@@ -49,6 +54,18 @@ impl CommLog {
         self.total_bits += t.payload_bits;
         self.total_energy_j += t.energy_j;
         self.transmissions.push(t);
+    }
+
+    /// Account one multi-block transmission's per-block bits (the caller
+    /// has already masked censored blocks to zero).  Grows the ledger on
+    /// first use so flat models never allocate it.
+    pub fn record_block_bits(&mut self, per_block: &[u64]) {
+        if self.block_bits.len() < per_block.len() {
+            self.block_bits.resize(per_block.len(), 0);
+        }
+        for (acc, b) in self.block_bits.iter_mut().zip(per_block) {
+            *acc += b;
+        }
     }
 
     /// Cumulative communication rounds (= number of transmissions,
@@ -63,6 +80,12 @@ impl CommLog {
         self.prior_rounds = rounds;
         self.total_bits = total_bits;
         self.total_energy_j = total_energy_j;
+    }
+
+    /// Restore the per-block ledger alongside [`CommLog::restore_totals`]
+    /// (v3 checkpoints; v2 leaves it empty).
+    pub fn restore_block_bits(&mut self, block_bits: Vec<u64>) {
+        self.block_bits = block_bits;
     }
 
     /// Transmissions belonging to iteration `k`.
@@ -107,5 +130,16 @@ mod tests {
     #[test]
     fn full_precision_is_32d() {
         assert_eq!(full_precision_bits(50), 1600);
+    }
+
+    #[test]
+    fn block_ledger_accumulates_and_restores() {
+        let mut log = CommLog::default();
+        assert!(log.block_bits.is_empty());
+        log.record_block_bits(&[100, 0]);
+        log.record_block_bits(&[50, 64]);
+        assert_eq!(log.block_bits, vec![150, 64]);
+        log.restore_block_bits(vec![7, 8]);
+        assert_eq!(log.block_bits, vec![7, 8]);
     }
 }

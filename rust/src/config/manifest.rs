@@ -57,7 +57,7 @@ use std::path::PathBuf;
 /// baseline; the rest construct an `AlgSpec` — keep in sync with
 /// `AlgSpec::parse`).
 pub const ALG_NAMES: &[&str] =
-    &["ggadmm", "c-ggadmm", "q-ggadmm", "cq-ggadmm", "c-admm", "gadmm", "dgd"];
+    &["ggadmm", "c-ggadmm", "q-ggadmm", "cq-ggadmm", "c-admm", "gadmm", "qdgd", "dgd"];
 
 /// Output / persistence policy of a run.
 #[derive(Clone, Debug, PartialEq)]
@@ -202,6 +202,9 @@ impl ExperimentManifest {
         if let Some(t) = &e.topology {
             let _ = writeln!(s, "topology = \"{}\"", t.label());
         }
+        if let Some(m) = &e.model {
+            let _ = writeln!(s, "model = \"{}\"", m.label());
+        }
         let _ = writeln!(s, "rho = {}", e.rho);
         let _ = writeln!(s, "mu0 = {}", e.mu0);
         let _ = writeln!(s, "iters = {}", e.iters);
@@ -209,7 +212,15 @@ impl ExperimentManifest {
         let _ = writeln!(s, "tau0 = {}", e.tau0);
         let _ = writeln!(s, "xi = {}", e.xi);
         let _ = writeln!(s, "omega = {}", e.omega);
-        let _ = writeln!(s, "bits0 = {}", e.bits0);
+        match &e.bits_split {
+            None => {
+                let _ = writeln!(s, "bits0 = {}", e.bits0);
+            }
+            Some(split) => {
+                let spec = crate::param::BitsSpec { per_block: split.clone() };
+                let _ = writeln!(s, "bits0 = \"{}\"", spec.label());
+            }
+        }
         let _ = writeln!(s, "threads = {}", e.threads);
         let x = &self.exec;
         let _ = writeln!(s, "\n[exec]");
@@ -325,6 +336,19 @@ mod tests {
             }
         }
         assert!(case >= 12, "property sweep must cover the grid");
+    }
+
+    #[test]
+    fn bits_split_and_model_round_trip() {
+        let mut m = ExperimentManifest::default();
+        m.alg = "qdgd".into();
+        m.experiment.model = Some(crate::config::ModelSpec::Mlp { hidden: 5 });
+        m.experiment.bits0 = 24;
+        m.experiment.bits_split = Some(vec![24, 8]);
+        assert_round_trips(&m);
+        // ... and the serialized form uses the string bits-spec grammar
+        assert!(m.to_toml().contains("bits0 = \"24,8\""), "{}", m.to_toml());
+        assert!(m.to_toml().contains("model = \"mlp:5\""), "{}", m.to_toml());
     }
 
     #[test]

@@ -388,6 +388,77 @@ impl Task {
     }
 }
 
+/// Which parameterization a worker optimizes: the paper's single-block
+/// GLM (linear/logistic), or the one-hidden-layer MLP whose weights and
+/// output layer form two parameter blocks (the L-FGADMM-style layer-wise
+/// model; see [`crate::param::Blocks`]).
+///
+/// CLI / TOML syntax (`ModelSpec::parse`): `glm | mlp[:hidden]`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ModelSpec {
+    /// Single-block generalized linear model (the pre-refactor default).
+    Glm,
+    /// One hidden layer of `hidden` tanh units; blocks `[vec(W), v]`.
+    Mlp { hidden: usize },
+}
+
+impl ModelSpec {
+    /// Parse the `--model` CLI / TOML syntax (`mlp` defaults to 8 hidden
+    /// units).
+    pub fn parse(s: &str) -> Result<ModelSpec, String> {
+        let s = s.trim();
+        let (family, params) = match s.split_once(':') {
+            Some((f, p)) => (f.trim(), Some(p.trim())),
+            None => (s, None),
+        };
+        let spec = match family {
+            "glm" => match params {
+                Some(p) if !p.is_empty() => {
+                    return Err(format!("model 'glm' takes no ':{p}' parameter"))
+                }
+                _ => ModelSpec::Glm,
+            },
+            "mlp" => {
+                let hidden = match params {
+                    None | Some("") => 8,
+                    Some(v) => v
+                        .parse::<usize>()
+                        .map_err(|_| format!("model 'mlp': bad hidden-unit count '{v}'"))?,
+                };
+                ModelSpec::Mlp { hidden }
+            }
+            other => {
+                return Err(format!("unknown model '{other}' (expected glm|mlp[:hidden])"))
+            }
+        };
+        spec.validate()?;
+        Ok(spec)
+    }
+
+    pub fn validate(&self) -> Result<(), String> {
+        if let ModelSpec::Mlp { hidden } = *self {
+            if hidden < 1 {
+                return Err("mlp hidden-unit count must be >= 1".into());
+            }
+        }
+        Ok(())
+    }
+
+    /// Canonical label (round-trips through [`ModelSpec::parse`]).
+    pub fn label(&self) -> String {
+        match *self {
+            ModelSpec::Glm => "glm".into(),
+            ModelSpec::Mlp { hidden } => format!("mlp:{hidden}"),
+        }
+    }
+}
+
+impl std::fmt::Display for ModelSpec {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(&self.label())
+    }
+}
+
 /// Named dataset of Table 1.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum DatasetId {
@@ -445,11 +516,17 @@ pub struct ExperimentConfig {
     pub omega: f64,
     /// initial quantization bits
     pub bits0: u32,
+    /// Per-layer bit allocation (`--bits0 24,8`): one initial width per
+    /// parameter block.  `None` = uniform `bits0` on every block (the
+    /// single-block legacy behavior).
+    pub bits_split: Option<Vec<u32>>,
     pub threads: usize,
     /// Topology family; `None` keeps the legacy default (the paper's
     /// random-bipartite generator at `connectivity`, or a chain for the
     /// GADMM baseline).
     pub topology: Option<TopologySpec>,
+    /// Model parameterization; `None` keeps the legacy single-block GLM.
+    pub model: Option<ModelSpec>,
 }
 
 impl Default for ExperimentConfig {
@@ -466,8 +543,10 @@ impl Default for ExperimentConfig {
             xi: 0.8,
             omega: 0.99,
             bits0: 2,
+            bits_split: None,
             threads: 1,
             topology: None,
+            model: None,
         }
     }
 }
@@ -512,14 +591,36 @@ impl ExperimentConfig {
         if let Some(v) = doc.get_f64(sec, "omega")? {
             cfg.omega = v;
         }
-        if let Some(v) = doc.get_usize(sec, "bits0")? {
-            cfg.bits0 = v as u32;
+        // `bits0` accepts a number (uniform width) or a string bits spec
+        // ("24,8": one width per parameter block)
+        match doc.get(sec, "bits0") {
+            None => {}
+            Some(Value::Num(_)) => {
+                if let Some(v) = doc.get_usize(sec, "bits0")? {
+                    cfg.bits0 = v as u32;
+                }
+            }
+            Some(Value::Str(s)) => {
+                let spec = crate::param::BitsSpec::parse(s)
+                    .map_err(|e| format!("[{sec}] bits0: {e}"))?;
+                cfg.bits0 = spec.per_block[0];
+                cfg.bits_split =
+                    if spec.is_uniform() { None } else { Some(spec.per_block.clone()) };
+            }
+            Some(v) => {
+                return Err(format!(
+                    "[{sec}] bits0: expected integer or bits-spec string, got {v:?}"
+                ))
+            }
         }
         if let Some(v) = doc.get_usize(sec, "threads")? {
             cfg.threads = v;
         }
         if let Some(s) = doc.get_str(sec, "topology")? {
             cfg.topology = Some(TopologySpec::parse(&s)?);
+        }
+        if let Some(s) = doc.get_str(sec, "model")? {
+            cfg.model = Some(ModelSpec::parse(&s)?);
         }
         cfg.validate()?;
         Ok(cfg)
@@ -549,6 +650,25 @@ impl ExperimentConfig {
         if self.bits0 < 1 || self.bits0 > 32 {
             // 32 is full precision: the wire codec packs 1..=32-bit codes
             return Err("bits0 must be in [1, 32]".into());
+        }
+        if let Some(split) = &self.bits_split {
+            if split.is_empty() {
+                return Err("bits_split must name at least one width".into());
+            }
+            if let Some(b) = split.iter().find(|b| !(1..=32).contains(*b)) {
+                return Err(format!("bits_split width {b} out of range [1, 32]"));
+            }
+            if split[0] != self.bits0 {
+                // the scalar is the first block's width; keeping them in
+                // lockstep is what makes `to_toml` round-trip exactly
+                return Err(format!(
+                    "bits_split starts at {} but bits0 is {}",
+                    split[0], self.bits0
+                ));
+            }
+        }
+        if let Some(m) = &self.model {
+            m.validate()?;
         }
         if self.iters == 0 {
             return Err("iters must be > 0".into());
@@ -714,6 +834,46 @@ mod tests {
         assert_eq!(cfg.topology, Some(TopologySpec::SmallWorld { k: 6, beta: 0.2 }));
         let err = ExperimentConfig::from_toml("topology = \"nope\"").unwrap_err();
         assert!(err.contains("unknown topology"), "{err}");
+    }
+
+    #[test]
+    fn model_spec_parse_and_label_roundtrip() {
+        assert_eq!(ModelSpec::parse("glm").unwrap(), ModelSpec::Glm);
+        assert_eq!(ModelSpec::parse("mlp").unwrap(), ModelSpec::Mlp { hidden: 8 });
+        assert_eq!(ModelSpec::parse("mlp:4").unwrap(), ModelSpec::Mlp { hidden: 4 });
+        for s in ["glm", "mlp:8", "mlp:3"] {
+            let spec = ModelSpec::parse(s).unwrap();
+            assert_eq!(ModelSpec::parse(&spec.label()).unwrap(), spec, "{s}");
+        }
+        assert!(ModelSpec::parse("cnn").is_err());
+        assert!(ModelSpec::parse("mlp:0").is_err());
+        assert!(ModelSpec::parse("mlp:x").is_err());
+        assert!(ModelSpec::parse("glm:3").is_err());
+    }
+
+    #[test]
+    fn bits0_accepts_number_or_split_string() {
+        let cfg = ExperimentConfig::from_toml("bits0 = 5").unwrap();
+        assert_eq!(cfg.bits0, 5);
+        assert_eq!(cfg.bits_split, None);
+        let cfg = ExperimentConfig::from_toml("bits0 = \"24,8\"").unwrap();
+        assert_eq!(cfg.bits0, 24);
+        assert_eq!(cfg.bits_split, Some(vec![24, 8]));
+        // a uniform string collapses to the legacy scalar
+        let cfg = ExperimentConfig::from_toml("bits0 = \"7\"").unwrap();
+        assert_eq!(cfg.bits0, 7);
+        assert_eq!(cfg.bits_split, None);
+        let err = ExperimentConfig::from_toml("bits0 = \"24,\"").unwrap_err();
+        assert!(err.contains("grammar"), "{err}");
+        let err = ExperimentConfig::from_toml("bits0 = \"33,8\"").unwrap_err();
+        assert!(err.contains("range"), "{err}");
+    }
+
+    #[test]
+    fn model_key_parses() {
+        let cfg = ExperimentConfig::from_toml("model = \"mlp:6\"").unwrap();
+        assert_eq!(cfg.model, Some(ModelSpec::Mlp { hidden: 6 }));
+        assert!(ExperimentConfig::from_toml("model = \"lstm\"").is_err());
     }
 
     #[test]

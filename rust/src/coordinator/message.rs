@@ -21,12 +21,19 @@
 //! ([`crate::quant::codec::decode_reconstruct_into`]) — the broadcast
 //! path allocates nothing after warm-up.
 
+use crate::param::Blocks;
 use crate::quant::codec;
 
 /// Wire tag: raw little-endian `f64` model follows.
 pub const TAG_FULL: u8 = 0;
 /// Wire tag: bit-packed quantized message follows.
 pub const TAG_QUANTIZED: u8 = 1;
+/// Wire tag: per-block framed multi-block payload follows — a `u16`
+/// block count, then per block a presence byte and (when present) a
+/// `u32`-length-prefixed [`TAG_FULL`]/[`TAG_QUANTIZED`] sub-payload over
+/// that block's slice.  Emitted only for multi-block models (`B > 1`);
+/// flat models keep the original single-tag frames byte-for-byte.
+pub const TAG_BLOCKS: u8 = 2;
 
 /// Hard upper bound on the body of one length-prefixed frame (64 MiB).
 ///
@@ -135,6 +142,126 @@ pub fn decode_into_slot(bytes: &[u8], slot: &mut [f64]) -> bool {
     }
 }
 
+/// Open a [`TAG_BLOCKS`] payload: tag + block count.  Follow with one
+/// [`encode_absent_block_into`] or [`begin_block_into`]/
+/// [`finish_block_into`] pair per block, in block order.
+pub fn begin_blocks_into(nblocks: usize, out: &mut Vec<u8>) {
+    assert!(
+        (2..=u16::MAX as usize).contains(&nblocks),
+        "TAG_BLOCKS frames multi-block payloads only (got {nblocks} blocks)"
+    );
+    out.push(TAG_BLOCKS);
+    out.extend_from_slice(&(nblocks as u16).to_le_bytes());
+}
+
+/// A censored block transmits nothing: presence byte 0, no sub-payload.
+pub fn encode_absent_block_into(out: &mut Vec<u8>) {
+    out.push(0);
+}
+
+/// Open one transmitting block: presence byte 1 + reserved `u32` length
+/// slot.  Append the sub-payload ([`encode_full_into`] or
+/// [`encode_quantized_into`] over the block's slice), then patch the
+/// length with [`finish_block_into`].
+pub fn begin_block_into(out: &mut Vec<u8>) -> usize {
+    out.push(1);
+    let at = out.len();
+    out.extend_from_slice(&[0u8; 4]);
+    at
+}
+
+/// Patch the sub-payload length reserved by [`begin_block_into`].
+pub fn finish_block_into(out: &mut Vec<u8>, at: usize) {
+    let sub = out.len() - at - 4;
+    out[at..at + 4].copy_from_slice(&(sub as u32).to_le_bytes());
+}
+
+/// Decode a [`TAG_BLOCKS`] wire message into the receiver's stored slot:
+/// present blocks land in their spans (full precision overwrites,
+/// quantized reconstructs in place against the span — the per-block
+/// analogue of [`decode_into_slot`]); absent blocks leave their spans
+/// untouched, exactly like the in-process engine's masked delivery.
+/// Returns `false` on any malformed input (wrong tag or block count,
+/// truncation, trailing bytes) — the slot may then be partially written,
+/// so callers treat `false` as fatal.
+pub fn decode_blocks_into_slot(bytes: &[u8], layout: &Blocks, slot: &mut [f64]) -> bool {
+    let Some((&tag, rest)) = bytes.split_first() else {
+        return false;
+    };
+    if tag != TAG_BLOCKS || rest.len() < 2 {
+        return false;
+    }
+    let nb = u16::from_le_bytes([rest[0], rest[1]]) as usize;
+    if nb != layout.count() || layout.d() != slot.len() {
+        return false;
+    }
+    let mut body = &rest[2..];
+    for b in 0..nb {
+        let Some((&presence, tail)) = body.split_first() else {
+            return false;
+        };
+        body = tail;
+        match presence {
+            0 => {}
+            1 => {
+                if body.len() < 4 {
+                    return false;
+                }
+                let len = u32::from_le_bytes(body[..4].try_into().expect("4-byte prefix")) as usize;
+                body = &body[4..];
+                if body.len() < len {
+                    return false;
+                }
+                let (sub, tail) = body.split_at(len);
+                body = tail;
+                if !decode_into_slot(sub, &mut slot[layout.range(b)]) {
+                    return false;
+                }
+            }
+            _ => return false,
+        }
+    }
+    body.is_empty()
+}
+
+/// Per-block counted bits of a [`TAG_BLOCKS`] payload (absent blocks
+/// count zero) — the wire-side mirror of the engines' per-block ledger
+/// (diagnostics/tests; the hot path accounts from the protocol core).
+pub fn counted_bits_per_block(bytes: &[u8], layout: &Blocks) -> Option<Vec<u64>> {
+    let (&tag, rest) = bytes.split_first()?;
+    if tag != TAG_BLOCKS || rest.len() < 2 {
+        return None;
+    }
+    let nb = u16::from_le_bytes([rest[0], rest[1]]) as usize;
+    if nb != layout.count() {
+        return None;
+    }
+    let mut body = &rest[2..];
+    let mut per = Vec::with_capacity(nb);
+    for b in 0..nb {
+        let (&presence, tail) = body.split_first()?;
+        body = tail;
+        match presence {
+            0 => per.push(0),
+            1 => {
+                if body.len() < 4 {
+                    return None;
+                }
+                let len = u32::from_le_bytes(body[..4].try_into().expect("4-byte prefix")) as usize;
+                body = &body[4..];
+                if body.len() < len {
+                    return None;
+                }
+                let (sub, tail) = body.split_at(len);
+                body = tail;
+                per.push(counted_bits(sub, layout.len_of(b))?);
+            }
+            _ => return None,
+        }
+    }
+    body.is_empty().then_some(per)
+}
+
 /// Payload size in bits as the paper counts it, recovered from the wire
 /// bytes (diagnostics; the engines account from the protocol core and
 /// never re-derive this on the hot path).
@@ -201,6 +328,89 @@ mod tests {
         encode_quantized_into(msg.radius, msg.bits, &msg.codes, &mut wire);
         let cut = wire.len() - 1;
         assert!(!decode_into_slot(&wire[..cut], &mut slot));
+    }
+
+    #[test]
+    fn block_framing_round_trips_every_bit_width() {
+        // quantized block at every width the codec supports, next to a
+        // full-precision sibling: spans reconstruct exactly like the
+        // single-tag messages do over the whole vector
+        let layout = Blocks::from_lens(&[5, 3]);
+        for bits in 1..=32u32 {
+            let mask = if bits >= 32 { u32::MAX } else { (1u32 << bits) - 1 };
+            let codes: Vec<u32> = (0..5).map(|i| (11 * i as u32 + 1) & mask).collect();
+            let mut wire = Vec::new();
+            begin_blocks_into(2, &mut wire);
+            let at = begin_block_into(&mut wire);
+            encode_quantized_into(0.75, bits, &codes, &mut wire);
+            finish_block_into(&mut wire, at);
+            let at = begin_block_into(&mut wire);
+            encode_full_into(&[1.0, -2.0, 3.5], &mut wire);
+            finish_block_into(&mut wire, at);
+
+            let reference: Vec<f64> = (0..8).map(|i| 0.25 * i as f64 - 1.0).collect();
+            let mut slot = reference.clone();
+            assert!(decode_blocks_into_slot(&wire, &layout, &mut slot), "bits={bits}");
+            let expected = QuantMessage { codes: codes.clone(), radius: 0.75, bits }
+                .reconstruct(&reference[..5]);
+            for (a, b) in expected.iter().zip(&slot[..5]) {
+                assert_eq!(a.to_bits(), b.to_bits(), "bits={bits}");
+            }
+            assert_eq!(&slot[5..], &[1.0, -2.0, 3.5]);
+            let per = counted_bits_per_block(&wire, &layout).expect("counted");
+            assert_eq!(per, vec![bits as u64 * 5 + 64, 32 * 3], "bits={bits}");
+        }
+    }
+
+    #[test]
+    fn absent_blocks_leave_their_spans_untouched() {
+        let layout = Blocks::from_lens(&[2, 2]);
+        let mut wire = Vec::new();
+        begin_blocks_into(2, &mut wire);
+        encode_absent_block_into(&mut wire);
+        let at = begin_block_into(&mut wire);
+        encode_full_into(&[9.0, 8.0], &mut wire);
+        finish_block_into(&mut wire, at);
+        let mut slot = vec![1.0, 2.0, 3.0, 4.0];
+        assert!(decode_blocks_into_slot(&wire, &layout, &mut slot));
+        assert_eq!(slot, vec![1.0, 2.0, 9.0, 8.0]);
+        assert_eq!(counted_bits_per_block(&wire, &layout), Some(vec![0, 64]));
+    }
+
+    #[test]
+    fn block_framing_rejects_malformed_input() {
+        let layout = Blocks::from_lens(&[2, 2]);
+        let mut wire = Vec::new();
+        begin_blocks_into(2, &mut wire);
+        let at = begin_block_into(&mut wire);
+        encode_full_into(&[1.0, 2.0], &mut wire);
+        finish_block_into(&mut wire, at);
+        let at = begin_block_into(&mut wire);
+        encode_full_into(&[3.0, 4.0], &mut wire);
+        finish_block_into(&mut wire, at);
+        let mut slot = vec![0.0; 4];
+        assert!(decode_blocks_into_slot(&wire, &layout, &mut slot));
+
+        // truncations never panic or accept
+        for cut in 0..wire.len() {
+            assert!(!decode_blocks_into_slot(&wire[..cut], &layout, &mut slot), "cut={cut}");
+            assert_eq!(counted_bits_per_block(&wire[..cut], &layout), None, "cut={cut}");
+        }
+        // trailing garbage
+        let mut longer = wire.clone();
+        longer.push(0);
+        assert!(!decode_blocks_into_slot(&longer, &layout, &mut slot));
+        // wrong block count for the layout
+        let three = Blocks::from_lens(&[2, 1, 1]);
+        assert!(!decode_blocks_into_slot(&wire, &three, &mut slot));
+        // bad presence byte
+        let mut bad = wire.clone();
+        bad[3] = 7;
+        assert!(!decode_blocks_into_slot(&bad, &layout, &mut slot));
+        // a flat-tag message is not a block message
+        let mut flat = Vec::new();
+        encode_full_into(&[1.0; 4], &mut flat);
+        assert!(!decode_blocks_into_slot(&flat, &layout, &mut slot));
     }
 
     #[test]

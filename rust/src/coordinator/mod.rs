@@ -134,6 +134,14 @@ pub struct Coordinator {
     /// consecutive off-the-air rounds per worker (bounded-staleness
     /// policy; all zero without one)
     stale: Vec<u64>,
+    /// per-(worker, block) ages under bounded staleness, flattened
+    /// row-major (multi-block models only; see [`crate::algs::Run`]'s
+    /// twin — identical policy, so the engines stay locked)
+    block_stale: Vec<u64>,
+    /// scratch: per-block candidate bits masked to transmitting blocks
+    block_bits_scratch: Vec<u64>,
+    /// scratch: committed-block mask of the sender being fanned out
+    mask_scratch: Vec<bool>,
     /// per-worker force-refresh flags, computed leader-side before each
     /// phase dispatch (the executors must not read the mutable staleness
     /// bookkeeping)
@@ -193,12 +201,16 @@ impl Coordinator {
             Schedule::Alternating => vec![topo.heads(), topo.tails()],
             Schedule::Jacobian => vec![(0..n).collect()],
         };
+        let nblocks = problem.blocks.count();
         Coordinator {
             losses: vec![0.0; n],
             live_groups: phase_groups.clone(),
             phase_groups,
             active: vec![true; n],
             stale: vec![0; n],
+            block_stale: vec![0; if nblocks > 1 { n * nblocks } else { 0 }],
+            block_bits_scratch: Vec::with_capacity(nblocks),
+            mask_scratch: Vec::with_capacity(nblocks),
             force_scratch: vec![false; n],
             churn_applied: 0,
             shards,
@@ -258,9 +270,17 @@ impl Coordinator {
     fn run_phase(&mut self, group: &[usize], k_plus_1: u64) {
         let tau = self.opts.staleness_bound;
         // leader-side: derive force-refresh flags from the staleness
-        // bookkeeping before dispatch (the executors read them immutably)
+        // bookkeeping before dispatch (the executors read them immutably).
+        // Multi-block: any one block past the bound forces a full refresh.
         for &i in group {
-            self.force_scratch[i] = tau.is_some_and(|t| self.stale[i] >= t);
+            let nb = self.shards[i].core.block_count();
+            self.force_scratch[i] = match tau {
+                None => false,
+                Some(t) if nb > 1 => {
+                    self.block_stale[i * nb..(i + 1) * nb].iter().any(|&a| a >= t)
+                }
+                Some(t) => self.stale[i] >= t,
+            };
         }
         // 1. parallel: primal solve + quantize/censor candidate.  Raw
         // base pointer for disjoint per-index &mut access (group ids are
@@ -283,12 +303,30 @@ impl Coordinator {
                 rec.note_attempt();
             }
             let force = self.force_scratch[i];
+            let nb = self.shards[i].core.block_count();
+            let multi = nb > 1;
             let Some(bits) = self.shards[i].core.pending_bits() else {
                 if tau.is_some() {
                     self.stale[i] += 1;
+                    if multi {
+                        for a in &mut self.block_stale[i * nb..(i + 1) * nb] {
+                            *a += 1;
+                        }
+                    }
                 }
                 continue;
             };
+            if multi {
+                // per-block ledger: bits are spent whether or not the
+                // broadcast lands (identical to the in-process engine)
+                let mask = self.shards[i].core.broadcast_mask().expect("multi-block candidate");
+                let per =
+                    self.shards[i].core.candidate_block_bits().expect("multi-block candidate");
+                self.block_bits_scratch.clear();
+                self.block_bits_scratch
+                    .extend(per.iter().zip(mask).map(|(&b, &on)| if on { b } else { 0 }));
+                self.medium.record_block_bits(&self.block_bits_scratch);
+            }
             let dist = self.active_neighbor_distance(i);
             let landed = match tau {
                 None => self.medium.transmit(i, self.iter, bits, dist),
@@ -299,6 +337,11 @@ impl Coordinator {
             };
             if landed {
                 self.shards[i].commit_and_encode();
+                if multi {
+                    let mask = self.shards[i].core.broadcast_mask().expect("multi-block commit");
+                    self.mask_scratch.clear();
+                    self.mask_scratch.extend_from_slice(mask);
+                }
                 let wire = self.shards[i].take_wire();
                 for &m in self.topo.neighbors(i) {
                     if self.active[m] {
@@ -312,11 +355,30 @@ impl Coordinator {
                         rec.stale_refresh(self.iter, i, staleness);
                     }
                 }
-                self.stale[i] = 0;
+                if multi && tau.is_some() {
+                    // committed blocks reset; still-censored blocks keep
+                    // aging; `stale[i]` mirrors the worst block
+                    let ages = &mut self.block_stale[i * nb..(i + 1) * nb];
+                    for (a, &on) in ages.iter_mut().zip(&self.mask_scratch) {
+                        if on {
+                            *a = 0;
+                        } else {
+                            *a += 1;
+                        }
+                    }
+                    self.stale[i] = ages.iter().copied().max().unwrap_or(0);
+                } else {
+                    self.stale[i] = 0;
+                }
             } else {
                 self.shards[i].core.abort_pending();
                 if tau.is_some() {
                     self.stale[i] += 1;
+                    if multi {
+                        for a in &mut self.block_stale[i * nb..(i + 1) * nb] {
+                            *a += 1;
+                        }
+                    }
                 }
             }
         }
@@ -337,6 +399,12 @@ impl Coordinator {
         for e in &events {
             apply_churn_event(&mut self.shards, &mut self.active, &self.topo, e);
             self.stale[e.worker] = 0;
+            let nb = self.shards[e.worker].core.block_count();
+            if nb > 1 {
+                for a in &mut self.block_stale[e.worker * nb..(e.worker + 1) * nb] {
+                    *a = 0;
+                }
+            }
             self.churn_applied += 1;
             if let Some(rec) = &mut self.recorder {
                 match e.kind {
@@ -485,6 +553,8 @@ impl Coordinator {
             trace: self.trace.clone(),
             active: self.active.clone(),
             stale: self.stale.clone(),
+            block_stale: self.block_stale.clone(),
+            block_bits: log.block_bits.clone(),
         }
     }
 
@@ -522,6 +592,17 @@ impl Coordinator {
             "checkpoint membership does not match the configured churn schedule"
         );
         self.stale.copy_from_slice(&s.stale);
+        if s.block_stale.is_empty() {
+            // v2 checkpoints carry no per-block section (flat-model era)
+            self.block_stale.iter_mut().for_each(|a| *a = 0);
+        } else {
+            assert_eq!(
+                s.block_stale.len(),
+                self.block_stale.len(),
+                "checkpoint per-block staleness section size"
+            );
+            self.block_stale.copy_from_slice(&s.block_stale);
+        }
         for (shard, cs) in self.shards.iter_mut().zip(&s.cores) {
             shard.core.import_state(cs);
         }
@@ -532,6 +613,7 @@ impl Coordinator {
             s.medium.sim_time_s,
             &s.medium.link,
         );
+        self.medium.restore_block_bits(s.block_bits.clone());
         self.trace = s.trace.clone();
         self.iter = s.iteration;
         if let Some(rec) = &mut self.recorder {
@@ -671,6 +753,60 @@ mod tests {
         let lines = sink.lines().join("\n");
         assert!(lines.contains(r#""event":"worker_leave""#), "{lines}");
         assert!(lines.contains(r#""event":"worker_join""#), "{lines}");
+    }
+
+    #[test]
+    fn coordinated_mlp_matches_simulator_bit_for_bit() {
+        // censored + quantized multi-block with a per-layer bit split:
+        // partial commits must ship the exact spans the simulator hands
+        // its neighbors, and both per-block ledgers must agree
+        let topo = Topology::chain(4);
+        let ds = synthetic::linear_dataset(48, 3, 8);
+        let p = Problem::with_model(
+            &ds,
+            &topo,
+            1.0,
+            0.05,
+            8,
+            crate::config::ModelSpec::Mlp { hidden: 2 },
+        )
+        .expect("mlp problem");
+        let spec = AlgSpec::cq_ggadmm(0.3, 0.85, 0.995, 4).with_bits_split(Some(vec![4, 2]));
+        let mut run = crate::algs::Run::new(
+            p.clone(),
+            topo.clone(),
+            spec.clone(),
+            crate::algs::RunOptions::default(),
+        );
+        let mut coord = Coordinator::spawn(p, topo, spec, CoordinatorOptions::default());
+        for _ in 0..25 {
+            run.step();
+            coord.step();
+        }
+        assert_eq!(run.trace(), coord.trace(), "multi-block engines diverged");
+        assert_eq!(run.comm().total_bits, coord.comm().total_bits);
+        assert_eq!(run.comm().block_bits, coord.comm().block_bits, "block ledgers diverged");
+    }
+
+    #[test]
+    fn coordinated_qdgd_matches_simulator_bit_for_bit() {
+        let topo = Topology::random_bipartite(6, 0.5, 9);
+        let ds = synthetic::linear_dataset(72, 4, 9);
+        let p = Problem::new(&ds, &topo, 1.0, 0.0, 9);
+        let spec = AlgSpec::qdgd(0.995, 6);
+        let mut run = crate::algs::Run::new(
+            p.clone(),
+            topo.clone(),
+            spec.clone(),
+            crate::algs::RunOptions::default(),
+        );
+        let mut coord = Coordinator::spawn(p, topo, spec, CoordinatorOptions::default());
+        for _ in 0..20 {
+            run.step();
+            coord.step();
+        }
+        assert_eq!(run.trace(), coord.trace(), "qdgd engines diverged");
+        assert_eq!(run.comm().total_bits, coord.comm().total_bits);
     }
 
     #[test]

@@ -12,6 +12,7 @@
 //! simulated workers.
 
 use super::message;
+use crate::param::Blocks;
 use crate::protocol::{PayloadRef, WorkerCore};
 
 /// One simulated worker, scheduled onto the executor pool by the leader.
@@ -21,6 +22,9 @@ pub struct ShardWorker {
     /// (cleared per commit, capacity retained — the broadcast path
     /// allocates nothing after warm-up).
     wire: Vec<u8>,
+    /// The core's block layout, cloned once so decode can address spans
+    /// while the core's slot is mutably borrowed.
+    layout: Blocks,
 }
 
 impl ShardWorker {
@@ -28,7 +32,8 @@ impl ShardWorker {
         // the wire encoder needs the candidate's integer codes; the
         // shared core skips collecting them unless a driver opts in
         core.enable_code_collection();
-        ShardWorker { core, wire: Vec::new() }
+        let layout = core.block_layout();
+        ShardWorker { core, wire: Vec::new(), layout }
     }
 
     /// One phase turn, run on an executor thread: primal update, then
@@ -44,10 +49,33 @@ impl ShardWorker {
     }
 
     /// Leader-side: the medium delivered this worker's broadcast — commit
-    /// it and encode the wire bytes into the persistent buffer.
+    /// it and encode the wire bytes into the persistent buffer.  Flat
+    /// cores keep the original single-tag frame byte-for-byte;
+    /// multi-block cores frame each transmitting block separately
+    /// ([`message::TAG_BLOCKS`]) so a censored block ships nothing.
     pub fn commit_and_encode(&mut self) {
         self.core.commit_pending();
         self.wire.clear();
+        let nb = self.core.block_count();
+        if nb > 1 {
+            let mask = self.core.broadcast_mask().expect("multi-block commit has a mask");
+            message::begin_blocks_into(nb, &mut self.wire);
+            for b in 0..nb {
+                if !mask[b] {
+                    message::encode_absent_block_into(&mut self.wire);
+                    continue;
+                }
+                let at = message::begin_block_into(&mut self.wire);
+                match self.core.committed_block_payload(b) {
+                    PayloadRef::Full(span) => message::encode_full_into(span, &mut self.wire),
+                    PayloadRef::Quantized { radius, bits, codes } => {
+                        message::encode_quantized_into(radius, bits, codes, &mut self.wire)
+                    }
+                }
+                message::finish_block_into(&mut self.wire, at);
+            }
+            return;
+        }
         match self.core.committed_payload() {
             PayloadRef::Full(theta) => message::encode_full_into(theta, &mut self.wire),
             PayloadRef::Quantized { radius, bits, codes } => {
@@ -69,13 +97,18 @@ impl ShardWorker {
 
     /// Receive a neighbor's broadcast: decode straight into the core's
     /// stored slot for `from` (full precision overwrites; quantized
-    /// reconstructs in place against the shared reference).
+    /// reconstructs in place against the shared reference; multi-block
+    /// frames land span-by-span, absent blocks keeping the stale span —
+    /// the wire twin of the in-process engine's masked delivery).
     pub fn deliver(&mut self, from: usize, bytes: &[u8]) {
+        let layout = &self.layout;
         self.core.deliver_with(from, |slot| {
-            assert!(
-                message::decode_into_slot(bytes, slot),
-                "malformed broadcast from worker {from}"
-            );
+            let ok = if layout.count() > 1 {
+                message::decode_blocks_into_slot(bytes, layout, slot)
+            } else {
+                message::decode_into_slot(bytes, slot)
+            };
+            assert!(ok, "malformed broadcast from worker {from}");
         });
     }
 }

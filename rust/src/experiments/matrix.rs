@@ -241,6 +241,11 @@ pub struct ChurnCell {
     pub churn_rate: f64,
     pub straggler_frac: f64,
     pub trace: Trace,
+    /// Simulated on-air wall clock ([`Run::sim_time_s`]) at the first
+    /// recorded point with `loss_gap <= target_gap`; `None` when the
+    /// cell never reached the target.  Captured while stepping because
+    /// [`crate::metrics::TracePoint`] does not carry the clock.
+    pub sim_time_to_target: Option<f64>,
 }
 
 /// Run the robustness matrix as one flattened job list on the sweep
@@ -315,31 +320,52 @@ pub fn run_churn_matrix(
     let sweep = sweep.min(cells.len()).max(1);
     let run_threads = if sweep > 1 { 1 } else { exec.threads };
     let mut pool = (sweep > 1).then(|| crate::parallel::WorkerPool::new(sweep));
+    let target = spec.target_gap;
     let traces = crate::parallel::map_maybe_pool(pool.as_mut(), cells.len(), |j| {
         let c = &cells[j];
         let opts = c.opts.clone().with_threads(run_threads);
         let mut run = Run::new(c.problem.clone(), c.topo.clone(), c.alg.clone(), opts);
-        run.run(spec.iters)
+        // step (rather than batch-run) so the simulated clock can be read
+        // the moment the gap first crosses the target — trace points do
+        // not carry sim time, and stepping is bit-identical to `run()`
+        let mut sim_to_target = None;
+        for _ in 0..spec.iters {
+            run.step();
+            if sim_to_target.is_none()
+                && run.trace().points.last().is_some_and(|p| p.loss_gap <= target)
+            {
+                sim_to_target = Some(run.sim_time_s());
+            }
+        }
+        (run.trace().clone(), sim_to_target)
     });
     Ok(cells
         .into_iter()
         .zip(traces)
-        .map(|(c, trace)| ChurnCell {
+        .map(|(c, (trace, sim_time_to_target))| ChurnCell {
             family: c.family,
             alg: c.alg.name.clone(),
             churn_rate: c.rate,
             straggler_frac: c.frac,
             trace,
+            sim_time_to_target,
         })
         .collect())
 }
 
 /// Serialize the degradation surface: one CSV row per cell, empty
-/// to-target fields when the cell never reached `target_gap`.
+/// to-target fields when the cell never reached `target_gap`.  The
+/// to-target columns are the fig. 5 comparison families — iterations,
+/// rounds, bits, energy, and simulated wall clock — so the robustness
+/// sweep and the per-layer bit-allocation ablation share one schema.
+/// `sim_s_to_target` comes from [`ChurnCell::sim_time_to_target`],
+/// which was captured at the spec's own target; pass the same
+/// `target_gap` here for a coherent row.
 pub fn churn_matrix_csv(cells: &[ChurnCell], target_gap: f64) -> String {
     let mut s = String::from(
         "family,algorithm,churn_rate,straggler_frac,final_gap,\
-         iters_to_target,rounds_to_target,mbits_to_target,energy_j_to_target\n",
+         iters_to_target,rounds_to_target,mbits_to_target,energy_j_to_target,\
+         sim_s_to_target\n",
     );
     for c in cells {
         // family labels can carry commas (e.g. `smallworld:4,0.1`)
@@ -356,16 +382,22 @@ pub fn churn_matrix_csv(cells: &[ChurnCell], target_gap: f64) -> String {
         );
         match c.trace.first_below(target_gap) {
             Some(p) => {
-                let _ = writeln!(
+                let _ = write!(
                     s,
-                    ",{},{},{},{:e}",
+                    ",{},{},{},{:e},",
                     p.iteration,
                     p.cum_rounds,
                     p.cum_bits as f64 / 1e6,
                     p.cum_energy_j
                 );
+                match c.sim_time_to_target {
+                    Some(t) => {
+                        let _ = writeln!(s, "{t:e}");
+                    }
+                    None => s.push('\n'),
+                }
             }
-            None => s.push_str(",,,,\n"),
+            None => s.push_str(",,,,,\n"),
         }
     }
     s
@@ -472,10 +504,28 @@ mod tests {
             .find(|c| c.family == "chain" && c.alg == "GADMM" && c.churn_rate == 0.0)
             .unwrap();
         assert!(base.trace.last_gap() < 1e-2, "{:.2e}", base.trace.last_gap());
+        // a converged cell carries the wall-clock-to-target reading, and
+        // it is consistent with the trace's first-below point
+        assert!(base.trace.first_below(spec.target_gap).is_some());
+        let sim = base.sim_time_to_target.expect("converged cell has a sim time");
+        assert!(sim > 0.0 && sim.is_finite(), "{sim}");
         let csv = churn_matrix_csv(&cells, spec.target_gap);
         assert!(csv.starts_with("family,algorithm,churn_rate,straggler_frac"));
+        let header = csv.lines().next().unwrap();
+        assert!(header.ends_with("energy_j_to_target,sim_s_to_target"), "{header}");
         assert_eq!(csv.lines().count(), 1 + cells.len());
         assert!(csv.contains("chain,GADMM,0,0,"), "{csv}");
+        // every data row has the full column count, reached target or not
+        let cols = header.split(',').count();
+        for line in csv.lines().skip(1) {
+            let fields = if line.starts_with('"') {
+                // quoted family label carries one comma
+                line.split(',').count() - 1
+            } else {
+                line.split(',').count()
+            };
+            assert_eq!(fields, cols, "{line}");
+        }
         // comma-bearing family labels are quoted so columns stay aligned
         assert!(csv.contains("\"smallworld:4,0.1\",GADMM,"), "{csv}");
         let table = churn_summary(&cells, spec.target_gap).render();
@@ -504,6 +554,10 @@ mod tests {
             let (px, py) = (x.trace.points.last().unwrap(), y.trace.points.last().unwrap());
             assert_eq!(px.cum_bits, py.cum_bits);
             assert_eq!(px.cum_rounds, py.cum_rounds);
+            assert_eq!(
+                x.sim_time_to_target.map(f64::to_bits),
+                y.sim_time_to_target.map(f64::to_bits)
+            );
         }
     }
 

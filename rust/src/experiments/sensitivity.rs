@@ -1,8 +1,10 @@
 //! Sensitivity / ablation studies for the design choices DESIGN.md calls
 //! out: the penalty `rho`, the censoring threshold `tau0` (§4 discusses
-//! both extremes), the decay `xi`, and the initial bit width `bits0`.
+//! both extremes), the decay `xi`, the initial bit width `bits0`, and —
+//! on the multi-block MLP model — the per-layer bit allocation.
 
 use crate::algs::{AlgSpec, Problem, Run, RunOptions};
+use crate::config::ModelSpec;
 use crate::data;
 use crate::graph::Topology;
 use crate::io::Table;
@@ -77,6 +79,53 @@ pub fn bits_sweep(bits: &[u32], iters: u64, seed: u64) -> Vec<SweepPoint> {
         .collect()
 }
 
+/// MLP variant of the standard workload: same graph and dataset, the
+/// two-block (hidden layer W, output head v) model.
+fn mlp_workload(hidden: usize, seed: u64) -> (Problem, Topology) {
+    let topo = Topology::random_bipartite(16, 0.3, seed);
+    let ds = data::load(crate::config::DatasetId::SynthLinear, seed);
+    let problem = Problem::with_model(&ds, &topo, 30.0, 0.0, seed, ModelSpec::Mlp { hidden })
+        .expect("synth-linear supports the MLP model");
+    (problem, topo)
+}
+
+/// Per-layer bit-allocation ablation on the two-block MLP: each
+/// allocation `[w_bits, v_bits]` runs Q-GGADMM with that split, and the
+/// first allocation also runs the QDGD first-order baseline at the same
+/// split.  This is the `--bits0 N,M` axis of the experiment matrix.
+pub fn bits_alloc_sweep(
+    allocs: &[Vec<u32>],
+    hidden: usize,
+    iters: u64,
+    target: f64,
+    seed: u64,
+) -> Vec<SweepPoint> {
+    let (p, t) = mlp_workload(hidden, seed);
+    let label_of = |alloc: &[u32]| {
+        alloc.iter().map(u32::to_string).collect::<Vec<_>>().join(",")
+    };
+    let mut pts: Vec<SweepPoint> = allocs
+        .iter()
+        .map(|alloc| {
+            let spec =
+                AlgSpec::q_ggadmm(0.995, alloc[0]).with_bits_split(Some(alloc.clone()));
+            run_point(&p, &t, spec, iters, target, format!("bits={}", label_of(alloc)))
+        })
+        .collect();
+    if let Some(alloc) = allocs.first() {
+        let spec = AlgSpec::qdgd(0.995, alloc[0]).with_bits_split(Some(alloc.clone()));
+        pts.push(run_point(
+            &p,
+            &t,
+            spec,
+            iters,
+            target,
+            format!("QDGD bits={}", label_of(alloc)),
+        ));
+    }
+    pts
+}
+
 /// Component ablation at fixed parameters: none / censor / quant / both.
 pub fn component_ablation(iters: u64, seed: u64) -> Vec<SweepPoint> {
     let (p, t) = workload(30.0, seed);
@@ -132,6 +181,18 @@ mod tests {
         // censoring must cut rounds
         let rounds = |i: usize| pts[i].rounds_to_target.expect(&pts[i].label);
         assert!(rounds(1) < rounds(0));
+    }
+
+    #[test]
+    fn bits_alloc_sweep_covers_allocations_and_qdgd_baseline() {
+        let pts = bits_alloc_sweep(&[vec![4, 4], vec![6, 2]], 4, 25, 1e-1, 33);
+        assert_eq!(pts.len(), 3, "two allocations + the QDGD baseline");
+        assert_eq!(pts[0].label, "bits=4,4");
+        assert_eq!(pts[1].label, "bits=6,2");
+        assert_eq!(pts[2].label, "QDGD bits=4,4");
+        for p in &pts {
+            assert!(p.final_gap.is_finite(), "{}: {}", p.label, p.final_gap);
+        }
     }
 
     #[test]

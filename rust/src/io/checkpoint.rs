@@ -9,10 +9,15 @@
 //! [`RunState`] — iteration, per-worker [`CoreState`]s, medium totals +
 //! link-model state, the trace accumulator, and (since version 2) the
 //! dynamic-network section: per-worker membership (`active`) and
-//! staleness counters (`stale`).  Version-1 checkpoints still decode —
-//! they predate churn, so the dynamic section defaults to everyone
-//! present with zero staleness.  Checkpoints are O(state), not
-//! O(history): the transmission log is folded into its running totals
+//! staleness counters (`stale`).  Version 3 appends the multi-block
+//! section — per-core block quantizer RNGs + per-block tx flags, the
+//! per-(worker, block) staleness ages and the per-block bits ledger —
+//! and is written **only** when any of that state is non-empty, so a
+//! flat (single-block) model's checkpoint is byte-for-byte the version-2
+//! file it always was.  Version-1 and -2 checkpoints still decode — the
+//! absent sections default to everyone present / zero staleness / no
+//! blocks.  Checkpoints are O(state), not O(history): the transmission
+//! log is folded into its running totals
 //! ([`crate::comm::CommLog::restore_totals`]).
 //!
 //! Writes are atomic (temp file + rename) so a crash mid-checkpoint
@@ -26,6 +31,8 @@ use std::path::Path;
 
 const MAGIC: &[u8; 8] = b"CQCKPT01";
 const VERSION: u32 = 2;
+/// Written instead of [`VERSION`] when the run carries multi-block state.
+const VERSION_BLOCKS: u32 = 3;
 
 /// Everything a resumed engine needs to continue bit-for-bit.
 #[derive(Clone, Debug, PartialEq)]
@@ -45,6 +52,13 @@ pub struct RunState {
     /// bounded-staleness policy (all zero without one, and in version-1
     /// checkpoints).
     pub stale: Vec<u64>,
+    /// Per-(worker, block) staleness ages, flattened row-major by worker
+    /// (multi-block models under a bounded-staleness policy; empty for
+    /// flat models and pre-version-3 checkpoints).
+    pub block_stale: Vec<u64>,
+    /// Cumulative per-block transmitted bits
+    /// ([`crate::comm::CommLog::block_bits`]; empty for flat models).
+    pub block_bits: Vec<u64>,
 }
 
 /// The medium's durable state: checkpointed totals + link-model RNG.
@@ -110,26 +124,55 @@ impl Enc {
             None => self.u8(0),
             Some(q) => {
                 self.u8(1);
-                match q.prev_radius {
-                    None => self.u8(0),
-                    Some(r) => {
-                        self.u8(1);
-                        self.f64(r);
-                    }
-                }
-                self.u32(q.prev_bits);
-                self.u128(q.rng_state);
-                self.u128(q.rng_inc);
+                self.quant_state(q);
             }
+        }
+    }
+
+    fn quant_state(&mut self, q: &QuantizerState) {
+        match q.prev_radius {
+            None => self.u8(0),
+            Some(r) => {
+                self.u8(1);
+                self.f64(r);
+            }
+        }
+        self.u32(q.prev_bits);
+        self.u128(q.rng_state);
+        self.u128(q.rng_inc);
+    }
+
+    /// The version-3 per-core block section: per-block quantizer RNGs +
+    /// per-block transmitted-once flags.
+    fn core_blocks(&mut self, c: &CoreState) {
+        self.u64(c.block_quantizers.len() as u64);
+        for q in &c.block_quantizers {
+            self.quant_state(q);
+        }
+        self.u64(c.block_tx_once.len() as u64);
+        for &t in &c.block_tx_once {
+            self.bool(t);
         }
     }
 }
 
+/// Whether any multi-block state is present (selects version 3; a flat
+/// model's checkpoint must stay the byte-identical version-2 file).
+fn has_block_state(state: &RunState) -> bool {
+    !state.block_stale.is_empty()
+        || !state.block_bits.is_empty()
+        || state
+            .cores
+            .iter()
+            .any(|c| !c.block_quantizers.is_empty() || !c.block_tx_once.is_empty())
+}
+
 /// Serialize a [`RunState`] to the versioned binary format.
 pub fn encode(state: &RunState) -> Vec<u8> {
+    let blocks = has_block_state(state);
     let mut e = Enc { buf: Vec::new() };
     e.buf.extend_from_slice(MAGIC);
-    e.u32(VERSION);
+    e.u32(if blocks { VERSION_BLOCKS } else { VERSION });
     e.u64(state.iteration);
     e.u64(state.cores.len() as u64);
     for c in &state.cores {
@@ -168,24 +211,50 @@ pub fn encode(state: &RunState) -> Vec<u8> {
     for &s in &state.stale {
         e.u64(s);
     }
+    if blocks {
+        // version-3 multi-block section
+        e.u64(state.cores.len() as u64);
+        for c in &state.cores {
+            e.core_blocks(c);
+        }
+        e.u64(state.block_stale.len() as u64);
+        for &a in &state.block_stale {
+            e.u64(a);
+        }
+        e.u64(state.block_bits.len() as u64);
+        for &b in &state.block_bits {
+            e.u64(b);
+        }
+    }
     e.buf
 }
 
 /// Serialize a single [`CoreState`] standalone (no magic/version header)
 /// — the networked transport ships worker state in registration and
 /// clean-shutdown frames using the exact checkpoint layout, so state that
-/// crossed the wire is bit-identical to state that crossed a file.
+/// crossed the wire is bit-identical to state that crossed a file.  The
+/// multi-block section is appended only when non-empty, keeping flat
+/// cores byte-identical to the pre-block encoding.
 pub fn encode_core(core: &CoreState) -> Vec<u8> {
     let mut e = Enc { buf: Vec::new() };
     e.core(core);
+    if !core.block_quantizers.is_empty() || !core.block_tx_once.is_empty() {
+        e.core_blocks(core);
+    }
     e.buf
 }
 
 /// Parse a [`CoreState`] produced by [`encode_core`]; rejects trailing
-/// bytes like the full-checkpoint decoder.
+/// bytes like the full-checkpoint decoder.  Remaining bytes after the
+/// flat fields are the optional multi-block section.
 pub fn decode_core(bytes: &[u8]) -> Result<CoreState, String> {
     let mut d = Dec { buf: bytes, pos: 0 };
-    let core = d.core()?;
+    let mut core = d.core()?;
+    if d.pos != bytes.len() {
+        let (bq, btx) = d.core_blocks()?;
+        core.block_quantizers = bq;
+        core.block_tx_once = btx;
+    }
     if d.pos != bytes.len() {
         return Err(format!("core state corrupt: {} trailing bytes", bytes.len() - d.pos));
     }
@@ -272,19 +341,7 @@ impl<'a> Dec<'a> {
         let dual_stale = self.bool("dual_stale")?;
         let quantizer = match self.u8()? {
             0 => None,
-            1 => {
-                let prev_radius = match self.u8()? {
-                    0 => None,
-                    1 => Some(self.f64()?),
-                    b => return Err(format!("checkpoint corrupt: radius flag byte {b}")),
-                };
-                Some(QuantizerState {
-                    prev_radius,
-                    prev_bits: self.u32()?,
-                    rng_state: self.u128()?,
-                    rng_inc: self.u128()?,
-                })
-            }
+            1 => Some(self.quant_state()?),
             b => return Err(format!("checkpoint corrupt: quantizer flag byte {b}")),
         };
         Ok(CoreState {
@@ -298,7 +355,37 @@ impl<'a> Dec<'a> {
             dual_delta,
             dual_stale,
             quantizer,
+            block_quantizers: Vec::new(),
+            block_tx_once: Vec::new(),
         })
+    }
+
+    fn quant_state(&mut self) -> Result<QuantizerState, String> {
+        let prev_radius = match self.u8()? {
+            0 => None,
+            1 => Some(self.f64()?),
+            b => return Err(format!("checkpoint corrupt: radius flag byte {b}")),
+        };
+        Ok(QuantizerState {
+            prev_radius,
+            prev_bits: self.u32()?,
+            rng_state: self.u128()?,
+            rng_inc: self.u128()?,
+        })
+    }
+
+    fn core_blocks(&mut self) -> Result<(Vec<QuantizerState>, Vec<bool>), String> {
+        let nq = self.len("block quantizers")?;
+        let mut bq = Vec::with_capacity(nq);
+        for _ in 0..nq {
+            bq.push(self.quant_state()?);
+        }
+        let nt = self.len("block tx_once")?;
+        let mut btx = Vec::with_capacity(nt);
+        for _ in 0..nt {
+            btx.push(self.bool("block tx_once")?);
+        }
+        Ok((bq, btx))
     }
 }
 
@@ -309,8 +396,10 @@ pub fn decode(bytes: &[u8]) -> Result<RunState, String> {
         return Err("not a checkpoint file (bad magic)".into());
     }
     let version = d.u32()?;
-    if version == 0 || version > VERSION {
-        return Err(format!("unsupported checkpoint version {version} (expected 1..={VERSION})"));
+    if version == 0 || version > VERSION_BLOCKS {
+        return Err(format!(
+            "unsupported checkpoint version {version} (expected 1..={VERSION_BLOCKS})"
+        ));
     }
     let iteration = d.u64()?;
     let n = d.len("cores")?;
@@ -359,10 +448,37 @@ pub fn decode(bytes: &[u8]) -> Result<RunState, String> {
         // v1 predates dynamic networks: everyone present, nothing stale
         (vec![true; n], vec![0u64; n])
     };
+    let (block_stale, block_bits) = if version >= 3 {
+        let nb = d.len("block cores")?;
+        if nb != n {
+            return Err(format!(
+                "checkpoint corrupt: block section covers {nb} cores, expected {n}"
+            ));
+        }
+        for c in cores.iter_mut() {
+            let (bq, btx) = d.core_blocks()?;
+            c.block_quantizers = bq;
+            c.block_tx_once = btx;
+        }
+        let ns = d.len("block_stale")?;
+        let mut block_stale = Vec::with_capacity(ns);
+        for _ in 0..ns {
+            block_stale.push(d.u64()?);
+        }
+        let nbits = d.len("block_bits")?;
+        let mut block_bits = Vec::with_capacity(nbits);
+        for _ in 0..nbits {
+            block_bits.push(d.u64()?);
+        }
+        (block_stale, block_bits)
+    } else {
+        // pre-v3: flat models only, no per-block state
+        (Vec::new(), Vec::new())
+    };
     if d.pos != bytes.len() {
         return Err(format!("checkpoint corrupt: {} trailing bytes", bytes.len() - d.pos));
     }
-    Ok(RunState { iteration, cores, medium, trace, active, stale })
+    Ok(RunState { iteration, cores, medium, trace, active, stale, block_stale, block_bits })
 }
 
 /// Write a checkpoint atomically: temp file in the same directory, then
@@ -417,6 +533,8 @@ mod tests {
                         rng_state: u128::MAX - 17,
                         rng_inc: 12345,
                     }),
+                    block_quantizers: Vec::new(),
+                    block_tx_once: Vec::new(),
                 },
                 CoreState {
                     theta: vec![2.0; 3],
@@ -429,6 +547,8 @@ mod tests {
                     dual_delta: vec![0.0; 3],
                     dual_stale: true,
                     quantizer: None,
+                    block_quantizers: Vec::new(),
+                    block_tx_once: Vec::new(),
                 },
             ],
             medium: MediumState {
@@ -441,7 +561,28 @@ mod tests {
             trace,
             active: vec![true, false],
             stale: vec![3, 0],
+            block_stale: Vec::new(),
+            block_bits: Vec::new(),
         }
+    }
+
+    /// Sample state with live multi-block sections on every core.
+    fn sample_block_state() -> RunState {
+        let mut s = sample_state();
+        s.cores[0].block_quantizers = vec![
+            QuantizerState {
+                prev_radius: Some(1.5),
+                prev_bits: 8,
+                rng_state: 77,
+                rng_inc: 3,
+            },
+            QuantizerState { prev_radius: None, prev_bits: 2, rng_state: 9, rng_inc: 11 },
+        ];
+        s.cores[0].block_tx_once = vec![true, false];
+        s.cores[1].block_tx_once = vec![true, true];
+        s.block_stale = vec![0, 4, 1, 0];
+        s.block_bits = vec![4096, 640];
+        s
     }
 
     #[test]
@@ -455,6 +596,37 @@ mod tests {
             decoded.trace.points[0].consensus_gap.to_bits(),
             (-0.0f64).to_bits()
         );
+    }
+
+    #[test]
+    fn flat_state_still_encodes_as_version_2() {
+        // the multi-block refactor must not move a single byte of a flat
+        // model's checkpoint (the pre-refactor format is locked)
+        let bytes = encode(&sample_state());
+        assert_eq!(u32::from_le_bytes(bytes[8..12].try_into().unwrap()), 2);
+    }
+
+    #[test]
+    fn multi_block_state_round_trips_as_version_3() {
+        let s = sample_block_state();
+        let bytes = encode(&s);
+        assert_eq!(u32::from_le_bytes(bytes[8..12].try_into().unwrap()), 3);
+        let decoded = decode(&bytes).expect("decode v3");
+        assert_eq!(decoded, s);
+        assert!(decode(&bytes[..bytes.len() - 1]).unwrap_err().contains("truncated"));
+        let mut longer = bytes;
+        longer.push(0);
+        assert!(decode(&longer).unwrap_err().contains("trailing"));
+    }
+
+    #[test]
+    fn block_core_round_trips_standalone() {
+        let s = sample_block_state();
+        let flat_len = encode_core(&sample_state().cores[0]).len();
+        let bytes = encode_core(&s.cores[0]);
+        assert!(bytes.len() > flat_len, "block section must be appended");
+        assert_eq!(decode_core(&bytes).expect("decode"), s.cores[0]);
+        assert!(decode_core(&bytes[..bytes.len() - 1]).unwrap_err().contains("truncated"));
     }
 
     #[test]
@@ -498,9 +670,11 @@ mod tests {
         for core in sample_state().cores {
             let bytes = encode_core(&core);
             assert_eq!(decode_core(&bytes).expect("decode core"), core);
+            // stray bytes after a flat core read as a (truncated) block
+            // section — either way the decode must fail loudly
             let mut longer = bytes.clone();
             longer.push(7);
-            assert!(decode_core(&longer).unwrap_err().contains("trailing"));
+            assert!(decode_core(&longer).is_err());
             assert!(decode_core(&bytes[..bytes.len() - 1]).unwrap_err().contains("truncated"));
         }
     }

@@ -12,7 +12,10 @@
 //!   previous record: `committed` (broadcast attempts on the air,
 //!   including erasure-dropped ones — the medium charges them),
 //!   `censored` (gate-suppressed attempts), and `worker_bits` (sparse
-//!   `[worker, bits]` pairs in ascending worker order).
+//!   `[worker, bits]` pairs in ascending worker order).  Multi-block
+//!   runs (schema ≥ 3) additionally carry `cum_block_bits` — the
+//!   cumulative bits spent per parameter block, summing to `cum_bits`;
+//!   single-block runs omit the key entirely.
 //! * `checkpoint` — `iteration`, `path`; a durable checkpoint landed.
 //! * `worker_leave` / `worker_join` (schema ≥ 2) — `iteration`,
 //!   `worker`; a churn event applied at the start of that iteration.
@@ -29,9 +32,12 @@
 //! `workers x interval - committed`, which over-counts when churned-out
 //! workers skip the gate entirely; v2 counts actual gate entries
 //! ([`EventRecorder::note_attempt`]) — identical to v1 on a static
-//! graph.  Cumulative fields restart from checkpointed totals on
-//! resume, so a resumed log concatenated after the original's prefix
-//! validates identically to an uninterrupted one.
+//! graph.  v3 adds the optional `cum_block_bits` record field for
+//! multi-block parameterizations; a single-block v3 stream is
+//! line-identical to v2 except for the stamped version.  Cumulative
+//! fields restart from checkpointed totals on resume, so a resumed log
+//! concatenated after the original's prefix validates identically to an
+//! uninterrupted one.
 
 use super::Json;
 use crate::comm::CommLog;
@@ -41,7 +47,7 @@ use std::path::Path;
 use std::sync::{Arc, Mutex};
 
 /// Current event-schema version (the `schema` field of `run_start`).
-pub const EVENT_SCHEMA_VERSION: u64 = 2;
+pub const EVENT_SCHEMA_VERSION: u64 = 3;
 
 /// Where events go.  One line per event; implementations must keep lines
 /// tailable (flush per event or equivalent).
@@ -190,7 +196,7 @@ impl EventRecorder {
             .filter(|(_, &b)| b > 0)
             .map(|(w, &b)| Json::Arr(vec![Json::Num(w as f64), Json::Num(b as f64)]))
             .collect();
-        self.emit(Json::Obj(vec![
+        let mut event = Json::Obj(vec![
             ("event".into(), Json::Str("record".into())),
             ("iteration".into(), Json::Num(p.iteration as f64)),
             ("loss_gap".into(), Json::Num(p.loss_gap)),
@@ -202,7 +208,17 @@ impl EventRecorder {
             ("committed".into(), Json::Num(committed as f64)),
             ("censored".into(), Json::Num(censored as f64)),
             ("worker_bits".into(), Json::Arr(worker_bits)),
-        ]));
+        ]);
+        if !log.block_bits.is_empty() {
+            // multi-block ledger: cumulative per-block bits (sums to
+            // cum_bits) — the bit-allocation ablation's observable
+            let Json::Obj(fields) = &mut event else { unreachable!() };
+            fields.push((
+                "cum_block_bits".into(),
+                Json::Arr(log.block_bits.iter().map(|&b| Json::Num(b as f64)).collect()),
+            ));
+        }
+        self.emit(event);
     }
 
     /// A durable checkpoint landed at `path`.
@@ -304,6 +320,26 @@ mod tests {
         assert!(l2.contains(r#""committed":1"#), "{l2}");
         assert!(l2.contains(r#""censored":2"#), "{l2}");
         assert!(l2.contains(r#""worker_bits":[[1,40]]"#), "{l2}");
+    }
+
+    #[test]
+    fn multi_block_records_carry_cumulative_block_bits() {
+        let sink = MemorySink::new();
+        let mut rec = EventRecorder::new(Box::new(sink.clone()), 2);
+        let mut log = CommLog::default();
+        rec.note_attempt();
+        log.record(tx(0, 0, 100));
+        // flat ledger: the key is absent
+        rec.record(&point(1), &log, 0.1);
+        assert!(!sink.lines()[0].contains("cum_block_bits"), "{}", sink.lines()[0]);
+        // block ledger: cumulative per-block totals ride along
+        log.record_block_bits(&[96, 4]);
+        log.record_block_bits(&[0, 4]);
+        rec.note_attempt();
+        log.record(tx(1, 1, 100));
+        rec.record(&point(2), &log, 0.2);
+        let l = &sink.lines()[1];
+        assert!(l.contains(r#""cum_block_bits":[96,8]"#), "{l}");
     }
 
     #[test]

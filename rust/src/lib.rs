@@ -71,6 +71,7 @@ pub mod linalg;
 pub mod metrics;
 pub mod net;
 pub mod parallel;
+pub mod param;
 pub mod protocol;
 pub mod quant;
 pub mod runtime;

@@ -16,7 +16,8 @@
 
 use cq_ggadmm::algs::{AlgSpec, Problem, Run};
 use cq_ggadmm::cli::{Args, Cli, Command};
-use cq_ggadmm::config::{DatasetId, ExperimentConfig, ExperimentManifest, TopologySpec};
+use cq_ggadmm::config::{DatasetId, ExperimentConfig, ExperimentManifest, ModelSpec, TopologySpec};
+use cq_ggadmm::param::BitsSpec;
 use cq_ggadmm::coordinator::Coordinator;
 use cq_ggadmm::data;
 use cq_ggadmm::experiments::{self, matrix, ExecOptions};
@@ -51,7 +52,12 @@ fn cli() -> Cli {
         .command(
             Command::new("run", "run one algorithm on one dataset")
                 .opt("dataset", Some("synth-linear"), "synth-linear|bodyfat|synth-logistic|derm")
-                .opt("alg", Some("cq-ggadmm"), "ggadmm|c-ggadmm|q-ggadmm|cq-ggadmm|c-admm|gadmm|dgd")
+                .opt(
+                    "alg",
+                    Some("cq-ggadmm"),
+                    "ggadmm|c-ggadmm|q-ggadmm|cq-ggadmm|c-admm|gadmm|qdgd|dgd",
+                )
+                .opt("model", None, "model: glm|mlp[:hidden] (mlp is the two-block layer-wise MLP)")
                 .opt("workers", Some("24"), "number of workers")
                 .opt("connectivity", Some("0.3"), "graph connectivity ratio p")
                 .opt(
@@ -66,7 +72,7 @@ fn cli() -> Cli {
                 .opt("tau0", Some("1.0"), "censoring threshold tau0")
                 .opt("xi", Some("0.8"), "censoring decay xi")
                 .opt("omega", Some("0.995"), "quantizer step decay omega")
-                .opt("bits0", Some("2"), "initial quantizer bits")
+                .opt("bits0", Some("2"), "initial quantizer bits: one width or per-block 'N,M' (e.g. 24,8)")
                 .opt("seed", Some("1"), "random seed")
                 .opt("backend", Some("native"), "native|pjrt")
                 .opt("artifacts", Some("artifacts"), "artifacts dir (pjrt backend)")
@@ -85,6 +91,7 @@ fn cli() -> Cli {
             Command::new("coordinator", "run the sharded-executor coordinator demo")
                 .opt("dataset", Some("synth-linear"), "dataset id")
                 .opt("alg", Some("cq-ggadmm"), "algorithm")
+                .opt("model", None, "model: glm|mlp[:hidden] (mlp is the two-block layer-wise MLP)")
                 .opt("workers", Some("12"), "number of workers")
                 .opt("iters", Some("150"), "iterations")
                 .opt("seed", Some("1"), "random seed")
@@ -93,7 +100,7 @@ fn cli() -> Cli {
                 .opt("tau0", Some("1.0"), "censoring threshold tau0")
                 .opt("xi", Some("0.8"), "censoring decay xi")
                 .opt("omega", Some("0.995"), "quantizer step decay omega")
-                .opt("bits0", Some("2"), "initial quantizer bits")
+                .opt("bits0", Some("2"), "initial quantizer bits: one width or per-block 'N,M' (e.g. 24,8)")
                 .opt("topology", None, "topology family (see 'run --help'; default random:0.3)")
                 .opt("manifest", None, "layered TOML manifest (flags override)")
                 .opt("run-dir", None, "create a runs/<NNNN-slug>/ directory under this base")
@@ -111,6 +118,7 @@ fn cli() -> Cli {
                 .opt("port-file", None, "write the bound port here (atomically) once listening")
                 .opt("dataset", Some("synth-linear"), "dataset id")
                 .opt("alg", Some("cq-ggadmm"), "algorithm")
+                .opt("model", None, "model: glm|mlp[:hidden] (mlp is the two-block layer-wise MLP)")
                 .opt("workers", Some("12"), "number of workers")
                 .opt("connectivity", Some("0.3"), "graph connectivity ratio p")
                 .opt("iters", Some("150"), "iterations")
@@ -119,7 +127,7 @@ fn cli() -> Cli {
                 .opt("tau0", Some("1.0"), "censoring threshold tau0")
                 .opt("xi", Some("0.8"), "censoring decay xi")
                 .opt("omega", Some("0.995"), "quantizer step decay omega")
-                .opt("bits0", Some("2"), "initial quantizer bits")
+                .opt("bits0", Some("2"), "initial quantizer bits: one width or per-block 'N,M' (e.g. 24,8)")
                 .opt("topology", None, "topology family (see 'run --help'; default random:0.3)")
                 .opt("manifest", None, "layered TOML manifest (flags override)")
                 .opt("run-dir", None, "create a runs/<NNNN-slug>/ directory under this base")
@@ -196,8 +204,8 @@ fn cli() -> Cli {
                 .opt("kernel-tier", None, "kernel tier: scalar|avx2|auto (default: env/detect)"),
         )
         .command(
-            Command::new("sweep", "sensitivity/ablation sweeps (rho|tau0|bits|components)")
-                .opt("study", Some("components"), "rho|tau0|bits|components")
+            Command::new("sweep", "sensitivity/ablation sweeps (rho|tau0|bits|bits-split|components)")
+                .opt("study", Some("components"), "rho|tau0|bits|bits-split|components")
                 .opt("manifest", None, "layered TOML manifest (flags override)")
                 .opt("iters", Some("250"), "iterations per point")
                 .opt("seed", Some("41"), "random seed")
@@ -296,8 +304,19 @@ fn resolve_manifest(a: &Args) -> Result<ExperimentManifest, String> {
         }
     }
     if take("bits0") {
-        if let Some(v) = a.get_usize("bits0")? {
-            m.experiment.bits0 = v as u32;
+        if let Some(v) = a.get("bits0") {
+            // per-block grammar: '24,8' allocates one width per model
+            // block; a single width resets any manifest split
+            let spec = BitsSpec::parse(v).map_err(|err| format!("option --bits0: {err}"))?;
+            m.experiment.bits0 = spec.per_block[0];
+            m.experiment.bits_split =
+                if spec.is_uniform() { None } else { Some(spec.per_block.clone()) };
+        }
+    }
+    if take("model") {
+        if let Some(v) = a.get("model") {
+            m.experiment.model =
+                Some(ModelSpec::parse(v).map_err(|err| format!("option --model: {err}"))?);
         }
     }
     if take("topology") {
@@ -482,7 +501,8 @@ fn cmd_run(a: &Args) -> Result<(), String> {
     let e = &m.experiment;
     let ds = data::load(e.dataset, e.seed);
     let (topo, topo_label, dropped) = build_topology(&m)?;
-    let problem = Problem::new(&ds, &topo, e.rho, e.mu0, e.seed);
+    let model = e.model.unwrap_or(ModelSpec::Glm);
+    let problem = Problem::with_model(&ds, &topo, e.rho, e.mu0, e.seed, model)?;
     println!(
         "dataset={} d={} workers={} topology={topo_label} edges={}{} f*={:.6e}",
         ds.name,
@@ -503,6 +523,9 @@ fn cmd_run(a: &Args) -> Result<(), String> {
         if persist.as_ref().is_some_and(|p| p.resuming) || a.get("events").is_some() {
             return Err("dgd does not support checkpoint/resume or event streaming".into());
         }
+        if model != ModelSpec::Glm {
+            return Err("dgd is a single-block GLM baseline; use --model glm (or --alg qdgd)".into());
+        }
         let trace = cq_ggadmm::algs::dgd::run_dgd(
             &problem,
             &topo,
@@ -516,7 +539,9 @@ fn cmd_run(a: &Args) -> Result<(), String> {
         }
         trace
     } else {
-        let spec = AlgSpec::parse(&m.alg, e.tau0, e.xi, e.omega, e.bits0)?;
+        let spec = AlgSpec::parse(&m.alg, e.tau0, e.xi, e.omega, e.bits0)?
+            .with_bits_split(e.bits_split.clone());
+        spec.validate()?;
         let mut run = Run::new(problem, topo, spec, m.exec.clone());
         match &persist {
             Some(p) => {
@@ -582,11 +607,13 @@ fn cmd_coordinator(a: &Args) -> Result<(), String> {
         return Err("dgd is a first-order baseline; use 'run --alg dgd'".into());
     }
     let e = &m.experiment;
-    let spec = AlgSpec::parse(&m.alg, e.tau0, e.xi, e.omega, e.bits0)?;
+    let spec = AlgSpec::parse(&m.alg, e.tau0, e.xi, e.omega, e.bits0)?
+        .with_bits_split(e.bits_split.clone());
+    spec.validate()?;
     let alg_name = spec.name.clone();
     let ds = data::load(e.dataset, e.seed);
     let (topo, topo_label, _) = build_topology(&m)?;
-    let problem = Problem::new(&ds, &topo, e.rho, e.mu0, e.seed);
+    let problem = Problem::with_model(&ds, &topo, e.rho, e.mu0, e.seed, e.model.unwrap_or(ModelSpec::Glm))?;
     let mut coord = Coordinator::spawn(problem, topo, spec, m.exec.clone());
     println!(
         "sharding {} workers ({topo_label}) over a {}-thread executor, algorithm {alg_name}",
@@ -876,6 +903,22 @@ fn cmd_sweep(a: &Args) -> Result<(), String> {
             sens::tau0_sweep(&[0.0, 0.05, 0.1, 0.5, 5.0, 50.0], 0.9, iters, seed),
         ),
         "bits" => ("bits0", sens::bits_sweep(&[2, 4, 8, 12], iters, seed)),
+        "bits-split" => (
+            "W,v allocation",
+            sens::bits_alloc_sweep(
+                &[
+                    vec![8, 8],
+                    vec![12, 4],
+                    vec![4, 12],
+                    vec![24, 8],
+                    vec![2, 2],
+                ],
+                8,
+                iters,
+                1e-3,
+                seed,
+            ),
+        ),
         "components" => ("component", sens::component_ablation(iters, seed)),
         other => return Err(format!("unknown study '{other}'")),
     };

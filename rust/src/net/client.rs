@@ -28,6 +28,7 @@ use crate::config::ExperimentManifest;
 use crate::coordinator::message;
 use crate::graph::Topology;
 use crate::io::checkpoint;
+use crate::param::Blocks;
 use crate::protocol::{build_core_at, PayloadRef, ProtocolConfig, WorkerCore};
 use crate::solver::Backend;
 
@@ -125,6 +126,9 @@ struct Session {
     id: usize,
     conn: Conn,
     core: WorkerCore,
+    /// The core's block layout, cloned once so delivery decode can
+    /// address spans while the core's slot is mutably borrowed.
+    layout: Blocks,
     /// Iteration most recently computed (`k_plus_1` of the last phase).
     last_k1: u64,
     exit_after: Option<u64>,
@@ -212,10 +216,12 @@ fn welcome_session(
     if let Some(cs) = &state {
         core.import_state(cs);
     }
+    let layout = core.block_layout();
     Ok(Session {
         id,
         conn,
         core,
+        layout,
         last_k1: resume_iter,
         exit_after: None,
         vec_scratch: vec![0.0; ctx.problem.d],
@@ -305,19 +311,7 @@ impl Session {
                     Some(bits) => {
                         self.conn.payload().push(1);
                         wire::put_u64(self.conn.payload(), bits);
-                        match self.core.pending_payload() {
-                            PayloadRef::Full(v) => {
-                                message::encode_full_into(v, self.conn.payload());
-                            }
-                            PayloadRef::Quantized { radius, bits, codes } => {
-                                message::encode_quantized_into(
-                                    radius,
-                                    bits,
-                                    codes,
-                                    self.conn.payload(),
-                                );
-                            }
-                        }
+                        self.encode_pending();
                     }
                     None => self.conn.payload().push(0),
                 }
@@ -331,9 +325,15 @@ impl Session {
                 if self.core.neighbors().binary_search(&from).is_err() {
                     return Err(format!("delivery from non-neighbor {from}"));
                 }
+                let layout = &self.layout;
                 let mut ok = true;
-                self.core
-                    .deliver_with(from, |slot| ok = message::decode_into_slot(payload, slot));
+                self.core.deliver_with(from, |slot| {
+                    ok = if layout.count() > 1 {
+                        message::decode_blocks_into_slot(payload, layout, slot)
+                    } else {
+                        message::decode_into_slot(payload, slot)
+                    };
+                });
                 if !ok {
                     return Err(format!("malformed broadcast payload from worker {from}"));
                 }
@@ -389,6 +389,42 @@ impl Session {
             other => return Err(format!("unexpected frame kind {other}")),
         }
         Ok(())
+    }
+
+    /// Encode the pending candidate into the send buffer: flat cores
+    /// keep the original single-tag frame byte-for-byte; multi-block
+    /// cores frame each transmitting block separately
+    /// ([`message::TAG_BLOCKS`]) so a censored block ships nothing —
+    /// the wire twin of the sharded engine's `ShardWorker` encoder.
+    fn encode_pending(&mut self) {
+        let nb = self.core.block_count();
+        if nb > 1 {
+            let mask = self.core.broadcast_mask().expect("multi-block candidate has a mask");
+            message::begin_blocks_into(nb, self.conn.payload());
+            for b in 0..nb {
+                if !mask[b] {
+                    message::encode_absent_block_into(self.conn.payload());
+                    continue;
+                }
+                let at = message::begin_block_into(self.conn.payload());
+                match self.core.pending_block_payload(b) {
+                    PayloadRef::Full(span) => {
+                        message::encode_full_into(span, self.conn.payload())
+                    }
+                    PayloadRef::Quantized { radius, bits, codes } => {
+                        message::encode_quantized_into(radius, bits, codes, self.conn.payload())
+                    }
+                }
+                message::finish_block_into(self.conn.payload(), at);
+            }
+            return;
+        }
+        match self.core.pending_payload() {
+            PayloadRef::Full(v) => message::encode_full_into(v, self.conn.payload()),
+            PayloadRef::Quantized { radius, bits, codes } => {
+                message::encode_quantized_into(radius, bits, codes, self.conn.payload())
+            }
+        }
     }
 
     /// Clean departure at the end of the current iteration: ship the

@@ -37,7 +37,7 @@ pub mod server;
 pub mod wire;
 
 use crate::algs::{AlgSpec, Problem};
-use crate::config::ExperimentManifest;
+use crate::config::{ExperimentManifest, ModelSpec};
 use crate::data;
 use crate::graph::{gen, Topology};
 
@@ -50,13 +50,16 @@ use crate::graph::{gen, Topology};
 /// seeded random bipartite graph.
 pub fn build_session(m: &ExperimentManifest) -> Result<(Problem, Topology, AlgSpec), String> {
     let e = &m.experiment;
-    let spec = AlgSpec::parse(&m.alg, e.tau0, e.xi, e.omega, e.bits0)?;
+    let spec = AlgSpec::parse(&m.alg, e.tau0, e.xi, e.omega, e.bits0)?
+        .with_bits_split(e.bits_split.clone());
+    spec.validate()?;
     let topo = match e.topology {
         Some(spec) => gen::build(&spec, e.workers, e.seed)?.topology,
         None if m.alg == "gadmm" => Topology::chain(e.workers),
         None => Topology::random_bipartite(e.workers, e.connectivity, e.seed),
     };
     let ds = data::load(e.dataset, e.seed);
-    let problem = Problem::new(&ds, &topo, e.rho, e.mu0, e.seed);
+    let problem =
+        Problem::with_model(&ds, &topo, e.rho, e.mu0, e.seed, e.model.unwrap_or(ModelSpec::Glm))?;
     Ok((problem, topo, spec))
 }

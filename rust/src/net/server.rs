@@ -74,6 +74,10 @@ struct NetServer {
     live_groups: Vec<Vec<usize>>,
     active: Vec<bool>,
     stale: Vec<u64>,
+    /// Per-block staleness ages, flattened `n × nblocks` (empty for
+    /// single-block problems — `stale` alone drives the flat path).
+    /// Invariant: `stale[i]` equals the max over worker `i`'s block ages.
+    block_stale: Vec<u64>,
     force_scratch: Vec<bool>,
     /// The server's copy of every worker's last committed `hat_self` —
     /// decoded from the same wire bytes the receivers decode, so it is
@@ -159,12 +163,14 @@ impl NetCoordinator {
         let listener = TcpListener::bind(addr)?;
         listener.set_nonblocking(true)?;
         let d = problem.d;
+        let nblocks = problem.blocks.count();
         Ok(NetCoordinator {
             inner: RefCell::new(NetServer {
                 live_groups: phase_groups.clone(),
                 phase_groups,
                 active: vec![true; n],
                 stale: vec![0; n],
+                block_stale: vec![0; if nblocks > 1 { n * nblocks } else { 0 }],
                 force_scratch: vec![false; n],
                 mirror: vec![vec![0.0; d]; n],
                 parked: vec![None; n],
@@ -572,8 +578,18 @@ impl NetServer {
     /// bookkeeping to `Coordinator::run_phase`.
     fn run_phase(&mut self, group: &[usize], k_plus_1: u64) {
         let tau = self.opts.staleness_bound;
+        let nb = self.problem.blocks.count();
+        let multi = nb > 1;
         for &i in group {
-            self.force_scratch[i] = tau.is_some_and(|t| self.stale[i] >= t);
+            // multi-block: any single block past the bound forces a full
+            // reliable refresh — same rule as the in-process engines
+            self.force_scratch[i] = match tau {
+                None => false,
+                Some(t) if multi => {
+                    self.block_stale[i * nb..(i + 1) * nb].iter().any(|&a| a >= t)
+                }
+                Some(t) => self.stale[i] >= t,
+            };
         }
         debug_assert!(group.windows(2).all(|w| w[0] < w[1]), "group must be increasing");
         // 1. dispatch: every live member computes its primal + candidate
@@ -605,8 +621,29 @@ impl NetServer {
             let Some(Some(bits)) = self.cand[i] else {
                 if tau.is_some() {
                     self.stale[i] += 1;
+                    if multi {
+                        for a in &mut self.block_stale[i * nb..(i + 1) * nb] {
+                            *a += 1;
+                        }
+                    }
                 }
                 continue;
+            };
+            // per-block ledger: the frame's sub-payload sizes reproduce
+            // the worker's masked candidate bits exactly (absent blocks
+            // count zero); like the medium's totals, the cost is paid
+            // whether or not the broadcast lands
+            let per_block = if multi {
+                let per =
+                    message::counted_bits_per_block(&self.cand_buf[i], &self.problem.blocks)
+                        .unwrap_or_else(|| {
+                            panic!("malformed candidate payload from worker {i}")
+                        });
+                debug_assert_eq!(per.iter().sum::<u64>(), bits);
+                self.medium.record_block_bits(&per);
+                Some(per)
+            } else {
+                None
             };
             let dist = self.active_neighbor_distance(i);
             let landed = match tau {
@@ -617,10 +654,16 @@ impl NetServer {
                 ),
             };
             if landed {
-                assert!(
-                    message::decode_into_slot(&self.cand_buf[i], &mut self.mirror[i]),
-                    "malformed candidate payload from worker {i}"
-                );
+                let ok = if multi {
+                    message::decode_blocks_into_slot(
+                        &self.cand_buf[i],
+                        &self.problem.blocks,
+                        &mut self.mirror[i],
+                    )
+                } else {
+                    message::decode_into_slot(&self.cand_buf[i], &mut self.mirror[i])
+                };
+                assert!(ok, "malformed candidate payload from worker {i}");
                 if let Some(c) = self.conns[i].as_mut() {
                     c.push_frame(kind::COMMIT);
                 }
@@ -641,13 +684,33 @@ impl NetServer {
                         rec.stale_refresh(self.iter, i, staleness);
                     }
                 }
-                self.stale[i] = 0;
+                if multi && tau.is_some() {
+                    // committed blocks reset; still-censored blocks keep
+                    // aging — `stale[i]` mirrors the worst block
+                    let per = per_block.as_ref().expect("multi-block candidate bits");
+                    let ages = &mut self.block_stale[i * nb..(i + 1) * nb];
+                    for (a, &b) in ages.iter_mut().zip(per) {
+                        if b > 0 {
+                            *a = 0;
+                        } else {
+                            *a += 1;
+                        }
+                    }
+                    self.stale[i] = ages.iter().copied().max().unwrap_or(0);
+                } else {
+                    self.stale[i] = 0;
+                }
             } else {
                 if let Some(c) = self.conns[i].as_mut() {
                     c.push_frame(kind::ABORT);
                 }
                 if tau.is_some() {
                     self.stale[i] += 1;
+                    if multi {
+                        for a in &mut self.block_stale[i * nb..(i + 1) * nb] {
+                            *a += 1;
+                        }
+                    }
                 }
             }
         }
@@ -747,6 +810,17 @@ impl NetServer {
         self.active[w] = true;
     }
 
+    /// Zero worker `w`'s staleness counters — worker-level and, for
+    /// multi-block problems, every block age (churn boundary semantics
+    /// shared with the in-process engines).
+    fn reset_stale(&mut self, w: usize) {
+        self.stale[w] = 0;
+        let nb = self.problem.blocks.count();
+        if nb > 1 {
+            self.block_stale[w * nb..(w + 1) * nb].fill(0);
+        }
+    }
+
     /// Start-of-iteration boundary: disconnect-driven leaves, reconnect
     /// joins, then the scheduled churn events — each one logged, each
     /// one mirrored to the fleet over the wire.
@@ -760,7 +834,7 @@ impl NetServer {
                 continue;
             }
             self.leave(w);
-            self.stale[w] = 0;
+            self.reset_stale(w);
             changed = true;
             if let Some(rec) = &mut self.recorder {
                 rec.worker_leave(self.iter, w);
@@ -774,7 +848,7 @@ impl NetServer {
                 continue;
             }
             self.join(w);
-            self.stale[w] = 0;
+            self.reset_stale(w);
             changed = true;
             if let Some(rec) = &mut self.recorder {
                 rec.worker_join(self.iter, w);
@@ -787,7 +861,7 @@ impl NetServer {
                     ChurnKind::Leave => self.leave(e.worker),
                     ChurnKind::Join => self.join(e.worker),
                 }
-                self.stale[e.worker] = 0;
+                self.reset_stale(e.worker);
                 changed = true;
                 if let Some(rec) = &mut self.recorder {
                     match e.kind {
@@ -910,6 +984,8 @@ impl NetServer {
             trace: self.trace.clone(),
             active: self.active.clone(),
             stale: self.stale.clone(),
+            block_stale: self.block_stale.clone(),
+            block_bits: log.block_bits.clone(),
         }
     }
 
@@ -927,6 +1003,16 @@ impl NetServer {
         // workers rebuild their structure from the bitmap in `Welcome`
         self.active.clone_from(&s.active);
         self.stale.copy_from_slice(&s.stale);
+        if s.block_stale.is_empty() {
+            self.block_stale.fill(0);
+        } else {
+            assert_eq!(
+                s.block_stale.len(),
+                self.block_stale.len(),
+                "checkpoint block staleness size"
+            );
+            self.block_stale.copy_from_slice(&s.block_stale);
+        }
         for (i, cs) in s.cores.iter().enumerate() {
             self.mirror[i].copy_from_slice(&cs.hat_self);
             self.thetas[i].copy_from_slice(&cs.theta);
@@ -944,6 +1030,7 @@ impl NetServer {
             s.medium.sim_time_s,
             &s.medium.link,
         );
+        self.medium.restore_block_bits(s.block_bits.clone());
         self.trace = s.trace.clone();
         self.iter = s.iteration;
         self.refresh_live_groups();

@@ -1,0 +1,252 @@
+//! Multi-block parameter layout (L-FGADMM-style layer-wise models).
+//!
+//! A [`Blocks`] describes how one flat parameter buffer `Vec<f64>` is
+//! partitioned into contiguous blocks (layers).  The buffer stays flat —
+//! a single-block layout is allocation-identical to the pre-refactor
+//! `Vec<f64>` path, which is what lets the degenerate case remain
+//! bit-for-bit identical across every engine.  Multi-block models (the
+//! one-hidden-layer MLP: `[vec(W), v]`) thread per-block quantizer /
+//! censor / staleness state through [`crate::protocol::WorkerCore`] and
+//! frame per-block payloads on the wire
+//! ([`crate::coordinator::message`]).
+//!
+//! [`BitsSpec`] is the per-layer bit-allocation grammar (`--bits0 24,8`):
+//! one initial bit width per block, or a single width broadcast to every
+//! block.
+
+use std::ops::Range;
+
+/// A partition of a flat `d`-dimensional buffer into contiguous blocks.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Blocks {
+    /// Block start offsets, ascending; `offsets[0] == 0`.
+    offsets: Vec<usize>,
+    /// Block lengths, each `>= 1`.
+    lens: Vec<usize>,
+    /// Total dimension (`== lens.iter().sum()`).
+    d: usize,
+}
+
+impl Blocks {
+    /// The degenerate single-block layout over `d` coordinates — the
+    /// pre-refactor flat model.
+    pub fn single(d: usize) -> Blocks {
+        assert!(d >= 1, "empty model");
+        Blocks { offsets: vec![0], lens: vec![d], d }
+    }
+
+    /// A layout of `lens.len()` contiguous blocks.
+    pub fn from_lens(lens: &[usize]) -> Blocks {
+        assert!(!lens.is_empty(), "layout needs at least one block");
+        assert!(lens.iter().all(|&l| l >= 1), "empty blocks are not allowed");
+        let mut offsets = Vec::with_capacity(lens.len());
+        let mut off = 0usize;
+        for &l in lens {
+            offsets.push(off);
+            off += l;
+        }
+        Blocks { offsets, lens: lens.to_vec(), d: off }
+    }
+
+    /// Number of blocks.
+    pub fn count(&self) -> usize {
+        self.lens.len()
+    }
+
+    /// Total dimension.
+    pub fn d(&self) -> usize {
+        self.d
+    }
+
+    /// `true` for the degenerate flat layout.
+    pub fn is_single(&self) -> bool {
+        self.lens.len() == 1
+    }
+
+    /// Length of block `b`.
+    pub fn len_of(&self, b: usize) -> usize {
+        self.lens[b]
+    }
+
+    /// Coordinate range of block `b`.
+    pub fn range(&self, b: usize) -> Range<usize> {
+        let o = self.offsets[b];
+        o..o + self.lens[b]
+    }
+
+    /// Borrow block `b` of a flat buffer.
+    pub fn slice<'a>(&self, buf: &'a [f64], b: usize) -> &'a [f64] {
+        &buf[self.range(b)]
+    }
+
+    /// Mutably borrow block `b` of a flat buffer.
+    pub fn slice_mut<'a>(&self, buf: &'a mut [f64], b: usize) -> &'a mut [f64] {
+        let r = self.range(b);
+        &mut buf[r]
+    }
+}
+
+/// Grammar of the per-layer bit-allocation spec (`--bits0`, manifest
+/// `bits0`): mirrors the `LinkKind` grammar style — every rejection
+/// cites this string.
+pub const BITS_GRAMMAR: &str = "<b> | <b>,<b>[,<b>...] with each <b> an integer in [1, 32]";
+
+/// Initial quantization bit widths, one per block (`N` or `N,M,...`).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct BitsSpec {
+    pub per_block: Vec<u32>,
+}
+
+impl BitsSpec {
+    /// A uniform allocation (every block at `bits`).
+    pub fn uniform(bits: u32) -> BitsSpec {
+        BitsSpec { per_block: vec![bits] }
+    }
+
+    /// Parse `N` or `N,M,...`; rejects empty items, out-of-range widths
+    /// and trailing garbage with errors citing [`BITS_GRAMMAR`].
+    pub fn parse(s: &str) -> Result<BitsSpec, String> {
+        let bad = |msg: String| -> Result<BitsSpec, String> {
+            Err(format!("bad bits spec '{s}': {msg}; grammar: {BITS_GRAMMAR}"))
+        };
+        let body = s.trim();
+        if body.is_empty() {
+            return bad("empty spec".into());
+        }
+        let mut per_block = Vec::new();
+        for item in body.split(',') {
+            let item = item.trim();
+            if item.is_empty() {
+                // covers "24,", ",8" and "24,,8": a dangling comma is
+                // trailing garbage, not an implicit block
+                return bad("empty item (dangling comma?)".into());
+            }
+            let b: u32 = match item.parse() {
+                Ok(b) => b,
+                Err(_) => return bad(format!("'{item}' is not an integer")),
+            };
+            if !(1..=32).contains(&b) {
+                return bad(format!("width {b} out of range [1, 32]"));
+            }
+            per_block.push(b);
+        }
+        Ok(BitsSpec { per_block })
+    }
+
+    /// `true` when the spec names one width for every block.
+    pub fn is_uniform(&self) -> bool {
+        self.per_block.len() == 1
+    }
+
+    /// Resolve against a layout: a uniform spec broadcasts to every
+    /// block; a per-block spec must match the block count exactly.
+    pub fn resolve(&self, blocks: usize) -> Result<Vec<u32>, String> {
+        if self.per_block.len() == 1 {
+            return Ok(vec![self.per_block[0]; blocks]);
+        }
+        if self.per_block.len() != blocks {
+            return Err(format!(
+                "bits spec names {} widths but the model has {} blocks",
+                self.per_block.len(),
+                blocks
+            ));
+        }
+        Ok(self.per_block.clone())
+    }
+
+    /// Canonical label (round-trips through [`BitsSpec::parse`]).
+    pub fn label(&self) -> String {
+        self.per_block
+            .iter()
+            .map(|b| b.to_string())
+            .collect::<Vec<_>>()
+            .join(",")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn single_layout_is_flat() {
+        let b = Blocks::single(7);
+        assert!(b.is_single());
+        assert_eq!(b.count(), 1);
+        assert_eq!(b.d(), 7);
+        assert_eq!(b.range(0), 0..7);
+        let buf = vec![1.0; 7];
+        assert_eq!(b.slice(&buf, 0).len(), 7);
+    }
+
+    #[test]
+    fn multi_layout_spans_are_contiguous_and_cover() {
+        let b = Blocks::from_lens(&[6, 2, 3]);
+        assert_eq!(b.count(), 3);
+        assert_eq!(b.d(), 11);
+        assert_eq!(b.range(0), 0..6);
+        assert_eq!(b.range(1), 6..8);
+        assert_eq!(b.range(2), 8..11);
+        assert!(!b.is_single());
+        let mut covered = vec![false; b.d()];
+        for blk in 0..b.count() {
+            for j in b.range(blk) {
+                assert!(!covered[j], "overlap at {j}");
+                covered[j] = true;
+            }
+        }
+        assert!(covered.iter().all(|&c| c));
+    }
+
+    #[test]
+    fn slice_mut_writes_land_in_the_right_span() {
+        let b = Blocks::from_lens(&[2, 3]);
+        let mut buf = vec![0.0; 5];
+        for v in b.slice_mut(&mut buf, 1) {
+            *v = 9.0;
+        }
+        assert_eq!(buf, vec![0.0, 0.0, 9.0, 9.0, 9.0]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn empty_block_rejected() {
+        Blocks::from_lens(&[3, 0, 2]);
+    }
+
+    #[test]
+    fn bits_spec_parses_single_and_list() {
+        assert_eq!(BitsSpec::parse("2").unwrap().per_block, vec![2]);
+        assert_eq!(BitsSpec::parse("24,8").unwrap().per_block, vec![24, 8]);
+        assert_eq!(BitsSpec::parse(" 4 , 8 , 16 ").unwrap().per_block, vec![4, 8, 16]);
+        assert_eq!(BitsSpec::parse("32").unwrap().per_block, vec![32]);
+    }
+
+    #[test]
+    fn bits_spec_rejects_garbage_citing_grammar() {
+        for bad in ["", "  ", "0", "33", "24,", ",8", "24,,8", "24,8x", "a", "2.5", "-3"] {
+            let err = BitsSpec::parse(bad).unwrap_err();
+            assert!(err.contains("grammar"), "{bad}: {err}");
+            assert!(err.contains(BITS_GRAMMAR), "{bad}: {err}");
+        }
+    }
+
+    #[test]
+    fn bits_spec_resolves_uniform_and_exact() {
+        let u = BitsSpec::parse("3").unwrap();
+        assert_eq!(u.resolve(4).unwrap(), vec![3, 3, 3, 3]);
+        let p = BitsSpec::parse("24,8").unwrap();
+        assert_eq!(p.resolve(2).unwrap(), vec![24, 8]);
+        let err = p.resolve(3).unwrap_err();
+        assert!(err.contains("2 widths"), "{err}");
+        assert!(err.contains("3 blocks"), "{err}");
+    }
+
+    #[test]
+    fn bits_spec_label_round_trips() {
+        for s in ["2", "24,8", "1,32,16"] {
+            let spec = BitsSpec::parse(s).unwrap();
+            assert_eq!(BitsSpec::parse(&spec.label()).unwrap(), spec);
+        }
+    }
+}

@@ -36,12 +36,14 @@
 //! including erasure injection through the shared [`crate::comm::Medium`]
 //! transmit path.
 
-use crate::algs::{AlgSpec, Problem, Schedule};
+use crate::algs::{AlgSpec, Problem, Schedule, UpdateRule};
 use crate::censor::{gate, CensorConfig, Gate};
 use crate::comm::full_precision_bits;
+use crate::config::ModelSpec;
 use crate::graph::{ChurnEvent, ChurnKind, ChurnSchedule, Topology};
-use crate::quant::{payload_bits, Quantizer, QuantizerState};
-use crate::solver::{Backend, LinearSolver, LogisticSolver, SubproblemSolver};
+use crate::param::Blocks;
+use crate::quant::{payload_bits, QuantConfig, Quantizer, QuantizerState};
+use crate::solver::{Backend, LinearSolver, LogisticSolver, MlpSolver, SubproblemSolver};
 use crate::util::axpy;
 use crate::util::rng::Pcg64;
 use std::sync::Arc;
@@ -56,6 +58,8 @@ pub struct WorkerSetup {
     pub neighbors: Vec<usize>,
     pub solver: Box<dyn SubproblemSolver>,
     pub censor: Option<CensorConfig>,
+    /// Single-block quantizer (`blocks.is_single()` models); multi-block
+    /// models use `block_quantizers` instead.
     pub quantizer: Option<Quantizer>,
     /// Jacobian (DCADMM) schedules anchor the update on the worker's own
     /// last broadcast: `nbr_sum += d_i * hat_self` (the solver then
@@ -64,6 +68,16 @@ pub struct WorkerSetup {
     /// Censoring-aware incremental cache maintenance (`false` forces the
     /// from-scratch rebuild every phase — the differential baseline).
     pub incremental: bool,
+    /// Primal/dual update rule (ADMM family or the QDGD baseline).
+    pub update: UpdateRule,
+    /// Parameter-block layout.  [`Blocks::single`] engages none of the
+    /// per-block machinery — that path is bit-identical to the
+    /// pre-multi-block core.
+    pub blocks: Blocks,
+    /// Per-block quantizers, parallel to the layout's blocks.  Must be
+    /// empty for single-block layouts (use `quantizer`) and for
+    /// unquantized specs.
+    pub block_quantizers: Vec<Quantizer>,
 }
 
 /// Borrowed view of the payload a committed broadcast carries; what the
@@ -74,6 +88,27 @@ pub enum PayloadRef<'a> {
     Full(&'a [f64]),
     /// Quantized difference message (codes + adaptive `(R, b)` header).
     Quantized { radius: f64, bits: u32, codes: &'a [u32] },
+}
+
+/// Per-block transmission state of a multi-block core.  `None` for
+/// single-block layouts: that path runs the exact pre-multi-block code
+/// and stays bit-identical to it.
+struct MultiBlock {
+    layout: Blocks,
+    /// Per-block quantizers (empty when the spec is unquantized).
+    quantizers: Vec<Quantizer>,
+    /// Per-block first-transmission flags (a block's first broadcast is
+    /// never censored — state initialization, per block).
+    tx_once: Vec<bool>,
+    /// Gate decision per block of the current candidate; after a commit
+    /// this is the committed-block mask receivers must apply.
+    mask: Vec<bool>,
+    /// Per-block payload bits of the current candidate.
+    bits: Vec<u64>,
+    /// Per-block `(radius, bits)` when quantized.
+    last_quant: Vec<Option<(f64, u32)>>,
+    /// Per-block code scratch (only filled when `collect_codes`).
+    codes: Vec<Vec<u32>>,
 }
 
 /// The shared per-worker protocol state machine.
@@ -87,6 +122,11 @@ pub struct WorkerCore {
     quantizer: Option<Quantizer>,
     jacobian_anchor: bool,
     incremental: bool,
+    update: UpdateRule,
+    /// `Some` only for multi-block layouts (see [`MultiBlock`]).
+    multi: Option<MultiBlock>,
+    /// Gradient scratch of the QDGD rule (empty under ADMM rules).
+    grad: Vec<f64>,
     theta: Vec<f64>,
     alpha: Vec<f64>,
     /// The worker's own last committed broadcast (theta-tilde / theta-hat
@@ -132,11 +172,38 @@ impl WorkerCore {
             quantizer,
             jacobian_anchor,
             incremental,
+            update,
+            blocks,
+            block_quantizers,
         } = setup;
         debug_assert!(
             neighbors.windows(2).all(|w| w[0] < w[1]),
             "neighbor ids must be strictly increasing"
         );
+        assert_eq!(blocks.d(), d, "block layout does not cover the model");
+        let multi = if blocks.is_single() {
+            assert!(
+                block_quantizers.is_empty(),
+                "single-block cores take the flat quantizer"
+            );
+            None
+        } else {
+            assert!(quantizer.is_none(), "multi-block cores quantize per block");
+            assert!(
+                block_quantizers.is_empty() || block_quantizers.len() == blocks.count(),
+                "one quantizer per block"
+            );
+            let b = blocks.count();
+            Some(MultiBlock {
+                quantizers: block_quantizers,
+                tx_once: vec![false; b],
+                mask: vec![false; b],
+                bits: vec![0; b],
+                last_quant: vec![None; b],
+                codes: vec![Vec::new(); b],
+                layout: blocks,
+            })
+        };
         let deg = neighbors.len();
         WorkerCore {
             id,
@@ -149,6 +216,12 @@ impl WorkerCore {
             quantizer,
             jacobian_anchor,
             incremental,
+            update,
+            multi,
+            grad: match update {
+                UpdateRule::Qdgd { .. } => vec![0.0; d],
+                UpdateRule::Admm => Vec::new(),
+            },
             theta: vec![0.0; d],
             alpha: vec![0.0; d],
             hat_self: vec![0.0; d],
@@ -192,7 +265,30 @@ impl WorkerCore {
             }
             self.nbr_stale = false;
         }
-        self.solver.update_into(&self.alpha, &self.nbr_sum, &mut self.theta);
+        match self.update {
+            UpdateRule::Admm => {
+                self.solver.update_into(&self.alpha, &self.nbr_sum, &mut self.theta)
+            }
+            // QDGD: consensus-average with the latest neighbor
+            // reconstructions, then a first-order step
+            //   theta <- (theta + sum_m hat_m) / (d_n + 1) - lr grad f_n
+            UpdateRule::Qdgd { lr } => {
+                self.solver.grad_into(&self.theta, &mut self.grad);
+                let scale = 1.0 / (self.neighbors.len() as f64 + 1.0);
+                for j in 0..self.d {
+                    self.theta[j] =
+                        (self.theta[j] + self.nbr_sum[j]) * scale - lr * self.grad[j];
+                }
+            }
+        }
+    }
+
+    /// Seed the initial model (iteration 0 only; [`build_cores`] copies
+    /// the problem's `theta0`).  A no-op value-wise for the all-zeros GLM
+    /// start, so the pre-refactor trajectories are unchanged.
+    pub fn seed_theta(&mut self, theta0: &[f64]) {
+        assert_eq!(theta0.len(), self.d);
+        self.theta.copy_from_slice(theta0);
     }
 
     /// Transmission pipeline (quantize → censor) at censoring iteration
@@ -214,6 +310,9 @@ impl WorkerCore {
     /// way, so forcing changes only the gate decision, never the stream.
     pub fn prepare_broadcast_gated(&mut self, k_plus_1: u64, force: bool) -> Option<u64> {
         debug_assert!(self.pending_bits.is_none(), "unresolved broadcast");
+        if self.multi.is_some() {
+            return self.prepare_broadcast_blocks(k_plus_1, force);
+        }
         let payload_bits = match &mut self.quantizer {
             Some(q) => {
                 // quantize the difference against the last state the
@@ -252,6 +351,65 @@ impl WorkerCore {
         }
     }
 
+    /// The multi-block candidate pipeline: every block quantizes (its
+    /// quantizer advancing exactly once per phase, committed or not) and
+    /// gates **independently** — a censored layer ships nothing while
+    /// another layer commits.  The broadcast goes out iff at least one
+    /// block transmits; its payload bits are the sum over transmitting
+    /// blocks.  A block's first transmission is never censored.
+    fn prepare_broadcast_blocks(&mut self, k_plus_1: u64, force: bool) -> Option<u64> {
+        let multi = self.multi.as_mut().expect("multi-block path");
+        let mut total = 0u64;
+        let mut any = false;
+        for b in 0..multi.layout.count() {
+            let r = multi.layout.range(b);
+            let len = r.end - r.start;
+            let bits_b = if multi.quantizers.is_empty() {
+                self.cand[r.clone()].copy_from_slice(&self.theta[r.clone()]);
+                multi.last_quant[b] = None;
+                full_precision_bits(len)
+            } else {
+                let q = &mut multi.quantizers[b];
+                let (radius, bits) = if self.collect_codes {
+                    q.quantize_with_codes(
+                        &self.theta[r.clone()],
+                        &self.hat_self[r.clone()],
+                        &mut self.cand[r.clone()],
+                        &mut multi.codes[b],
+                    )
+                } else {
+                    q.quantize_into(
+                        &self.theta[r.clone()],
+                        &self.hat_self[r.clone()],
+                        &mut self.cand[r.clone()],
+                    )
+                };
+                multi.last_quant[b] = Some((radius, bits));
+                payload_bits(len, bits)
+            };
+            let decision = match (&self.censor, multi.tx_once[b]) {
+                _ if force => Gate::Transmit,
+                (_, false) => Gate::Transmit,
+                (None, _) => Gate::Transmit,
+                (Some(c), true) => {
+                    gate(c, k_plus_1, &self.hat_self[r.clone()], &self.cand[r])
+                }
+            };
+            multi.mask[b] = decision == Gate::Transmit;
+            multi.bits[b] = bits_b;
+            if multi.mask[b] {
+                total += bits_b;
+                any = true;
+            }
+        }
+        if any {
+            self.pending_bits = Some(total);
+            Some(total)
+        } else {
+            None
+        }
+    }
+
     /// Payload bits of the prepared-but-unresolved broadcast, if any.
     pub fn pending_bits(&self) -> Option<u64> {
         self.pending_bits
@@ -264,7 +422,17 @@ impl WorkerCore {
     pub fn commit_pending(&mut self) {
         debug_assert!(self.pending_bits.is_some(), "commit without a pending broadcast");
         self.pending_bits = None;
-        self.hat_self.copy_from_slice(&self.cand);
+        if let Some(multi) = &mut self.multi {
+            for b in 0..multi.layout.count() {
+                if multi.mask[b] {
+                    let r = multi.layout.range(b);
+                    self.hat_self[r.clone()].copy_from_slice(&self.cand[r]);
+                    multi.tx_once[b] = true;
+                }
+            }
+        } else {
+            self.hat_self.copy_from_slice(&self.cand);
+        }
         self.transmitted_once = true;
         self.dual_stale = true;
         if self.jacobian_anchor {
@@ -280,11 +448,17 @@ impl WorkerCore {
     pub fn abort_pending(&mut self) {
         debug_assert!(self.pending_bits.is_some(), "abort without a pending broadcast");
         self.pending_bits = None;
+        if let Some(multi) = &mut self.multi {
+            // nothing reached the neighbors: clear the mask so a stale
+            // read cannot mistake the aborted candidate for a commit
+            multi.mask.iter_mut().for_each(|m| *m = false);
+        }
     }
 
     /// Payload of the most recently prepared candidate (valid after
     /// [`WorkerCore::commit_pending`]; what the wire encoder serializes).
     pub fn committed_payload(&self) -> PayloadRef<'_> {
+        debug_assert!(self.multi.is_none(), "multi-block cores encode per block");
         match self.last_quant {
             Some((radius, bits)) => {
                 debug_assert!(
@@ -307,6 +481,7 @@ impl WorkerCore {
     /// either side of the commit.
     pub fn pending_payload(&self) -> PayloadRef<'_> {
         debug_assert!(self.pending_bits.is_some(), "pending payload without a pending broadcast");
+        debug_assert!(self.multi.is_none(), "multi-block cores encode per block");
         match self.last_quant {
             Some((radius, bits)) => {
                 debug_assert!(
@@ -316,6 +491,66 @@ impl WorkerCore {
                 PayloadRef::Quantized { radius, bits, codes: &self.codes }
             }
             None => PayloadRef::Full(&self.cand),
+        }
+    }
+
+    /// Number of parameter blocks (1 for flat models).
+    pub fn block_count(&self) -> usize {
+        self.multi.as_ref().map_or(1, |m| m.layout.count())
+    }
+
+    /// The parameter-block layout (an owned copy; setup-time use only).
+    pub fn block_layout(&self) -> Blocks {
+        self.multi
+            .as_ref()
+            .map_or_else(|| Blocks::single(self.d), |m| m.layout.clone())
+    }
+
+    /// Per-block transmit mask of the current candidate — after
+    /// [`WorkerCore::commit_pending`], the committed-block mask receivers
+    /// must apply ([`WorkerCore::deliver_spans`]).  `None` for
+    /// single-block cores (the whole vector commits or nothing does).
+    pub fn broadcast_mask(&self) -> Option<&[bool]> {
+        self.multi.as_ref().map(|m| &m.mask[..])
+    }
+
+    /// Per-block payload bits of the current candidate (censored blocks
+    /// included — mask with [`WorkerCore::broadcast_mask`] to account
+    /// transmitted bits).  `None` for single-block cores.
+    pub fn candidate_block_bits(&self) -> Option<&[u64]> {
+        self.multi.as_ref().map(|m| &m.bits[..])
+    }
+
+    /// Block `b`'s payload after a commit (what the wire encoder
+    /// serializes for transmitting blocks of a multi-block core).
+    pub fn committed_block_payload(&self, b: usize) -> PayloadRef<'_> {
+        let multi = self.multi.as_ref().expect("single-block cores use committed_payload");
+        match multi.last_quant[b] {
+            Some((radius, bits)) => {
+                debug_assert!(
+                    multi.codes[b].len() == multi.layout.len_of(b),
+                    "codes not collected: call enable_code_collection at setup"
+                );
+                PayloadRef::Quantized { radius, bits, codes: &multi.codes[b] }
+            }
+            None => PayloadRef::Full(&self.hat_self[multi.layout.range(b)]),
+        }
+    }
+
+    /// Block `b`'s payload between prepare and resolution (the networked
+    /// worker's optimistic encode; see [`WorkerCore::pending_payload`]).
+    pub fn pending_block_payload(&self, b: usize) -> PayloadRef<'_> {
+        debug_assert!(self.pending_bits.is_some(), "pending payload without a pending broadcast");
+        let multi = self.multi.as_ref().expect("single-block cores use pending_payload");
+        match multi.last_quant[b] {
+            Some((radius, bits)) => {
+                debug_assert!(
+                    multi.codes[b].len() == multi.layout.len_of(b),
+                    "codes not collected: call enable_code_collection at setup"
+                );
+                PayloadRef::Quantized { radius, bits, codes: &multi.codes[b] }
+            }
+            None => PayloadRef::Full(&self.cand[multi.layout.range(b)]),
         }
     }
 
@@ -342,12 +577,40 @@ impl WorkerCore {
         self.dual_stale = true;
     }
 
+    /// Receive a multi-block broadcast in-process: copy only the sender's
+    /// **committed** block spans into the slot (`mask` is the sender's
+    /// [`WorkerCore::broadcast_mask`] after its commit).  Censored spans
+    /// keep the receiver's stale copy — overwriting the whole slot would
+    /// resync spans the wire path never shipped, diverging under erasure.
+    pub fn deliver_spans(&mut self, from: usize, hat: &[f64], mask: &[bool]) {
+        assert_eq!(hat.len(), self.d);
+        let idx = match self.neighbors.binary_search(&from) {
+            Ok(idx) => idx,
+            Err(_) => panic!("worker {}: delivery from non-neighbor {from}", self.id),
+        };
+        let multi = self.multi.as_ref().expect("deliver_spans on a single-block core");
+        assert_eq!(mask.len(), multi.layout.count());
+        let slot = &mut self.hat_nbrs[idx];
+        for b in 0..multi.layout.count() {
+            if mask[b] {
+                let r = multi.layout.range(b);
+                slot[r.clone()].copy_from_slice(&hat[r]);
+            }
+        }
+        self.nbr_stale = true;
+        self.dual_stale = true;
+    }
+
     /// Dual update (eq. (23)): rebuild the cached increment if a hat in
     /// the closed neighborhood committed since the last dual update, then
     /// integrate `alpha += rho * sum_m (hat_self - hat_m)`.  The O(d)
     /// integration runs every iteration (duals accumulate even across
     /// censored rounds); the O(deg * d) rebuild only when needed.
     pub fn dual_update(&mut self) {
+        // QDGD is primal-only: no dual variable accumulates
+        if let UpdateRule::Qdgd { .. } = self.update {
+            return;
+        }
         if !self.incremental || self.dual_stale {
             self.dual_delta.iter_mut().for_each(|v| *v = 0.0);
             for hat in &self.hat_nbrs {
@@ -461,6 +724,10 @@ impl WorkerCore {
         self.hat_self.copy_from_slice(warm);
         self.alpha.iter_mut().for_each(|v| *v = 0.0);
         self.transmitted_once = true;
+        if let Some(multi) = &mut self.multi {
+            // the handoff initializes every block's broadcast state
+            multi.tx_once.iter_mut().for_each(|t| *t = true);
+        }
         self.nbr_stale = true;
         self.dual_stale = true;
     }
@@ -484,6 +751,11 @@ impl WorkerCore {
             dual_delta: self.dual_delta.clone(),
             dual_stale: self.dual_stale,
             quantizer: self.quantizer.as_ref().map(|q| q.state()),
+            block_quantizers: self
+                .multi
+                .as_ref()
+                .map_or_else(Vec::new, |m| m.quantizers.iter().map(|q| q.state()).collect()),
+            block_tx_once: self.multi.as_ref().map_or_else(Vec::new, |m| m.tx_once.clone()),
         }
     }
 
@@ -518,6 +790,31 @@ impl WorkerCore {
         if let (Some(q), Some(qs)) = (&mut self.quantizer, &s.quantizer) {
             q.restore(qs);
         }
+        if let Some(multi) = &mut self.multi {
+            assert_eq!(
+                s.block_quantizers.len(),
+                multi.quantizers.len(),
+                "checkpoint block-quantizer arity mismatch for worker {}",
+                self.id
+            );
+            assert_eq!(
+                s.block_tx_once.len(),
+                multi.tx_once.len(),
+                "checkpoint block arity mismatch for worker {}",
+                self.id
+            );
+            for (q, qs) in multi.quantizers.iter_mut().zip(&s.block_quantizers) {
+                q.restore(qs);
+            }
+            multi.tx_once.copy_from_slice(&s.block_tx_once);
+            multi.mask.iter_mut().for_each(|m| *m = false);
+        } else {
+            assert!(
+                s.block_quantizers.is_empty() && s.block_tx_once.is_empty(),
+                "multi-block checkpoint restored onto a single-block core (worker {})",
+                self.id
+            );
+        }
         self.pending_bits = None;
     }
 }
@@ -539,6 +836,11 @@ pub struct CoreState {
     pub dual_delta: Vec<f64>,
     pub dual_stale: bool,
     pub quantizer: Option<QuantizerState>,
+    /// Per-block quantizer states (multi-block quantized specs only;
+    /// empty otherwise — single-block checkpoints stay byte-identical).
+    pub block_quantizers: Vec<QuantizerState>,
+    /// Per-block first-transmission flags (multi-block only).
+    pub block_tx_once: Vec<bool>,
 }
 
 /// Construction options shared by both drivers.
@@ -559,11 +861,11 @@ fn build_solvers(
     problem: &Problem,
     topo: &Topology,
     cfg: &ProtocolConfig,
-    schedule: Schedule,
+    spec: &AlgSpec,
     pool: Option<&mut crate::parallel::WorkerPool>,
 ) -> Vec<Box<dyn SubproblemSolver>> {
     crate::parallel::map_maybe_pool(pool, topo.n(), |i| {
-        build_solver_at(problem, topo, cfg, schedule, i)
+        build_solver_at(problem, topo, cfg, spec, i)
     })
 }
 
@@ -573,7 +875,7 @@ fn build_solver_at(
     problem: &Problem,
     topo: &Topology,
     cfg: &ProtocolConfig,
-    schedule: Schedule,
+    spec: &AlgSpec,
     i: usize,
 ) -> Box<dyn SubproblemSolver> {
     use crate::config::Task;
@@ -581,10 +883,27 @@ fn build_solver_at(
     // Jacobian updates carry the doubled penalty rho*d_i||theta||^2
     // of DCADMM (see `WorkerCore::primal_update`'s anchor); the
     // solver's quadratic coefficient is rho*degree/2, so feed it 2*d_i.
-    let degree = match schedule {
-        Schedule::Alternating => topo.degree(i),
-        Schedule::Jacobian => 2 * topo.degree(i),
+    // QDGD never anchors (its schedule is Jacobian only in the sense
+    // that every worker updates every round), so no doubling either.
+    let degree = match (spec.update, spec.schedule) {
+        (UpdateRule::Qdgd { .. }, _) => topo.degree(i),
+        (UpdateRule::Admm, Schedule::Alternating) => topo.degree(i),
+        (UpdateRule::Admm, Schedule::Jacobian) => 2 * topo.degree(i),
     };
+    if let ModelSpec::Mlp { hidden } = problem.model {
+        assert_eq!(
+            cfg.backend,
+            Backend::Native,
+            "the MLP model runs on the native backend only"
+        );
+        return Box::new(MlpSolver::from_shard(
+            Arc::clone(sh),
+            problem.mu0,
+            problem.rho,
+            degree,
+            hidden,
+        ));
+    }
     match (cfg.backend, problem.task) {
         (Backend::Native, Task::Linear) => {
             Box::new(LinearSolver::from_shard(Arc::clone(sh), problem.rho, degree))
@@ -609,6 +928,27 @@ fn build_solver_at(
     }
 }
 
+/// Per-block quantizer configs: the spec's config with `bits0` replaced
+/// by the per-block allocation (`bits_split`, or the uniform `bits0`
+/// broadcast).  `None` when the spec is unquantized.
+fn per_block_quant_cfgs(spec: &AlgSpec, blocks: &Blocks) -> Option<Vec<QuantConfig>> {
+    let q = spec.quant?;
+    let widths: Vec<u32> = match &spec.bits_split {
+        Some(s) => {
+            assert_eq!(
+                s.len(),
+                blocks.count(),
+                "bits split names {} blocks but the model has {}",
+                s.len(),
+                blocks.count()
+            );
+            s.clone()
+        }
+        None => vec![q.bits0; blocks.count()],
+    };
+    Some(widths.into_iter().map(|b| QuantConfig { bits0: b, ..q }).collect())
+}
+
 /// Build the worker fleet for one run.  This is the **single** place both
 /// engines construct their state from, so they cannot drift: quantizer
 /// RNG streams are forked from `Pcg64::new(seed ^ 0xA16_0001)` in worker
@@ -624,26 +964,48 @@ pub fn build_cores(
 ) -> (Vec<WorkerCore>, Pcg64) {
     assert_eq!(problem.shards.len(), topo.n());
     let d = problem.d;
+    let single = problem.blocks.is_single();
     let mut rng = Pcg64::new(cfg.seed ^ 0xA16_0001);
-    let solvers = build_solvers(problem, topo, cfg, spec.schedule, pool);
+    let solvers = build_solvers(problem, topo, cfg, spec, pool);
+    let block_cfgs = per_block_quant_cfgs(spec, &problem.blocks);
     let cores = solvers
         .into_iter()
         .enumerate()
         .map(|(i, solver)| {
-            WorkerCore::new(WorkerSetup {
+            // one root fork per worker in both layouts, so the leftover
+            // link stream is at the same position either way; multi-block
+            // quantizers fork the per-worker stream once per block
+            let (quantizer, block_quantizers) = match (&spec.quant, single) {
+                (None, _) => (None, Vec::new()),
+                (Some(q), true) => (Some(Quantizer::new(*q, rng.fork(i as u64))), Vec::new()),
+                (Some(_), false) => {
+                    let mut wrng = rng.fork(i as u64);
+                    let cfgs = block_cfgs.as_ref().expect("quantized spec");
+                    let qs = cfgs
+                        .iter()
+                        .enumerate()
+                        .map(|(b, c)| Quantizer::new(*c, wrng.fork(b as u64)))
+                        .collect();
+                    (None, qs)
+                }
+            };
+            let mut core = WorkerCore::new(WorkerSetup {
                 id: i,
                 d,
                 rho: problem.rho,
                 neighbors: topo.neighbors(i).to_vec(),
                 solver,
                 censor: spec.censor,
-                quantizer: spec
-                    .quant
-                    .as_ref()
-                    .map(|q| Quantizer::new(*q, rng.fork(i as u64))),
-                jacobian_anchor: spec.schedule == Schedule::Jacobian,
+                quantizer,
+                jacobian_anchor: spec.schedule == Schedule::Jacobian
+                    && matches!(spec.update, UpdateRule::Admm),
                 incremental: cfg.incremental,
-            })
+                update: spec.update,
+                blocks: problem.blocks.clone(),
+                block_quantizers,
+            });
+            core.seed_theta(&problem.theta0);
+            core
         })
         .collect();
     (cores, rng)
@@ -664,24 +1026,48 @@ pub fn build_core_at(
 ) -> WorkerCore {
     assert_eq!(problem.shards.len(), topo.n());
     assert!(i < topo.n(), "worker id {i} out of range for n = {}", topo.n());
+    let single = problem.blocks.is_single();
     let mut rng = Pcg64::new(cfg.seed ^ 0xA16_0001);
-    let quantizer = spec.quant.as_ref().map(|q| {
-        for j in 0..i {
-            let _ = rng.fork(j as u64);
+    let (quantizer, block_quantizers) = match (&spec.quant, single) {
+        (None, _) => (None, Vec::new()),
+        (Some(q), true) => {
+            for j in 0..i {
+                let _ = rng.fork(j as u64);
+            }
+            (Some(Quantizer::new(*q, rng.fork(i as u64))), Vec::new())
         }
-        Quantizer::new(*q, rng.fork(i as u64))
-    });
-    WorkerCore::new(WorkerSetup {
+        (Some(_), false) => {
+            for j in 0..i {
+                let _ = rng.fork(j as u64);
+            }
+            let mut wrng = rng.fork(i as u64);
+            let cfgs =
+                per_block_quant_cfgs(spec, &problem.blocks).expect("quantized spec");
+            let qs = cfgs
+                .iter()
+                .enumerate()
+                .map(|(b, c)| Quantizer::new(*c, wrng.fork(b as u64)))
+                .collect();
+            (None, qs)
+        }
+    };
+    let mut core = WorkerCore::new(WorkerSetup {
         id: i,
         d: problem.d,
         rho: problem.rho,
         neighbors: topo.neighbors(i).to_vec(),
-        solver: build_solver_at(problem, topo, cfg, spec.schedule, i),
+        solver: build_solver_at(problem, topo, cfg, spec, i),
         censor: spec.censor,
         quantizer,
-        jacobian_anchor: spec.schedule == Schedule::Jacobian,
+        jacobian_anchor: spec.schedule == Schedule::Jacobian
+            && matches!(spec.update, UpdateRule::Admm),
         incremental: cfg.incremental,
-    })
+        update: spec.update,
+        blocks: problem.blocks.clone(),
+        block_quantizers,
+    });
+    core.seed_theta(&problem.theta0);
+    core
 }
 
 /// The link-model RNG both engines hand to `LinkKind::build`: the
@@ -966,6 +1352,161 @@ mod tests {
             // the derived link stream equals build_cores' leftover root
             let mut derived = link_rng(&spec, &cfg, topo.n());
             assert_eq!(derived.next_u64(), fleet_rng.next_u64(), "{}", spec.name);
+        }
+    }
+
+    fn mlp_problem(n: usize) -> (Topology, Problem) {
+        let topo = Topology::chain(n);
+        let ds = synthetic::linear_dataset(24, 3, 5);
+        let p = Problem::with_model(
+            &ds,
+            &topo,
+            1.0,
+            0.05,
+            5,
+            ModelSpec::Mlp { hidden: 2 },
+        )
+        .expect("mlp problem");
+        (topo, p)
+    }
+
+    #[test]
+    fn multi_block_first_broadcast_then_full_censor() {
+        let (topo, p) = mlp_problem(2);
+        // huge tau0: every block censors after its state-initializing
+        // first transmission
+        let spec = AlgSpec::c_ggadmm(1e9, 0.9);
+        let (mut cores, _) = build_cores(&p, &topo, &spec, &ProtocolConfig::default(), None);
+        assert_eq!(cores[0].block_count(), 2);
+        cores[0].primal_update();
+        let bits = cores[0].prepare_broadcast(1).expect("state init must transmit");
+        // both blocks ship full precision: bits must cover the whole model
+        assert_eq!(bits, full_precision_bits(6) + full_precision_bits(2));
+        assert_eq!(cores[0].broadcast_mask(), Some(&[true, true][..]));
+        cores[0].commit_pending();
+        cores[0].primal_update();
+        assert!(
+            cores[0].prepare_broadcast(2).is_none(),
+            "tau0 = 1e9 must censor every block after init"
+        );
+    }
+
+    #[test]
+    fn mlp_seeds_nonzero_theta() {
+        let (topo, p) = mlp_problem(2);
+        let (cores, _) = build_cores(&p, &topo, &AlgSpec::ggadmm(), &ProtocolConfig::default(), None);
+        assert_eq!(cores[0].theta(), &p.theta0[..]);
+        assert!(cores[0].theta().iter().any(|t| *t != 0.0));
+        // hats still start at zero (Alg. 2 line 2)
+        assert!(cores[0].hat_self().iter().all(|t| *t == 0.0));
+    }
+
+    #[test]
+    fn deliver_spans_copies_only_masked_spans() {
+        let (topo, p) = mlp_problem(2);
+        let (mut cores, _) = build_cores(&p, &topo, &AlgSpec::ggadmm(), &ProtocolConfig::default(), None);
+        cores[0].primal_update();
+        cores[0].prepare_broadcast(1).expect("transmit");
+        cores[0].commit_pending();
+        let hat: Vec<f64> = cores[0].hat_self().to_vec();
+        // deliver only block 0 (the W block, 6 coords): block 1 keeps 0
+        cores[1].deliver_spans(0, &hat, &[true, false]);
+        cores[1].primal_update();
+        let sum = cores[1].neighbor_sum();
+        assert_eq!(&sum[..6], &hat[..6]);
+        assert!(sum[6..].iter().all(|v| *v == 0.0));
+    }
+
+    #[test]
+    fn multi_block_build_core_at_matches_fleet() {
+        let (topo, p) = mlp_problem(4);
+        let specs = [
+            AlgSpec::ggadmm(),
+            AlgSpec::q_ggadmm(0.995, 2).with_bits_split(Some(vec![4, 2])),
+            AlgSpec::cq_ggadmm(2.0, 0.9, 0.995, 3),
+        ];
+        for spec in specs {
+            let cfg = ProtocolConfig::default();
+            let (mut fleet, mut fleet_rng) = build_cores(&p, &topo, &spec, &cfg, None);
+            for i in 0..topo.n() {
+                let mut solo = build_core_at(&p, &topo, &spec, &cfg, i);
+                assert_eq!(solo.export_state(), fleet[i].export_state(), "worker {i}");
+                solo.primal_update();
+                fleet[i].primal_update();
+                let a = solo.prepare_broadcast(1);
+                let b = fleet[i].prepare_broadcast(1);
+                assert_eq!(a, b, "worker {i} transmit decision");
+                if a.is_some() {
+                    solo.abort_pending();
+                    fleet[i].abort_pending();
+                }
+                assert_eq!(solo.export_state(), fleet[i].export_state(), "worker {i} post");
+            }
+            let mut derived = link_rng(&spec, &cfg, topo.n());
+            assert_eq!(derived.next_u64(), fleet_rng.next_u64(), "{}", spec.name);
+        }
+    }
+
+    #[test]
+    fn bits_split_changes_per_block_widths() {
+        let (topo, p) = mlp_problem(2);
+        let spec = AlgSpec::q_ggadmm(0.995, 8).with_bits_split(Some(vec![8, 2]));
+        let (mut cores, _) = build_cores(&p, &topo, &spec, &ProtocolConfig::default(), None);
+        cores[0].enable_code_collection();
+        cores[0].primal_update();
+        let bits = cores[0].prepare_broadcast(1).expect("transmit");
+        // block 0: 6 coords at 8 bits; block 1: 2 coords at 2 bits
+        assert_eq!(bits, crate::quant::payload_bits(6, 8) + crate::quant::payload_bits(2, 2));
+        cores[0].commit_pending();
+        match cores[0].committed_block_payload(0) {
+            PayloadRef::Quantized { bits, codes, .. } => {
+                assert_eq!(bits, 8);
+                assert_eq!(codes.len(), 6);
+            }
+            PayloadRef::Full(_) => panic!("expected quantized block"),
+        }
+        match cores[0].committed_block_payload(1) {
+            PayloadRef::Quantized { bits, codes, .. } => {
+                assert_eq!(bits, 2);
+                assert_eq!(codes.len(), 2);
+            }
+            PayloadRef::Full(_) => panic!("expected quantized block"),
+        }
+    }
+
+    #[test]
+    fn qdgd_is_primal_only_and_descends() {
+        let topo = Topology::chain(2);
+        let ds = synthetic::linear_dataset(24, 3, 5);
+        let p = Problem::new(&ds, &topo, 1.0, 0.0, 5);
+        let spec = AlgSpec::qdgd(0.995, 8);
+        let (mut cores, _) = build_cores(&p, &topo, &spec, &ProtocolConfig::default(), None);
+        let f0: f64 = cores.iter().map(|c| c.loss()).sum();
+        for _ in 0..30 {
+            for c in cores.iter_mut() {
+                c.primal_update();
+            }
+            let hats: Vec<Vec<f64>> = cores
+                .iter_mut()
+                .map(|c| {
+                    c.prepare_broadcast(1).expect("qdgd never censors");
+                    c.commit_pending();
+                    c.hat_self().to_vec()
+                })
+                .collect();
+            for (i, hat) in hats.iter().enumerate() {
+                for &m in topo.neighbors(i) {
+                    cores[m].deliver(i, hat);
+                }
+            }
+            for c in cores.iter_mut() {
+                c.dual_update();
+            }
+        }
+        let f1: f64 = cores.iter().map(|c| c.loss()).sum();
+        assert!(f1 < f0, "QDGD must descend: {f1} vs {f0}");
+        for c in &cores {
+            assert!(c.alpha().iter().all(|a| *a == 0.0), "QDGD carries no dual");
         }
     }
 

@@ -95,6 +95,23 @@ impl SubproblemSolver for LinearSolver {
         self.xty.len()
     }
 
+    fn grad_into(&self, theta: &[f64], out: &mut [f64]) {
+        // grad f_n = X^T (X theta - y), row-streamed like `loss`
+        let d = self.xty.len();
+        assert_eq!(theta.len(), d);
+        assert_eq!(out.len(), d);
+        for g in out.iter_mut() {
+            *g = 0.0;
+        }
+        for (i, y) in self.data.y.iter().enumerate() {
+            let row = self.data.x.row(i);
+            let r = crate::util::dot(row, theta) - y;
+            for j in 0..d {
+                out[j] += r * row[j];
+            }
+        }
+    }
+
     fn set_degree(&mut self, degree: usize) {
         assert!(degree >= 1, "degree-0 workers are never solved");
         // re-factor from the retained Gram matrix: a pure function of

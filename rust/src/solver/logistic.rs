@@ -309,6 +309,25 @@ impl SubproblemSolver for LogisticSolver {
         self.data.x.cols()
     }
 
+    fn grad_into(&self, theta: &[f64], out: &mut [f64]) {
+        // grad f_n = (1/s) sum -y_i p_i x_i + mu0 theta, row-streamed
+        let d = self.data.x.cols();
+        assert_eq!(theta.len(), d);
+        assert_eq!(out.len(), d);
+        for g in out.iter_mut() {
+            *g = 0.0;
+        }
+        for i in 0..self.data.y.len() {
+            let z = self.data.y[i] * crate::util::dot(self.data.x.row(i), theta);
+            let p = 1.0 / (1.0 + z.exp());
+            let gscale = -self.data.y[i] * p;
+            crate::util::axpy(out, gscale, self.data.x.row(i));
+        }
+        for j in 0..d {
+            out[j] = self.inv_s * out[j] + self.mu0 * theta[j];
+        }
+    }
+
     fn set_degree(&mut self, degree: usize) {
         assert!(degree >= 1, "degree-0 workers are never solved");
         // rho_dn is the only degree-dependent term (gradient, Hessian

@@ -1,0 +1,586 @@
+//! One-hidden-layer MLP subproblem solver (two parameter blocks).
+//!
+//! Model: `yhat_i = sum_r v_r tanh(w_r^T x_i)` with
+//! `theta = [vec(W) (hidden x d_in, row-major), v (hidden)]` — the
+//! two-block layout reported by [`mlp_blocks`] and threaded through the
+//! engines by [`crate::param::Blocks`].
+//!
+//! Local objective (regression targets):
+//!
+//! ```text
+//! f_n(theta) = (1/(2 s_n)) ||yhat - y||^2 + (mu0/2) ||theta||^2
+//! ```
+//!
+//! The ADMM subproblem adds `<theta, lin>` and `(rho d_n/2)||theta||^2`
+//! exactly as for the GLM solvers.  It is nonconvex, so the solver is a
+//! *deterministic* block-coordinate descent: the output layer `v` has a
+//! closed-form ridge solution given `H = tanh(X W^T)` (solved exactly by
+//! the blocked Cholesky), and the hidden layer `W` takes one damped
+//! Gauss–Newton step with an Armijo backtrack per outer sweep.  Every
+//! operation is a pure function of the inputs, so the three drivers
+//! (in-process, coordinator, TCP) stay bit-identical on this model — the
+//! same contract the GLM solvers uphold.
+//!
+//! `theta = 0` is a saddle of this model (`v = 0` kills the Jacobian of
+//! the hidden layer), so problems carry the deterministic seeded start
+//! produced by [`mlp_theta0`] instead of the all-zeros GLM start.
+
+use super::SubproblemSolver;
+use crate::data::Shard;
+use crate::linalg::{Cholesky, Mat};
+use crate::param::Blocks;
+use crate::util::rng::Pcg64;
+use std::borrow::Borrow;
+use std::sync::Arc;
+
+/// Outer block sweeps per ADMM subproblem solve (warm-started).
+const MAX_OUTER_SUB: usize = 40;
+/// Gradient-norm stopping tolerance of the subproblem solve.
+const TOL_SUB: f64 = 1e-9;
+/// Outer sweeps for the centralized reference optimum (cold start).
+const MAX_OUTER_CENTRAL: usize = 500;
+/// Gradient-norm tolerance of the centralized reference optimum.
+const TOL_CENTRAL: f64 = 1e-10;
+
+/// Two-block layout of the MLP parameter vector: `[hidden*d_in, hidden]`.
+pub fn mlp_blocks(d_in: usize, hidden: usize) -> Blocks {
+    Blocks::from_lens(&[hidden * d_in, hidden])
+}
+
+/// Deterministic seeded nonzero start (the zero point is a saddle).
+/// Small scaled-normal entries; a pure function of `(d_in, hidden, seed)`
+/// so every driver and every resume derives the same start.
+pub fn mlp_theta0(d_in: usize, hidden: usize, seed: u64) -> Vec<f64> {
+    let mut rng = Pcg64::new(seed ^ 0x31A9_77F1);
+    let mut theta = vec![0.0; hidden * d_in + hidden];
+    let w_scale = 0.5 / (d_in as f64).sqrt();
+    for t in theta[..hidden * d_in].iter_mut() {
+        *t = w_scale * rng.normal();
+    }
+    let v_scale = 0.5 / (hidden as f64).sqrt();
+    for t in theta[hidden * d_in..].iter_mut() {
+        *t = v_scale * rng.normal();
+    }
+    theta
+}
+
+/// Hidden activations `h[(i, r)] = tanh(w_r^T x_i)` and residuals
+/// `resid[i] = yhat_i - y_i` at `theta`.
+fn forward(sh: &Shard, hidden: usize, theta: &[f64], h: &mut Mat, resid: &mut [f64]) {
+    let d_in = sh.x.cols();
+    let (w, v) = theta.split_at(hidden * d_in);
+    for i in 0..sh.s() {
+        let row = sh.x.row(i);
+        let mut yhat = 0.0;
+        for r in 0..hidden {
+            let a = crate::util::dot(&w[r * d_in..(r + 1) * d_in], row).tanh();
+            h[(i, r)] = a;
+            yhat += v[r] * a;
+        }
+        resid[i] = yhat - sh.y[i];
+    }
+}
+
+/// Unscaled data SSE `||yhat - y||^2` at `theta`.
+fn data_sse(sh: &Shard, hidden: usize, theta: &[f64]) -> f64 {
+    let d_in = sh.x.cols();
+    let (w, v) = theta.split_at(hidden * d_in);
+    let mut acc = 0.0;
+    for i in 0..sh.s() {
+        let row = sh.x.row(i);
+        let mut yhat = 0.0;
+        for r in 0..hidden {
+            yhat += v[r] * crate::util::dot(&w[r * d_in..(r + 1) * d_in], row).tanh();
+        }
+        let e = yhat - sh.y[i];
+        acc += e * e;
+    }
+    acc
+}
+
+/// Penalized objective over `shards`:
+/// `sum_n (1/(2 s_n))||yhat_n - y_n||^2 + (ridge/2)||theta||^2 + <theta, lin>`.
+fn objective(shards: &[&Shard], ridge: f64, lin: &[f64], hidden: usize, theta: &[f64]) -> f64 {
+    let mut total = 0.0;
+    for sh in shards {
+        total += 0.5 / sh.s() as f64 * data_sse(sh, hidden, theta);
+    }
+    total + 0.5 * ridge * crate::util::dot(theta, theta) + crate::util::dot(theta, lin)
+}
+
+/// Full penalized gradient into `out`.
+fn gradient(shards: &[&Shard], ridge: f64, lin: &[f64], hidden: usize, theta: &[f64], out: &mut [f64]) {
+    let d = theta.len();
+    for g in out.iter_mut() {
+        *g = 0.0;
+    }
+    for sh in shards {
+        let d_in = sh.x.cols();
+        let inv_s = 1.0 / sh.s() as f64;
+        let v = &theta[hidden * d_in..];
+        let mut h = Mat::zeros(sh.s(), hidden);
+        let mut resid = vec![0.0; sh.s()];
+        forward(sh, hidden, theta, &mut h, &mut resid);
+        for i in 0..sh.s() {
+            let row = sh.x.row(i);
+            let e = inv_s * resid[i];
+            for r in 0..hidden {
+                let a = h[(i, r)];
+                out[hidden * d_in + r] += e * a;
+                let c = e * v[r] * (1.0 - a * a);
+                if c != 0.0 {
+                    crate::util::axpy(&mut out[r * d_in..(r + 1) * d_in], c, row);
+                }
+            }
+        }
+    }
+    for j in 0..d {
+        out[j] += ridge * theta[j] + lin[j];
+    }
+}
+
+/// Cholesky with escalating diagonal jitter (the GN/ridge systems are
+/// PSD + ridge; jitter only engages for degenerate ridge-free cases).
+fn factor_spd(mut a: Mat) -> Cholesky {
+    let mut jitter = 1e-12;
+    loop {
+        if let Some(c) = Cholesky::new(&a) {
+            return c;
+        }
+        a = a.add_diag(jitter);
+        jitter *= 100.0;
+        assert!(jitter < 1.0, "MLP normal system not factorizable");
+    }
+}
+
+/// Exact ridge solve of the output layer `v` given the hidden layer:
+/// `(sum_n (1/s_n) H_n^T H_n + ridge I) v = sum_n (1/s_n) H_n^T y_n - lin_v`.
+fn solve_v(shards: &[&Shard], ridge: f64, lin: &[f64], hidden: usize, theta: &mut [f64]) {
+    let d_in = shards[0].x.cols();
+    let wlen = hidden * d_in;
+    let mut m = Mat::zeros(hidden, hidden);
+    let mut rhs = vec![0.0; hidden];
+    let mut hrow = vec![0.0; hidden];
+    for sh in shards {
+        let inv_s = 1.0 / sh.s() as f64;
+        let w = &theta[..wlen];
+        for i in 0..sh.s() {
+            let row = sh.x.row(i);
+            for r in 0..hidden {
+                hrow[r] = crate::util::dot(&w[r * d_in..(r + 1) * d_in], row).tanh();
+            }
+            for a in 0..hidden {
+                let wa = inv_s * hrow[a];
+                rhs[a] += wa * sh.y[i];
+                for b in a..hidden {
+                    m[(a, b)] += wa * hrow[b];
+                }
+            }
+        }
+    }
+    for a in 0..hidden {
+        for b in 0..a {
+            m[(a, b)] = m[(b, a)];
+        }
+        rhs[a] -= lin[wlen + a];
+    }
+    let chol = factor_spd(m.add_diag(ridge));
+    chol.solve_into(&rhs, &mut theta[wlen..]);
+}
+
+/// One damped Gauss–Newton step with Armijo backtrack on the hidden
+/// layer `W` (output layer fixed).  `J[i, (r,j)] = v_r (1 - h_ir^2) x_ij`.
+fn gn_step_w(shards: &[&Shard], ridge: f64, lin: &[f64], hidden: usize, theta: &mut [f64]) {
+    let d_in = shards[0].x.cols();
+    let wlen = hidden * d_in;
+    let mut a = Mat::zeros(wlen, wlen);
+    let mut g = vec![0.0; wlen];
+    let mut jrow = vec![0.0; wlen];
+    for sh in shards {
+        let inv_s = 1.0 / sh.s() as f64;
+        let v = &theta[wlen..];
+        let mut h = Mat::zeros(sh.s(), hidden);
+        let mut resid = vec![0.0; sh.s()];
+        forward(sh, hidden, theta, &mut h, &mut resid);
+        for i in 0..sh.s() {
+            let row = sh.x.row(i);
+            for r in 0..hidden {
+                let act = h[(i, r)];
+                let c = v[r] * (1.0 - act * act);
+                for j in 0..d_in {
+                    jrow[r * d_in + j] = c * row[j];
+                }
+            }
+            let e = inv_s * resid[i];
+            for p in 0..wlen {
+                let jp = jrow[p];
+                g[p] += e * jp;
+                if jp == 0.0 {
+                    continue;
+                }
+                let wjp = inv_s * jp;
+                let arow = a.row_mut(p);
+                for q in p..wlen {
+                    arow[q] += wjp * jrow[q];
+                }
+            }
+        }
+    }
+    for p in 0..wlen {
+        for q in 0..p {
+            a[(p, q)] = a[(q, p)];
+        }
+        g[p] += ridge * theta[p] + lin[p];
+    }
+    let chol = factor_spd(a.add_diag(ridge));
+    let step = chol.solve(&g);
+    let slope = crate::util::dot(&g, &step);
+    let f0 = objective(shards, ridge, lin, hidden, theta);
+    // trial candidates are written from the saved start (not undone with
+    // `+=`, which would not restore the start bit-exactly)
+    let w0: Vec<f64> = theta[..wlen].to_vec();
+    let mut t = 1.0;
+    loop {
+        for p in 0..wlen {
+            theta[p] = w0[p] - t * step[p];
+        }
+        let ft = objective(shards, ridge, lin, hidden, theta);
+        if ft <= f0 - 1e-4 * t * slope || t < 1e-8 {
+            break;
+        }
+        t *= 0.5;
+    }
+}
+
+/// Deterministic block-coordinate descent: exact `v` ridge + one GN step
+/// on `W` per sweep, stopping on the full penalized gradient norm.
+fn block_descent(
+    shards: &[&Shard],
+    ridge: f64,
+    lin: &[f64],
+    hidden: usize,
+    theta: &mut [f64],
+    max_outer: usize,
+    tol: f64,
+) {
+    let mut g = vec![0.0; theta.len()];
+    for _ in 0..max_outer {
+        solve_v(shards, ridge, lin, hidden, theta);
+        gn_step_w(shards, ridge, lin, hidden, theta);
+        gradient(shards, ridge, lin, hidden, theta, &mut g);
+        if crate::util::norm2(&g) < tol * (1.0 + crate::util::norm2(theta)) {
+            break;
+        }
+    }
+    // final exact v-solve so the output layer is consistent with the
+    // accepted hidden layer (pure, deterministic)
+    solve_v(shards, ridge, lin, hidden, theta);
+}
+
+/// Centralized reference optimum of `sum_n f_n(theta)` (block descent
+/// from the seeded start; each worker carries its own `1/s_n`
+/// normalization and ridge, exactly as the decentralized objective sums
+/// them — mirrors [`super::central::central_logistic_optimum`]).
+pub fn central_mlp_optimum<S: Borrow<Shard>>(
+    shards: &[S],
+    mu0: f64,
+    hidden: usize,
+    theta0: &[f64],
+) -> Vec<f64> {
+    let parts: Vec<&Shard> = shards.iter().map(Borrow::borrow).collect();
+    let ridge = shards.len() as f64 * mu0;
+    let lin = vec![0.0; theta0.len()];
+    let mut theta = theta0.to_vec();
+    block_descent(&parts, ridge, &lin, hidden, &mut theta, MAX_OUTER_CENTRAL, TOL_CENTRAL);
+    theta
+}
+
+/// Global decentralized MLP objective `sum_n f_n(theta)` at a common
+/// point (per-shard `1/(2 s_n)` SSE + per-shard ridge, matching
+/// [`super::central::global_objective`]'s conventions).
+pub fn mlp_global_objective<S: Borrow<Shard>>(
+    shards: &[S],
+    mu0: f64,
+    hidden: usize,
+    theta: &[f64],
+) -> f64 {
+    let quad = crate::util::dot(theta, theta);
+    let mut total = 0.0;
+    for sh in shards {
+        let sh = sh.borrow();
+        total += 0.5 / sh.s() as f64 * data_sse(sh, hidden, theta) + 0.5 * mu0 * quad;
+    }
+    total
+}
+
+/// Gauss–Newton block-coordinate solver for one worker's MLP shard.
+pub struct MlpSolver {
+    /// Shared shard; never copied per worker.
+    data: Arc<Shard>,
+    mu0: f64,
+    rho: f64,
+    rho_dn: f64,
+    hidden: usize,
+    /// persistent scratch: linear term `alpha - rho * nbr_sum`
+    lin: Vec<f64>,
+}
+
+impl MlpSolver {
+    /// Build from a shared shard.
+    pub fn from_shard(
+        data: Arc<Shard>,
+        mu0: f64,
+        rho: f64,
+        degree: usize,
+        hidden: usize,
+    ) -> MlpSolver {
+        assert_eq!(data.x.rows(), data.y.len());
+        assert!(!data.y.is_empty());
+        assert!(hidden >= 1);
+        let d = hidden * data.x.cols() + hidden;
+        MlpSolver {
+            data,
+            mu0,
+            rho,
+            rho_dn: rho * degree as f64,
+            hidden,
+            lin: vec![0.0; d],
+        }
+    }
+
+    /// Owned-data convenience constructor (tests/benches).
+    pub fn new(x: Mat, y: Vec<f64>, mu0: f64, rho: f64, degree: usize, hidden: usize) -> MlpSolver {
+        Self::from_shard(Arc::new(Shard { worker: 0, x, y }), mu0, rho, degree, hidden)
+    }
+}
+
+impl SubproblemSolver for MlpSolver {
+    fn update_into(&mut self, alpha: &[f64], nbr_sum: &[f64], theta: &mut [f64]) {
+        let d = self.lin.len();
+        assert_eq!(alpha.len(), d);
+        assert_eq!(nbr_sum.len(), d);
+        assert_eq!(theta.len(), d);
+        for i in 0..d {
+            self.lin[i] = alpha[i] - self.rho * nbr_sum[i];
+        }
+        let shards = [&*self.data];
+        block_descent(
+            &shards,
+            self.mu0 + self.rho_dn,
+            &self.lin,
+            self.hidden,
+            theta,
+            MAX_OUTER_SUB,
+            TOL_SUB,
+        );
+    }
+
+    fn loss(&self, theta: &[f64]) -> f64 {
+        let inv_s = 1.0 / self.data.s() as f64;
+        0.5 * inv_s * data_sse(&self.data, self.hidden, theta)
+            + 0.5 * self.mu0 * crate::util::dot(theta, theta)
+    }
+
+    fn d(&self) -> usize {
+        self.lin.len()
+    }
+
+    fn blocks(&self) -> Blocks {
+        mlp_blocks(self.data.x.cols(), self.hidden)
+    }
+
+    fn grad_into(&self, theta: &[f64], out: &mut [f64]) {
+        let zeros = vec![0.0; theta.len()];
+        gradient(&[&*self.data], self.mu0, &zeros, self.hidden, theta, out);
+    }
+
+    fn set_degree(&mut self, degree: usize) {
+        assert!(degree >= 1, "degree-0 workers are never solved");
+        // rho_dn is the only degree-dependent term, so mutating it is
+        // bit-identical to constructing at `degree`
+        self.rho_dn = self.rho * degree as f64;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::prop::check;
+
+    fn random_shard(s: usize, d: usize, seed: u64) -> (Mat, Vec<f64>) {
+        let mut rng = Pcg64::new(seed);
+        let mut x = Mat::zeros(s, d);
+        for i in 0..s {
+            for j in 0..d {
+                x[(i, j)] = rng.normal();
+            }
+        }
+        let y = rng.normal_vec(s);
+        (x, y)
+    }
+
+    #[test]
+    fn blocks_layout() {
+        let b = mlp_blocks(4, 3);
+        assert_eq!(b.count(), 2);
+        assert_eq!(b.len_of(0), 12);
+        assert_eq!(b.len_of(1), 3);
+        assert_eq!(b.d(), 15);
+    }
+
+    #[test]
+    fn theta0_deterministic_nonzero_seeded() {
+        let a = mlp_theta0(4, 3, 7);
+        let b = mlp_theta0(4, 3, 7);
+        let c = mlp_theta0(4, 3, 8);
+        assert_eq!(a, b);
+        assert_ne!(a, c);
+        assert_eq!(a.len(), 15);
+        assert!(a.iter().all(|t| *t != 0.0 && t.abs() < 5.0));
+    }
+
+    #[test]
+    fn gradient_matches_numeric() {
+        check("MLP analytic gradient == numeric", 20, |g| {
+            let d_in = g.usize_in(1, 4);
+            let hidden = g.usize_in(1, 3);
+            let s = g.usize_in(3, 12);
+            let (x, y) = random_shard(s, d_in, g.u64());
+            let sh = Shard { worker: 0, x, y };
+            let ridge = g.f64_in(0.01, 0.5);
+            let d = hidden * d_in + hidden;
+            let theta = g.normal_vec(d);
+            let lin = g.normal_vec(d);
+            let mut grad = vec![0.0; d];
+            gradient(&[&sh], ridge, &lin, hidden, &theta, &mut grad);
+            let f0 = objective(&[&sh], ridge, &lin, hidden, &theta);
+            let eps = 1e-6;
+            for j in 0..d {
+                let mut tp = theta.clone();
+                tp[j] += eps;
+                let fp = objective(&[&sh], ridge, &lin, hidden, &tp);
+                let num = (fp - f0) / eps;
+                assert!(
+                    (num - grad[j]).abs() < 1e-4 * (1.0 + num.abs()),
+                    "coord {j}: numeric {num} vs analytic {}",
+                    grad[j]
+                );
+            }
+        });
+    }
+
+    #[test]
+    fn update_reaches_stationarity() {
+        check("MLP subproblem update is near-stationary", 10, |g| {
+            let d_in = g.usize_in(1, 3);
+            let hidden = g.usize_in(1, 3);
+            let s = g.usize_in(6, 20);
+            let (x, y) = random_shard(s, d_in, g.u64());
+            let mu0 = g.f64_in(0.01, 0.3);
+            let rho = g.f64_in(0.2, 1.5);
+            let degree = g.usize_in(1, 3);
+            let d = hidden * d_in + hidden;
+            let mut solver = MlpSolver::new(x.clone(), y.clone(), mu0, rho, degree, hidden);
+            let alpha = g.normal_vec(d);
+            let nbr = g.normal_vec(d);
+            let mut theta = mlp_theta0(d_in, hidden, g.u64());
+            solver.update_into(&alpha, &nbr, &mut theta);
+            // penalized gradient: grad f_n + (alpha - rho nbr) + rho d theta
+            let sh = Shard { worker: 0, x, y };
+            let lin: Vec<f64> = (0..d).map(|i| alpha[i] - rho * nbr[i]).collect();
+            let mut grad = vec![0.0; d];
+            gradient(&[&sh], mu0 + rho * degree as f64, &lin, hidden, &theta, &mut grad);
+            let gn = crate::util::norm2(&grad);
+            assert!(gn < 1e-5 * (1.0 + crate::util::norm2(&theta)), "gnorm={gn}");
+        });
+    }
+
+    #[test]
+    fn update_is_deterministic_and_pure() {
+        let (x, y) = random_shard(15, 3, 11);
+        let hidden = 2;
+        let d = hidden * 3 + hidden;
+        let alpha = vec![0.05; d];
+        let nbr = vec![0.1; d];
+        let warm = mlp_theta0(3, hidden, 4);
+        let mut s1 = MlpSolver::new(x.clone(), y.clone(), 0.05, 0.8, 2, hidden);
+        let mut s2 = MlpSolver::new(x, y, 0.05, 0.8, 2, hidden);
+        let mut t1 = warm.clone();
+        let mut t2 = warm;
+        s1.update_into(&alpha, &nbr, &mut t1);
+        s2.update_into(&alpha, &nbr, &mut t2);
+        assert_eq!(t1, t2);
+        // repeated solve from the minimizer stays put (fixed point)
+        let before = t1.clone();
+        s1.update_into(&alpha, &nbr, &mut t1);
+        for (a, b) in before.iter().zip(&t1) {
+            assert!((a - b).abs() < 1e-6, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn set_degree_matches_from_scratch_bit_for_bit() {
+        let (x, y) = random_shard(12, 2, 5);
+        let hidden = 2;
+        let d = hidden * 2 + hidden;
+        let mut mutated = MlpSolver::new(x.clone(), y.clone(), 0.1, 0.7, 1, hidden);
+        mutated.set_degree(3);
+        let mut fresh = MlpSolver::new(x, y, 0.1, 0.7, 3, hidden);
+        let alpha = vec![0.2; d];
+        let nbr = vec![-0.1; d];
+        let warm = mlp_theta0(2, hidden, 9);
+        let a = mutated.update(&alpha, &nbr, &warm);
+        let b = fresh.update(&alpha, &nbr, &warm);
+        assert_eq!(a, b, "churn re-derivation must be bit-identical");
+    }
+
+    #[test]
+    fn central_optimum_improves_on_start() {
+        let (x, y) = random_shard(40, 3, 3);
+        let ds_shards = vec![
+            Shard { worker: 0, x: x.clone(), y: y.clone() },
+            Shard { worker: 1, x, y },
+        ];
+        let hidden = 3;
+        let mu0 = 0.01;
+        let theta0 = mlp_theta0(3, hidden, 13);
+        let star = central_mlp_optimum(&ds_shards, mu0, hidden, &theta0);
+        let f0 = mlp_global_objective(&ds_shards, mu0, hidden, &theta0);
+        let fs = mlp_global_objective(&ds_shards, mu0, hidden, &star);
+        assert!(fs < f0, "optimizer must improve: {fs} vs {f0}");
+        // near-stationary: numeric directional derivatives vanish
+        let parts: Vec<&Shard> = ds_shards.iter().collect();
+        let lin = vec![0.0; theta0.len()];
+        let mut grad = vec![0.0; theta0.len()];
+        gradient(&parts, 2.0 * mu0, &lin, hidden, &star, &mut grad);
+        let gn = crate::util::norm2(&grad);
+        assert!(gn < 1e-5 * (1.0 + crate::util::norm2(&star)), "gnorm={gn}");
+    }
+
+    #[test]
+    fn loss_and_global_objective_agree_on_one_shard() {
+        let (x, y) = random_shard(10, 2, 6);
+        let hidden = 2;
+        let solver = MlpSolver::new(x.clone(), y.clone(), 0.05, 1.0, 1, hidden);
+        let theta = mlp_theta0(2, hidden, 2);
+        let sh = Shard { worker: 0, x, y };
+        let via_global = mlp_global_objective(std::slice::from_ref(&sh), 0.05, hidden, &theta);
+        assert!((solver.loss(&theta) - via_global).abs() < 1e-12);
+    }
+
+    #[test]
+    fn grad_into_matches_gradient_helper() {
+        let (x, y) = random_shard(8, 3, 12);
+        let hidden = 2;
+        let d = hidden * 3 + hidden;
+        let solver = MlpSolver::new(x.clone(), y.clone(), 0.2, 1.0, 2, hidden);
+        let theta = mlp_theta0(3, hidden, 1);
+        let mut out = vec![0.0; d];
+        solver.grad_into(&theta, &mut out);
+        let sh = Shard { worker: 0, x, y };
+        let zeros = vec![0.0; d];
+        let mut want = vec![0.0; d];
+        gradient(&[&sh], 0.2, &zeros, hidden, &theta, &mut want);
+        assert_eq!(out, want);
+    }
+}

@@ -20,10 +20,12 @@
 pub mod central;
 pub mod linear;
 pub mod logistic;
+pub mod mlp;
 
 pub use central::{central_linear_optimum, central_logistic_optimum, global_objective};
 pub use linear::LinearSolver;
 pub use logistic::LogisticSolver;
+pub use mlp::MlpSolver;
 
 /// Execution backend for the per-iteration subproblem solve.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -68,6 +70,22 @@ pub trait SubproblemSolver: Send {
 
     /// Model dimension.
     fn d(&self) -> usize;
+
+    /// Parameter-block layout of this solver's model.  Single-block for
+    /// the GLM solvers; the MLP reports `[vec(W), v]`.  The default is
+    /// the degenerate flat layout, so existing solvers are untouched.
+    fn blocks(&self) -> crate::param::Blocks {
+        crate::param::Blocks::single(self.d())
+    }
+
+    /// Gradient of the *local* objective `f_n` at `theta` (no penalty
+    /// terms), written into `out` — the first-order oracle of the QDGD
+    /// baseline.  Solvers that only serve ADMM variants may leave the
+    /// default, which panics.
+    fn grad_into(&self, theta: &[f64], out: &mut [f64]) {
+        let _ = (theta, out);
+        panic!("this solver has no first-order oracle (required by qdgd)");
+    }
 
     /// Re-derive the degree-dependent penalty terms after a neighbor
     /// change (churn).  `degree` is the *solver* degree — twice the graph

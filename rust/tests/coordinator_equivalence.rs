@@ -16,7 +16,7 @@
 //! is what makes exact equality possible here.
 
 use cq_ggadmm::algs::{AlgSpec, Problem, Run};
-use cq_ggadmm::config::{ExecutionConfig, TopologySpec};
+use cq_ggadmm::config::{ExecutionConfig, ModelSpec, TopologySpec};
 use cq_ggadmm::coordinator::Coordinator;
 use cq_ggadmm::data::synthetic;
 use cq_ggadmm::graph::{gen, Topology};
@@ -83,13 +83,27 @@ fn assert_traces_bit_identical(sim: &Trace, coord: &Trace, what: &str) {
 /// cores, the coordinator shards workers over `threads` executors —
 /// either way the trajectory cannot move by a bit).
 fn lock(spec: AlgSpec, topo: Topology, linear: bool, drop_prob: f64, seed: u64, iters: u64) {
-    pin_tier();
     let p = problem(linear, &topo, seed);
     let what = format!(
         "{} / {} / drop={drop_prob}",
         spec.name,
         if linear { "linear" } else { "logistic" }
     );
+    lock_on(p, spec, topo, what, drop_prob, seed, iters);
+}
+
+/// The engine-pair comparison itself, on an explicit problem (the MLP
+/// legs build theirs via [`Problem::with_model`]).
+fn lock_on(
+    p: Problem,
+    spec: AlgSpec,
+    topo: Topology,
+    what: String,
+    drop_prob: f64,
+    seed: u64,
+    iters: u64,
+) {
+    pin_tier();
     let exec = ExecutionConfig::default()
         .with_seed(seed)
         .with_drop_prob(drop_prob)
@@ -264,4 +278,68 @@ fn geometric_with_erasure_bit_identical() {
         45,
         30,
     );
+}
+
+// ---- multi-block MLP model and the QDGD baseline --------------------
+//
+// The MLP threads the refactor end to end: per-block quantizer RNG
+// forks, per-block censoring state, TAG_BLOCKS wire frames, and the
+// per-block bits ledger all have to line up between the sequential
+// simulator and the sharded coordinator for the traces to agree bitwise.
+
+fn mlp_problem(topo: &Topology, hidden: usize, seed: u64) -> Problem {
+    let ds = synthetic::linear_dataset(topo.n() * 10, 6, seed);
+    Problem::with_model(&ds, topo, 5.0, 0.0, seed, ModelSpec::Mlp { hidden })
+        .expect("linear dataset supports the MLP model")
+}
+
+fn lock_mlp(spec: AlgSpec, topo: Topology, drop_prob: f64, seed: u64, iters: u64) {
+    let p = mlp_problem(&topo, 4, seed);
+    assert_eq!(p.blocks.count(), 2, "MLP problems are two-block");
+    let what = format!("{} / mlp / drop={drop_prob}", spec.name);
+    lock_on(p, spec, topo, what, drop_prob, seed, iters);
+}
+
+#[test]
+fn mlp_ggadmm_bit_identical() {
+    lock_mlp(AlgSpec::ggadmm(), bipartite(51), 0.0, 51, 15);
+}
+
+#[test]
+fn mlp_q_ggadmm_split_bit_identical() {
+    // per-layer allocation: block 0 (W) at 6 bits, block 1 (v) at 2 —
+    // the per-block quantizer forks must match across engines
+    lock_mlp(
+        AlgSpec::q_ggadmm(0.995, 6).with_bits_split(Some(vec![6, 2])),
+        bipartite(52),
+        0.0,
+        52,
+        15,
+    );
+}
+
+#[test]
+fn mlp_cq_ggadmm_with_erasure_bit_identical() {
+    // censor + split quantization + drops: per-block tx_once flags and
+    // the erasure stream alignment under TAG_BLOCKS frames
+    lock_mlp(
+        AlgSpec::cq_ggadmm(0.2, 0.85, 0.995, 4).with_bits_split(Some(vec![4, 2])),
+        bipartite(53),
+        0.15,
+        53,
+        15,
+    );
+}
+
+#[test]
+fn qdgd_mlp_bit_identical() {
+    // the first-order Jacobian baseline on the two-block model
+    lock_mlp(AlgSpec::qdgd(0.995, 8), bipartite(54), 0.0, 54, 15);
+}
+
+#[test]
+fn qdgd_glm_bit_identical() {
+    // QDGD on the flat single-block model: the degenerate path of the
+    // new update rule must also agree across engines
+    lock(AlgSpec::qdgd(0.995, 8), bipartite(55), true, 0.0, 55, 20);
 }

@@ -65,6 +65,8 @@ fn quantized_run_never_exceeds_full_precision_bits() {
             schedule: Schedule::Alternating,
             censor: None,
             quant: Some(QuantConfig { bits0: 2, omega: 0.995, max_bits: 24 }),
+            update: cq_ggadmm::algs::UpdateRule::Admm,
+            bits_split: None,
         };
         let mut run = Run::new(p, t, spec, RunOptions { seed: g.u64(), ..Default::default() });
         for _ in 0..40 {

@@ -1,0 +1,144 @@
+//! Single-block transparency of the multi-block parameter refactor.
+//!
+//! `param::Blocks` threads the whole stack (solver, protocol core, wire
+//! codec, medium accounting), but on flat (GLM) problems the refactor
+//! must be **invisible**: a `Problem::with_model(.., ModelSpec::Glm)`
+//! run — the degenerate one-block layout — must reproduce the classic
+//! `Problem::new` run bit-for-bit on every axis the checkpoint codec
+//! serializes (models, duals, RNG positions, bits/energy totals, the
+//! full trace), across all six `AlgSpec` variants and both engines.
+//! Byte equality of `checkpoint::encode` is the strongest such
+//! statement: every f64 crosses it via `to_bits`.
+//!
+//! The per-block wire-framing round-trip property (bits 1..=32) lives
+//! with the codec in `coordinator::message`; the multi-block engine
+//! differential tests live in tests/coordinator_equivalence.rs and
+//! tests/persistence.rs.
+
+use cq_ggadmm::algs::{AlgSpec, Problem, Run};
+use cq_ggadmm::config::{ExecutionConfig, ModelSpec};
+use cq_ggadmm::coordinator::Coordinator;
+use cq_ggadmm::data::synthetic;
+use cq_ggadmm::graph::Topology;
+use cq_ggadmm::io::checkpoint;
+use cq_ggadmm::testing::prop::check;
+
+/// Pin the kernel tier for the whole test binary (bit-identity is a
+/// per-tier contract; see tests/coordinator_equivalence.rs).
+fn pin_tier() {
+    let t = cq_ggadmm::linalg::kernel_tier();
+    cq_ggadmm::linalg::set_kernel_tier(t);
+}
+
+/// The paper's six ADMM-family variants.
+fn variant(i: usize) -> AlgSpec {
+    match i {
+        0 => AlgSpec::ggadmm(),
+        1 => AlgSpec::c_ggadmm(0.2, 0.85),
+        2 => AlgSpec::q_ggadmm(0.995, 2),
+        3 => AlgSpec::cq_ggadmm(0.2, 0.85, 0.995, 2),
+        4 => AlgSpec::c_admm(0.1, 0.9),
+        _ => AlgSpec::gadmm_chain(),
+    }
+}
+
+#[test]
+fn glm_one_block_runs_are_bit_identical_to_flat_for_all_variants() {
+    pin_tier();
+    check("with_model(Glm) == Problem::new, Run engine", 12, |g| {
+        let n = g.usize_in(4, 10);
+        let seed = g.u64();
+        let spec = variant(g.usize_in(0, 5));
+        let topo = if spec.name == "GADMM" {
+            Topology::chain(n)
+        } else {
+            Topology::random_bipartite(n, g.f64_in(0.3, 0.7), seed)
+        };
+        let ds = synthetic::linear_dataset(n * 10, 5, seed);
+        let flat = Problem::new(&ds, &topo, 5.0, 0.0, seed);
+        let modeled =
+            Problem::with_model(&ds, &topo, 5.0, 0.0, seed, ModelSpec::Glm).unwrap();
+        assert!(modeled.blocks.is_single(), "GLM is the one-block layout");
+        assert_eq!(modeled.blocks.d(), flat.d);
+
+        let e = ExecutionConfig::default().with_seed(seed).with_drop_prob(0.1);
+        let mut a = Run::new(flat, topo.clone(), spec.clone(), e.clone());
+        let mut b = Run::new(modeled, topo, spec, e);
+        for _ in 0..8 {
+            a.step();
+            b.step();
+        }
+        let sa = a.snapshot_state();
+        let bytes = checkpoint::encode(&sa);
+        assert_eq!(
+            bytes,
+            checkpoint::encode(&b.snapshot_state()),
+            "one-block run diverged from the flat run"
+        );
+        // no phantom per-block state: the ledgers stay empty and the
+        // checkpoint stays the byte-stable version 2
+        assert!(sa.block_bits.is_empty() && sa.block_stale.is_empty());
+        assert_eq!(bytes[8], 2, "single-block checkpoints stay version 2");
+    });
+}
+
+#[test]
+fn glm_one_block_coordinator_matches_flat_run_bytes() {
+    pin_tier();
+    check("with_model(Glm), coordinator == flat Run", 8, |g| {
+        let n = g.usize_in(4, 10);
+        let seed = g.u64();
+        let spec = variant(g.usize_in(0, 5));
+        let topo = if spec.name == "GADMM" {
+            Topology::chain(n)
+        } else {
+            Topology::random_bipartite(n, g.f64_in(0.3, 0.7), seed)
+        };
+        let ds = synthetic::linear_dataset(n * 10, 5, seed);
+        let flat = Problem::new(&ds, &topo, 5.0, 0.0, seed);
+        let modeled =
+            Problem::with_model(&ds, &topo, 5.0, 0.0, seed, ModelSpec::Glm).unwrap();
+
+        let e = ExecutionConfig::default().with_seed(seed).with_drop_prob(0.1);
+        let mut a = Run::new(flat, topo.clone(), spec.clone(), e.clone());
+        let mut coord = Coordinator::spawn(modeled, topo, spec, e.with_threads(2));
+        for _ in 0..8 {
+            a.step();
+            coord.step();
+        }
+        assert_eq!(
+            checkpoint::encode(&a.snapshot_state()),
+            checkpoint::encode(&coord.snapshot_state()),
+            "one-block coordinator diverged from the flat sequential run"
+        );
+    });
+}
+
+#[test]
+fn uniform_one_entry_split_is_transparent_on_flat_problems() {
+    pin_tier();
+    // `--bits0 2` parses to a one-entry allocation; on a single-block
+    // problem it must mean exactly what the plain uniform width means
+    check("bits_split [b] == bits_split None on one block", 8, |g| {
+        let n = g.usize_in(4, 8);
+        let seed = g.u64();
+        let topo = Topology::random_bipartite(n, 0.4, seed);
+        let ds = synthetic::linear_dataset(n * 10, 5, seed);
+        let p = Problem::new(&ds, &topo, 5.0, 0.0, seed);
+        let plain = AlgSpec::q_ggadmm(0.995, 2);
+        let split = AlgSpec::q_ggadmm(0.995, 2).with_bits_split(Some(vec![2]));
+        split.validate().unwrap();
+        let e = ExecutionConfig::default().with_seed(seed);
+        let mut a = Run::new(p.clone(), topo.clone(), plain, e.clone());
+        let mut b = Run::new(p, topo, split, e);
+        for _ in 0..8 {
+            a.step();
+            b.step();
+        }
+        assert_eq!(
+            checkpoint::encode(&a.snapshot_state()),
+            checkpoint::encode(&b.snapshot_state()),
+            "a one-entry split changed a flat run"
+        );
+    });
+}

@@ -28,7 +28,7 @@
 //! per-kernel-tier: the test binary pins the ambient tier and exports
 //! it to the spawned processes via `CQ_KERNEL_TIER`.
 
-use cq_ggadmm::config::ExperimentManifest;
+use cq_ggadmm::config::{ExperimentManifest, ModelSpec};
 use cq_ggadmm::coordinator::Coordinator;
 use cq_ggadmm::graph::ChurnSchedule;
 use cq_ggadmm::io::checkpoint;
@@ -207,6 +207,37 @@ fn networked_run_matches_in_process_across_variants() {
         assert_eq!(
             net_bytes, ref_bytes,
             "{alg}: networked checkpoint diverges from the in-process run"
+        );
+    }
+}
+
+/// The multi-block MLP model and the QDGD baseline over TCP, N = 64.
+/// TAG_BLOCKS wire frames, per-block quantizer forks and the per-block
+/// bits ledger must survive the socket hop bit-for-bit — the server's
+/// hat mirror is decoded from the same bytes the receiving workers
+/// decode, so a single framing slip would show up as byte divergence.
+#[test]
+fn networked_mlp_and_qdgd_match_in_process() {
+    let tier = pin_tier();
+    let cases: &[(&str, Option<Vec<u32>>, u64, f64)] = &[
+        // censored + per-layer split quantization + erasure
+        ("cq-ggadmm", Some(vec![4, 2]), 17, 0.10),
+        // the first-order Jacobian baseline, uniform width
+        ("qdgd", None, 18, 0.0),
+    ];
+    for (alg, split, seed, drop_prob) in cases {
+        let mut m = manifest(alg, *seed, 5, *drop_prob);
+        m.experiment.model = Some(ModelSpec::Mlp { hidden: 4 });
+        if let Some(split) = split {
+            m.experiment.bits0 = split[0];
+            m.experiment.bits_split = Some(split.clone());
+        }
+        m.validate().unwrap();
+        let net_bytes = networked_checkpoint(&m, tier, &format!("mlp_{alg}"));
+        let ref_bytes = in_process_checkpoint(&m);
+        assert_eq!(
+            net_bytes, ref_bytes,
+            "{alg} (mlp): networked checkpoint diverges from the in-process run"
         );
     }
 }

@@ -26,7 +26,7 @@
 
 use cq_ggadmm::algs::{AlgSpec, Problem, Run};
 use cq_ggadmm::comm::{LinkKind, LinkState};
-use cq_ggadmm::config::{ExecutionConfig, ExperimentManifest};
+use cq_ggadmm::config::{ExecutionConfig, ExperimentManifest, ModelSpec};
 use cq_ggadmm::coordinator::Coordinator;
 use cq_ggadmm::data::synthetic;
 use cq_ggadmm::graph::{ChurnSchedule, Topology};
@@ -184,6 +184,72 @@ fn erasure_link_resumes_bit_identically() {
     // pattern after resume must continue the same Bernoulli stream
     lock_resume(AlgSpec::cq_ggadmm(0.2, 0.85, 0.995, 2), true, 0.25, 63);
     lock_resume(AlgSpec::c_admm(0.1, 0.9), false, 0.2, 64);
+}
+
+// ---- the multi-block MLP model and the QDGD baseline -----------------
+
+fn mlp_problem(topo: &Topology, seed: u64) -> Problem {
+    let ds = synthetic::linear_dataset(topo.n() * 8, 5, seed);
+    Problem::with_model(&ds, topo, 5.0, 0.0, seed, ModelSpec::Mlp { hidden: 3 })
+        .expect("linear dataset supports the MLP model")
+}
+
+fn lock_resume_mlp(spec: AlgSpec, drop_prob: f64, seed: u64) {
+    let topo = Topology::random_bipartite(N, 0.3, seed);
+    let p = mlp_problem(&topo, seed);
+    let e = exec(seed, drop_prob).with_staleness_bound(Some(3));
+    let what = format!("{} mlp drop={drop_prob}", spec.name);
+    let run = |ex: &ExecutionConfig| Run::new(p.clone(), topo.clone(), spec.clone(), ex.clone());
+    kill_and_resume(run(&e), run(&e), run(&e), &format!("run {what}"));
+    let coord = |ex: &ExecutionConfig| {
+        Coordinator::spawn(p.clone(), topo.clone(), spec.clone(), ex.clone().with_threads(3))
+    };
+    kill_and_resume(coord(&e), coord(&e), coord(&e), &format!("coord {what}"));
+}
+
+#[test]
+fn mlp_split_cq_resumes_bit_identically() {
+    // the v3 checkpoint: per-block quantizer RNG positions, per-block
+    // censor tx_once flags, block staleness ages and the per-block bits
+    // ledger all cross the kill, in both engines
+    lock_resume_mlp(
+        AlgSpec::cq_ggadmm(0.2, 0.85, 0.995, 4).with_bits_split(Some(vec![4, 2])),
+        0.15,
+        57,
+    );
+}
+
+#[test]
+fn qdgd_mlp_resumes_bit_identically() {
+    lock_resume_mlp(AlgSpec::qdgd(0.995, 8), 0.0, 58);
+}
+
+#[test]
+fn mlp_checkpoint_uses_v3_and_flat_stays_v2() {
+    pin_tier();
+    // flat runs keep writing byte-stable version-2 checkpoints (the
+    // back-compat contract); only live per-block state opts into v3
+    let topo = Topology::random_bipartite(N, 0.3, 59);
+    let spec2 = AlgSpec::cq_ggadmm(0.2, 0.85, 0.995, 2);
+    let mut flat = Run::new(problem(true, &topo, 59), topo.clone(), spec2, exec(59, 0.0));
+    for _ in 0..K1 {
+        flat.step();
+    }
+    let bytes = checkpoint::encode(&flat.snapshot_state());
+    assert_eq!(bytes[8], 2, "flat checkpoint version");
+
+    let p = mlp_problem(&topo, 59);
+    let spec3 = AlgSpec::cq_ggadmm(0.2, 0.85, 0.995, 4).with_bits_split(Some(vec![4, 2]));
+    let mut multi = Run::new(p, topo, spec3, exec(59, 0.0).with_staleness_bound(Some(3)));
+    for _ in 0..K1 {
+        multi.step();
+    }
+    let s = multi.snapshot_state();
+    assert!(!s.block_bits.is_empty(), "multi-block run must ledger block bits");
+    let bytes = checkpoint::encode(&s);
+    assert_eq!(bytes[8], 3, "multi-block checkpoint version");
+    let back = checkpoint::decode(&bytes).unwrap();
+    assert_eq!(checkpoint::encode(&back), bytes, "v3 re-encode changed the bytes");
 }
 
 // ---- cross-engine resume --------------------------------------------

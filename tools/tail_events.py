@@ -1,14 +1,18 @@
 #!/usr/bin/env python3
 """Validate a run's JSONL event stream (see rust/src/io/events.rs).
 
-One JSON object per line, discriminated by "event".  Schema v1 and v2
-streams both validate (the run_start's "schema" field selects the rules):
+One JSON object per line, discriminated by "event".  Schema v1, v2 and
+v3 streams all validate (the run_start's "schema" field selects the
+rules):
 
 * run_start     -- schema, algorithm, dataset, workers, d, seed; must be
                    the first line of the stream.
 * record        -- iteration, loss_gap, consensus_gap, cum_rounds,
                    cum_bits, cum_energy_j, sim_time_s, committed,
                    censored, worker_bits ([worker, bits] pairs, ascending).
+                   v3 multi-block runs add cum_block_bits: cumulative
+                   bits per parameter block, non-decreasing and summing
+                   to cum_bits (single-block runs omit the key).
 * checkpoint    -- iteration, path.
 * worker_leave  -- iteration, worker        (v2: churn detached a worker)
 * worker_join   -- iteration, worker        (v2: churn re-attached one)
@@ -38,7 +42,7 @@ Stdlib only.
 import json
 import sys
 
-SCHEMA_VERSIONS = (1, 2)
+SCHEMA_VERSIONS = (1, 2, 3)
 
 RUN_START_KEYS = {"event", "schema", "algorithm", "dataset", "workers", "d", "seed"}
 MEMBERSHIP_KEYS = {"event", "iteration", "worker"}
@@ -63,11 +67,11 @@ class Violation(Exception):
     pass
 
 
-def check_keys(obj, required, lineno):
+def check_keys(obj, required, lineno, optional=frozenset()):
     missing = required - obj.keys()
     if missing:
         raise Violation(f"line {lineno}: missing keys {sorted(missing)}")
-    extra = obj.keys() - required
+    extra = obj.keys() - required - optional
     if extra:
         raise Violation(f"line {lineno}: unknown keys {sorted(extra)}")
 
@@ -114,7 +118,8 @@ def validate(path):
                     raise Violation(f"line {lineno}: bad workers {obj['workers']!r}")
                 workers = obj["workers"]
             elif kind == "record":
-                check_keys(obj, RECORD_KEYS, lineno)
+                optional = {"cum_block_bits"} if schema == 3 else frozenset()
+                check_keys(obj, RECORD_KEYS, lineno, optional)
                 it = obj["iteration"]
                 if it <= last_iter:
                     raise Violation(f"line {lineno}: iteration {it} after {last_iter}")
@@ -162,6 +167,32 @@ def validate(path):
                             f"line {lineno}: interval bits {bits_sum} != cum_bits delta "
                             f"{obj['cum_bits'] - prev['cum_bits']}"
                         )
+                if "cum_block_bits" in obj:
+                    blocks = obj["cum_block_bits"]
+                    if not (isinstance(blocks, list) and len(blocks) >= 2):
+                        raise Violation(
+                            f"line {lineno}: cum_block_bits must list >= 2 blocks"
+                        )
+                    if any(not isinstance(b, (int, float)) or b < 0 for b in blocks):
+                        raise Violation(f"line {lineno}: negative cum_block_bits entry")
+                    if sum(blocks) != obj["cum_bits"]:
+                        raise Violation(
+                            f"line {lineno}: cum_block_bits sum {sum(blocks)} != "
+                            f"cum_bits {obj['cum_bits']}"
+                        )
+                    if prev is not None and "cum_block_bits" in prev:
+                        pblocks = prev["cum_block_bits"]
+                        if len(pblocks) != len(blocks):
+                            raise Violation(
+                                f"line {lineno}: block count changed "
+                                f"({len(pblocks)} -> {len(blocks)})"
+                            )
+                        for i, (a, b) in enumerate(zip(pblocks, blocks)):
+                            if b < a:
+                                raise Violation(
+                                    f"line {lineno}: cum_block_bits[{i}] decreased "
+                                    f"({a} -> {b})"
+                                )
                 last_iter = it
                 prev = obj
             elif kind == "checkpoint":
